@@ -1,0 +1,52 @@
+//! Weak scaling per eq (10) — the Figs 14/15/16 methodology.
+//!
+//! Keeps the aggregate analysis rate constant by shrinking the per-rank
+//! parameter-sample batch as ranks are added (batch = base / N), then
+//! compares the residual-vs-time trajectories of single- and multi-rank
+//! runs.
+//!
+//! ```sh
+//! cargo run --release --example weak_scaling
+//! ```
+
+use std::path::Path;
+
+use sagips::config::Mode;
+use sagips::metrics::csv::write_csv;
+use sagips::report::experiments::{self, Scale};
+use sagips::runtime::RuntimePool;
+
+fn main() -> anyhow::Result<()> {
+    sagips::util::logging::init_from_env();
+    let pool = RuntimePool::from_dir(Path::new("artifacts"), 3)?;
+    let handle = pool.handle();
+    let mut scale = Scale::from_env(Scale::ci());
+    scale.ranks = 8;
+
+    for (mode, label) in [(Mode::RmaArarArar, "rma"), (Mode::ArarArar, "arar")] {
+        println!("\n=== weak scaling, {} (eq 10: batch = 64 / N) ===", label);
+        let curves = experiments::weak_scaling_curves(&handle, &scale, mode, &[1, 2, 4, 8])?;
+        for (n, curve) in &curves {
+            let rows: Vec<Vec<String>> = curve
+                .iter()
+                .map(|&(t, m, _)| vec![format!("{t}"), format!("{m}")])
+                .collect();
+            write_csv(
+                Path::new(&format!("reports/weak_scaling_{label}_n{n}.csv")),
+                &["time_s", "mean_abs_residual"],
+                &rows,
+            )?;
+            // Time to reach 1.5x the best single-rank tail value.
+            if let Some(t) = experiments::time_to_threshold(curve, 1.0) {
+                println!("  N={n}: reaches mean|r̂|<=1.0 at t={t:.1}s");
+            } else {
+                let tail = experiments::tail_mean(curve, 3);
+                println!("  N={n}: tail mean|r̂|={tail:.3}");
+            }
+        }
+    }
+    println!("\nwrote reports/weak_scaling_*.csv");
+    println!("paper shape: multi-rank curves descend earlier in wall-clock time");
+    pool.shutdown();
+    Ok(())
+}

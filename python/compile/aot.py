@@ -1,0 +1,213 @@
+"""AOT exporter: lower every SAGIPS computation to HLO *text* artifacts.
+
+This is the only place Python runs — once, at build time (`make artifacts`).
+The Rust coordinator loads the emitted ``artifacts/*.hlo.txt`` through
+``HloModuleProto::from_text_file`` and executes them on the PJRT CPU client.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+``manifest.json`` is the single source of truth the Rust runtime reads:
+artifact names, input/output shapes, model layer layouts (for Kaiming init
+and weight-vs-bias gradient slicing), parameter counts and the loop-closure
+true parameters.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, nets, pipeline
+
+F32 = "f32"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def _io(name, shape):
+    return {"name": name, "shape": list(shape), "dtype": F32}
+
+
+def gan_step_export(size, batch, events):
+    """Build the (fn, input specs, io meta) triple for one gan_step variant."""
+    gen_dims, disc_dims = model.model_dims(size)
+    pg = nets.param_count(gen_dims)
+    pd = nets.param_count(disc_dims)
+    fn = functools.partial(model.gan_step, gen_dims=gen_dims, disc_dims=disc_dims)
+    shapes = [
+        ("gen_params", (pg,)),
+        ("disc_params", (pd,)),
+        ("z", (batch, model.LATENT_DIM)),
+        ("u", (batch, events, 2)),
+        ("real", (batch * events, 2)),
+    ]
+    outputs = [
+        _io("gen_grads", (pg,)),
+        _io("disc_grads", (pd,)),
+        _io("gen_loss", ()),
+        _io("disc_loss", ()),
+    ]
+    return fn, shapes, outputs
+
+
+def gen_predict_export(size, batch):
+    gen_dims, _ = model.model_dims(size)
+    pg = nets.param_count(gen_dims)
+    fn = functools.partial(model.gen_predict, gen_dims=gen_dims)
+    shapes = [("gen_params", (pg,)), ("z", (batch, model.LATENT_DIM))]
+    outputs = [_io("params", (batch, 6))]
+    return fn, shapes, outputs
+
+
+def pipeline_export(batch, events):
+    fn = model.pipeline_fn
+    shapes = [("params", (batch, 6)), ("u", (batch, events, 2))]
+    outputs = [_io("events", (batch * events, 2))]
+    return fn, shapes, outputs
+
+
+def disc_forward_export(size, n):
+    _, disc_dims = model.model_dims(size)
+    pd = nets.param_count(disc_dims)
+    fn = functools.partial(model.disc_forward, disc_dims=disc_dims)
+    shapes = [("disc_params", (pd,)), ("events", (n, 2))]
+    outputs = [_io("logits", (n,))]
+    return fn, shapes, outputs
+
+
+def default_exports(paper_scale=False):
+    """The artifact grid. Keys are artifact names (also the file stems).
+
+    * ``gan_step_paper_b{4..64}_e25`` — weak-scaling grid, eq (10) with a
+      scaled-down base batch of 64 (N in {1,2,4,8,16}).
+    * ``gan_step_{small,medium,paper}_b{16,64}_e25`` — Fig 8 model-size x
+      data-size grid.
+    * ``gen_predict_*`` — residual / ensemble diagnostics (K = 256 noise
+      vectors).
+    * ``pipeline_*`` — toy-data generation and tests.
+    * ``disc_forward_paper_n1600`` — diagnostics.
+
+    ``paper_scale`` adds the full Table III configuration (B=1024, E=100 —
+    a 102,400-event discriminator batch).
+    """
+    exports = {}
+    for b in (4, 8, 16, 32, 64):
+        exports[f"gan_step_paper_b{b}_e25"] = (
+            gan_step_export("paper", b, 25),
+            {"fn": "gan_step", "model": "paper", "batch": b, "events": 25},
+        )
+    for size in ("small", "medium"):
+        for b in (16, 64):
+            exports[f"gan_step_{size}_b{b}_e25"] = (
+                gan_step_export(size, b, 25),
+                {"fn": "gan_step", "model": size, "batch": b, "events": 25},
+            )
+    for size in ("small", "medium", "paper"):
+        exports[f"gen_predict_{size}_k256"] = (
+            gen_predict_export(size, 256),
+            {"fn": "gen_predict", "model": size, "batch": 256},
+        )
+    exports["pipeline_b256_e25"] = (
+        pipeline_export(256, 25),
+        {"fn": "pipeline", "batch": 256, "events": 25},
+    )
+    exports["pipeline_b64_e25"] = (
+        pipeline_export(64, 25),
+        {"fn": "pipeline", "batch": 64, "events": 25},
+    )
+    exports["disc_forward_paper_n1600"] = (
+        disc_forward_export("paper", 1600),
+        {"fn": "disc_forward", "model": "paper", "n": 1600},
+    )
+    if paper_scale:
+        exports["gan_step_paper_b1024_e100"] = (
+            gan_step_export("paper", 1024, 100),
+            {"fn": "gan_step", "model": "paper", "batch": 1024, "events": 100},
+        )
+        exports["pipeline_b1024_e100"] = (
+            pipeline_export(1024, 100),
+            {"fn": "pipeline", "batch": 1024, "events": 100},
+        )
+    return exports
+
+
+def models_meta():
+    meta = {}
+    for size in model.MODEL_SIZES:
+        gen_dims, disc_dims = model.model_dims(size)
+        meta[size] = {
+            "gen_dims": [list(d) for d in gen_dims],
+            "disc_dims": [list(d) for d in disc_dims],
+            "gen_param_count": nets.param_count(gen_dims),
+            "disc_param_count": nets.param_count(disc_dims),
+            "gen_layout": nets.layer_layout(gen_dims),
+            "disc_layout": nets.layer_layout(disc_dims),
+        }
+    return meta
+
+
+def export_all(out_dir, paper_scale=False, only=None):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "latent_dim": model.LATENT_DIM,
+        "leaky_slope": nets.LEAKY_SLOPE,
+        "true_params": pipeline.TRUE_PARAMS,
+        "models": models_meta(),
+        "artifacts": {},
+    }
+    exports = default_exports(paper_scale)
+    for name, ((fn, shapes, outputs), meta) in exports.items():
+        if only and name not in only:
+            continue
+        specs = [_spec(s) for _, s in shapes]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry = dict(meta)
+        entry["file"] = fname
+        entry["inputs"] = [_io(n, s) for n, s in shapes]
+        entry["outputs"] = outputs
+        manifest["artifacts"][name] = entry
+        print(f"  exported {fname} ({len(text) / 1024:.0f} KiB)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {out_dir}/manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--paper-scale",
+        action="store_true",
+        default=os.environ.get("SAGIPS_PAPER_SCALE") == "1",
+        help="also export the full Table III configuration (B=1024, E=100)",
+    )
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    args = ap.parse_args()
+    export_all(args.out, paper_scale=args.paper_scale, only=args.only)
+
+
+if __name__ == "__main__":
+    main()

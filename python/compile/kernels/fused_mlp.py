@@ -1,0 +1,137 @@
+"""Pallas kernel: fused Linear + LeakyReLU layer (the GAN's dense hot path).
+
+This is the Layer-1 compute hot-spot of SAGIPS: every generator and
+discriminator layer is one fused ``y = leaky_relu(x @ W + b)`` kernel, so the
+matmul, bias add and activation stay in VMEM instead of round-tripping
+through HBM between three separate ops.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper runs these layers
+as cuBLAS GEMMs on A100s. On TPU the natural unit is the MXU (128x128
+systolic array): we tile the batch dimension into blocks that are multiples
+of the (8, 128) f32 tile, keep the full (In, Out) weight panel resident in
+VMEM (the GAN layers are at most 157x157 — a few hundred KB), and express
+the HBM->VMEM schedule with a 1-D grid over batch blocks, which is what the
+paper's threadblock tiling expressed on GPU.
+
+The kernel must lower with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and the whole point of the AOT path is that the
+Rust coordinator runs these artifacts on the request path.
+
+Differentiability: ``pallas_call`` is not reliably differentiable, so the
+layer is wrapped in ``jax.custom_vjp`` with a pure-jnp backward derived from
+``ref.py``. Forward = Pallas, backward = jnp; both lower into the same HLO
+artifact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Max batch rows per grid step. 512 rows x 157 cols x 4 B ~= 320 KB of
+# activations per block — comfortably inside a 16 MB VMEM budget together
+# with the weight panel, and a multiple of the 8-row f32 sublane tile.
+_MAX_BLOCK_B = 512
+
+
+def _pick_block(b):
+    """Largest divisor of the batch that is <= _MAX_BLOCK_B.
+
+    Larger blocks mean fewer grid steps (less per-step overhead, better
+    MXU occupancy along the batch dimension); a divisor keeps the grid
+    exact so no masking is needed. Falls back to the whole batch as a
+    single block for small/awkward batches (e.g. the weak-scaling sizes
+    51/17 from eq. (10) of the paper) — still fused, just a 1-step grid.
+    """
+    if b <= _MAX_BLOCK_B:
+        return b
+    for cand in range(_MAX_BLOCK_B, 0, -1):
+        if b % cand == 0:
+            return cand
+    return b
+
+
+def _fused_kernel(x_ref, w_ref, b_ref, o_ref, *, slope, activate):
+    """One grid step: compute a (block_b, Out) tile of the output."""
+    x = x_ref[...]
+    w = w_ref[...]
+    bias = b_ref[...]
+    h = jnp.dot(x, w, preferred_element_type=jnp.float32) + bias[None, :]
+    if activate:
+        h = jnp.where(h >= 0, h, slope * h)
+    o_ref[...] = h
+
+
+def _forward_pallas(x, w, b, slope, activate):
+    batch, d_in = x.shape
+    d_out = w.shape[1]
+    blk = _pick_block(batch)
+    grid = (batch // blk,)
+    kern = functools.partial(_fused_kernel, slope=slope, activate=activate)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((d_in, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((d_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, d_out), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def fused_linear_act(x, w, b, slope, activate):
+    """Fused ``leaky_relu(x @ w + b)`` (or linear when ``activate=False``).
+
+    Forward runs the Pallas kernel; the VJP is a hand-written jnp backward
+    so the exported GAN step is differentiable end to end.
+    """
+    return _forward_pallas(x, w, b, slope, activate)
+
+
+def _fwd(x, w, b, slope, activate):
+    y = _forward_pallas(x, w, b, slope, activate)
+    # Save the pre-activation sign through the cheap jnp recompute of h's
+    # sign: for LeakyReLU, sign(h) == sign(y) (slope > 0), so y itself is a
+    # sufficient residual — no extra buffer.
+    return y, (x, w, y)
+
+
+def _bwd(slope, activate, res, g):
+    x, w, y = res
+    if activate:
+        # d LeakyReLU: 1 where pre-activation >= 0 else slope; sign(y)
+        # carries the same information because slope > 0.
+        dh = jnp.where(y >= 0, g, slope * g)
+    else:
+        dh = g
+    dx = jnp.dot(dh, w.T, preferred_element_type=jnp.float32)
+    dw = jnp.dot(x.T, dh, preferred_element_type=jnp.float32)
+    db = jnp.sum(dh, axis=0)
+    return dx, dw, db
+
+
+fused_linear_act.defvjp(_fwd, _bwd)
+
+
+def vmem_footprint_bytes(batch, d_in, d_out):
+    """Estimated VMEM bytes held by one grid step of the fused kernel.
+
+    Used by the §Perf analysis (DESIGN.md): activations block + weight
+    panel + bias + output block, f32.
+    """
+    blk = _pick_block(batch)
+    return 4 * (blk * d_in + d_in * d_out + d_out + blk * d_out)
+
+
+def mxu_tile_utilization(d_in, d_out):
+    """Fraction of the padded (128, 128) MXU tiles actually used by the
+    weight panel — the §Perf occupancy metric for the GAN layer shapes."""
+    pad = lambda n: ((n + 127) // 128) * 128
+    return (d_in * d_out) / float(pad(d_in) * pad(d_out))

@@ -1,0 +1,24 @@
+"""GAN losses (non-saturating / BCE-with-logits).
+
+The discriminator is the paper's objective function F: it is trained to
+label reference events as 1 and synthetic events as 0, and — unlike an MSE
+objective — never compares events index-to-index, which is exactly why the
+paper uses it (the sampled synthetic events arrive in random order).
+"""
+
+import jax.numpy as jnp
+
+
+def softplus(x):
+    # Numerically stable softplus: log(1 + exp(x)).
+    return jnp.logaddexp(x, 0.0)
+
+
+def disc_loss(real_logits, fake_logits):
+    """BCE with logits: real -> 1, fake -> 0."""
+    return jnp.mean(softplus(-real_logits)) + jnp.mean(softplus(fake_logits))
+
+
+def gen_loss(fake_logits):
+    """Non-saturating generator loss: maximize log D(fake)."""
+    return jnp.mean(softplus(-fake_logits))

@@ -1,0 +1,154 @@
+"""Layer-2: the SAGIPS GAN computations exported to the Rust coordinator.
+
+Everything here is a pure function of flat parameter vectors + explicit
+randomness (noise ``z`` and uniforms ``u`` are *inputs*, drawn by the Rust
+coordinator's PRNG), so the lowered HLO artifacts are deterministic and the
+coordinator fully owns the stochasticity — a requirement for reproducible
+distributed runs and for the bootstrap sub-sampling the paper describes.
+
+Exported computations (see ``aot.py`` for the artifact grid):
+
+* ``gan_step``     — one training step: generator forward -> pipeline ->
+                     discriminator; returns generator gradients,
+                     discriminator gradients and both losses.
+* ``gen_predict``  — generator forward only (parameter predictions for the
+                     residual diagnostics / ensemble response, eqs 6-8).
+* ``pipeline_fn``  — the environment pipeline alone (used by Rust to build
+                     the loop-closure toy data set from the true params).
+* ``disc_forward`` — discriminator logits (diagnostics).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import losses, nets, pipeline
+
+LATENT_DIM = 16
+
+# Model size variants used by the ensemble study (Fig 8 trains GANs "with
+# different number of model parameters"). "paper" matches the paper's
+# counts within 0.2% (51,288 vs 51,206 generator / 50,241 vs 50,049
+# discriminator — exact architecture undisclosed).
+MODEL_SIZES = {
+    "small": {"gen_hidden": [32, 32], "disc_hidden": [32, 32]},
+    "medium": {"gen_hidden": [80, 80, 80], "disc_hidden": [80, 80, 80]},
+    "paper": {"gen_hidden": [154, 154, 154], "disc_hidden": [157, 157, 157]},
+}
+
+
+def model_dims(size):
+    """(gen_dims, disc_dims) for a model size variant."""
+    spec = MODEL_SIZES[size]
+    gen_sizes = [LATENT_DIM] + spec["gen_hidden"] + [6]
+    disc_sizes = [2] + spec["disc_hidden"] + [1]
+    return nets.mlp_dims(gen_sizes), nets.mlp_dims(disc_sizes)
+
+
+def generator_apply(gen_flat, gen_dims, z):
+    """Generator forward: noise (B, LATENT_DIM) -> parameters (B, 6)."""
+    return nets.mlp_apply(gen_flat, gen_dims, z)
+
+
+def discriminator_apply(disc_flat, disc_dims, events):
+    """Discriminator forward: events (N, 2) -> logits (N,)."""
+    return nets.mlp_apply(disc_flat, disc_dims, events)[:, 0]
+
+
+def gan_step_naive(gen_flat, disc_flat, z, u, real, *, gen_dims, disc_dims):
+    """Reference (unoptimized) GAN step: two independent `value_and_grad`s.
+
+    Kept as the numerical oracle and the §Perf ablation baseline: XLA CSE
+    does *not* merge the duplicated generator-forward + pipeline between
+    the two loss graphs (the lowered HLO contains 22 Pallas grid loops vs
+    13 for `gan_step`), so the optimized version below shares them
+    explicitly. See EXPERIMENTS.md §Perf.
+    """
+
+    def g_loss_fn(gf):
+        params = generator_apply(gf, gen_dims, z)
+        fake = pipeline.pipeline_apply(params, u)
+        fake_logits = discriminator_apply(disc_flat, disc_dims, fake)
+        return losses.gen_loss(fake_logits)
+
+    def d_loss_fn(df):
+        params = jax.lax.stop_gradient(generator_apply(gen_flat, gen_dims, z))
+        fake = pipeline.pipeline_apply(params, u)
+        fake_logits = discriminator_apply(df, disc_dims, fake)
+        real_logits = discriminator_apply(df, disc_dims, real)
+        return losses.disc_loss(real_logits, fake_logits)
+
+    g_loss, g_grads = jax.value_and_grad(g_loss_fn)(gen_flat)
+    d_loss, d_grads = jax.value_and_grad(d_loss_fn)(disc_flat)
+    return g_grads, d_grads, g_loss, d_loss
+
+
+def gan_step(gen_flat, disc_flat, z, u, real, *, gen_dims, disc_dims):
+    """One GAN training step of the loop-closure workflow (optimized).
+
+    Shares every forward pass between the generator and discriminator
+    losses via explicit `jax.vjp` plumbing — the generator forward, the
+    pipeline, and the discriminator's fake-batch forward each appear once
+    in the lowered HLO (the naive two-`grad` version duplicates them and
+    XLA CSE does not recover it).
+
+    Args:
+      gen_flat:  (Pg,) flat generator parameters.
+      disc_flat: (Pd,) flat discriminator parameters.
+      z:         (B, LATENT_DIM) noise.
+      u:         (B, E, 2) uniforms for the event sampler.
+      real:      (B*E, 2) reference events (bootstrap sub-sample drawn by
+                 the coordinator; batch matched to the synthetic batch as
+                 the paper requires).
+    Returns:
+      (g_grads (Pg,), d_grads (Pd,), g_loss (), d_loss ())
+    """
+    # Shared forward: generator -> pipeline (one evaluation, with VJP).
+    def synth(gf):
+        params = generator_apply(gf, gen_dims, z)
+        return pipeline.pipeline_apply(params, u)
+
+    fake, synth_vjp = jax.vjp(synth, gen_flat)
+
+    # Shared discriminator forward on the fake batch, differentiable in
+    # both the discriminator parameters and the events.
+    def disc_fake(df, fk):
+        return discriminator_apply(df, disc_dims, fk)
+
+    fake_logits, disc_fake_vjp = jax.vjp(disc_fake, disc_flat, fake)
+
+    # Discriminator forward on the real batch (df only).
+    def disc_real(df):
+        return discriminator_apply(df, disc_dims, real)
+
+    real_logits, disc_real_vjp = jax.vjp(disc_real, disc_flat)
+
+    # Generator loss + gradient: dL/dlogits -> dL/dfake -> dL/dgen.
+    g_loss, gl_vjp = jax.vjp(losses.gen_loss, fake_logits)
+    (dlogits_g,) = gl_vjp(jnp.ones(()))
+    _, dfake = disc_fake_vjp(dlogits_g)
+    (g_grads,) = synth_vjp(dfake)
+
+    # Discriminator loss + gradient through both logits branches; the
+    # fake batch is a constant here (the naive version's stop_gradient).
+    d_loss, dl_vjp = jax.vjp(losses.disc_loss, real_logits, fake_logits)
+    dreal_logits, dfake_logits = dl_vjp(jnp.ones(()))
+    (d_grads_real,) = disc_real_vjp(dreal_logits)
+    d_grads_fake, _ = disc_fake_vjp(dfake_logits)
+    d_grads = d_grads_real + d_grads_fake
+
+    return g_grads, d_grads, g_loss, d_loss
+
+
+def gen_predict(gen_flat, z, *, gen_dims):
+    """Generator predictions for the residual / ensemble diagnostics."""
+    return generator_apply(gen_flat, gen_dims, z)
+
+
+def pipeline_fn(params, u):
+    """The environment pipeline alone: (B,6) + (B,E,2) -> (B*E, 2)."""
+    return pipeline.pipeline_apply(params, u)
+
+
+def disc_forward(disc_flat, events, *, disc_dims):
+    """Discriminator logits over an event batch (diagnostics)."""
+    return discriminator_apply(disc_flat, disc_dims, events)

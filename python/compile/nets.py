@@ -1,0 +1,84 @@
+"""MLP definitions over *flat* parameter vectors.
+
+The Rust coordinator owns model parameters as flat f32 buffers (that is what
+the ring-all-reduce, RMA mailboxes and optimizers operate on), so every
+exported computation takes a flat vector and unflattens it inside the traced
+function. The layer layout (offsets/shapes) is emitted into the artifact
+manifest so the Rust side can initialize parameters (Kaiming-normal, like
+the paper) and slice weight-vs-bias gradients (the paper excludes bias
+gradients from the ring transfer).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import fused_mlp
+
+LEAKY_SLOPE = 0.2
+
+
+def mlp_dims(sizes):
+    """[(in, out), ...] from a [d0, d1, ..., dk] size list."""
+    return list(zip(sizes[:-1], sizes[1:]))
+
+
+def param_count(dims):
+    return sum(i * o + o for i, o in dims)
+
+
+def layer_layout(dims):
+    """Flat-vector layout: per layer, weight offset/shape + bias offset.
+
+    Layout order is [W0, b0, W1, b1, ...] with W stored row-major (In, Out).
+    """
+    layout = []
+    off = 0
+    for d_in, d_out in dims:
+        w_off = off
+        off += d_in * d_out
+        b_off = off
+        off += d_out
+        layout.append(
+            {
+                "w_offset": w_off,
+                "w_shape": [d_in, d_out],
+                "b_offset": b_off,
+                "b_len": d_out,
+            }
+        )
+    return layout
+
+
+def unflatten(flat, dims):
+    """Slice a flat f32 vector into [(W, b), ...] per ``layer_layout``."""
+    layers = []
+    off = 0
+    for d_in, d_out in dims:
+        w = flat[off : off + d_in * d_out].reshape(d_in, d_out)
+        off += d_in * d_out
+        b = flat[off : off + d_out]
+        off += d_out
+        layers.append((w, b))
+    return layers
+
+
+def mlp_apply(flat, dims, x, slope=LEAKY_SLOPE):
+    """Forward an MLP with LeakyReLU hidden layers and a linear output
+    layer. Every layer runs through the fused Pallas kernel."""
+    layers = unflatten(flat, dims)
+    h = x
+    for i, (w, b) in enumerate(layers):
+        activate = i < len(layers) - 1
+        h = fused_mlp.fused_linear_act(h, w, b, slope, activate)
+    return h
+
+
+def mlp_apply_ref(flat, dims, x, slope=LEAKY_SLOPE):
+    """Pure-jnp forward (oracle for tests)."""
+    from .kernels import ref
+
+    layers = unflatten(flat, dims)
+    h = x
+    for i, (w, b) in enumerate(layers):
+        activate = i < len(layers) - 1
+        h = ref.fused_linear_act(h, w, b, slope, activate)
+    return h

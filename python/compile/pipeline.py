@@ -1,0 +1,35 @@
+"""The environment pipeline f(x̂(p)) of the 1-D proxy app (Fig 7).
+
+Translates a batch of predicted parameter vectors into synthetic events that
+are format-compatible with the reference data: for each of the B parameter
+samples the inverse-CDF sampler draws E events of two observables
+(y0, y1). The output is flattened to (B*E, 2) — the discriminator batch.
+
+The whole pipeline is differentiable (a hard requirement of the paper:
+"Each SAGIPS module needs to be differentiable, otherwise we would not be
+able to train a GAN via backpropagation").
+
+True parameters of the loop-closure test. Monotonicity of the quantile
+(p1 + 2*p2*u > 0 and p4 + 2*p5*u > 0 on u in [0,1]) holds, so these define
+valid distributions.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import quantile, ref
+
+TRUE_PARAMS = [1.0, 0.5, 0.3, -0.5, 1.2, 0.4]
+
+
+def pipeline_apply(params, u):
+    """(B, 6) params + (B, E, 2) uniforms -> (B*E, 2) events (Pallas)."""
+    events = quantile.quantile_sample(params, u)
+    b, e, _ = events.shape
+    return events.reshape(b * e, 2)
+
+
+def pipeline_apply_ref(params, u):
+    """Pure-jnp oracle of ``pipeline_apply``."""
+    events = ref.quantile_eval(params, u)
+    b, e, _ = events.shape
+    return events.reshape(b * e, 2)

@@ -1,0 +1,104 @@
+"""AOT export tests: manifest schema, HLO text validity, shape agreement.
+
+These protect the Python->Rust interface: the Rust runtime trusts
+manifest.json blindly, so the manifest must describe exactly what the HLO
+artifacts compute.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model, nets, pipeline
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    only = ["gan_step_small_b16_e25", "gen_predict_small_k256", "pipeline_b64_e25"]
+    aot.export_all(str(out), only=only)
+    with open(out / "manifest.json") as f:
+        manifest = json.load(f)
+    return out, manifest
+
+
+def test_manifest_schema(exported):
+    out, m = exported
+    assert m["version"] == 1
+    assert m["latent_dim"] == model.LATENT_DIM
+    assert m["true_params"] == pipeline.TRUE_PARAMS
+    for size, meta in m["models"].items():
+        gen_dims, disc_dims = model.model_dims(size)
+        assert meta["gen_param_count"] == nets.param_count(gen_dims)
+        assert meta["disc_param_count"] == nets.param_count(disc_dims)
+        assert len(meta["gen_layout"]) == len(gen_dims)
+    for name, art in m["artifacts"].items():
+        path = out / art["file"]
+        assert path.exists(), name
+        assert art["inputs"] and art["outputs"]
+
+
+def test_hlo_text_is_parseable_entry_module(exported):
+    out, m = exported
+    for art in m["artifacts"].values():
+        text = (out / art["file"]).read_text()
+        assert text.startswith("HloModule"), art["file"]
+        assert "ENTRY" in text
+
+
+def test_manifest_shapes_match_artifact_parameters(exported):
+    """Every manifest input appears as a parameter of matching shape in the
+    HLO entry computation."""
+    out, m = exported
+    for art in m["artifacts"].values():
+        text = (out / art["file"]).read_text()
+        entry = text[text.index("ENTRY") :]
+        for i, inp in enumerate(art["inputs"]):
+            dims = ",".join(str(d) for d in inp["shape"])
+            token = f"f32[{dims}]" if inp["shape"] else "f32[]"
+            line = next(l for l in entry.splitlines() if f"parameter({i})" in l)
+            assert token in line, (art["file"], inp, line)
+
+
+def test_exported_gan_step_matches_eager(exported):
+    """Run the lowered computation via jax and compare against eager."""
+    out, m = exported
+    art = m["artifacts"]["gan_step_small_b16_e25"]
+    gen_dims, disc_dims = model.model_dims("small")
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    args = [
+        jax.random.normal(ks[0], (m["models"]["small"]["gen_param_count"],)) * 0.3,
+        jax.random.normal(ks[1], (m["models"]["small"]["disc_param_count"],)) * 0.3,
+        jax.random.normal(ks[2], (16, model.LATENT_DIM)),
+        jax.random.uniform(ks[3], (16, 25, 2)),
+        jax.random.normal(ks[4], (400, 2)),
+    ]
+    import functools
+
+    fn = functools.partial(model.gan_step, gen_dims=gen_dims, disc_dims=disc_dims)
+    eager = fn(*args)
+    jitted = jax.jit(fn)(*args)
+    for a, b in zip(eager, jitted):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-4, atol=5e-5)
+
+
+def test_default_export_grid_contents():
+    exports = aot.default_exports(paper_scale=False)
+    # weak-scaling grid present
+    for b in (4, 8, 16, 32, 64):
+        assert f"gan_step_paper_b{b}_e25" in exports
+    # fig8 grid present
+    for size in ("small", "medium"):
+        for b in (16, 64):
+            assert f"gan_step_{size}_b{b}_e25" in exports
+    assert "pipeline_b256_e25" in exports
+    # paper scale adds Table III config
+    full = aot.default_exports(paper_scale=True)
+    assert "gan_step_paper_b1024_e100" in full

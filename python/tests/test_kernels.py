@@ -1,0 +1,179 @@
+"""Kernel vs oracle: the core L1 correctness signal.
+
+Hypothesis sweeps shapes (including the awkward weak-scaling batch sizes
+from eq (10) of the paper: 51, 17, ...) and dtypes; every case asserts the
+Pallas kernel matches the pure-jnp reference to float tolerance, for both
+the forward value and the custom_vjp gradients.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import nets
+from compile.kernels import fused_mlp, quantile, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused_mlp
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 5, 8, 16, 17, 51, 64, 100, 128, 257]),
+    d_in=st.sampled_from([1, 2, 6, 16, 32, 154]),
+    d_out=st.sampled_from([1, 6, 32, 154, 157]),
+    activate=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_mlp_matches_ref(b, d_in, d_out, activate, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = rand(k1, (b, d_in))
+    w = rand(k2, (d_in, d_out), scale=0.5)
+    bias = rand(k3, (d_out,))
+    got = fused_mlp.fused_linear_act(x, w, bias, 0.2, activate)
+    want = ref.fused_linear_act(x, w, bias, 0.2, activate)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.sampled_from([2, 8, 17, 64]),
+    d_in=st.sampled_from([4, 16]),
+    d_out=st.sampled_from([3, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_mlp_grads_match_ref(b, d_in, d_out, seed):
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = rand(k1, (b, d_in))
+    w = rand(k2, (d_in, d_out), scale=0.5)
+    bias = rand(k3, (d_out,))
+    ct = rand(k4, (b, d_out))
+
+    def loss_kernel(x, w, bias):
+        return jnp.sum(fused_mlp.fused_linear_act(x, w, bias, 0.2, True) * ct)
+
+    def loss_ref(x, w, bias):
+        return jnp.sum(ref.fused_linear_act(x, w, bias, 0.2, True) * ct)
+
+    g_k = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, w, bias)
+    g_r = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, bias)
+    for a, b_ in zip(g_k, g_r):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_mlp_gradcheck_finite_differences():
+    """custom_vjp backward vs central finite differences."""
+    key = jax.random.PRNGKey(7)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = rand(k1, (4, 5), dtype=jnp.float32)
+    w = rand(k2, (5, 3), scale=0.5)
+    bias = rand(k3, (3,))
+
+    def f(w):
+        return jnp.sum(jnp.tanh(fused_mlp.fused_linear_act(x, w, bias, 0.2, True)))
+
+    g = np.asarray(jax.grad(f)(w))
+    eps = 1e-3
+    w_np = np.asarray(w, dtype=np.float64)
+    for idx in [(0, 0), (2, 1), (4, 2)]:
+        wp = w_np.copy()
+        wp[idx] += eps
+        wm = w_np.copy()
+        wm[idx] -= eps
+        fd = (float(f(jnp.asarray(wp, jnp.float32))) - float(f(jnp.asarray(wm, jnp.float32)))) / (2 * eps)
+        assert abs(fd - g[idx]) < 5e-2, (idx, fd, g[idx])
+
+
+def test_fused_mlp_block_picker():
+    # Largest divisor <= _MAX_BLOCK_B; small batches are a single block.
+    assert fused_mlp._pick_block(1024) == 512
+    assert fused_mlp._pick_block(1600) == 400
+    assert fused_mlp._pick_block(64) == 64
+    assert fused_mlp._pick_block(17) == 17  # prime batch -> single block
+    assert fused_mlp._pick_block(51) == 51
+    for b in (1024, 1600, 102400, 1275):
+        blk = fused_mlp._pick_block(b)
+        assert b % blk == 0 and blk <= max(b, fused_mlp._MAX_BLOCK_B)
+
+
+def test_fused_mlp_vmem_and_mxu_metrics():
+    # §Perf metrics are sane: paper-size layer fits VMEM, utilization known.
+    assert fused_mlp.vmem_footprint_bytes(1024, 154, 154) < 16 * 2**20
+    util = fused_mlp.mxu_tile_utilization(154, 154)
+    assert 0 < util <= 1
+    assert abs(util - (154 * 154) / (256 * 256)) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# quantile sampler
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 3, 8, 17, 51, 64, 100]),
+    e=st.sampled_from([1, 4, 25, 100]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantile_matches_ref(b, e, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    p = rand(k1, (b, 6))
+    u = jax.random.uniform(k2, (b, e, 2))
+    got = quantile.quantile_sample(p, u)
+    want = ref.quantile_eval(p, u)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.sampled_from([2, 8, 17]),
+    e=st.sampled_from([4, 25]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantile_grads_match_ref(b, e, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    p = rand(k1, (b, 6))
+    u = jax.random.uniform(k2, (b, e, 2))
+    ct = rand(k3, (b, e, 2))
+
+    def loss_kernel(p, u):
+        return jnp.sum(quantile.quantile_sample(p, u) * ct)
+
+    def loss_ref(p, u):
+        return jnp.sum(ref.quantile_eval(p, u) * ct)
+
+    g_k = jax.grad(loss_kernel, argnums=(0, 1))(p, u)
+    g_r = jax.grad(loss_ref, argnums=(0, 1))(p, u)
+    for a, b_ in zip(g_k, g_r):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+def test_quantile_monotone_for_true_params():
+    """The quantile must be a valid inverse CDF at the loop-closure truth."""
+    from compile.pipeline import TRUE_PARAMS
+
+    u = jnp.linspace(0.0, 1.0, 101)[None, :, None].repeat(2, axis=2)
+    p = jnp.asarray([TRUE_PARAMS])
+    y = ref.quantile_eval(p, u)
+    d0 = jnp.diff(y[0, :, 0])
+    d1 = jnp.diff(y[0, :, 1])
+    assert bool(jnp.all(d0 > 0)) and bool(jnp.all(d1 > 0))
+
+
+def test_quantile_dtype_bf16_close():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    p = rand(k1, (8, 6)).astype(jnp.bfloat16).astype(jnp.float32)
+    u = jax.random.uniform(k2, (8, 25, 2))
+    got = quantile.quantile_sample(p, u)
+    want = ref.quantile_eval(p, u)
+    np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-2)

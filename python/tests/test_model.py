@@ -1,0 +1,216 @@
+"""L2 model tests: MLP plumbing, pipeline, losses, full gan_step numerics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import losses, model, nets, pipeline
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _flat_params(key, dims, scale=0.3):
+    n = nets.param_count(dims)
+    return jax.random.normal(key, (n,)) * scale
+
+
+# ---------------------------------------------------------------------------
+# nets
+# ---------------------------------------------------------------------------
+
+
+def test_param_counts_match_paper_within_tolerance():
+    gen_dims, disc_dims = model.model_dims("paper")
+    pg = nets.param_count(gen_dims)
+    pd = nets.param_count(disc_dims)
+    # Paper: 51,206 generator / 50,049 discriminator parameters.
+    assert abs(pg - 51206) / 51206 < 0.005, pg
+    assert abs(pd - 50049) / 50049 < 0.005, pd
+
+
+def test_layer_layout_covers_flat_vector_exactly():
+    for size in model.MODEL_SIZES:
+        gen_dims, disc_dims = model.model_dims(size)
+        for dims in (gen_dims, disc_dims):
+            layout = nets.layer_layout(dims)
+            off = 0
+            for d, lay in zip(dims, layout):
+                assert lay["w_offset"] == off
+                assert lay["w_shape"] == [d[0], d[1]]
+                off += d[0] * d[1]
+                assert lay["b_offset"] == off
+                off += d[1]
+                assert lay["b_len"] == d[1]
+            assert off == nets.param_count(dims)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), b=st.sampled_from([1, 7, 32]))
+def test_mlp_apply_pallas_matches_jnp(seed, b):
+    dims = nets.mlp_dims([16, 20, 12, 6])
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    flat = _flat_params(k1, dims)
+    x = jax.random.normal(k2, (b, 16))
+    got = nets.mlp_apply(flat, dims, x)
+    want = nets.mlp_apply_ref(flat, dims, x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_unflatten_roundtrip():
+    dims = nets.mlp_dims([4, 3, 2])
+    flat = jnp.arange(nets.param_count(dims), dtype=jnp.float32)
+    layers = nets.unflatten(flat, dims)
+    rebuilt = jnp.concatenate([jnp.concatenate([w.ravel(), b]) for w, b in layers])
+    np.testing.assert_array_equal(flat, rebuilt)
+
+
+# ---------------------------------------------------------------------------
+# pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_shapes_and_flatten_order():
+    p = jnp.tile(jnp.asarray([pipeline.TRUE_PARAMS]), (3, 1))
+    u = jnp.zeros((3, 5, 2))
+    ev = pipeline.pipeline_apply_ref(p, u)
+    assert ev.shape == (15, 2)
+    # u=0 -> y = (p0, p3) for every event
+    np.testing.assert_allclose(ev[:, 0], 1.0, atol=1e-6)
+    np.testing.assert_allclose(ev[:, 1], -0.5, atol=1e-6)
+
+
+def test_pipeline_pallas_matches_ref():
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    p = jax.random.normal(k1, (16, 6))
+    u = jax.random.uniform(k2, (16, 25, 2))
+    np.testing.assert_allclose(
+        pipeline.pipeline_apply(p, u),
+        pipeline.pipeline_apply_ref(p, u),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+def test_pipeline_event_statistics_at_truth():
+    """Closed-form moments of the quantile distribution at p*.
+
+    For y = a + b*u + c*u^2 with u ~ U(0,1): E[y] = a + b/2 + c/3.
+    """
+    key = jax.random.PRNGKey(1)
+    p = jnp.tile(jnp.asarray([pipeline.TRUE_PARAMS]), (64, 1))
+    u = jax.random.uniform(key, (64, 400, 2))
+    ev = pipeline.pipeline_apply_ref(p, u)
+    a, b, c = pipeline.TRUE_PARAMS[0:3]
+    assert abs(float(ev[:, 0].mean()) - (a + b / 2 + c / 3)) < 2e-2
+    a, b, c = pipeline.TRUE_PARAMS[3:6]
+    assert abs(float(ev[:, 1].mean()) - (a + b / 2 + c / 3)) < 2e-2
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def test_losses_at_uninformative_discriminator():
+    zeros = jnp.zeros((10,))
+    # D(x) = 0 logits -> both losses are log(2) (and 2*log(2) for disc).
+    assert abs(float(losses.gen_loss(zeros)) - np.log(2)) < 1e-6
+    assert abs(float(losses.disc_loss(zeros, zeros)) - 2 * np.log(2)) < 1e-6
+
+
+def test_disc_loss_rewards_separation():
+    good = losses.disc_loss(jnp.full((8,), 5.0), jnp.full((8,), -5.0))
+    bad = losses.disc_loss(jnp.full((8,), -5.0), jnp.full((8,), 5.0))
+    assert float(good) < float(bad)
+
+
+def test_softplus_stability():
+    big = losses.softplus(jnp.asarray([100.0, -100.0]))
+    assert np.isfinite(np.asarray(big)).all()
+    assert abs(float(big[0]) - 100.0) < 1e-4
+    assert float(big[1]) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# gan_step
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    gen_dims, disc_dims = model.model_dims("small")
+    key = jax.random.PRNGKey(42)
+    ks = jax.random.split(key, 5)
+    gen = _flat_params(ks[0], gen_dims)
+    disc = _flat_params(ks[1], disc_dims)
+    z = jax.random.normal(ks[2], (8, model.LATENT_DIM))
+    u = jax.random.uniform(ks[3], (8, 25, 2))
+    real = jax.random.normal(ks[4], (200, 2))
+    return gen_dims, disc_dims, gen, disc, z, u, real
+
+
+def test_gan_step_shapes_and_finite(small_setup):
+    gen_dims, disc_dims, gen, disc, z, u, real = small_setup
+    gg, dg, gl, dl = model.gan_step(
+        gen, disc, z, u, real, gen_dims=gen_dims, disc_dims=disc_dims
+    )
+    assert gg.shape == gen.shape and dg.shape == disc.shape
+    for t in (gg, dg, gl, dl):
+        assert np.isfinite(np.asarray(t)).all()
+
+
+def test_gan_step_grads_nonzero(small_setup):
+    gen_dims, disc_dims, gen, disc, z, u, real = small_setup
+    gg, dg, _, _ = model.gan_step(
+        gen, disc, z, u, real, gen_dims=gen_dims, disc_dims=disc_dims
+    )
+    assert float(jnp.abs(gg).max()) > 0
+    assert float(jnp.abs(dg).max()) > 0
+
+
+def test_gan_step_gen_grads_do_not_touch_disc(small_setup):
+    """Generator loss differentiates only generator params: perturbing the
+    discriminator's flat vector changes g_grads only through D's forward."""
+    gen_dims, disc_dims, gen, disc, z, u, real = small_setup
+    gg1, _, gl1, _ = model.gan_step(
+        gen, disc, z, u, real, gen_dims=gen_dims, disc_dims=disc_dims
+    )
+    # same inputs -> deterministic
+    gg2, _, gl2, _ = model.gan_step(
+        gen, disc, z, u, real, gen_dims=gen_dims, disc_dims=disc_dims
+    )
+    np.testing.assert_array_equal(np.asarray(gg1), np.asarray(gg2))
+    assert float(gl1) == float(gl2)
+
+
+def test_gan_step_descent_direction(small_setup):
+    """A small step against the generator gradient reduces the generator
+    loss — end-to-end differentiability through pipeline + discriminator."""
+    gen_dims, disc_dims, gen, disc, z, u, real = small_setup
+    gg, _, gl0, _ = model.gan_step(
+        gen, disc, z, u, real, gen_dims=gen_dims, disc_dims=disc_dims
+    )
+    gen2 = gen - 1e-2 * gg / (jnp.linalg.norm(gg) + 1e-12)
+    _, _, gl1, _ = model.gan_step(
+        gen2, disc, z, u, real, gen_dims=gen_dims, disc_dims=disc_dims
+    )
+    assert float(gl1) < float(gl0)
+
+
+def test_gan_step_disc_descent_direction(small_setup):
+    gen_dims, disc_dims, gen, disc, z, u, real = small_setup
+    _, dg, _, dl0 = model.gan_step(
+        gen, disc, z, u, real, gen_dims=gen_dims, disc_dims=disc_dims
+    )
+    disc2 = disc - 1e-2 * dg / (jnp.linalg.norm(dg) + 1e-12)
+    _, _, _, dl1 = model.gan_step(
+        gen, disc, z, u, real, gen_dims=gen_dims, disc_dims=disc_dims
+    )
+    _, _, _, dl1 = model.gan_step(
+        gen, disc2, z, u, real, gen_dims=gen_dims, disc_dims=disc_dims
+    )
+    assert float(dl1) < float(dl0)

@@ -1,0 +1,26 @@
+//! Bench: regenerate Fig 10 — ensemble residual mean/σ vs ensemble size M.
+//!
+//! The paper grows the largest model's ensemble to M=100; default scale
+//! uses a smaller pool (SAGIPS_SCALE=paper trains 100 members).
+
+use std::path::Path;
+
+use sagips::report::experiments::{fig10, Scale};
+use sagips::runtime::RuntimePool;
+
+fn main() {
+    sagips::util::logging::init_from_env();
+    let mut scale = Scale::from_env(Scale::smoke());
+    // Fig 10 is specifically about ensemble growth: use a larger pool
+    // than the other smoke benches.
+    scale.ensemble_m = scale.ensemble_m.max(8);
+    let pool = RuntimePool::from_dir(Path::new("artifacts"), 3).expect("run `make artifacts`");
+    let t0 = std::time::Instant::now();
+    let out = fig10(&pool.handle(), &scale).expect("fig10");
+    println!("\nfig10 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    let (m0, r0, s0) = out.first().copied().unwrap();
+    let (m1, r1, s1) = out.last().copied().unwrap();
+    println!("M={m0}: |r̂|={r0:.3} σ={s0:.3}  ->  M={m1}: |r̂|={r1:.3} σ={s1:.3}");
+    println!("paper shape: both shrink as M grows");
+    pool.shutdown();
+}

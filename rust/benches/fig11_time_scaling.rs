@@ -1,0 +1,38 @@
+//! Bench: regenerate Fig 11 — total training time vs ranks (4..400) for
+//! conventional ARAR vs grouped ARAR vs grouped RMA-ARAR, via the
+//! calibrated discrete-event simulator.
+
+use sagips::report::experiments::fig11;
+use sagips::sim::ComputeModel;
+use sagips::util::bench;
+
+fn main() {
+    sagips::util::logging::init_from_env();
+    let compute = ComputeModel::with_jitter(0.035, 0.15);
+
+    // Time the sweep itself (the simulator is part of the deliverable:
+    // it must stay interactive).
+    let r = bench::bench("fig11 full 3-mode sweep", 1, 5, || {
+        std::hint::black_box(fig11_quiet(compute));
+    });
+    bench::header("fig11 harness");
+    println!("{}", r.row());
+
+    let series = fig11(compute);
+    // Shape assertions from the paper.
+    let conv = &series[0].1;
+    let grp = &series[1].1;
+    let conv_growth = conv.last().unwrap().1 / conv[0].1;
+    let grp_growth = grp.last().unwrap().1 / grp[0].1;
+    println!("\nconv-ARAR time growth 4->400: {conv_growth:.2}x (paper: visible growth)");
+    println!("grouped time growth 4->400: {grp_growth:.2}x (paper: nearly flat)");
+    assert!(conv_growth > 1.5 && grp_growth < 1.4);
+}
+
+fn fig11_quiet(compute: ComputeModel) -> usize {
+    use sagips::sim::sweep::{sweep_mode, PAPER_MODES, PAPER_RANKS};
+    PAPER_MODES
+        .iter()
+        .map(|&m| sweep_mode(m, PAPER_RANKS, compute).len())
+        .sum()
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate Fig 12 — the analysis rate (eq 9) vs ranks, with the
+//! single-GPU reference line and the 4->400 gain factors.
+
+use sagips::report::experiments::fig12;
+use sagips::sim::ComputeModel;
+
+fn main() {
+    sagips::util::logging::init_from_env();
+    let compute = ComputeModel::with_jitter(0.035, 0.15);
+    let out = fig12(compute);
+
+    let conv_gain = out[0].2;
+    let grp_gain = out[1].2;
+    let rma_gain = out[2].2;
+    println!("\nmeasured gains 4->400: conv {conv_gain:.0}x, grouped {grp_gain:.0}x, rma {rma_gain:.0}x");
+    println!("paper: conv ≈ 40x; grouping doubles the gain (≈ 80x)");
+    assert!(
+        (10.0..100.0).contains(&conv_gain),
+        "conventional gain out of band: {conv_gain}"
+    );
+    assert!(grp_gain > 1.5 * conv_gain, "grouping must ~double the gain");
+    assert!(rma_gain > 1.5 * conv_gain);
+}

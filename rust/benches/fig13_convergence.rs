@@ -1,0 +1,27 @@
+//! Bench: regenerate Fig 13 — residual-vs-time curves for ensembles of
+//! 8-rank runs under horovod vs RMA-ARAR vs ARAR (+ conventional ARAR).
+
+use std::path::Path;
+
+use sagips::report::experiments::{fig13_tab4, Scale};
+use sagips::runtime::RuntimePool;
+
+fn main() {
+    sagips::util::logging::init_from_env();
+    let scale = Scale::from_env(Scale::smoke());
+    let pool = RuntimePool::from_dir(Path::new("artifacts"), 3).expect("run `make artifacts`");
+    let t0 = std::time::Instant::now();
+    let rows = fig13_tab4(&pool.handle(), &scale).expect("fig13");
+    println!("\nfig13 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    for (mode, curve, _) in &rows {
+        let first = curve.first().map(|&(_, m, _)| m).unwrap_or(f64::NAN);
+        let last = curve.last().map(|&(_, m, _)| m).unwrap_or(f64::NAN);
+        println!(
+            "{:<14} mean|r̂| {first:.3} -> {last:.3} over {} checkpoints",
+            mode.name(),
+            curve.len()
+        );
+    }
+    println!("paper shape: all methods descend; (RMA-)ARAR ends lower than hvd at full scale");
+    pool.shutdown();
+}

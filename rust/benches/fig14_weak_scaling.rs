@@ -1,0 +1,28 @@
+//! Bench: regenerate Fig 14 — single-rank vs multi-rank residual curves
+//! with the eq (10) batch reduction (RMA-ARAR).
+
+use std::path::Path;
+
+use sagips::config::Mode;
+use sagips::report::experiments::{tail_mean, weak_scaling_curves, Scale};
+use sagips::runtime::RuntimePool;
+
+fn main() {
+    sagips::util::logging::init_from_env();
+    let mut scale = Scale::from_env(Scale::smoke());
+    scale.ranks = 4;
+    let pool = RuntimePool::from_dir(Path::new("artifacts"), 3).expect("run `make artifacts`");
+    let t0 = std::time::Instant::now();
+    let curves =
+        weak_scaling_curves(&pool.handle(), &scale, Mode::RmaArarArar, &[1, 4]).expect("fig14");
+    println!("\nfig14 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    for (n, curve) in &curves {
+        println!(
+            "N={n}: wall {:.1}s, tail mean|r̂| {:.3}",
+            curve.last().map(|&(t, _, _)| t).unwrap_or(0.0),
+            tail_mean(curve, 3)
+        );
+    }
+    println!("paper shape: multi-rank run finishes the epoch budget sooner (smaller batch/rank), comparable convergence");
+    pool.shutdown();
+}

@@ -1,0 +1,26 @@
+//! Bench: regenerate Figs 15/16 — residual mean/σ vs time for RMA-ARAR
+//! (Fig 15) and ARAR (Fig 16) at 1, 2, 4, 8 ranks under eq (10).
+//! (The paper sweeps 2..60 GPUs; scale via SAGIPS_SCALE / rank list.)
+
+use std::path::Path;
+
+use sagips::config::Mode;
+use sagips::report::experiments::{tail_mean, weak_scaling_curves, Scale};
+use sagips::runtime::RuntimePool;
+
+fn main() {
+    sagips::util::logging::init_from_env();
+    let scale = Scale::from_env(Scale::smoke());
+    let pool = RuntimePool::from_dir(Path::new("artifacts"), 3).expect("run `make artifacts`");
+    for (fig, mode) in [("fig15", Mode::RmaArarArar), ("fig16", Mode::ArarArar)] {
+        let t0 = std::time::Instant::now();
+        let curves =
+            weak_scaling_curves(&pool.handle(), &scale, mode, &[1, 2, 4, 8]).expect(fig);
+        println!("\n{fig} regenerated in {:.1}s:", t0.elapsed().as_secs_f64());
+        for (n, curve) in &curves {
+            println!("  N={n}: tail mean|r̂| {:.3}", tail_mean(curve, 3));
+        }
+    }
+    println!("\npaper shape: curves for all N descend to a consistent level; more ranks descend earlier in wall-clock");
+    pool.shutdown();
+}

@@ -1,0 +1,36 @@
+//! Bench: regenerate Fig 8 — ensemble residual mean/σ across the
+//! (model size x batch size) grid.
+//!
+//! Scaled-down by default; `SAGIPS_SCALE=ci|paper` for larger runs.
+
+use std::path::Path;
+
+use sagips::report::experiments::{fig8, Scale};
+use sagips::runtime::RuntimePool;
+
+fn main() {
+    sagips::util::logging::init_from_env();
+    let scale = Scale::from_env(Scale::smoke());
+    let pool = RuntimePool::from_dir(Path::new("artifacts"), 3).expect("run `make artifacts`");
+    let t0 = std::time::Instant::now();
+    let rows = fig8(&pool.handle(), &scale).expect("fig8");
+    println!("\nfig8 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    // Shape check mirroring the paper's claim: the best (paper-size,
+    // batch-64) config beats the worst (small, batch-16) on spread.
+    let small16 = rows
+        .iter()
+        .find(|r| r.model == "small" && r.batch == 16)
+        .unwrap();
+    let paper64 = rows
+        .iter()
+        .find(|r| r.model == "paper" && r.batch == 64)
+        .unwrap();
+    println!(
+        "small/b16: |r0|={:.3} σ={:.3}   paper/b64: |r0|={:.3} σ={:.3}",
+        small16.mean_r0.abs(),
+        small16.sigma_r0,
+        paper64.mean_r0.abs(),
+        paper64.sigma_r0
+    );
+    pool.shutdown();
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate Fig 9 — RMSE vs spread contours over ensemble sizes.
+
+use std::path::Path;
+
+use sagips::report::experiments::{fig9, Scale};
+use sagips::runtime::RuntimePool;
+
+fn main() {
+    sagips::util::logging::init_from_env();
+    let scale = Scale::from_env(Scale::smoke());
+    let pool = RuntimePool::from_dir(Path::new("artifacts"), 3).expect("run `make artifacts`");
+    let t0 = std::time::Instant::now();
+    let out = fig9(&pool.handle(), &scale).expect("fig9");
+    println!("\nfig9 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    // Paper shape: the largest M has tighter dispersion than the smallest.
+    let first = out.first().unwrap();
+    let last = out.last().unwrap();
+    println!(
+        "M={}: semi_rmse={:.4}  ->  M={}: semi_rmse={:.4} (should shrink)",
+        first.m, first.semi_rmse, last.m, last.semi_rmse
+    );
+    pool.shutdown();
+}

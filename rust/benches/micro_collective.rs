@@ -1,0 +1,118 @@
+//! Micro-bench: collective hot paths — ring pass latency per mode/size,
+//! RMA window put/get, fusion pack/unpack. These are the L3 §Perf
+//! numbers (EXPERIMENTS.md).
+
+use std::time::Duration;
+
+use sagips::collective::rma_ring::RmaRing;
+use sagips::comm::{GradMsg, LinkModel, LocalNetwork, RmaRegion, RmaWindow, Topology};
+use sagips::tensor::fusion::{segments_from_layout, FusionPlan};
+use sagips::util::bench::{bench, bench_for, header};
+
+/// Paper-sized gradient payload (~51k weight gradients).
+const GRAD: usize = 51_206;
+
+fn bench_ring_pass(n: usize) {
+    // n threads run one collective epoch repeatedly; measure on rank 0.
+    let topo = Topology::new(n, 4);
+    let eps = LocalNetwork::build(&topo, LinkModel::zero());
+    let members: Vec<usize> = (0..n).collect();
+    let iters = 300usize;
+    let mut handles = Vec::new();
+    for ep in eps {
+        let members = members.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut grads = vec![1.0f32; GRAD];
+            let rank = ep.rank;
+            let t0 = std::time::Instant::now();
+            for e in 0..iters {
+                sagips::collective::ring::ring_pass(&ep, &members, e as u64, &mut grads)
+                    .unwrap();
+            }
+            if rank == 0 {
+                Some(t0.elapsed() / iters as u32)
+            } else {
+                None
+            }
+        }));
+    }
+    for h in handles {
+        if let Some(d) = h.join().unwrap() {
+            println!(
+                "{:<44} {:>10}",
+                format!("ring_pass n={n} ({GRAD} f32, unchunked)"),
+                sagips::util::bench::fmt_dur(d)
+            );
+        }
+    }
+}
+
+fn main() {
+    header("collective micro-benches (L3 hot path)");
+
+    // RMA window put/get on paper-sized payloads.
+    let w = RmaWindow::new(4);
+    let payload = vec![0.5f32; GRAD];
+    let r = bench_for("rma_window put+get 51k f32", 100, Duration::from_millis(400), || {
+        w.put(GradMsg::new(0, 0, 0, payload.clone()));
+        std::hint::black_box(w.get());
+    });
+    println!("{}", r.row());
+
+    // RMA ring pass, 4 ranks on threads.
+    {
+        let region = RmaRegion::with_capacity(4, 4);
+        let rings: Vec<RmaRing> = (0..4)
+            .map(|r| RmaRing::new(&region, vec![0, 1, 2, 3], r).unwrap())
+            .collect();
+        let iters = 300;
+        let handles: Vec<_> = rings
+            .into_iter()
+            .map(|ring| {
+                std::thread::spawn(move || {
+                    let mut grads = vec![1.0f32; GRAD];
+                    let t0 = std::time::Instant::now();
+                    for e in 0..iters {
+                        ring.pass(e, &mut grads).unwrap();
+                    }
+                    (ring.rank, t0.elapsed() / iters as u32)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rank, d) = h.join().unwrap();
+            if rank == 0 {
+                println!(
+                    "{:<44} {:>10}",
+                    "rma_ring pass n=4 (51k f32)",
+                    sagips::util::bench::fmt_dur(d)
+                );
+            }
+        }
+    }
+
+    // Transport ring passes at paper-relevant ring sizes.
+    for n in [2, 4, 8, 16] {
+        bench_ring_pass(n);
+    }
+
+    // Fusion pack/unpack over a paper-shaped layer layout.
+    let segs = segments_from_layout(&[
+        (0, 16 * 154, 2464, 154),
+        (2618, 154 * 154, 26334, 154),
+        (26488, 154 * 154, 50204, 154),
+        (50358, 154 * 6, 51282, 6),
+    ]);
+    let plan = FusionPlan::build(segs, 0, false);
+    let grads = vec![1.0f32; 51_288];
+    let mut packed = Vec::new();
+    let r = bench("fusion pack (weights-only, paper layout)", 50, 2000, || {
+        plan.pack(&grads, &mut packed).unwrap();
+    });
+    println!("{}", r.row());
+    let mut out = vec![0.0f32; 51_288];
+    let r = bench("fusion unpack", 50, 2000, || {
+        plan.unpack(&packed, &mut out).unwrap();
+    });
+    println!("{}", r.row());
+}

@@ -1,0 +1,91 @@
+//! Micro-bench: PJRT runtime execution costs per artifact — gan_step at
+//! each batch size, gen_predict, pipeline — plus pool dispatch overhead.
+//! These calibrate the simulator's compute model and are the L2/L3 §Perf
+//! baseline in EXPERIMENTS.md.
+
+use std::path::Path;
+use std::time::Duration;
+
+use sagips::model::gan::GanState;
+use sagips::runtime::RuntimePool;
+use sagips::util::bench::{bench_for, header};
+use sagips::util::rng::Rng;
+
+fn main() {
+    sagips::util::logging::init_from_env();
+    let pool = RuntimePool::from_dir(Path::new("artifacts"), 2).expect("run `make artifacts`");
+    let h = pool.handle();
+    let m = h.manifest().clone();
+    let meta = m.model("paper").unwrap().clone();
+    let mut rng = Rng::new(7);
+    let state = GanState::init(&meta, m.leaky_slope, &mut rng);
+
+    header("runtime micro-benches (PJRT execute, CPU)");
+
+    for b in [4usize, 16, 64] {
+        let name = format!("gan_step_paper_b{b}_e25");
+        if m.artifact(&name).is_err() {
+            continue;
+        }
+        let mut z = vec![0.0f32; b * m.latent_dim];
+        let mut u = vec![0.0f32; b * 25 * 2];
+        let real = vec![0.3f32; b * 25 * 2];
+        rng.fill_normal(&mut z);
+        rng.fill_uniform(&mut u);
+        // warm: first call compiles
+        h.execute(
+            &name,
+            vec![state.gen.clone(), state.disc.clone(), z.clone(), u.clone(), real.clone()],
+        )
+        .unwrap();
+        let r = bench_for(&format!("gan_step b={b} (disc batch {})", b * 25), 2, Duration::from_secs(2), || {
+            std::hint::black_box(
+                h.execute(
+                    &name,
+                    vec![
+                        state.gen.clone(),
+                        state.disc.clone(),
+                        z.clone(),
+                        u.clone(),
+                        real.clone(),
+                    ],
+                )
+                .unwrap(),
+            );
+        });
+        println!("{}", r.row());
+    }
+
+    // gen_predict (the residual evaluator's cost).
+    {
+        let mut z = vec![0.0f32; 256 * m.latent_dim];
+        rng.fill_normal(&mut z);
+        h.execute("gen_predict_paper_k256", vec![state.gen.clone(), z.clone()])
+            .unwrap();
+        let r = bench_for("gen_predict k=256", 2, Duration::from_secs(1), || {
+            std::hint::black_box(
+                h.execute("gen_predict_paper_k256", vec![state.gen.clone(), z.clone()])
+                    .unwrap(),
+            );
+        });
+        println!("{}", r.row());
+    }
+
+    // pipeline alone (the sampler's cost).
+    {
+        let params: Vec<f32> = (0..256).flat_map(|_| m.true_params.clone()).collect();
+        let mut u = vec![0.0f32; 256 * 25 * 2];
+        rng.fill_uniform(&mut u);
+        h.execute("pipeline_b256_e25", vec![params.clone(), u.clone()])
+            .unwrap();
+        let r = bench_for("pipeline b=256 e=25 (6400 events)", 2, Duration::from_secs(1), || {
+            std::hint::black_box(
+                h.execute("pipeline_b256_e25", vec![params.clone(), u.clone()])
+                    .unwrap(),
+            );
+        });
+        println!("{}", r.row());
+    }
+
+    pool.shutdown();
+}

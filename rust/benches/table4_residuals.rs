@@ -1,0 +1,31 @@
+//! Bench: regenerate Table IV — final normalized residuals ±1σ for
+//! horovod / RMA-ARAR / ARAR / conventional ARAR ensembles (8 ranks),
+//! printed next to the paper's reported numbers.
+
+use std::path::Path;
+
+use sagips::report::experiments::{fig13_tab4, Scale};
+use sagips::report::{format_table4, table4_paper_reference, Table4Row};
+use sagips::runtime::RuntimePool;
+
+fn main() {
+    sagips::util::logging::init_from_env();
+    let scale = Scale::from_env(Scale::smoke());
+    let pool = RuntimePool::from_dir(Path::new("artifacts"), 3).expect("run `make artifacts`");
+    let t0 = std::time::Instant::now();
+    let rows = fig13_tab4(&pool.handle(), &scale).expect("tab4");
+    let mut table: Vec<Table4Row> = rows
+        .iter()
+        .map(|(mode, _, raw)| Table4Row::from_raw(&format!("{} (ours)", mode.name()), raw))
+        .collect();
+    table.extend(table4_paper_reference());
+    println!("\n{}", format_table4(&table));
+    println!(
+        "table4 regenerated in {:.1}s (scale: {} members x {} epochs; \
+         SAGIPS_SCALE=paper for the full 20 x 100k configuration)",
+        t0.elapsed().as_secs_f64(),
+        scale.ensemble_m,
+        scale.epochs
+    );
+    pool.shutdown();
+}

@@ -1,0 +1,128 @@
+//! Grouped gradient exchange (Sec. IV-B4, Fig 6, Table I).
+//!
+//! Ranks are divided into *inner groups* — one per node, ring-all-reduce
+//! every epoch — and one *outer group* holding the first rank of each inner
+//! group, ring-all-reduce every `h` epochs (`outer_freq`). Gradients reach
+//! other nodes through the outer members and diffuse into each node on the
+//! following inner passes; unlike the hierarchical all-reduce of [16] there
+//! is no third broadcast step and no master rank.
+//!
+//! Two flavours, matching Table II:
+//! * [`GroupedArar`]   — inner ring over the transport ("ARAR-ARAR").
+//! * [`RmaGroupedArar`] — inner ring over RMA windows ("RMA-ARAR-ARAR");
+//!   the outer ring stays transport-based in both (as in the paper).
+
+use super::ring::ring_pass;
+use super::rma_ring::RmaRing;
+use super::{Collective, CommStats};
+use crate::comm::{Endpoint, RmaRegion, Topology};
+use crate::util::error::Result;
+
+/// Whether epoch `e` is an outer-group exchange epoch.
+/// The paper communicates across nodes "every h epochs"; epoch 0 counts.
+pub fn is_outer_epoch(epoch: u64, outer_freq: usize) -> bool {
+    outer_freq > 0 && epoch % outer_freq as u64 == 0
+}
+
+/// ARAR-ARAR: transport rings for both levels.
+pub struct GroupedArar {
+    ep: Endpoint,
+    inner_members: Vec<usize>,
+    outer_members: Vec<usize>,
+    is_outer: bool,
+    outer_freq: usize,
+}
+
+impl GroupedArar {
+    pub fn new(ep: Endpoint, outer_freq: usize) -> GroupedArar {
+        let topo = ep.topology().clone();
+        let rank = ep.rank;
+        GroupedArar {
+            inner_members: topo.inner_group(rank),
+            outer_members: topo.outer_group(),
+            is_outer: topo.is_outer_member(rank),
+            outer_freq,
+            ep,
+        }
+    }
+}
+
+impl Collective for GroupedArar {
+    fn epoch_reduce(&mut self, epoch: u64, grads: &mut [f32]) -> Result<CommStats> {
+        // Inner-group ring every epoch.
+        let mut stats = ring_pass(&self.ep, &self.inner_members, epoch, grads)?;
+        // Outer-group ring every h epochs, members only.
+        if self.is_outer && is_outer_epoch(epoch, self.outer_freq) {
+            let outer = ring_pass(&self.ep, &self.outer_members, epoch, grads)?;
+            stats.merge(&outer);
+        }
+        Ok(stats)
+    }
+
+    fn name(&self) -> &'static str {
+        "arar-arar"
+    }
+}
+
+/// RMA-ARAR-ARAR: RMA windows for the inner ring, transport for the outer.
+pub struct RmaGroupedArar {
+    ep: Endpoint,
+    inner: RmaRing,
+    outer_members: Vec<usize>,
+    is_outer: bool,
+    outer_freq: usize,
+}
+
+impl RmaGroupedArar {
+    pub fn new(
+        ep: Endpoint,
+        outer_freq: usize,
+        topo: &Topology,
+        region: &RmaRegion,
+        rank: usize,
+    ) -> Result<RmaGroupedArar> {
+        let inner = RmaRing::new(region, topo.inner_group(rank), rank)?;
+        Ok(RmaGroupedArar {
+            inner,
+            outer_members: topo.outer_group(),
+            is_outer: topo.is_outer_member(rank),
+            outer_freq,
+            ep,
+        })
+    }
+}
+
+impl Collective for RmaGroupedArar {
+    fn epoch_reduce(&mut self, epoch: u64, grads: &mut [f32]) -> Result<CommStats> {
+        let mut stats = self.inner.pass(epoch, grads)?;
+        if self.is_outer && is_outer_epoch(epoch, self.outer_freq) {
+            let outer = ring_pass(&self.ep, &self.outer_members, epoch, grads)?;
+            stats.merge(&outer);
+        }
+        Ok(stats)
+    }
+
+    fn name(&self) -> &'static str {
+        "rma-arar-arar"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outer_epoch_schedule_matches_table1() {
+        // h = 1000 (paper): epochs 0, 1000, 2000 communicate across nodes.
+        assert!(is_outer_epoch(0, 1000));
+        assert!(!is_outer_epoch(1, 1000));
+        assert!(!is_outer_epoch(999, 1000));
+        assert!(is_outer_epoch(1000, 1000));
+        assert!(is_outer_epoch(2000, 1000));
+        assert!(!is_outer_epoch(5, 0)); // freq 0 = never (ungrouped modes)
+    }
+
+    // Cross-thread behaviour of both grouped modes is covered by
+    // collective::tests (grouped_inner_only_averages_within_node,
+    // grouped_outer_pass_mixes_across_nodes, rma_grouped_converges...).
+}

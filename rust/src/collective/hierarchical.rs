@@ -1,0 +1,110 @@
+//! Hierarchical all-reduce baseline — Jia et al. [16], the method the
+//! paper contrasts its grouping against.
+//!
+//! Three synchronous steps per epoch:
+//!   1. intra-node reduce: every rank sends its gradients to the node
+//!      master (first rank of the node), which accumulates;
+//!   2. inter-node: masters run a ring-all-reduce among themselves;
+//!   3. intra-node broadcast: masters send the global average back to
+//!      their node's ranks.
+//!
+//! The paper's grouping differs exactly here: no step 3 (no broadcast, no
+//! master), and step 2 runs only every `h` epochs.
+
+use std::time::Instant;
+
+use super::ring::ring_pass;
+use super::{Collective, CommStats};
+use crate::comm::{Endpoint, GradMsg};
+use crate::tensor::ops;
+use crate::util::error::Result;
+
+/// The 3-step hierarchical all-reduce.
+pub struct Hierarchical {
+    ep: Endpoint,
+    node_members: Vec<usize>,
+    masters: Vec<usize>,
+    my_master: usize,
+    is_master: bool,
+}
+
+impl Hierarchical {
+    pub fn new(ep: Endpoint) -> Hierarchical {
+        let topo = ep.topology().clone();
+        let rank = ep.rank;
+        let node_members = topo.inner_group(rank);
+        let my_master = node_members[0];
+        Hierarchical {
+            masters: topo.outer_group(),
+            node_members,
+            my_master,
+            is_master: topo.is_outer_member(rank),
+            ep,
+        }
+    }
+}
+
+impl Collective for Hierarchical {
+    fn epoch_reduce(&mut self, epoch: u64, grads: &mut [f32]) -> Result<CommStats> {
+        let mut stats = CommStats {
+            contributions: 1,
+            ..Default::default()
+        };
+        let n_local = self.node_members.len();
+        if self.is_master {
+            // Step 1: accumulate the node's gradients.
+            for &r in &self.node_members {
+                if r == self.ep.rank {
+                    continue;
+                }
+                let t0 = Instant::now();
+                let msg = self.ep.recv(r)?;
+                stats.wait_s += t0.elapsed().as_secs_f64();
+                ops::add_assign(grads, &msg.data);
+                stats.contributions += 1;
+            }
+            // Average within the node before the inter-node ring so the
+            // ring averages node-means (same weighting as the paper's
+            // inner/outer scheme).
+            ops::scale(grads, 1.0 / n_local as f32);
+            // Step 2: ring among masters.
+            let ring_stats = ring_pass(&self.ep, &self.masters, epoch, grads)?;
+            stats.merge(&ring_stats);
+            // Step 3: broadcast back into the node.
+            for &r in &self.node_members {
+                if r == self.ep.rank {
+                    continue;
+                }
+                self.ep
+                    .isend(r, GradMsg::new(self.ep.rank, epoch, u32::MAX, grads.to_vec()))?;
+                stats.messages += 1;
+                stats.bytes_sent += grads.len() * 4;
+            }
+        } else {
+            // Step 1: contribute to the master.
+            self.ep.isend(
+                self.my_master,
+                GradMsg::new(self.ep.rank, epoch, 0, grads.to_vec()),
+            )?;
+            stats.messages += 1;
+            stats.bytes_sent += grads.len() * 4;
+            // Step 3: receive the global average.
+            let t0 = Instant::now();
+            let msg = self.ep.recv(self.my_master)?;
+            stats.wait_s += t0.elapsed().as_secs_f64();
+            grads.copy_from_slice(&msg.data);
+            stats.contributions = self.ep.topology().ranks;
+        }
+        Ok(stats)
+    }
+
+    fn name(&self) -> &'static str {
+        "hierarchical"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Cross-thread correctness covered by
+    // collective::tests::hierarchical_matches_full_average.
+}

@@ -1,0 +1,309 @@
+//! Gradient collectives: every row of the paper's Table II plus the
+//! baselines and future-work extensions.
+//!
+//! | Mode              | Inner group            | Outer group | Module |
+//! |-------------------|------------------------|-------------|--------|
+//! | conventional ARAR | —                      | —           | [`ring`] over all ranks |
+//! | ARAR-ARAR         | transport ring / epoch | ring every h| [`grouped`] |
+//! | RMA-ARAR-ARAR     | RMA ring / epoch       | ring every h| [`grouped`] + [`rma_ring`] |
+//! | Horovod baseline  | synchronous allreduce every epoch     | [`sync`] |
+//! | Hierarchical [16] | 3-step reduce/ring/broadcast          | [`hierarchical`] |
+//! | Double binary tree| tree reduce + broadcast (future work) | [`tree`] |
+//! | Ensemble          | no communication                      | [`NullCollective`] |
+//!
+//! Every collective implements [`Collective::epoch_reduce`]: average the
+//! rank's packed gradient buffer with its peers *in place*. The trainer
+//! packs weight-only gradients through a `FusionPlan` first (the paper
+//! excludes bias gradients from transfer).
+
+pub mod grouped;
+pub mod hierarchical;
+pub mod ring;
+pub mod rma_ring;
+pub mod sync;
+pub mod tree;
+
+use std::sync::{Arc, Barrier};
+
+use crate::comm::{Endpoint, RmaRegion, Topology};
+use crate::config::Mode;
+use crate::util::error::Result;
+
+/// Per-epoch communication statistics, aggregated by the metrics recorder.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommStats {
+    /// Messages sent by this rank this epoch.
+    pub messages: usize,
+    /// Payload bytes sent by this rank this epoch.
+    pub bytes_sent: usize,
+    /// Seconds spent blocked waiting for peers.
+    pub wait_s: f64,
+    /// RMA reads that observed overwritten (stale) windows.
+    pub stale_reads: u64,
+    /// RMA steps that timed out and proceeded without a contribution.
+    pub timeouts: u64,
+    /// Gradient contributions averaged into the buffer (incl. own).
+    pub contributions: usize,
+}
+
+impl CommStats {
+    pub fn merge(&mut self, other: &CommStats) {
+        self.messages += other.messages;
+        self.bytes_sent += other.bytes_sent;
+        self.wait_s += other.wait_s;
+        self.stale_reads += other.stale_reads;
+        self.timeouts += other.timeouts;
+        self.contributions += other.contributions;
+    }
+}
+
+/// A per-rank gradient collective.
+pub trait Collective: Send {
+    /// Average `grads` (the packed transfer buffer) with peers in place.
+    fn epoch_reduce(&mut self, epoch: u64, grads: &mut [f32]) -> Result<CommStats>;
+
+    /// Human-readable mode name.
+    fn name(&self) -> &'static str;
+}
+
+/// No-communication collective (ensemble analysis, single rank).
+pub struct NullCollective;
+
+impl Collective for NullCollective {
+    fn epoch_reduce(&mut self, _epoch: u64, _grads: &mut [f32]) -> Result<CommStats> {
+        Ok(CommStats {
+            contributions: 1,
+            ..Default::default()
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "ensemble"
+    }
+}
+
+/// Build one collective per rank for the given mode. Consumes the
+/// endpoints (each collective owns its rank's endpoint).
+pub fn build(
+    mode: Mode,
+    topo: &Topology,
+    outer_freq: usize,
+    endpoints: Vec<Endpoint>,
+    region: &RmaRegion,
+) -> Result<Vec<Box<dyn Collective>>> {
+    let n = topo.ranks;
+    let barrier = Arc::new(Barrier::new(n));
+    let mut out: Vec<Box<dyn Collective>> = Vec::with_capacity(n);
+    for ep in endpoints {
+        let rank = ep.rank;
+        let c: Box<dyn Collective> = match mode {
+            Mode::Ensemble => Box::new(NullCollective),
+            Mode::ConvArar => Box::new(ring::ConvArar::new(ep)),
+            Mode::ArarArar => Box::new(grouped::GroupedArar::new(ep, outer_freq)),
+            Mode::RmaArarArar => Box::new(grouped::RmaGroupedArar::new(
+                ep, outer_freq, topo, region, rank,
+            )?),
+            Mode::Horovod => Box::new(sync::SyncAllReduce::new(ep, barrier.clone())),
+            Mode::Hierarchical => Box::new(hierarchical::Hierarchical::new(ep)),
+            Mode::DoubleBinaryTree => Box::new(tree::TreeAllReduce::new(ep)),
+        };
+        out.push(c);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! Shared helpers for collective tests: run one collective per rank on
+    //! its own thread with known per-rank gradients and return the reduced
+    //! buffers.
+
+    use super::*;
+    use crate::comm::{LinkModel, LocalNetwork};
+
+    /// Run `epochs` reduce rounds over `n` ranks where rank r's gradient at
+    /// epoch e is `fill(r, e)`. Returns the final reduced buffer per rank
+    /// and the aggregated stats.
+    pub fn run_mode<F>(
+        mode: Mode,
+        n: usize,
+        gpus_per_node: usize,
+        outer_freq: usize,
+        len: usize,
+        epochs: u64,
+        fill: F,
+    ) -> (Vec<Vec<f32>>, Vec<CommStats>)
+    where
+        F: Fn(usize, u64) -> f32 + Send + Sync + Copy + 'static,
+    {
+        let topo = Topology::new(n, gpus_per_node);
+        let region = RmaRegion::with_capacity(n, gpus_per_node);
+        let endpoints = LocalNetwork::build(&topo, LinkModel::zero());
+        let collectives = build(mode, &topo, outer_freq, endpoints, &region).unwrap();
+        let handles: Vec<_> = collectives
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut c)| {
+                std::thread::spawn(move || {
+                    let mut grads = vec![0.0f32; len];
+                    let mut stats = CommStats::default();
+                    for e in 0..epochs {
+                        for g in grads.iter_mut() {
+                            *g = fill(rank, e);
+                        }
+                        let s = c.epoch_reduce(e, &mut grads).unwrap();
+                        stats.merge(&s);
+                    }
+                    (grads, stats)
+                })
+            })
+            .collect();
+        let mut grads = Vec::new();
+        let mut stats = Vec::new();
+        for h in handles {
+            let (g, s) = h.join().unwrap();
+            grads.push(g);
+            stats.push(s);
+        }
+        (grads, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use testutil::run_mode;
+
+    /// Expected full average when rank r contributes value r.
+    fn full_avg(n: usize) -> f32 {
+        (0..n).map(|r| r as f32).sum::<f32>() / n as f32
+    }
+
+    #[test]
+    fn null_collective_reports_self_contribution() {
+        let mut c = NullCollective;
+        let mut g = vec![1.0, 2.0];
+        let s = c.epoch_reduce(0, &mut g).unwrap();
+        assert_eq!(g, vec![1.0, 2.0]);
+        assert_eq!(s.contributions, 1);
+        assert_eq!(s.messages, 0);
+    }
+
+    #[test]
+    fn conv_arar_reduces_to_global_average() {
+        let (grads, stats) = run_mode(Mode::ConvArar, 6, 4, 1, 33, 1, |r, _| r as f32);
+        for g in &grads {
+            for v in g {
+                assert!((v - full_avg(6)).abs() < 1e-5, "got {v}");
+            }
+        }
+        // N-1 messages per rank per epoch, full tensor each (unchunked).
+        for s in &stats {
+            assert_eq!(s.messages, 5);
+            assert_eq!(s.bytes_sent, 5 * 33 * 4);
+            assert_eq!(s.contributions, 6);
+        }
+    }
+
+    #[test]
+    fn horovod_matches_conv_arar_result() {
+        let (grads, _) = run_mode(Mode::Horovod, 5, 4, 1, 8, 2, |r, _| r as f32);
+        for g in &grads {
+            for v in g {
+                assert!((v - full_avg(5)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_matches_full_average() {
+        let (grads, _) = run_mode(Mode::Hierarchical, 8, 4, 1, 16, 1, |r, _| r as f32);
+        for g in &grads {
+            for v in g {
+                assert!((v - full_avg(8)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn tree_matches_full_average() {
+        for n in [2, 3, 4, 7, 8] {
+            let (grads, _) = run_mode(Mode::DoubleBinaryTree, n, 4, 1, 8, 1, |r, _| r as f32);
+            for g in &grads {
+                for v in g {
+                    assert!((v - full_avg(n)).abs() < 1e-5, "n={n} got {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_inner_only_averages_within_node() {
+        // outer_freq larger than epochs -> no outer pass at all
+        // (epoch 0 triggers outer when epoch % freq == 0, so use fill
+        // epochs starting at 1 via epoch offset: run 1 epoch at e=0 but
+        // freq 0 is invalid; instead verify group-local averaging with
+        // freq = 7 and 1 epoch -> epoch 0 DOES do outer. So check inner
+        // semantics using 2 nodes and freq 7 with epochs run at e=1..2.)
+        let (grads, _) = run_mode(Mode::ArarArar, 8, 4, 7, 8, 3, |r, e| {
+            if e < 2 {
+                0.0
+            } else {
+                r as f32
+            }
+        });
+        // At the last epoch (e=2, not an outer epoch since 2 % 7 != 0),
+        // each rank averages only its node: node0 avg=1.5, node1 avg=5.5.
+        for r in 0..4 {
+            assert!((grads[r][0] - 1.5).abs() < 1e-4, "r{r} {}", grads[r][0]);
+        }
+        for r in 4..8 {
+            assert!((grads[r][0] - 5.5).abs() < 1e-4, "r{r} {}", grads[r][0]);
+        }
+    }
+
+    #[test]
+    fn grouped_outer_pass_mixes_across_nodes() {
+        // epoch 0 runs inner then outer (0 % freq == 0): outer members
+        // exchange their inner-averaged gradients.
+        let (grads, _) = run_mode(Mode::ArarArar, 8, 4, 1, 4, 1, |r, _| r as f32);
+        // inner: node0 -> 1.5, node1 -> 5.5; outer over {0,4}: (1.5+5.5)/2
+        assert!((grads[0][0] - 3.5).abs() < 1e-4);
+        assert!((grads[4][0] - 3.5).abs() < 1e-4);
+        // non-outer ranks keep the inner average
+        assert!((grads[1][0] - 1.5).abs() < 1e-4);
+        assert!((grads[5][0] - 5.5).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rma_grouped_converges_to_same_averages() {
+        let (grads, stats) = run_mode(Mode::RmaArarArar, 8, 4, 1, 4, 1, |r, _| r as f32);
+        assert!((grads[0][0] - 3.5).abs() < 1e-4, "{}", grads[0][0]);
+        assert!((grads[1][0] - 1.5).abs() < 1e-4, "{}", grads[1][0]);
+        assert!((grads[5][0] - 5.5).abs() < 1e-4, "{}", grads[5][0]);
+        // RMA mode should see no timeouts in a healthy run.
+        assert!(stats.iter().all(|s| s.timeouts == 0));
+    }
+
+    #[test]
+    fn single_rank_modes_are_noops() {
+        for mode in [Mode::ConvArar, Mode::ArarArar, Mode::Horovod] {
+            let (grads, _) = run_mode(mode, 1, 4, 1, 4, 2, |_, _| 2.0);
+            assert_eq!(grads[0], vec![2.0; 4]);
+        }
+    }
+
+    #[test]
+    fn grouping_reduces_messages_vs_conventional() {
+        // The core claim behind Fig 11/12: bounded rings send fewer
+        // messages per epoch than the global ring.
+        let (_, conv) = run_mode(Mode::ConvArar, 12, 4, 1000, 8, 2, |r, _| r as f32);
+        let (_, grp) = run_mode(Mode::ArarArar, 12, 4, 1000, 8, 2, |r, _| r as f32);
+        let conv_msgs: usize = conv.iter().map(|s| s.messages).sum();
+        let grp_msgs: usize = grp.iter().map(|s| s.messages).sum();
+        assert!(
+            grp_msgs < conv_msgs / 2,
+            "grouped {grp_msgs} vs conventional {conv_msgs}"
+        );
+    }
+}

@@ -1,0 +1,151 @@
+//! Asynchronous ring-all-reduce over the point-to-point transport —
+//! Algorithm 1 of the paper.
+//!
+//! Unchunked (the paper explicitly does not split gradient tensors into
+//! chunks): every ring step forwards the *full* tensor, so one epoch of a
+//! ring of size N moves (N-1) x |g| elements per rank. This is exactly why
+//! the conventional mode's time grows with N in Fig 11 and why grouping
+//! (bounding N to the node size) flattens it.
+//!
+//! Sends are non-blocking (`isend`); receives block — but because every
+//! member sends before receiving at each step, the pass cannot deadlock.
+
+use std::time::Instant;
+
+use super::{Collective, CommStats};
+use crate::comm::{Endpoint, GradMsg, Topology};
+use crate::tensor::ops;
+use crate::util::error::Result;
+
+/// One full ring-all-reduce pass over `members` (must contain the
+/// endpoint's rank). Averages in place over all members' contributions.
+pub fn ring_pass(
+    ep: &Endpoint,
+    members: &[usize],
+    epoch: u64,
+    grads: &mut [f32],
+) -> Result<CommStats> {
+    let n = members.len();
+    let mut stats = CommStats {
+        contributions: 1,
+        ..Default::default()
+    };
+    if n <= 1 {
+        return Ok(stats);
+    }
+    let (next, prev) = Topology::ring_in(members, ep.rank);
+    // The payload to forward: starts as our own gradient, then becomes
+    // whatever we received (so every rank's original gradient visits the
+    // whole ring exactly once).
+    let mut forward = grads.to_vec();
+    for step in 0..(n - 1) as u32 {
+        ep.isend(next, GradMsg::new(ep.rank, epoch, step, forward))?;
+        stats.messages += 1;
+        stats.bytes_sent += grads.len() * 4;
+        let t0 = Instant::now();
+        let msg = ep.recv(prev)?;
+        stats.wait_s += t0.elapsed().as_secs_f64();
+        debug_assert_eq!(msg.data.len(), grads.len());
+        ops::add_assign(grads, &msg.data);
+        stats.contributions += 1;
+        forward = msg.data;
+    }
+    ops::scale(grads, 1.0 / n as f32);
+    Ok(stats)
+}
+
+/// Conventional ARAR: one global ring over all ranks, every epoch (the
+/// "ARAR / no group" row of Table II).
+pub struct ConvArar {
+    ep: Endpoint,
+    members: Vec<usize>,
+}
+
+impl ConvArar {
+    pub fn new(ep: Endpoint) -> ConvArar {
+        let members = ep.topology().all_ranks();
+        ConvArar { ep, members }
+    }
+}
+
+impl Collective for ConvArar {
+    fn epoch_reduce(&mut self, epoch: u64, grads: &mut [f32]) -> Result<CommStats> {
+        ring_pass(&self.ep, &self.members, epoch, grads)
+    }
+
+    fn name(&self) -> &'static str {
+        "conv-arar"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{LinkModel, LocalNetwork};
+
+    /// Drive a ring pass over a subset of ranks on threads.
+    fn run_ring(n: usize, members: Vec<usize>, values: Vec<f32>) -> Vec<Vec<f32>> {
+        let topo = Topology::new(n, 4);
+        let endpoints = LocalNetwork::build(&topo, LinkModel::zero());
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .map(|ep| {
+                let members = members.clone();
+                let v = values[ep.rank];
+                std::thread::spawn(move || {
+                    let mut grads = vec![v; 5];
+                    if members.contains(&ep.rank) {
+                        ring_pass(&ep, &members, 0, &mut grads).unwrap();
+                    }
+                    grads
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn subset_ring_only_averages_members() {
+        let grads = run_ring(4, vec![0, 2], vec![1.0, 10.0, 3.0, 20.0]);
+        assert_eq!(grads[0], vec![2.0; 5]);
+        assert_eq!(grads[2], vec![2.0; 5]);
+        // Non-members untouched.
+        assert_eq!(grads[1], vec![10.0; 5]);
+        assert_eq!(grads[3], vec![20.0; 5]);
+    }
+
+    #[test]
+    fn ring_of_three_sums_all_originals() {
+        let grads = run_ring(3, vec![0, 1, 2], vec![3.0, 6.0, 9.0]);
+        for g in grads {
+            assert_eq!(g, vec![6.0; 5]);
+        }
+    }
+
+    #[test]
+    fn singleton_ring_is_identity() {
+        let grads = run_ring(2, vec![0], vec![4.0, 5.0]);
+        assert_eq!(grads[0], vec![4.0; 5]);
+    }
+
+    #[test]
+    fn stats_count_unchunked_traffic() {
+        let topo = Topology::new(3, 4);
+        let eps = LocalNetwork::build(&topo, LinkModel::zero());
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                std::thread::spawn(move || {
+                    let mut grads = vec![1.0f32; 100];
+                    ring_pass(&ep, &[0, 1, 2], 0, &mut grads).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let s = h.join().unwrap();
+            assert_eq!(s.messages, 2); // N-1
+            assert_eq!(s.bytes_sent, 2 * 100 * 4); // full tensor each step
+            assert_eq!(s.contributions, 3);
+        }
+    }
+}

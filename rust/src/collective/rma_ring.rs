@@ -1,0 +1,175 @@
+//! RMA-based asynchronous ring-all-reduce (the "RMA-ARAR" inner-group
+//! communication of Table II, Sec. IV-B3).
+//!
+//! Same ring schedule as [`super::ring`], but gradients travel through
+//! remote-memory windows instead of send/recv rendezvous: each step *puts*
+//! the forwarding buffer into the successor's window and *gets* whatever
+//! the predecessor has deposited. A slow neighbour never blocks the writer
+//! (puts overwrite), and a reader that outruns its neighbour waits with a
+//! deadline and then simply proceeds with the contributions it has — the
+//! bounded-staleness behaviour that motivated RMA in the paper (pipeline
+//! stalls of up to ~1 min/epoch between ranks).
+
+use std::time::{Duration, Instant};
+
+use super::CommStats;
+use crate::comm::{GradMsg, RmaRegion, RmaWindow, Topology};
+use crate::tensor::ops;
+use crate::util::error::Result;
+
+/// Default deadline a reader waits for a neighbour's deposit before
+/// proceeding without it. Generous compared to an epoch, tiny compared to
+/// a run.
+pub const DEFAULT_GET_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// The pair of windows a rank uses on a fixed ring.
+pub struct RmaRing {
+    pub rank: usize,
+    members: Vec<usize>,
+    /// Window we write (owned by successor).
+    to_next: RmaWindow,
+    /// Window we read (written by predecessor).
+    from_prev: RmaWindow,
+    pub get_timeout: Duration,
+}
+
+impl RmaRing {
+    /// Wire the windows for `rank` on the ring formed by `members`.
+    pub fn new(region: &RmaRegion, members: Vec<usize>, rank: usize) -> Result<RmaRing> {
+        let (next, prev) = Topology::ring_in(&members, rank);
+        Ok(RmaRing {
+            rank,
+            to_next: region.window(rank, next)?,
+            from_prev: region.window(prev, rank)?,
+            members,
+            get_timeout: DEFAULT_GET_TIMEOUT,
+        })
+    }
+
+    /// One full RMA ring pass; averages over the contributions actually
+    /// received (own + successful gets).
+    pub fn pass(&self, epoch: u64, grads: &mut [f32]) -> Result<CommStats> {
+        let n = self.members.len();
+        let mut stats = CommStats {
+            contributions: 1,
+            ..Default::default()
+        };
+        if n <= 1 {
+            return Ok(stats);
+        }
+        let mut forward = grads.to_vec();
+        for step in 0..(n - 1) as u32 {
+            self.to_next
+                .put(GradMsg::new(self.rank, epoch, step, forward));
+            stats.messages += 1;
+            stats.bytes_sent += grads.len() * 4;
+            let t0 = Instant::now();
+            match self.from_prev.get_wait(self.get_timeout) {
+                Some((msg, skipped)) => {
+                    stats.wait_s += t0.elapsed().as_secs_f64();
+                    stats.stale_reads += skipped;
+                    debug_assert_eq!(msg.data.len(), grads.len());
+                    ops::add_assign(grads, &msg.data);
+                    stats.contributions += 1;
+                    forward = msg.data;
+                }
+                None => {
+                    // Neighbour never deposited within the deadline:
+                    // proceed with what we have (no rendezvous, by design).
+                    stats.wait_s += t0.elapsed().as_secs_f64();
+                    stats.timeouts += 1;
+                    break;
+                }
+            }
+        }
+        ops::scale(grads, 1.0 / stats.contributions as f32);
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_rma_ring(members: Vec<usize>, values: Vec<f32>) -> Vec<(Vec<f32>, CommStats)> {
+        let n = values.len();
+        // One slot per ring step so same-epoch deposits are never
+        // superseded even when ranks run at different speeds.
+        let region = RmaRegion::with_capacity(n, members.len());
+        let rings: Vec<_> = members
+            .iter()
+            .map(|&r| RmaRing::new(&region, members.clone(), r).unwrap())
+            .collect();
+        let handles: Vec<_> = rings
+            .into_iter()
+            .map(|ring| {
+                let v = values[ring.rank];
+                std::thread::spawn(move || {
+                    let mut grads = vec![v; 7];
+                    let stats = ring.pass(0, &mut grads).unwrap();
+                    (grads, stats)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn full_ring_matches_transport_average() {
+        let out = run_rma_ring(vec![0, 1, 2, 3], vec![0.0, 1.0, 2.0, 3.0]);
+        for (g, s) in &out {
+            for v in g {
+                assert!((v - 1.5).abs() < 1e-5, "got {v}");
+            }
+            assert_eq!(s.contributions, 4);
+            assert_eq!(s.timeouts, 0);
+        }
+    }
+
+    #[test]
+    fn timeout_proceeds_with_partial_average() {
+        // Rank 1 never participates: rank 0's get times out and it averages
+        // only its own gradient.
+        let region = RmaRegion::new(2);
+        let ring = RmaRing {
+            get_timeout: Duration::from_millis(30),
+            ..RmaRing::new(&region, vec![0, 1], 0).unwrap()
+        };
+        let mut grads = vec![8.0f32; 3];
+        let s = ring.pass(0, &mut grads).unwrap();
+        assert_eq!(s.timeouts, 1);
+        assert_eq!(s.contributions, 1);
+        assert_eq!(grads, vec![8.0; 3]); // own / 1
+    }
+
+    #[test]
+    fn writer_never_blocks_on_dead_reader() {
+        let region = RmaRegion::new(2);
+        let ring = RmaRing {
+            get_timeout: Duration::from_millis(10),
+            ..RmaRing::new(&region, vec![0, 1], 0).unwrap()
+        };
+        // Many epochs with no reader on rank 1: put() must never block.
+        for e in 0..50 {
+            let mut grads = vec![1.0f32; 4];
+            let s = ring.pass(e, &mut grads).unwrap();
+            assert_eq!(s.timeouts, 1);
+        }
+    }
+
+    #[test]
+    fn stale_reads_detected_when_reader_lags() {
+        // Writer deposits 3 epochs before the reader fetches once.
+        let region = RmaRegion::new(2);
+        let w = region.window(0, 1).unwrap();
+        for e in 0..3 {
+            w.put(GradMsg::new(0, e, 0, vec![e as f32]));
+        }
+        let ring = RmaRing::new(&region, vec![0, 1], 1).unwrap();
+        let mut grads = vec![10.0f32];
+        let s = ring.pass(7, &mut grads).unwrap();
+        assert_eq!(s.stale_reads, 2); // two deposits were overwritten
+        // got latest (2.0): average of own 10 and 2 = 6
+        assert_eq!(grads, vec![6.0]);
+    }
+}

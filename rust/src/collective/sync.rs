@@ -1,0 +1,62 @@
+//! Synchronous all-reduce — the Horovod baseline of the paper's
+//! convergence study (Fig 13, Table IV).
+//!
+//! Horovod performs a blocking, globally synchronous all-reduce every
+//! training step: all ranks enter a barrier, exchange gradients, and no
+//! rank proceeds until the collective completes. We reproduce that with a
+//! `std::sync::Barrier` on both sides of a global ring pass — the barrier
+//! is what distinguishes this from [`super::ring::ConvArar`], whose sends
+//! are asynchronous and whose ranks drift apart freely.
+
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use super::ring::ring_pass;
+use super::{Collective, CommStats};
+use crate::comm::Endpoint;
+use crate::util::error::Result;
+
+/// Barrier + global ring, every epoch.
+pub struct SyncAllReduce {
+    ep: Endpoint,
+    members: Vec<usize>,
+    barrier: Arc<Barrier>,
+}
+
+impl SyncAllReduce {
+    pub fn new(ep: Endpoint, barrier: Arc<Barrier>) -> SyncAllReduce {
+        let members = ep.topology().all_ranks();
+        SyncAllReduce {
+            ep,
+            members,
+            barrier,
+        }
+    }
+}
+
+impl Collective for SyncAllReduce {
+    fn epoch_reduce(&mut self, epoch: u64, grads: &mut [f32]) -> Result<CommStats> {
+        // Entry barrier: the slowest rank gates everyone (the synchronous
+        // cost the asynchronous modes avoid).
+        let t0 = Instant::now();
+        self.barrier.wait();
+        let mut stats = ring_pass(&self.ep, &self.members, epoch, grads)?;
+        // Exit barrier: no rank starts the next step until the
+        // collective is globally complete.
+        self.barrier.wait();
+        stats.wait_s += t0.elapsed().as_secs_f64() - stats.wait_s;
+        Ok(stats)
+    }
+
+    fn name(&self) -> &'static str {
+        "horovod"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Correctness across threads is covered by
+    // collective::tests::horovod_matches_conv_arar_result; the barrier
+    // semantics (no rank exits before all enter) is what Barrier provides
+    // by contract.
+}

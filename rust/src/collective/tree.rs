@@ -1,0 +1,116 @@
+//! Tree all-reduce — the paper's named future-work direction (double
+//! binary trees, NCCL 2.4 [18]).
+//!
+//! Reduce-then-broadcast along a binary tree laid out heap-style over the
+//! rank ids: leaves send up, inner nodes accumulate their subtree and
+//! forward, the root averages and broadcasts the result back down. Depth
+//! is O(log N) versus the ring's O(N) steps — the property [18] exploits;
+//! a full "double" tree additionally splits the payload across two
+//! complementary trees to use both link directions, which for the unchunked
+//! tensors of this paper reduces to the same per-rank traffic, so we
+//! implement the single tree and account it as such in the simulator.
+
+use std::time::Instant;
+
+use super::{Collective, CommStats};
+use crate::comm::{Endpoint, GradMsg};
+use crate::tensor::ops;
+use crate::util::error::Result;
+
+/// Heap-layout binary tree over all ranks.
+pub struct TreeAllReduce {
+    ep: Endpoint,
+    n: usize,
+}
+
+impl TreeAllReduce {
+    pub fn new(ep: Endpoint) -> TreeAllReduce {
+        let n = ep.topology().ranks;
+        TreeAllReduce { ep, n }
+    }
+
+    fn parent(rank: usize) -> Option<usize> {
+        if rank == 0 {
+            None
+        } else {
+            Some((rank - 1) / 2)
+        }
+    }
+
+    fn children(&self, rank: usize) -> Vec<usize> {
+        [2 * rank + 1, 2 * rank + 2]
+            .into_iter()
+            .filter(|&c| c < self.n)
+            .collect()
+    }
+}
+
+impl Collective for TreeAllReduce {
+    fn epoch_reduce(&mut self, epoch: u64, grads: &mut [f32]) -> Result<CommStats> {
+        let mut stats = CommStats {
+            contributions: 1,
+            ..Default::default()
+        };
+        if self.n <= 1 {
+            return Ok(stats);
+        }
+        let rank = self.ep.rank;
+        // Up-sweep: accumulate children's subtree sums.
+        for c in self.children(rank) {
+            let t0 = Instant::now();
+            let msg = self.ep.recv(c)?;
+            stats.wait_s += t0.elapsed().as_secs_f64();
+            ops::add_assign(grads, &msg.data);
+            stats.contributions += 1;
+        }
+        if let Some(p) = Self::parent(rank) {
+            self.ep
+                .isend(p, GradMsg::new(rank, epoch, 0, grads.to_vec()))?;
+            stats.messages += 1;
+            stats.bytes_sent += grads.len() * 4;
+            // Down-sweep: receive the global average from the parent.
+            let t0 = Instant::now();
+            let msg = self.ep.recv(p)?;
+            stats.wait_s += t0.elapsed().as_secs_f64();
+            grads.copy_from_slice(&msg.data);
+            stats.contributions = self.n;
+        } else {
+            // Root: average and start the broadcast.
+            ops::scale(grads, 1.0 / self.n as f32);
+            stats.contributions = self.n;
+        }
+        for c in self.children(rank) {
+            self.ep
+                .isend(c, GradMsg::new(rank, epoch, 1, grads.to_vec()))?;
+            stats.messages += 1;
+            stats.bytes_sent += grads.len() * 4;
+        }
+        Ok(stats)
+    }
+
+    fn name(&self) -> &'static str {
+        "dbtree"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{LinkModel, LocalNetwork, Topology};
+
+    #[test]
+    fn tree_structure_is_heap() {
+        let topo = Topology::new(7, 4);
+        let eps = LocalNetwork::build(&topo, LinkModel::zero());
+        let t = TreeAllReduce::new(eps.into_iter().next().unwrap());
+        assert_eq!(TreeAllReduce::parent(0), None);
+        assert_eq!(TreeAllReduce::parent(1), Some(0));
+        assert_eq!(TreeAllReduce::parent(6), Some(2));
+        assert_eq!(t.children(0), vec![1, 2]);
+        assert_eq!(t.children(2), vec![5, 6]);
+        assert_eq!(t.children(3), Vec::<usize>::new());
+    }
+
+    // Full-average correctness across odd/even rank counts is covered by
+    // collective::tests::tree_matches_full_average.
+}

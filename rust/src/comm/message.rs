@@ -1,0 +1,78 @@
+//! Gradient messages moved between ranks.
+
+use std::time::Instant;
+
+/// A gradient transfer: the packed (fusion-planned) gradient buffer plus
+/// the metadata needed for staleness accounting and delivery modelling.
+#[derive(Clone, Debug)]
+pub struct GradMsg {
+    /// Sender rank.
+    pub from: usize,
+    /// Training epoch the gradients belong to.
+    pub epoch: u64,
+    /// Ring step within the epoch (disambiguates the N-1 messages of one
+    /// ring pass).
+    pub step: u32,
+    /// Earliest wall-clock instant the receiver may observe the message
+    /// (link-model latency injection; `None` = immediate).
+    pub deliver_at: Option<Instant>,
+    /// Packed gradient payload.
+    pub data: Vec<f32>,
+}
+
+impl GradMsg {
+    pub fn new(from: usize, epoch: u64, step: u32, data: Vec<f32>) -> GradMsg {
+        GradMsg {
+            from,
+            epoch,
+            step,
+            deliver_at: None,
+            data,
+        }
+    }
+
+    /// Payload size in bytes (f32).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Block the calling thread until the delivery instant has passed
+    /// (receiver-side latency realization).
+    pub fn wait_delivery(&self) {
+        if let Some(at) = self.deliver_at {
+            let now = Instant::now();
+            if at > now {
+                std::thread::sleep(at - now);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn bytes_counts_payload() {
+        let m = GradMsg::new(0, 1, 2, vec![0.0; 10]);
+        assert_eq!(m.bytes(), 40);
+        assert_eq!(m.from, 0);
+        assert_eq!(m.epoch, 1);
+        assert_eq!(m.step, 2);
+    }
+
+    #[test]
+    fn wait_delivery_blocks_until_instant() {
+        let mut m = GradMsg::new(0, 0, 0, vec![]);
+        m.deliver_at = Some(Instant::now() + Duration::from_millis(10));
+        let t0 = Instant::now();
+        m.wait_delivery();
+        assert!(t0.elapsed() >= Duration::from_millis(9));
+        // No deliver_at: returns immediately.
+        let m2 = GradMsg::new(0, 0, 0, vec![]);
+        let t1 = Instant::now();
+        m2.wait_delivery();
+        assert!(t1.elapsed() < Duration::from_millis(5));
+    }
+}

@@ -1,0 +1,28 @@
+//! The communication substrate: simulated MPI ranks.
+//!
+//! The paper drives gradient exchange through mpi4py (non-blocking
+//! point-to-point isend/irecv, plus RMA windows). Here each rank is an
+//! in-process thread and this module reproduces those primitives with the
+//! same observable semantics:
+//!
+//! * [`transport`] — addressed point-to-point links: non-blocking `isend`,
+//!   blocking `recv`, polling `try_recv` (mpi4py's isend/recv pair).
+//! * [`rma`] — remote-memory-access mailboxes: `put` overwrites the target
+//!   window without any rendezvous, `get` fetches the latest value if one
+//!   is present (MPI_Put/MPI_Get on a window, Fig 5 of the paper).
+//! * [`link_model`] — an α-β cost model that can inject per-message
+//!   latency so single-host runs exhibit network-like timing.
+//! * [`topology`] — ring neighbourhoods and the inner/outer grouping of
+//!   Sec. IV-B4.
+
+pub mod link_model;
+pub mod message;
+pub mod rma;
+pub mod topology;
+pub mod transport;
+
+pub use link_model::LinkModel;
+pub use message::GradMsg;
+pub use rma::{RmaRegion, RmaWindow};
+pub use topology::Topology;
+pub use transport::{Endpoint, LocalNetwork};

@@ -1,0 +1,298 @@
+//! Remote Memory Access (RMA) mailboxes.
+//!
+//! Sec. IV-B3 / Fig 5 of the paper: instead of send/recv rendezvous, a rank
+//! *puts* its gradients into a window in the neighbour's memory and the
+//! neighbour *gets* them whenever it is ready — so neither side ever waits
+//! for the other to finish its (possibly slow, pipeline-stalled) epoch.
+//!
+//! A window holds `capacity` deposit slots, mirroring a real MPI window
+//! sized for one epoch's worth of ring steps (each ring step writes to its
+//! own offset within the window). Semantics:
+//!
+//! * `put` never blocks. If all slots are occupied the *oldest* deposit is
+//!   superseded — the staleness the paper accepts by design: a reader that
+//!   lags more than a full window behind simply misses those gradients.
+//! * `get` fetches deposits in FIFO order if any are present; `get_wait`
+//!   spins with a deadline so a reader never deadlocks on a dead/slow
+//!   neighbour.
+//! * Dropped (superseded) deposits are counted and reported on the next
+//!   `get` so the trainer can account staleness (`CommStats::stale_reads`).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::message::GradMsg;
+use crate::util::error::{Error, Result};
+
+/// Single-writer single-reader deposit window.
+struct Slot {
+    queue: VecDeque<GradMsg>,
+    capacity: usize,
+    /// Deposits superseded before being read, since the last get.
+    dropped: u64,
+    /// Monotone count of puts (diagnostics).
+    puts: u64,
+}
+
+/// Shared window handle. Writer calls [`RmaWindow::put`], reader calls
+/// [`RmaWindow::get`] / [`RmaWindow::get_wait`].
+#[derive(Clone)]
+pub struct RmaWindow {
+    inner: Arc<(Mutex<Slot>, Condvar)>,
+}
+
+impl Default for RmaWindow {
+    fn default() -> Self {
+        Self::new(1)
+    }
+}
+
+impl RmaWindow {
+    /// Window with `capacity` deposit slots (>= 1). Capacity 1 gives pure
+    /// MPI_Put overwrite semantics; a ring uses one slot per ring step.
+    pub fn new(capacity: usize) -> RmaWindow {
+        assert!(capacity >= 1);
+        RmaWindow {
+            inner: Arc::new((
+                Mutex::new(Slot {
+                    queue: VecDeque::with_capacity(capacity),
+                    capacity,
+                    dropped: 0,
+                    puts: 0,
+                }),
+                Condvar::new(),
+            )),
+        }
+    }
+
+    /// Deposit gradients; supersedes the oldest unread deposit when the
+    /// window is full. Never blocks.
+    pub fn put(&self, msg: GradMsg) {
+        let (lock, cv) = &*self.inner;
+        let mut slot = lock.lock().expect("rma window poisoned");
+        if slot.queue.len() == slot.capacity {
+            slot.queue.pop_front();
+            slot.dropped += 1;
+        }
+        slot.queue.push_back(msg);
+        slot.puts += 1;
+        cv.notify_all();
+    }
+
+    /// Fetch the oldest unread deposit if present. Never blocks. Returns
+    /// `(msg, dropped)` where `dropped` counts deposits superseded unseen
+    /// since the previous get.
+    pub fn get(&self) -> Option<(GradMsg, u64)> {
+        let (lock, _) = &*self.inner;
+        let mut slot = lock.lock().expect("rma window poisoned");
+        slot.queue.pop_front().map(|m| {
+            let d = slot.dropped;
+            slot.dropped = 0;
+            (m, d)
+        })
+    }
+
+    /// Fetch, waiting up to `timeout` for a deposit to appear.
+    pub fn get_wait(&self, timeout: Duration) -> Option<(GradMsg, u64)> {
+        let deadline = Instant::now() + timeout;
+        let (lock, cv) = &*self.inner;
+        let mut slot = lock.lock().expect("rma window poisoned");
+        loop {
+            if let Some(m) = slot.queue.pop_front() {
+                let d = slot.dropped;
+                slot.dropped = 0;
+                return Some((m, d));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (s, _timed_out) = cv
+                .wait_timeout(slot, deadline - now)
+                .expect("rma window poisoned");
+            slot = s;
+        }
+    }
+
+    /// Number of puts that have occurred (diagnostics).
+    pub fn put_count(&self) -> u64 {
+        self.inner.0.lock().expect("rma window poisoned").puts
+    }
+
+    /// Deposits currently waiting to be read.
+    pub fn pending(&self) -> usize {
+        self.inner.0.lock().expect("rma window poisoned").queue.len()
+    }
+}
+
+/// The region: one window per directed (writer -> reader) neighbour pair.
+/// Built once by the launcher; ranks clone their handles.
+pub struct RmaRegion {
+    ranks: usize,
+    capacity: usize,
+    /// windows[writer][reader]
+    windows: Vec<Vec<RmaWindow>>,
+}
+
+impl RmaRegion {
+    /// Windows with capacity 1 (pure overwrite semantics).
+    pub fn new(ranks: usize) -> RmaRegion {
+        Self::with_capacity(ranks, 1)
+    }
+
+    /// Windows sized for `capacity` outstanding deposits — a ring of size
+    /// g wants capacity g-1 (one deposit per ring step of an epoch) so
+    /// same-epoch deposits are never superseded.
+    pub fn with_capacity(ranks: usize, capacity: usize) -> RmaRegion {
+        RmaRegion {
+            ranks,
+            capacity: capacity.max(1),
+            windows: (0..ranks)
+                .map(|_| (0..ranks).map(|_| RmaWindow::new(capacity.max(1))).collect())
+                .collect(),
+        }
+    }
+
+    /// Window written by `writer`, read by `reader`.
+    pub fn window(&self, writer: usize, reader: usize) -> Result<RmaWindow> {
+        if writer >= self.ranks || reader >= self.ranks {
+            return Err(Error::comm(format!(
+                "window ({writer}, {reader}) out of range for {} ranks",
+                self.ranks
+            )));
+        }
+        Ok(self.windows[writer][reader].clone())
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let w = RmaWindow::new(1);
+        w.put(GradMsg::new(0, 3, 0, vec![1.0]));
+        let (m, dropped) = w.get().unwrap();
+        assert_eq!(m.epoch, 3);
+        assert_eq!(dropped, 0);
+        assert!(w.get().is_none());
+    }
+
+    #[test]
+    fn capacity1_put_overwrites_latest_wins() {
+        let w = RmaWindow::new(1);
+        for e in 0..100 {
+            w.put(GradMsg::new(0, e, 0, vec![e as f32]));
+        }
+        let (m, dropped) = w.get().unwrap();
+        assert_eq!(m.epoch, 99); // latest wins
+        assert_eq!(dropped, 99);
+        assert_eq!(w.put_count(), 100);
+    }
+
+    #[test]
+    fn capacity_n_preserves_fifo_within_window() {
+        let w = RmaWindow::new(3);
+        for e in 0..3 {
+            w.put(GradMsg::new(0, e, e as u32, vec![]));
+        }
+        for e in 0..3 {
+            let (m, dropped) = w.get().unwrap();
+            assert_eq!(m.epoch, e);
+            assert_eq!(dropped, 0);
+        }
+    }
+
+    #[test]
+    fn overflow_supersedes_oldest() {
+        let w = RmaWindow::new(2);
+        for e in 0..4 {
+            w.put(GradMsg::new(0, e, 0, vec![]));
+        }
+        let (m, dropped) = w.get().unwrap();
+        assert_eq!(m.epoch, 2); // 0 and 1 superseded
+        assert_eq!(dropped, 2);
+        let (m, dropped) = w.get().unwrap();
+        assert_eq!(m.epoch, 3);
+        assert_eq!(dropped, 0);
+    }
+
+    #[test]
+    fn get_wait_times_out() {
+        let w = RmaWindow::new(1);
+        let t0 = Instant::now();
+        assert!(w.get_wait(Duration::from_millis(20)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(18));
+    }
+
+    #[test]
+    fn get_wait_wakes_on_put() {
+        let w = RmaWindow::new(1);
+        let w2 = w.clone();
+        let h = std::thread::spawn(move || w2.get_wait(Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(10));
+        w.put(GradMsg::new(1, 9, 0, vec![2.5]));
+        let (m, _) = h.join().unwrap().unwrap();
+        assert_eq!(m.epoch, 9);
+        assert_eq!(m.data, vec![2.5]);
+    }
+
+    #[test]
+    fn region_windows_are_directed() {
+        let r = RmaRegion::new(3);
+        let w01 = r.window(0, 1).unwrap();
+        let w10 = r.window(1, 0).unwrap();
+        w01.put(GradMsg::new(0, 1, 0, vec![]));
+        assert!(w10.get().is_none());
+        assert!(w01.get().is_some());
+        assert!(r.window(0, 3).is_err());
+    }
+
+    #[test]
+    fn pending_tracks_queue_depth() {
+        let w = RmaWindow::new(4);
+        assert_eq!(w.pending(), 0);
+        w.put(GradMsg::new(0, 0, 0, vec![]));
+        w.put(GradMsg::new(0, 1, 0, vec![]));
+        assert_eq!(w.pending(), 2);
+        w.get();
+        assert_eq!(w.pending(), 1);
+    }
+
+    #[test]
+    fn concurrent_writer_reader_no_deadlock() {
+        let w = RmaWindow::new(2);
+        let writer = {
+            let w = w.clone();
+            std::thread::spawn(move || {
+                for e in 0..1000u64 {
+                    w.put(GradMsg::new(0, e, 0, vec![e as f32; 8]));
+                }
+            })
+        };
+        let reader = {
+            let w = w.clone();
+            std::thread::spawn(move || {
+                let mut last = -1i64;
+                let mut reads = 0;
+                while reads < 50 {
+                    if let Some((m, _)) = w.get_wait(Duration::from_millis(100)) {
+                        assert!(m.epoch as i64 > last, "epochs must move forward");
+                        last = m.epoch as i64;
+                        reads += 1;
+                    } else {
+                        break; // writer finished
+                    }
+                }
+            })
+        };
+        writer.join().unwrap();
+        reader.join().unwrap();
+    }
+}

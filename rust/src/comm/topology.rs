@@ -1,0 +1,141 @@
+//! Rank topology: ring neighbourhoods and the inner/outer grouping.
+//!
+//! Sec. IV-B4 of the paper: ranks are divided into *inner groups* — one per
+//! physical node, sized by the GPUs on that node (4 on Polaris) — which run
+//! a ring-all-reduce every epoch, and one *outer group* holding rank 0 of
+//! every inner group, which runs a ring-all-reduce every `h` epochs so
+//! gradients also flow across nodes (Fig 6, Table I).
+
+/// Immutable description of the rank layout.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub ranks: usize,
+    pub gpus_per_node: usize,
+}
+
+impl Topology {
+    pub fn new(ranks: usize, gpus_per_node: usize) -> Topology {
+        assert!(ranks > 0 && gpus_per_node > 0);
+        Topology {
+            ranks,
+            gpus_per_node,
+        }
+    }
+
+    /// Number of nodes (== number of inner groups), last one possibly
+    /// partial.
+    pub fn nodes(&self) -> usize {
+        self.ranks.div_ceil(self.gpus_per_node)
+    }
+
+    /// Node (inner group) index of a rank.
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.gpus_per_node
+    }
+
+    /// Global ring successor (Fig 4).
+    pub fn ring_next(&self, rank: usize) -> usize {
+        (rank + 1) % self.ranks
+    }
+
+    /// Global ring predecessor.
+    pub fn ring_prev(&self, rank: usize) -> usize {
+        (rank + self.ranks - 1) % self.ranks
+    }
+
+    /// Members of the inner group containing `rank`, in ring order.
+    pub fn inner_group(&self, rank: usize) -> Vec<usize> {
+        let node = self.node_of(rank);
+        let start = node * self.gpus_per_node;
+        let end = ((node + 1) * self.gpus_per_node).min(self.ranks);
+        (start..end).collect()
+    }
+
+    /// Members of the outer group: the paper fixes these to the first rank
+    /// of each inner group ("the rank chosen from each inner group ... is
+    /// fixed to be rank 0").
+    pub fn outer_group(&self) -> Vec<usize> {
+        (0..self.nodes()).map(|n| n * self.gpus_per_node).collect()
+    }
+
+    /// Whether `rank` participates in the outer-group ring.
+    pub fn is_outer_member(&self, rank: usize) -> bool {
+        rank % self.gpus_per_node == 0
+    }
+
+    /// All ranks in global ring order.
+    pub fn all_ranks(&self) -> Vec<usize> {
+        (0..self.ranks).collect()
+    }
+
+    /// Ring successor/predecessor *within* an ordered member list.
+    /// Panics if `rank` is not a member.
+    pub fn ring_in(members: &[usize], rank: usize) -> (usize, usize) {
+        let idx = members
+            .iter()
+            .position(|&r| r == rank)
+            .expect("rank not in ring");
+        let n = members.len();
+        (members[(idx + 1) % n], members[(idx + n - 1) % n])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_12_ranks_3_nodes() {
+        // Fig 6: 12 ranks, 4 GPUs/node -> 3 inner groups + outer {0,4,8}.
+        let t = Topology::new(12, 4);
+        assert_eq!(t.nodes(), 3);
+        assert_eq!(t.inner_group(0), vec![0, 1, 2, 3]);
+        assert_eq!(t.inner_group(6), vec![4, 5, 6, 7]);
+        assert_eq!(t.inner_group(11), vec![8, 9, 10, 11]);
+        assert_eq!(t.outer_group(), vec![0, 4, 8]);
+        assert!(t.is_outer_member(4));
+        assert!(!t.is_outer_member(5));
+    }
+
+    #[test]
+    fn global_ring_wraps() {
+        let t = Topology::new(5, 4);
+        assert_eq!(t.ring_next(4), 0);
+        assert_eq!(t.ring_prev(0), 4);
+        assert_eq!(t.ring_next(2), 3);
+    }
+
+    #[test]
+    fn partial_last_node() {
+        let t = Topology::new(6, 4);
+        assert_eq!(t.nodes(), 2);
+        assert_eq!(t.inner_group(5), vec![4, 5]);
+        assert_eq!(t.outer_group(), vec![0, 4]);
+    }
+
+    #[test]
+    fn ring_in_members() {
+        let members = vec![0, 4, 8];
+        assert_eq!(Topology::ring_in(&members, 4), (8, 0));
+        assert_eq!(Topology::ring_in(&members, 8), (0, 4));
+    }
+
+    #[test]
+    fn single_rank_ring_is_self() {
+        let t = Topology::new(1, 4);
+        assert_eq!(t.ring_next(0), 0);
+        assert_eq!(t.inner_group(0), vec![0]);
+    }
+
+    #[test]
+    fn every_rank_in_exactly_one_inner_group() {
+        let t = Topology::new(13, 4);
+        let mut seen = vec![0u32; 13];
+        for node in 0..t.nodes() {
+            for r in t.inner_group(node * 4) {
+                seen[r] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+}

@@ -1,0 +1,252 @@
+//! Addressed point-to-point transport between in-process ranks.
+//!
+//! Reproduces the mpi4py primitives the paper uses: `isend` never blocks
+//! (unbounded buffered links, like MPI eager sends of the ~200 KB gradient
+//! messages), `recv(from)` blocks until a message from that specific
+//! sender arrives, `try_recv(from)` polls. Every ordered rank pair gets a
+//! dedicated FIFO link, so per-sender ordering matches MPI's non-overtaking
+//! guarantee.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+
+use super::link_model::LinkModel;
+use super::message::GradMsg;
+use super::topology::Topology;
+use crate::util::error::{Error, Result};
+
+/// One rank's view of the network.
+pub struct Endpoint {
+    pub rank: usize,
+    topo: Topology,
+    link_model: LinkModel,
+    /// Senders to every peer: `tx[to]` is the link (self -> to).
+    tx: HashMap<usize, Sender<GradMsg>>,
+    /// Receivers from every peer: `rx[from]` is the link (from -> self).
+    rx: HashMap<usize, Receiver<GradMsg>>,
+}
+
+impl Endpoint {
+    /// Non-blocking send (MPI isend). Applies the link model's injected
+    /// delay as a delivery timestamp realized on the receiver side.
+    pub fn isend(&self, to: usize, mut msg: GradMsg) -> Result<()> {
+        msg.from = self.rank;
+        let same_node = self.topo.node_of(self.rank) == self.topo.node_of(to);
+        if let Some(delay) = self.link_model.delay_for(same_node, msg.bytes()) {
+            msg.deliver_at = Some(std::time::Instant::now() + delay);
+        }
+        self.tx
+            .get(&to)
+            .ok_or_else(|| Error::comm(format!("rank {} has no link to {}", self.rank, to)))?
+            .send(msg)
+            .map_err(|_| Error::comm(format!("link {} -> {} disconnected", self.rank, to)))
+    }
+
+    /// Blocking receive from a specific sender (MPI recv with source).
+    pub fn recv(&self, from: usize) -> Result<GradMsg> {
+        let msg = self
+            .rx
+            .get(&from)
+            .ok_or_else(|| Error::comm(format!("rank {} has no link from {}", self.rank, from)))?
+            .recv()
+            .map_err(|_| Error::comm(format!("link {} -> {} disconnected", from, self.rank)))?;
+        msg.wait_delivery();
+        Ok(msg)
+    }
+
+    /// Non-blocking receive (MPI iprobe + recv). Returns `Ok(None)` when
+    /// no message is waiting. An undelivered (still "in flight" per the
+    /// link model) message is *not* returned early.
+    pub fn try_recv(&self, from: usize) -> Result<Option<GradMsg>> {
+        let rx = self
+            .rx
+            .get(&from)
+            .ok_or_else(|| Error::comm(format!("rank {} has no link from {}", self.rank, from)))?;
+        match rx.try_recv() {
+            Ok(msg) => {
+                msg.wait_delivery();
+                Ok(Some(msg))
+            }
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(Error::comm(format!(
+                "link {} -> {} disconnected",
+                from, self.rank
+            ))),
+        }
+    }
+
+    /// Drain everything currently queued from `from`, returning the last
+    /// (most recent) message — used by staleness-tolerant readers.
+    pub fn recv_latest(&self, from: usize) -> Result<Option<GradMsg>> {
+        let mut latest = None;
+        while let Some(m) = self.try_recv(from)? {
+            latest = Some(m);
+        }
+        Ok(latest)
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+}
+
+/// Builder for the full in-process network: one [`Endpoint`] per rank with
+/// dedicated links between every ordered pair.
+pub struct LocalNetwork;
+
+impl LocalNetwork {
+    /// Create endpoints for `topo.ranks` ranks.
+    pub fn build(topo: &Topology, link_model: LinkModel) -> Vec<Endpoint> {
+        let n = topo.ranks;
+        // channels[from][to]
+        let mut senders: Vec<HashMap<usize, Sender<GradMsg>>> =
+            (0..n).map(|_| HashMap::new()).collect();
+        let mut receivers: Vec<HashMap<usize, Receiver<GradMsg>>> =
+            (0..n).map(|_| HashMap::new()).collect();
+        for from in 0..n {
+            for to in 0..n {
+                if from == to {
+                    continue;
+                }
+                let (tx, rx) = channel();
+                senders[from].insert(to, tx);
+                receivers[to].insert(from, rx);
+            }
+        }
+        senders
+            .into_iter()
+            .zip(receivers)
+            .enumerate()
+            .map(|(rank, (tx, rx))| Endpoint {
+                rank,
+                topo: topo.clone(),
+                link_model,
+                tx,
+                rx,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(n: usize) -> Vec<Endpoint> {
+        LocalNetwork::build(&Topology::new(n, 4), LinkModel::zero())
+    }
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let eps = net(2);
+        eps[0]
+            .isend(1, GradMsg::new(0, 7, 0, vec![1.0, 2.0]))
+            .unwrap();
+        let m = eps[1].recv(0).unwrap();
+        assert_eq!(m.from, 0);
+        assert_eq!(m.epoch, 7);
+        assert_eq!(m.data, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn per_sender_fifo_ordering() {
+        let eps = net(2);
+        for i in 0..10 {
+            eps[0]
+                .isend(1, GradMsg::new(0, i, 0, vec![i as f32]))
+                .unwrap();
+        }
+        for i in 0..10 {
+            assert_eq!(eps[1].recv(0).unwrap().epoch, i);
+        }
+    }
+
+    #[test]
+    fn try_recv_polls() {
+        let eps = net(2);
+        assert!(eps[1].try_recv(0).unwrap().is_none());
+        eps[0].isend(1, GradMsg::new(0, 0, 0, vec![])).unwrap();
+        assert!(eps[1].try_recv(0).unwrap().is_some());
+        assert!(eps[1].try_recv(0).unwrap().is_none());
+    }
+
+    #[test]
+    fn recv_latest_drains() {
+        let eps = net(2);
+        for i in 0..5 {
+            eps[0].isend(1, GradMsg::new(0, i, 0, vec![])).unwrap();
+        }
+        let m = eps[1].recv_latest(0).unwrap().unwrap();
+        assert_eq!(m.epoch, 4);
+        assert!(eps[1].recv_latest(0).unwrap().is_none());
+    }
+
+    #[test]
+    fn isend_never_blocks() {
+        // Thousands of queued messages with no receiver progress.
+        let eps = net(2);
+        for i in 0..5_000 {
+            eps[0]
+                .isend(1, GradMsg::new(0, i, 0, vec![0.0; 16]))
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn addressed_links_are_isolated() {
+        let eps = net(3);
+        eps[0].isend(2, GradMsg::new(0, 1, 0, vec![])).unwrap();
+        eps[1].isend(2, GradMsg::new(1, 2, 0, vec![])).unwrap();
+        // Receiving from 1 does not consume 0's message.
+        assert_eq!(eps[2].recv(1).unwrap().epoch, 2);
+        assert_eq!(eps[2].recv(0).unwrap().epoch, 1);
+    }
+
+    #[test]
+    fn missing_link_is_error() {
+        let eps = net(2);
+        assert!(eps[0].isend(0, GradMsg::new(0, 0, 0, vec![])).is_err());
+        assert!(eps[0].recv(5).is_err());
+    }
+
+    #[test]
+    fn threaded_ring_pass() {
+        // 4 ranks forward a token around the ring concurrently.
+        let eps = net(4);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                std::thread::spawn(move || {
+                    let n = 4;
+                    let next = (ep.rank + 1) % n;
+                    let prev = (ep.rank + n - 1) % n;
+                    ep.isend(next, GradMsg::new(ep.rank, 0, 0, vec![ep.rank as f32]))
+                        .unwrap();
+                    let got = ep.recv(prev).unwrap();
+                    assert_eq!(got.from, prev);
+                    got.data[0]
+                })
+            })
+            .collect();
+        let sum: f32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(sum, 0.0 + 1.0 + 2.0 + 3.0);
+    }
+
+    #[test]
+    fn injected_latency_delays_delivery() {
+        let topo = Topology::new(2, 1); // 2 nodes -> inter-node link
+        let lm = LinkModel {
+            inter_node: super::super::link_model::LinkCost {
+                alpha_s: 0.02,
+                beta_s_per_byte: 0.0,
+            },
+            ..LinkModel::zero()
+        }
+        .with_injection(1.0);
+        let eps = LocalNetwork::build(&topo, lm);
+        eps[0].isend(1, GradMsg::new(0, 0, 0, vec![])).unwrap();
+        let t0 = std::time::Instant::now();
+        eps[1].recv(0).unwrap();
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(15));
+    }
+}

@@ -1,0 +1,333 @@
+//! Run configuration: typed schema, JSON loading, paper presets,
+//! validation.
+//!
+//! Every entry point (CLI subcommands, examples, benches) builds a
+//! [`RunConfig`] — either from a preset (Table III defaults, scaled-down CI
+//! defaults) or from a JSON config file — and validates it before launching.
+
+pub mod presets;
+
+use std::path::Path;
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Value;
+
+/// Gradient-exchange mode (paper Table II, plus the baselines/extensions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// No communication: independent GANs (Sec. IV-A ensemble analysis).
+    Ensemble,
+    /// Conventional asynchronous ring-all-reduce over all ranks (no
+    /// grouping) — "ARAR" row of Table II.
+    ConvArar,
+    /// Grouped: inner-group ARAR every epoch + outer-group ARAR every `h`
+    /// epochs — "ARAR-ARAR" row.
+    ArarArar,
+    /// Grouped with RMA-based inner rings — "RMA-ARAR-ARAR" row.
+    RmaArarArar,
+    /// Synchronous allreduce every epoch (the paper's Horovod baseline).
+    Horovod,
+    /// Hierarchical three-step allreduce (Jia et al. [16] baseline).
+    Hierarchical,
+    /// Double binary tree (paper future work, NCCL-2.4 style).
+    DoubleBinaryTree,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Result<Mode> {
+        match s.to_ascii_lowercase().as_str() {
+            "ensemble" | "none" => Ok(Mode::Ensemble),
+            "conv-arar" | "conv_arar" | "convarar" => Ok(Mode::ConvArar),
+            "arar" | "arar-arar" | "arar_arar" => Ok(Mode::ArarArar),
+            "rma" | "rma-arar" | "rma-arar-arar" => Ok(Mode::RmaArarArar),
+            "horovod" | "hvd" | "sync" => Ok(Mode::Horovod),
+            "hierarchical" => Ok(Mode::Hierarchical),
+            "dbtree" | "double-binary-tree" => Ok(Mode::DoubleBinaryTree),
+            other => Err(Error::config(format!("unknown mode '{other}'"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Ensemble => "ensemble",
+            Mode::ConvArar => "conv-arar",
+            Mode::ArarArar => "arar-arar",
+            Mode::RmaArarArar => "rma-arar-arar",
+            Mode::Horovod => "horovod",
+            Mode::Hierarchical => "hierarchical",
+            Mode::DoubleBinaryTree => "dbtree",
+        }
+    }
+
+    /// Whether the mode uses the inner/outer grouping of Sec. IV-B4.
+    pub fn uses_grouping(&self) -> bool {
+        matches!(self, Mode::ArarArar | Mode::RmaArarArar)
+    }
+}
+
+/// Full run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Number of simulated ranks (GPUs). Paper: 4..400 on Polaris.
+    pub ranks: usize,
+    /// Ranks per node — the inner-group size (paper: 4, the A100s/node).
+    pub gpus_per_node: usize,
+    /// Gradient-exchange mode.
+    pub mode: Mode,
+    /// Outer-group update frequency `h` (paper: 1000).
+    pub outer_freq: usize,
+    /// Training epochs (paper: 100k; CI presets use far fewer).
+    pub epochs: usize,
+    /// Model size variant ("small" | "medium" | "paper").
+    pub model: String,
+    /// Parameter samples per epoch (Table III: 1024).
+    pub batch: usize,
+    /// Events per parameter sample (Table III: 100).
+    pub events: usize,
+    /// Generator learning rate (paper: 1e-5).
+    pub gen_lr: f32,
+    /// Discriminator learning rate (paper: 1e-4).
+    pub disc_lr: f32,
+    /// Fraction of the shard each rank bootstraps per epoch (paper: 0.5).
+    pub subsample_fraction: f64,
+    /// Transfer bias gradients too (paper: false).
+    pub include_bias: bool,
+    /// Tensor-fusion bucket size in elements (0 = single fused buffer).
+    pub fusion_bucket: usize,
+    /// Checkpoint cadence in epochs (paper: every 5k, 21 checkpoints).
+    pub checkpoint_every: usize,
+    /// Base RNG seed.
+    pub seed: u64,
+    /// Reference data pool size (events).
+    pub data_pool: usize,
+    /// Runtime pool worker threads (PJRT clients).
+    pub runtime_workers: usize,
+    /// Artifacts directory.
+    pub artifacts_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        presets::ci_default()
+    }
+}
+
+impl RunConfig {
+    /// Load from a JSON file; unknown keys are rejected to catch typos.
+    pub fn from_file(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&text)
+    }
+
+    /// Parse from JSON text, starting from the CI preset for defaults.
+    pub fn from_json(text: &str) -> Result<RunConfig> {
+        let v = Value::parse(text)?;
+        let obj = v
+            .as_object()
+            .ok_or_else(|| Error::config("config root must be an object"))?;
+        let mut cfg = presets::ci_default();
+        for (k, val) in obj {
+            match k.as_str() {
+                "ranks" => cfg.ranks = as_usize(val, k)?,
+                "gpus_per_node" => cfg.gpus_per_node = as_usize(val, k)?,
+                "mode" => {
+                    cfg.mode = Mode::parse(
+                        val.as_str()
+                            .ok_or_else(|| Error::config("mode must be a string"))?,
+                    )?
+                }
+                "outer_freq" => cfg.outer_freq = as_usize(val, k)?,
+                "epochs" => cfg.epochs = as_usize(val, k)?,
+                "model" => cfg.model = req_str(val, k)?,
+                "batch" => cfg.batch = as_usize(val, k)?,
+                "events" => cfg.events = as_usize(val, k)?,
+                "gen_lr" => cfg.gen_lr = as_f64(val, k)? as f32,
+                "disc_lr" => cfg.disc_lr = as_f64(val, k)? as f32,
+                "subsample_fraction" => cfg.subsample_fraction = as_f64(val, k)?,
+                "include_bias" => {
+                    cfg.include_bias = val
+                        .as_bool()
+                        .ok_or_else(|| Error::config("include_bias must be a bool"))?
+                }
+                "fusion_bucket" => cfg.fusion_bucket = as_usize(val, k)?,
+                "checkpoint_every" => cfg.checkpoint_every = as_usize(val, k)?,
+                "seed" => {
+                    cfg.seed = val
+                        .as_f64()
+                        .ok_or_else(|| Error::config("seed must be a number"))?
+                        as u64
+                }
+                "data_pool" => cfg.data_pool = as_usize(val, k)?,
+                "runtime_workers" => cfg.runtime_workers = as_usize(val, k)?,
+                "artifacts_dir" => cfg.artifacts_dir = req_str(val, k)?,
+                other => return Err(Error::config(format!("unknown config key '{other}'"))),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Validate cross-field invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.ranks == 0 {
+            return Err(Error::config("ranks must be >= 1"));
+        }
+        if self.gpus_per_node == 0 {
+            return Err(Error::config("gpus_per_node must be >= 1"));
+        }
+        if self.mode.uses_grouping() && self.outer_freq == 0 {
+            return Err(Error::config("outer_freq must be >= 1 for grouped modes"));
+        }
+        if self.epochs == 0 {
+            return Err(Error::config("epochs must be >= 1"));
+        }
+        if self.batch == 0 || self.events == 0 {
+            return Err(Error::config("batch and events must be >= 1"));
+        }
+        if !(0.0..=1.0).contains(&self.subsample_fraction) || self.subsample_fraction == 0.0 {
+            return Err(Error::config("subsample_fraction must be in (0, 1]"));
+        }
+        if self.gen_lr <= 0.0 || self.disc_lr <= 0.0 {
+            return Err(Error::config("learning rates must be positive"));
+        }
+        if self.data_pool < self.batch * self.events {
+            return Err(Error::config(format!(
+                "data_pool ({}) must cover one discriminator batch ({})",
+                self.data_pool,
+                self.batch * self.events
+            )));
+        }
+        if self.runtime_workers == 0 {
+            return Err(Error::config("runtime_workers must be >= 1"));
+        }
+        if !matches!(self.model.as_str(), "small" | "medium" | "paper") {
+            return Err(Error::config(format!(
+                "model must be small|medium|paper, got '{}'",
+                self.model
+            )));
+        }
+        Ok(())
+    }
+
+    /// Discriminator batch size (Table III: batch * events).
+    pub fn disc_batch(&self) -> usize {
+        self.batch * self.events
+    }
+
+    /// Number of nodes implied by ranks / gpus_per_node (ceil).
+    pub fn nodes(&self) -> usize {
+        self.ranks.div_ceil(self.gpus_per_node)
+    }
+
+    /// Artifact name of the gan_step variant this config needs.
+    pub fn gan_step_artifact(&self) -> String {
+        format!(
+            "gan_step_{}_b{}_e{}",
+            self.model, self.batch, self.events
+        )
+    }
+
+    /// Artifact name of the gen_predict variant.
+    pub fn gen_predict_artifact(&self) -> String {
+        format!("gen_predict_{}_k256", self.model)
+    }
+}
+
+fn as_usize(v: &Value, key: &str) -> Result<usize> {
+    v.as_usize()
+        .ok_or_else(|| Error::config(format!("'{key}' must be a number")))
+}
+
+fn as_f64(v: &Value, key: &str) -> Result<f64> {
+    v.as_f64()
+        .ok_or_else(|| Error::config(format!("'{key}' must be a number")))
+}
+
+fn req_str(v: &Value, key: &str) -> Result<String> {
+    v.as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| Error::config(format!("'{key}' must be a string")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parsing_all_rows_of_table2() {
+        assert_eq!(Mode::parse("conv-arar").unwrap(), Mode::ConvArar);
+        assert_eq!(Mode::parse("arar").unwrap(), Mode::ArarArar);
+        assert_eq!(Mode::parse("rma").unwrap(), Mode::RmaArarArar);
+        assert_eq!(Mode::parse("hvd").unwrap(), Mode::Horovod);
+        assert_eq!(Mode::parse("ensemble").unwrap(), Mode::Ensemble);
+        assert!(Mode::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn grouping_flag_matches_table2() {
+        assert!(!Mode::ConvArar.uses_grouping());
+        assert!(Mode::ArarArar.uses_grouping());
+        assert!(Mode::RmaArarArar.uses_grouping());
+    }
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn paper_preset_matches_table3() {
+        let c = presets::paper_table3();
+        assert_eq!(c.epochs, 100_000);
+        assert_eq!(c.batch, 1024);
+        assert_eq!(c.events, 100);
+        assert_eq!(c.disc_batch(), 102_400);
+        assert_eq!(c.outer_freq, 1000);
+        assert_eq!(c.gpus_per_node, 4);
+        assert!((c.gen_lr - 1e-5).abs() < 1e-12);
+        assert!((c.disc_lr - 1e-4).abs() < 1e-12);
+        assert_eq!(c.subsample_fraction, 0.5);
+        assert!(!c.include_bias);
+    }
+
+    #[test]
+    fn from_json_overrides_and_rejects_unknown() {
+        let c = RunConfig::from_json(r#"{"ranks": 12, "mode": "rma"}"#).unwrap();
+        assert_eq!(c.ranks, 12);
+        assert_eq!(c.mode, Mode::RmaArarArar);
+        assert!(RunConfig::from_json(r#"{"rankz": 12}"#).is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut c = RunConfig::default();
+        c.ranks = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.subsample_fraction = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.data_pool = 1;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.model = "huge".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn nodes_rounds_up() {
+        let mut c = RunConfig::default();
+        c.ranks = 10;
+        c.gpus_per_node = 4;
+        assert_eq!(c.nodes(), 3);
+    }
+
+    #[test]
+    fn artifact_names() {
+        let c = RunConfig::default();
+        assert_eq!(
+            c.gan_step_artifact(),
+            format!("gan_step_{}_b{}_e{}", c.model, c.batch, c.events)
+        );
+    }
+}

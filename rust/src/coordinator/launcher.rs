@@ -1,0 +1,171 @@
+//! The launcher: wires the whole distributed run and joins it.
+//!
+//! Responsibilities (what `mpiexec` + rank 0 do in the paper's setup):
+//! build the topology, the transport network, the RMA region and the
+//! per-rank collectives; generate the reference data (rank 0 loads and
+//! distributes the data in the paper — here the pool is generated once and
+//! sharded); spawn one thread per rank; join; then run the post-training
+//! analysis: evaluate the normalized residuals over rank 0's timestamped
+//! generator checkpoints (Sec. VI-C2).
+
+use crate::collective;
+use crate::comm::{LinkModel, LocalNetwork, RmaRegion, Topology};
+use crate::config::{Mode, RunConfig};
+use crate::data::{Bootstrap, ToyDataset};
+use crate::metrics::MergedMetrics;
+use crate::model::checkpoint::CheckpointSeries;
+use crate::model::gan::GanState;
+use crate::model::residuals::{self, Residuals};
+use crate::runtime::RuntimeHandle;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+use super::rank::{run_rank, RankOutcome};
+
+/// One residual sample of the post-training analysis.
+#[derive(Clone, Copy, Debug)]
+pub struct ResidualPoint {
+    pub epoch: u64,
+    pub elapsed_s: f64,
+    pub residuals: [f64; 6],
+}
+
+/// Everything a training run produces.
+pub struct RunResult {
+    pub wall_s: f64,
+    pub metrics: MergedMetrics,
+    pub checkpoints: Vec<CheckpointSeries>,
+    pub states: Vec<GanState>,
+    /// Residuals over rank 0's checkpoints (time-resolved convergence).
+    pub residual_curve: Vec<ResidualPoint>,
+    /// Final residuals (last checkpoint).
+    pub final_residuals: Option<[f64; 6]>,
+    /// Aggregate communication stats per rank.
+    pub comm: Vec<collective::CommStats>,
+}
+
+impl RunResult {
+    /// Mean |r̂| at the end of training (summary scalar).
+    pub fn final_mean_abs_residual(&self) -> Option<f64> {
+        self.final_residuals.as_ref().map(residuals::mean_abs)
+    }
+
+    /// Total events analyzed across ranks (numerator of eq (9)).
+    pub fn total_events(&self) -> f64 {
+        self.metrics.total("events")
+    }
+
+    /// Analysis rate, eq (9): events analyzed per second of wall time.
+    pub fn analysis_rate(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.total_events() / self.wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run a full distributed training per `cfg` using an existing runtime
+/// handle. Optionally inject link-model latency (used by timing studies).
+pub fn run_training_with_links(
+    cfg: &RunConfig,
+    handle: &RuntimeHandle,
+    link_model: LinkModel,
+) -> Result<RunResult> {
+    cfg.validate()?;
+    let manifest = handle.manifest();
+    // Fail fast if the artifact grid is missing this configuration.
+    manifest.artifact(&cfg.gan_step_artifact())?;
+    manifest.artifact(&cfg.gen_predict_artifact())?;
+
+    let topo = Topology::new(cfg.ranks, cfg.gpus_per_node);
+    // RMA windows sized for one epoch of ring steps per Sec. IV-B3.
+    let region = RmaRegion::with_capacity(cfg.ranks, cfg.gpus_per_node.max(2));
+    let endpoints = LocalNetwork::build(&topo, link_model);
+    let collectives = collective::build(cfg.mode, &topo, cfg.outer_freq, endpoints, &region)?;
+
+    // Reference data pool (the paper: rank 0 loads + distributes; each
+    // rank then trains on a random sub-fraction).
+    let pipeline_artifact = pick_pipeline_artifact(handle)?;
+    let pool = ToyDataset::generate(handle, &pipeline_artifact, cfg.data_pool, cfg.seed)?;
+
+    let mut root_rng = Rng::new(cfg.seed);
+    let timer = crate::metrics::Timer::start();
+    let mut handles = Vec::with_capacity(cfg.ranks);
+    for (rank, coll) in collectives.into_iter().enumerate() {
+        let cfg = cfg.clone();
+        let handle = handle.clone();
+        let mut rng = root_rng.split(rank as u64);
+        // Horovod baseline: every rank sees the full data (Sec. VI-C2);
+        // (RMA-)ARAR ranks train on a random sub-fraction.
+        let shard = if cfg.mode == Mode::Horovod {
+            pool.clone()
+        } else {
+            pool.shard(cfg.subsample_fraction, &mut rng)
+        };
+        let boot = Bootstrap::new(shard);
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("rank-{rank}"))
+                .spawn(move || run_rank(rank, &cfg, handle, coll, boot, rng, rank == 0))
+                .map_err(Error::Io)?,
+        );
+    }
+
+    let mut outcomes: Vec<RankOutcome> = Vec::with_capacity(cfg.ranks);
+    for h in handles {
+        outcomes.push(h.join().map_err(|_| {
+            Error::Runtime("rank thread panicked — see stderr for the rank log".into())
+        })??);
+    }
+    let wall_s = timer.elapsed_s();
+    outcomes.sort_by_key(|o| o.rank);
+
+    // Post-training residual analysis over rank 0's checkpoints.
+    let evaluator = Residuals::new(handle.clone(), &cfg.gen_predict_artifact(), cfg.seed)?;
+    let mut residual_curve = Vec::new();
+    for ck in &outcomes[0].checkpoints.checkpoints {
+        residual_curve.push(ResidualPoint {
+            epoch: ck.epoch,
+            elapsed_s: ck.elapsed_s,
+            residuals: evaluator.residuals(&ck.gen_params)?,
+        });
+    }
+    let final_residuals = match residual_curve.last() {
+        Some(p) => Some(p.residuals),
+        None => Some(evaluator.residuals(&outcomes[0].state.gen)?),
+    };
+
+    Ok(RunResult {
+        wall_s,
+        metrics: MergedMetrics::new(outcomes.iter().map(|o| o.recorder.clone()).collect()),
+        checkpoints: outcomes.iter().map(|o| o.checkpoints.clone()).collect(),
+        comm: outcomes.iter().map(|o| o.comm_totals).collect(),
+        states: outcomes.into_iter().map(|o| o.state).collect(),
+        residual_curve,
+        final_residuals,
+    })
+}
+
+/// Run with the default (no latency injection) link model.
+pub fn run_training(cfg: &RunConfig, handle: &RuntimeHandle) -> Result<RunResult> {
+    run_training_with_links(cfg, handle, LinkModel::zero())
+}
+
+/// Choose a pipeline artifact for data generation: prefer the big batch.
+fn pick_pipeline_artifact(handle: &RuntimeHandle) -> Result<String> {
+    for cand in ["pipeline_b256_e25", "pipeline_b1024_e100", "pipeline_b64_e25"] {
+        if handle.manifest().artifact(cand).is_ok() {
+            return Ok(cand.to_string());
+        }
+    }
+    Err(Error::Manifest(
+        "no pipeline artifact in manifest (need pipeline_b256_e25 or similar)".into(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    // End-to-end launcher runs live in rust/tests/end2end.rs (they need
+    // the artifact set and real multi-threaded training).
+}

@@ -1,0 +1,19 @@
+//! The SAGIPS coordinator: the paper's distributed-training contribution.
+//!
+//! * [`offload`] — gradient off-/on-loading around the collective
+//!   (Sec. IV-B6), fused through the weight-only `FusionPlan`.
+//! * [`rank`] — the per-rank training loop: bootstrap draw -> `gan_step`
+//!   artifact -> local discriminator update -> gradient off-load ->
+//!   collective exchange -> on-load -> generator update -> checkpoints.
+//! * [`launcher`] — builds the topology/transports/windows, spawns one
+//!   thread per rank, joins them, and runs the post-training residual
+//!   analysis over the recorded checkpoints (the paper's Sec. VI-C2
+//!   methodology).
+
+pub mod launcher;
+pub mod offload;
+pub mod rank;
+
+pub use launcher::{run_training, RunResult};
+pub use offload::GradOffloader;
+pub use rank::RankOutcome;

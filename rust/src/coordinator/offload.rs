@@ -1,0 +1,116 @@
+//! Gradient off-loading (Sec. IV-B6).
+//!
+//! The paper stages generator gradients out of GPU memory into host memory
+//! before communicating, and registers them back afterwards — both to free
+//! GPU memory and because mpi4py moves host buffers. Here the "device"
+//! side is the PJRT output buffer and the "host" side is the packed
+//! transfer buffer; the staging copy goes through the weight-only
+//! [`FusionPlan`] (bias gradients are excluded from transfer, Sec. V-C).
+//!
+//! The staging buffer is allocated once and reused — the per-epoch hot
+//! path performs no allocation.
+
+use crate::tensor::fusion::FusionPlan;
+use crate::util::error::Result;
+
+/// Reusable off-/on-load stager for one rank's generator gradients.
+pub struct GradOffloader {
+    plan: FusionPlan,
+    staging: Vec<f32>,
+    /// Total bytes staged (both directions), for the §Perf accounting.
+    pub bytes_staged: u64,
+}
+
+impl GradOffloader {
+    pub fn new(plan: FusionPlan) -> GradOffloader {
+        let cap = plan.transfer_elems();
+        GradOffloader {
+            plan,
+            staging: Vec::with_capacity(cap),
+            bytes_staged: 0,
+        }
+    }
+
+    /// Off-load: pack the transferable slices of `grads` into the staging
+    /// buffer and return it for the collective to reduce in place.
+    pub fn offload(&mut self, grads: &[f32]) -> Result<&mut [f32]> {
+        // Split borrows: temporarily move staging out to satisfy the
+        // borrow checker without copying twice.
+        let mut staging = std::mem::take(&mut self.staging);
+        self.plan.pack(grads, &mut staging)?;
+        self.staging = staging;
+        self.bytes_staged += (self.staging.len() * 4) as u64;
+        Ok(&mut self.staging)
+    }
+
+    /// On-load: scatter the reduced staging buffer back into `grads`.
+    /// Slices outside the plan (biases) keep their local values.
+    pub fn onload(&mut self, grads: &mut [f32]) -> Result<()> {
+        self.plan.unpack(&self.staging, grads)?;
+        self.bytes_staged += (self.staging.len() * 4) as u64;
+        Ok(())
+    }
+
+    /// Elements that travel per epoch.
+    pub fn transfer_elems(&self) -> usize {
+        self.plan.transfer_elems()
+    }
+
+    pub fn plan(&self) -> &FusionPlan {
+        &self.plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::fusion::{segments_from_layout, FusionPlan};
+
+    fn plan_weights_only() -> FusionPlan {
+        // layers: W 4 elems + b 2; W 6 + b 1
+        let segs = segments_from_layout(&[(0, 4, 4, 2), (6, 6, 12, 1)]);
+        FusionPlan::build(segs, 0, false)
+    }
+
+    #[test]
+    fn offload_excludes_biases_onload_preserves_them() {
+        let mut off = GradOffloader::new(plan_weights_only());
+        let grads: Vec<f32> = (0..13).map(|x| x as f32).collect();
+        let staged = off.offload(&grads).unwrap();
+        assert_eq!(staged.len(), 10); // 4 + 6 weights
+        // Collective halves everything.
+        for v in staged.iter_mut() {
+            *v *= 0.5;
+        }
+        let mut back = grads.clone();
+        off.onload(&mut back).unwrap();
+        // weights averaged
+        assert_eq!(back[0], 0.0);
+        assert_eq!(back[3], 1.5);
+        assert_eq!(back[6], 3.0);
+        // biases untouched (local gradients, as in the paper)
+        assert_eq!(back[4], 4.0);
+        assert_eq!(back[5], 5.0);
+        assert_eq!(back[12], 12.0);
+    }
+
+    #[test]
+    fn staging_buffer_is_reused() {
+        let mut off = GradOffloader::new(plan_weights_only());
+        let grads = vec![1.0f32; 13];
+        off.offload(&grads).unwrap();
+        let ptr1 = off.staging.as_ptr();
+        off.offload(&grads).unwrap();
+        assert_eq!(ptr1, off.staging.as_ptr());
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let mut off = GradOffloader::new(plan_weights_only());
+        let mut grads = vec![1.0f32; 13];
+        off.offload(&grads).unwrap();
+        off.onload(&mut grads).unwrap();
+        assert_eq!(off.bytes_staged, 2 * 10 * 4);
+        assert_eq!(off.transfer_elems(), 10);
+    }
+}

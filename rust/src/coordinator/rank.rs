@@ -1,0 +1,139 @@
+//! The per-rank training loop.
+//!
+//! One thread per rank (= one GPU in the paper). Each epoch:
+//!
+//! 1. bootstrap-draw a discriminator batch from the rank's data shard;
+//! 2. execute the `gan_step` artifact (generator forward -> pipeline ->
+//!    discriminator; returns both networks' gradients and losses);
+//! 3. update the *local* discriminator immediately (the paper trains one
+//!    discriminator per rank, autonomously);
+//! 4. off-load the generator's weight gradients into the packed transfer
+//!    buffer, exchange them through the rank's collective (ARAR / grouped
+//!    / RMA / horovod / none), on-load the averaged result;
+//! 5. update the generator;
+//! 6. at the checkpoint cadence, snapshot the generator with a timestamp
+//!    (the paper's post-training convergence methodology).
+
+use crate::collective::{Collective, CommStats};
+use crate::config::RunConfig;
+use crate::data::Bootstrap;
+use crate::metrics::{Recorder, Timer};
+use crate::model::checkpoint::CheckpointSeries;
+use crate::model::gan::GanState;
+use crate::model::TrainStep;
+use crate::optim::{Adam, Optimizer};
+use crate::runtime::RuntimeHandle;
+use crate::tensor::fusion::FusionPlan;
+use crate::tensor::ops;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+use super::offload::GradOffloader;
+
+/// Everything a rank thread produces.
+pub struct RankOutcome {
+    pub rank: usize,
+    pub recorder: Recorder,
+    pub checkpoints: CheckpointSeries,
+    pub state: GanState,
+    pub comm_totals: CommStats,
+}
+
+/// Run one rank's full training loop. `shard` is this rank's data
+/// sub-sample; `collective` its gradient exchanger; `rng` its private
+/// stream.
+#[allow(clippy::too_many_arguments)]
+pub fn run_rank(
+    rank: usize,
+    cfg: &RunConfig,
+    handle: RuntimeHandle,
+    mut collective: Box<dyn Collective>,
+    shard: Bootstrap,
+    mut rng: Rng,
+    take_checkpoints: bool,
+) -> Result<RankOutcome> {
+    crate::util::logging::rank_scope(rank);
+    let manifest = handle.manifest();
+    let meta = manifest.model(&cfg.model)?.clone();
+    let slope = manifest.leaky_slope;
+
+    // Model + optimizers (paper: Adam, G lr 1e-5 / D lr 1e-4).
+    let mut state = GanState::init(&meta, slope, &mut rng);
+    let mut gen_opt = Adam::new(cfg.gen_lr, state.gen.len());
+    let mut disc_opt = Adam::new(cfg.disc_lr, state.disc.len());
+
+    // Weight-only fusion plan over the generator layout (Sec. V-C).
+    let plan = FusionPlan::build(meta.gen_segments(), cfg.fusion_bucket, cfg.include_bias);
+    let mut offloader = GradOffloader::new(plan);
+
+    let mut step = TrainStep::new(handle, &cfg.gan_step_artifact())?;
+    let disc_batch = step.disc_batch();
+
+    let mut shard = shard;
+    let mut real = Vec::with_capacity(disc_batch * 2);
+    let mut recorder = Recorder::new(rank);
+    let mut checkpoints = CheckpointSeries::default();
+    let mut comm_totals = CommStats::default();
+    let timer = Timer::start();
+
+    for epoch in 0..cfg.epochs as u64 {
+        let mut lap = Timer::start();
+        // 1. bootstrap draw
+        shard.draw(disc_batch, &mut rng, &mut real);
+        let t_draw = lap.lap_s();
+
+        // 2. gan_step artifact
+        let out = step.run(&state.gen, &state.disc, &real, &mut rng)?;
+        let t_step = lap.lap_s();
+        if !ops::all_finite(&out.gen_grads) || !ops::all_finite(&out.disc_grads) {
+            return Err(Error::Runtime(format!(
+                "rank {rank}: non-finite gradients at epoch {epoch}"
+            )));
+        }
+
+        // 3. local discriminator update (per-rank discriminator).
+        disc_opt.step(&mut state.disc, &out.disc_grads);
+
+        // 4. off-load -> collective -> on-load.
+        let mut gen_grads = out.gen_grads;
+        let buf = offloader.offload(&gen_grads)?;
+        let stats = collective.epoch_reduce(epoch, buf)?;
+        offloader.onload(&mut gen_grads)?;
+        comm_totals.merge(&stats);
+        let t_comm = lap.lap_s();
+
+        // 5. generator update with the exchanged gradients.
+        gen_opt.step(&mut state.gen, &gen_grads);
+        let t_opt = lap.lap_s();
+
+        // 6. metrics + checkpoints.
+        recorder.push("gen_loss", epoch, out.gen_loss);
+        recorder.push("disc_loss", epoch, out.disc_loss);
+        recorder.push("draw_s", epoch, t_draw);
+        recorder.push("step_s", epoch, t_step);
+        recorder.push("comm_s", epoch, t_comm);
+        recorder.push("comm_wait_s", epoch, stats.wait_s);
+        recorder.push("optim_s", epoch, t_opt);
+        recorder.push("events", epoch, disc_batch as f64);
+        if take_checkpoints
+            && (epoch == 0
+                || cfg.checkpoint_every > 0 && (epoch + 1) % cfg.checkpoint_every as u64 == 0)
+        {
+            checkpoints.record(rank, epoch, timer.elapsed_s(), &state.gen);
+        }
+    }
+
+    Ok(RankOutcome {
+        rank,
+        recorder,
+        checkpoints,
+        state,
+        comm_totals,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    // run_rank requires artifacts + a full network; exercised by the
+    // launcher tests and the integration suite (rust/tests/).
+}

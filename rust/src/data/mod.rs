@@ -1,0 +1,8 @@
+//! Reference data: the loop-closure toy data set, sharding, and the
+//! per-epoch bootstrap sampling of Sec. IV-B.
+
+pub mod bootstrap;
+pub mod toy;
+
+pub use bootstrap::Bootstrap;
+pub use toy::ToyDataset;

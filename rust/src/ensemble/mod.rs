@@ -1,0 +1,9 @@
+//! Ensemble analysis (Sec. IV-A, VI-A/B): ensemble response, uncertainty,
+//! and the resampling studies of Figs 9/10.
+
+pub mod analysis;
+pub mod response;
+pub mod sampling;
+
+pub use analysis::EnsembleResult;
+pub use response::{ensemble_response, EnsembleResponse};

@@ -1,0 +1,135 @@
+//! The ensemble response — eqs (7) and (8) of the paper.
+//!
+//! Given M trained generators and a batch of k noise vectors:
+//!
+//!   p̂(n)  = 1/M Σ_i G_i(n)                            (7)
+//!   σ(n)  = sqrt( 1/M Σ_i [G_i(n) − p̂(n)]² )          (8)
+//!
+//! and for a batch of k noise vectors "we simply report the average of p̂
+//! and σ across the batch dimension k".
+
+use crate::model::residuals::normalized_residuals;
+
+/// Ensemble mean and spread per parameter, batch-averaged.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EnsembleResponse {
+    /// Batch-averaged ensemble mean prediction p̂ (6,).
+    pub p_hat: [f64; 6],
+    /// Batch-averaged ensemble spread σ (6,).
+    pub sigma: [f64; 6],
+    /// Ensemble size M.
+    pub m: usize,
+}
+
+impl EnsembleResponse {
+    /// Normalized residuals of the ensemble mean, eq (6).
+    pub fn residuals(&self, true_params: &[f32]) -> [f64; 6] {
+        normalized_residuals(true_params, &self.p_hat)
+    }
+
+    /// Normalized spread per parameter: σ_i / |p_i| (comparable to the
+    /// residual scale, which is what Fig 8/10's top panels show).
+    pub fn normalized_sigma(&self, true_params: &[f32]) -> [f64; 6] {
+        let mut s = [0.0f64; 6];
+        for i in 0..6 {
+            s[i] = self.sigma[i] / (true_params[i] as f64).abs();
+        }
+        s
+    }
+}
+
+/// Compute eqs (7)/(8) from per-member prediction matrices.
+///
+/// `member_preds[i]` is member i's flat (k, 6) prediction matrix over a
+/// *shared* noise batch (all members must be evaluated on the same noise,
+/// as in the paper).
+pub fn ensemble_response(member_preds: &[Vec<f32>], k: usize) -> EnsembleResponse {
+    let m = member_preds.len();
+    assert!(m >= 1, "ensemble needs at least one member");
+    for p in member_preds {
+        assert_eq!(p.len(), k * 6, "member prediction shape mismatch");
+    }
+    let mut p_hat = [0.0f64; 6];
+    let mut sigma = [0.0f64; 6];
+    // Per noise vector: mean and spread over members, then batch-average.
+    for kk in 0..k {
+        let mut mean_n = [0.0f64; 6];
+        for p in member_preds {
+            for j in 0..6 {
+                mean_n[j] += p[kk * 6 + j] as f64;
+            }
+        }
+        for j in 0..6 {
+            mean_n[j] /= m as f64;
+        }
+        let mut var_n = [0.0f64; 6];
+        for p in member_preds {
+            for j in 0..6 {
+                let d = p[kk * 6 + j] as f64 - mean_n[j];
+                var_n[j] += d * d;
+            }
+        }
+        for j in 0..6 {
+            p_hat[j] += mean_n[j];
+            sigma[j] += (var_n[j] / m as f64).sqrt();
+        }
+    }
+    for j in 0..6 {
+        p_hat[j] /= k as f64;
+        sigma[j] /= k as f64;
+    }
+    EnsembleResponse { p_hat, sigma, m }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn member(k: usize, value: f32) -> Vec<f32> {
+        vec![value; k * 6]
+    }
+
+    #[test]
+    fn single_member_has_zero_spread() {
+        let r = ensemble_response(&[member(4, 2.0)], 4);
+        assert_eq!(r.m, 1);
+        assert_eq!(r.p_hat, [2.0; 6]);
+        assert_eq!(r.sigma, [0.0; 6]);
+    }
+
+    #[test]
+    fn two_members_mean_and_sigma() {
+        let r = ensemble_response(&[member(3, 1.0), member(3, 3.0)], 3);
+        assert_eq!(r.p_hat, [2.0; 6]);
+        // population std of {1, 3} = 1
+        assert_eq!(r.sigma, [1.0; 6]);
+    }
+
+    #[test]
+    fn batch_averaging_is_uniform() {
+        // Member predictions varying across the batch: p̂ = batch mean of
+        // per-noise means.
+        let mut p = vec![0.0f32; 2 * 6];
+        p[0..6].copy_from_slice(&[1.0; 6]);
+        p[6..12].copy_from_slice(&[3.0; 6]);
+        let r = ensemble_response(&[p], 2);
+        assert_eq!(r.p_hat, [2.0; 6]);
+    }
+
+    #[test]
+    fn residuals_and_normalized_sigma() {
+        let truth = [1.0f32, 0.5, 0.3, -0.5, 1.2, 0.4];
+        let mut preds = member(1, 0.0);
+        preds.copy_from_slice(&[1.0, 0.5, 0.3, -0.5, 1.2, 0.4]);
+        let r = ensemble_response(&[preds.clone(), preds], 1);
+        let res = r.residuals(&truth);
+        assert!(res.iter().all(|x| x.abs() < 1e-6));
+        assert_eq!(r.normalized_sigma(&truth), [0.0; 6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn shape_mismatch_panics() {
+        ensemble_response(&[vec![0.0; 5]], 1);
+    }
+}

@@ -1,0 +1,161 @@
+//! Ensemble-size resampling — the Fig 9 / Fig 10 methodology.
+//!
+//! Fig 9: from a pool of 20 trained GANs, draw sub-ensembles of size
+//! M = 2..20 (300 samplings each), compute the ensemble RMSE (over the
+//! normalized residuals of the ensemble-mean prediction) versus the
+//! ensemble spread σ, and summarize each M as a 95 % confidence contour.
+//! Both quantities shrink and the cloud tightens as M grows — the paper's
+//! stability argument for ensembling.
+//!
+//! Fig 10: residual mean/σ as a function of M up to the full pool.
+
+use super::response::ensemble_response;
+use crate::tensor::stats::{self, confidence_ellipse_95};
+use crate::util::rng::Rng;
+
+/// One (RMSE, spread) sample of Fig 9.
+#[derive(Clone, Copy, Debug)]
+pub struct RmseSigmaPoint {
+    pub rmse: f64,
+    pub sigma: f64,
+}
+
+/// Summary of one ensemble size M (one contour of Fig 9).
+#[derive(Clone, Copy, Debug)]
+pub struct SizeSummary {
+    pub m: usize,
+    pub mean_rmse: f64,
+    pub mean_sigma: f64,
+    /// 95 % ellipse semi-axes over the (rmse, sigma) cloud.
+    pub semi_rmse: f64,
+    pub semi_sigma: f64,
+    pub corr: f64,
+}
+
+/// RMSE of the ensemble-mean residuals + mean normalized spread for one
+/// sub-ensemble (rows of `member_preds` indexed by `pick`).
+pub fn rmse_sigma_of(
+    member_preds: &[Vec<f32>],
+    pick: &[usize],
+    k: usize,
+    true_params: &[f32],
+) -> RmseSigmaPoint {
+    let subset: Vec<Vec<f32>> = pick.iter().map(|&i| member_preds[i].clone()).collect();
+    let resp = ensemble_response(&subset, k);
+    let res = resp.residuals(true_params);
+    let nsig = resp.normalized_sigma(true_params);
+    RmseSigmaPoint {
+        rmse: stats::rms(&res),
+        sigma: stats::mean(&nsig),
+    }
+}
+
+/// The Fig 9 study: for each M in `sizes`, draw `samplings` sub-ensembles
+/// (without replacement) and summarize the (RMSE, σ) cloud.
+pub fn rmse_sigma_study(
+    member_preds: &[Vec<f32>],
+    k: usize,
+    true_params: &[f32],
+    sizes: &[usize],
+    samplings: usize,
+    rng: &mut Rng,
+) -> Vec<SizeSummary> {
+    let pool = member_preds.len();
+    sizes
+        .iter()
+        .map(|&m| {
+            let m = m.min(pool);
+            let mut cloud = Vec::with_capacity(samplings);
+            for _ in 0..samplings {
+                let pick = rng.sample_without_replacement(pool, m);
+                let p = rmse_sigma_of(member_preds, &pick, k, true_params);
+                cloud.push((p.rmse, p.sigma));
+            }
+            let (mx, my, sx, sy, corr) = confidence_ellipse_95(&cloud);
+            SizeSummary {
+                m,
+                mean_rmse: mx,
+                mean_sigma: my,
+                semi_rmse: sx,
+                semi_sigma: sy,
+                corr,
+            }
+        })
+        .collect()
+}
+
+/// The Fig 10 study: ensemble residual mean/σ as a function of M
+/// (prefix ensembles of the pool, mirroring "expanding the ensemble").
+pub fn growth_study(
+    member_preds: &[Vec<f32>],
+    k: usize,
+    true_params: &[f32],
+    sizes: &[usize],
+) -> Vec<(usize, f64, f64)> {
+    sizes
+        .iter()
+        .filter(|&&m| m >= 1 && m <= member_preds.len())
+        .map(|&m| {
+            let resp = ensemble_response(&member_preds[..m], k);
+            let res = resp.residuals(true_params);
+            let nsig = resp.normalized_sigma(true_params);
+            (m, stats::mean(&res.map(|x| x.abs())), stats::mean(&nsig))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TRUE: [f32; 6] = [1.0, 0.5, 0.3, -0.5, 1.2, 0.4];
+
+    /// Synthetic member pool: predictions = truth + member-specific noise.
+    fn pool(members: usize, k: usize, noise: f32, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..members)
+            .map(|_| {
+                let bias: Vec<f32> = (0..6).map(|_| rng.normal_f32(0.0, noise)).collect();
+                let mut p = Vec::with_capacity(k * 6);
+                for _ in 0..k {
+                    for j in 0..6 {
+                        p.push(TRUE[j] + bias[j]);
+                    }
+                }
+                p
+            })
+            .collect()
+    }
+
+    #[test]
+    fn larger_ensembles_have_smaller_rmse_spread() {
+        // The Fig 9 trend: mean RMSE and its dispersion shrink with M.
+        let preds = pool(20, 8, 0.2, 1);
+        let mut rng = Rng::new(2);
+        let out = rmse_sigma_study(&preds, 8, &TRUE, &[2, 8, 16], 120, &mut rng);
+        assert_eq!(out.len(), 3);
+        assert!(out[2].mean_rmse < out[0].mean_rmse);
+        assert!(out[2].semi_rmse < out[0].semi_rmse);
+    }
+
+    #[test]
+    fn growth_study_monotone_trend() {
+        // Fig 10: ensemble residual drops as M grows (statistically).
+        let preds = pool(64, 4, 0.3, 3);
+        let out = growth_study(&preds, 4, &TRUE, &[1, 4, 16, 64]);
+        assert_eq!(out.len(), 4);
+        let first = out.first().unwrap().1;
+        let last = out.last().unwrap().1;
+        assert!(last < first, "expected shrink: {first} -> {last}");
+    }
+
+    #[test]
+    fn sizes_beyond_pool_are_clamped() {
+        let preds = pool(4, 2, 0.1, 4);
+        let mut rng = Rng::new(5);
+        let out = rmse_sigma_study(&preds, 2, &TRUE, &[10], 10, &mut rng);
+        assert_eq!(out[0].m, 4);
+        let g = growth_study(&preds, 2, &TRUE, &[10]);
+        assert!(g.is_empty());
+    }
+}

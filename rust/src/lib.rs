@@ -1,0 +1,40 @@
+//! # SAGIPS — Scalable Asynchronous Generative Inverse Problem Solver
+//!
+//! A full reproduction of the SAGIPS system (Lersch et al., CS.DC 2024) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's coordination contribution: the
+//!   distributed GAN training runtime. Per-rank training loops, asynchronous
+//!   ring-all-reduce gradient exchange (conventional, grouped, and
+//!   RMA-based), gradient off-loading, bootstrap data sharding, ensemble
+//!   analysis, and a calibrated discrete-event simulator for the scaling
+//!   studies.
+//! * **Layer 2** — the GAN + environment pipeline authored in JAX
+//!   (`python/compile/`), AOT-lowered to HLO text at build time.
+//! * **Layer 1** — Pallas kernels for the dense GAN layers and the
+//!   inverse-CDF event sampler (`python/compile/kernels/`).
+//!
+//! Python never runs on the request path: the [`runtime`] module loads the
+//! `artifacts/*.hlo.txt` files through the PJRT C API (`xla` crate) and the
+//! coordinator executes them from Rust.
+//!
+//! See `DESIGN.md` for the paper -> module map and `EXPERIMENTS.md` for the
+//! reproduced tables/figures.
+
+pub mod collective;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod ensemble;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide error type.
+pub use util::error::{Error, Result};

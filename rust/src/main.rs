@@ -1,0 +1,287 @@
+//! `sagips` — the SAGIPS leader CLI.
+//!
+//! Subcommands:
+//!   train                run one distributed training (mode/ranks/epochs)
+//!   ensemble             train an ensemble and report eq (7)/(8) response
+//!   simulate             scaling simulator sweep (Figs 11/12)
+//!   experiment <id>      regenerate a paper figure/table (fig8..fig16, tab4)
+//!   validate-artifacts   load + smoke-run every artifact in the manifest
+//!
+//! Run `sagips help` for options.
+
+use std::path::Path;
+
+use sagips::config::{presets, Mode, RunConfig};
+use sagips::coordinator::launcher::run_training;
+use sagips::ensemble::analysis::EnsembleResult;
+use sagips::model::residuals;
+use sagips::report::experiments::{self, Scale};
+use sagips::report::{format_table4, table4_paper_reference, Table4Row};
+use sagips::runtime::RuntimePool;
+use sagips::sim::ComputeModel;
+use sagips::util::cli::{self, Args, OptSpec};
+use sagips::util::error::{Error, Result};
+use sagips::util::logging;
+
+fn main() {
+    logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => {}
+        Err(Error::Usage(msg)) => {
+            eprintln!("usage error: {msg}\n");
+            print_help();
+            std::process::exit(2);
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "sagips — Scalable Asynchronous Generative Inverse Problem Solver\n\n\
+         subcommands:\n  \
+         train                one distributed training run\n  \
+         ensemble             ensemble of runs + eq (7)/(8) response\n  \
+         simulate             scaling sweep (DES, Figs 11/12)\n  \
+         experiment <id>      regenerate fig8..fig16 / tab4\n  \
+         validate-artifacts   smoke-run every artifact\n\n\
+         common options: --artifacts <dir> --workers <n> --seed <n>\n\
+         env: SAGIPS_LOG=debug, SAGIPS_SCALE=smoke|ci|paper"
+    );
+}
+
+fn common_specs() -> Vec<OptSpec> {
+    vec![
+        cli::opt("config", "JSON config file (CLI options override it)", None),
+        cli::opt("artifacts", "artifacts directory", Some("artifacts")),
+        cli::opt("workers", "runtime pool workers", Some("2")),
+        cli::opt("seed", "base RNG seed", Some("20240")),
+        cli::opt("ranks", "number of ranks", Some("4")),
+        cli::opt(
+            "mode",
+            "ensemble|conv-arar|arar|rma|hvd|hierarchical|dbtree",
+            Some("arar"),
+        ),
+        cli::opt("epochs", "training epochs", Some("300")),
+        cli::opt("batch", "parameter samples per epoch", Some("64")),
+        cli::opt("outer-freq", "outer-group frequency h", Some("10")),
+        cli::opt("members", "ensemble size M", Some("6")),
+        cli::opt("gpus-per-node", "inner group size", Some("4")),
+        cli::opt("step-mean", "simulator: mean epoch compute seconds", Some("0.035")),
+        cli::opt("gen-lr", "generator learning rate", None),
+        cli::opt("disc-lr", "discriminator learning rate", None),
+        cli::flag("paper-scale", "use the full Table III configuration"),
+    ]
+}
+
+fn build_cfg(a: &Args) -> Result<RunConfig> {
+    let mut cfg = if let Some(path) = a.get("config") {
+        RunConfig::from_file(Path::new(path))?
+    } else if a.flag("paper-scale") {
+        presets::paper_table3()
+    } else {
+        presets::ci_default()
+    };
+    cfg.ranks = a.usize("ranks", cfg.ranks)?;
+    cfg.mode = Mode::parse(a.get_or("mode", cfg.mode.name()))?;
+    cfg.epochs = a.usize("epochs", cfg.epochs)?;
+    cfg.batch = a.usize("batch", cfg.batch)?;
+    cfg.outer_freq = a.usize("outer-freq", cfg.outer_freq)?;
+    cfg.gpus_per_node = a.usize("gpus-per-node", cfg.gpus_per_node)?;
+    cfg.seed = a.u64("seed", cfg.seed)?;
+    cfg.gen_lr = a.f64("gen-lr", cfg.gen_lr as f64)? as f32;
+    cfg.disc_lr = a.f64("disc-lr", cfg.disc_lr as f64)? as f32;
+    cfg.artifacts_dir = a.get_or("artifacts", &cfg.artifacts_dir).to_string();
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn open_pool(a: &Args, cfg: &RunConfig) -> Result<RuntimePool> {
+    let workers = a.usize("workers", cfg.runtime_workers)?;
+    RuntimePool::from_dir(Path::new(&cfg.artifacts_dir), workers)
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let specs = common_specs();
+    let rest: Vec<String> = args[1..].to_vec();
+    let a = Args::parse(&rest, &specs)?;
+    match cmd.as_str() {
+        "train" => cmd_train(&a),
+        "ensemble" => cmd_ensemble(&a),
+        "simulate" => cmd_simulate(&a),
+        "experiment" => cmd_experiment(&a),
+        "validate-artifacts" => cmd_validate(&a),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(Error::Usage(format!("unknown subcommand '{other}'"))),
+    }
+}
+
+fn cmd_train(a: &Args) -> Result<()> {
+    let cfg = build_cfg(a)?;
+    let pool = open_pool(a, &cfg)?;
+    sagips::log_info!(
+        "training: mode={} ranks={} epochs={} batch={} (disc batch {})",
+        cfg.mode.name(),
+        cfg.ranks,
+        cfg.epochs,
+        cfg.batch,
+        cfg.disc_batch()
+    );
+    let run = run_training(&cfg, &pool.handle())?;
+    println!("wall time: {:.2}s", run.wall_s);
+    println!(
+        "analysis rate (eq 9): {:.3e} events/s over {:.3e} events",
+        run.analysis_rate(),
+        run.total_events()
+    );
+    println!(
+        "final losses: G={:.4} D={:.4}",
+        run.metrics.mean_of_last("gen_loss").unwrap_or(f64::NAN),
+        run.metrics.mean_of_last("disc_loss").unwrap_or(f64::NAN)
+    );
+    if let Some(r) = run.final_residuals {
+        println!(
+            "final residuals r̂ (eq 6): {:?}",
+            r.map(|x| (x * 1e3).round() / 1e3)
+        );
+        println!("mean |r̂|: {:.4}", residuals::mean_abs(&r));
+    }
+    println!("\nresidual curve (rank 0 checkpoints):");
+    for p in &run.residual_curve {
+        println!(
+            "  epoch {:>6}  t={:>8.2}s  mean|r̂|={:.4}",
+            p.epoch,
+            p.elapsed_s,
+            residuals::mean_abs(&p.residuals)
+        );
+    }
+    pool.shutdown();
+    Ok(())
+}
+
+fn cmd_ensemble(a: &Args) -> Result<()> {
+    let cfg = build_cfg(a)?;
+    let m = a.usize("members", 6)?;
+    let pool = open_pool(a, &cfg)?;
+    let ens = EnsembleResult::train(&cfg, m, &pool.handle())?;
+    let resp = ens.response();
+    println!(
+        "ensemble of {m} runs (mode {}, {} ranks)",
+        cfg.mode.name(),
+        cfg.ranks
+    );
+    println!("p̂   (eq 7): {:?}", resp.p_hat.map(|x| (x * 1e3).round() / 1e3));
+    println!("σ    (eq 8): {:?}", resp.sigma.map(|x| (x * 1e3).round() / 1e3));
+    println!("truth      : {:?}", ens.true_params);
+    let row = Table4Row::from_raw(cfg.mode.name(), &ens.table4_row());
+    println!("\n{}", format_table4(&[row]));
+    pool.shutdown();
+    Ok(())
+}
+
+fn cmd_simulate(a: &Args) -> Result<()> {
+    let mean = a.f64("step-mean", 0.035)?;
+    let compute = ComputeModel::with_jitter(mean, 0.15);
+    experiments::fig11(compute);
+    experiments::fig12(compute);
+    Ok(())
+}
+
+fn cmd_experiment(a: &Args) -> Result<()> {
+    let id = a
+        .positional()
+        .first()
+        .ok_or_else(|| Error::Usage("experiment needs an id (fig8..fig16, tab4)".into()))?
+        .clone();
+    let scale = Scale::from_env(Scale::ci());
+    // Simulator-only experiments need no artifacts.
+    if id == "fig11" || id == "fig12" {
+        let compute = ComputeModel::with_jitter(a.f64("step-mean", 0.035)?, 0.15);
+        if id == "fig11" {
+            experiments::fig11(compute);
+        } else {
+            experiments::fig12(compute);
+        }
+        return Ok(());
+    }
+    let cfg = build_cfg(a)?;
+    let pool = open_pool(a, &cfg)?;
+    let h = pool.handle();
+    match id.as_str() {
+        "fig8" => {
+            experiments::fig8(&h, &scale)?;
+        }
+        "fig9" => {
+            experiments::fig9(&h, &scale)?;
+        }
+        "fig10" => {
+            experiments::fig10(&h, &scale)?;
+        }
+        "fig13" | "tab4" => {
+            let rows = experiments::fig13_tab4(&h, &scale)?;
+            let mut table: Vec<Table4Row> = rows
+                .iter()
+                .map(|(mode, _, raw)| Table4Row::from_raw(mode.name(), raw))
+                .collect();
+            table.extend(table4_paper_reference());
+            println!("\n{}", format_table4(&table));
+        }
+        "fig14" => {
+            experiments::weak_scaling_curves(&h, &scale, Mode::RmaArarArar, &[1, 4])?;
+        }
+        "fig15" => {
+            experiments::weak_scaling_curves(&h, &scale, Mode::RmaArarArar, &[1, 2, 4, 8])?;
+        }
+        "fig16" => {
+            experiments::weak_scaling_curves(&h, &scale, Mode::ArarArar, &[1, 2, 4, 8])?;
+        }
+        other => {
+            return Err(Error::Usage(format!(
+                "unknown experiment '{other}' (fig8..fig16, tab4)"
+            )))
+        }
+    }
+    pool.shutdown();
+    Ok(())
+}
+
+fn cmd_validate(a: &Args) -> Result<()> {
+    let cfg = build_cfg(a)?;
+    let pool = open_pool(a, &cfg)?;
+    let h = pool.handle();
+    let names: Vec<String> = h.manifest().artifacts.keys().cloned().collect();
+    println!(
+        "validating {} artifacts from {}",
+        names.len(),
+        cfg.artifacts_dir
+    );
+    for name in names {
+        let spec = h.manifest().artifact(&name)?.clone();
+        let inputs: Vec<Vec<f32>> = spec
+            .inputs
+            .iter()
+            .map(|io| vec![0.01f32; io.elems()])
+            .collect();
+        let t0 = std::time::Instant::now();
+        let out = h.execute(&name, inputs)?;
+        println!(
+            "  {name:<32} ok ({} outputs, {:.1}ms incl. first-use compile)",
+            out.len(),
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    }
+    pool.shutdown();
+    println!("all artifacts load, compile and execute");
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! CSV emission for figure data (consumed by external plotting or diffed in
+//! EXPERIMENTS.md).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::error::Result;
+
+/// Write a CSV file: header + rows. Fields containing commas/quotes are
+/// quoted per RFC 4180.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.iter().map(|h| escape(h)).collect::<Vec<_>>().join(","))?;
+    for row in rows {
+        writeln!(
+            f,
+            "{}",
+            row.iter().map(|c| escape(c)).collect::<Vec<_>>().join(",")
+        )?;
+    }
+    Ok(())
+}
+
+/// Render a numeric table to CSV rows.
+pub fn numeric_rows(rows: &[(f64, Vec<f64>)]) -> Vec<Vec<String>> {
+    rows.iter()
+        .map(|(x, cols)| {
+            let mut r = vec![format!("{x}")];
+            r.extend(cols.iter().map(|v| format!("{v}")));
+            r
+        })
+        .collect()
+}
+
+fn escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let dir = std::env::temp_dir().join("sagips_csv_test");
+        let path = dir.join("t.csv");
+        write_csv(
+            &path,
+            &["a", "b,c"],
+            &[vec!["1".into(), "x\"y".into()], vec!["2".into(), "z".into()]],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("a,\"b,c\"\n"));
+        assert!(text.contains("1,\"x\"\"y\"\n"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn numeric_rows_format() {
+        let rows = numeric_rows(&[(1.0, vec![2.5, 3.0])]);
+        assert_eq!(rows, vec![vec!["1".to_string(), "2.5".into(), "3".into()]]);
+    }
+}

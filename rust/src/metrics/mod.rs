@@ -1,0 +1,13 @@
+//! Metrics: time-series recording, timers, CSV output.
+//!
+//! Each rank records per-epoch scalars (losses, comm time, step time); the
+//! launcher merges them and the report module turns them into the paper's
+//! figures. Recording is allocation-light: series are preallocated to the
+//! epoch count.
+
+pub mod csv;
+pub mod recorder;
+pub mod timer;
+
+pub use recorder::{MergedMetrics, Recorder};
+pub use timer::Timer;

@@ -1,0 +1,189 @@
+//! Per-rank metric recording and cross-rank merging.
+
+use std::collections::BTreeMap;
+
+use crate::tensor::stats;
+
+/// A named scalar time series (x = epoch, y = value).
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub epochs: Vec<u64>,
+    pub values: Vec<f64>,
+}
+
+impl Series {
+    pub fn push(&mut self, epoch: u64, value: f64) {
+        self.epochs.push(epoch);
+        self.values.push(value);
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.values.last().copied()
+    }
+
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.values)
+    }
+
+    /// Sum of all recorded values (e.g. total comm seconds).
+    pub fn sum(&self) -> f64 {
+        self.values.iter().sum()
+    }
+}
+
+/// Per-rank recorder. One instance per rank thread — merged at the end, so
+/// recording never takes a lock.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    pub rank: usize,
+    series: BTreeMap<String, Series>,
+}
+
+impl Recorder {
+    pub fn new(rank: usize) -> Recorder {
+        Recorder {
+            rank,
+            series: BTreeMap::new(),
+        }
+    }
+
+    /// Record `value` for `name` at `epoch`.
+    pub fn push(&mut self, name: &str, epoch: u64, value: f64) {
+        self.series
+            .entry(name.to_string())
+            .or_default()
+            .push(epoch, value);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.series.keys().map(|s| s.as_str())
+    }
+}
+
+/// All ranks' recorders, merged.
+#[derive(Clone, Debug, Default)]
+pub struct MergedMetrics {
+    pub per_rank: Vec<Recorder>,
+}
+
+impl MergedMetrics {
+    pub fn new(per_rank: Vec<Recorder>) -> MergedMetrics {
+        MergedMetrics { per_rank }
+    }
+
+    /// Mean of a series' values across ranks (per final value).
+    pub fn mean_of_last(&self, name: &str) -> Option<f64> {
+        let lasts: Vec<f64> = self
+            .per_rank
+            .iter()
+            .filter_map(|r| r.get(name).and_then(|s| s.last()))
+            .collect();
+        if lasts.is_empty() {
+            None
+        } else {
+            Some(stats::mean(&lasts))
+        }
+    }
+
+    /// Sum across ranks of the per-rank series sums (e.g. total events).
+    pub fn total(&self, name: &str) -> f64 {
+        self.per_rank
+            .iter()
+            .filter_map(|r| r.get(name))
+            .map(|s| s.sum())
+            .sum()
+    }
+
+    /// Epoch-aligned cross-rank mean series: for each recorded index i,
+    /// average value over ranks that have an i-th sample.
+    pub fn mean_series(&self, name: &str) -> Series {
+        let mut out = Series::default();
+        let max_len = self
+            .per_rank
+            .iter()
+            .filter_map(|r| r.get(name))
+            .map(|s| s.len())
+            .max()
+            .unwrap_or(0);
+        for i in 0..max_len {
+            let mut vals = Vec::new();
+            let mut epoch = 0;
+            for r in &self.per_rank {
+                if let Some(s) = r.get(name) {
+                    if i < s.len() {
+                        vals.push(s.values[i]);
+                        epoch = s.epochs[i];
+                    }
+                }
+            }
+            if !vals.is_empty() {
+                out.push(epoch, stats::mean(&vals));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_push_and_stats() {
+        let mut s = Series::default();
+        s.push(0, 1.0);
+        s.push(1, 3.0);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.last(), Some(3.0));
+        assert_eq!(s.mean(), 2.0);
+        assert_eq!(s.sum(), 4.0);
+    }
+
+    #[test]
+    fn recorder_isolated_series() {
+        let mut r = Recorder::new(0);
+        r.push("loss", 0, 0.5);
+        r.push("loss", 1, 0.4);
+        r.push("comm_s", 0, 0.01);
+        assert_eq!(r.get("loss").unwrap().len(), 2);
+        assert_eq!(r.get("comm_s").unwrap().len(), 1);
+        assert_eq!(r.names().count(), 2);
+    }
+
+    #[test]
+    fn merged_mean_of_last_and_total() {
+        let mut r0 = Recorder::new(0);
+        let mut r1 = Recorder::new(1);
+        r0.push("loss", 10, 0.2);
+        r1.push("loss", 10, 0.4);
+        r0.push("events", 0, 100.0);
+        r1.push("events", 0, 100.0);
+        let m = MergedMetrics::new(vec![r0, r1]);
+        assert!((m.mean_of_last("loss").unwrap() - 0.3).abs() < 1e-12);
+        assert_eq!(m.total("events"), 200.0);
+    }
+
+    #[test]
+    fn mean_series_handles_ragged() {
+        let mut r0 = Recorder::new(0);
+        let mut r1 = Recorder::new(1);
+        r0.push("x", 0, 1.0);
+        r0.push("x", 1, 2.0);
+        r1.push("x", 0, 3.0);
+        let m = MergedMetrics::new(vec![r0, r1]);
+        let s = m.mean_series("x");
+        assert_eq!(s.values, vec![2.0, 2.0]);
+    }
+}

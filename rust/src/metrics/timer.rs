@@ -1,0 +1,98 @@
+//! Scoped timers for the coordinator hot path.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch with lap support.
+#[derive(Clone, Debug)]
+pub struct Timer {
+    start: Instant,
+    last_lap: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        let now = Instant::now();
+        Timer {
+            start: now,
+            last_lap: now,
+        }
+    }
+
+    /// Seconds since construction.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Seconds since the previous lap (and reset the lap clock).
+    pub fn lap_s(&mut self) -> f64 {
+        let now = Instant::now();
+        let d = now.duration_since(self.last_lap).as_secs_f64();
+        self.last_lap = now;
+        d
+    }
+}
+
+/// Accumulates time attributed to named phases (compute / offload / comm /
+/// optimizer) — the breakdown EXPERIMENTS.md §Perf reports.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseAccumulator {
+    pub compute_s: f64,
+    pub offload_s: f64,
+    pub comm_s: f64,
+    pub optim_s: f64,
+    pub other_s: f64,
+}
+
+impl PhaseAccumulator {
+    pub fn total_s(&self) -> f64 {
+        self.compute_s + self.offload_s + self.comm_s + self.optim_s + self.other_s
+    }
+
+    /// Fraction of total attributed to communication.
+    pub fn comm_fraction(&self) -> f64 {
+        let t = self.total_s();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.comm_s / t
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let mut t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        let lap1 = t.lap_s();
+        assert!(lap1 >= 0.004);
+        let lap2 = t.lap_s();
+        assert!(lap2 < lap1);
+        assert!(t.elapsed_s() >= lap1);
+    }
+
+    #[test]
+    fn phase_accumulator_fractions() {
+        let p = PhaseAccumulator {
+            compute_s: 3.0,
+            comm_s: 1.0,
+            ..Default::default()
+        };
+        assert_eq!(p.total_s(), 4.0);
+        assert_eq!(p.comm_fraction(), 0.25);
+        assert_eq!(PhaseAccumulator::default().comm_fraction(), 0.0);
+    }
+}

@@ -1,0 +1,182 @@
+//! Generator checkpoints with timestamps.
+//!
+//! The paper's convergence analysis is *post-training*: generator states
+//! are stored "at the first epoch and every other 5 k epochs (resulting in
+//! 21 generator checkpoints)" together with time stamps, and residual
+//! curves are computed afterwards from the checkpoints (Sec. VI-C2). This
+//! module stores exactly that: flat f32 parameters (little-endian binary)
+//! plus a JSON sidecar with epoch and elapsed seconds.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+/// One stored generator state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub rank: usize,
+    pub epoch: u64,
+    /// Seconds of accumulated training time when the checkpoint was taken.
+    pub elapsed_s: f64,
+    pub gen_params: Vec<f32>,
+}
+
+const MAGIC: &[u8; 8] = b"SAGIPS01";
+
+impl Checkpoint {
+    /// Serialize to `<dir>/ckpt_r<rank>_e<epoch>.bin` (+ `.json` meta).
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let stem = format!("ckpt_r{}_e{}", self.rank, self.epoch);
+        let bin_path = dir.join(format!("{stem}.bin"));
+        let mut f = std::fs::File::create(&bin_path)?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.gen_params.len() as u64).to_le_bytes())?;
+        // Params as raw little-endian f32.
+        let mut bytes = Vec::with_capacity(self.gen_params.len() * 4);
+        for v in &self.gen_params {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        f.write_all(&bytes)?;
+        let meta = json::obj(vec![
+            ("rank", json::num(self.rank as f64)),
+            ("epoch", json::num(self.epoch as f64)),
+            ("elapsed_s", json::num(self.elapsed_s)),
+            ("params", json::num(self.gen_params.len() as f64)),
+        ]);
+        std::fs::write(dir.join(format!("{stem}.json")), meta.to_json_pretty())?;
+        Ok(bin_path)
+    }
+
+    /// Load from a `.bin` path written by [`Checkpoint::save`].
+    pub fn load(bin_path: &Path) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(bin_path)?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::Checkpoint(format!(
+                "{}: bad magic",
+                bin_path.display()
+            )));
+        }
+        let mut len_bytes = [0u8; 8];
+        f.read_exact(&mut len_bytes)?;
+        let n = u64::from_le_bytes(len_bytes) as usize;
+        let mut raw = vec![0u8; n * 4];
+        f.read_exact(&mut raw)?;
+        let gen_params: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        // Sidecar meta.
+        let meta_path = bin_path.with_extension("json");
+        let meta_text = std::fs::read_to_string(&meta_path)
+            .map_err(|e| Error::Checkpoint(format!("{}: {e}", meta_path.display())))?;
+        let meta = Value::parse(&meta_text)?;
+        Ok(Checkpoint {
+            rank: meta.req_usize("rank")?,
+            epoch: meta.req_usize("epoch")? as u64,
+            elapsed_s: meta
+                .req("elapsed_s")?
+                .as_f64()
+                .ok_or_else(|| Error::Checkpoint("elapsed_s not a number".into()))?,
+            gen_params,
+        })
+    }
+
+    /// List all checkpoints in a directory, sorted by (rank, epoch).
+    pub fn list(dir: &Path) -> Result<Vec<PathBuf>> {
+        let mut out = Vec::new();
+        if !dir.exists() {
+            return Ok(out);
+        }
+        for entry in std::fs::read_dir(dir)? {
+            let p = entry?.path();
+            if p.extension().is_some_and(|e| e == "bin")
+                && p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("ckpt_"))
+            {
+                out.push(p);
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+}
+
+/// In-memory checkpoint series for one rank (used when the analysis runs
+/// in the same process and disk round-trips are unnecessary).
+#[derive(Clone, Debug, Default)]
+pub struct CheckpointSeries {
+    pub checkpoints: Vec<Checkpoint>,
+}
+
+impl CheckpointSeries {
+    pub fn record(&mut self, rank: usize, epoch: u64, elapsed_s: f64, gen_params: &[f32]) {
+        self.checkpoints.push(Checkpoint {
+            rank,
+            epoch,
+            elapsed_s,
+            gen_params: gen_params.to_vec(),
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.checkpoints.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.checkpoints.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("sagips_ckpt_{}", std::process::id()));
+        let ck = Checkpoint {
+            rank: 3,
+            epoch: 5000,
+            elapsed_s: 12.5,
+            gen_params: (0..100).map(|i| i as f32 * 0.25 - 10.0).collect(),
+        };
+        let path = ck.save(&dir).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded, ck);
+        let listed = Checkpoint::list(&dir).unwrap();
+        assert_eq!(listed, vec![path]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join(format!("sagips_ckpt_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("ckpt_r0_e0.bin");
+        std::fs::write(&p, b"NOTSAGIPS-GARBAGE").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn list_empty_or_missing_dir() {
+        let dir = std::env::temp_dir().join("sagips_ckpt_definitely_missing");
+        assert!(Checkpoint::list(&dir).unwrap().is_empty());
+    }
+
+    #[test]
+    fn series_records_in_order() {
+        let mut s = CheckpointSeries::default();
+        assert!(s.is_empty());
+        s.record(0, 0, 0.0, &[1.0]);
+        s.record(0, 25, 1.0, &[2.0]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.checkpoints[1].gen_params, vec![2.0]);
+    }
+}

@@ -1,0 +1,152 @@
+//! GAN parameter state and initialization.
+//!
+//! The paper: LeakyReLU hidden activations with Kaiming-normal weight
+//! initialization. The flat layout matches `python/compile/nets.py`
+//! ([W0, b0, W1, b1, ...], W row-major (In, Out)) — the manifest's layer
+//! layout is the single source of truth, validated at parse time.
+
+use crate::runtime::manifest::{LayerLayout, ModelMeta};
+use crate::util::rng::Rng;
+
+/// Flat generator + discriminator parameters for one rank's GAN copy.
+#[derive(Clone, Debug)]
+pub struct GanState {
+    pub gen: Vec<f32>,
+    pub disc: Vec<f32>,
+}
+
+impl GanState {
+    /// Kaiming-normal initialization (fan-in mode, LeakyReLU gain) with
+    /// zero biases, matching the paper's setup.
+    pub fn init(meta: &ModelMeta, leaky_slope: f64, rng: &mut Rng) -> GanState {
+        GanState {
+            gen: init_flat(&meta.gen_layout, meta.gen_param_count, leaky_slope, rng),
+            disc: init_flat(&meta.disc_layout, meta.disc_param_count, leaky_slope, rng),
+        }
+    }
+
+    /// Total parameter count (diagnostics).
+    pub fn param_count(&self) -> usize {
+        self.gen.len() + self.disc.len()
+    }
+}
+
+/// Kaiming-normal std for a layer: gain / sqrt(fan_in) with the LeakyReLU
+/// gain sqrt(2 / (1 + slope^2)).
+pub fn kaiming_std(fan_in: usize, leaky_slope: f64) -> f32 {
+    let gain = (2.0 / (1.0 + leaky_slope * leaky_slope)).sqrt();
+    (gain / (fan_in as f64).sqrt()) as f32
+}
+
+fn init_flat(
+    layout: &[LayerLayout],
+    param_count: usize,
+    leaky_slope: f64,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let mut flat = vec![0.0f32; param_count];
+    for layer in layout {
+        let std = kaiming_std(layer.w_rows, leaky_slope);
+        for w in flat[layer.w_offset..layer.w_offset + layer.w_len()].iter_mut() {
+            *w = rng.normal_f32(0.0, std);
+        }
+        // biases stay zero
+    }
+    flat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::LayerLayout;
+
+    fn meta2() -> ModelMeta {
+        ModelMeta {
+            gen_dims: vec![(16, 64), (64, 6)],
+            disc_dims: vec![(2, 8), (8, 1)],
+            gen_param_count: 16 * 64 + 64 + 64 * 6 + 6,
+            disc_param_count: 2 * 8 + 8 + 8 + 1,
+            gen_layout: vec![
+                LayerLayout {
+                    w_offset: 0,
+                    w_rows: 16,
+                    w_cols: 64,
+                    b_offset: 1024,
+                    b_len: 64,
+                },
+                LayerLayout {
+                    w_offset: 1088,
+                    w_rows: 64,
+                    w_cols: 6,
+                    b_offset: 1472,
+                    b_len: 6,
+                },
+            ],
+            disc_layout: vec![
+                LayerLayout {
+                    w_offset: 0,
+                    w_rows: 2,
+                    w_cols: 8,
+                    b_offset: 16,
+                    b_len: 8,
+                },
+                LayerLayout {
+                    w_offset: 24,
+                    w_rows: 8,
+                    w_cols: 1,
+                    b_offset: 32,
+                    b_len: 1,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn kaiming_std_formula() {
+        // slope 0 -> ReLU gain sqrt(2): std = sqrt(2/fan_in)
+        assert!((kaiming_std(8, 0.0) - (2.0f64 / 8.0).sqrt() as f32).abs() < 1e-7);
+        // larger slope -> smaller gain
+        assert!(kaiming_std(8, 0.5) < kaiming_std(8, 0.0));
+    }
+
+    #[test]
+    fn init_shapes_and_bias_zero() {
+        let meta = meta2();
+        let mut rng = Rng::new(1);
+        let s = GanState::init(&meta, 0.2, &mut rng);
+        assert_eq!(s.gen.len(), meta.gen_param_count);
+        assert_eq!(s.disc.len(), meta.disc_param_count);
+        // biases zero
+        for i in 1024..1088 {
+            assert_eq!(s.gen[i], 0.0);
+        }
+        assert_eq!(s.gen[1472], 0.0);
+        // weights not all zero
+        assert!(s.gen[..1024].iter().any(|&w| w != 0.0));
+    }
+
+    #[test]
+    fn init_statistics_match_kaiming() {
+        let meta = meta2();
+        let mut rng = Rng::new(7);
+        let s = GanState::init(&meta, 0.2, &mut rng);
+        let w = &s.gen[..1024]; // layer 0: fan_in 16
+        let mean: f64 = w.iter().map(|&x| x as f64).sum::<f64>() / w.len() as f64;
+        let var: f64 =
+            w.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / w.len() as f64;
+        let expect = kaiming_std(16, 0.2) as f64;
+        assert!(mean.abs() < 0.05);
+        assert!((var.sqrt() - expect).abs() / expect < 0.15);
+    }
+
+    #[test]
+    fn different_seeds_different_weights() {
+        let meta = meta2();
+        let a = GanState::init(&meta, 0.2, &mut Rng::new(1));
+        let b = GanState::init(&meta, 0.2, &mut Rng::new(2));
+        assert_ne!(a.gen, b.gen);
+        let a2 = GanState::init(&meta, 0.2, &mut Rng::new(1));
+        assert_eq!(a.gen, a2.gen);
+        assert_eq!(a.param_count(), a.gen.len() + a.disc.len());
+    }
+}

@@ -1,0 +1,14 @@
+//! The GAN model as the coordinator sees it: flat parameter vectors,
+//! initialization, train-step assembly, residual diagnostics, checkpoints,
+//! and a pure-Rust reference implementation for cross-checking the HLO
+//! artifacts.
+
+pub mod checkpoint;
+pub mod gan;
+pub mod reference;
+pub mod residuals;
+pub mod step;
+
+pub use gan::GanState;
+pub use residuals::Residuals;
+pub use step::{StepOutput, TrainStep};

@@ -1,0 +1,164 @@
+//! Pure-Rust reference implementation of the forward computations.
+//!
+//! A second, independent implementation of the generator forward pass and
+//! the quantile pipeline, used to cross-check the HLO artifacts end to end
+//! (Rust reference vs Python-lowered XLA execution) and to run
+//! artifact-free unit tests of the residual/ensemble machinery.
+
+use crate::runtime::manifest::LayerLayout;
+
+/// LeakyReLU.
+pub fn leaky_relu(x: f32, slope: f32) -> f32 {
+    if x >= 0.0 {
+        x
+    } else {
+        slope * x
+    }
+}
+
+/// Forward an MLP over flat params: `x` is (batch, d_in) row-major; returns
+/// (batch, d_out). Hidden layers use LeakyReLU, the last layer is linear —
+/// matching `python/compile/nets.py`.
+pub fn mlp_forward(
+    flat: &[f32],
+    layout: &[LayerLayout],
+    x: &[f32],
+    batch: usize,
+    slope: f32,
+) -> Vec<f32> {
+    let mut h = x.to_vec();
+    let mut h_cols = layout[0].w_rows;
+    for (li, layer) in layout.iter().enumerate() {
+        debug_assert_eq!(h.len(), batch * layer.w_rows);
+        let (rows, cols) = (layer.w_rows, layer.w_cols);
+        let w = &flat[layer.w_offset..layer.w_offset + rows * cols];
+        let b = &flat[layer.b_offset..layer.b_offset + layer.b_len];
+        let activate = li + 1 < layout.len();
+        let mut out = vec![0.0f32; batch * cols];
+        for r in 0..batch {
+            let xin = &h[r * rows..(r + 1) * rows];
+            let orow = &mut out[r * cols..(r + 1) * cols];
+            orow.copy_from_slice(b);
+            for (i, &xi) in xin.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let wrow = &w[i * cols..(i + 1) * cols];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xi * wv;
+                }
+            }
+            if activate {
+                for o in orow.iter_mut() {
+                    *o = leaky_relu(*o, slope);
+                }
+            }
+        }
+        h = out;
+        h_cols = cols;
+    }
+    debug_assert_eq!(h.len(), batch * h_cols);
+    h
+}
+
+/// The 1-D proxy quantile: `q(u; a, b, c) = a + b u + c u^2`.
+pub fn quantile(u: f32, a: f32, b: f32, c: f32) -> f32 {
+    a + b * u + c * u * u
+}
+
+/// The environment pipeline: params (B, 6) + uniforms (B, E, 2) -> events
+/// ((B*E), 2) flat, identical to `python/compile/pipeline.py`.
+pub fn pipeline(params: &[f32], u: &[f32], batch: usize, events: usize) -> Vec<f32> {
+    debug_assert_eq!(params.len(), batch * 6);
+    debug_assert_eq!(u.len(), batch * events * 2);
+    let mut out = vec![0.0f32; batch * events * 2];
+    for bi in 0..batch {
+        let p = &params[bi * 6..bi * 6 + 6];
+        for e in 0..events {
+            let idx = (bi * events + e) * 2;
+            out[idx] = quantile(u[idx], p[0], p[1], p[2]);
+            out[idx + 1] = quantile(u[idx + 1], p[3], p[4], p[5]);
+        }
+    }
+    out
+}
+
+/// Closed-form mean of the quantile distribution: E[y] = a + b/2 + c/3 for
+/// u ~ U(0,1) (used by data-sanity tests).
+pub fn quantile_mean(a: f32, b: f32, c: f32) -> f32 {
+    a + b / 2.0 + c / 3.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::LayerLayout;
+
+    #[test]
+    fn quantile_evaluates_polynomial() {
+        assert_eq!(quantile(0.0, 1.0, 2.0, 3.0), 1.0);
+        assert_eq!(quantile(1.0, 1.0, 2.0, 3.0), 6.0);
+        assert_eq!(quantile(0.5, 0.0, 2.0, 4.0), 2.0);
+    }
+
+    #[test]
+    fn pipeline_layout_is_event_major() {
+        let params = [1.0, 0.0, 0.0, 2.0, 0.0, 0.0, /* row 2 */ 3.0, 0.0, 0.0, 4.0, 0.0, 0.0];
+        let u = [0.5f32; 2 * 2 * 2];
+        let ev = pipeline(&params, &u, 2, 2);
+        assert_eq!(ev, vec![1.0, 2.0, 1.0, 2.0, 3.0, 4.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn mlp_identity_layer() {
+        // One linear layer with identity weights reproduces the input.
+        let layout = vec![LayerLayout {
+            w_offset: 0,
+            w_rows: 2,
+            w_cols: 2,
+            b_offset: 4,
+            b_len: 2,
+        }];
+        let flat = vec![1.0, 0.0, 0.0, 1.0, 0.5, -0.5];
+        let x = vec![3.0, 4.0, -1.0, 2.0];
+        let y = mlp_forward(&flat, &layout, &x, 2, 0.2);
+        assert_eq!(y, vec![3.5, 3.5, -0.5, 1.5]);
+    }
+
+    #[test]
+    fn mlp_hidden_layer_applies_leaky_relu() {
+        // 1 -> 1 -> 1 with w=1, b=0 twice; input -2 passes the hidden
+        // LeakyReLU (slope 0.5): -2 -> -1 -> -1 (output layer linear).
+        let layout = vec![
+            LayerLayout {
+                w_offset: 0,
+                w_rows: 1,
+                w_cols: 1,
+                b_offset: 1,
+                b_len: 1,
+            },
+            LayerLayout {
+                w_offset: 2,
+                w_rows: 1,
+                w_cols: 1,
+                b_offset: 3,
+                b_len: 1,
+            },
+        ];
+        let flat = vec![1.0, 0.0, 1.0, 0.0];
+        let y = mlp_forward(&flat, &layout, &[-2.0], 1, 0.5);
+        assert_eq!(y, vec![-1.0]);
+    }
+
+    #[test]
+    fn quantile_mean_closed_form() {
+        let (a, b, c) = (1.0, 0.5, 0.3);
+        let n = 200_000;
+        let mut rng = crate::util::rng::Rng::new(3);
+        let mut s = 0.0f64;
+        for _ in 0..n {
+            s += quantile(rng.uniform_f32(), a, b, c) as f64;
+        }
+        assert!((s / n as f64 - quantile_mean(a, b, c) as f64).abs() < 2e-3);
+    }
+}

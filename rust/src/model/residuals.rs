@@ -1,0 +1,136 @@
+//! Normalized parameter residuals — eq (6), the paper's convergence
+//! metric.
+//!
+//! `r̂_i = (p_i − p̂_i) / p_i`, where `p̂` is the generator's mean
+//! prediction over a fixed batch of noise vectors. The paper found this a
+//! far better convergence indicator than the GAN losses (the losses settle
+//! while the parameters are still off — Sec. VI).
+
+use crate::runtime::RuntimeHandle;
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+/// Residual evaluator with a *fixed* noise batch (so the metric is
+/// comparable across epochs and ranks).
+pub struct Residuals {
+    handle: RuntimeHandle,
+    artifact: String,
+    z: Vec<f32>,
+    k: usize,
+    true_params: Vec<f32>,
+}
+
+impl Residuals {
+    /// `seed` fixes the evaluation noise batch; all ranks of a run share
+    /// it.
+    pub fn new(handle: RuntimeHandle, artifact: &str, seed: u64) -> Result<Residuals> {
+        let spec = handle.manifest().artifact(artifact)?;
+        let k = spec.outputs[0].shape[0];
+        let latent = handle.manifest().latent_dim;
+        let mut rng = Rng::with_stream(seed, 0xEE51D);
+        let mut z = vec![0.0f32; k * latent];
+        rng.fill_normal(&mut z);
+        Ok(Residuals {
+            artifact: artifact.to_string(),
+            z,
+            k,
+            true_params: handle.manifest().true_params.clone(),
+            handle,
+        })
+    }
+
+    /// Generator predictions over the fixed noise batch: (k, 6) flat.
+    pub fn predict(&self, gen_params: &[f32]) -> Result<Vec<f32>> {
+        let out = self
+            .handle
+            .execute(&self.artifact, vec![gen_params.to_vec(), self.z.clone()])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Mean prediction per parameter: p̂ (6,).
+    pub fn mean_prediction(&self, gen_params: &[f32]) -> Result<[f64; 6]> {
+        let preds = self.predict(gen_params)?;
+        Ok(mean_per_param(&preds, self.k))
+    }
+
+    /// Normalized residuals r̂ (6,) per eq (6).
+    pub fn residuals(&self, gen_params: &[f32]) -> Result<[f64; 6]> {
+        let p_hat = self.mean_prediction(gen_params)?;
+        Ok(normalized_residuals(&self.true_params, &p_hat))
+    }
+
+    /// Number of noise vectors in the fixed batch.
+    pub fn noise_batch(&self) -> usize {
+        self.k
+    }
+}
+
+/// Column means of a flat (k, 6) prediction matrix.
+pub fn mean_per_param(preds: &[f32], k: usize) -> [f64; 6] {
+    debug_assert_eq!(preds.len(), k * 6);
+    let mut m = [0.0f64; 6];
+    for row in preds.chunks(6) {
+        for (mi, &v) in m.iter_mut().zip(row) {
+            *mi += v as f64;
+        }
+    }
+    for mi in m.iter_mut() {
+        *mi /= k as f64;
+    }
+    m
+}
+
+/// eq (6): r̂_i = (p_i − p̂_i) / p_i.
+pub fn normalized_residuals(true_params: &[f32], p_hat: &[f64; 6]) -> [f64; 6] {
+    let mut r = [0.0f64; 6];
+    for i in 0..6 {
+        let p = true_params[i] as f64;
+        r[i] = (p - p_hat[i]) / p;
+    }
+    r
+}
+
+/// Mean |r̂| over the six parameters (the summary curve of Figs 15/16).
+pub fn mean_abs(r: &[f64; 6]) -> f64 {
+    r.iter().map(|x| x.abs()).sum::<f64>() / 6.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residuals_zero_at_truth() {
+        let truth = [1.0f32, 0.5, 0.3, -0.5, 1.2, 0.4];
+        let p_hat = [1.0f64, 0.5, 0.3, -0.5, 1.2, 0.4];
+        // f32 truth vs f64 prediction: agreement to f32 precision.
+        let r = normalized_residuals(&truth, &p_hat);
+        assert!(r.iter().all(|x| x.abs() < 1e-6));
+        assert!(mean_abs(&r) < 1e-6);
+    }
+
+    #[test]
+    fn residuals_are_normalized() {
+        let truth = [2.0f32, 0.5, 0.3, -0.5, 1.2, 0.4];
+        let mut p_hat = [2.0f64, 0.5, 0.3, -0.5, 1.2, 0.4];
+        p_hat[0] = 1.0; // off by 1 on a parameter of value 2 -> r = 0.5
+        let r = normalized_residuals(&truth, &p_hat);
+        assert!((r[0] - 0.5).abs() < 1e-12);
+        // negative parameter: sign handled by the division
+        let mut p_hat2 = p_hat;
+        p_hat2[0] = 2.0;
+        p_hat2[3] = -1.0; // truth -0.5: r = (-0.5 - -1.0)/-0.5 = -1.0
+        let r2 = normalized_residuals(&truth, &p_hat2);
+        assert!((r2[3] + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_per_param_averages_rows() {
+        let preds = vec![
+            1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, //
+            3.0, 4.0, 5.0, 6.0, 7.0, 8.0,
+        ];
+        let m = mean_per_param(&preds, 2);
+        assert_eq!(m, [2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+    }
+}

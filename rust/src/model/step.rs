@@ -1,0 +1,172 @@
+//! Train-step assembly: the bridge between the coordinator's state and the
+//! `gan_step` HLO artifact.
+//!
+//! The coordinator owns all randomness: noise `z` and sampler uniforms `u`
+//! are drawn from the rank's PRNG stream and passed to the artifact as
+//! inputs, so an epoch is a pure function of (params, rng state, data).
+//! Buffers are preallocated once and reused every epoch — the hot path does
+//! not allocate.
+
+use crate::runtime::{ArtifactSpec, RuntimeHandle};
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Outputs of one GAN step.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    pub gen_grads: Vec<f32>,
+    pub disc_grads: Vec<f32>,
+    pub gen_loss: f64,
+    pub disc_loss: f64,
+}
+
+/// Reusable train-step executor for one rank.
+pub struct TrainStep {
+    handle: RuntimeHandle,
+    artifact: String,
+    pub batch: usize,
+    pub events: usize,
+    pub latent_dim: usize,
+    // Preallocated input staging buffers.
+    z: Vec<f32>,
+    u: Vec<f32>,
+}
+
+impl TrainStep {
+    /// Build for a specific `gan_step_*` artifact.
+    pub fn new(handle: RuntimeHandle, artifact: &str) -> Result<TrainStep> {
+        let spec: &ArtifactSpec = handle.manifest().artifact(artifact)?;
+        if spec.kind != "gan_step" {
+            return Err(Error::Runtime(format!(
+                "artifact '{artifact}' is a '{}', expected gan_step",
+                spec.kind
+            )));
+        }
+        let batch = spec
+            .batch
+            .ok_or_else(|| Error::Manifest("gan_step artifact missing batch".into()))?;
+        let events = spec
+            .events
+            .ok_or_else(|| Error::Manifest("gan_step artifact missing events".into()))?;
+        let latent_dim = handle.manifest().latent_dim;
+        Ok(TrainStep {
+            artifact: artifact.to_string(),
+            batch,
+            events,
+            latent_dim,
+            z: vec![0.0; batch * latent_dim],
+            u: vec![0.0; batch * events * 2],
+            handle,
+        })
+    }
+
+    /// Discriminator batch size (events per step).
+    pub fn disc_batch(&self) -> usize {
+        self.batch * self.events
+    }
+
+    /// Run one step. `real` must hold `disc_batch() * 2` floats (the
+    /// bootstrap sample drawn by the caller).
+    pub fn run(
+        &mut self,
+        gen_params: &[f32],
+        disc_params: &[f32],
+        real: &[f32],
+        rng: &mut Rng,
+    ) -> Result<StepOutput> {
+        if real.len() != self.disc_batch() * 2 {
+            return Err(Error::Runtime(format!(
+                "real batch has {} floats, expected {}",
+                real.len(),
+                self.disc_batch() * 2
+            )));
+        }
+        rng.fill_normal(&mut self.z);
+        rng.fill_uniform(&mut self.u);
+        let outputs = self.handle.execute(
+            &self.artifact,
+            vec![
+                gen_params.to_vec(),
+                disc_params.to_vec(),
+                self.z.clone(),
+                self.u.clone(),
+                real.to_vec(),
+            ],
+        )?;
+        let [gen_grads, disc_grads, gen_loss, disc_loss]: [Vec<f32>; 4] = outputs
+            .try_into()
+            .map_err(|_| Error::Runtime("gan_step must return 4 outputs".into()))?;
+        Ok(StepOutput {
+            gen_grads,
+            disc_grads,
+            gen_loss: gen_loss[0] as f64,
+            disc_loss: disc_loss[0] as f64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gan::GanState;
+    use crate::runtime::RuntimePool;
+    use crate::util::rng::Rng;
+    use std::path::Path;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn step_runs_and_losses_start_near_log2() {
+        let Some(dir) = artifacts_dir() else { return };
+        let pool = RuntimePool::from_dir(&dir, 1).unwrap();
+        let h = pool.handle();
+        if h.manifest().artifact("gan_step_paper_b16_e25").is_err() {
+            return;
+        }
+        let meta = h.manifest().model("paper").unwrap().clone();
+        let slope = h.manifest().leaky_slope;
+        let mut rng = Rng::new(11);
+        let state = GanState::init(&meta, slope, &mut rng);
+        let mut step = TrainStep::new(h, "gan_step_paper_b16_e25").unwrap();
+        assert_eq!(step.disc_batch(), 400);
+        let real = vec![0.5f32; 400 * 2];
+        let out = step.run(&state.gen, &state.disc, &real, &mut rng).unwrap();
+        assert_eq!(out.gen_grads.len(), state.gen.len());
+        assert_eq!(out.disc_grads.len(), state.disc.len());
+        // Untrained GAN: losses near the uninformative point (the random
+        // Kaiming discriminator emits nonzero logits, so allow a broad
+        // band around log 2 / 2 log 2).
+        assert!((0.1..3.0).contains(&out.gen_loss), "{}", out.gen_loss);
+        assert!((0.5..3.5).contains(&out.disc_loss), "{}", out.disc_loss);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn step_rejects_bad_real_batch() {
+        let Some(dir) = artifacts_dir() else { return };
+        let pool = RuntimePool::from_dir(&dir, 1).unwrap();
+        let h = pool.handle();
+        if h.manifest().artifact("gan_step_paper_b16_e25").is_err() {
+            return;
+        }
+        let mut step = TrainStep::new(h, "gan_step_paper_b16_e25").unwrap();
+        let mut rng = Rng::new(0);
+        let err = step.run(&[0.0; 10], &[0.0; 10], &[0.0; 3], &mut rng);
+        assert!(err.is_err());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn non_gan_step_artifact_rejected() {
+        let Some(dir) = artifacts_dir() else { return };
+        let pool = RuntimePool::from_dir(&dir, 1).unwrap();
+        let h = pool.handle();
+        if h.manifest().artifact("pipeline_b64_e25").is_ok() {
+            assert!(TrainStep::new(h, "pipeline_b64_e25").is_err());
+        }
+        pool.shutdown();
+    }
+}

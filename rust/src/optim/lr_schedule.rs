@@ -1,0 +1,125 @@
+//! Learning-rate schedules and the rank-scaling rule ablation.
+//!
+//! Sec. VI-C3 of the paper: "We did explore the option to scale the
+//! generator learning rate w.r.t the number of ranks, but did not observe
+//! an improvement over the default settings" — the classic linear-scaling
+//! rule (Goyal et al.) applied to the weak-scaling study. This module
+//! implements the candidate rules so the ablation bench can reproduce
+//! that negative result, plus warmup/decay schedules for general use.
+
+/// How to derive a per-rank learning rate from the base rate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RankScaling {
+    /// Paper default: keep the base rate regardless of ranks.
+    Constant,
+    /// Linear-scaling rule: lr * N (classic large-batch heuristic; note
+    /// that under eq (10) the *global* batch is constant, so this
+    /// over-scales — one hypothesis for the paper's negative result).
+    Linear,
+    /// Square-root scaling: lr * sqrt(N).
+    Sqrt,
+}
+
+impl RankScaling {
+    pub fn apply(&self, base_lr: f32, ranks: usize) -> f32 {
+        match self {
+            RankScaling::Constant => base_lr,
+            RankScaling::Linear => base_lr * ranks as f32,
+            RankScaling::Sqrt => base_lr * (ranks as f32).sqrt(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RankScaling> {
+        match s.to_ascii_lowercase().as_str() {
+            "constant" | "none" => Some(RankScaling::Constant),
+            "linear" => Some(RankScaling::Linear),
+            "sqrt" => Some(RankScaling::Sqrt),
+            _ => None,
+        }
+    }
+}
+
+/// Epoch-indexed LR schedule: optional linear warmup into a base rate,
+/// optional exponential decay afterwards.
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub base_lr: f32,
+    /// Warmup epochs (0 = none).
+    pub warmup: u64,
+    /// Multiplicative decay per epoch after warmup (1.0 = none).
+    pub decay: f32,
+    /// Lower bound.
+    pub min_lr: f32,
+}
+
+impl LrSchedule {
+    pub fn constant(base_lr: f32) -> LrSchedule {
+        LrSchedule {
+            base_lr,
+            warmup: 0,
+            decay: 1.0,
+            min_lr: 0.0,
+        }
+    }
+
+    pub fn with_warmup(mut self, epochs: u64) -> LrSchedule {
+        self.warmup = epochs;
+        self
+    }
+
+    pub fn with_decay(mut self, decay: f32, min_lr: f32) -> LrSchedule {
+        self.decay = decay;
+        self.min_lr = min_lr;
+        self
+    }
+
+    /// LR at a given epoch.
+    pub fn at(&self, epoch: u64) -> f32 {
+        if self.warmup > 0 && epoch < self.warmup {
+            return self.base_lr * (epoch + 1) as f32 / self.warmup as f32;
+        }
+        let steps = epoch.saturating_sub(self.warmup) as i32;
+        (self.base_lr * self.decay.powi(steps)).max(self.min_lr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaling_rules() {
+        assert_eq!(RankScaling::Constant.apply(1e-5, 8), 1e-5);
+        assert_eq!(RankScaling::Linear.apply(1e-5, 8), 8e-5);
+        assert!((RankScaling::Sqrt.apply(1e-4, 4) - 2e-4).abs() < 1e-10);
+        assert_eq!(RankScaling::parse("linear"), Some(RankScaling::Linear));
+        assert_eq!(RankScaling::parse("none"), Some(RankScaling::Constant));
+        assert_eq!(RankScaling::parse("huh"), None);
+    }
+
+    #[test]
+    fn warmup_ramps_linearly_then_holds() {
+        let s = LrSchedule::constant(1.0).with_warmup(4);
+        assert_eq!(s.at(0), 0.25);
+        assert_eq!(s.at(1), 0.5);
+        assert_eq!(s.at(3), 1.0);
+        assert_eq!(s.at(100), 1.0);
+    }
+
+    #[test]
+    fn decay_respects_floor() {
+        let s = LrSchedule::constant(1.0).with_decay(0.5, 0.1);
+        assert_eq!(s.at(0), 1.0);
+        assert_eq!(s.at(1), 0.5);
+        assert_eq!(s.at(2), 0.25);
+        assert_eq!(s.at(10), 0.1); // floored
+    }
+
+    #[test]
+    fn warmup_then_decay_composes() {
+        let s = LrSchedule::constant(1.0).with_warmup(2).with_decay(0.9, 0.0);
+        assert_eq!(s.at(0), 0.5);
+        assert_eq!(s.at(2), 1.0 * 0.9f32.powi(0));
+        assert!((s.at(4) - 0.81).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,49 @@
+//! Optimizers operating on flat parameter vectors.
+//!
+//! The paper trains both networks with per-network learning rates (G 1e-5,
+//! D 1e-4, found by manual tuning). Updates run on the coordinator after
+//! gradient on-loading — the optimizer state (Adam moments) never crosses
+//! ranks, only gradients do, exactly as in the paper.
+
+pub mod adam;
+pub mod lr_schedule;
+pub mod sgd;
+
+pub use adam::Adam;
+pub use lr_schedule::{LrSchedule, RankScaling};
+pub use sgd::Sgd;
+
+/// A first-order optimizer over a flat parameter vector.
+pub trait Optimizer: Send {
+    /// Apply one update step in place.
+    fn step(&mut self, params: &mut [f32], grads: &[f32]);
+
+    /// Steps taken so far.
+    fn steps(&self) -> u64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Both optimizers minimize a convex quadratic.
+    #[test]
+    fn optimizers_descend_quadratic() {
+        let opts: Vec<(&str, Box<dyn Optimizer>)> = vec![
+            ("sgd", Box::new(Sgd::new(0.1))),
+            ("adam", Box::new(Adam::new(0.1, 2))),
+        ];
+        for (name, mut opt) in opts {
+            let mut p = vec![5.0f32, -3.0];
+            for _ in 0..200 {
+                let g: Vec<f32> = p.iter().map(|x| 2.0 * x).collect();
+                opt.step(&mut p, &g);
+            }
+            assert!(
+                p.iter().all(|x| x.abs() < 0.1),
+                "{name} did not converge: {p:?}"
+            );
+            assert_eq!(opt.steps(), 200);
+        }
+    }
+}

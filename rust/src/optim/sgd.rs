@@ -1,0 +1,75 @@
+//! Plain SGD with optional momentum (ablation baseline for the optimizer
+//! choice).
+
+use super::Optimizer;
+use crate::tensor::ops;
+
+/// SGD over flat parameters.
+pub struct Sgd {
+    lr: f32,
+    momentum: f32,
+    velocity: Option<Vec<f32>>,
+    t: u64,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Sgd {
+        Sgd {
+            lr,
+            momentum: 0.0,
+            velocity: None,
+            t: 0,
+        }
+    }
+
+    pub fn with_momentum(mut self, momentum: f32) -> Sgd {
+        self.momentum = momentum;
+        self
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), grads.len(), "Sgd dim mismatch");
+        self.t += 1;
+        if self.momentum == 0.0 {
+            ops::axpy(params, -self.lr, grads);
+            return;
+        }
+        let v = self
+            .velocity
+            .get_or_insert_with(|| vec![0.0; params.len()]);
+        for i in 0..params.len() {
+            v[i] = self.momentum * v[i] + grads[i];
+            params[i] -= self.lr * v[i];
+        }
+    }
+
+    fn steps(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::Optimizer;
+
+    #[test]
+    fn vanilla_step_is_axpy() {
+        let mut s = Sgd::new(0.5);
+        let mut p = vec![1.0f32, 2.0];
+        s.step(&mut p, &[2.0, -2.0]);
+        assert_eq!(p, vec![0.0, 3.0]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut s = Sgd::new(1.0).with_momentum(0.5);
+        let mut p = vec![0.0f32];
+        s.step(&mut p, &[1.0]); // v=1, p=-1
+        s.step(&mut p, &[1.0]); // v=1.5, p=-2.5
+        assert!((p[0] + 2.5).abs() < 1e-6);
+        assert_eq!(s.steps(), 2);
+    }
+}

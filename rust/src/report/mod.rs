@@ -1,0 +1,7 @@
+//! Report generation: turn run/simulation outputs into the paper's
+//! tables and figures (text + CSV).
+
+pub mod experiments;
+pub mod tables;
+
+pub use tables::{format_table4, table4_paper_reference, Table4Row};

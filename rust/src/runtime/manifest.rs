@@ -1,0 +1,364 @@
+//! The artifact manifest: the Python -> Rust contract.
+//!
+//! `python/compile/aot.py` writes `manifest.json` next to the HLO text
+//! files. This module parses it into typed structs and provides the lookup
+//! helpers the trainer uses (parameter counts for initialization, layer
+//! layouts for the weight-only fusion plan, artifact shapes for input
+//! assembly).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::tensor::fusion::{segments_from_layout, Segment};
+use crate::util::error::{Error, Result};
+use crate::util::json::Value;
+
+/// One named input/output of an artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One exported HLO computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    /// Which exported function this is ("gan_step", "gen_predict",
+    /// "pipeline", "disc_forward").
+    pub kind: String,
+    /// Model size variant, where applicable.
+    pub model: Option<String>,
+    pub batch: Option<usize>,
+    pub events: Option<usize>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// Per-layer layout of the flat parameter vector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerLayout {
+    pub w_offset: usize,
+    pub w_rows: usize,
+    pub w_cols: usize,
+    pub b_offset: usize,
+    pub b_len: usize,
+}
+
+impl LayerLayout {
+    pub fn w_len(&self) -> usize {
+        self.w_rows * self.w_cols
+    }
+}
+
+/// One model size variant's metadata.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub gen_dims: Vec<(usize, usize)>,
+    pub disc_dims: Vec<(usize, usize)>,
+    pub gen_param_count: usize,
+    pub disc_param_count: usize,
+    pub gen_layout: Vec<LayerLayout>,
+    pub disc_layout: Vec<LayerLayout>,
+}
+
+impl ModelMeta {
+    /// Fusion segments for the generator's flat gradient vector.
+    pub fn gen_segments(&self) -> Vec<Segment> {
+        layout_segments(&self.gen_layout)
+    }
+}
+
+fn layout_segments(layout: &[LayerLayout]) -> Vec<Segment> {
+    segments_from_layout(
+        &layout
+            .iter()
+            .map(|l| (l.w_offset, l.w_len(), l.b_offset, l.b_len))
+            .collect::<Vec<_>>(),
+    )
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub latent_dim: usize,
+    pub leaky_slope: f64,
+    pub true_params: Vec<f32>,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = Value::parse(text)?;
+        let latent_dim = v.req_usize("latent_dim")?;
+        let leaky_slope = v
+            .req("leaky_slope")?
+            .as_f64()
+            .ok_or_else(|| Error::Manifest("leaky_slope must be a number".into()))?;
+        let true_params: Vec<f32> = v
+            .req("true_params")?
+            .f64_array()?
+            .into_iter()
+            .map(|x| x as f32)
+            .collect();
+        if true_params.len() != 6 {
+            return Err(Error::Manifest(format!(
+                "expected 6 true params, got {}",
+                true_params.len()
+            )));
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, m) in v
+            .req("models")?
+            .as_object()
+            .ok_or_else(|| Error::Manifest("models must be an object".into()))?
+        {
+            models.insert(name.clone(), parse_model(m)?);
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in v
+            .req("artifacts")?
+            .as_object()
+            .ok_or_else(|| Error::Manifest("artifacts must be an object".into()))?
+        {
+            artifacts.insert(name.clone(), parse_artifact(name, a)?);
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            latent_dim,
+            leaky_slope,
+            true_params,
+            models,
+            artifacts,
+        })
+    }
+
+    /// Lookup an artifact spec.
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| {
+            Error::Manifest(format!(
+                "artifact '{name}' not in manifest (have: {})",
+                self.artifacts.keys().cloned().collect::<Vec<_>>().join(", ")
+            ))
+        })
+    }
+
+    /// Lookup model metadata.
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("model '{name}' not in manifest")))
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+fn parse_layout(v: &Value) -> Result<Vec<LayerLayout>> {
+    v.as_array()
+        .ok_or_else(|| Error::Manifest("layout must be an array".into()))?
+        .iter()
+        .map(|l| {
+            let w_shape = l.req("w_shape")?.usize_array()?;
+            if w_shape.len() != 2 {
+                return Err(Error::Manifest("w_shape must be 2-D".into()));
+            }
+            Ok(LayerLayout {
+                w_offset: l.req_usize("w_offset")?,
+                w_rows: w_shape[0],
+                w_cols: w_shape[1],
+                b_offset: l.req_usize("b_offset")?,
+                b_len: l.req_usize("b_len")?,
+            })
+        })
+        .collect()
+}
+
+fn parse_dims(v: &Value) -> Result<Vec<(usize, usize)>> {
+    v.as_array()
+        .ok_or_else(|| Error::Manifest("dims must be an array".into()))?
+        .iter()
+        .map(|d| {
+            let pair = d.usize_array()?;
+            if pair.len() != 2 {
+                return Err(Error::Manifest("dim entries must be pairs".into()));
+            }
+            Ok((pair[0], pair[1]))
+        })
+        .collect()
+}
+
+fn parse_model(m: &Value) -> Result<ModelMeta> {
+    let meta = ModelMeta {
+        gen_dims: parse_dims(m.req("gen_dims")?)?,
+        disc_dims: parse_dims(m.req("disc_dims")?)?,
+        gen_param_count: m.req_usize("gen_param_count")?,
+        disc_param_count: m.req_usize("disc_param_count")?,
+        gen_layout: parse_layout(m.req("gen_layout")?)?,
+        disc_layout: parse_layout(m.req("disc_layout")?)?,
+    };
+    // Consistency: layout must tile the flat vector exactly.
+    let gen_end = meta
+        .gen_layout
+        .last()
+        .map(|l| l.b_offset + l.b_len)
+        .unwrap_or(0);
+    if gen_end != meta.gen_param_count {
+        return Err(Error::Manifest(format!(
+            "generator layout ends at {gen_end}, param count is {}",
+            meta.gen_param_count
+        )));
+    }
+    let disc_end = meta
+        .disc_layout
+        .last()
+        .map(|l| l.b_offset + l.b_len)
+        .unwrap_or(0);
+    if disc_end != meta.disc_param_count {
+        return Err(Error::Manifest(format!(
+            "discriminator layout ends at {disc_end}, param count is {}",
+            meta.disc_param_count
+        )));
+    }
+    Ok(meta)
+}
+
+fn parse_io(v: &Value) -> Result<Vec<IoSpec>> {
+    v.as_array()
+        .ok_or_else(|| Error::Manifest("io spec must be an array".into()))?
+        .iter()
+        .map(|io| {
+            Ok(IoSpec {
+                name: io.req_str("name")?.to_string(),
+                shape: io.req("shape")?.usize_array()?,
+            })
+        })
+        .collect()
+}
+
+fn parse_artifact(name: &str, a: &Value) -> Result<ArtifactSpec> {
+    Ok(ArtifactSpec {
+        name: name.to_string(),
+        file: a.req_str("file")?.to_string(),
+        kind: a.req_str("fn")?.to_string(),
+        model: a.get("model").and_then(|m| m.as_str()).map(String::from),
+        batch: a.get("batch").and_then(|b| b.as_usize()),
+        events: a.get("events").and_then(|e| e.as_usize()),
+        inputs: parse_io(a.req("inputs")?)?,
+        outputs: parse_io(a.req("outputs")?)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "latent_dim": 16, "leaky_slope": 0.2,
+      "true_params": [1.0, 0.5, 0.3, -0.5, 1.2, 0.4],
+      "models": {
+        "tiny": {
+          "gen_dims": [[2, 3], [3, 1]],
+          "disc_dims": [[2, 2], [2, 1]],
+          "gen_param_count": 13,
+          "disc_param_count": 9,
+          "gen_layout": [
+            {"w_offset": 0, "w_shape": [2, 3], "b_offset": 6, "b_len": 3},
+            {"w_offset": 9, "w_shape": [3, 1], "b_offset": 12, "b_len": 1}
+          ],
+          "disc_layout": [
+            {"w_offset": 0, "w_shape": [2, 2], "b_offset": 4, "b_len": 2},
+            {"w_offset": 6, "w_shape": [2, 1], "b_offset": 8, "b_len": 1}
+          ]
+        }
+      },
+      "artifacts": {
+        "gan_step_tiny_b4_e2": {
+          "fn": "gan_step", "model": "tiny", "batch": 4, "events": 2,
+          "file": "gan_step_tiny_b4_e2.hlo.txt",
+          "inputs": [
+            {"name": "gen_params", "shape": [13], "dtype": "f32"},
+            {"name": "z", "shape": [4, 16], "dtype": "f32"}
+          ],
+          "outputs": [{"name": "gen_grads", "shape": [13], "dtype": "f32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.latent_dim, 16);
+        assert_eq!(m.true_params.len(), 6);
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.gen_dims, vec![(2, 3), (3, 1)]);
+        assert_eq!(tiny.gen_layout[1].w_offset, 9);
+        let a = m.artifact("gan_step_tiny_b4_e2").unwrap();
+        assert_eq!(a.kind, "gan_step");
+        assert_eq!(a.inputs[1].shape, vec![4, 16]);
+        assert_eq!(a.inputs[1].elems(), 64);
+        assert_eq!(m.hlo_path(a), Path::new("/tmp/a/gan_step_tiny_b4_e2.hlo.txt"));
+    }
+
+    #[test]
+    fn unknown_artifact_lists_available() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        let err = m.artifact("nope").unwrap_err().to_string();
+        assert!(err.contains("gan_step_tiny_b4_e2"));
+    }
+
+    #[test]
+    fn layout_mismatch_rejected() {
+        let bad = SAMPLE.replace("\"gen_param_count\": 13", "\"gen_param_count\": 14");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn gen_segments_mark_biases() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        let segs = m.model("tiny").unwrap().gen_segments();
+        assert_eq!(segs.len(), 4);
+        assert!(!segs[0].is_bias && segs[0].len == 6);
+        assert!(segs[1].is_bias && segs[1].len == 3);
+    }
+
+    #[test]
+    fn parses_real_manifest_when_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.models.contains_key("paper"));
+            let paper = m.model("paper").unwrap();
+            // Paper: 51,206 / 50,049 — ours within 0.5%.
+            assert!((paper.gen_param_count as f64 - 51206.0).abs() / 51206.0 < 0.005);
+            assert!((paper.disc_param_count as f64 - 50049.0).abs() / 50049.0 < 0.005);
+        }
+    }
+}

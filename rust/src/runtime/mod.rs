@@ -1,0 +1,22 @@
+//! PJRT runtime: load the AOT HLO artifacts and execute them from Rust.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (the contract written
+//!   by `python/compile/aot.py`): artifact files, input/output shapes,
+//!   model layer layouts, parameter counts, true parameters.
+//! * [`pool`] — the execution pool. The `xla` crate's PJRT handles are
+//!   `!Send` (internally `Rc`), so they cannot migrate across the rank
+//!   threads; instead a small pool of dedicated worker threads each owns a
+//!   `PjRtClient` plus a lazily-compiled executable cache, and rank threads
+//!   submit execute requests over channels. This is also how a real
+//!   deployment would bind executables to GPUs — ranks share a fixed set
+//!   of devices.
+//!
+//! HLO **text** is the interchange format (`HloModuleProto::from_text_file`)
+//! — see DESIGN.md and /opt/xla-example/README.md for why serialized protos
+//! from jax >= 0.5 are rejected by xla_extension 0.5.1.
+
+pub mod manifest;
+pub mod pool;
+
+pub use manifest::{ArtifactSpec, LayerLayout, Manifest, ModelMeta};
+pub use pool::{RuntimeHandle, RuntimePool};

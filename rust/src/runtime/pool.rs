@@ -1,0 +1,345 @@
+//! The PJRT execution pool.
+//!
+//! PJRT handles from the `xla` crate are `!Send` (they wrap `Rc`s over C
+//! pointers), so executables cannot move between rank threads. Instead the
+//! pool owns a fixed set of worker threads; each worker creates its own
+//! `PjRtClient::cpu()` and compiles artifacts on first use (per-worker
+//! executable cache). Rank threads hold a cheap [`RuntimeHandle`] and
+//! submit [`ExecuteRequest`]s over a shared channel; any idle worker picks
+//! the request up, executes, and replies over a oneshot channel.
+//!
+//! Inputs and outputs cross the channel as flat `Vec<f32>` buffers; shapes
+//! come from the manifest. This mirrors the paper's gradient off-loading
+//! (Sec. IV-B6): tensors live host-side around every device execution.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::manifest::{ArtifactSpec, Manifest};
+use crate::util::error::{Error, Result};
+
+/// A request to run one artifact with flat f32 inputs.
+struct ExecuteRequest {
+    artifact: String,
+    inputs: Vec<Vec<f32>>,
+    reply: Sender<Result<Vec<Vec<f32>>>>,
+}
+
+/// Worker queue message: work or poison.
+enum Req {
+    Exec(ExecuteRequest),
+    /// Shut one worker down (each poison is consumed by exactly one
+    /// worker, so shutdown works even with outstanding handles).
+    Shutdown,
+}
+
+/// Cheap, clonable handle used by rank threads.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    manifest: Arc<Manifest>,
+    queue: Sender<Req>,
+}
+
+impl RuntimeHandle {
+    /// Execute `artifact` with the given flat inputs; returns flat outputs
+    /// in the manifest's output order. Blocks until complete.
+    pub fn execute(&self, artifact: &str, inputs: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        // Validate against the manifest before crossing threads: mistakes
+        // surface with artifact + input names instead of an XLA abort.
+        let spec = self.manifest.artifact(artifact)?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "artifact '{artifact}' takes {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (buf, io) in inputs.iter().zip(&spec.inputs) {
+            if buf.len() != io.elems() {
+                return Err(Error::Runtime(format!(
+                    "artifact '{artifact}' input '{}' wants {} elements ({:?}), got {}",
+                    io.name,
+                    io.elems(),
+                    io.shape,
+                    buf.len()
+                )));
+            }
+        }
+        let (tx, rx) = channel();
+        self.queue
+            .send(Req::Exec(ExecuteRequest {
+                artifact: artifact.to_string(),
+                inputs,
+                reply: tx,
+            }))
+            .map_err(|_| Error::Runtime("runtime pool shut down".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("runtime worker dropped request".into()))?
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}
+
+/// The pool: worker threads + shared request queue.
+pub struct RuntimePool {
+    handle: RuntimeHandle,
+    workers: Vec<JoinHandle<()>>,
+    queue: Sender<Req>,
+}
+
+impl RuntimePool {
+    /// Spin up `workers` PJRT worker threads over the artifact set.
+    pub fn new(manifest: Manifest, workers: usize) -> Result<RuntimePool> {
+        assert!(workers >= 1);
+        let manifest = Arc::new(manifest);
+        let (tx, rx) = channel::<Req>();
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let mut joins = Vec::with_capacity(workers);
+        // Surface worker init errors synchronously: each worker reports
+        // readiness once its PJRT client exists.
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        for wid in 0..workers {
+            let rx = shared_rx.clone();
+            let m = manifest.clone();
+            let ready = ready_tx.clone();
+            joins.push(std::thread::Builder::new()
+                .name(format!("pjrt-worker-{wid}"))
+                .spawn(move || worker_main(wid, m, rx, ready))
+                .map_err(Error::Io)?);
+        }
+        drop(ready_tx);
+        for _ in 0..workers {
+            ready_rx
+                .recv()
+                .map_err(|_| Error::Runtime("worker died during init".into()))??;
+        }
+        let handle = RuntimeHandle {
+            manifest,
+            queue: tx.clone(),
+        };
+        Ok(RuntimePool {
+            handle,
+            workers: joins,
+            queue: tx,
+        })
+    }
+
+    /// Convenience: load the manifest from `dir` and start the pool.
+    pub fn from_dir(dir: &std::path::Path, workers: usize) -> Result<RuntimePool> {
+        RuntimePool::new(Manifest::load(dir)?, workers)
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        self.handle.clone()
+    }
+
+    /// Shut the pool down, joining all workers. Safe to call with
+    /// outstanding [`RuntimeHandle`]s: each worker consumes one poison
+    /// message and exits; subsequent handle submissions error out once
+    /// the queue has no consumers left.
+    pub fn shutdown(self) {
+        let RuntimePool {
+            handle,
+            workers,
+            queue,
+        } = self;
+        drop(handle);
+        for _ in &workers {
+            let _ = queue.send(Req::Shutdown);
+        }
+        drop(queue);
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_main(
+    wid: usize,
+    manifest: Arc<Manifest>,
+    rx: Arc<Mutex<Receiver<Req>>>,
+    ready: Sender<Result<()>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(Error::Runtime(format!(
+                "worker {wid}: PJRT CPU client failed: {e}"
+            ))));
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    loop {
+        // Hold the lock only while dequeueing.
+        let req = match rx.lock() {
+            Ok(guard) => match guard.recv() {
+                Ok(Req::Exec(r)) => r,
+                Ok(Req::Shutdown) | Err(_) => return,
+            },
+            Err(_) => return,
+        };
+        let result = execute_one(&client, &manifest, &mut cache, &req);
+        let _ = req.reply.send(result);
+    }
+}
+
+fn execute_one(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    req: &ExecuteRequest,
+) -> Result<Vec<Vec<f32>>> {
+    let spec = manifest.artifact(&req.artifact)?;
+    if !cache.contains_key(&req.artifact) {
+        let exe = compile_artifact(client, manifest, spec)?;
+        cache.insert(req.artifact.clone(), exe);
+    }
+    let exe = cache.get(&req.artifact).unwrap();
+
+    // Flat f32 -> shaped literals.
+    let mut literals = Vec::with_capacity(req.inputs.len());
+    for (buf, io) in req.inputs.iter().zip(&spec.inputs) {
+        let lit = xla::Literal::vec1(buf);
+        let lit = if io.shape.len() == 1 {
+            lit
+        } else {
+            let dims: Vec<i64> = io.shape.iter().map(|&d| d as i64).collect();
+            lit.reshape(&dims)?
+        };
+        literals.push(lit);
+    }
+
+    let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+    // aot.py lowers with return_tuple=True: always a tuple, even for one
+    // output.
+    let elements = result.to_tuple()?;
+    if elements.len() != spec.outputs.len() {
+        return Err(Error::Runtime(format!(
+            "artifact '{}' returned {} outputs, manifest says {}",
+            req.artifact,
+            elements.len(),
+            spec.outputs.len()
+        )));
+    }
+    let mut outputs = Vec::with_capacity(elements.len());
+    for (lit, io) in elements.iter().zip(&spec.outputs) {
+        let v = lit.to_vec::<f32>()?;
+        if v.len() != io.elems() {
+            return Err(Error::Runtime(format!(
+                "artifact '{}' output '{}' has {} elements, manifest says {}",
+                req.artifact,
+                io.name,
+                v.len(),
+                io.elems()
+            )));
+        }
+        outputs.push(v);
+    }
+    Ok(outputs)
+}
+
+fn compile_artifact(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    spec: &ArtifactSpec,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path = manifest.hlo_path(spec);
+    let path_str = path
+        .to_str()
+        .ok_or_else(|| Error::Runtime(format!("non-utf8 path {}", path.display())))?;
+    let proto = xla::HloModuleProto::from_text_file(path_str)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn pool_executes_pipeline_artifact() {
+        let Some(dir) = artifacts_dir() else { return };
+        let pool = RuntimePool::from_dir(&dir, 1).unwrap();
+        let h = pool.handle();
+        let m = h.manifest();
+        let Ok(spec) = m.artifact("pipeline_b64_e25") else {
+            return;
+        };
+        let b = spec.batch.unwrap();
+        let e = spec.events.unwrap();
+        // All-true-params + u = 0 -> every event is (p0, p3).
+        let params: Vec<f32> = (0..b).flat_map(|_| m.true_params.clone()).collect();
+        let u = vec![0.0f32; b * e * 2];
+        let out = h.execute("pipeline_b64_e25", vec![params, u]).unwrap();
+        assert_eq!(out.len(), 1);
+        let events = &out[0];
+        assert_eq!(events.len(), b * e * 2);
+        for ev in events.chunks(2) {
+            assert!((ev[0] - m.true_params[0]).abs() < 1e-5);
+            assert!((ev[1] - m.true_params[3]).abs() < 1e-5);
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn handle_validates_shapes_before_dispatch() {
+        let Some(dir) = artifacts_dir() else { return };
+        let pool = RuntimePool::from_dir(&dir, 1).unwrap();
+        let h = pool.handle();
+        if h.manifest().artifact("pipeline_b64_e25").is_ok() {
+            // wrong arity
+            assert!(h.execute("pipeline_b64_e25", vec![vec![0.0]]).is_err());
+            // wrong input size
+            assert!(h
+                .execute("pipeline_b64_e25", vec![vec![0.0; 3], vec![0.0; 5]])
+                .is_err());
+            // unknown artifact
+            assert!(h.execute("nope", vec![]).is_err());
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submissions_from_many_threads() {
+        let Some(dir) = artifacts_dir() else { return };
+        let pool = RuntimePool::from_dir(&dir, 2).unwrap();
+        let h = pool.handle();
+        let m = h.manifest();
+        if m.artifact("pipeline_b64_e25").is_err() {
+            return;
+        }
+        let tp = m.true_params.clone();
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                let h = h.clone();
+                let tp = tp.clone();
+                std::thread::spawn(move || {
+                    let params: Vec<f32> = (0..64).flat_map(|_| tp.clone()).collect();
+                    let u = vec![0.5f32; 64 * 25 * 2];
+                    let out = h.execute("pipeline_b64_e25", vec![params, u]).unwrap();
+                    out[0][0]
+                })
+            })
+            .collect();
+        let vals: Vec<f32> = handles.into_iter().map(|t| t.join().unwrap()).collect();
+        // q(0.5; 1.0, 0.5, 0.3) = 1 + 0.25 + 0.075 = 1.325
+        for v in vals {
+            assert!((v - 1.325).abs() < 1e-5);
+        }
+        pool.shutdown();
+    }
+}

@@ -1,0 +1,75 @@
+//! Calibration: fit the simulator's compute model to measured step times.
+//!
+//! A short real run (the launcher records per-epoch `step_s`) yields the
+//! mean and dispersion of the actual gan_step execution; the simulator
+//! then scales those to the paper's A100 workload via a configurable
+//! hardware factor (our CPU interpret-mode step vs the paper's per-epoch
+//! GPU time).
+
+use crate::metrics::MergedMetrics;
+use crate::tensor::stats;
+
+use super::workload::ComputeModel;
+
+/// Fit a lognormal compute model from measured per-epoch step seconds.
+pub fn from_step_times(step_s: &[f64]) -> ComputeModel {
+    assert!(!step_s.is_empty());
+    let mean = stats::mean(step_s);
+    // Lognormal sigma from the coefficient of variation:
+    // CV^2 = exp(sigma^2) - 1  =>  sigma = sqrt(ln(1 + CV^2)).
+    let cv = if mean > 0.0 {
+        stats::std(step_s) / mean
+    } else {
+        0.0
+    };
+    let sigma = (1.0 + cv * cv).ln().sqrt();
+    ComputeModel::with_jitter(mean.max(1e-9), sigma)
+}
+
+/// Calibrate from a completed run's merged metrics, scaling the measured
+/// mean by `hardware_factor` (e.g. paper-GPU-time / our-CPU-time).
+pub fn from_run(metrics: &MergedMetrics, hardware_factor: f64) -> ComputeModel {
+    let mut all = Vec::new();
+    for r in &metrics.per_rank {
+        if let Some(s) = r.get("step_s") {
+            all.extend_from_slice(&s.values);
+        }
+    }
+    let mut m = from_step_times(&all);
+    m.mean_s *= hardware_factor;
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Recorder;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fit_recovers_mean_and_spread() {
+        let truth = ComputeModel::with_jitter(0.05, 0.3);
+        let mut rng = Rng::new(1);
+        let samples: Vec<f64> = (0..20_000).map(|_| truth.sample(&mut rng)).collect();
+        let fit = from_step_times(&samples);
+        assert!((fit.mean_s - 0.05).abs() / 0.05 < 0.05, "{}", fit.mean_s);
+        assert!((fit.jitter_sigma - 0.3).abs() < 0.05, "{}", fit.jitter_sigma);
+    }
+
+    #[test]
+    fn deterministic_series_fits_zeroish_jitter() {
+        let fit = from_step_times(&[0.1; 100]);
+        assert!((fit.mean_s - 0.1).abs() < 1e-12);
+        assert!(fit.jitter_sigma < 1e-6);
+    }
+
+    #[test]
+    fn from_run_applies_hardware_factor() {
+        let mut r = Recorder::new(0);
+        for e in 0..50 {
+            r.push("step_s", e, 0.2);
+        }
+        let m = from_run(&MergedMetrics::new(vec![r]), 0.1);
+        assert!((m.mean_s - 0.02).abs() < 1e-12);
+    }
+}

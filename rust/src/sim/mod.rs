@@ -1,0 +1,30 @@
+//! Discrete-event simulator for the scaling studies (Figs 11/12).
+//!
+//! The paper measures wall-clock on Polaris (up to 400 A100s). We have one
+//! CPU host, so *numerics* run for real on in-process ranks while
+//! *wall-clock at scale* comes from this simulator (DESIGN.md §Why a
+//! simulator). The simulator evaluates the exact communication schedules
+//! the collectives implement — per-rank compute, gradient staging, and the
+//! dependency structure of each mode's message exchanges — over an α-β
+//! network model:
+//!
+//! * conventional ARAR: a global unchunked ring; each of the N-1 steps
+//!   forwards the full tensor and blocks on the predecessor — per-epoch
+//!   comm grows ~linearly with N (the paper's Fig 11 growth);
+//! * grouped ARAR-ARAR: rings bounded to the node size every epoch + an
+//!   outer ring every h epochs — near-flat scaling;
+//! * RMA-ARAR-ARAR: same schedule, but a rank never waits for its
+//!   neighbour's epoch to finish (put/get, no rendezvous);
+//! * horovod: barrier + bandwidth-optimal chunked ring every epoch.
+//!
+//! The per-epoch compute-time distribution is calibrated from measured
+//! real step times ([`calibrate`]).
+
+pub mod calibrate;
+pub mod network;
+pub mod schedule;
+pub mod sweep;
+pub mod workload;
+
+pub use schedule::{simulate, SimConfig, SimResult};
+pub use workload::ComputeModel;

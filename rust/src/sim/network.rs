@@ -1,0 +1,88 @@
+//! Network cost model for the simulator — shared α-β constants with the
+//! real transport's `comm::LinkModel`.
+
+use crate::comm::{LinkModel, Topology};
+
+/// Simulator-side view of the network.
+#[derive(Clone, Copy, Debug)]
+pub struct NetModel {
+    pub links: LinkModel,
+}
+
+impl NetModel {
+    /// Raw-hardware constants (NVLink/Slingshot).
+    pub fn polaris_like() -> NetModel {
+        NetModel {
+            links: LinkModel::polaris_like(),
+        }
+    }
+
+    /// The paper's effective software-stack constants (mpi4py + staging) —
+    /// the simulator default; see `LinkModel::mpi4py_like`.
+    pub fn paper_like() -> NetModel {
+        NetModel {
+            links: LinkModel::mpi4py_like(),
+        }
+    }
+
+    /// Time for one point-to-point message of `bytes` between two ranks.
+    pub fn p2p_s(&self, topo: &Topology, from: usize, to: usize, bytes: usize) -> f64 {
+        let same = topo.node_of(from) == topo.node_of(to);
+        self.links.transfer_s(same, bytes)
+    }
+
+    /// Gradient staging (off-load + on-load) per epoch.
+    pub fn staging_s(&self, bytes: usize) -> f64 {
+        self.links.staging_s(bytes)
+    }
+
+    /// Bandwidth-optimal chunked ring all-reduce time over `n` homogeneous
+    /// inter-node links (the horovod/NCCL cost model): 2(n-1) steps of
+    /// (α + (bytes/n)·β).
+    pub fn chunked_ring_s(&self, n: usize, bytes: usize, inter_node: bool) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let link = if inter_node {
+            self.links.inter_node
+        } else {
+            self.links.intra_node
+        };
+        let chunk = bytes as f64 / n as f64;
+        2.0 * (n as f64 - 1.0) * (link.alpha_s + chunk * link.beta_s_per_byte)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p2p_uses_topology_locality() {
+        let net = NetModel::polaris_like();
+        let topo = Topology::new(8, 4);
+        let intra = net.p2p_s(&topo, 0, 1, 1 << 20);
+        let inter = net.p2p_s(&topo, 3, 4, 1 << 20);
+        assert!(inter > intra);
+    }
+
+    #[test]
+    fn chunked_ring_is_bandwidth_optimal_vs_unchunked() {
+        // For large N, chunked ring total bytes ≈ 2·bytes; unchunked ring
+        // moves (N-1)·bytes — the gap the paper's Fig 11 exposes.
+        let net = NetModel::polaris_like();
+        let topo = Topology::new(64, 4);
+        let bytes = 200_000;
+        let chunked = net.chunked_ring_s(64, bytes, true);
+        let unchunked: f64 = (0..63)
+            .map(|_| net.p2p_s(&topo, 3, 4, bytes))
+            .sum();
+        assert!(chunked < unchunked / 2.0, "{chunked} vs {unchunked}");
+    }
+
+    #[test]
+    fn ring_of_one_is_free() {
+        let net = NetModel::polaris_like();
+        assert_eq!(net.chunked_ring_s(1, 1 << 20, true), 0.0);
+    }
+}

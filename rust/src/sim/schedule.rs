@@ -1,0 +1,336 @@
+//! The schedule evaluator: per-mode communication dependency structures
+//! over simulated time.
+//!
+//! State is one clock per rank. Each epoch advances every clock by its
+//! compute + staging draw, then applies the mode's communication schedule:
+//! blocking ring steps propagate *waits* through `max()` dependencies
+//! (exactly the recv-blocking of the real collectives), RMA steps add only
+//! the rank's own put/get costs, horovod adds a global barrier. A window
+//! of `sim_epochs` epochs is simulated and extrapolated to the full run
+//! (steady-state throughput converges long before the window ends).
+
+use crate::comm::Topology;
+use crate::config::Mode;
+use crate::util::rng::Rng;
+
+use super::network::NetModel;
+use super::workload::ComputeModel;
+
+/// Simulator configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub mode: Mode,
+    pub ranks: usize,
+    pub gpus_per_node: usize,
+    /// Outer-group frequency h (grouped modes).
+    pub outer_freq: usize,
+    /// Total epochs to report (the paper: 100k).
+    pub epochs: u64,
+    /// Simulated window (extrapolated to `epochs`).
+    pub sim_epochs: u64,
+    /// Transferred gradient payload per ring step (bytes) — the paper's
+    /// weight-only generator gradients, ~50k f32 ≈ 200 KB.
+    pub grad_bytes: usize,
+    /// Discriminator batch (events/epoch/rank) for the analysis rate.
+    pub disc_batch: usize,
+    pub compute: ComputeModel,
+    pub net: NetModel,
+    pub seed: u64,
+}
+
+impl SimConfig {
+    /// Paper-like defaults for a given mode and rank count.
+    pub fn paper(mode: Mode, ranks: usize) -> SimConfig {
+        SimConfig {
+            mode,
+            ranks,
+            gpus_per_node: 4,
+            outer_freq: 1000,
+            epochs: 100_000,
+            sim_epochs: 512,
+            grad_bytes: 51_206 * 4, // paper's generator weight gradients
+            disc_batch: 102_400,
+            compute: ComputeModel::with_jitter(0.035, 0.15),
+            net: NetModel::paper_like(),
+            seed: 2024,
+        }
+    }
+}
+
+/// Simulation outputs.
+#[derive(Clone, Copy, Debug)]
+pub struct SimResult {
+    /// Extrapolated total training time for `epochs` epochs (seconds).
+    pub total_s: f64,
+    /// Raw simulated window time.
+    pub simulated_s: f64,
+    pub sim_epochs: u64,
+    /// eq (9): ranks * disc_batch * epochs / total time.
+    pub analysis_rate: f64,
+    /// Fraction of rank-time spent in communication waits + transfers.
+    pub comm_fraction: f64,
+}
+
+/// Evaluate the schedule.
+pub fn simulate(cfg: &SimConfig) -> SimResult {
+    let n = cfg.ranks;
+    let topo = Topology::new(n, cfg.gpus_per_node);
+    let sim_epochs = cfg.sim_epochs.min(cfg.epochs).max(1);
+    let mut rngs: Vec<Rng> = (0..n)
+        .map(|r| Rng::with_stream(cfg.seed, r as u64 + 1))
+        .collect();
+    let mut t = vec![0.0f64; n]; // per-rank clock
+    let mut comm_time = 0.0f64; // aggregate comm seconds across ranks
+    let staging = cfg.net.staging_s(cfg.grad_bytes);
+
+    // Precompute group structure.
+    let inner_groups: Vec<Vec<usize>> = (0..topo.nodes())
+        .map(|g| topo.inner_group(g * cfg.gpus_per_node))
+        .collect();
+    let outer = topo.outer_group();
+
+    for epoch in 0..sim_epochs {
+        // Compute + staging phase.
+        for r in 0..n {
+            t[r] += cfg.compute.sample(&mut rngs[r]) + staging;
+        }
+        let before: f64 = t.iter().sum();
+        match cfg.mode {
+            Mode::Ensemble => {}
+            Mode::ConvArar => {
+                ring_schedule(&mut t, &topo, &(0..n).collect::<Vec<_>>(), cfg);
+            }
+            Mode::ArarArar | Mode::RmaArarArar => {
+                let rma = cfg.mode == Mode::RmaArarArar;
+                for g in &inner_groups {
+                    if rma {
+                        rma_ring_schedule(&mut t, &topo, g, cfg);
+                    } else {
+                        ring_schedule(&mut t, &topo, g, cfg);
+                    }
+                }
+                if cfg.outer_freq > 0 && epoch % cfg.outer_freq as u64 == 0 {
+                    ring_schedule(&mut t, &topo, &outer, cfg);
+                }
+            }
+            Mode::Horovod => {
+                // Barrier then bandwidth-optimal chunked ring.
+                let tmax = t.iter().cloned().fold(0.0, f64::max);
+                let ring = cfg
+                    .net
+                    .chunked_ring_s(n, cfg.grad_bytes, topo.nodes() > 1);
+                for v in t.iter_mut() {
+                    *v = tmax + ring;
+                }
+            }
+            Mode::Hierarchical => {
+                // Reduce to masters (sequential recvs), ring masters,
+                // broadcast back.
+                let mut master_t: Vec<f64> = inner_groups
+                    .iter()
+                    .map(|g| {
+                        let m = g[0];
+                        let mut tm = t[m];
+                        for &r in &g[1..] {
+                            tm = tm.max(t[r] + cfg.net.p2p_s(&topo, r, m, cfg.grad_bytes));
+                        }
+                        tm
+                    })
+                    .collect();
+                schedule_ring_over(&mut master_t, &outer, &topo, cfg);
+                for (gi, g) in inner_groups.iter().enumerate() {
+                    for &r in g {
+                        t[r] = master_t[gi]
+                            + if r == g[0] {
+                                0.0
+                            } else {
+                                cfg.net.p2p_s(&topo, g[0], r, cfg.grad_bytes)
+                            };
+                    }
+                }
+            }
+            Mode::DoubleBinaryTree => {
+                // Tree depth * up+down point-to-point hops (inter-node
+                // dominated); all ranks complete together at the root's
+                // broadcast completion.
+                let depth = (n as f64).log2().ceil().max(1.0);
+                let hop = cfg.net.p2p_s(&topo, 0, cfg.gpus_per_node.min(n - 1), cfg.grad_bytes);
+                let tmax = t.iter().cloned().fold(0.0, f64::max);
+                for v in t.iter_mut() {
+                    *v = tmax + 2.0 * depth * hop;
+                }
+            }
+        }
+        comm_time += t.iter().sum::<f64>() - before;
+    }
+
+    let simulated_s = t.iter().cloned().fold(0.0, f64::max);
+    let scale = cfg.epochs as f64 / sim_epochs as f64;
+    let total_s = simulated_s * scale;
+    let events = (n as u64 * cfg.disc_batch as u64 * cfg.epochs) as f64;
+    SimResult {
+        total_s,
+        simulated_s,
+        sim_epochs,
+        analysis_rate: events / total_s,
+        comm_fraction: (comm_time / (n as f64)) / simulated_s,
+    }
+}
+
+/// Blocking unchunked ring over `members`: the dataflow recurrence of
+/// Algorithm 1 — at each step a rank proceeds once its predecessor's
+/// message (sent at the predecessor's step time) has arrived.
+fn ring_schedule(t: &mut [f64], topo: &Topology, members: &[usize], cfg: &SimConfig) {
+    let g = members.len();
+    if g <= 1 {
+        return;
+    }
+    let mut s: Vec<f64> = members.iter().map(|&r| t[r]).collect();
+    let mut next = vec![0.0f64; g];
+    for _step in 0..g - 1 {
+        for (i, &r) in members.iter().enumerate() {
+            let ip = (i + g - 1) % g;
+            let prev_rank = members[ip];
+            let arrival = s[ip] + cfg.net.p2p_s(topo, prev_rank, r, cfg.grad_bytes);
+            next[i] = s[i].max(arrival);
+        }
+        s.copy_from_slice(&next);
+    }
+    for (i, &r) in members.iter().enumerate() {
+        t[r] = s[i];
+    }
+}
+
+/// Same recurrence over an arbitrary clock vector indexed like `members`.
+fn schedule_ring_over(clocks: &mut [f64], members: &[usize], topo: &Topology, cfg: &SimConfig) {
+    let g = clocks.len();
+    if g <= 1 {
+        return;
+    }
+    let mut next = vec![0.0f64; g];
+    for _step in 0..g - 1 {
+        for i in 0..g {
+            let ip = (i + g - 1) % g;
+            let arrival =
+                clocks[ip] + cfg.net.p2p_s(topo, members[ip], members[i], cfg.grad_bytes);
+            next[i] = clocks[i].max(arrival);
+        }
+        clocks.copy_from_slice(&next);
+    }
+}
+
+/// RMA ring: no rendezvous — each rank pays only its own put + get costs
+/// for the g-1 steps; a neighbour's lateness shows up as staleness, not as
+/// wait time (Sec. IV-B3).
+fn rma_ring_schedule(t: &mut [f64], topo: &Topology, members: &[usize], cfg: &SimConfig) {
+    let g = members.len();
+    if g <= 1 {
+        return;
+    }
+    for (i, &r) in members.iter().enumerate() {
+        let nxt = members[(i + 1) % g];
+        let prv = members[(i + g - 1) % g];
+        let put = cfg.net.p2p_s(topo, r, nxt, cfg.grad_bytes);
+        let get = cfg.net.p2p_s(topo, prv, r, cfg.grad_bytes);
+        t[r] += (g as f64 - 1.0) * (put + get);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base(mode: Mode, ranks: usize) -> SimConfig {
+        SimConfig {
+            sim_epochs: 64,
+            epochs: 64,
+            compute: ComputeModel::fixed(0.03),
+            ..SimConfig::paper(mode, ranks)
+        }
+    }
+
+    #[test]
+    fn ensemble_time_is_pure_compute() {
+        let r = simulate(&base(Mode::Ensemble, 8));
+        let staging = NetModel::paper_like().staging_s(51_206 * 4);
+        assert!((r.simulated_s - 64.0 * (0.03 + staging)).abs() < 1e-9);
+        assert_eq!(r.comm_fraction, 0.0);
+    }
+
+    #[test]
+    fn conv_arar_grows_with_ranks() {
+        let t4 = simulate(&base(Mode::ConvArar, 4)).total_s;
+        let t64 = simulate(&base(Mode::ConvArar, 64)).total_s;
+        let t256 = simulate(&base(Mode::ConvArar, 256)).total_s;
+        assert!(t64 > t4);
+        // Paper scale note: Fig 12's ~40x gain over 100x more ranks
+        // implies total-time growth of ~2.5x from 4 to 400 ranks.
+        assert!(t256 > t64 * 1.3, "t64={t64} t256={t256}");
+        assert!(t256 > t4 * 1.6, "t4={t4} t256={t256}");
+    }
+
+    #[test]
+    fn grouped_is_nearly_flat_with_ranks() {
+        let t4 = simulate(&base(Mode::ArarArar, 4)).total_s;
+        let t256 = simulate(&base(Mode::ArarArar, 256)).total_s;
+        // Fig 11: "nearly no dependency" on ranks.
+        assert!(t256 < t4 * 1.6, "t4={t4} t256={t256}");
+    }
+
+    #[test]
+    fn rma_never_slower_than_blocking_grouped_under_jitter() {
+        let mk = |mode| SimConfig {
+            compute: ComputeModel::with_jitter(0.03, 0.4),
+            ..base(mode, 64)
+        };
+        let blocking = simulate(&mk(Mode::ArarArar)).total_s;
+        let rma = simulate(&mk(Mode::RmaArarArar)).total_s;
+        assert!(rma <= blocking * 1.05, "rma={rma} blocking={blocking}");
+    }
+
+    #[test]
+    fn analysis_rate_matches_eq9() {
+        let cfg = base(Mode::Ensemble, 8);
+        let r = simulate(&cfg);
+        let events = 8.0 * cfg.disc_batch as f64 * cfg.epochs as f64;
+        assert!((r.analysis_rate - events / r.total_s).abs() / r.analysis_rate < 1e-9);
+    }
+
+    #[test]
+    fn extrapolation_scales_linearly() {
+        let mut cfg = base(Mode::ConvArar, 16);
+        cfg.epochs = 6400; // 100x window
+        let r = simulate(&cfg);
+        assert_eq!(r.sim_epochs, 64);
+        assert!((r.total_s / r.simulated_s - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn horovod_barrier_costs_under_jitter() {
+        // With jitter, the barrier makes horovod slower than ensemble.
+        let mk = |mode| SimConfig {
+            compute: ComputeModel::with_jitter(0.03, 0.5),
+            ..base(mode, 32)
+        };
+        let hvd = simulate(&mk(Mode::Horovod)).total_s;
+        let ens = simulate(&mk(Mode::Ensemble)).total_s;
+        assert!(hvd > ens);
+    }
+
+    #[test]
+    fn tree_beats_conventional_ring_at_scale() {
+        let tree = simulate(&base(Mode::DoubleBinaryTree, 256)).total_s;
+        let ring = simulate(&base(Mode::ConvArar, 256)).total_s;
+        assert!(tree < ring, "tree={tree} ring={ring}");
+    }
+
+    #[test]
+    fn hierarchical_close_to_grouped_scaling() {
+        let h64 = simulate(&base(Mode::Hierarchical, 64)).total_s;
+        let h256 = simulate(&base(Mode::Hierarchical, 256)).total_s;
+        // bounded by the master-ring growth, far below conv ARAR growth
+        let conv256 = simulate(&base(Mode::ConvArar, 256)).total_s;
+        assert!(h256 < conv256);
+        assert!(h256 < h64 * 4.0);
+    }
+}

@@ -1,0 +1,108 @@
+//! Rank sweeps for the scaling figures.
+//!
+//! Fig 11: total training time vs ranks for conventional ARAR, grouped
+//! ARAR and grouped RMA-ARAR. Fig 12: the analysis rate (eq 9) for the
+//! same sweep, including the single-GPU reference line and the x400 gain
+//! factors the paper quotes (~40x conventional, ~80x grouped).
+
+use crate::config::Mode;
+
+use super::schedule::{simulate, SimConfig, SimResult};
+use super::workload::ComputeModel;
+
+/// The paper's rank grid (Polaris, 4 GPUs/node: 1 to 100 nodes).
+pub const PAPER_RANKS: &[usize] = &[4, 8, 12, 20, 28, 40, 60, 100, 200, 400];
+
+/// The three modes of Fig 11/12.
+pub const PAPER_MODES: &[Mode] = &[Mode::ConvArar, Mode::ArarArar, Mode::RmaArarArar];
+
+/// One sweep row.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepPoint {
+    pub mode: Mode,
+    pub ranks: usize,
+    pub result: SimResult,
+}
+
+/// Run the sweep for one mode.
+pub fn sweep_mode(mode: Mode, ranks: &[usize], compute: ComputeModel) -> Vec<SweepPoint> {
+    ranks
+        .iter()
+        .map(|&n| {
+            let cfg = SimConfig {
+                compute,
+                ..SimConfig::paper(mode, n)
+            };
+            SweepPoint {
+                mode,
+                ranks: n,
+                result: simulate(&cfg),
+            }
+        })
+        .collect()
+}
+
+/// The single-GPU reference analysis rate (dashed line of Fig 12).
+pub fn single_gpu_rate(compute: ComputeModel) -> f64 {
+    let cfg = SimConfig {
+        compute,
+        ..SimConfig::paper(Mode::Ensemble, 1)
+    };
+    simulate(&cfg).analysis_rate
+}
+
+/// Gain factor of the largest-rank point over the smallest (the paper
+/// quotes the 4 -> 400 GPU gain).
+pub fn rate_gain(points: &[SweepPoint]) -> f64 {
+    let first = points.first().expect("empty sweep");
+    let last = points.last().expect("empty sweep");
+    last.result.analysis_rate / first.result.analysis_rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn compute() -> ComputeModel {
+        ComputeModel::with_jitter(0.035, 0.15)
+    }
+
+    #[test]
+    fn fig11_shape_conv_grows_grouped_flat() {
+        let conv = sweep_mode(Mode::ConvArar, PAPER_RANKS, compute());
+        let grp = sweep_mode(Mode::ArarArar, PAPER_RANKS, compute());
+        // conventional grows visibly from 4 to 400 ranks (the paper's
+        // ~40x rate gain over 100x ranks implies ~2.5x time growth)
+        let conv_growth = conv.last().unwrap().result.total_s / conv[0].result.total_s;
+        assert!(conv_growth > 1.8, "conv growth {conv_growth}");
+        // grouped stays nearly flat
+        let grp_growth = grp.last().unwrap().result.total_s / grp[0].result.total_s;
+        assert!(grp_growth < 1.5, "grouped growth {grp_growth}");
+    }
+
+    #[test]
+    fn fig12_shape_gains_and_saturation() {
+        let conv = sweep_mode(Mode::ConvArar, PAPER_RANKS, compute());
+        let grp = sweep_mode(Mode::ArarArar, PAPER_RANKS, compute());
+        let rma = sweep_mode(Mode::RmaArarArar, PAPER_RANKS, compute());
+        let g_conv = rate_gain(&conv);
+        let g_grp = rate_gain(&grp);
+        let g_rma = rate_gain(&rma);
+        // Paper: conventional gains ~40x from 4->400; grouping doubles it.
+        assert!(g_conv > 10.0 && g_conv < 100.0, "conv gain {g_conv}");
+        assert!(g_grp > 1.5 * g_conv, "grouped {g_grp} vs conv {g_conv}");
+        assert!(g_rma > 1.5 * g_conv, "rma {g_rma} vs conv {g_conv}");
+        // Rates similar for small rank counts (paper: N ≲ 28).
+        let r_small_conv = conv[1].result.analysis_rate;
+        let r_small_grp = grp[1].result.analysis_rate;
+        let ratio = r_small_grp / r_small_conv;
+        assert!((0.8..1.6).contains(&ratio), "small-N ratio {ratio}");
+    }
+
+    #[test]
+    fn single_gpu_reference_is_lowest() {
+        let one = single_gpu_rate(compute());
+        let grp = sweep_mode(Mode::ArarArar, &[4], compute());
+        assert!(grp[0].result.analysis_rate > one);
+    }
+}

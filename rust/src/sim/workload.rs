@@ -1,0 +1,103 @@
+//! Per-epoch compute-time model.
+//!
+//! One epoch's compute on a rank = generator forward + pipeline sampling +
+//! discriminator fwd/bwd + generator bwd. The paper highlights that the
+//! pipeline's sampler can dominate and *stall* individual ranks (up to
+//! ~1 min/epoch on one prototype) — the jitter that motivates RMA. We
+//! model epoch compute as lognormal multiplicative jitter around a
+//! calibrated mean plus occasional heavy stalls.
+
+use crate::util::rng::Rng;
+
+/// Compute-time distribution for one rank-epoch.
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeModel {
+    /// Mean epoch compute seconds (calibrated from real step times).
+    pub mean_s: f64,
+    /// Lognormal sigma of the multiplicative jitter (0 = deterministic).
+    pub jitter_sigma: f64,
+    /// Probability an epoch suffers a pipeline stall.
+    pub stall_prob: f64,
+    /// Stall duration in seconds.
+    pub stall_s: f64,
+}
+
+impl ComputeModel {
+    /// Deterministic workload (unit tests, analytic checks).
+    pub fn fixed(mean_s: f64) -> ComputeModel {
+        ComputeModel {
+            mean_s,
+            jitter_sigma: 0.0,
+            stall_prob: 0.0,
+            stall_s: 0.0,
+        }
+    }
+
+    /// Polaris-like default for the paper's workload: modest jitter plus
+    /// rare stalls (the paper's pipeline prototypes showed large per-rank
+    /// variation).
+    pub fn with_jitter(mean_s: f64, jitter_sigma: f64) -> ComputeModel {
+        ComputeModel {
+            mean_s,
+            jitter_sigma,
+            stall_prob: 0.0,
+            stall_s: 0.0,
+        }
+    }
+
+    pub fn with_stalls(mut self, prob: f64, stall_s: f64) -> ComputeModel {
+        self.stall_prob = prob;
+        self.stall_s = stall_s;
+        self
+    }
+
+    /// Draw one epoch's compute seconds.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        let mut t = if self.jitter_sigma > 0.0 {
+            // lognormal with mean self.mean_s: mu = ln(mean) - sigma^2/2
+            let mu = self.mean_s.ln() - 0.5 * self.jitter_sigma * self.jitter_sigma;
+            rng.lognormal(mu, self.jitter_sigma)
+        } else {
+            self.mean_s
+        };
+        if self.stall_prob > 0.0 && rng.uniform() < self.stall_prob {
+            t += self.stall_s;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_is_deterministic() {
+        let m = ComputeModel::fixed(0.25);
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            assert_eq!(m.sample(&mut rng), 0.25);
+        }
+    }
+
+    #[test]
+    fn lognormal_preserves_mean() {
+        let m = ComputeModel::with_jitter(0.1, 0.3);
+        let mut rng = Rng::new(2);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| m.sample(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 0.1).abs() / 0.1 < 0.03, "mean={mean}");
+    }
+
+    #[test]
+    fn stalls_raise_the_tail() {
+        let base = ComputeModel::with_jitter(0.1, 0.1);
+        let stalled = base.with_stalls(0.05, 2.0);
+        let mut rng = Rng::new(3);
+        let n = 20_000;
+        let max_stalled = (0..n).map(|_| stalled.sample(&mut rng)).fold(0.0, f64::max);
+        let mut rng = Rng::new(3);
+        let max_base = (0..n).map(|_| base.sample(&mut rng)).fold(0.0, f64::max);
+        assert!(max_stalled > max_base + 1.0);
+    }
+}

@@ -1,0 +1,230 @@
+//! Tensor fusion: packing many small gradient tensors into large transfer
+//! buffers.
+//!
+//! The paper excludes 1-D bias gradients from the ring transfer because
+//! small tensors slow the ring-all-reduce down, and names *tensor fusion*
+//! ("combine small tensors into a larger one", Sec. V-C / VII) as planned
+//! future work. This module implements it: a [`FusionPlan`] maps a set of
+//! named gradient slices (from the manifest layer layout) into fixed-size
+//! fused buckets; the collective then moves whole buckets instead of
+//! individual tensors, amortizing the per-message latency `alpha` of the
+//! link.
+
+use crate::util::error::{Error, Result};
+
+/// One logical tensor inside the flat gradient vector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Segment {
+    pub name: String,
+    /// Offset into the flat gradient vector.
+    pub offset: usize,
+    /// Element count.
+    pub len: usize,
+    /// Bias segments can be excluded from transfer (paper Sec. V-C).
+    pub is_bias: bool,
+}
+
+/// A fused bucket: a contiguous run of segments packed together.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bucket {
+    /// Indices into the plan's segment list.
+    pub segments: Vec<usize>,
+    /// Total elements in the bucket.
+    pub len: usize,
+}
+
+/// A packing of segments into buckets of at most `bucket_elems` elements.
+#[derive(Clone, Debug)]
+pub struct FusionPlan {
+    pub segments: Vec<Segment>,
+    pub buckets: Vec<Bucket>,
+    pub include_bias: bool,
+}
+
+impl FusionPlan {
+    /// Greedy first-fit packing in segment order. `bucket_elems = 0` means
+    /// a single bucket holding everything (classic "one big tensor").
+    pub fn build(segments: Vec<Segment>, bucket_elems: usize, include_bias: bool) -> FusionPlan {
+        let mut buckets: Vec<Bucket> = Vec::new();
+        for (i, seg) in segments.iter().enumerate() {
+            if seg.is_bias && !include_bias {
+                continue;
+            }
+            let fits = buckets.last().map_or(false, |b| {
+                bucket_elems == 0 || b.len + seg.len <= bucket_elems
+            });
+            if fits {
+                let b = buckets.last_mut().unwrap();
+                b.segments.push(i);
+                b.len += seg.len;
+            } else {
+                buckets.push(Bucket {
+                    segments: vec![i],
+                    len: seg.len,
+                });
+            }
+        }
+        FusionPlan {
+            segments,
+            buckets,
+            include_bias,
+        }
+    }
+
+    /// Total elements that travel over the wire per ring step.
+    pub fn transfer_elems(&self) -> usize {
+        self.buckets.iter().map(|b| b.len).sum()
+    }
+
+    /// Number of messages per ring step (one per bucket).
+    pub fn message_count(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Gather the plan's segments from a flat gradient vector into a packed
+    /// transfer buffer (reused across epochs — no allocation when `out` has
+    /// capacity).
+    pub fn pack(&self, grads: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        out.clear();
+        out.reserve(self.transfer_elems());
+        for b in &self.buckets {
+            for &si in &b.segments {
+                let s = &self.segments[si];
+                let end = s.offset + s.len;
+                if end > grads.len() {
+                    return Err(Error::Shape(format!(
+                        "segment '{}' [{}, {}) out of bounds for grads of len {}",
+                        s.name,
+                        s.offset,
+                        end,
+                        grads.len()
+                    )));
+                }
+                out.extend_from_slice(&grads[s.offset..end]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Scatter a packed transfer buffer back into the flat gradient vector.
+    pub fn unpack(&self, packed: &[f32], grads: &mut [f32]) -> Result<()> {
+        if packed.len() != self.transfer_elems() {
+            return Err(Error::Shape(format!(
+                "packed buffer has {} elements, plan expects {}",
+                packed.len(),
+                self.transfer_elems()
+            )));
+        }
+        let mut pos = 0;
+        for b in &self.buckets {
+            for &si in &b.segments {
+                let s = &self.segments[si];
+                grads[s.offset..s.offset + s.len].copy_from_slice(&packed[pos..pos + s.len]);
+                pos += s.len;
+            }
+        }
+        Ok(())
+    }
+
+    /// Element indices covered by the plan (used by tests and by the
+    /// "only transferred slices get averaged" logic in the trainer).
+    pub fn covered_indices(&self) -> Vec<usize> {
+        let mut idx = Vec::with_capacity(self.transfer_elems());
+        for b in &self.buckets {
+            for &si in &b.segments {
+                let s = &self.segments[si];
+                idx.extend(s.offset..s.offset + s.len);
+            }
+        }
+        idx
+    }
+}
+
+/// Build segments from a manifest-style layer layout.
+/// `layout` entries: (w_offset, w_len, b_offset, b_len) per layer.
+pub fn segments_from_layout(layout: &[(usize, usize, usize, usize)]) -> Vec<Segment> {
+    let mut segs = Vec::with_capacity(layout.len() * 2);
+    for (i, &(w_off, w_len, b_off, b_len)) in layout.iter().enumerate() {
+        segs.push(Segment {
+            name: format!("layer{i}.w"),
+            offset: w_off,
+            len: w_len,
+            is_bias: false,
+        });
+        segs.push(Segment {
+            name: format!("layer{i}.b"),
+            offset: b_off,
+            len: b_len,
+            is_bias: true,
+        });
+    }
+    segs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout3() -> Vec<Segment> {
+        segments_from_layout(&[(0, 8, 8, 2), (10, 6, 16, 3), (19, 4, 23, 1)])
+    }
+
+    #[test]
+    fn excludes_bias_by_default_like_paper() {
+        let plan = FusionPlan::build(layout3(), 0, false);
+        assert_eq!(plan.transfer_elems(), 8 + 6 + 4);
+        assert_eq!(plan.message_count(), 1); // one big fused bucket
+    }
+
+    #[test]
+    fn bucket_size_limits_fusion() {
+        let plan = FusionPlan::build(layout3(), 8, false);
+        // 8 fills a bucket, 6 and 4 cannot share an 8-element bucket.
+        assert_eq!(plan.message_count(), 3);
+        let plan = FusionPlan::build(layout3(), 10, false);
+        assert_eq!(plan.message_count(), 2); // [8], [6+4]
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let plan = FusionPlan::build(layout3(), 0, true);
+        let grads: Vec<f32> = (0..24).map(|x| x as f32).collect();
+        let mut packed = Vec::new();
+        plan.pack(&grads, &mut packed).unwrap();
+        assert_eq!(packed.len(), plan.transfer_elems());
+        let mut out = vec![0.0; 24];
+        plan.unpack(&packed, &mut out).unwrap();
+        for &i in &plan.covered_indices() {
+            assert_eq!(out[i], grads[i]);
+        }
+    }
+
+    #[test]
+    fn unpack_only_touches_covered() {
+        let plan = FusionPlan::build(layout3(), 0, false); // weights only
+        let grads: Vec<f32> = (0..24).map(|x| x as f32).collect();
+        let mut packed = Vec::new();
+        plan.pack(&grads, &mut packed).unwrap();
+        let mut out = vec![-1.0; 24];
+        plan.unpack(&packed, &mut out).unwrap();
+        // bias slots untouched
+        assert_eq!(out[8], -1.0);
+        assert_eq!(out[9], -1.0);
+        assert_eq!(out[0], 0.0);
+    }
+
+    #[test]
+    fn pack_bounds_checked() {
+        let plan = FusionPlan::build(layout3(), 0, true);
+        let short = vec![0.0; 10];
+        let mut packed = Vec::new();
+        assert!(plan.pack(&short, &mut packed).is_err());
+    }
+
+    #[test]
+    fn unpack_length_checked() {
+        let plan = FusionPlan::build(layout3(), 0, false);
+        let mut out = vec![0.0; 24];
+        assert!(plan.unpack(&[0.0; 3], &mut out).is_err());
+    }
+}

@@ -1,0 +1,125 @@
+//! Flat f32 tensors and the numeric helpers the coordinator hot path uses.
+//!
+//! Model parameters, gradients and event batches all live as contiguous
+//! `Vec<f32>` buffers — that is what the ring-all-reduce moves, what the RMA
+//! mailboxes store, and what the PJRT runtime consumes. Shapes are carried
+//! separately (from the artifact manifest) and only checked at module
+//! boundaries.
+
+pub mod fusion;
+pub mod ops;
+pub mod stats;
+
+use crate::util::error::{Error, Result};
+
+/// A dense f32 tensor: contiguous data + row-major shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    data: Vec<f32>,
+    shape: Vec<usize>,
+}
+
+impl Tensor {
+    /// Build from data + shape (validates element count).
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} needs {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Tensor { data, shape })
+    }
+
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            data: vec![0.0; n],
+            shape: shape.to_vec(),
+        }
+    }
+
+    /// 1-D tensor from a vec.
+    pub fn from_vec(data: Vec<f32>) -> Tensor {
+        let n = data.len();
+        Tensor {
+            data,
+            shape: vec![n],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reshape in place (element count must match).
+    pub fn reshape(&mut self, shape: &[usize]) -> Result<()> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {} elements to {:?}",
+                self.data.len(),
+                shape
+            )));
+        }
+        self.shape = shape.to_vec();
+        Ok(())
+    }
+
+    /// Row-major 2-D indexing (debug helper).
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_shape() {
+        assert!(Tensor::new(vec![1.0; 6], vec![2, 3]).is_ok());
+        assert!(Tensor::new(vec![1.0; 5], vec![2, 3]).is_err());
+    }
+
+    #[test]
+    fn zeros_and_reshape() {
+        let mut t = Tensor::zeros(&[4, 2]);
+        assert_eq!(t.len(), 8);
+        t.reshape(&[2, 4]).unwrap();
+        assert_eq!(t.shape(), &[2, 4]);
+        assert!(t.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn at2_row_major() {
+        let t = Tensor::new((0..6).map(|x| x as f32).collect(), vec![2, 3]).unwrap();
+        assert_eq!(t.at2(0, 0), 0.0);
+        assert_eq!(t.at2(1, 2), 5.0);
+    }
+}

@@ -1,0 +1,119 @@
+//! Elementwise slice ops used on the coordinator hot path.
+//!
+//! These run on every epoch of every rank (gradient accumulation, averaging,
+//! optimizer updates), so they are written as simple, auto-vectorizable
+//! loops over `&[f32]` with debug-only shape checks. No allocation: callers
+//! own the buffers.
+
+/// `y += x` (ring-all-reduce accumulate step).
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (a, b) in y.iter_mut().zip(x) {
+        *a += b;
+    }
+}
+
+/// `y = x` (buffer reuse without reallocating).
+pub fn copy_from(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    y.copy_from_slice(x);
+}
+
+/// `y *= s` (gradient averaging after the ring pass).
+pub fn scale(y: &mut [f32], s: f32) {
+    for a in y.iter_mut() {
+        *a *= s;
+    }
+}
+
+/// `y += alpha * x` (SGD step, fused accumulate-scale).
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (a, b) in y.iter_mut().zip(x) {
+        *a += alpha * b;
+    }
+}
+
+/// Dot product.
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| (*a as f64) * (*b as f64)).sum()
+}
+
+/// L2 norm.
+pub fn norm2(x: &[f32]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// Max |x_i|.
+pub fn max_abs(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+/// Elementwise allclose with absolute + relative tolerance.
+pub fn allclose(x: &[f32], y: &[f32], rtol: f32, atol: f32) -> bool {
+    x.len() == y.len()
+        && x.iter()
+            .zip(y)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+}
+
+/// True if every element is finite (NaN/Inf guard after a training step).
+pub fn all_finite(x: &[f32]) -> bool {
+    x.iter().all(|v| v.is_finite())
+}
+
+/// Mean of a slice.
+pub fn mean(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().map(|&v| v as f64).sum::<f64>() / x.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_assign_and_scale() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        add_assign(&mut y, &[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![2.0, 3.0, 4.0]);
+        scale(&mut y, 0.5);
+        assert_eq!(y, vec![1.0, 1.5, 2.0]);
+    }
+
+    #[test]
+    fn axpy_matches_manual() {
+        let mut y = vec![1.0, 1.0];
+        axpy(&mut y, -0.5, &[2.0, 4.0]);
+        assert_eq!(y, vec![0.0, -1.0]);
+    }
+
+    #[test]
+    fn dot_and_norm() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        assert!(allclose(&[1.0, 2.0], &[1.0 + 1e-6, 2.0], 1e-5, 1e-5));
+        assert!(!allclose(&[1.0], &[1.1], 1e-5, 1e-5));
+        assert!(!allclose(&[1.0], &[1.0, 2.0], 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn finite_guard() {
+        assert!(all_finite(&[0.0, -1.0, 3.5]));
+        assert!(!all_finite(&[0.0, f32::NAN]));
+        assert!(!all_finite(&[f32::INFINITY]));
+    }
+
+    #[test]
+    fn mean_empty_is_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+    }
+}

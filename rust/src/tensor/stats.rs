@@ -1,0 +1,212 @@
+//! Statistics for the convergence / ensemble analyses.
+//!
+//! Implements the quantities the paper reports: normalized residual means
+//! and standard deviations (Figs 8, 10, 13-16), RMSE-vs-spread (Fig 9),
+//! and general summaries (percentiles, histograms) used by the benches.
+
+/// Running mean/variance (Welford). Numerically stable for the long
+/// time-series the metrics recorder accumulates.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn var(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Mean of an f64 slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Root mean square (the paper's Fig 9 RMSE over residuals).
+pub fn rms(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x * x).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolated percentile (p in [0,1]) of unsorted data.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = p.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = idx - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Fixed-width histogram over [lo, hi) with `bins` buckets (under/overflow
+/// clamp to the edge buckets).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Histogram {
+        assert!(hi > lo && bins > 0);
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; bins],
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let t = (x - self.lo) / (self.hi - self.lo);
+        let idx = ((t * bins as f64).floor() as i64).clamp(0, bins as i64 - 1) as usize;
+        self.counts[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Mode bucket center.
+    pub fn mode_center(&self) -> f64 {
+        let (i, _) = self
+            .counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, c)| **c)
+            .unwrap();
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        self.lo + (i as f64 + 0.5) * w
+    }
+}
+
+/// 95% confidence ellipse axes from a 2-D sample cloud ((x, y) pairs) — the
+/// Fig 9 contour summary. Returns (mean_x, mean_y, semiaxis_x, semiaxis_y,
+/// correlation).
+pub fn confidence_ellipse_95(points: &[(f64, f64)]) -> (f64, f64, f64, f64, f64) {
+    assert!(points.len() >= 2);
+    let n = points.len() as f64;
+    let mx = points.iter().map(|p| p.0).sum::<f64>() / n;
+    let my = points.iter().map(|p| p.1).sum::<f64>() / n;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    let mut sxy = 0.0;
+    for (x, y) in points {
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+        sxy += (x - mx) * (y - my);
+    }
+    sxx /= n;
+    syy /= n;
+    sxy /= n;
+    let corr = if sxx > 0.0 && syy > 0.0 {
+        sxy / (sxx.sqrt() * syy.sqrt())
+    } else {
+        0.0
+    };
+    // chi2(2 dof, 95%) = 5.991; semi-axes of the axis-aligned bounding
+    // ellipse.
+    let k = 5.991f64.sqrt();
+    (mx, my, k * sxx.sqrt(), k * syy.sqrt(), corr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.std() - std(&xs)).abs() < 1e-12);
+        assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn rms_of_constant() {
+        assert!((rms(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(rms(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 1.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts_and_clamps() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [-5.0, 0.5, 5.5, 9.9, 50.0] {
+            h.push(x);
+        }
+        assert_eq!(h.total(), 5);
+        assert_eq!(h.counts[0], 2); // -5 clamped + 0.5
+        assert_eq!(h.counts[9], 2); // 9.9 + 50 clamped
+    }
+
+    #[test]
+    fn ellipse_axes_scale_with_spread() {
+        let tight: Vec<(f64, f64)> = (0..100)
+            .map(|i| ((i % 10) as f64 * 0.01, (i / 10) as f64 * 0.01))
+            .collect();
+        let wide: Vec<(f64, f64)> = tight.iter().map(|(x, y)| (x * 10.0, y * 10.0)).collect();
+        let t = confidence_ellipse_95(&tight);
+        let w = confidence_ellipse_95(&wide);
+        assert!(w.2 > t.2 * 5.0);
+        assert!(w.3 > t.3 * 5.0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iterations with percentile reporting, and a
+//! table printer shared by the per-figure bench binaries so every bench
+//! emits the same `name  p50  p90  mean  iters` row format plus
+//! figure-style data tables for EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p90: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>10} {:>10} {:>8}",
+            self.name,
+            fmt_dur(self.p50),
+            fmt_dur(self.p90),
+            fmt_dur(self.mean),
+            self.iters
+        )
+    }
+}
+
+/// Human duration formatting (ns/µs/ms/s).
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+/// Bench runner: warms up for `warmup` iterations then times `iters`.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    summarize(name, samples)
+}
+
+/// Time-budgeted runner: iterates until `budget` elapses (at least once).
+pub fn bench_for<F: FnMut()>(name: &str, warmup: usize, budget: Duration, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if start.elapsed() >= budget {
+            break;
+        }
+    }
+    summarize(name, samples)
+}
+
+fn summarize(name: &str, mut samples: Vec<Duration>) -> BenchResult {
+    samples.sort();
+    let iters = samples.len();
+    let total: Duration = samples.iter().sum();
+    let pct = |p: f64| samples[((iters as f64 - 1.0) * p) as usize];
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        p50: pct(0.50),
+        p90: pct(0.90),
+        min: samples[0],
+        max: samples[iters - 1],
+    }
+}
+
+/// Print a standard bench table header.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<44} {:>10} {:>10} {:>10} {:>8}",
+        "benchmark", "p50", "p90", "mean", "iters"
+    );
+    println!("{}", "-".repeat(88));
+}
+
+/// Print a figure-style data table (series of (x, columns...) rows) in a
+/// format that is easy to diff against the paper's plots.
+pub fn data_table(title: &str, x_label: &str, col_labels: &[&str], rows: &[(f64, Vec<f64>)]) {
+    println!("\n--- {title} ---");
+    print!("{x_label:>12}");
+    for c in col_labels {
+        print!(" {c:>16}");
+    }
+    println!();
+    for (x, cols) in rows {
+        print!("{x:>12.3}");
+        for v in cols {
+            print!(" {v:>16.6}");
+        }
+        println!();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop-ish", 2, 32, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(r.iters, 32);
+        assert!(r.min <= r.p50 && r.p50 <= r.p90 && r.p90 <= r.max);
+        assert!(r.mean >= r.min && r.mean <= r.max);
+    }
+
+    #[test]
+    fn bench_for_respects_budget_loosely() {
+        let t0 = Instant::now();
+        let r = bench_for("sleepy", 0, Duration::from_millis(20), || {
+            std::thread::sleep(Duration::from_millis(2));
+        });
+        assert!(r.iters >= 1);
+        assert!(t0.elapsed() < Duration::from_secs(2));
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert_eq!(fmt_dur(Duration::from_nanos(12)), "12ns");
+        assert!(fmt_dur(Duration::from_micros(12)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(12)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+}

@@ -1,0 +1,227 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options and
+//! positional arguments, with typed accessors and generated usage text.
+
+use std::collections::BTreeMap;
+
+use super::error::{Error, Result};
+
+/// Declarative option spec used for usage text.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw arg list (no program name). `specs` identifies which
+    /// `--name`s are flags (no value).
+    pub fn parse(raw: &[String], specs: &[OptSpec]) -> Result<Args> {
+        let is_flag = |name: &str| {
+            specs
+                .iter()
+                .any(|s| s.is_flag && s.name == name)
+        };
+        let known = |name: &str| specs.iter().any(|s| s.name == name);
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    if !known(k) {
+                        return Err(Error::Usage(format!("unknown option --{k}")));
+                    }
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if is_flag(body) {
+                    out.flags.push(body.to_string());
+                } else if known(body) {
+                    i += 1;
+                    let v = raw
+                        .get(i)
+                        .ok_or_else(|| Error::Usage(format!("--{body} needs a value")))?;
+                    out.opts.insert(body.to_string(), v.clone());
+                } else {
+                    return Err(Error::Usage(format!("unknown option --{body}")));
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{name} expects a number, got '{v}'"))),
+        }
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    /// Comma-separated usize list.
+    pub fn usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .map_err(|_| Error::Usage(format!("--{name}: bad integer '{t}'")))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render usage text for a subcommand.
+pub fn usage(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\noptions:\n");
+    for spec in specs {
+        let head = if spec.is_flag {
+            format!("  --{}", spec.name)
+        } else {
+            format!("  --{} <v>", spec.name)
+        };
+        s.push_str(&format!("{head:<28}{}", spec.help));
+        if let Some(d) = spec.default {
+            s.push_str(&format!(" [default: {d}]"));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Shorthand for building an option spec.
+pub const fn opt(name: &'static str, help: &'static str, default: Option<&'static str>) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        default,
+        is_flag: false,
+    }
+}
+
+/// Shorthand for building a flag spec.
+pub const fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        default: None,
+        is_flag: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            opt("ranks", "number of ranks", Some("8")),
+            opt("mode", "training mode", Some("arar")),
+            flag("paper-scale", "full Table III config"),
+        ]
+    }
+
+    fn parse(args: &[&str]) -> Result<Args> {
+        let raw: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+        Args::parse(&raw, &specs())
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let a = parse(&["--ranks", "16", "--mode=rma", "--paper-scale", "extra"]).unwrap();
+        assert_eq!(a.usize("ranks", 8).unwrap(), 16);
+        assert_eq!(a.get("mode"), Some("rma"));
+        assert!(a.flag("paper-scale"));
+        assert_eq!(a.positional(), &["extra".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.usize("ranks", 8).unwrap(), 8);
+        assert!(!a.flag("paper-scale"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse(&["--bogus", "1"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&["--ranks"]).is_err());
+    }
+
+    #[test]
+    fn bad_int_rejected() {
+        let a = parse(&["--ranks", "abc"]).unwrap();
+        assert!(a.usize("ranks", 8).is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = parse(&["--ranks", "1"]).unwrap();
+        assert_eq!(a.usize_list("missing", &[2, 4]).unwrap(), vec![2, 4]);
+        let raw: Vec<String> = vec!["--mode".into(), "2, 4,8".into()];
+        let a = Args::parse(&raw, &specs()).unwrap();
+        assert_eq!(a.usize_list("mode", &[]).unwrap(), vec![2, 4, 8]);
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = usage("train", "train the GAN", &specs());
+        assert!(u.contains("--ranks"));
+        assert!(u.contains("default: 8"));
+    }
+}

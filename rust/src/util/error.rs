@@ -1,0 +1,87 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the SAGIPS library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// I/O failures (artifact files, checkpoints, CSV outputs).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// JSON parse errors (manifest, configs).
+    #[error("json error at byte {offset}: {message}")]
+    Json { offset: usize, message: String },
+
+    /// Configuration validation failures.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// PJRT / XLA runtime failures.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Artifact manifest inconsistencies.
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    /// Communication layer failures (disconnected transport, poisoned
+    /// window, topology misconfiguration).
+    #[error("comm error: {0}")]
+    Comm(String),
+
+    /// Shape mismatches in tensor operations.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Checkpoint encode/decode failures.
+    #[error("checkpoint error: {0}")]
+    Checkpoint(String),
+
+    /// CLI usage errors.
+    #[error("usage error: {0}")]
+    Usage(String),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+impl Error {
+    /// Shorthand constructor for comm errors.
+    pub fn comm(msg: impl Into<String>) -> Self {
+        Error::Comm(msg.into())
+    }
+    /// Shorthand constructor for config errors.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::Config("bad ranks".into());
+        assert_eq!(e.to_string(), "config error: bad ranks");
+        let e = Error::Json {
+            offset: 12,
+            message: "unexpected token".into(),
+        };
+        assert!(e.to_string().contains("byte 12"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

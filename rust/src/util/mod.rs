@@ -1,0 +1,11 @@
+//! Foundational substrates built in-repo (the build is fully offline, so
+//! there is no serde / clap / rand / criterion / proptest — each is replaced
+//! by a small, tested, purpose-built module).
+
+pub mod bench;
+pub mod cli;
+pub mod error;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;

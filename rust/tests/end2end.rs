@@ -1,0 +1,224 @@
+//! Integration: full distributed training through the real artifact set.
+//!
+//! These tests need `make artifacts` to have run; they skip silently when
+//! the manifest is missing (e.g. docs-only checkouts) so `cargo test`
+//! stays meaningful everywhere.
+
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+use sagips::config::{presets, Mode, RunConfig};
+use sagips::coordinator::launcher::{run_training, run_training_with_links};
+use sagips::comm::LinkModel;
+use sagips::model::residuals;
+use sagips::runtime::{RuntimeHandle, RuntimePool};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+/// One shared pool across all tests in this binary (PJRT clients are
+/// expensive; the pool is explicitly designed to be shared).
+fn shared_handle() -> Option<RuntimeHandle> {
+    static POOL: OnceLock<Option<RuntimePool>> = OnceLock::new();
+    POOL.get_or_init(|| artifacts_dir().map(|d| RuntimePool::from_dir(&d, 3).unwrap()))
+        .as_ref()
+        .map(|p| p.handle())
+}
+
+fn quick_cfg(mode: Mode, ranks: usize, epochs: usize) -> RunConfig {
+    let mut cfg = presets::ci_default();
+    cfg.mode = mode;
+    cfg.ranks = ranks;
+    cfg.epochs = epochs;
+    cfg.batch = 16;
+    cfg.data_pool = 1600;
+    cfg.checkpoint_every = epochs / 2;
+    cfg.outer_freq = 5;
+    cfg.runtime_workers = 3;
+    cfg
+}
+
+#[test]
+fn single_rank_training_reduces_losses() {
+    let Some(h) = shared_handle() else { return };
+    let run = run_training(&quick_cfg(Mode::Ensemble, 1, 30), &h).unwrap();
+    // Both loss series exist and are finite.
+    let g = run.metrics.mean_series("gen_loss");
+    assert_eq!(g.len(), 30);
+    assert!(g.values.iter().all(|v| v.is_finite()));
+    assert!(run.final_residuals.is_some());
+    assert!(run.wall_s > 0.0);
+    assert!(run.analysis_rate() > 0.0);
+}
+
+#[test]
+fn all_table2_modes_train_end_to_end() {
+    let Some(h) = shared_handle() else { return };
+    for mode in [
+        Mode::ConvArar,
+        Mode::ArarArar,
+        Mode::RmaArarArar,
+        Mode::Horovod,
+        Mode::Hierarchical,
+        Mode::DoubleBinaryTree,
+    ] {
+        let run = run_training(&quick_cfg(mode, 4, 12), &h)
+            .unwrap_or_else(|e| panic!("{} failed: {e}", mode.name()));
+        let r = run.final_residuals.unwrap();
+        assert!(
+            r.iter().all(|x| x.is_finite()),
+            "{} produced non-finite residuals",
+            mode.name()
+        );
+    }
+}
+
+#[test]
+fn grouped_modes_communicate_less_than_conventional() {
+    let Some(h) = shared_handle() else { return };
+    let conv = run_training(&quick_cfg(Mode::ConvArar, 8, 10), &h).unwrap();
+    let grp = run_training(&quick_cfg(Mode::ArarArar, 8, 10), &h).unwrap();
+    let conv_bytes: usize = conv.comm.iter().map(|c| c.bytes_sent).sum();
+    let grp_bytes: usize = grp.comm.iter().map(|c| c.bytes_sent).sum();
+    assert!(
+        grp_bytes < conv_bytes,
+        "grouped {grp_bytes} >= conventional {conv_bytes}"
+    );
+}
+
+#[test]
+fn bias_gradients_stay_local_weights_are_exchanged() {
+    let Some(h) = shared_handle() else { return };
+    // Weight-only transfer: per-epoch payload is the weight count, not
+    // the full parameter count.
+    let meta = h.manifest().model("paper").unwrap().clone();
+    let weights: usize = meta.gen_layout.iter().map(|l| l.w_len()).sum();
+    let run = run_training(&quick_cfg(Mode::ConvArar, 2, 4), &h).unwrap();
+    // ConvArar at 2 ranks: 1 message per epoch per rank of exactly the
+    // packed weight payload.
+    let per_rank = &run.comm[0];
+    assert_eq!(per_rank.bytes_sent, 4 * weights * 4, "unexpected payload");
+}
+
+#[test]
+fn distributed_run_is_seed_reproducible() {
+    let Some(h) = shared_handle() else { return };
+    let cfg = quick_cfg(Mode::ArarArar, 4, 8);
+    let a = run_training(&cfg, &h).unwrap();
+    let b = run_training(&cfg, &h).unwrap();
+    // Same seed -> identical final generator parameters on every rank.
+    for (sa, sb) in a.states.iter().zip(&b.states) {
+        assert_eq!(sa.gen, sb.gen);
+    }
+    let ra = a.final_residuals.unwrap();
+    let rb = b.final_residuals.unwrap();
+    assert_eq!(ra, rb);
+}
+
+#[test]
+fn different_seeds_differ() {
+    let Some(h) = shared_handle() else { return };
+    let mut cfg = quick_cfg(Mode::ArarArar, 2, 6);
+    let a = run_training(&cfg, &h).unwrap();
+    cfg.seed += 1;
+    let b = run_training(&cfg, &h).unwrap();
+    assert_ne!(a.states[0].gen, b.states[0].gen);
+}
+
+#[test]
+fn horovod_ranks_see_full_data() {
+    let Some(h) = shared_handle() else { return };
+    // Indirect check via the recorded events metric: every mode analyzes
+    // disc_batch events per epoch; horovod differs only in sharding and
+    // synchronization, which must not change the event count.
+    let run = run_training(&quick_cfg(Mode::Horovod, 4, 6), &h).unwrap();
+    assert_eq!(run.total_events(), (4 * 6 * 16 * 25) as f64);
+}
+
+#[test]
+fn injected_latency_slows_the_blocking_ring() {
+    let Some(h) = shared_handle() else { return };
+    let cfg = quick_cfg(Mode::ConvArar, 4, 8);
+    let fast = run_training_with_links(&cfg, &h, LinkModel::zero()).unwrap();
+    // Exaggerated per-message latency.
+    let slow_links = {
+        let mut lm = LinkModel::mpi4py_like();
+        lm.inter_node.alpha_s = 3e-3;
+        lm.intra_node.alpha_s = 3e-3;
+        lm.with_injection(1.0)
+    };
+    let slow = run_training_with_links(&cfg, &h, slow_links).unwrap();
+    assert!(
+        slow.wall_s > fast.wall_s,
+        "latency injection had no effect: {} vs {}",
+        slow.wall_s,
+        fast.wall_s
+    );
+    // And the numerics are unaffected by timing (same seed, same result).
+    assert_eq!(slow.states[0].gen, fast.states[0].gen);
+}
+
+#[test]
+fn residual_evaluator_matches_rust_reference_forward() {
+    let Some(h) = shared_handle() else { return };
+    // Cross-check the gen_predict artifact against the pure-Rust MLP.
+    use sagips::model::gan::GanState;
+    use sagips::model::reference;
+    use sagips::util::rng::Rng;
+    let meta = h.manifest().model("paper").unwrap().clone();
+    let mut rng = Rng::new(5);
+    let state = GanState::init(&meta, h.manifest().leaky_slope, &mut rng);
+    let ev = sagips::model::Residuals::new(h.clone(), "gen_predict_paper_k256", 77).unwrap();
+    let preds = ev.predict(&state.gen).unwrap();
+    // Reference forward on the same fixed noise: regenerate it the same
+    // way Residuals does.
+    let mut rng2 = Rng::with_stream(77, 0xEE51D);
+    let mut z = vec![0.0f32; 256 * h.manifest().latent_dim];
+    rng2.fill_normal(&mut z);
+    let want = reference::mlp_forward(
+        &state.gen,
+        &meta.gen_layout,
+        &z,
+        256,
+        h.manifest().leaky_slope as f32,
+    );
+    assert_eq!(preds.len(), want.len());
+    for (a, b) in preds.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-3 + 1e-3 * b.abs(), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn weak_scaling_artifacts_exist_for_eq10() {
+    let Some(h) = shared_handle() else { return };
+    // eq (10) grid with base batch 64: N in {1,2,4,8,16}.
+    for n in [1usize, 2, 4, 8, 16] {
+        let name = format!("gan_step_paper_b{}_e25", 64 / n);
+        assert!(
+            h.manifest().artifact(&name).is_ok(),
+            "missing weak-scaling artifact {name}"
+        );
+    }
+}
+
+#[test]
+fn checkpoint_cadence_matches_config() {
+    let Some(h) = shared_handle() else { return };
+    let mut cfg = quick_cfg(Mode::Ensemble, 1, 20);
+    cfg.checkpoint_every = 5;
+    let run = run_training(&cfg, &h).unwrap();
+    // epoch 0 + epochs 4, 9, 14, 19 -> 5 checkpoints
+    assert_eq!(run.residual_curve.len(), 5);
+    let epochs: Vec<u64> = run.residual_curve.iter().map(|p| p.epoch).collect();
+    assert_eq!(epochs, vec![0, 4, 9, 14, 19]);
+    // elapsed times strictly increasing
+    for w in run.residual_curve.windows(2) {
+        assert!(w[1].elapsed_s > w[0].elapsed_s);
+    }
+    // mean_abs helper is finite on all
+    for p in &run.residual_curve {
+        assert!(residuals::mean_abs(&p.residuals).is_finite());
+    }
+}

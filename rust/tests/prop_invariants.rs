@@ -1,0 +1,226 @@
+//! Property-based tests over the coordinator substrates (in-repo
+//! harness, `sagips::util::proptest`): collective correctness for random
+//! topologies/values, fusion-plan roundtrips, RMA semantics, topology
+//! invariants, simulator sanity, JSON roundtrips.
+
+use sagips::collective::ring::ring_pass;
+use sagips::comm::{GradMsg, LinkModel, LocalNetwork, RmaRegion, RmaWindow, Topology};
+use sagips::config::Mode;
+use sagips::sim::{simulate, ComputeModel, SimConfig};
+use sagips::tensor::fusion::{segments_from_layout, FusionPlan};
+use sagips::util::json::Value;
+use sagips::util::proptest::{run, Gen};
+
+#[test]
+fn prop_ring_pass_averages_any_ring() {
+    run("ring_pass averages arbitrary member sets", 30, |g| {
+        let n = g.usize_in(2..=9);
+        let len = g.usize_in(1..=64);
+        let values: Vec<f32> = (0..n).map(|_| g.f32_in(-100.0..=100.0)).collect();
+        let expected: f32 = values.iter().sum::<f32>() / n as f32;
+        let topo = Topology::new(n, 4);
+        let eps = LocalNetwork::build(&topo, LinkModel::zero());
+        let members: Vec<usize> = (0..n).collect();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                let members = members.clone();
+                let v = values[ep.rank];
+                std::thread::spawn(move || {
+                    let mut grads = vec![v; len];
+                    ring_pass(&ep, &members, 0, &mut grads).unwrap();
+                    grads
+                })
+            })
+            .collect();
+        for h in handles {
+            let grads = h.join().unwrap();
+            for got in grads {
+                assert!(
+                    (got - expected).abs() < 1e-2 + 1e-4 * expected.abs(),
+                    "{got} vs {expected}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fusion_roundtrip_any_layout() {
+    run("fusion pack/unpack roundtrips random layouts", 200, |g| {
+        // Build a random contiguous layer layout.
+        let n_layers = g.usize_in(1..=6);
+        let mut layout = Vec::new();
+        let mut off = 0usize;
+        for _ in 0..n_layers {
+            let w = g.usize_in(1..=64);
+            let b = g.usize_in(1..=8);
+            layout.push((off, w, off + w, b));
+            off += w + b;
+        }
+        let include_bias = g.bool();
+        let bucket = *g.choose(&[0usize, 16, 64, 1024]);
+        let plan = FusionPlan::build(segments_from_layout(&layout), bucket, include_bias);
+        let grads: Vec<f32> = (0..off).map(|_| g.f32_in(-10.0..=10.0)).collect();
+        let mut packed = Vec::new();
+        plan.pack(&grads, &mut packed).unwrap();
+        assert_eq!(packed.len(), plan.transfer_elems());
+        let mut out = vec![f32::NAN; off];
+        plan.unpack(&packed, &mut out).unwrap();
+        for &i in &plan.covered_indices() {
+            assert_eq!(out[i], grads[i]);
+        }
+        // Uncovered slots untouched.
+        let covered: std::collections::HashSet<usize> =
+            plan.covered_indices().into_iter().collect();
+        for i in 0..off {
+            if !covered.contains(&i) {
+                assert!(out[i].is_nan());
+            }
+        }
+        // Weight coverage exactly matches include_bias.
+        let weight_elems: usize = layout.iter().map(|&(_, w, _, _)| w).sum();
+        let bias_elems: usize = layout.iter().map(|&(_, _, _, b)| b).sum();
+        let want = weight_elems + if include_bias { bias_elems } else { 0 };
+        assert_eq!(plan.transfer_elems(), want);
+    });
+}
+
+#[test]
+fn prop_topology_groups_partition_ranks() {
+    run("inner groups partition ranks; outer picks group leads", 300, |g| {
+        let ranks = g.usize_in(1..=64);
+        let gpn = g.usize_in(1..=8);
+        let topo = Topology::new(ranks, gpn);
+        let mut seen = vec![0u32; ranks];
+        for node in 0..topo.nodes() {
+            for r in topo.inner_group(node * gpn) {
+                seen[r] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "not a partition");
+        let outer = topo.outer_group();
+        assert_eq!(outer.len(), topo.nodes());
+        for &o in &outer {
+            assert!(topo.is_outer_member(o));
+            assert_eq!(topo.inner_group(o)[0], o);
+        }
+        // ring_next/prev are inverse bijections
+        for r in 0..ranks {
+            assert_eq!(topo.ring_prev(topo.ring_next(r)), r);
+        }
+    });
+}
+
+#[test]
+fn prop_rma_window_never_loses_and_gains_nothing() {
+    run("rma window conserves deposits (reads + drops == puts)", 200, |g| {
+        let cap = g.usize_in(1..=8);
+        let puts = g.usize_in(0..=40);
+        let w = RmaWindow::new(cap);
+        for e in 0..puts {
+            w.put(GradMsg::new(0, e as u64, 0, vec![]));
+        }
+        let mut read = 0u64;
+        let mut dropped = 0u64;
+        let mut last_epoch = -1i64;
+        while let Some((m, d)) = w.get() {
+            read += 1;
+            dropped += d;
+            // FIFO within the window: epochs strictly increase.
+            assert!((m.epoch as i64) > last_epoch);
+            last_epoch = m.epoch as i64;
+        }
+        assert_eq!(read + dropped, puts as u64);
+        assert_eq!(w.put_count(), puts as u64);
+    });
+}
+
+#[test]
+fn prop_simulator_time_monotone_in_epochs_and_payload() {
+    run("sim time grows with epochs and payload", 40, |g| {
+        let mode = *g.choose(&[
+            Mode::ConvArar,
+            Mode::ArarArar,
+            Mode::RmaArarArar,
+            Mode::Horovod,
+        ]);
+        let ranks = *g.choose(&[2usize, 4, 8, 16]);
+        let mk = |epochs: u64, bytes: usize| SimConfig {
+            epochs,
+            sim_epochs: epochs.min(64),
+            grad_bytes: bytes,
+            compute: ComputeModel::fixed(0.01),
+            ..SimConfig::paper(mode, ranks)
+        };
+        let small = simulate(&mk(32, 1_000)).total_s;
+        let more_epochs = simulate(&mk(64, 1_000)).total_s;
+        let more_bytes = simulate(&mk(32, 4_000_000)).total_s;
+        assert!(more_epochs > small);
+        assert!(more_bytes >= small);
+        assert!(small > 0.0);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    run("json emit/parse roundtrips random trees", 200, |g| {
+        fn build(g: &mut Gen, depth: usize) -> Value {
+            if depth == 0 {
+                return match g.usize_in(0..=3) {
+                    0 => Value::Null,
+                    1 => Value::Bool(g.bool()),
+                    2 => Value::Number((g.f32_in(-1e6..=1e6) as f64 * 100.0).round() / 100.0),
+                    _ => Value::String(format!("s{}", g.u64() % 1000)),
+                };
+            }
+            match g.usize_in(0..=4) {
+                0..=2 => {
+                    let n = g.usize_in(0..=4);
+                    Value::Array((0..n).map(|_| build(g, depth - 1)).collect())
+                }
+                _ => {
+                    let n = g.usize_in(0..=4);
+                    Value::Object(
+                        (0..n)
+                            .map(|i| (format!("k{i}"), build(g, depth - 1)))
+                            .collect(),
+                    )
+                }
+            }
+        }
+        let v = build(g, 3);
+        let text = v.to_json();
+        let back = Value::parse(&text).unwrap();
+        assert_eq!(v, back);
+        let pretty = v.to_json_pretty();
+        assert_eq!(Value::parse(&pretty).unwrap(), v);
+    });
+}
+
+#[test]
+fn prop_rma_region_pairs_are_isolated() {
+    run("messages only cross their own directed window", 50, |g| {
+        let n = g.usize_in(2..=8);
+        let region = RmaRegion::with_capacity(n, 4);
+        let a = g.usize_in(0..=n - 1);
+        let mut b = g.usize_in(0..=n - 1);
+        if a == b {
+            b = (b + 1) % n;
+        }
+        region
+            .window(a, b)
+            .unwrap()
+            .put(GradMsg::new(a, 42, 0, vec![]));
+        for w in 0..n {
+            for r in 0..n {
+                let win = region.window(w, r).unwrap();
+                if (w, r) == (a, b) {
+                    assert_eq!(win.get().unwrap().0.epoch, 42);
+                } else {
+                    assert!(win.get().is_none());
+                }
+            }
+        }
+    });
+}
