@@ -1,10 +1,15 @@
 //! Micro-bench: collective hot paths — ring pass latency per mode/size,
+//! chunked vs unchunked rings, overlap vs blocking trainer integration,
 //! RMA window put/get, fusion pack/unpack. These are the L3 §Perf
-//! numbers (EXPERIMENTS.md).
+//! numbers (DESIGN.md §Collective engine) tracked by BENCH_*.json
+//! snapshots.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use sagips::collective::engine::CollectiveEngine;
+use sagips::collective::ring::{chunked_pass_bytes, chunked_ring_pass, ring_pass, ConvArar};
 use sagips::collective::rma_ring::RmaRing;
+use sagips::collective::Collective;
 use sagips::comm::{GradMsg, LinkModel, LocalNetwork, RmaRegion, RmaWindow, Topology};
 use sagips::tensor::fusion::{segments_from_layout, FusionPlan};
 use sagips::util::bench::{bench, bench_for, header};
@@ -23,11 +28,11 @@ fn bench_ring_pass(n: usize) {
         let members = members.clone();
         handles.push(std::thread::spawn(move || {
             let mut grads = vec![1.0f32; GRAD];
+            let mut scratch = Vec::new();
             let rank = ep.rank;
-            let t0 = std::time::Instant::now();
+            let t0 = Instant::now();
             for e in 0..iters {
-                sagips::collective::ring::ring_pass(&ep, &members, e as u64, &mut grads)
-                    .unwrap();
+                ring_pass(&ep, &members, e as u64, &mut grads, &mut scratch).unwrap();
             }
             if rank == 0 {
                 Some(t0.elapsed() / iters as u32)
@@ -43,6 +48,136 @@ fn bench_ring_pass(n: usize) {
                 format!("ring_pass n={n} ({GRAD} f32, unchunked)"),
                 sagips::util::bench::fmt_dur(d)
             );
+        }
+    }
+}
+
+/// Chunked vs unchunked ring pass at a given size: latency on rank 0 plus
+/// the per-rank byte counts (the 2·(N-1)/N vs N-1 law made concrete).
+fn bench_chunked_vs_unchunked(n: usize) {
+    let iters = if n >= 32 { 60usize } else { 150usize };
+    for chunked in [false, true] {
+        let topo = Topology::new(n, 4);
+        let eps = LocalNetwork::build(&topo, LinkModel::zero());
+        let members: Vec<usize> = (0..n).collect();
+        let mut handles = Vec::new();
+        for ep in eps {
+            let members = members.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut grads = vec![1.0f32; GRAD];
+                let mut scratch = Vec::new();
+                let mut pool = Vec::new();
+                let rank = ep.rank;
+                let mut bytes = 0usize;
+                let t0 = Instant::now();
+                for e in 0..iters {
+                    let s = if chunked {
+                        chunked_ring_pass(&ep, &members, e as u64, &mut grads, &mut pool, 0)
+                            .unwrap()
+                    } else {
+                        ring_pass(&ep, &members, e as u64, &mut grads, &mut scratch).unwrap()
+                    };
+                    bytes = s.bytes_sent;
+                }
+                if rank == 0 {
+                    Some((t0.elapsed() / iters as u32, bytes))
+                } else {
+                    None
+                }
+            }));
+        }
+        for h in handles {
+            if let Some((d, bytes)) = h.join().unwrap() {
+                let label = if chunked { "chunked" } else { "unchunked" };
+                println!(
+                    "{:<44} {:>10}   {:>9} B/rank/epoch",
+                    format!("ring n={n} {label}"),
+                    sagips::util::bench::fmt_dur(d),
+                    bytes
+                );
+            }
+        }
+    }
+    println!(
+        "{:<44} {:>10}   {:>9} B (2(N-1)/N law)",
+        format!("ring n={n} chunked expected bytes"),
+        "",
+        chunked_pass_bytes(GRAD, n)
+    );
+}
+
+/// Synthetic compute load standing in for a gan_step execution.
+fn fake_compute(us: u64) {
+    let t0 = Instant::now();
+    while t0.elapsed() < Duration::from_micros(us) {
+        std::hint::black_box((0..64).sum::<u64>());
+    }
+}
+
+/// Overlap vs blocking: each rank alternates "compute" (spin) with one
+/// epoch's reduce. Blocking pays compute + comm serially; overlap starts
+/// the reduce, computes, then collects — reporting the hot-path comm time
+/// (the acceptance metric: `comm_s` on the rank hot path must drop).
+fn bench_overlap_vs_blocking(n: usize) {
+    const COMPUTE_US: u64 = 400;
+    let iters = 120usize;
+    for overlap in [false, true] {
+        let topo = Topology::new(n, 4);
+        let eps = LocalNetwork::build(&topo, LinkModel::zero());
+        let mut handles = Vec::new();
+        for ep in eps {
+            handles.push(std::thread::spawn(move || {
+                let rank = ep.rank;
+                let mut grads = vec![1.0f32; GRAD];
+                let total;
+                let mut hot_comm = Duration::ZERO;
+                if overlap {
+                    let mut eng = CollectiveEngine::spawn(Box::new(ConvArar::new(ep))).unwrap();
+                    let t0 = Instant::now();
+                    let mut pending = false;
+                    for e in 0..iters {
+                        fake_compute(COMPUTE_US);
+                        let tc = Instant::now();
+                        if pending {
+                            let (buf, _) = eng.wait_reduce().unwrap();
+                            grads.copy_from_slice(&buf);
+                        }
+                        eng.start_reduce(e as u64, grads.clone()).unwrap();
+                        pending = true;
+                        hot_comm += tc.elapsed();
+                    }
+                    let tc = Instant::now();
+                    let _ = eng.wait_reduce().unwrap();
+                    hot_comm += tc.elapsed();
+                    total = t0.elapsed();
+                } else {
+                    let mut coll = ConvArar::new(ep);
+                    let t0 = Instant::now();
+                    for e in 0..iters {
+                        fake_compute(COMPUTE_US);
+                        let tc = Instant::now();
+                        coll.epoch_reduce(e as u64, &mut grads).unwrap();
+                        hot_comm += tc.elapsed();
+                    }
+                    total = t0.elapsed();
+                }
+                if rank == 0 {
+                    Some((total / iters as u32, hot_comm / iters as u32))
+                } else {
+                    None
+                }
+            }));
+        }
+        for h in handles {
+            if let Some((epoch_d, comm_d)) = h.join().unwrap() {
+                let label = if overlap { "overlap" } else { "blocking" };
+                println!(
+                    "{:<44} {:>10}   hot comm_s {:>10}",
+                    format!("trainer n={n} {label} (compute {COMPUTE_US}µs)"),
+                    sagips::util::bench::fmt_dur(epoch_d),
+                    sagips::util::bench::fmt_dur(comm_d)
+                );
+            }
         }
     }
 }
@@ -68,7 +203,7 @@ fn main() {
         let iters = 300;
         let handles: Vec<_> = rings
             .into_iter()
-            .map(|ring| {
+            .map(|mut ring| {
                 std::thread::spawn(move || {
                     let mut grads = vec![1.0f32; GRAD];
                     let t0 = std::time::Instant::now();
@@ -94,6 +229,17 @@ fn main() {
     // Transport ring passes at paper-relevant ring sizes.
     for n in [2, 4, 8, 16] {
         bench_ring_pass(n);
+    }
+
+    // Chunked vs unchunked and overlap vs blocking at 8/16/32 simulated
+    // ranks — the collective-engine comparison rows.
+    println!();
+    for n in [8, 16, 32] {
+        bench_chunked_vs_unchunked(n);
+    }
+    println!();
+    for n in [8, 16, 32] {
+        bench_overlap_vs_blocking(n);
     }
 
     // Fusion pack/unpack over a paper-shaped layer layout.

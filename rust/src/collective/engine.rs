@@ -1,0 +1,288 @@
+//! The overlap engine: a dedicated comm thread per rank.
+//!
+//! [`CollectiveEngine`] wraps any [`Collective`] and moves it onto a
+//! worker thread, turning the trait's non-blocking `start_reduce` /
+//! `poll_reduce` / `wait_reduce` face into a genuinely asynchronous one:
+//! the trainer hands the packed gradient buffer over, runs the next
+//! epoch's bootstrap draw and `gan_step` while the worker drives the ring,
+//! and collects the averaged buffer one epoch later (one-epoch-stale
+//! gradients — the Async-RED-style relaxation the overlap mode of
+//! `coordinator::rank` is built on; see DESIGN.md §Collective engine).
+//!
+//! Timeline versus the paper's blocking loop:
+//!
+//! ```text
+//! blocking:  [draw|step|-- reduce --|opt] [draw|step|-- reduce --|opt]
+//! overlap:   [draw|step|opt] [draw|step|opt] [draw|step|opt]
+//!              reduce(e) ---^ runs under draw/step of e+1 ^--- reduce(e+1)
+//! ```
+//!
+//! The engine still implements the blocking [`Collective::epoch_reduce`]
+//! (submit + wait), so it is a drop-in replacement anywhere a collective
+//! is expected. Exactly one reduce may be in flight at a time, matching
+//! the fallback [`ParkedReduce`] contract.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+
+use super::{Collective, CommStats, ParkedReduce};
+use crate::util::error::{Error, Result};
+
+struct Job {
+    epoch: u64,
+    buf: Vec<f32>,
+}
+
+struct Done {
+    buf: Vec<f32>,
+    stats: CommStats,
+}
+
+/// Comm-thread wrapper around an inner collective.
+pub struct CollectiveEngine {
+    job_tx: Option<Sender<Job>>,
+    done_rx: Receiver<Result<Done>>,
+    worker: Option<JoinHandle<()>>,
+    in_flight: bool,
+    inner_name: &'static str,
+    parked: ParkedReduce,
+}
+
+impl CollectiveEngine {
+    /// Move `inner` onto a dedicated worker thread.
+    pub fn spawn(mut inner: Box<dyn Collective>) -> Result<CollectiveEngine> {
+        let inner_name = inner.name();
+        let (job_tx, job_rx) = channel::<Job>();
+        let (done_tx, done_rx) = channel::<Result<Done>>();
+        let worker = std::thread::Builder::new()
+            .name(format!("comm-{inner_name}"))
+            .spawn(move || {
+                while let Ok(Job { epoch, mut buf }) = job_rx.recv() {
+                    let result = inner
+                        .epoch_reduce(epoch, &mut buf)
+                        .map(|stats| Done { buf, stats });
+                    if done_tx.send(result).is_err() {
+                        return; // engine dropped
+                    }
+                }
+            })
+            .map_err(Error::Io)?;
+        Ok(CollectiveEngine {
+            job_tx: Some(job_tx),
+            done_rx,
+            worker: Some(worker),
+            in_flight: false,
+            inner_name,
+            parked: ParkedReduce::default(),
+        })
+    }
+
+    fn collect(&mut self, done: Result<Done>) -> Result<(Vec<f32>, CommStats)> {
+        self.in_flight = false;
+        let d = done?;
+        Ok((d.buf, d.stats))
+    }
+}
+
+impl Collective for CollectiveEngine {
+    fn epoch_reduce(&mut self, epoch: u64, grads: &mut [f32]) -> Result<CommStats> {
+        // Blocking facade: submit and wait. Keeps ordering with any prior
+        // overlap-mode traffic because the worker processes jobs FIFO.
+        self.start_reduce(epoch, grads.to_vec())?;
+        let (buf, stats) = self.wait_reduce()?;
+        grads.copy_from_slice(&buf);
+        Ok(stats)
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner_name
+    }
+
+    fn parked(&mut self) -> &mut ParkedReduce {
+        &mut self.parked
+    }
+
+    fn start_reduce(&mut self, epoch: u64, buf: Vec<f32>) -> Result<()> {
+        if self.in_flight || self.parked.ready() {
+            return Err(Error::comm(
+                "start_reduce called with a reduce still in flight",
+            ));
+        }
+        self.job_tx
+            .as_ref()
+            .expect("engine job channel present until drop")
+            .send(Job { epoch, buf })
+            .map_err(|_| Error::comm("collective engine worker died"))?;
+        self.in_flight = true;
+        Ok(())
+    }
+
+    fn poll_reduce(&mut self) -> Result<bool> {
+        if self.parked.ready() {
+            return Ok(true);
+        }
+        if !self.in_flight {
+            return Ok(false);
+        }
+        match self.done_rx.try_recv() {
+            Ok(done) => {
+                let (buf, stats) = self.collect(done)?;
+                self.parked.park(buf, stats)?;
+                Ok(true)
+            }
+            Err(TryRecvError::Empty) => Ok(false),
+            Err(TryRecvError::Disconnected) => {
+                Err(Error::comm("collective engine worker died"))
+            }
+        }
+    }
+
+    fn wait_reduce(&mut self) -> Result<(Vec<f32>, CommStats)> {
+        if self.parked.ready() {
+            return self.parked.take();
+        }
+        if !self.in_flight {
+            return Err(Error::comm("wait_reduce called with no reduce in flight"));
+        }
+        let done = self
+            .done_rx
+            .recv()
+            .map_err(|_| Error::comm("collective engine worker died"))?;
+        self.collect(done)
+    }
+}
+
+impl Drop for CollectiveEngine {
+    fn drop(&mut self) {
+        // Hang up the job channel so the worker's recv() errors and it
+        // exits. If a reduce is still in flight, give it a bounded grace
+        // period: a worker stuck in a ring whose peers died must not hang
+        // process shutdown — leak the thread instead (it is detached and
+        // holds no locks the trainer needs).
+        drop(self.job_tx.take());
+        let finished = !self.in_flight
+            || !matches!(
+                self.done_rx.recv_timeout(std::time::Duration::from_secs(30)),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout)
+            );
+        if finished {
+            if let Some(w) = self.worker.take() {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::ring::ConvArar;
+    use crate::collective::NullCollective;
+    use crate::comm::{LinkModel, LocalNetwork, Topology};
+
+    #[test]
+    fn engine_runs_null_collective_asynchronously() {
+        let mut e = CollectiveEngine::spawn(Box::new(NullCollective::default())).unwrap();
+        assert_eq!(e.name(), "ensemble");
+        e.start_reduce(0, vec![1.0, 2.0, 3.0]).unwrap();
+        let (buf, stats) = e.wait_reduce().unwrap();
+        assert_eq!(buf, vec![1.0, 2.0, 3.0]);
+        assert_eq!(stats.contributions, 1);
+    }
+
+    #[test]
+    fn engine_rejects_double_start_and_empty_wait() {
+        let mut e = CollectiveEngine::spawn(Box::new(NullCollective::default())).unwrap();
+        assert!(e.wait_reduce().is_err());
+        e.start_reduce(0, vec![0.0]).unwrap();
+        assert!(e.start_reduce(1, vec![0.0]).is_err());
+        e.wait_reduce().unwrap();
+        // After the wait the slot is free again.
+        e.start_reduce(1, vec![0.0]).unwrap();
+        e.wait_reduce().unwrap();
+    }
+
+    #[test]
+    fn poll_parks_result_until_wait() {
+        let mut e = CollectiveEngine::spawn(Box::new(NullCollective::default())).unwrap();
+        assert!(!e.poll_reduce().unwrap()); // nothing in flight
+        e.start_reduce(3, vec![7.0]).unwrap();
+        // Spin until the worker finishes; poll must never block.
+        let t0 = std::time::Instant::now();
+        while !e.poll_reduce().unwrap() {
+            assert!(t0.elapsed().as_secs() < 5, "worker never completed");
+            std::thread::yield_now();
+        }
+        assert!(e.poll_reduce().unwrap()); // still ready
+        let (buf, _) = e.wait_reduce().unwrap();
+        assert_eq!(buf, vec![7.0]);
+    }
+
+    #[test]
+    fn engines_overlap_a_real_ring_across_ranks() {
+        // Four ranks each wrap a ConvArar in an engine, start an epoch's
+        // reduce, "compute" (sleep), then collect: the averaged result
+        // must match the blocking ring's.
+        let n = 4;
+        let topo = Topology::new(n, 4);
+        let eps = LocalNetwork::build(&topo, LinkModel::zero());
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                let v = ep.rank as f32;
+                std::thread::spawn(move || {
+                    let mut e = CollectiveEngine::spawn(Box::new(ConvArar::new(ep))).unwrap();
+                    let mut applied = Vec::new();
+                    for epoch in 0..3u64 {
+                        e.start_reduce(epoch, vec![v + epoch as f32; 8]).unwrap();
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                        let (buf, stats) = e.wait_reduce().unwrap();
+                        assert_eq!(stats.contributions, n);
+                        applied.push(buf[0]);
+                    }
+                    applied
+                })
+            })
+            .collect();
+        for h in handles {
+            let applied = h.join().unwrap();
+            // mean of {0..3} = 1.5, shifted by the epoch index.
+            assert_eq!(applied.len(), 3);
+            for (e, v) in applied.iter().enumerate() {
+                assert!((v - (1.5 + e as f32)).abs() < 1e-5, "epoch {e}: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocking_facade_matches_direct_reduce() {
+        let n = 3;
+        let topo = Topology::new(n, 4);
+        let eps = LocalNetwork::build(&topo, LinkModel::zero());
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                let v = (ep.rank * 2) as f32;
+                std::thread::spawn(move || {
+                    let mut e = CollectiveEngine::spawn(Box::new(ConvArar::new(ep))).unwrap();
+                    let mut grads = vec![v; 5];
+                    e.epoch_reduce(0, &mut grads).unwrap();
+                    grads
+                })
+            })
+            .collect();
+        for h in handles {
+            let g = h.join().unwrap();
+            for v in g {
+                assert!((v - 2.0).abs() < 1e-5); // mean of 0, 2, 4
+            }
+        }
+    }
+
+    #[test]
+    fn drop_with_job_in_flight_shuts_down_cleanly() {
+        let mut e = CollectiveEngine::spawn(Box::new(NullCollective::default())).unwrap();
+        e.start_reduce(0, vec![0.0; 16]).unwrap();
+        drop(e); // must join without hanging or panicking
+    }
+}

@@ -11,17 +11,46 @@
 //! * [`GroupedArar`]   — inner ring over the transport ("ARAR-ARAR").
 //! * [`RmaGroupedArar`] — inner ring over RMA windows ("RMA-ARAR-ARAR");
 //!   the outer ring stays transport-based in both (as in the paper).
+//!
+//! Both flavours compose with the chunked reduce-scatter + all-gather
+//! schedule via [`crate::config::ChunkPolicy`]: the policy applies to the
+//! inner *and* outer rings, so grouped chunked traffic is bandwidth-
+//! optimal at both levels.
 
-use super::ring::ring_pass;
+use super::ring::{chunked_ring_pass, ring_pass};
 use super::rma_ring::RmaRing;
-use super::{Collective, CommStats};
+use super::{Collective, CommStats, ParkedReduce};
 use crate::comm::{Endpoint, RmaRegion, Topology};
+use crate::config::ChunkPolicy;
 use crate::util::error::Result;
 
 /// Whether epoch `e` is an outer-group exchange epoch.
-/// The paper communicates across nodes "every h epochs"; epoch 0 counts.
+///
+/// The paper communicates across nodes "every h epochs". We count full
+/// periods: the first outer exchange happens once `h` epochs have run
+/// (epoch h-1), then every `h` epochs after. Epoch 0 therefore does *not*
+/// fire for h > 1 — a frequency knob should not produce an exchange before
+/// one period has elapsed.
 pub fn is_outer_epoch(epoch: u64, outer_freq: usize) -> bool {
-    outer_freq > 0 && epoch % outer_freq as u64 == 0
+    outer_freq > 0 && (epoch + 1) % outer_freq as u64 == 0
+}
+
+/// Run one ring pass over `members` with the given chunk policy.
+#[allow(clippy::too_many_arguments)]
+fn policy_pass(
+    ep: &Endpoint,
+    members: &[usize],
+    epoch: u64,
+    grads: &mut [f32],
+    policy: ChunkPolicy,
+    scratch: &mut Vec<f32>,
+    pool: &mut Vec<Vec<f32>>,
+) -> Result<CommStats> {
+    if policy.is_chunked() {
+        chunked_ring_pass(ep, members, epoch, grads, pool, policy.max_message_elems())
+    } else {
+        ring_pass(ep, members, epoch, grads, scratch)
+    }
 }
 
 /// ARAR-ARAR: transport rings for both levels.
@@ -31,10 +60,18 @@ pub struct GroupedArar {
     outer_members: Vec<usize>,
     is_outer: bool,
     outer_freq: usize,
+    policy: ChunkPolicy,
+    scratch: Vec<f32>,
+    pool: Vec<Vec<f32>>,
+    parked: ParkedReduce,
 }
 
 impl GroupedArar {
     pub fn new(ep: Endpoint, outer_freq: usize) -> GroupedArar {
+        Self::with_policy(ep, outer_freq, ChunkPolicy::Unchunked)
+    }
+
+    pub fn with_policy(ep: Endpoint, outer_freq: usize, policy: ChunkPolicy) -> GroupedArar {
         let topo = ep.topology().clone();
         let rank = ep.rank;
         GroupedArar {
@@ -42,6 +79,10 @@ impl GroupedArar {
             outer_members: topo.outer_group(),
             is_outer: topo.is_outer_member(rank),
             outer_freq,
+            policy,
+            scratch: Vec::new(),
+            pool: Vec::new(),
+            parked: ParkedReduce::default(),
             ep,
         }
     }
@@ -50,10 +91,26 @@ impl GroupedArar {
 impl Collective for GroupedArar {
     fn epoch_reduce(&mut self, epoch: u64, grads: &mut [f32]) -> Result<CommStats> {
         // Inner-group ring every epoch.
-        let mut stats = ring_pass(&self.ep, &self.inner_members, epoch, grads)?;
+        let mut stats = policy_pass(
+            &self.ep,
+            &self.inner_members,
+            epoch,
+            grads,
+            self.policy,
+            &mut self.scratch,
+            &mut self.pool,
+        )?;
         // Outer-group ring every h epochs, members only.
         if self.is_outer && is_outer_epoch(epoch, self.outer_freq) {
-            let outer = ring_pass(&self.ep, &self.outer_members, epoch, grads)?;
+            let outer = policy_pass(
+                &self.ep,
+                &self.outer_members,
+                epoch,
+                grads,
+                self.policy,
+                &mut self.scratch,
+                &mut self.pool,
+            )?;
             stats.merge(&outer);
         }
         Ok(stats)
@@ -61,6 +118,10 @@ impl Collective for GroupedArar {
 
     fn name(&self) -> &'static str {
         "arar-arar"
+    }
+
+    fn parked(&mut self) -> &mut ParkedReduce {
+        &mut self.parked
     }
 }
 
@@ -71,6 +132,10 @@ pub struct RmaGroupedArar {
     outer_members: Vec<usize>,
     is_outer: bool,
     outer_freq: usize,
+    policy: ChunkPolicy,
+    scratch: Vec<f32>,
+    pool: Vec<Vec<f32>>,
+    parked: ParkedReduce,
 }
 
 impl RmaGroupedArar {
@@ -81,12 +146,27 @@ impl RmaGroupedArar {
         region: &RmaRegion,
         rank: usize,
     ) -> Result<RmaGroupedArar> {
+        Self::with_policy(ep, outer_freq, topo, region, rank, ChunkPolicy::Unchunked)
+    }
+
+    pub fn with_policy(
+        ep: Endpoint,
+        outer_freq: usize,
+        topo: &Topology,
+        region: &RmaRegion,
+        rank: usize,
+        policy: ChunkPolicy,
+    ) -> Result<RmaGroupedArar> {
         let inner = RmaRing::new(region, topo.inner_group(rank), rank)?;
         Ok(RmaGroupedArar {
             inner,
             outer_members: topo.outer_group(),
             is_outer: topo.is_outer_member(rank),
             outer_freq,
+            policy,
+            scratch: Vec::new(),
+            pool: Vec::new(),
+            parked: ParkedReduce::default(),
             ep,
         })
     }
@@ -94,9 +174,22 @@ impl RmaGroupedArar {
 
 impl Collective for RmaGroupedArar {
     fn epoch_reduce(&mut self, epoch: u64, grads: &mut [f32]) -> Result<CommStats> {
-        let mut stats = self.inner.pass(epoch, grads)?;
+        let mut stats = if self.policy.is_chunked() {
+            self.inner
+                .pass_chunked(epoch, grads, self.policy.max_message_elems())?
+        } else {
+            self.inner.pass(epoch, grads)?
+        };
         if self.is_outer && is_outer_epoch(epoch, self.outer_freq) {
-            let outer = ring_pass(&self.ep, &self.outer_members, epoch, grads)?;
+            let outer = policy_pass(
+                &self.ep,
+                &self.outer_members,
+                epoch,
+                grads,
+                self.policy,
+                &mut self.scratch,
+                &mut self.pool,
+            )?;
             stats.merge(&outer);
         }
         Ok(stats)
@@ -105,6 +198,10 @@ impl Collective for RmaGroupedArar {
     fn name(&self) -> &'static str {
         "rma-arar-arar"
     }
+
+    fn parked(&mut self) -> &mut ParkedReduce {
+        &mut self.parked
+    }
 }
 
 #[cfg(test)]
@@ -112,14 +209,18 @@ mod tests {
     use super::*;
 
     #[test]
-    fn outer_epoch_schedule_matches_table1() {
-        // h = 1000 (paper): epochs 0, 1000, 2000 communicate across nodes.
-        assert!(is_outer_epoch(0, 1000));
+    fn outer_epoch_schedule_counts_full_periods() {
+        // h = 1000 (paper): the first cross-node exchange happens after a
+        // full period (epoch 999), then every 1000 epochs.
+        assert!(!is_outer_epoch(0, 1000));
         assert!(!is_outer_epoch(1, 1000));
-        assert!(!is_outer_epoch(999, 1000));
-        assert!(is_outer_epoch(1000, 1000));
-        assert!(is_outer_epoch(2000, 1000));
+        assert!(is_outer_epoch(999, 1000));
+        assert!(!is_outer_epoch(1000, 1000));
+        assert!(is_outer_epoch(1999, 1000));
         assert!(!is_outer_epoch(5, 0)); // freq 0 = never (ungrouped modes)
+        // h = 1 degenerates to every epoch, including epoch 0.
+        assert!(is_outer_epoch(0, 1));
+        assert!(is_outer_epoch(7, 1));
     }
 
     // Cross-thread behaviour of both grouped modes is covered by

@@ -14,7 +14,7 @@
 use std::time::Instant;
 
 use super::ring::ring_pass;
-use super::{Collective, CommStats};
+use super::{Collective, CommStats, ParkedReduce};
 use crate::comm::{Endpoint, GradMsg};
 use crate::tensor::ops;
 use crate::util::error::Result;
@@ -26,6 +26,8 @@ pub struct Hierarchical {
     masters: Vec<usize>,
     my_master: usize,
     is_master: bool,
+    scratch: Vec<f32>,
+    parked: ParkedReduce,
 }
 
 impl Hierarchical {
@@ -39,6 +41,8 @@ impl Hierarchical {
             node_members,
             my_master,
             is_master: topo.is_outer_member(rank),
+            scratch: Vec::new(),
+            parked: ParkedReduce::default(),
             ep,
         }
     }
@@ -68,7 +72,7 @@ impl Collective for Hierarchical {
             // inner/outer scheme).
             ops::scale(grads, 1.0 / n_local as f32);
             // Step 2: ring among masters.
-            let ring_stats = ring_pass(&self.ep, &self.masters, epoch, grads)?;
+            let ring_stats = ring_pass(&self.ep, &self.masters, epoch, grads, &mut self.scratch)?;
             stats.merge(&ring_stats);
             // Step 3: broadcast back into the node.
             for &r in &self.node_members {
@@ -100,6 +104,10 @@ impl Collective for Hierarchical {
 
     fn name(&self) -> &'static str {
         "hierarchical"
+    }
+
+    fn parked(&mut self) -> &mut ParkedReduce {
+        &mut self.parked
     }
 }
 

@@ -15,7 +15,21 @@
 //! rank's packed gradient buffer with its peers *in place*. The trainer
 //! packs weight-only gradients through a `FusionPlan` first (the paper
 //! excludes bias gradients from transfer).
+//!
+//! Beyond the paper, the collective layer is an *engine* with two extra
+//! capabilities, both off by default so every Table II behaviour is
+//! preserved bit-for-bit:
+//!
+//! * **Chunking** ([`crate::config::ChunkPolicy`]): the transport rings
+//!   can run a bandwidth-optimal reduce-scatter + all-gather schedule
+//!   ([`ring::chunked_ring_pass`]) instead of forwarding full tensors.
+//! * **Overlap** ([`engine::CollectiveEngine`] + the non-blocking
+//!   [`Collective::start_reduce`] / [`Collective::poll_reduce`] /
+//!   [`Collective::wait_reduce`] API): the trainer can run the exchange
+//!   concurrently with the next epoch's compute, applying one-epoch-stale
+//!   averaged gradients.
 
+pub mod engine;
 pub mod grouped;
 pub mod hierarchical;
 pub mod ring;
@@ -26,8 +40,8 @@ pub mod tree;
 use std::sync::{Arc, Barrier};
 
 use crate::comm::{Endpoint, RmaRegion, Topology};
-use crate::config::Mode;
-use crate::util::error::Result;
+use crate::config::{ChunkPolicy, Mode};
+use crate::util::error::{Error, Result};
 
 /// Per-epoch communication statistics, aggregated by the metrics recorder.
 #[derive(Clone, Copy, Debug, Default)]
@@ -57,17 +71,84 @@ impl CommStats {
     }
 }
 
+/// Completed-reduce slot backing the default (synchronous-fallback)
+/// non-blocking API: collectives without a comm worker run the blocking
+/// reduce inside [`Collective::start_reduce`] and park the result here
+/// until [`Collective::wait_reduce`] collects it.
+#[derive(Default)]
+pub struct ParkedReduce {
+    done: Option<(Vec<f32>, CommStats)>,
+}
+
+impl ParkedReduce {
+    /// Park a finished reduce. Errors if one is already waiting (the
+    /// engine contract allows a single reduce in flight per collective).
+    pub fn park(&mut self, buf: Vec<f32>, stats: CommStats) -> Result<()> {
+        if self.done.is_some() {
+            return Err(Error::comm(
+                "start_reduce called with a reduce still in flight",
+            ));
+        }
+        self.done = Some((buf, stats));
+        Ok(())
+    }
+
+    /// Whether a parked result is waiting.
+    pub fn ready(&self) -> bool {
+        self.done.is_some()
+    }
+
+    /// Collect the parked result.
+    pub fn take(&mut self) -> Result<(Vec<f32>, CommStats)> {
+        self.done
+            .take()
+            .ok_or_else(|| Error::comm("wait_reduce called with no reduce in flight"))
+    }
+}
+
 /// A per-rank gradient collective.
+///
+/// The blocking entry point is [`Collective::epoch_reduce`]; the
+/// `start_reduce` / `poll_reduce` / `wait_reduce` triple is the
+/// non-blocking face of the same operation. The default implementations
+/// execute the reduce eagerly (blocking inside `start_reduce`), so every
+/// collective is overlap-API-compatible; [`engine::CollectiveEngine`]
+/// overrides them to run the reduce on a dedicated comm thread, which is
+/// what actually hides the exchange behind compute.
 pub trait Collective: Send {
     /// Average `grads` (the packed transfer buffer) with peers in place.
     fn epoch_reduce(&mut self, epoch: u64, grads: &mut [f32]) -> Result<CommStats>;
 
     /// Human-readable mode name.
     fn name(&self) -> &'static str;
+
+    /// Storage slot used by the default non-blocking implementation.
+    fn parked(&mut self) -> &mut ParkedReduce;
+
+    /// Begin reducing `buf` (ownership moves to the collective). At most
+    /// one reduce may be in flight per collective.
+    fn start_reduce(&mut self, epoch: u64, mut buf: Vec<f32>) -> Result<()> {
+        let stats = self.epoch_reduce(epoch, &mut buf)?;
+        self.parked().park(buf, stats)
+    }
+
+    /// Whether the in-flight reduce has completed (never blocks).
+    fn poll_reduce(&mut self) -> Result<bool> {
+        Ok(self.parked().ready())
+    }
+
+    /// Block until the in-flight reduce completes; returns the averaged
+    /// buffer and its stats.
+    fn wait_reduce(&mut self) -> Result<(Vec<f32>, CommStats)> {
+        self.parked().take()
+    }
 }
 
 /// No-communication collective (ensemble analysis, single rank).
-pub struct NullCollective;
+#[derive(Default)]
+pub struct NullCollective {
+    parked: ParkedReduce,
+}
 
 impl Collective for NullCollective {
     fn epoch_reduce(&mut self, _epoch: u64, _grads: &mut [f32]) -> Result<CommStats> {
@@ -80,10 +161,15 @@ impl Collective for NullCollective {
     fn name(&self) -> &'static str {
         "ensemble"
     }
+
+    fn parked(&mut self) -> &mut ParkedReduce {
+        &mut self.parked
+    }
 }
 
-/// Build one collective per rank for the given mode. Consumes the
-/// endpoints (each collective owns its rank's endpoint).
+/// Build one collective per rank for the given mode with the paper's
+/// default (unchunked) ring schedule. Consumes the endpoints (each
+/// collective owns its rank's endpoint).
 pub fn build(
     mode: Mode,
     topo: &Topology,
@@ -91,17 +177,38 @@ pub fn build(
     endpoints: Vec<Endpoint>,
     region: &RmaRegion,
 ) -> Result<Vec<Box<dyn Collective>>> {
+    build_with_policy(
+        mode,
+        topo,
+        outer_freq,
+        endpoints,
+        region,
+        ChunkPolicy::Unchunked,
+    )
+}
+
+/// Build one collective per rank with an explicit chunk policy. The
+/// policy applies to the ring-structured modes (conventional, grouped,
+/// RMA-grouped); the baselines keep their published schedules.
+pub fn build_with_policy(
+    mode: Mode,
+    topo: &Topology,
+    outer_freq: usize,
+    endpoints: Vec<Endpoint>,
+    region: &RmaRegion,
+    policy: ChunkPolicy,
+) -> Result<Vec<Box<dyn Collective>>> {
     let n = topo.ranks;
     let barrier = Arc::new(Barrier::new(n));
     let mut out: Vec<Box<dyn Collective>> = Vec::with_capacity(n);
     for ep in endpoints {
         let rank = ep.rank;
         let c: Box<dyn Collective> = match mode {
-            Mode::Ensemble => Box::new(NullCollective),
-            Mode::ConvArar => Box::new(ring::ConvArar::new(ep)),
-            Mode::ArarArar => Box::new(grouped::GroupedArar::new(ep, outer_freq)),
-            Mode::RmaArarArar => Box::new(grouped::RmaGroupedArar::new(
-                ep, outer_freq, topo, region, rank,
+            Mode::Ensemble => Box::new(NullCollective::default()),
+            Mode::ConvArar => Box::new(ring::ConvArar::with_policy(ep, policy)),
+            Mode::ArarArar => Box::new(grouped::GroupedArar::with_policy(ep, outer_freq, policy)),
+            Mode::RmaArarArar => Box::new(grouped::RmaGroupedArar::with_policy(
+                ep, outer_freq, topo, region, rank, policy,
             )?),
             Mode::Horovod => Box::new(sync::SyncAllReduce::new(ep, barrier.clone())),
             Mode::Hierarchical => Box::new(hierarchical::Hierarchical::new(ep)),
@@ -136,10 +243,38 @@ pub(crate) mod testutil {
     where
         F: Fn(usize, u64) -> f32 + Send + Sync + Copy + 'static,
     {
+        run_mode_with_policy(
+            mode,
+            n,
+            gpus_per_node,
+            outer_freq,
+            len,
+            epochs,
+            ChunkPolicy::Unchunked,
+            fill,
+        )
+    }
+
+    /// [`run_mode`] with an explicit chunk policy.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_mode_with_policy<F>(
+        mode: Mode,
+        n: usize,
+        gpus_per_node: usize,
+        outer_freq: usize,
+        len: usize,
+        epochs: u64,
+        policy: ChunkPolicy,
+        fill: F,
+    ) -> (Vec<Vec<f32>>, Vec<CommStats>)
+    where
+        F: Fn(usize, u64) -> f32 + Send + Sync + Copy + 'static,
+    {
         let topo = Topology::new(n, gpus_per_node);
-        let region = RmaRegion::with_capacity(n, gpus_per_node);
+        let region = RmaRegion::with_capacity(n, rma_window_depth(gpus_per_node, policy));
         let endpoints = LocalNetwork::build(&topo, LinkModel::zero());
-        let collectives = build(mode, &topo, outer_freq, endpoints, &region).unwrap();
+        let collectives =
+            build_with_policy(mode, &topo, outer_freq, endpoints, &region, policy).unwrap();
         let handles: Vec<_> = collectives
             .into_iter()
             .enumerate()
@@ -169,10 +304,23 @@ pub(crate) mod testutil {
     }
 }
 
+/// RMA window depth needed per mode: one slot per inner-ring step for the
+/// unchunked schedule, twice that for the chunked reduce-scatter +
+/// all-gather schedule (2·(g-1) steps per epoch).
+pub fn rma_window_depth(gpus_per_node: usize, policy: ChunkPolicy) -> usize {
+    let base = gpus_per_node.max(2);
+    if policy.is_chunked() {
+        2 * base
+    } else {
+        base
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use testutil::run_mode;
+    use crate::util::proptest;
+    use testutil::{run_mode, run_mode_with_policy};
 
     /// Expected full average when rank r contributes value r.
     fn full_avg(n: usize) -> f32 {
@@ -181,12 +329,26 @@ mod tests {
 
     #[test]
     fn null_collective_reports_self_contribution() {
-        let mut c = NullCollective;
+        let mut c = NullCollective::default();
         let mut g = vec![1.0, 2.0];
         let s = c.epoch_reduce(0, &mut g).unwrap();
         assert_eq!(g, vec![1.0, 2.0]);
         assert_eq!(s.contributions, 1);
         assert_eq!(s.messages, 0);
+    }
+
+    #[test]
+    fn parked_reduce_fallback_roundtrip() {
+        let mut c = NullCollective::default();
+        assert!(c.wait_reduce().is_err()); // nothing in flight
+        c.start_reduce(0, vec![2.0, 4.0]).unwrap();
+        assert!(c.poll_reduce().unwrap());
+        // A second start while one is parked violates the engine contract.
+        assert!(c.start_reduce(1, vec![0.0]).is_err());
+        let (buf, s) = c.wait_reduce().unwrap();
+        assert_eq!(buf, vec![2.0, 4.0]);
+        assert_eq!(s.contributions, 1);
+        assert!(!c.poll_reduce().unwrap());
     }
 
     #[test]
@@ -202,6 +364,92 @@ mod tests {
             assert_eq!(s.messages, 5);
             assert_eq!(s.bytes_sent, 5 * 33 * 4);
             assert_eq!(s.contributions, 6);
+        }
+    }
+
+    #[test]
+    fn chunked_conv_arar_matches_unchunked_average() {
+        let n = 6;
+        let (grads, stats) =
+            run_mode_with_policy(Mode::ConvArar, n, 4, 1, 33, 1, ChunkPolicy::Auto, |r, _| {
+                r as f32
+            });
+        for g in &grads {
+            for v in g {
+                assert!((v - full_avg(n)).abs() < 1e-5, "got {v}");
+            }
+        }
+        // Bandwidth-optimal: strictly below the unchunked ring's bytes for
+        // N >= 4 (acceptance criterion).
+        let unchunked = (n - 1) * 33 * 4;
+        for s in &stats {
+            assert!(s.bytes_sent < unchunked, "{} !< {unchunked}", s.bytes_sent);
+            assert_eq!(s.contributions, n);
+        }
+    }
+
+    #[test]
+    fn chunked_grouped_modes_match_unchunked_results() {
+        for mode in [Mode::ArarArar, Mode::RmaArarArar] {
+            let (plain, _) = run_mode(mode, 8, 4, 1, 12, 1, |r, _| r as f32);
+            let (chunked, _) =
+                run_mode_with_policy(mode, 8, 4, 1, 12, 1, ChunkPolicy::Auto, |r, _| r as f32);
+            for (p, c) in plain.iter().zip(&chunked) {
+                for (a, b) in p.iter().zip(c) {
+                    assert!((a - b).abs() < 1e-5, "mode {mode:?}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_chunked_ring_matches_unchunked_any_shape() {
+        // Satellite: chunked reduce-scatter/all-gather must agree with the
+        // paper's unchunked ring for arbitrary N, chunk caps, and
+        // non-divisible tensor lengths.
+        proptest::run("chunked ring == unchunked ring", 25, |g| {
+            let n = g.usize_in(2..=6);
+            let len = g.usize_in(1..=65);
+            let max_elems = g.usize_in(0..=9);
+            let policy = if max_elems == 0 {
+                ChunkPolicy::Auto
+            } else {
+                ChunkPolicy::MaxElems(max_elems)
+            };
+            let seed = g.u64();
+            let fill = move |r: usize, _e: u64| {
+                // Deterministic pseudo-random per-rank value from the seed.
+                let x = seed ^ (r as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                ((x >> 16) % 1000) as f32 / 37.0 - 13.0
+            };
+            let (plain, _) = run_mode(Mode::ConvArar, n, 4, 1, len, 1, fill);
+            let (chunked, _) =
+                run_mode_with_policy(Mode::ConvArar, n, 4, 1, len, 1, policy, fill);
+            for (p, c) in plain.iter().zip(&chunked) {
+                for (a, b) in p.iter().zip(c) {
+                    assert!(
+                        (a - b).abs() < 1e-5,
+                        "n={n} len={len} policy={policy:?}: {a} vs {b}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn chunked_bytes_follow_two_nm1_over_n_law() {
+        // CommStats satellite: the chunked ring moves 2·(N-1)/N·|g| bytes
+        // per rank (exactly, for N | len) versus the ring's (N-1)·|g|.
+        let n = 4;
+        let len = 64; // divisible by n
+        let (_, stats) =
+            run_mode_with_policy(Mode::ConvArar, n, 4, 1, len, 1, ChunkPolicy::Auto, |r, _| {
+                r as f32
+            });
+        let expect = 2 * (n - 1) * (len / n) * 4;
+        for s in &stats {
+            assert_eq!(s.bytes_sent, expect);
+            assert_eq!(s.bytes_sent, ring::chunked_pass_bytes(len, n));
         }
     }
 
@@ -239,21 +487,10 @@ mod tests {
 
     #[test]
     fn grouped_inner_only_averages_within_node() {
-        // outer_freq larger than epochs -> no outer pass at all
-        // (epoch 0 triggers outer when epoch % freq == 0, so use fill
-        // epochs starting at 1 via epoch offset: run 1 epoch at e=0 but
-        // freq 0 is invalid; instead verify group-local averaging with
-        // freq = 7 and 1 epoch -> epoch 0 DOES do outer. So check inner
-        // semantics using 2 nodes and freq 7 with epochs run at e=1..2.)
-        let (grads, _) = run_mode(Mode::ArarArar, 8, 4, 7, 8, 3, |r, e| {
-            if e < 2 {
-                0.0
-            } else {
-                r as f32
-            }
-        });
-        // At the last epoch (e=2, not an outer epoch since 2 % 7 != 0),
-        // each rank averages only its node: node0 avg=1.5, node1 avg=5.5.
+        // outer_freq = 7 with a single epoch: (0 + 1) % 7 != 0, so no
+        // outer pass runs and each rank averages only its node.
+        let (grads, _) = run_mode(Mode::ArarArar, 8, 4, 7, 8, 1, |r, _| r as f32);
+        // node0 = {0..3} -> avg 1.5, node1 = {4..7} -> avg 5.5.
         for r in 0..4 {
             assert!((grads[r][0] - 1.5).abs() < 1e-4, "r{r} {}", grads[r][0]);
         }
@@ -264,8 +501,9 @@ mod tests {
 
     #[test]
     fn grouped_outer_pass_mixes_across_nodes() {
-        // epoch 0 runs inner then outer (0 % freq == 0): outer members
-        // exchange their inner-averaged gradients.
+        // freq 1: the outer ring fires every epoch ((e + 1) % 1 == 0), so
+        // a single epoch runs inner then outer: outer members exchange
+        // their inner-averaged gradients.
         let (grads, _) = run_mode(Mode::ArarArar, 8, 4, 1, 4, 1, |r, _| r as f32);
         // inner: node0 -> 1.5, node1 -> 5.5; outer over {0,4}: (1.5+5.5)/2
         assert!((grads[0][0] - 3.5).abs() < 1e-4);
@@ -305,5 +543,12 @@ mod tests {
             grp_msgs < conv_msgs / 2,
             "grouped {grp_msgs} vs conventional {conv_msgs}"
         );
+    }
+
+    #[test]
+    fn rma_window_depth_doubles_for_chunked() {
+        assert_eq!(rma_window_depth(4, ChunkPolicy::Unchunked), 4);
+        assert_eq!(rma_window_depth(4, ChunkPolicy::Auto), 8);
+        assert_eq!(rma_window_depth(1, ChunkPolicy::Unchunked), 2);
     }
 }

@@ -1,29 +1,110 @@
 //! Asynchronous ring-all-reduce over the point-to-point transport —
-//! Algorithm 1 of the paper.
+//! Algorithm 1 of the paper, plus the bandwidth-optimal chunked variant
+//! the collective engine adds on top.
 //!
-//! Unchunked (the paper explicitly does not split gradient tensors into
-//! chunks): every ring step forwards the *full* tensor, so one epoch of a
-//! ring of size N moves (N-1) x |g| elements per rank. This is exactly why
-//! the conventional mode's time grows with N in Fig 11 and why grouping
-//! (bounding N to the node size) flattens it.
+//! Two pass schedules:
+//!
+//! * [`ring_pass`] — unchunked (the paper explicitly does not split
+//!   gradient tensors into chunks): every ring step forwards the *full*
+//!   tensor, so one epoch of a ring of size N moves (N-1) x |g| elements
+//!   per rank. This is exactly why the conventional mode's time grows with
+//!   N in Fig 11 and why grouping (bounding N to the node size) flattens
+//!   it.
+//! * [`chunked_ring_pass`] — reduce-scatter + all-gather over N contiguous
+//!   partitions (NCCL-style): 2·(N-1) steps, each moving ~|g|/N elements,
+//!   for 2·(N-1)/N x |g| elements per rank total — bandwidth-optimal, and
+//!   strictly less traffic than the unchunked ring for every N >= 2.
 //!
 //! Sends are non-blocking (`isend`); receives block — but because every
 //! member sends before receiving at each step, the pass cannot deadlock.
+//! Both passes recycle received payload buffers into the caller-owned
+//! scratch storage, so the steady-state hot path performs no allocation.
 
 use std::time::Instant;
 
-use super::{Collective, CommStats};
+use super::{Collective, CommStats, ParkedReduce};
 use crate::comm::{Endpoint, GradMsg, Topology};
+use crate::config::ChunkPolicy;
 use crate::tensor::ops;
-use crate::util::error::Result;
+use crate::util::error::{Error, Result};
+
+/// Contiguous partition bounds: `n` half-open ranges covering `0..len`
+/// whose sizes differ by at most one (the first `len % n` partitions get
+/// the extra element). Handles `len < n` with empty tail partitions, so
+/// chunked passes work for arbitrary tensor lengths.
+pub fn partition_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
+    let base = len / n;
+    let extra = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let size = base + usize::from(i < extra);
+        out.push((start, start + size));
+        start += size;
+    }
+    out
+}
+
+/// Sub-message bounds within one partition `[lo, hi)`: split into pieces
+/// of at most `max_elems` elements (0 = one piece). An empty partition
+/// yields no messages. Sender and receiver compute identical splits from
+/// the shared partition bounds, so no extra framing is needed.
+pub fn sub_bounds(lo: usize, hi: usize, max_elems: usize) -> Vec<(usize, usize)> {
+    let len = hi - lo;
+    if len == 0 {
+        return Vec::new();
+    }
+    if max_elems == 0 || max_elems >= len {
+        return vec![(lo, hi)];
+    }
+    let mut out = Vec::with_capacity(len.div_ceil(max_elems));
+    let mut a = lo;
+    while a < hi {
+        let b = (a + max_elems).min(hi);
+        out.push((a, b));
+        a = b;
+    }
+    out
+}
+
+/// Bytes one rank sends through a chunked pass of `n` members over a
+/// `len`-element f32 tensor: the reduce-scatter and all-gather phases each
+/// send every partition except one. Shared by tests and the simulator.
+pub fn chunked_pass_bytes(len: usize, n: usize) -> usize {
+    if n <= 1 {
+        return 0;
+    }
+    let parts = partition_bounds(len, n);
+    let total: usize = parts.iter().map(|&(lo, hi)| hi - lo).sum();
+    debug_assert_eq!(total, len);
+    // Reduce-scatter: rank i sends partitions i, i-1, ... (all but one);
+    // all-gather: partitions i+1, i, ... (all but one). Over both phases
+    // every partition is sent exactly twice except the two skipped ones —
+    // per-rank totals differ only via partition remainders, so we account
+    // the two phases exactly for rank 0 (callers compare per-rank sums
+    // against this only for equal-size partitions, else use stats).
+    let me = 0usize;
+    let mut bytes = 0;
+    for s in 0..n - 1 {
+        let (lo, hi) = parts[(me + n - s) % n];
+        bytes += (hi - lo) * 4;
+        let (lo, hi) = parts[(me + n + 1 - s) % n];
+        bytes += (hi - lo) * 4;
+    }
+    bytes
+}
 
 /// One full ring-all-reduce pass over `members` (must contain the
 /// endpoint's rank). Averages in place over all members' contributions.
+/// `scratch` is caller-owned reusable storage for the forwarded payload;
+/// after the pass it holds the last received buffer, so repeated passes
+/// allocate nothing once the capacity is warm.
 pub fn ring_pass(
     ep: &Endpoint,
     members: &[usize],
     epoch: u64,
     grads: &mut [f32],
+    scratch: &mut Vec<f32>,
 ) -> Result<CommStats> {
     let n = members.len();
     let mut stats = CommStats {
@@ -34,10 +115,12 @@ pub fn ring_pass(
         return Ok(stats);
     }
     let (next, prev) = Topology::ring_in(members, ep.rank);
-    // The payload to forward: starts as our own gradient, then becomes
-    // whatever we received (so every rank's original gradient visits the
-    // whole ring exactly once).
-    let mut forward = grads.to_vec();
+    // The payload to forward: starts as our own gradient (staged into the
+    // recycled scratch buffer), then becomes whatever we received (so
+    // every rank's original gradient visits the whole ring exactly once).
+    let mut forward = std::mem::take(scratch);
+    forward.clear();
+    forward.extend_from_slice(grads);
     for step in 0..(n - 1) as u32 {
         ep.isend(next, GradMsg::new(ep.rank, epoch, step, forward))?;
         stats.messages += 1;
@@ -51,30 +134,194 @@ pub fn ring_pass(
         forward = msg.data;
     }
     ops::scale(grads, 1.0 / n as f32);
+    // Recycle the final received buffer for the next pass.
+    *scratch = forward;
     Ok(stats)
 }
 
+/// Bandwidth-optimal chunked ring pass: reduce-scatter then all-gather
+/// over `members`, averaging `grads` in place.
+///
+/// The tensor is split into one contiguous partition per member
+/// ([`partition_bounds`]); `max_msg_elems` optionally splits each
+/// partition transfer into smaller chunk-indexed messages (0 = one
+/// message per partition). At reduce-scatter step s, the rank at ring
+/// index i sends partition (i - s) mod n and accumulates partition
+/// (i - s - 1) mod n, so after n-1 steps it owns the complete sum of
+/// partition (i + 1) mod n; it averages that partition and the all-gather
+/// phase circulates the averaged partitions back to everyone.
+pub fn chunked_ring_pass(
+    ep: &Endpoint,
+    members: &[usize],
+    epoch: u64,
+    grads: &mut [f32],
+    pool: &mut Vec<Vec<f32>>,
+    max_msg_elems: usize,
+) -> Result<CommStats> {
+    let n = members.len();
+    let mut stats = CommStats {
+        contributions: 1,
+        ..Default::default()
+    };
+    if n <= 1 {
+        return Ok(stats);
+    }
+    let (next, prev) = Topology::ring_in(members, ep.rank);
+    let me = members
+        .iter()
+        .position(|&r| r == ep.rank)
+        .expect("rank not in ring");
+    let parts = partition_bounds(grads.len(), n);
+    let cap = max_msg_elems;
+    let mut step: u32 = 0;
+
+    // Phase 1: reduce-scatter.
+    for s in 0..n - 1 {
+        let si = (me + n - s) % n;
+        let ri = (me + n - s - 1) % n;
+        send_partition(ep, next, epoch, step, si, parts[si], grads, pool, cap, &mut stats)?;
+        recv_partition(ep, prev, ri, parts[ri], grads, pool, cap, &mut stats, true)?;
+        step += 1;
+    }
+    // Own fully-reduced partition: average it before circulating.
+    let own = (me + 1) % n;
+    let (lo, hi) = parts[own];
+    ops::scale(&mut grads[lo..hi], 1.0 / n as f32);
+    stats.contributions = n;
+
+    // Phase 2: all-gather the averaged partitions.
+    for s in 0..n - 1 {
+        let si = (me + n + 1 - s) % n;
+        let ri = (me + n - s) % n;
+        send_partition(ep, next, epoch, step, si, parts[si], grads, pool, cap, &mut stats)?;
+        recv_partition(ep, prev, ri, parts[ri], grads, pool, cap, &mut stats, false)?;
+        step += 1;
+    }
+    Ok(stats)
+}
+
+/// Send one partition of `grads` as one or more chunk-indexed messages.
+#[allow(clippy::too_many_arguments)]
+fn send_partition(
+    ep: &Endpoint,
+    next: usize,
+    epoch: u64,
+    step: u32,
+    part_idx: usize,
+    (lo, hi): (usize, usize),
+    grads: &[f32],
+    pool: &mut Vec<Vec<f32>>,
+    max_msg_elems: usize,
+    stats: &mut CommStats,
+) -> Result<()> {
+    for (a, b) in sub_bounds(lo, hi, max_msg_elems) {
+        let mut buf = pool.pop().unwrap_or_default();
+        buf.clear();
+        buf.extend_from_slice(&grads[a..b]);
+        ep.isend(
+            next,
+            GradMsg::chunked(ep.rank, epoch, step, part_idx as u32, buf),
+        )?;
+        stats.messages += 1;
+        stats.bytes_sent += (b - a) * 4;
+    }
+    Ok(())
+}
+
+/// Receive one partition's messages; accumulate (reduce-scatter) or copy
+/// (all-gather) into `grads`, recycling payload buffers into `pool`.
+#[allow(clippy::too_many_arguments)]
+fn recv_partition(
+    ep: &Endpoint,
+    prev: usize,
+    part_idx: usize,
+    (lo, hi): (usize, usize),
+    grads: &mut [f32],
+    pool: &mut Vec<Vec<f32>>,
+    max_msg_elems: usize,
+    stats: &mut CommStats,
+    accumulate: bool,
+) -> Result<()> {
+    for (a, b) in sub_bounds(lo, hi, max_msg_elems) {
+        let t0 = Instant::now();
+        let msg = ep.recv(prev)?;
+        stats.wait_s += t0.elapsed().as_secs_f64();
+        if msg.chunk as usize != part_idx || msg.data.len() != b - a {
+            return Err(Error::comm(format!(
+                "chunked ring desync: expected partition {part_idx} [{a}, {b}), \
+                 got chunk {} of {} elements",
+                msg.chunk,
+                msg.data.len()
+            )));
+        }
+        if accumulate {
+            ops::add_assign(&mut grads[a..b], &msg.data);
+        } else {
+            grads[a..b].copy_from_slice(&msg.data);
+        }
+        if pool.len() < 4 {
+            pool.push(msg.data);
+        }
+    }
+    if accumulate {
+        stats.contributions += 1;
+    }
+    Ok(())
+}
+
 /// Conventional ARAR: one global ring over all ranks, every epoch (the
-/// "ARAR / no group" row of Table II).
+/// "ARAR / no group" row of Table II). The chunk policy selects between
+/// the paper's unchunked pass (default) and the bandwidth-optimal
+/// reduce-scatter + all-gather schedule.
 pub struct ConvArar {
     ep: Endpoint,
     members: Vec<usize>,
+    policy: ChunkPolicy,
+    scratch: Vec<f32>,
+    pool: Vec<Vec<f32>>,
+    parked: ParkedReduce,
 }
 
 impl ConvArar {
     pub fn new(ep: Endpoint) -> ConvArar {
+        Self::with_policy(ep, ChunkPolicy::Unchunked)
+    }
+
+    pub fn with_policy(ep: Endpoint, policy: ChunkPolicy) -> ConvArar {
         let members = ep.topology().all_ranks();
-        ConvArar { ep, members }
+        ConvArar {
+            ep,
+            members,
+            policy,
+            scratch: Vec::new(),
+            pool: Vec::new(),
+            parked: ParkedReduce::default(),
+        }
     }
 }
 
 impl Collective for ConvArar {
     fn epoch_reduce(&mut self, epoch: u64, grads: &mut [f32]) -> Result<CommStats> {
-        ring_pass(&self.ep, &self.members, epoch, grads)
+        if self.policy.is_chunked() {
+            chunked_ring_pass(
+                &self.ep,
+                &self.members,
+                epoch,
+                grads,
+                &mut self.pool,
+                self.policy.max_message_elems(),
+            )
+        } else {
+            ring_pass(&self.ep, &self.members, epoch, grads, &mut self.scratch)
+        }
     }
 
     fn name(&self) -> &'static str {
         "conv-arar"
+    }
+
+    fn parked(&mut self) -> &mut ParkedReduce {
+        &mut self.parked
     }
 }
 
@@ -83,8 +330,14 @@ mod tests {
     use super::*;
     use crate::comm::{LinkModel, LocalNetwork};
 
-    /// Drive a ring pass over a subset of ranks on threads.
-    fn run_ring(n: usize, members: Vec<usize>, values: Vec<f32>) -> Vec<Vec<f32>> {
+    /// Drive a pass over a subset of ranks on threads.
+    fn run_ring_with(
+        n: usize,
+        members: Vec<usize>,
+        values: Vec<f32>,
+        len: usize,
+        chunked: Option<usize>,
+    ) -> Vec<Vec<f32>> {
         let topo = Topology::new(n, 4);
         let endpoints = LocalNetwork::build(&topo, LinkModel::zero());
         let handles: Vec<_> = endpoints
@@ -93,15 +346,29 @@ mod tests {
                 let members = members.clone();
                 let v = values[ep.rank];
                 std::thread::spawn(move || {
-                    let mut grads = vec![v; 5];
+                    let mut grads = vec![v; len];
                     if members.contains(&ep.rank) {
-                        ring_pass(&ep, &members, 0, &mut grads).unwrap();
+                        match chunked {
+                            Some(max) => {
+                                let mut pool = Vec::new();
+                                chunked_ring_pass(&ep, &members, 0, &mut grads, &mut pool, max)
+                                    .unwrap();
+                            }
+                            None => {
+                                let mut scratch = Vec::new();
+                                ring_pass(&ep, &members, 0, &mut grads, &mut scratch).unwrap();
+                            }
+                        }
                     }
                     grads
                 })
             })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    fn run_ring(n: usize, members: Vec<usize>, values: Vec<f32>) -> Vec<Vec<f32>> {
+        run_ring_with(n, members, values, 5, None)
     }
 
     #[test]
@@ -137,7 +404,8 @@ mod tests {
             .map(|ep| {
                 std::thread::spawn(move || {
                     let mut grads = vec![1.0f32; 100];
-                    ring_pass(&ep, &[0, 1, 2], 0, &mut grads).unwrap()
+                    let mut scratch = Vec::new();
+                    ring_pass(&ep, &[0, 1, 2], 0, &mut grads, &mut scratch).unwrap()
                 })
             })
             .collect();
@@ -146,6 +414,163 @@ mod tests {
             assert_eq!(s.messages, 2); // N-1
             assert_eq!(s.bytes_sent, 2 * 100 * 4); // full tensor each step
             assert_eq!(s.contributions, 3);
+        }
+    }
+
+    #[test]
+    fn scratch_buffer_is_reused_across_passes() {
+        let topo = Topology::new(2, 4);
+        let eps = LocalNetwork::build(&topo, LinkModel::zero());
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                std::thread::spawn(move || {
+                    let mut scratch = Vec::new();
+                    let mut grads = vec![1.0f32; 64];
+                    ring_pass(&ep, &[0, 1], 0, &mut grads, &mut scratch).unwrap();
+                    // After a pass the scratch holds a recycled buffer of
+                    // the tensor size: the next pass needs no allocation.
+                    assert_eq!(scratch.len(), 64);
+                    let cap = scratch.capacity();
+                    ring_pass(&ep, &[0, 1], 1, &mut grads, &mut scratch).unwrap();
+                    assert_eq!(scratch.capacity(), cap);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn partition_bounds_cover_and_balance() {
+        for (len, n) in [(10, 3), (7, 7), (3, 5), (0, 4), (51_206, 8)] {
+            let parts = partition_bounds(len, n);
+            assert_eq!(parts.len(), n);
+            assert_eq!(parts[0].0, 0);
+            assert_eq!(parts[n - 1].1, len);
+            let mut prev_end = 0;
+            let mut min = usize::MAX;
+            let mut max = 0;
+            for &(lo, hi) in &parts {
+                assert_eq!(lo, prev_end);
+                prev_end = hi;
+                min = min.min(hi - lo);
+                max = max.max(hi - lo);
+            }
+            assert!(max - min <= 1, "unbalanced: len={len} n={n}");
+        }
+    }
+
+    #[test]
+    fn sub_bounds_split_and_degenerate_cases() {
+        assert_eq!(sub_bounds(4, 10, 0), vec![(4, 10)]);
+        assert_eq!(sub_bounds(4, 10, 100), vec![(4, 10)]);
+        assert_eq!(sub_bounds(4, 10, 4), vec![(4, 8), (8, 10)]);
+        assert_eq!(sub_bounds(5, 5, 3), Vec::<(usize, usize)>::new());
+    }
+
+    #[test]
+    fn chunked_pass_matches_unchunked_average() {
+        for (n, len, max) in [(4usize, 32usize, 0usize), (3, 7, 2), (5, 5, 1), (2, 9, 4)] {
+            let values: Vec<f32> = (0..n).map(|r| r as f32 * 3.0 + 1.0).collect();
+            let expected: f32 = values.iter().sum::<f32>() / n as f32;
+            let members: Vec<usize> = (0..n).collect();
+            let grads = run_ring_with(n, members, values, len, Some(max));
+            for g in &grads {
+                for v in g {
+                    assert!((v - expected).abs() < 1e-5, "n={n} len={len} got {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_subset_ring_only_touches_members() {
+        let grads = run_ring_with(4, vec![1, 3], vec![1.0, 4.0, 9.0, 8.0], 11, Some(3));
+        assert_eq!(grads[1], vec![6.0; 11]);
+        assert_eq!(grads[3], vec![6.0; 11]);
+        assert_eq!(grads[0], vec![1.0; 11]);
+        assert_eq!(grads[2], vec![9.0; 11]);
+    }
+
+    #[test]
+    fn chunked_stats_count_bandwidth_optimal_traffic() {
+        // len divisible by n: every rank sends exactly 2·(n-1)·(len/n)
+        // elements — strictly below the unchunked (n-1)·len for n >= 2.
+        let n = 4;
+        let len = 100;
+        let topo = Topology::new(n, 4);
+        let eps = LocalNetwork::build(&topo, LinkModel::zero());
+        let members: Vec<usize> = (0..n).collect();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                let members = members.clone();
+                std::thread::spawn(move || {
+                    let mut grads = vec![1.0f32; len];
+                    let mut pool = Vec::new();
+                    chunked_ring_pass(&ep, &members, 0, &mut grads, &mut pool, 0).unwrap()
+                })
+            })
+            .collect();
+        let unchunked_bytes = (n - 1) * len * 4;
+        for h in handles {
+            let s = h.join().unwrap();
+            assert_eq!(s.messages, 2 * (n - 1));
+            assert_eq!(s.bytes_sent, 2 * (n - 1) * (len / n) * 4);
+            assert_eq!(s.bytes_sent, chunked_pass_bytes(len, n));
+            assert!(s.bytes_sent < unchunked_bytes);
+            assert_eq!(s.contributions, n);
+        }
+    }
+
+    #[test]
+    fn chunked_message_cap_raises_message_count_not_bytes() {
+        let n = 2;
+        let len = 10; // partitions of 5; cap 2 -> 3 messages per transfer
+        let topo = Topology::new(n, 4);
+        let eps = LocalNetwork::build(&topo, LinkModel::zero());
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                std::thread::spawn(move || {
+                    let mut grads = vec![1.0f32; len];
+                    let mut pool = Vec::new();
+                    chunked_ring_pass(&ep, &[0, 1], 0, &mut grads, &mut pool, 2).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let s = h.join().unwrap();
+            // 2 partition transfers of 5 elements, 3 sub-messages each.
+            assert_eq!(s.messages, 6);
+            assert_eq!(s.bytes_sent, 2 * 5 * 4);
+        }
+    }
+
+    #[test]
+    fn conv_arar_with_policy_dispatches_chunked() {
+        let topo = Topology::new(4, 4);
+        let eps = LocalNetwork::build(&topo, LinkModel::zero());
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                let v = ep.rank as f32;
+                std::thread::spawn(move || {
+                    let mut c = ConvArar::with_policy(ep, ChunkPolicy::Auto);
+                    let mut grads = vec![v; 13];
+                    let s = c.epoch_reduce(0, &mut grads).unwrap();
+                    (grads, s)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (g, s) = h.join().unwrap();
+            for v in g {
+                assert!((v - 1.5).abs() < 1e-5);
+            }
+            assert_eq!(s.messages, 6); // 2·(n-1)
         }
     }
 }

@@ -9,9 +9,17 @@
 //! deadline and then simply proceeds with the contributions it has — the
 //! bounded-staleness behaviour that motivated RMA in the paper (pipeline
 //! stalls of up to ~1 min/epoch between ranks).
+//!
+//! [`RmaRing::pass_chunked`] runs the bandwidth-optimal reduce-scatter +
+//! all-gather schedule over the same windows. Staleness handling carries
+//! over: a timed-out or desynchronized get aborts the remaining schedule
+//! and every partition is normalized by the contributions it actually
+//! accumulated, so the buffer always holds a (possibly partial) average —
+//! never an unscaled sum.
 
 use std::time::{Duration, Instant};
 
+use super::ring::partition_bounds;
 use super::CommStats;
 use crate::comm::{GradMsg, RmaRegion, RmaWindow, Topology};
 use crate::tensor::ops;
@@ -31,6 +39,8 @@ pub struct RmaRing {
     /// Window we read (written by predecessor).
     from_prev: RmaWindow,
     pub get_timeout: Duration,
+    /// Recycled payload buffer (puts move owned Vecs into the window).
+    scratch: Vec<f32>,
 }
 
 impl RmaRing {
@@ -43,12 +53,13 @@ impl RmaRing {
             from_prev: region.window(prev, rank)?,
             members,
             get_timeout: DEFAULT_GET_TIMEOUT,
+            scratch: Vec::new(),
         })
     }
 
     /// One full RMA ring pass; averages over the contributions actually
     /// received (own + successful gets).
-    pub fn pass(&self, epoch: u64, grads: &mut [f32]) -> Result<CommStats> {
+    pub fn pass(&mut self, epoch: u64, grads: &mut [f32]) -> Result<CommStats> {
         let n = self.members.len();
         let mut stats = CommStats {
             contributions: 1,
@@ -57,7 +68,11 @@ impl RmaRing {
         if n <= 1 {
             return Ok(stats);
         }
-        let mut forward = grads.to_vec();
+        // Stage our own gradient into the recycled scratch buffer — the
+        // steady-state pass performs no allocation.
+        let mut forward = std::mem::take(&mut self.scratch);
+        forward.clear();
+        forward.extend_from_slice(grads);
         for step in 0..(n - 1) as u32 {
             self.to_next
                 .put(GradMsg::new(self.rank, epoch, step, forward));
@@ -76,14 +91,160 @@ impl RmaRing {
                 None => {
                     // Neighbour never deposited within the deadline:
                     // proceed with what we have (no rendezvous, by design).
+                    // The forwarded buffer is already deposited in the
+                    // window and unrecoverable; pre-size the replacement
+                    // so the next pass stages with a single allocation.
                     stats.wait_s += t0.elapsed().as_secs_f64();
                     stats.timeouts += 1;
+                    forward = Vec::with_capacity(grads.len());
                     break;
                 }
             }
         }
         ops::scale(grads, 1.0 / stats.contributions as f32);
+        self.scratch = forward;
         Ok(stats)
+    }
+
+    /// Chunked reduce-scatter + all-gather over the RMA windows. Healthy
+    /// runs produce exact averages with 2·(N-1)/N·|g| bytes per rank; a
+    /// timed-out or out-of-order get aborts the remaining schedule and
+    /// normalizes every partition by its actual contribution count.
+    /// (`_max_msg_elems` is accepted for signature parity with the
+    /// transport pass but ignored: window capacity is provisioned per ring
+    /// step, so each partition travels as a single deposit.)
+    pub fn pass_chunked(
+        &mut self,
+        epoch: u64,
+        grads: &mut [f32],
+        _max_msg_elems: usize,
+    ) -> Result<CommStats> {
+        let n = self.members.len();
+        let mut stats = CommStats {
+            contributions: 1,
+            ..Default::default()
+        };
+        if n <= 1 {
+            return Ok(stats);
+        }
+        let me = self
+            .members
+            .iter()
+            .position(|&r| r == self.rank)
+            .expect("rank not in ring");
+        let parts = partition_bounds(grads.len(), n);
+        // Per-partition contribution counts; a partition not yet averaged
+        // holds the raw sum of `contrib[p]` ranks' gradients.
+        let mut contrib = vec![1usize; n];
+        // Partitions already holding a *complete average* (own after the
+        // scale step, or received during all-gather).
+        let mut averaged = vec![false; n];
+        let mut step: u32 = 0;
+        let mut aborted = false;
+
+        // Phase 1: reduce-scatter.
+        for s in 0..n - 1 {
+            let send_idx = (me + n - s) % n;
+            let recv_idx = (me + n - s - 1) % n;
+            self.put_partition(epoch, step, send_idx, parts[send_idx], grads, &mut stats);
+            let (lo, hi) = parts[recv_idx];
+            match self.get_partition(recv_idx, hi - lo, &mut stats) {
+                Some(msg) => {
+                    ops::add_assign(&mut grads[lo..hi], &msg.data);
+                    contrib[recv_idx] = s + 2;
+                    stats.contributions += 1;
+                    self.recycle(msg.data);
+                }
+                None => {
+                    aborted = true;
+                    break;
+                }
+            }
+            step += 1;
+        }
+        // Average every partition by what it actually accumulated. In the
+        // healthy case only the own partition (contrib = n) survives into
+        // the all-gather sends; the others are overwritten below.
+        for (p, &(lo, hi)) in parts.iter().enumerate() {
+            ops::scale(&mut grads[lo..hi], 1.0 / contrib[p] as f32);
+        }
+        let own = (me + 1) % n;
+        averaged[own] = contrib[own] == n;
+
+        // Phase 2: all-gather the averaged partitions.
+        if !aborted {
+            for s in 0..n - 1 {
+                let send_idx = (me + n + 1 - s) % n;
+                let recv_idx = (me + n - s) % n;
+                self.put_partition(epoch, step, send_idx, parts[send_idx], grads, &mut stats);
+                let (lo, hi) = parts[recv_idx];
+                match self.get_partition(recv_idx, hi - lo, &mut stats) {
+                    Some(msg) => {
+                        grads[lo..hi].copy_from_slice(&msg.data);
+                        averaged[recv_idx] = true;
+                        self.recycle(msg.data);
+                    }
+                    None => break,
+                }
+                step += 1;
+            }
+        }
+        if averaged.iter().all(|&a| a) {
+            stats.contributions = n;
+        }
+        Ok(stats)
+    }
+
+    fn put_partition(
+        &mut self,
+        epoch: u64,
+        step: u32,
+        part_idx: usize,
+        (lo, hi): (usize, usize),
+        grads: &[f32],
+        stats: &mut CommStats,
+    ) {
+        let mut buf = std::mem::take(&mut self.scratch);
+        buf.clear();
+        buf.extend_from_slice(&grads[lo..hi]);
+        self.to_next
+            .put(GradMsg::chunked(self.rank, epoch, step, part_idx as u32, buf));
+        stats.messages += 1;
+        stats.bytes_sent += (hi - lo) * 4;
+    }
+
+    /// Get one partition message; `None` on timeout or desync (counted).
+    fn get_partition(
+        &mut self,
+        part_idx: usize,
+        want_len: usize,
+        stats: &mut CommStats,
+    ) -> Option<GradMsg> {
+        let t0 = Instant::now();
+        match self.from_prev.get_wait(self.get_timeout) {
+            Some((msg, skipped)) => {
+                stats.wait_s += t0.elapsed().as_secs_f64();
+                stats.stale_reads += skipped;
+                if msg.chunk as usize != part_idx || msg.data.len() != want_len {
+                    // Out-of-order deposit (the neighbour dropped slots):
+                    // treat like a timeout — bounded staleness by design.
+                    stats.timeouts += 1;
+                    return None;
+                }
+                Some(msg)
+            }
+            None => {
+                stats.wait_s += t0.elapsed().as_secs_f64();
+                stats.timeouts += 1;
+                None
+            }
+        }
+    }
+
+    fn recycle(&mut self, buf: Vec<f32>) {
+        if buf.capacity() > self.scratch.capacity() {
+            self.scratch = buf;
+        }
     }
 }
 
@@ -102,7 +263,7 @@ mod tests {
             .collect();
         let handles: Vec<_> = rings
             .into_iter()
-            .map(|ring| {
+            .map(|mut ring| {
                 let v = values[ring.rank];
                 std::thread::spawn(move || {
                     let mut grads = vec![v; 7];
@@ -127,11 +288,44 @@ mod tests {
     }
 
     #[test]
+    fn chunked_ring_matches_transport_average() {
+        let members = vec![0usize, 1, 2, 3];
+        let values = [0.0f32, 1.0, 2.0, 3.0];
+        let len = 11; // non-divisible by 4
+        let region = RmaRegion::with_capacity(4, 2 * members.len());
+        let rings: Vec<_> = members
+            .iter()
+            .map(|&r| RmaRing::new(&region, members.clone(), r).unwrap())
+            .collect();
+        let handles: Vec<_> = rings
+            .into_iter()
+            .map(|mut ring| {
+                let v = values[ring.rank];
+                std::thread::spawn(move || {
+                    let mut grads = vec![v; len];
+                    let stats = ring.pass_chunked(0, &mut grads, 0).unwrap();
+                    (grads, stats)
+                })
+            })
+            .collect();
+        let unchunked_bytes = 3 * len * 4;
+        for h in handles {
+            let (g, s) = h.join().unwrap();
+            for v in g {
+                assert!((v - 1.5).abs() < 1e-5, "got {v}");
+            }
+            assert_eq!(s.contributions, 4);
+            assert_eq!(s.timeouts, 0);
+            assert!(s.bytes_sent < unchunked_bytes);
+        }
+    }
+
+    #[test]
     fn timeout_proceeds_with_partial_average() {
         // Rank 1 never participates: rank 0's get times out and it averages
         // only its own gradient.
         let region = RmaRegion::new(2);
-        let ring = RmaRing {
+        let mut ring = RmaRing {
             get_timeout: Duration::from_millis(30),
             ..RmaRing::new(&region, vec![0, 1], 0).unwrap()
         };
@@ -143,9 +337,24 @@ mod tests {
     }
 
     #[test]
+    fn chunked_timeout_never_leaves_unscaled_sums() {
+        // Rank 1 never participates: every partition must still hold a
+        // *scaled* value (here: own gradient / 1), never a raw sum.
+        let region = RmaRegion::with_capacity(2, 4);
+        let mut ring = RmaRing {
+            get_timeout: Duration::from_millis(20),
+            ..RmaRing::new(&region, vec![0, 1], 0).unwrap()
+        };
+        let mut grads = vec![6.0f32; 5];
+        let s = ring.pass_chunked(0, &mut grads, 0).unwrap();
+        assert!(s.timeouts >= 1);
+        assert_eq!(grads, vec![6.0; 5]);
+    }
+
+    #[test]
     fn writer_never_blocks_on_dead_reader() {
         let region = RmaRegion::new(2);
-        let ring = RmaRing {
+        let mut ring = RmaRing {
             get_timeout: Duration::from_millis(10),
             ..RmaRing::new(&region, vec![0, 1], 0).unwrap()
         };
@@ -165,7 +374,7 @@ mod tests {
         for e in 0..3 {
             w.put(GradMsg::new(0, e, 0, vec![e as f32]));
         }
-        let ring = RmaRing::new(&region, vec![0, 1], 1).unwrap();
+        let mut ring = RmaRing::new(&region, vec![0, 1], 1).unwrap();
         let mut grads = vec![10.0f32];
         let s = ring.pass(7, &mut grads).unwrap();
         assert_eq!(s.stale_reads, 2); // two deposits were overwritten

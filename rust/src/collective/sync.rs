@@ -12,7 +12,7 @@ use std::sync::{Arc, Barrier};
 use std::time::Instant;
 
 use super::ring::ring_pass;
-use super::{Collective, CommStats};
+use super::{Collective, CommStats, ParkedReduce};
 use crate::comm::Endpoint;
 use crate::util::error::Result;
 
@@ -21,6 +21,8 @@ pub struct SyncAllReduce {
     ep: Endpoint,
     members: Vec<usize>,
     barrier: Arc<Barrier>,
+    scratch: Vec<f32>,
+    parked: ParkedReduce,
 }
 
 impl SyncAllReduce {
@@ -30,6 +32,8 @@ impl SyncAllReduce {
             ep,
             members,
             barrier,
+            scratch: Vec::new(),
+            parked: ParkedReduce::default(),
         }
     }
 }
@@ -40,7 +44,7 @@ impl Collective for SyncAllReduce {
         // cost the asynchronous modes avoid).
         let t0 = Instant::now();
         self.barrier.wait();
-        let mut stats = ring_pass(&self.ep, &self.members, epoch, grads)?;
+        let mut stats = ring_pass(&self.ep, &self.members, epoch, grads, &mut self.scratch)?;
         // Exit barrier: no rank starts the next step until the
         // collective is globally complete.
         self.barrier.wait();
@@ -50,6 +54,10 @@ impl Collective for SyncAllReduce {
 
     fn name(&self) -> &'static str {
         "horovod"
+    }
+
+    fn parked(&mut self) -> &mut ParkedReduce {
+        &mut self.parked
     }
 }
 

@@ -12,7 +12,7 @@
 
 use std::time::Instant;
 
-use super::{Collective, CommStats};
+use super::{Collective, CommStats, ParkedReduce};
 use crate::comm::{Endpoint, GradMsg};
 use crate::tensor::ops;
 use crate::util::error::Result;
@@ -21,12 +21,17 @@ use crate::util::error::Result;
 pub struct TreeAllReduce {
     ep: Endpoint,
     n: usize,
+    parked: ParkedReduce,
 }
 
 impl TreeAllReduce {
     pub fn new(ep: Endpoint) -> TreeAllReduce {
         let n = ep.topology().ranks;
-        TreeAllReduce { ep, n }
+        TreeAllReduce {
+            ep,
+            n,
+            parked: ParkedReduce::default(),
+        }
     }
 
     fn parent(rank: usize) -> Option<usize> {
@@ -90,6 +95,10 @@ impl Collective for TreeAllReduce {
 
     fn name(&self) -> &'static str {
         "dbtree"
+    }
+
+    fn parked(&mut self) -> &mut ParkedReduce {
+        &mut self.parked
     }
 }
 

@@ -127,6 +127,20 @@ impl LinkModel {
         2.0 * self.staging_s_per_byte * bytes as f64
     }
 
+    /// Modelled time for a payload split into `messages` chunks on one
+    /// link: the per-message latency α is paid per chunk while the
+    /// bandwidth term depends only on the total bytes. `messages = 1`
+    /// reduces to [`LinkModel::transfer_s`]; this is the per-chunk
+    /// accounting the chunked collectives and the simulator share.
+    pub fn chunked_transfer_s(&self, same_node: bool, bytes: usize, messages: usize) -> f64 {
+        let link = if same_node {
+            &self.intra_node
+        } else {
+            &self.inter_node
+        };
+        messages.max(1) as f64 * link.alpha_s + link.beta_s_per_byte * bytes as f64
+    }
+
     /// Delay to inject on a real in-process message (None when injection
     /// is disabled).
     pub fn delay_for(&self, same_node: bool, bytes: usize) -> Option<Duration> {
@@ -175,6 +189,20 @@ mod tests {
         assert_eq!(m.transfer_s(true, 12345), 0.0);
         assert_eq!(m.staging_s(999), 0.0);
         assert!(m.delay_for(true, 1).is_none());
+    }
+
+    #[test]
+    fn chunked_transfer_pays_alpha_per_chunk() {
+        let m = LinkModel::polaris_like();
+        let bytes = 1 << 20;
+        let one = m.chunked_transfer_s(false, bytes, 1);
+        assert!((one - m.transfer_s(false, bytes)).abs() < 1e-15);
+        let eight = m.chunked_transfer_s(false, bytes, 8);
+        // 7 extra α terms, identical bandwidth term.
+        let expect = one + 7.0 * m.inter_node.alpha_s;
+        assert!((eight - expect).abs() < 1e-15);
+        // messages = 0 is clamped to one message.
+        assert_eq!(m.chunked_transfer_s(false, bytes, 0), one);
     }
 
     #[test]

@@ -11,8 +11,13 @@ pub struct GradMsg {
     /// Training epoch the gradients belong to.
     pub epoch: u64,
     /// Ring step within the epoch (disambiguates the N-1 messages of one
-    /// ring pass).
+    /// ring pass; chunked passes use 2·(N-1) steps).
     pub step: u32,
+    /// Partition (chunk) index the payload belongs to. Unchunked passes
+    /// always send chunk 0 = the whole tensor; chunked reduce-scatter /
+    /// all-gather passes send one partition per message so the receiver
+    /// can place (and sanity-check) the slice it accumulates.
+    pub chunk: u32,
     /// Earliest wall-clock instant the receiver may observe the message
     /// (link-model latency injection; `None` = immediate).
     pub deliver_at: Option<Instant>,
@@ -26,8 +31,17 @@ impl GradMsg {
             from,
             epoch,
             step,
+            chunk: 0,
             deliver_at: None,
             data,
+        }
+    }
+
+    /// A chunk-indexed message (one partition of a chunked ring pass).
+    pub fn chunked(from: usize, epoch: u64, step: u32, chunk: u32, data: Vec<f32>) -> GradMsg {
+        GradMsg {
+            chunk,
+            ..GradMsg::new(from, epoch, step, data)
         }
     }
 
@@ -60,6 +74,17 @@ mod tests {
         assert_eq!(m.from, 0);
         assert_eq!(m.epoch, 1);
         assert_eq!(m.step, 2);
+        assert_eq!(m.chunk, 0); // unchunked = whole tensor
+    }
+
+    #[test]
+    fn chunked_constructor_carries_partition_index() {
+        let m = GradMsg::chunked(3, 7, 5, 2, vec![1.0; 4]);
+        assert_eq!(m.from, 3);
+        assert_eq!(m.epoch, 7);
+        assert_eq!(m.step, 5);
+        assert_eq!(m.chunk, 2);
+        assert_eq!(m.bytes(), 16);
     }
 
     #[test]

@@ -65,6 +65,79 @@ impl Mode {
     }
 }
 
+/// How a ring collective splits the gradient tensor across ring steps.
+///
+/// The paper explicitly does *not* chunk: every ring step forwards the
+/// full tensor, so a ring of N moves (N-1)·|g| bytes per rank per epoch.
+/// The chunked policies switch the transport rings to a bandwidth-optimal
+/// reduce-scatter + all-gather schedule (NCCL-style) that moves
+/// 2·(N-1)/N·|g| bytes per rank instead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkPolicy {
+    /// Paper-faithful: one full-tensor message per ring step (default).
+    Unchunked,
+    /// Reduce-scatter + all-gather with one contiguous partition per ring
+    /// member.
+    Auto,
+    /// Reduce-scatter + all-gather with partition transfers further split
+    /// into messages of at most this many elements (pipelining
+    /// granularity; must be >= 1).
+    MaxElems(usize),
+}
+
+impl ChunkPolicy {
+    /// Parse from a config value: `"unchunked"`/`"none"`, `"auto"`/
+    /// `"chunked"`, or a positive integer (max elements per message).
+    pub fn parse_value(v: &Value) -> Result<ChunkPolicy> {
+        if let Some(s) = v.as_str() {
+            return Self::parse_str(s);
+        }
+        match v.as_usize() {
+            Some(n) if n >= 1 => Ok(ChunkPolicy::MaxElems(n)),
+            _ => Err(Error::config(
+                "chunking must be unchunked|auto|<positive integer>",
+            )),
+        }
+    }
+
+    /// Parse from a CLI-style string (same forms as [`Self::parse_value`]).
+    pub fn parse_str(s: &str) -> Result<ChunkPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "unchunked" | "none" => Ok(ChunkPolicy::Unchunked),
+            "auto" | "chunked" => Ok(ChunkPolicy::Auto),
+            other => match other.parse::<usize>() {
+                Ok(n) if n >= 1 => Ok(ChunkPolicy::MaxElems(n)),
+                _ => Err(Error::config(format!(
+                    "chunking must be unchunked|auto|<max elems>, got '{other}'"
+                ))),
+            },
+        }
+    }
+
+    /// Whether rings run the reduce-scatter + all-gather schedule.
+    pub fn is_chunked(&self) -> bool {
+        !matches!(self, ChunkPolicy::Unchunked)
+    }
+
+    /// Per-message element cap inside one partition transfer (0 = send the
+    /// whole partition in one message).
+    pub fn max_message_elems(&self) -> usize {
+        match self {
+            ChunkPolicy::MaxElems(m) => *m,
+            _ => 0,
+        }
+    }
+
+    /// Human-readable label for reports.
+    pub fn label(&self) -> String {
+        match self {
+            ChunkPolicy::Unchunked => "unchunked".into(),
+            ChunkPolicy::Auto => "auto".into(),
+            ChunkPolicy::MaxElems(m) => format!("max-elems-{m}"),
+        }
+    }
+}
+
 /// Full run configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -94,6 +167,13 @@ pub struct RunConfig {
     pub include_bias: bool,
     /// Tensor-fusion bucket size in elements (0 = single fused buffer).
     pub fusion_bucket: usize,
+    /// Ring chunking policy (paper: unchunked).
+    pub chunking: ChunkPolicy,
+    /// Overlap gradient exchange with the next epoch's bootstrap draw and
+    /// `gan_step` via the collective engine's non-blocking API. Generator
+    /// updates then use one-epoch-stale averaged gradients (paper: false —
+    /// the trainer blocks on the exchange every epoch).
+    pub overlap_comm: bool,
     /// Checkpoint cadence in epochs (paper: every 5k, 21 checkpoints).
     pub checkpoint_every: usize,
     /// Base RNG seed.
@@ -150,6 +230,12 @@ impl RunConfig {
                         .ok_or_else(|| Error::config("include_bias must be a bool"))?
                 }
                 "fusion_bucket" => cfg.fusion_bucket = as_usize(val, k)?,
+                "chunking" => cfg.chunking = ChunkPolicy::parse_value(val)?,
+                "overlap_comm" => {
+                    cfg.overlap_comm = val
+                        .as_bool()
+                        .ok_or_else(|| Error::config("overlap_comm must be a bool"))?
+                }
                 "checkpoint_every" => cfg.checkpoint_every = as_usize(val, k)?,
                 "seed" => {
                     cfg.seed = val
@@ -199,6 +285,9 @@ impl RunConfig {
         }
         if self.runtime_workers == 0 {
             return Err(Error::config("runtime_workers must be >= 1"));
+        }
+        if self.chunking == ChunkPolicy::MaxElems(0) {
+            return Err(Error::config("chunking max elems must be >= 1"));
         }
         if !matches!(self.model.as_str(), "small" | "medium" | "paper") {
             return Err(Error::config(format!(
@@ -312,6 +401,45 @@ mod tests {
         let mut c = RunConfig::default();
         c.model = "huge".into();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn chunk_policy_parses_all_forms() {
+        let p = |json: &str| {
+            ChunkPolicy::parse_value(&Value::parse(json).unwrap())
+        };
+        assert_eq!(p("\"unchunked\"").unwrap(), ChunkPolicy::Unchunked);
+        assert_eq!(p("\"none\"").unwrap(), ChunkPolicy::Unchunked);
+        assert_eq!(p("\"auto\"").unwrap(), ChunkPolicy::Auto);
+        assert_eq!(p("\"chunked\"").unwrap(), ChunkPolicy::Auto);
+        assert_eq!(p("4096").unwrap(), ChunkPolicy::MaxElems(4096));
+        assert!(p("0").is_err());
+        assert!(p("\"bogus\"").is_err());
+        assert!(!ChunkPolicy::Unchunked.is_chunked());
+        assert!(ChunkPolicy::Auto.is_chunked());
+        assert_eq!(ChunkPolicy::MaxElems(7).max_message_elems(), 7);
+        assert_eq!(ChunkPolicy::Auto.max_message_elems(), 0);
+        assert_eq!(ChunkPolicy::MaxElems(7).label(), "max-elems-7");
+    }
+
+    #[test]
+    fn defaults_are_paper_faithful_blocking_unchunked() {
+        let c = RunConfig::default();
+        assert_eq!(c.chunking, ChunkPolicy::Unchunked);
+        assert!(!c.overlap_comm);
+    }
+
+    #[test]
+    fn from_json_reads_engine_knobs() {
+        let c = RunConfig::from_json(
+            r#"{"chunking": "auto", "overlap_comm": true}"#,
+        )
+        .unwrap();
+        assert_eq!(c.chunking, ChunkPolicy::Auto);
+        assert!(c.overlap_comm);
+        let c = RunConfig::from_json(r#"{"chunking": 1024}"#).unwrap();
+        assert_eq!(c.chunking, ChunkPolicy::MaxElems(1024));
+        assert!(RunConfig::from_json(r#"{"chunking": "huh"}"#).is_err());
     }
 
     #[test]

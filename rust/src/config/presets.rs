@@ -9,7 +9,7 @@
 //!   seconds.
 //! * [`weak_scaling`] — eq (10): batch = base/N with everything else fixed.
 
-use super::{Mode, RunConfig};
+use super::{ChunkPolicy, Mode, RunConfig};
 
 /// Paper-scale settings (Table III). Requires artifacts exported with
 /// `--paper-scale`.
@@ -28,6 +28,8 @@ pub fn paper_table3() -> RunConfig {
         subsample_fraction: 0.5,
         include_bias: false,
         fusion_bucket: 0,
+        chunking: ChunkPolicy::Unchunked,
+        overlap_comm: false,
         checkpoint_every: 5000,
         seed: 20240,
         data_pool: 204_800,
@@ -56,6 +58,8 @@ pub fn ci_default() -> RunConfig {
         subsample_fraction: 0.5,
         include_bias: false,
         fusion_bucket: 0,
+        chunking: ChunkPolicy::Unchunked,
+        overlap_comm: false,
         checkpoint_every: 25,
         seed: 20240,
         data_pool: 6400,
@@ -71,6 +75,16 @@ pub fn weak_scaling(base: &RunConfig, ranks: usize) -> RunConfig {
     let mut c = base.clone();
     c.ranks = ranks;
     c.batch = (base.batch / ranks).max(1);
+    c
+}
+
+/// Throughput preset: the same run with the collective engine's two
+/// beyond-the-paper capabilities enabled — chunked (reduce-scatter +
+/// all-gather) rings and overlapped (one-epoch-stale) gradient exchange.
+pub fn throughput(base: &RunConfig) -> RunConfig {
+    let mut c = base.clone();
+    c.chunking = ChunkPolicy::Auto;
+    c.overlap_comm = true;
     c
 }
 
@@ -102,6 +116,18 @@ mod tests {
             // discriminator batch shrinks with 1/N like the paper notes
             assert_eq!(c.disc_batch(), c.batch * 25);
         }
+    }
+
+    #[test]
+    fn throughput_preset_enables_the_engine() {
+        let base = ci_default();
+        let t = throughput(&base);
+        assert_eq!(t.chunking, ChunkPolicy::Auto);
+        assert!(t.overlap_comm);
+        // Everything else untouched — same Table III semantics.
+        assert_eq!(t.mode, base.mode);
+        assert_eq!(t.epochs, base.epochs);
+        t.validate().unwrap();
     }
 
     #[test]

@@ -79,10 +79,40 @@ pub fn run_training_with_links(
     manifest.artifact(&cfg.gen_predict_artifact())?;
 
     let topo = Topology::new(cfg.ranks, cfg.gpus_per_node);
-    // RMA windows sized for one epoch of ring steps per Sec. IV-B3.
-    let region = RmaRegion::with_capacity(cfg.ranks, cfg.gpus_per_node.max(2));
+    // RMA windows sized for one epoch of ring steps per Sec. IV-B3
+    // (chunked schedules run 2·(g-1) steps, so they get double depth).
+    let region = RmaRegion::with_capacity(
+        cfg.ranks,
+        collective::rma_window_depth(cfg.gpus_per_node, cfg.chunking),
+    );
     let endpoints = LocalNetwork::build(&topo, link_model);
-    let collectives = collective::build(cfg.mode, &topo, cfg.outer_freq, endpoints, &region)?;
+    let collectives = collective::build_with_policy(
+        cfg.mode,
+        &topo,
+        cfg.outer_freq,
+        endpoints,
+        &region,
+        cfg.chunking,
+    )?;
+    // Overlap mode: move every rank's collective onto a dedicated comm
+    // thread so run_rank's start_reduce/wait_reduce calls genuinely
+    // overlap the exchange with the next epoch's compute. The Horovod
+    // baseline is exempt — its defining property is the globally
+    // synchronous blocking all-reduce, and the simulator models it that
+    // way; hiding it behind a comm thread would silently change the
+    // baseline being compared against.
+    let collectives: Vec<Box<dyn collective::Collective>> =
+        if cfg.overlap_comm && cfg.mode != Mode::Horovod {
+            collectives
+                .into_iter()
+                .map(|c| {
+                    collective::engine::CollectiveEngine::spawn(c)
+                        .map(|e| Box::new(e) as Box<dyn collective::Collective>)
+                })
+                .collect::<Result<_>>()?
+        } else {
+            collectives
+        };
 
     // Reference data pool (the paper: rank 0 loads + distributes; each
     // rank then trains on a random sub-fraction).

@@ -14,9 +14,22 @@ use crate::tensor::fusion::FusionPlan;
 use crate::util::error::Result;
 
 /// Reusable off-/on-load stager for one rank's generator gradients.
+///
+/// Two staging shapes:
+/// * the classic in-place pair [`GradOffloader::offload`] /
+///   [`GradOffloader::onload`] for the blocking loop, and
+/// * the owned pair [`GradOffloader::pack_owned`] /
+///   [`GradOffloader::onload_from`] + [`GradOffloader::recycle`] for the
+///   overlap pipeline, which double-buffers: one packed buffer rides the
+///   collective engine's comm thread while the next epoch packs into a
+///   recycled spare, so overlapping epochs never share storage and the
+///   steady-state hot path still performs no allocation.
 pub struct GradOffloader {
     plan: FusionPlan,
     staging: Vec<f32>,
+    /// Recycled owned transfer buffers for the overlap pipeline (at most
+    /// two are ever live: in-flight + packing).
+    spares: Vec<Vec<f32>>,
     /// Total bytes staged (both directions), for the §Perf accounting.
     pub bytes_staged: u64,
 }
@@ -27,6 +40,7 @@ impl GradOffloader {
         GradOffloader {
             plan,
             staging: Vec::with_capacity(cap),
+            spares: Vec::new(),
             bytes_staged: 0,
         }
     }
@@ -49,6 +63,31 @@ impl GradOffloader {
         self.plan.unpack(&self.staging, grads)?;
         self.bytes_staged += (self.staging.len() * 4) as u64;
         Ok(())
+    }
+
+    /// Off-load into an *owned* buffer for the non-blocking collective
+    /// API (the buffer's ownership moves into `start_reduce`). Reuses a
+    /// recycled spare when one is available.
+    pub fn pack_owned(&mut self, grads: &[f32]) -> Result<Vec<f32>> {
+        let mut buf = self.spares.pop().unwrap_or_default();
+        self.plan.pack(grads, &mut buf)?;
+        self.bytes_staged += (buf.len() * 4) as u64;
+        Ok(buf)
+    }
+
+    /// On-load a reduced owned buffer (from `wait_reduce`) back into
+    /// `grads`; slices outside the plan (biases) keep their local values.
+    pub fn onload_from(&mut self, reduced: &[f32], grads: &mut [f32]) -> Result<()> {
+        self.plan.unpack(reduced, grads)?;
+        self.bytes_staged += (reduced.len() * 4) as u64;
+        Ok(())
+    }
+
+    /// Return a buffer obtained from `wait_reduce` to the spare pool.
+    pub fn recycle(&mut self, buf: Vec<f32>) {
+        if self.spares.len() < 2 {
+            self.spares.push(buf);
+        }
     }
 
     /// Elements that travel per epoch.
@@ -102,6 +141,30 @@ mod tests {
         let ptr1 = off.staging.as_ptr();
         off.offload(&grads).unwrap();
         assert_eq!(ptr1, off.staging.as_ptr());
+    }
+
+    #[test]
+    fn owned_pipeline_roundtrip_and_double_buffering() {
+        let mut off = GradOffloader::new(plan_weights_only());
+        let grads: Vec<f32> = (0..13).map(|x| x as f32).collect();
+        // Epoch e packs buffer A and "starts" it on the engine.
+        let a = off.pack_owned(&grads).unwrap();
+        assert_eq!(a.len(), 10);
+        // Epoch e+1 packs buffer B while A is still in flight.
+        let b = off.pack_owned(&grads).unwrap();
+        assert!(a.as_ptr() != b.as_ptr(), "buffers must not alias");
+        // A returns reduced; on-load and recycle it.
+        let mut back = grads.clone();
+        let reduced: Vec<f32> = a.iter().map(|v| v * 0.5).collect();
+        off.onload_from(&reduced, &mut back).unwrap();
+        assert_eq!(back[3], 1.5); // weights halved
+        assert_eq!(back[4], 4.0); // biases local
+        off.recycle(a);
+        // The next pack reuses the recycled storage: no new allocation.
+        let c = off.pack_owned(&grads).unwrap();
+        assert_eq!(c.len(), 10);
+        off.recycle(b);
+        off.recycle(c);
     }
 
     #[test]

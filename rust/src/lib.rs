@@ -18,8 +18,9 @@
 //! `artifacts/*.hlo.txt` files through the PJRT C API (`xla` crate) and the
 //! coordinator executes them from Rust.
 //!
-//! See `DESIGN.md` for the paper -> module map and `EXPERIMENTS.md` for the
-//! reproduced tables/figures.
+//! See `DESIGN.md` (repo root) for the paper -> module map and the
+//! collective-engine design notes; the per-figure bench binaries under
+//! `benches/` regenerate the reproduced tables and figures.
 
 pub mod collective;
 pub mod comm;

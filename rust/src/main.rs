@@ -11,7 +11,7 @@
 
 use std::path::Path;
 
-use sagips::config::{presets, Mode, RunConfig};
+use sagips::config::{presets, ChunkPolicy, Mode, RunConfig};
 use sagips::coordinator::launcher::run_training;
 use sagips::ensemble::analysis::EnsembleResult;
 use sagips::model::residuals;
@@ -74,6 +74,12 @@ fn common_specs() -> Vec<OptSpec> {
         cli::opt("step-mean", "simulator: mean epoch compute seconds", Some("0.035")),
         cli::opt("gen-lr", "generator learning rate", None),
         cli::opt("disc-lr", "discriminator learning rate", None),
+        cli::opt(
+            "chunking",
+            "ring chunking: unchunked|auto|<max elems per message>",
+            Some("unchunked"),
+        ),
+        cli::flag("overlap", "overlap gradient exchange with next-epoch compute"),
         cli::flag("paper-scale", "use the full Table III configuration"),
     ]
 }
@@ -95,6 +101,10 @@ fn build_cfg(a: &Args) -> Result<RunConfig> {
     cfg.seed = a.u64("seed", cfg.seed)?;
     cfg.gen_lr = a.f64("gen-lr", cfg.gen_lr as f64)? as f32;
     cfg.disc_lr = a.f64("disc-lr", cfg.disc_lr as f64)? as f32;
+    if let Some(v) = a.get("chunking") {
+        cfg.chunking = ChunkPolicy::parse_str(v)?;
+    }
+    cfg.overlap_comm = cfg.overlap_comm || a.flag("overlap");
     cfg.artifacts_dir = a.get_or("artifacts", &cfg.artifacts_dir).to_string();
     cfg.validate()?;
     Ok(cfg)
@@ -131,12 +141,14 @@ fn cmd_train(a: &Args) -> Result<()> {
     let cfg = build_cfg(a)?;
     let pool = open_pool(a, &cfg)?;
     sagips::log_info!(
-        "training: mode={} ranks={} epochs={} batch={} (disc batch {})",
+        "training: mode={} ranks={} epochs={} batch={} (disc batch {}) chunking={} overlap={}",
         cfg.mode.name(),
         cfg.ranks,
         cfg.epochs,
         cfg.batch,
-        cfg.disc_batch()
+        cfg.disc_batch(),
+        cfg.chunking.label(),
+        cfg.overlap_comm
     );
     let run = run_training(&cfg, &pool.handle())?;
     println!("wall time: {:.2}s", run.wall_s);

@@ -1,5 +1,5 @@
-//! CSV emission for figure data (consumed by external plotting or diffed in
-//! EXPERIMENTS.md).
+//! CSV emission for figure data (consumed by external plotting or diffed
+//! against the per-figure bench outputs).
 
 use std::io::Write;
 use std::path::Path;

@@ -106,6 +106,23 @@ impl MergedMetrics {
             .sum()
     }
 
+    /// Overlap accounting: the fraction of collective time hidden behind
+    /// compute, `hidden / (hidden + hot)`, where `hot` is the hot-path
+    /// `comm_s` the rank loop blocked on and `hidden` is the comm-thread
+    /// time recorded as `comm_hidden_s` by the overlap pipeline. `None`
+    /// when no communication was recorded; 0.0 for a blocking run (no
+    /// hidden series). The micro benchmark and reports use this to show
+    /// what the non-blocking engine buys.
+    pub fn comm_overlap_ratio(&self) -> Option<f64> {
+        let hidden = self.total("comm_hidden_s");
+        let hot = self.total("comm_s");
+        if hidden + hot > 0.0 {
+            Some(hidden / (hidden + hot))
+        } else {
+            None
+        }
+    }
+
     /// Epoch-aligned cross-rank mean series: for each recorded index i,
     /// average value over ranks that have an i-th sample.
     pub fn mean_series(&self, name: &str) -> Series {
@@ -173,6 +190,24 @@ mod tests {
         let m = MergedMetrics::new(vec![r0, r1]);
         assert!((m.mean_of_last("loss").unwrap() - 0.3).abs() < 1e-12);
         assert_eq!(m.total("events"), 200.0);
+    }
+
+    #[test]
+    fn overlap_ratio_reflects_hidden_vs_hot_comm() {
+        // No comm recorded at all -> None.
+        let m = MergedMetrics::new(vec![Recorder::new(0)]);
+        assert!(m.comm_overlap_ratio().is_none());
+        // Blocking run: hot-path comm only -> ratio 0.
+        let mut r = Recorder::new(0);
+        r.push("comm_s", 0, 0.4);
+        let m = MergedMetrics::new(vec![r]);
+        assert_eq!(m.comm_overlap_ratio(), Some(0.0));
+        // Overlapped run: 3/4 of the collective time hidden.
+        let mut r = Recorder::new(0);
+        r.push("comm_s", 0, 0.1);
+        r.push("comm_hidden_s", 0, 0.3);
+        let m = MergedMetrics::new(vec![r]);
+        assert!((m.comm_overlap_ratio().unwrap() - 0.75).abs() < 1e-12);
     }
 
     #[test]

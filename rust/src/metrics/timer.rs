@@ -43,7 +43,7 @@ impl Timer {
 }
 
 /// Accumulates time attributed to named phases (compute / offload / comm /
-/// optimizer) — the breakdown EXPERIMENTS.md §Perf reports.
+/// optimizer) — the §Perf breakdown the bench binaries report.
 #[derive(Clone, Debug, Default)]
 pub struct PhaseAccumulator {
     pub compute_s: f64,

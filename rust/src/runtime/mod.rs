@@ -17,6 +17,8 @@
 
 pub mod manifest;
 pub mod pool;
+#[cfg(not(feature = "pjrt"))]
+pub(crate) mod xla_stub;
 
 pub use manifest::{ArtifactSpec, LayerLayout, Manifest, ModelMeta};
 pub use pool::{RuntimeHandle, RuntimePool};

@@ -20,6 +20,11 @@ use std::thread::JoinHandle;
 use super::manifest::{ArtifactSpec, Manifest};
 use crate::util::error::{Error, Result};
 
+// Without the `pjrt` feature the `xla` paths below resolve to the
+// build-anywhere stub (same API subset, every call errors descriptively).
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub as xla;
+
 /// A request to run one artifact with flat f32 inputs.
 struct ExecuteRequest {
     artifact: String,

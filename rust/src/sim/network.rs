@@ -36,6 +36,21 @@ impl NetModel {
         self.links.staging_s(bytes)
     }
 
+    /// Time for one ring step whose payload is split into `msgs` chunked
+    /// messages (α per message, β on the total bytes) — the simulator's
+    /// view of the per-chunk accounting in `LinkModel`.
+    pub fn p2p_chunked_s(
+        &self,
+        topo: &Topology,
+        from: usize,
+        to: usize,
+        bytes: usize,
+        msgs: usize,
+    ) -> f64 {
+        let same = topo.node_of(from) == topo.node_of(to);
+        self.links.chunked_transfer_s(same, bytes, msgs)
+    }
+
     /// Bandwidth-optimal chunked ring all-reduce time over `n` homogeneous
     /// inter-node links (the horovod/NCCL cost model): 2(n-1) steps of
     /// (α + (bytes/n)·β).

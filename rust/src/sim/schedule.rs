@@ -9,8 +9,9 @@
 //! of `sim_epochs` epochs is simulated and extrapolated to the full run
 //! (steady-state throughput converges long before the window ends).
 
+use crate::collective::grouped::is_outer_epoch;
 use crate::comm::Topology;
-use crate::config::Mode;
+use crate::config::{ChunkPolicy, Mode};
 use crate::util::rng::Rng;
 
 use super::network::NetModel;
@@ -33,6 +34,13 @@ pub struct SimConfig {
     pub grad_bytes: usize,
     /// Discriminator batch (events/epoch/rank) for the analysis rate.
     pub disc_batch: usize,
+    /// Ring chunking policy (mirrors `RunConfig::chunking`): chunked
+    /// policies cost the transport rings as reduce-scatter + all-gather.
+    pub chunking: ChunkPolicy,
+    /// Overlap gradient exchange with the next epoch's compute (mirrors
+    /// `RunConfig::overlap_comm`): each epoch's comm delta is charged only
+    /// where it exceeds the compute window it hides behind.
+    pub overlap: bool,
     pub compute: ComputeModel,
     pub net: NetModel,
     pub seed: u64,
@@ -50,6 +58,8 @@ impl SimConfig {
             sim_epochs: 512,
             grad_bytes: 51_206 * 4, // paper's generator weight gradients
             disc_batch: 102_400,
+            chunking: ChunkPolicy::Unchunked,
+            overlap: false,
             compute: ComputeModel::with_jitter(0.035, 0.15),
             net: NetModel::paper_like(),
             seed: 2024,
@@ -90,10 +100,16 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
     let outer = topo.outer_group();
 
     for epoch in 0..sim_epochs {
-        // Compute + staging phase.
+        // Compute + staging phase. Remember each rank's compute draw: in
+        // overlap mode the next epoch's draw is what hides this epoch's
+        // exchange, and in steady state the draws are iid, so charging
+        // against this epoch's draw is unbiased.
+        let mut compute_s = vec![0.0f64; n];
         for r in 0..n {
-            t[r] += cfg.compute.sample(&mut rngs[r]) + staging;
+            compute_s[r] = cfg.compute.sample(&mut rngs[r]);
+            t[r] += compute_s[r] + staging;
         }
+        let t_pre_comm = t.clone();
         let before: f64 = t.iter().sum();
         match cfg.mode {
             Mode::Ensemble => {}
@@ -109,7 +125,7 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
                         ring_schedule(&mut t, &topo, g, cfg);
                     }
                 }
-                if cfg.outer_freq > 0 && epoch % cfg.outer_freq as u64 == 0 {
+                if is_outer_epoch(epoch, cfg.outer_freq) {
                     ring_schedule(&mut t, &topo, &outer, cfg);
                 }
             }
@@ -161,6 +177,16 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
                 }
             }
         }
+        // Overlap: the exchange runs under the next epoch's compute, so
+        // only the comm delta exceeding the hiding window stays on the
+        // critical path (Horovod's barrier is inherently blocking and the
+        // RMA schedule already charges only the rank's own put/get time).
+        if cfg.overlap && cfg.mode != Mode::Horovod {
+            for r in 0..n {
+                let delta = t[r] - t_pre_comm[r];
+                t[r] = t_pre_comm[r] + (delta - compute_s[r]).max(0.0);
+            }
+        }
         comm_time += t.iter().sum::<f64>() - before;
     }
 
@@ -177,21 +203,42 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
     }
 }
 
-/// Blocking unchunked ring over `members`: the dataflow recurrence of
-/// Algorithm 1 — at each step a rank proceeds once its predecessor's
-/// message (sent at the predecessor's step time) has arrived.
+/// Per-ring-step traffic under the chunk policy: `(steps, bytes, msgs)` —
+/// the number of ring steps per pass, payload bytes per step, and messages
+/// per step (sub-chunking pays α per message).
+fn ring_step_shape(cfg: &SimConfig, g: usize) -> (usize, usize, usize) {
+    if cfg.chunking.is_chunked() && g > 1 {
+        let chunk_bytes = cfg.grad_bytes.div_ceil(g);
+        let max_elems = cfg.chunking.max_message_elems();
+        let msgs = if max_elems == 0 {
+            1
+        } else {
+            (chunk_bytes / 4).div_ceil(max_elems).max(1)
+        };
+        (2 * (g - 1), chunk_bytes, msgs)
+    } else {
+        (g.saturating_sub(1), cfg.grad_bytes, 1)
+    }
+}
+
+/// Blocking ring over `members`: the dataflow recurrence of Algorithm 1 —
+/// at each step a rank proceeds once its predecessor's message (sent at
+/// the predecessor's step time) has arrived. Chunked policies run the
+/// reduce-scatter + all-gather shape: 2·(g-1) steps of |g|/g-byte
+/// messages instead of g-1 full-tensor steps.
 fn ring_schedule(t: &mut [f64], topo: &Topology, members: &[usize], cfg: &SimConfig) {
     let g = members.len();
     if g <= 1 {
         return;
     }
+    let (steps, bytes, msgs) = ring_step_shape(cfg, g);
     let mut s: Vec<f64> = members.iter().map(|&r| t[r]).collect();
     let mut next = vec![0.0f64; g];
-    for _step in 0..g - 1 {
+    for _step in 0..steps {
         for (i, &r) in members.iter().enumerate() {
             let ip = (i + g - 1) % g;
             let prev_rank = members[ip];
-            let arrival = s[ip] + cfg.net.p2p_s(topo, prev_rank, r, cfg.grad_bytes);
+            let arrival = s[ip] + cfg.net.p2p_chunked_s(topo, prev_rank, r, bytes, msgs);
             next[i] = s[i].max(arrival);
         }
         s.copy_from_slice(&next);
@@ -202,6 +249,9 @@ fn ring_schedule(t: &mut [f64], topo: &Topology, members: &[usize], cfg: &SimCon
 }
 
 /// Same recurrence over an arbitrary clock vector indexed like `members`.
+/// Used only by the Hierarchical baseline's master ring, which — like the
+/// real `collective::hierarchical` — ignores the chunk policy, so the
+/// shape is always the unchunked g-1 full-tensor steps.
 fn schedule_ring_over(clocks: &mut [f64], members: &[usize], topo: &Topology, cfg: &SimConfig) {
     let g = clocks.len();
     if g <= 1 {
@@ -220,19 +270,22 @@ fn schedule_ring_over(clocks: &mut [f64], members: &[usize], topo: &Topology, cf
 }
 
 /// RMA ring: no rendezvous — each rank pays only its own put + get costs
-/// for the g-1 steps; a neighbour's lateness shows up as staleness, not as
-/// wait time (Sec. IV-B3).
+/// for the pass's steps; a neighbour's lateness shows up as staleness,
+/// not as wait time (Sec. IV-B3). Chunked RMA sends exactly one deposit
+/// per partition step (`RmaRing::pass_chunked` ignores the sub-message
+/// cap), so the α cost is per step, never per sub-chunk.
 fn rma_ring_schedule(t: &mut [f64], topo: &Topology, members: &[usize], cfg: &SimConfig) {
     let g = members.len();
     if g <= 1 {
         return;
     }
+    let (steps, bytes, _msgs) = ring_step_shape(cfg, g);
     for (i, &r) in members.iter().enumerate() {
         let nxt = members[(i + 1) % g];
         let prv = members[(i + g - 1) % g];
-        let put = cfg.net.p2p_s(topo, r, nxt, cfg.grad_bytes);
-        let get = cfg.net.p2p_s(topo, prv, r, cfg.grad_bytes);
-        t[r] += (g as f64 - 1.0) * (put + get);
+        let put = cfg.net.p2p_chunked_s(topo, r, nxt, bytes, 1);
+        let get = cfg.net.p2p_chunked_s(topo, prv, r, bytes, 1);
+        t[r] += steps as f64 * (put + get);
     }
 }
 
@@ -315,6 +368,71 @@ mod tests {
         let hvd = simulate(&mk(Mode::Horovod)).total_s;
         let ens = simulate(&mk(Mode::Ensemble)).total_s;
         assert!(hvd > ens);
+    }
+
+    #[test]
+    fn chunked_ring_flattens_conventional_growth() {
+        // The unchunked conventional ring moves (N-1)·|g| bytes per rank;
+        // reduce-scatter + all-gather moves 2·(N-1)/N·|g|, so on a
+        // bandwidth-dominated network (raw hardware constants, no compute
+        // to hide behind) the chunked schedule must be decisively faster.
+        let mk = |chunking| SimConfig {
+            chunking,
+            compute: ComputeModel::fixed(0.0),
+            net: NetModel::polaris_like(),
+            ..base(Mode::ConvArar, 64)
+        };
+        let unchunked = simulate(&mk(ChunkPolicy::Unchunked)).total_s;
+        let chunked = simulate(&mk(ChunkPolicy::Auto)).total_s;
+        assert!(chunked < unchunked * 0.6, "{chunked} vs {unchunked}");
+    }
+
+    #[test]
+    fn sub_chunking_pays_alpha_per_message() {
+        // Very small max-elems means many messages per step: more α cost
+        // than one-message-per-partition, same bandwidth term.
+        let auto = simulate(&SimConfig {
+            chunking: ChunkPolicy::Auto,
+            ..base(Mode::ConvArar, 16)
+        })
+        .total_s;
+        let tiny = simulate(&SimConfig {
+            chunking: ChunkPolicy::MaxElems(64),
+            ..base(Mode::ConvArar, 16)
+        })
+        .total_s;
+        assert!(tiny > auto, "tiny-chunk {tiny} should exceed auto {auto}");
+    }
+
+    #[test]
+    fn overlap_hides_comm_behind_compute() {
+        // With compute comfortably larger than per-epoch comm, overlap
+        // should push the total close to pure compute.
+        let mk = |overlap| SimConfig {
+            overlap,
+            compute: ComputeModel::fixed(0.05),
+            ..base(Mode::ArarArar, 32)
+        };
+        let blocking = simulate(&mk(false)).total_s;
+        let overlapped = simulate(&mk(true)).total_s;
+        let pure = simulate(&SimConfig {
+            compute: ComputeModel::fixed(0.05),
+            ..base(Mode::Ensemble, 32)
+        })
+        .total_s;
+        assert!(overlapped < blocking);
+        assert!(overlapped <= pure * 1.01, "{overlapped} vs pure {pure}");
+    }
+
+    #[test]
+    fn outer_cadence_counts_full_periods() {
+        // freq 1000 over a 64-epoch window: no outer pass fires at all
+        // (the quirky old semantics fired one at epoch 0).
+        let with_freq = simulate(&base(Mode::ArarArar, 64)).total_s;
+        let mut cfg = base(Mode::ArarArar, 64);
+        cfg.outer_freq = 64; // exactly one outer pass, at epoch 63
+        let with_outer = simulate(&cfg).total_s;
+        assert!(with_outer > with_freq, "{with_outer} !> {with_freq}");
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! Provides warmup + timed iterations with percentile reporting, and a
 //! table printer shared by the per-figure bench binaries so every bench
 //! emits the same `name  p50  p90  mean  iters` row format plus
-//! figure-style data tables for EXPERIMENTS.md.
+//! figure-style data tables for the paper-reproduction reports.
 
 use std::time::{Duration, Instant};
 

@@ -46,8 +46,16 @@ pub enum Error {
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl From<crate::runtime::xla_stub::Error> for Error {
+    fn from(e: crate::runtime::xla_stub::Error) -> Self {
         Error::Runtime(e.to_string())
     }
 }

@@ -28,7 +28,8 @@ fn prop_ring_pass_averages_any_ring() {
                 let v = values[ep.rank];
                 std::thread::spawn(move || {
                     let mut grads = vec![v; len];
-                    ring_pass(&ep, &members, 0, &mut grads).unwrap();
+                    let mut scratch = Vec::new();
+                    ring_pass(&ep, &members, 0, &mut grads, &mut scratch).unwrap();
                     grads
                 })
             })
