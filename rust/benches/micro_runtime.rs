@@ -1,91 +1,217 @@
-//! Micro-bench: PJRT runtime execution costs per artifact — gan_step at
-//! each batch size, gen_predict, pipeline — plus pool dispatch overhead.
+//! Micro-bench: runtime execution costs per artifact — the `gan_step`
+//! hot path at each batch size on the **native** backend (always) and the
+//! PJRT pool (when artifacts exist) — plus gen_predict and the pipeline.
 //! These calibrate the simulator's compute model and are the L2/L3 §Perf
 //! baseline in EXPERIMENTS.md.
+//!
+//! Emits `BENCH_runtime.json` next to the working directory: one row per
+//! (backend, artifact) with p50/p90/mean micros and, for the native
+//! backend, the measured steady-state allocations per call — the
+//! zero-copy claim (`inputs borrowed, outputs reused`) as a number. The
+//! file starts the native-vs-PJRT perf trajectory across PRs.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use sagips::model::gan::GanState;
-use sagips::runtime::RuntimePool;
-use sagips::util::bench::{bench_for, header};
+use sagips::runtime::{Manifest, NativeRuntime, RuntimeHandle, RuntimePool};
+use sagips::util::bench::{bench_for, header, BenchResult};
+use sagips::util::json::Value;
 use sagips::util::rng::Rng;
 
-fn main() {
-    sagips::util::logging::init_from_env();
-    let pool = RuntimePool::from_dir(Path::new("artifacts"), 2).expect("run `make artifacts`");
-    let h = pool.handle();
-    let m = h.manifest().clone();
+/// Counting allocator: lets the bench *prove* the native hot path is
+/// allocation-free instead of asserting it in prose.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+fn row_json(
+    backend: &str,
+    artifact: &str,
+    batch: usize,
+    r: &BenchResult,
+    allocs_per_call: Option<u64>,
+) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("backend".into(), Value::String(backend.into()));
+    m.insert("artifact".into(), Value::String(artifact.into()));
+    m.insert("batch".into(), Value::Number(batch as f64));
+    m.insert("p50_us".into(), Value::Number(r.p50.as_secs_f64() * 1e6));
+    m.insert("p90_us".into(), Value::Number(r.p90.as_secs_f64() * 1e6));
+    m.insert("mean_us".into(), Value::Number(r.mean.as_secs_f64() * 1e6));
+    m.insert("iters".into(), Value::Number(r.iters as f64));
+    if let Some(a) = allocs_per_call {
+        m.insert("allocs_per_call".into(), Value::Number(a as f64));
+    }
+    Value::Object(m)
+}
+
+/// Bench the zero-copy gan_step path on one handle; appends a JSON row.
+fn bench_gan_step(
+    h: &RuntimeHandle,
+    backend: &str,
+    batch: usize,
+    budget: Duration,
+    rows: &mut Vec<Value>,
+) {
+    let name = format!("gan_step_paper_b{batch}_e25");
+    if h.manifest().artifact(&name).is_err() {
+        return;
+    }
+    let m = h.manifest();
     let meta = m.model("paper").unwrap().clone();
     let mut rng = Rng::new(7);
     let state = GanState::init(&meta, m.leaky_slope, &mut rng);
+    let mut z = vec![0.0f32; batch * m.latent_dim];
+    let mut u = vec![0.0f32; batch * 25 * 2];
+    let real = vec![0.3f32; batch * 25 * 2];
+    rng.fill_normal(&mut z);
+    rng.fill_uniform(&mut u);
+    let inputs: [&[f32]; 5] = [&state.gen, &state.disc, &z, &u, &real];
+    let mut outputs: Vec<Vec<f32>> = Vec::new();
+    // Warm: first call compiles (PJRT) / sizes the scratch (native).
+    h.execute_into(&name, &inputs, &mut outputs).unwrap();
+    h.execute_into(&name, &inputs, &mut outputs).unwrap();
 
-    header("runtime micro-benches (PJRT execute, CPU)");
-
-    for b in [4usize, 16, 64] {
-        let name = format!("gan_step_paper_b{b}_e25");
-        if m.artifact(&name).is_err() {
-            continue;
-        }
-        let mut z = vec![0.0f32; b * m.latent_dim];
-        let mut u = vec![0.0f32; b * 25 * 2];
-        let real = vec![0.3f32; b * 25 * 2];
-        rng.fill_normal(&mut z);
-        rng.fill_uniform(&mut u);
-        // warm: first call compiles
-        h.execute(
-            &name,
-            vec![state.gen.clone(), state.disc.clone(), z.clone(), u.clone(), real.clone()],
-        )
-        .unwrap();
-        let r = bench_for(&format!("gan_step b={b} (disc batch {})", b * 25), 2, Duration::from_secs(2), || {
-            std::hint::black_box(
-                h.execute(
-                    &name,
-                    vec![
-                        state.gen.clone(),
-                        state.disc.clone(),
-                        z.clone(),
-                        u.clone(),
-                        real.clone(),
-                    ],
-                )
-                .unwrap(),
-            );
-        });
-        println!("{}", r.row());
+    // Steady-state allocation count over 10 calls (meaningful on the
+    // native backend; the PJRT path stages channel copies by design).
+    let before = allocs();
+    for _ in 0..10 {
+        h.execute_into(&name, &inputs, &mut outputs).unwrap();
     }
+    let per_call = (allocs() - before) / 10;
 
+    let r = bench_for(
+        &format!("[{backend}] gan_step b={batch} (disc batch {})", batch * 25),
+        2,
+        budget,
+        || {
+            h.execute_into(&name, &inputs, &mut outputs).unwrap();
+            std::hint::black_box(&outputs);
+        },
+    );
+    println!("{}", r.row());
+    if backend == "native" {
+        println!("    steady-state allocations/call: {per_call}");
+    }
+    rows.push(row_json(
+        backend,
+        &name,
+        batch,
+        &r,
+        (backend == "native").then_some(per_call),
+    ));
+}
+
+fn bench_forward_paths(h: &RuntimeHandle, backend: &str, rows: &mut Vec<Value>) {
+    let m = h.manifest();
     // gen_predict (the residual evaluator's cost).
-    {
+    if m.artifact("gen_predict_paper_k256").is_ok() {
+        let meta = m.model("paper").unwrap().clone();
+        let mut rng = Rng::new(7);
+        let state = GanState::init(&meta, m.leaky_slope, &mut rng);
         let mut z = vec![0.0f32; 256 * m.latent_dim];
         rng.fill_normal(&mut z);
-        h.execute("gen_predict_paper_k256", vec![state.gen.clone(), z.clone()])
+        let inputs: [&[f32]; 2] = [&state.gen, &z];
+        let mut outputs: Vec<Vec<f32>> = Vec::new();
+        h.execute_into("gen_predict_paper_k256", &inputs, &mut outputs)
             .unwrap();
-        let r = bench_for("gen_predict k=256", 2, Duration::from_secs(1), || {
-            std::hint::black_box(
-                h.execute("gen_predict_paper_k256", vec![state.gen.clone(), z.clone()])
-                    .unwrap(),
-            );
-        });
+        let r = bench_for(
+            &format!("[{backend}] gen_predict k=256"),
+            2,
+            Duration::from_secs(1),
+            || {
+                h.execute_into("gen_predict_paper_k256", &inputs, &mut outputs)
+                    .unwrap();
+                std::hint::black_box(&outputs);
+            },
+        );
         println!("{}", r.row());
+        rows.push(row_json(backend, "gen_predict_paper_k256", 256, &r, None));
     }
 
     // pipeline alone (the sampler's cost).
-    {
+    if m.artifact("pipeline_b256_e25").is_ok() {
         let params: Vec<f32> = (0..256).flat_map(|_| m.true_params.clone()).collect();
         let mut u = vec![0.0f32; 256 * 25 * 2];
-        rng.fill_uniform(&mut u);
-        h.execute("pipeline_b256_e25", vec![params.clone(), u.clone()])
+        Rng::new(7).fill_uniform(&mut u);
+        let inputs: [&[f32]; 2] = [&params, &u];
+        let mut outputs: Vec<Vec<f32>> = Vec::new();
+        h.execute_into("pipeline_b256_e25", &inputs, &mut outputs)
             .unwrap();
-        let r = bench_for("pipeline b=256 e=25 (6400 events)", 2, Duration::from_secs(1), || {
-            std::hint::black_box(
-                h.execute("pipeline_b256_e25", vec![params.clone(), u.clone()])
-                    .unwrap(),
-            );
-        });
+        let r = bench_for(
+            &format!("[{backend}] pipeline b=256 e=25 (6400 events)"),
+            2,
+            Duration::from_secs(1),
+            || {
+                h.execute_into("pipeline_b256_e25", &inputs, &mut outputs)
+                    .unwrap();
+                std::hint::black_box(&outputs);
+            },
+        );
         println!("{}", r.row());
+        rows.push(row_json(backend, "pipeline_b256_e25", 256, &r, None));
+    }
+}
+
+fn main() {
+    sagips::util::logging::init_from_env();
+    let mut rows: Vec<Value> = Vec::new();
+
+    // --- native backend: always available, no artifacts needed ---
+    header("runtime micro-benches — native CPU backend (zero-copy)");
+    let native = NativeRuntime::new(Manifest::synthetic());
+    let nh = native.handle();
+    for b in [4usize, 16, 64] {
+        bench_gan_step(&nh, "native", b, Duration::from_secs(2), &mut rows);
+    }
+    bench_forward_paths(&nh, "native", &mut rows);
+
+    // --- PJRT pool: only when the artifact set has been exported ---
+    let pjrt_available = Path::new("artifacts").join("manifest.json").exists();
+    if pjrt_available {
+        header("runtime micro-benches — PJRT pool (channel dispatch)");
+        let pool = RuntimePool::from_dir(Path::new("artifacts"), 2).expect("pool start");
+        let h = pool.handle();
+        for b in [4usize, 16, 64] {
+            bench_gan_step(&h, "pjrt", b, Duration::from_secs(2), &mut rows);
+        }
+        bench_forward_paths(&h, "pjrt", &mut rows);
+        pool.shutdown();
+    } else {
+        println!("\n(PJRT rows skipped: artifacts/manifest.json not present)");
     }
 
-    pool.shutdown();
+    // --- BENCH_runtime.json: the perf trajectory artifact ---
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Value::String("micro_runtime".into()));
+    doc.insert("pjrt_available".into(), Value::Bool(pjrt_available));
+    doc.insert("rows".into(), Value::Array(rows));
+    let json = Value::Object(doc).to_json_pretty();
+    std::fs::write("BENCH_runtime.json", &json).expect("write BENCH_runtime.json");
+    println!("\nwrote BENCH_runtime.json");
 }

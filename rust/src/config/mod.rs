@@ -65,6 +65,38 @@ impl Mode {
     }
 }
 
+/// Which execution backend runs the GAN computations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust in-process CPU backend (`runtime::native`): fused
+    /// forward + analytic backward on the rank thread, zero-copy,
+    /// no artifacts or `pjrt` feature required.
+    Native,
+    /// PJRT worker pool over the AOT-exported HLO artifacts
+    /// (`runtime::pool`); real execution needs the `pjrt` cargo feature
+    /// and `make artifacts`.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" | "cpu" | "rust" => Ok(BackendKind::Native),
+            "pjrt" | "xla" | "device" => Ok(BackendKind::Pjrt),
+            other => Err(Error::config(format!(
+                "backend must be native|pjrt, got '{other}'"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
 /// How a ring collective splits the gradient tensor across ring steps.
 ///
 /// The paper explicitly does *not* chunk: every ring step forwards the
@@ -184,6 +216,9 @@ pub struct RunConfig {
     pub runtime_workers: usize,
     /// Artifacts directory.
     pub artifacts_dir: String,
+    /// Execution backend ("native" | "pjrt"). The native backend runs
+    /// everywhere with no artifacts; pjrt executes the exported HLO.
+    pub backend: BackendKind,
 }
 
 impl Default for RunConfig {
@@ -246,6 +281,12 @@ impl RunConfig {
                 "data_pool" => cfg.data_pool = as_usize(val, k)?,
                 "runtime_workers" => cfg.runtime_workers = as_usize(val, k)?,
                 "artifacts_dir" => cfg.artifacts_dir = req_str(val, k)?,
+                "backend" => {
+                    cfg.backend = BackendKind::parse(
+                        val.as_str()
+                            .ok_or_else(|| Error::config("backend must be a string"))?,
+                    )?
+                }
                 other => return Err(Error::config(format!("unknown config key '{other}'"))),
             }
         }
@@ -427,6 +468,25 @@ mod tests {
         let c = RunConfig::default();
         assert_eq!(c.chunking, ChunkPolicy::Unchunked);
         assert!(!c.overlap_comm);
+    }
+
+    #[test]
+    fn backend_kind_parses_and_roundtrips() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("cpu").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("PJRT").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("gpu?").is_err());
+        assert_eq!(BackendKind::Native.name(), "native");
+        let c = RunConfig::from_json(r#"{"backend": "pjrt"}"#).unwrap();
+        assert_eq!(c.backend, BackendKind::Pjrt);
+        assert!(RunConfig::from_json(r#"{"backend": "bogus"}"#).is_err());
+    }
+
+    #[test]
+    fn ci_preset_defaults_to_native_paper_preset_to_pjrt() {
+        assert_eq!(presets::ci_default().backend, BackendKind::Native);
+        assert_eq!(presets::paper_table3().backend, BackendKind::Pjrt);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //!   seconds.
 //! * [`weak_scaling`] — eq (10): batch = base/N with everything else fixed.
 
-use super::{ChunkPolicy, Mode, RunConfig};
+use super::{BackendKind, ChunkPolicy, Mode, RunConfig};
 
 /// Paper-scale settings (Table III). Requires artifacts exported with
 /// `--paper-scale`.
@@ -35,6 +35,8 @@ pub fn paper_table3() -> RunConfig {
         data_pool: 204_800,
         runtime_workers: 4,
         artifacts_dir: "artifacts".into(),
+        // Paper-faithful: execute the AOT-exported HLO on device.
+        backend: BackendKind::Pjrt,
     }
 }
 
@@ -65,6 +67,8 @@ pub fn ci_default() -> RunConfig {
         data_pool: 6400,
         runtime_workers: 2,
         artifacts_dir: "artifacts".into(),
+        // Runs everywhere: the native backend needs no artifact export.
+        backend: BackendKind::Native,
     }
 }
 

@@ -16,7 +16,7 @@ use crate::metrics::MergedMetrics;
 use crate::model::checkpoint::CheckpointSeries;
 use crate::model::gan::GanState;
 use crate::model::residuals::{self, Residuals};
-use crate::runtime::RuntimeHandle;
+use crate::runtime::{Runtime, RuntimeHandle};
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 
@@ -119,11 +119,25 @@ pub fn run_training_with_links(
     let pipeline_artifact = pick_pipeline_artifact(handle)?;
     let pool = ToyDataset::generate(handle, &pipeline_artifact, cfg.data_pool, cfg.seed)?;
 
+    // Horovod is exempt from the engine wrap above; make the rank loop
+    // blocking too, so its staleness semantics and comm_s/comm_hidden_s
+    // accounting match the collective it actually runs on (otherwise the
+    // eager start_reduce fallback would count the full blocking reduce as
+    // hot comm *and* report it again as hidden, with one-epoch staleness
+    // and no real overlap).
+    let rank_cfg = {
+        let mut c = cfg.clone();
+        if c.mode == Mode::Horovod {
+            c.overlap_comm = false;
+        }
+        c
+    };
+
     let mut root_rng = Rng::new(cfg.seed);
     let timer = crate::metrics::Timer::start();
     let mut handles = Vec::with_capacity(cfg.ranks);
     for (rank, coll) in collectives.into_iter().enumerate() {
-        let cfg = cfg.clone();
+        let cfg = rank_cfg.clone();
         let handle = handle.clone();
         let mut rng = root_rng.split(rank as u64);
         // Horovod baseline: every rank sees the full data (Sec. VI-C2);
@@ -180,6 +194,16 @@ pub fn run_training_with_links(
 /// Run with the default (no latency injection) link model.
 pub fn run_training(cfg: &RunConfig, handle: &RuntimeHandle) -> Result<RunResult> {
     run_training_with_links(cfg, handle, LinkModel::zero())
+}
+
+/// Self-contained entry point: build the backend the config asks for
+/// (`backend: "native" | "pjrt"`), run the training, shut the runtime
+/// down. On the native backend this needs no exported artifacts at all.
+pub fn run_training_from_config(cfg: &RunConfig) -> Result<RunResult> {
+    let rt = Runtime::from_config(cfg, cfg.runtime_workers)?;
+    let result = run_training(cfg, &rt.handle());
+    rt.shutdown();
+    result
 }
 
 /// Choose a pipeline artifact for data generation: prefer the big batch.

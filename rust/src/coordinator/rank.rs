@@ -27,7 +27,7 @@ use crate::data::Bootstrap;
 use crate::metrics::{Recorder, Timer};
 use crate::model::checkpoint::CheckpointSeries;
 use crate::model::gan::GanState;
-use crate::model::TrainStep;
+use crate::model::{StepOutput, TrainStep};
 use crate::optim::{Adam, Optimizer};
 use crate::runtime::RuntimeHandle;
 use crate::tensor::fusion::FusionPlan;
@@ -91,6 +91,10 @@ pub fn run_rank(
     let mut checkpoints = CheckpointSeries::default();
     let mut comm_totals = CommStats::default();
     let mut in_flight: Option<InFlight> = None;
+    // One reusable step output: its gradient buffers rotate with the step
+    // executor's (and, in overlap mode, with the in-flight slot), so the
+    // epoch loop performs no gradient allocation after warm-up.
+    let mut out = StepOutput::default();
     let timer = Timer::start();
 
     for epoch in 0..cfg.epochs as u64 {
@@ -99,8 +103,8 @@ pub fn run_rank(
         shard.draw(disc_batch, &mut rng, &mut real);
         let t_draw = lap.lap_s();
 
-        // 2. gan_step artifact
-        let out = step.run(&state.gen, &state.disc, &real, &mut rng)?;
+        // 2. gan_step (borrowed inputs, reused output buffers)
+        step.run_into(&state.gen, &state.disc, &real, &mut rng, &mut out)?;
         let t_step = lap.lap_s();
         if !ops::all_finite(&out.gen_grads) || !ops::all_finite(&out.disc_grads) {
             return Err(Error::Runtime(format!(
@@ -111,7 +115,6 @@ pub fn run_rank(
         // 3. local discriminator update (per-rank discriminator).
         disc_opt.step(&mut state.disc, &out.disc_grads);
 
-        let mut gen_grads = out.gen_grads;
         let (t_comm, t_opt, stats) = if cfg.overlap_comm {
             // 4/5 (overlap). Collect the *previous* epoch's exchange —
             // which ran under this epoch's draw + gan_step — apply it,
@@ -120,6 +123,9 @@ pub fn run_rank(
             let mut stats = CommStats::default();
             let mut t_opt = 0.0;
             let mut t_comm = 0.0;
+            // The gradient buffer freed by the collected exchange; rotated
+            // back into `out` when this epoch's grads move in flight.
+            let mut recycled = Vec::new();
             if let Some(InFlight {
                 epoch: pe,
                 grads: mut pgrads,
@@ -136,24 +142,25 @@ pub fn run_rank(
                 t_opt = lap.lap_s();
                 recorder.push("comm_hidden_s", pe, s.wait_s);
                 stats.merge(&s);
+                recycled = pgrads;
             }
-            let buf = offloader.pack_owned(&gen_grads)?;
+            let buf = offloader.pack_owned(&out.gen_grads)?;
             collective.start_reduce(epoch, buf)?;
             in_flight = Some(InFlight {
                 epoch,
-                grads: gen_grads,
+                grads: std::mem::replace(&mut out.gen_grads, recycled),
             });
             t_comm += lap.lap_s();
             (t_comm, t_opt, stats)
         } else {
             // 4. off-load -> collective -> on-load (paper: blocking).
-            let buf = offloader.offload(&gen_grads)?;
+            let buf = offloader.offload(&out.gen_grads)?;
             let stats = collective.epoch_reduce(epoch, buf)?;
-            offloader.onload(&mut gen_grads)?;
+            offloader.onload(&mut out.gen_grads)?;
             let t_comm = lap.lap_s();
 
             // 5. generator update with the exchanged gradients.
-            gen_opt.step(&mut state.gen, &gen_grads);
+            gen_opt.step(&mut state.gen, &out.gen_grads);
             (t_comm, lap.lap_s(), stats)
         };
         comm_totals.merge(&stats);

@@ -11,13 +11,13 @@
 
 use std::path::Path;
 
-use sagips::config::{presets, ChunkPolicy, Mode, RunConfig};
+use sagips::config::{presets, BackendKind, ChunkPolicy, Mode, RunConfig};
 use sagips::coordinator::launcher::run_training;
 use sagips::ensemble::analysis::EnsembleResult;
 use sagips::model::residuals;
 use sagips::report::experiments::{self, Scale};
 use sagips::report::{format_table4, table4_paper_reference, Table4Row};
-use sagips::runtime::RuntimePool;
+use sagips::runtime::Runtime;
 use sagips::sim::ComputeModel;
 use sagips::util::cli::{self, Args, OptSpec};
 use sagips::util::error::{Error, Result};
@@ -49,7 +49,8 @@ fn print_help() {
          simulate             scaling sweep (DES, Figs 11/12)\n  \
          experiment <id>      regenerate fig8..fig16 / tab4\n  \
          validate-artifacts   smoke-run every artifact\n\n\
-         common options: --artifacts <dir> --workers <n> --seed <n>\n\
+         common options: --backend native|pjrt --artifacts <dir> --workers <n> --seed <n>\n\
+         (the native backend needs no artifacts; pjrt executes the exported HLO)\n\
          env: SAGIPS_LOG=debug, SAGIPS_SCALE=smoke|ci|paper"
     );
 }
@@ -57,6 +58,7 @@ fn print_help() {
 fn common_specs() -> Vec<OptSpec> {
     vec![
         cli::opt("config", "JSON config file (CLI options override it)", None),
+        cli::opt("backend", "execution backend: native|pjrt", None),
         cli::opt("artifacts", "artifacts directory", Some("artifacts")),
         cli::opt("workers", "runtime pool workers", Some("2")),
         cli::opt("seed", "base RNG seed", Some("20240")),
@@ -104,15 +106,18 @@ fn build_cfg(a: &Args) -> Result<RunConfig> {
     if let Some(v) = a.get("chunking") {
         cfg.chunking = ChunkPolicy::parse_str(v)?;
     }
+    if let Some(v) = a.get("backend") {
+        cfg.backend = BackendKind::parse(v)?;
+    }
     cfg.overlap_comm = cfg.overlap_comm || a.flag("overlap");
     cfg.artifacts_dir = a.get_or("artifacts", &cfg.artifacts_dir).to_string();
     cfg.validate()?;
     Ok(cfg)
 }
 
-fn open_pool(a: &Args, cfg: &RunConfig) -> Result<RuntimePool> {
+fn open_runtime(a: &Args, cfg: &RunConfig) -> Result<Runtime> {
     let workers = a.usize("workers", cfg.runtime_workers)?;
-    RuntimePool::from_dir(Path::new(&cfg.artifacts_dir), workers)
+    Runtime::from_config(cfg, workers)
 }
 
 fn run(args: &[String]) -> Result<()> {
@@ -139,9 +144,10 @@ fn run(args: &[String]) -> Result<()> {
 
 fn cmd_train(a: &Args) -> Result<()> {
     let cfg = build_cfg(a)?;
-    let pool = open_pool(a, &cfg)?;
+    let rt = open_runtime(a, &cfg)?;
     sagips::log_info!(
-        "training: mode={} ranks={} epochs={} batch={} (disc batch {}) chunking={} overlap={}",
+        "training: backend={} mode={} ranks={} epochs={} batch={} (disc batch {}) chunking={} overlap={}",
+        cfg.backend.name(),
         cfg.mode.name(),
         cfg.ranks,
         cfg.epochs,
@@ -150,7 +156,7 @@ fn cmd_train(a: &Args) -> Result<()> {
         cfg.chunking.label(),
         cfg.overlap_comm
     );
-    let run = run_training(&cfg, &pool.handle())?;
+    let run = run_training(&cfg, &rt.handle())?;
     println!("wall time: {:.2}s", run.wall_s);
     println!(
         "analysis rate (eq 9): {:.3e} events/s over {:.3e} events",
@@ -178,15 +184,15 @@ fn cmd_train(a: &Args) -> Result<()> {
             residuals::mean_abs(&p.residuals)
         );
     }
-    pool.shutdown();
+    rt.shutdown();
     Ok(())
 }
 
 fn cmd_ensemble(a: &Args) -> Result<()> {
     let cfg = build_cfg(a)?;
     let m = a.usize("members", 6)?;
-    let pool = open_pool(a, &cfg)?;
-    let ens = EnsembleResult::train(&cfg, m, &pool.handle())?;
+    let rt = open_runtime(a, &cfg)?;
+    let ens = EnsembleResult::train(&cfg, m, &rt.handle())?;
     let resp = ens.response();
     println!(
         "ensemble of {m} runs (mode {}, {} ranks)",
@@ -198,7 +204,7 @@ fn cmd_ensemble(a: &Args) -> Result<()> {
     println!("truth      : {:?}", ens.true_params);
     let row = Table4Row::from_raw(cfg.mode.name(), &ens.table4_row());
     println!("\n{}", format_table4(&[row]));
-    pool.shutdown();
+    rt.shutdown();
     Ok(())
 }
 
@@ -228,8 +234,8 @@ fn cmd_experiment(a: &Args) -> Result<()> {
         return Ok(());
     }
     let cfg = build_cfg(a)?;
-    let pool = open_pool(a, &cfg)?;
-    let h = pool.handle();
+    let rt = open_runtime(a, &cfg)?;
+    let h = rt.handle();
     match id.as_str() {
         "fig8" => {
             experiments::fig8(&h, &scale)?;
@@ -264,19 +270,19 @@ fn cmd_experiment(a: &Args) -> Result<()> {
             )))
         }
     }
-    pool.shutdown();
+    rt.shutdown();
     Ok(())
 }
 
 fn cmd_validate(a: &Args) -> Result<()> {
     let cfg = build_cfg(a)?;
-    let pool = open_pool(a, &cfg)?;
-    let h = pool.handle();
+    let rt = open_runtime(a, &cfg)?;
+    let h = rt.handle();
     let names: Vec<String> = h.manifest().artifacts.keys().cloned().collect();
     println!(
-        "validating {} artifacts from {}",
+        "validating {} artifacts on the {} backend",
         names.len(),
-        cfg.artifacts_dir
+        h.backend_name()
     );
     for name in names {
         let spec = h.manifest().artifact(&name)?.clone();
@@ -293,7 +299,7 @@ fn cmd_validate(a: &Args) -> Result<()> {
             t0.elapsed().as_secs_f64() * 1e3
         );
     }
-    pool.shutdown();
+    rt.shutdown();
     println!("all artifacts load, compile and execute");
     Ok(())
 }

@@ -1,0 +1,343 @@
+//! Analytic gradients for the reference MLP and the GAN losses — the
+//! backward half of the native CPU backend.
+//!
+//! Mirrors the JAX graph in `python/compile/model.py::gan_step`: LeakyReLU
+//! MLPs over the flat parameter layout, the quantile event pipeline, and
+//! the non-saturating BCE-with-logits losses. Everything operates on
+//! caller-provided buffers (parameter gradients *accumulate*, so the
+//! discriminator's real + fake branches sum naturally), and the inner
+//! loops run branch-free over contiguous rows so they auto-vectorize.
+
+use crate::runtime::manifest::LayerLayout;
+
+use super::reference::{self, fit};
+
+/// Numerically stable sigmoid.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Numerically stable softplus: `log(1 + e^x) = max(x, 0) + log1p(e^-|x|)`.
+#[inline]
+pub fn softplus(x: f32) -> f32 {
+    x.max(0.0) + (-x.abs()).exp().ln_1p()
+}
+
+/// Forward an MLP keeping every layer's post-activation output in
+/// `acts[li]` (resized in place; the outer `Vec` grows only on first
+/// use). `acts.last()` is the network output. The cached activations are
+/// exactly what [`mlp_backward`] needs — LeakyReLU's derivative is
+/// recoverable from the *post*-activation sign because the slope is
+/// positive.
+pub fn mlp_forward_cached(
+    flat: &[f32],
+    layout: &[LayerLayout],
+    x: &[f32],
+    batch: usize,
+    slope: f32,
+    acts: &mut Vec<Vec<f32>>,
+) {
+    let nl = layout.len();
+    while acts.len() < nl {
+        acts.push(Vec::new());
+    }
+    // Drop leftover layers from a previous (deeper) network so
+    // `acts.last()` is always *this* forward's output.
+    acts.truncate(nl);
+    for li in 0..nl {
+        let (before, rest) = acts.split_at_mut(li);
+        let input: &[f32] = if li == 0 { x } else { before[li - 1].as_slice() };
+        let layer = &layout[li];
+        let out = &mut rest[0];
+        fit(out, batch * layer.w_cols);
+        reference::layer_forward(flat, layer, input, batch, slope, li + 1 < nl, out);
+    }
+}
+
+/// Backward pass through an MLP forwarded by [`mlp_forward_cached`].
+///
+/// * `d_out` — dL/d(network output), (batch, d_out) row-major. Consumed
+///   as scratch: its contents are clobbered during backprop.
+/// * `scratch` — second ping-pong buffer for the inter-layer gradients.
+/// * `d_flat` — when present, parameter gradients are **accumulated**
+///   (`+=`) into it at the layout's offsets; zero it first for a plain
+///   gradient.
+/// * `d_x` — when present, receives dL/dx (batch, d_in), overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn mlp_backward(
+    flat: &[f32],
+    layout: &[LayerLayout],
+    x: &[f32],
+    batch: usize,
+    slope: f32,
+    acts: &[Vec<f32>],
+    d_out: &mut Vec<f32>,
+    scratch: &mut Vec<f32>,
+    mut d_flat: Option<&mut [f32]>,
+    mut d_x: Option<&mut [f32]>,
+) {
+    let nl = layout.len();
+    debug_assert!(nl > 0);
+    debug_assert!(acts.len() >= nl);
+    debug_assert_eq!(d_out.len(), batch * layout[nl - 1].w_cols);
+    let (mut cur, mut next) = (d_out, scratch);
+    for li in (0..nl).rev() {
+        let layer = &layout[li];
+        let (rows, cols) = (layer.w_rows, layer.w_cols);
+        // Activation gradient (hidden layers only; the output layer is
+        // linear). Post-activation sign equals pre-activation sign for a
+        // positive slope, so the cached output is enough.
+        if li + 1 < nl {
+            for (dv, &hv) in cur.iter_mut().zip(&acts[li]) {
+                *dv *= if hv >= 0.0 { 1.0 } else { slope };
+            }
+        }
+        let xin: &[f32] = if li == 0 { x } else { acts[li - 1].as_slice() };
+        debug_assert_eq!(xin.len(), batch * rows);
+
+        // Parameter gradients: dW += xᵀ dPre (row i of dW is contiguous),
+        // db += column sums of dPre.
+        if let Some(df) = d_flat.as_deref_mut() {
+            let (dw, db) = layer_grads_mut(df, layer);
+            for r in 0..batch {
+                let drow = &cur[r * cols..(r + 1) * cols];
+                let xrow = &xin[r * rows..(r + 1) * rows];
+                for (i, &xi) in xrow.iter().enumerate() {
+                    let dwrow = &mut dw[i * cols..(i + 1) * cols];
+                    for (dwv, &dv) in dwrow.iter_mut().zip(drow) {
+                        *dwv += xi * dv;
+                    }
+                }
+                for (dbv, &dv) in db.iter_mut().zip(drow) {
+                    *dbv += dv;
+                }
+            }
+        }
+
+        // Input gradients: dX = dPre Wᵀ (dot over the contiguous weight
+        // row). Needed for every layer but the first, and for the first
+        // only when the caller asked for dL/dx.
+        let w = &flat[layer.w_offset..layer.w_offset + rows * cols];
+        if li > 0 {
+            fit(next, batch * rows);
+            input_grads(w, cur, next, batch, rows, cols);
+            std::mem::swap(&mut cur, &mut next);
+        } else if let Some(dx) = d_x.take() {
+            debug_assert_eq!(dx.len(), batch * rows);
+            input_grads(w, cur, dx, batch, rows, cols);
+        }
+    }
+}
+
+/// dX = dPre Wᵀ into `dx` (overwritten).
+fn input_grads(w: &[f32], d_pre: &[f32], dx: &mut [f32], batch: usize, rows: usize, cols: usize) {
+    for r in 0..batch {
+        let drow = &d_pre[r * cols..(r + 1) * cols];
+        let dxrow = &mut dx[r * rows..(r + 1) * rows];
+        for (i, dxv) in dxrow.iter_mut().enumerate() {
+            let wrow = &w[i * cols..(i + 1) * cols];
+            let mut acc = 0.0f32;
+            for (&dv, &wv) in drow.iter().zip(wrow) {
+                acc += dv * wv;
+            }
+            *dxv = acc;
+        }
+    }
+}
+
+/// Disjoint mutable views of one layer's weight and bias gradient regions
+/// inside the flat gradient vector. Relies on the [W, b] ordering the
+/// layout builder guarantees (bias immediately after its weights).
+fn layer_grads_mut<'a>(df: &'a mut [f32], layer: &LayerLayout) -> (&'a mut [f32], &'a mut [f32]) {
+    debug_assert!(layer.b_offset >= layer.w_offset + layer.w_len());
+    let (head, tail) = df.split_at_mut(layer.b_offset);
+    let dw = &mut head[layer.w_offset..layer.w_offset + layer.w_len()];
+    let db = &mut tail[..layer.b_len];
+    (dw, db)
+}
+
+/// Backward through the quantile pipeline: given dL/d(events) (B·E, 2)
+/// and the sampler uniforms u (B, E, 2), accumulate dL/d(params) (B, 6)
+/// into `d_params` (overwritten). `∂q(u; a,b,c)/∂(a,b,c) = (1, u, u²)`.
+pub fn pipeline_backward(
+    d_events: &[f32],
+    u: &[f32],
+    batch: usize,
+    events: usize,
+    d_params: &mut Vec<f32>,
+) {
+    debug_assert_eq!(d_events.len(), batch * events * 2);
+    debug_assert_eq!(u.len(), batch * events * 2);
+    fit(d_params, batch * 6);
+    for bi in 0..batch {
+        let dp = &mut d_params[bi * 6..bi * 6 + 6];
+        for e in 0..events {
+            let idx = (bi * events + e) * 2;
+            let (d0, d1) = (d_events[idx], d_events[idx + 1]);
+            let (u0, u1) = (u[idx], u[idx + 1]);
+            dp[0] += d0;
+            dp[1] += d0 * u0;
+            dp[2] += d0 * u0 * u0;
+            dp[3] += d1;
+            dp[4] += d1 * u1;
+            dp[5] += d1 * u1 * u1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// A random layout over the given layer sizes, plus matching random
+    /// parameters (layout from the runtime's single layout builder).
+    fn random_net(sizes: &[usize], rng: &mut Rng) -> (Vec<LayerLayout>, Vec<f32>) {
+        let (_, layout, count) = crate::runtime::manifest::layout_from_sizes(sizes);
+        let flat: Vec<f32> = (0..count).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        (layout, flat)
+    }
+
+    /// Scalar test loss: L = Σ c ⊙ forward(x), with fixed random c.
+    fn loss(flat: &[f32], layout: &[LayerLayout], x: &[f32], batch: usize, c: &[f32]) -> f64 {
+        let y = reference::mlp_forward(flat, layout, x, batch, 0.2);
+        y.iter().zip(c).map(|(&yv, &cv)| (yv * cv) as f64).sum()
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let mut rng = Rng::new(42);
+        for &sizes in &[&[3usize, 4, 2][..], &[2, 5, 3, 1][..], &[4, 4][..]] {
+            let (layout, flat) = random_net(sizes, &mut rng);
+            let batch = 3;
+            let x: Vec<f32> = (0..batch * sizes[0])
+                .map(|_| rng.normal_f32(0.0, 1.0))
+                .collect();
+            let d_out_dim = batch * sizes[sizes.len() - 1];
+            let c: Vec<f32> = (0..d_out_dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+            // Analytic gradient.
+            let mut acts = Vec::new();
+            mlp_forward_cached(&flat, &layout, &x, batch, 0.2, &mut acts);
+            let mut d_out = c.clone();
+            let mut scratch = Vec::new();
+            let mut d_flat = vec![0.0f32; flat.len()];
+            let mut d_x = vec![0.0f32; x.len()];
+            mlp_backward(
+                &flat,
+                &layout,
+                &x,
+                batch,
+                0.2,
+                &acts,
+                &mut d_out,
+                &mut scratch,
+                Some(&mut d_flat),
+                Some(&mut d_x),
+            );
+
+            // Central finite differences on a sample of parameters.
+            let h = 1e-2f32;
+            for k in (0..flat.len()).step_by(flat.len() / 7 + 1) {
+                let mut fp = flat.clone();
+                fp[k] += h;
+                let mut fm = flat.clone();
+                fm[k] -= h;
+                let num =
+                    (loss(&fp, &layout, &x, batch, &c) - loss(&fm, &layout, &x, batch, &c))
+                        / (2.0 * h as f64);
+                let ana = d_flat[k] as f64;
+                // The net is piecewise linear, so central differences are
+                // exact up to f32 noise unless a LeakyReLU kink sits
+                // inside the ±h interval — hence the small absolute term.
+                assert!(
+                    (num - ana).abs() < 2e-2 + 0.1 * ana.abs().max(num.abs()),
+                    "param {k}: numeric {num} vs analytic {ana} (sizes {sizes:?})"
+                );
+            }
+            // And on the inputs.
+            for k in (0..x.len()).step_by(x.len() / 5 + 1) {
+                let mut xp = x.clone();
+                xp[k] += h;
+                let mut xm = x.clone();
+                xm[k] -= h;
+                let num = (loss(&flat, &layout, &xp, batch, &c)
+                    - loss(&flat, &layout, &xm, batch, &c))
+                    / (2.0 * h as f64);
+                let ana = d_x[k] as f64;
+                assert!(
+                    (num - ana).abs() < 2e-2 + 0.1 * ana.abs().max(num.abs()),
+                    "input {k}: numeric {num} vs analytic {ana} (sizes {sizes:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn param_grads_accumulate_across_calls() {
+        let mut rng = Rng::new(7);
+        let (layout, flat) = random_net(&[2, 3, 1], &mut rng);
+        let x: Vec<f32> = (0..4).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut acts = Vec::new();
+        mlp_forward_cached(&flat, &layout, &x, 2, 0.2, &mut acts);
+        let run = |d_flat: &mut [f32]| {
+            let mut d_out = vec![1.0f32; 2];
+            let mut scratch = Vec::new();
+            mlp_backward(
+                &flat,
+                &layout,
+                &x,
+                2,
+                0.2,
+                &acts,
+                &mut d_out,
+                &mut scratch,
+                Some(d_flat),
+                None,
+            );
+        };
+        let mut once = vec![0.0f32; flat.len()];
+        run(&mut once);
+        let mut twice = vec![0.0f32; flat.len()];
+        run(&mut twice);
+        run(&mut twice);
+        for (a, b) in once.iter().zip(&twice) {
+            assert!((2.0 * a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn pipeline_backward_matches_quantile_partials() {
+        // One batch row, two events, hand-checkable uniforms.
+        let u = vec![0.5f32, 0.25, 1.0, 0.0];
+        let d_events = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut dp = Vec::new();
+        pipeline_backward(&d_events, &u, 1, 2, &mut dp);
+        // dp0 = 1 + 3; dp1 = 1*0.5 + 3*1.0; dp2 = 1*0.25 + 3*1.0
+        assert_eq!(&dp[..3], &[4.0, 3.5, 3.25]);
+        // dp3 = 2 + 4; dp4 = 2*0.25 + 4*0; dp5 = 2*0.0625
+        assert_eq!(&dp[3..], &[6.0, 0.5, 0.125]);
+    }
+
+    #[test]
+    fn stable_loss_helpers() {
+        assert!((softplus(0.0) - std::f32::consts::LN_2).abs() < 1e-6);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        // No overflow at extremes.
+        assert!(softplus(100.0).is_finite() && (softplus(100.0) - 100.0).abs() < 1e-3);
+        assert!(softplus(-100.0).abs() < 1e-6);
+        assert!(sigmoid(-100.0) >= 0.0 && sigmoid(100.0) <= 1.0);
+    }
+
+    #[test]
+    fn forward_cached_matches_reference_forward() {
+        let mut rng = Rng::new(9);
+        let (layout, flat) = random_net(&[3, 5, 4, 2], &mut rng);
+        let x: Vec<f32> = (0..9).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut acts = Vec::new();
+        mlp_forward_cached(&flat, &layout, &x, 3, 0.2, &mut acts);
+        let want = reference::mlp_forward(&flat, &layout, &x, 3, 0.2);
+        assert_eq!(acts.last().unwrap(), &want);
+    }
+}

@@ -1,10 +1,12 @@
 //! The GAN model as the coordinator sees it: flat parameter vectors,
 //! initialization, train-step assembly, residual diagnostics, checkpoints,
-//! and a pure-Rust reference implementation for cross-checking the HLO
-//! artifacts.
+//! and a pure-Rust reference implementation — forward ([`reference`]) and
+//! analytic backward ([`grad`]) — that cross-checks the HLO artifacts and
+//! powers the native CPU execution backend.
 
 pub mod checkpoint;
 pub mod gan;
+pub mod grad;
 pub mod reference;
 pub mod residuals;
 pub mod step;

@@ -1,13 +1,23 @@
 //! Pure-Rust reference implementation of the forward computations.
 //!
 //! A second, independent implementation of the generator forward pass and
-//! the quantile pipeline, used to cross-check the HLO artifacts end to end
-//! (Rust reference vs Python-lowered XLA execution) and to run
-//! artifact-free unit tests of the residual/ensemble machinery.
+//! the quantile pipeline. It cross-checks the HLO artifacts end to end
+//! (Rust reference vs Python-lowered XLA execution), runs artifact-free
+//! unit tests of the residual/ensemble machinery, and is the forward half
+//! of the native CPU backend (`runtime::native`; the backward half lives
+//! in `model::grad`).
+//!
+//! The kernels here are written for the hot path: branch-free inner loops
+//! over contiguous rows (so the compiler can auto-vectorize), and
+//! caller-provided ping-pong scratch buffers instead of per-layer
+//! allocation.
 
 use crate::runtime::manifest::LayerLayout;
 
-/// LeakyReLU.
+/// LeakyReLU. Written as a select (not `max`/`min` arithmetic, which
+/// would map NaN to 0.0 and mask divergence from the trainer's
+/// non-finite-gradient guard): NaN propagates, and the compiler lowers
+/// the select to a branch-free SIMD blend in the activation loops.
 pub fn leaky_relu(x: f32, slope: f32) -> f32 {
     if x >= 0.0 {
         x
@@ -16,9 +26,89 @@ pub fn leaky_relu(x: f32, slope: f32) -> f32 {
     }
 }
 
-/// Forward an MLP over flat params: `x` is (batch, d_in) row-major; returns
-/// (batch, d_out). Hidden layers use LeakyReLU, the last layer is linear —
-/// matching `python/compile/nets.py`.
+/// One dense layer over the flat parameter vector: `out = x W + b`, with
+/// optional LeakyReLU. `x` is (batch, rows) row-major, `out` (batch, cols);
+/// both contiguous. The inner accumulation runs over the contiguous weight
+/// row with no data-dependent branches.
+pub fn layer_forward(
+    flat: &[f32],
+    layer: &LayerLayout,
+    x: &[f32],
+    batch: usize,
+    slope: f32,
+    activate: bool,
+    out: &mut [f32],
+) {
+    let (rows, cols) = (layer.w_rows, layer.w_cols);
+    debug_assert_eq!(x.len(), batch * rows);
+    debug_assert_eq!(out.len(), batch * cols);
+    let w = &flat[layer.w_offset..layer.w_offset + rows * cols];
+    let b = &flat[layer.b_offset..layer.b_offset + layer.b_len];
+    for r in 0..batch {
+        let xin = &x[r * rows..(r + 1) * rows];
+        let orow = &mut out[r * cols..(r + 1) * cols];
+        orow.copy_from_slice(b);
+        for (i, &xi) in xin.iter().enumerate() {
+            let wrow = &w[i * cols..(i + 1) * cols];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xi * wv;
+            }
+        }
+        if activate {
+            for o in orow.iter_mut() {
+                *o = leaky_relu(*o, slope);
+            }
+        }
+    }
+}
+
+/// Reusable ping-pong scratch for [`mlp_forward_into`]. Buffers only ever
+/// grow, so steady-state forwards are allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct MlpScratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+/// Forward an MLP over flat params into a caller-provided output buffer:
+/// `x` is (batch, d_in) row-major; `out` is resized to (batch, d_out).
+/// Hidden layers use LeakyReLU, the last layer is linear — matching
+/// `python/compile/nets.py`. Intermediate activations ping-pong through
+/// `scratch` — no per-layer allocation.
+pub fn mlp_forward_into(
+    flat: &[f32],
+    layout: &[LayerLayout],
+    x: &[f32],
+    batch: usize,
+    slope: f32,
+    scratch: &mut MlpScratch,
+    out: &mut Vec<f32>,
+) {
+    let nl = layout.len();
+    debug_assert!(nl > 0);
+    debug_assert_eq!(x.len(), batch * layout[0].w_rows);
+    // Single layer: straight into `out`.
+    if nl == 1 {
+        fit(out, batch * layout[0].w_cols);
+        layer_forward(flat, &layout[0], x, batch, slope, false, out);
+        return;
+    }
+    // Hidden layers ping-pong between the two scratch buffers; the last
+    // layer writes `out`.
+    let (mut cur, mut next) = (&mut scratch.a, &mut scratch.b);
+    for (li, layer) in layout.iter().enumerate() {
+        let last = li + 1 == nl;
+        let dst: &mut Vec<f32> = if last { &mut *out } else { &mut *next };
+        fit(dst, batch * layer.w_cols);
+        let input: &[f32] = if li == 0 { x } else { cur.as_slice() };
+        layer_forward(flat, layer, input, batch, slope, !last, dst);
+        if !last {
+            std::mem::swap(&mut cur, &mut next);
+        }
+    }
+}
+
+/// Owned-result convenience wrapper around [`mlp_forward_into`].
 pub fn mlp_forward(
     flat: &[f32],
     layout: &[LayerLayout],
@@ -26,39 +116,16 @@ pub fn mlp_forward(
     batch: usize,
     slope: f32,
 ) -> Vec<f32> {
-    let mut h = x.to_vec();
-    let mut h_cols = layout[0].w_rows;
-    for (li, layer) in layout.iter().enumerate() {
-        debug_assert_eq!(h.len(), batch * layer.w_rows);
-        let (rows, cols) = (layer.w_rows, layer.w_cols);
-        let w = &flat[layer.w_offset..layer.w_offset + rows * cols];
-        let b = &flat[layer.b_offset..layer.b_offset + layer.b_len];
-        let activate = li + 1 < layout.len();
-        let mut out = vec![0.0f32; batch * cols];
-        for r in 0..batch {
-            let xin = &h[r * rows..(r + 1) * rows];
-            let orow = &mut out[r * cols..(r + 1) * cols];
-            orow.copy_from_slice(b);
-            for (i, &xi) in xin.iter().enumerate() {
-                if xi == 0.0 {
-                    continue;
-                }
-                let wrow = &w[i * cols..(i + 1) * cols];
-                for (o, &wv) in orow.iter_mut().zip(wrow) {
-                    *o += xi * wv;
-                }
-            }
-            if activate {
-                for o in orow.iter_mut() {
-                    *o = leaky_relu(*o, slope);
-                }
-            }
-        }
-        h = out;
-        h_cols = cols;
-    }
-    debug_assert_eq!(h.len(), batch * h_cols);
-    h
+    let mut scratch = MlpScratch::default();
+    let mut out = Vec::new();
+    mlp_forward_into(flat, layout, x, batch, slope, &mut scratch, &mut out);
+    out
+}
+
+/// Resize a reusable buffer to `len` zeros without shrinking capacity.
+pub(crate) fn fit(v: &mut Vec<f32>, len: usize) {
+    v.clear();
+    v.resize(len, 0.0);
 }
 
 /// The 1-D proxy quantile: `q(u; a, b, c) = a + b u + c u^2`.
@@ -66,12 +133,13 @@ pub fn quantile(u: f32, a: f32, b: f32, c: f32) -> f32 {
     a + b * u + c * u * u
 }
 
-/// The environment pipeline: params (B, 6) + uniforms (B, E, 2) -> events
-/// ((B*E), 2) flat, identical to `python/compile/pipeline.py`.
-pub fn pipeline(params: &[f32], u: &[f32], batch: usize, events: usize) -> Vec<f32> {
+/// The environment pipeline into a caller-provided buffer: params (B, 6) +
+/// uniforms (B, E, 2) -> events ((B*E), 2) flat, identical to
+/// `python/compile/pipeline.py`.
+pub fn pipeline_into(params: &[f32], u: &[f32], batch: usize, events: usize, out: &mut Vec<f32>) {
     debug_assert_eq!(params.len(), batch * 6);
     debug_assert_eq!(u.len(), batch * events * 2);
-    let mut out = vec![0.0f32; batch * events * 2];
+    fit(out, batch * events * 2);
     for bi in 0..batch {
         let p = &params[bi * 6..bi * 6 + 6];
         for e in 0..events {
@@ -80,6 +148,12 @@ pub fn pipeline(params: &[f32], u: &[f32], batch: usize, events: usize) -> Vec<f
             out[idx + 1] = quantile(u[idx + 1], p[3], p[4], p[5]);
         }
     }
+}
+
+/// Owned-result convenience wrapper around [`pipeline_into`].
+pub fn pipeline(params: &[f32], u: &[f32], batch: usize, events: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    pipeline_into(params, u, batch, events, &mut out);
     out
 }
 
@@ -148,6 +222,42 @@ mod tests {
         let flat = vec![1.0, 0.0, 1.0, 0.0];
         let y = mlp_forward(&flat, &layout, &[-2.0], 1, 0.5);
         assert_eq!(y, vec![-1.0]);
+    }
+
+    #[test]
+    fn forward_into_reuses_buffers_across_calls() {
+        let layout = vec![
+            LayerLayout {
+                w_offset: 0,
+                w_rows: 2,
+                w_cols: 3,
+                b_offset: 6,
+                b_len: 3,
+            },
+            LayerLayout {
+                w_offset: 9,
+                w_rows: 3,
+                w_cols: 2,
+                b_offset: 15,
+                b_len: 2,
+            },
+        ];
+        let flat: Vec<f32> = (0..17).map(|i| (i as f32) * 0.1 - 0.8).collect();
+        let x = vec![0.3f32, -0.7, 1.2, 0.4];
+        let mut scratch = MlpScratch::default();
+        let mut out = Vec::new();
+        mlp_forward_into(&flat, &layout, &x, 2, 0.2, &mut scratch, &mut out);
+        let first = out.clone();
+        let ptr = out.as_ptr();
+        mlp_forward_into(&flat, &layout, &x, 2, 0.2, &mut scratch, &mut out);
+        assert_eq!(out, first);
+        assert_eq!(out.as_ptr(), ptr, "output buffer must be reused");
+        // And the zero-branch removal did not change semantics: explicit
+        // zeros in the input are handled like any other value.
+        let xz = vec![0.0f32, 0.0, 0.0, 0.0];
+        let yz = mlp_forward(&flat, &layout, &xz, 2, 0.2);
+        assert_eq!(yz.len(), 4);
+        assert!(yz.iter().all(|v| v.is_finite()));
     }
 
     #[test]

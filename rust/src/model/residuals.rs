@@ -40,11 +40,16 @@ impl Residuals {
     }
 
     /// Generator predictions over the fixed noise batch: (k, 6) flat.
+    /// Inputs are borrowed — no parameter or noise clones per evaluation.
     pub fn predict(&self, gen_params: &[f32]) -> Result<Vec<f32>> {
-        let out = self
-            .handle
-            .execute(&self.artifact, vec![gen_params.to_vec(), self.z.clone()])?;
-        Ok(out.into_iter().next().unwrap())
+        let mut out = Vec::new();
+        self.handle
+            .execute_into(&self.artifact, &[gen_params, &self.z], &mut out)?;
+        out.into_iter()
+            .next()
+            .ok_or_else(|| crate::util::error::Error::Runtime(
+                "gen_predict returned no outputs".into(),
+            ))
     }
 
     /// Mean prediction per parameter: p̂ (6,).

@@ -1,18 +1,22 @@
 //! Train-step assembly: the bridge between the coordinator's state and the
-//! `gan_step` HLO artifact.
+//! `gan_step` computation (PJRT artifact or native backend).
 //!
 //! The coordinator owns all randomness: noise `z` and sampler uniforms `u`
-//! are drawn from the rank's PRNG stream and passed to the artifact as
+//! are drawn from the rank's PRNG stream and passed to the backend as
 //! inputs, so an epoch is a pure function of (params, rng state, data).
-//! Buffers are preallocated once and reused every epoch — the hot path does
-//! not allocate.
+//! The hot path is zero-copy: parameter and data inputs are *borrowed*
+//! (no per-epoch clones), and the gradient/loss output buffers rotate
+//! between the step executor and the caller's [`StepOutput`], so
+//! steady-state epochs allocate nothing.
 
 use crate::runtime::{ArtifactSpec, RuntimeHandle};
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 
-/// Outputs of one GAN step.
-#[derive(Clone, Debug)]
+/// Outputs of one GAN step. The gradient buffers are reusable: pass the
+/// same `StepOutput` back into [`TrainStep::run_into`] every epoch and the
+/// storage rotates instead of reallocating.
+#[derive(Clone, Debug, Default)]
 pub struct StepOutput {
     pub gen_grads: Vec<f32>,
     pub disc_grads: Vec<f32>,
@@ -30,6 +34,10 @@ pub struct TrainStep {
     // Preallocated input staging buffers.
     z: Vec<f32>,
     u: Vec<f32>,
+    // Reusable output slots (gen_grads, disc_grads, gen_loss, disc_loss);
+    // the gradient slots swap with the caller's StepOutput after every
+    // execution, so both sides keep reusing warm storage.
+    outs: Vec<Vec<f32>>,
 }
 
 impl TrainStep {
@@ -56,6 +64,7 @@ impl TrainStep {
             latent_dim,
             z: vec![0.0; batch * latent_dim],
             u: vec![0.0; batch * events * 2],
+            outs: Vec::new(),
             handle,
         })
     }
@@ -65,15 +74,18 @@ impl TrainStep {
         self.batch * self.events
     }
 
-    /// Run one step. `real` must hold `disc_batch() * 2` floats (the
-    /// bootstrap sample drawn by the caller).
-    pub fn run(
+    /// Run one step into a reusable [`StepOutput`]. `real` must hold
+    /// `disc_batch() * 2` floats (the bootstrap sample drawn by the
+    /// caller). All inputs are borrowed — nothing is cloned — and `out`'s
+    /// gradient buffers are reused across epochs.
+    pub fn run_into(
         &mut self,
         gen_params: &[f32],
         disc_params: &[f32],
         real: &[f32],
         rng: &mut Rng,
-    ) -> Result<StepOutput> {
+        out: &mut StepOutput,
+    ) -> Result<()> {
         if real.len() != self.disc_batch() * 2 {
             return Err(Error::Runtime(format!(
                 "real batch has {} floats, expected {}",
@@ -83,25 +95,43 @@ impl TrainStep {
         }
         rng.fill_normal(&mut self.z);
         rng.fill_uniform(&mut self.u);
-        let outputs = self.handle.execute(
-            &self.artifact,
-            vec![
-                gen_params.to_vec(),
-                disc_params.to_vec(),
-                self.z.clone(),
-                self.u.clone(),
-                real.to_vec(),
-            ],
-        )?;
-        let [gen_grads, disc_grads, gen_loss, disc_loss]: [Vec<f32>; 4] = outputs
-            .try_into()
-            .map_err(|_| Error::Runtime("gan_step must return 4 outputs".into()))?;
-        Ok(StepOutput {
-            gen_grads,
-            disc_grads,
-            gen_loss: gen_loss[0] as f64,
-            disc_loss: disc_loss[0] as f64,
-        })
+        let inputs: [&[f32]; 5] = [gen_params, disc_params, &self.z, &self.u, real];
+        self.handle
+            .execute_into(&self.artifact, &inputs, &mut self.outs)?;
+        if self.outs.len() != 4 {
+            return Err(Error::Runtime(format!(
+                "gan_step must return 4 outputs, got {}",
+                self.outs.len()
+            )));
+        }
+        out.gen_loss = self.outs[2]
+            .first()
+            .copied()
+            .ok_or_else(|| Error::Runtime("gan_step returned empty gen_loss".into()))?
+            as f64;
+        out.disc_loss = self.outs[3]
+            .first()
+            .copied()
+            .ok_or_else(|| Error::Runtime("gan_step returned empty disc_loss".into()))?
+            as f64;
+        // Rotate the freshly written gradient buffers out to the caller
+        // and take the caller's previous buffers as next epoch's slots.
+        std::mem::swap(&mut self.outs[0], &mut out.gen_grads);
+        std::mem::swap(&mut self.outs[1], &mut out.disc_grads);
+        Ok(())
+    }
+
+    /// Owned-output convenience wrapper around [`Self::run_into`].
+    pub fn run(
+        &mut self,
+        gen_params: &[f32],
+        disc_params: &[f32],
+        real: &[f32],
+        rng: &mut Rng,
+    ) -> Result<StepOutput> {
+        let mut out = StepOutput::default();
+        self.run_into(gen_params, disc_params, real, rng, &mut out)?;
+        Ok(out)
     }
 }
 
@@ -109,7 +139,7 @@ impl TrainStep {
 mod tests {
     use super::*;
     use crate::model::gan::GanState;
-    use crate::runtime::RuntimePool;
+    use crate::runtime::{Manifest, NativeRuntime, RuntimePool};
     use crate::util::rng::Rng;
     use std::path::Path;
 
@@ -145,28 +175,43 @@ mod tests {
     }
 
     #[test]
-    fn step_rejects_bad_real_batch() {
-        let Some(dir) = artifacts_dir() else { return };
-        let pool = RuntimePool::from_dir(&dir, 1).unwrap();
-        let h = pool.handle();
-        if h.manifest().artifact("gan_step_paper_b16_e25").is_err() {
-            return;
-        }
-        let mut step = TrainStep::new(h, "gan_step_paper_b16_e25").unwrap();
+    fn step_rejects_bad_real_batch_native() {
+        let h = NativeRuntime::new(Manifest::synthetic()).handle();
+        let mut step = TrainStep::new(h, "gan_step_small_b16_e25").unwrap();
         let mut rng = Rng::new(0);
-        let err = step.run(&[0.0; 10], &[0.0; 10], &[0.0; 3], &mut rng);
-        assert!(err.is_err());
-        pool.shutdown();
+        assert!(step.run(&[0.0; 10], &[0.0; 10], &[0.0; 3], &mut rng).is_err());
     }
 
     #[test]
     fn non_gan_step_artifact_rejected() {
-        let Some(dir) = artifacts_dir() else { return };
-        let pool = RuntimePool::from_dir(&dir, 1).unwrap();
-        let h = pool.handle();
-        if h.manifest().artifact("pipeline_b64_e25").is_ok() {
-            assert!(TrainStep::new(h, "pipeline_b64_e25").is_err());
+        let h = NativeRuntime::new(Manifest::synthetic()).handle();
+        assert!(TrainStep::new(h, "pipeline_b256_e25").is_err());
+    }
+
+    #[test]
+    fn run_into_reuses_gradient_buffers_across_epochs() {
+        let h = NativeRuntime::new(Manifest::synthetic()).handle();
+        let meta = h.manifest().model("small").unwrap().clone();
+        let slope = h.manifest().leaky_slope;
+        let mut rng = Rng::new(13);
+        let state = GanState::init(&meta, slope, &mut rng);
+        let mut step = TrainStep::new(h, "gan_step_small_b16_e25").unwrap();
+        let real = vec![0.5f32; step.disc_batch() * 2];
+        let mut out = StepOutput::default();
+        let mut ptrs = std::collections::HashSet::new();
+        for _ in 0..6 {
+            step.run_into(&state.gen, &state.disc, &real, &mut rng, &mut out)
+                .unwrap();
+            assert_eq!(out.gen_grads.len(), state.gen.len());
+            assert!(out.gen_grads.iter().all(|v| v.is_finite()));
+            ptrs.insert(out.gen_grads.as_ptr() as usize);
         }
-        pool.shutdown();
+        // The gradient storage rotates between at most two warm buffers —
+        // no per-epoch allocation.
+        assert!(
+            ptrs.len() <= 2,
+            "gen_grads buffer reallocated: {} distinct buffers",
+            ptrs.len()
+        );
     }
 }

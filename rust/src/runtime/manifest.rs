@@ -179,6 +179,209 @@ impl Manifest {
     pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
         self.dir.join(&spec.file)
     }
+
+    // ------------------------------------------------------------------
+    // Synthetic manifests (native backend, no `make artifacts` needed)
+    // ------------------------------------------------------------------
+
+    /// Build an in-memory manifest that mirrors the Python export
+    /// (`python/compile/aot.py`): the same three model size variants with
+    /// identical flat layouts, the same `true_params` / `latent_dim` /
+    /// `leaky_slope` constants, and the default artifact grid. The
+    /// `file` fields point at [`SYNTHETIC_FILE`]; only the native backend
+    /// can execute them (PJRT would try to read HLO text from disk).
+    pub fn synthetic() -> Manifest {
+        let mut models = BTreeMap::new();
+        for name in ["small", "medium", "paper"] {
+            models.insert(name.to_string(), synthetic_model(name).unwrap());
+        }
+        let mut m = Manifest {
+            dir: PathBuf::from(SYNTHETIC_FILE),
+            // Constants from python/compile: model.LATENT_DIM,
+            // nets.LEAKY_SLOPE, pipeline.TRUE_PARAMS.
+            latent_dim: 16,
+            leaky_slope: 0.2,
+            true_params: vec![1.0, 0.5, 0.3, -0.5, 1.2, 0.4],
+            models,
+            artifacts: BTreeMap::new(),
+        };
+        // The aot.py grid: weak-scaling gan_steps, the model-size cross,
+        // the diagnostics and the pipeline batches.
+        for b in [1usize, 2, 4, 8, 16, 32, 64] {
+            m.ensure_gan_step("paper", b, 25).unwrap();
+        }
+        for size in ["small", "medium", "paper"] {
+            for b in [16usize, 64] {
+                m.ensure_gan_step(size, b, 25).unwrap();
+            }
+            m.ensure_gen_predict(size, 256).unwrap();
+        }
+        m.ensure_pipeline(256, 25);
+        m.ensure_pipeline(64, 25);
+        m.ensure_disc_forward("paper", 1600).unwrap();
+        m
+    }
+
+    /// Add a `gan_step_{model}_b{batch}_e{events}` artifact spec if it is
+    /// not already present (no-op when the exported set has it).
+    pub fn ensure_gan_step(&mut self, model: &str, batch: usize, events: usize) -> Result<()> {
+        let name = format!("gan_step_{model}_b{batch}_e{events}");
+        if self.artifacts.contains_key(&name) {
+            return Ok(());
+        }
+        let meta = self.model(model)?;
+        let (pg, pd) = (meta.gen_param_count, meta.disc_param_count);
+        let latent = self.latent_dim;
+        let spec = ArtifactSpec {
+            name: name.clone(),
+            file: SYNTHETIC_FILE.into(),
+            kind: "gan_step".into(),
+            model: Some(model.to_string()),
+            batch: Some(batch),
+            events: Some(events),
+            inputs: vec![
+                io("gen_params", &[pg]),
+                io("disc_params", &[pd]),
+                io("z", &[batch, latent]),
+                io("u", &[batch, events, 2]),
+                io("real", &[batch * events, 2]),
+            ],
+            outputs: vec![
+                io("gen_grads", &[pg]),
+                io("disc_grads", &[pd]),
+                io("gen_loss", &[]),
+                io("disc_loss", &[]),
+            ],
+        };
+        self.artifacts.insert(name, spec);
+        Ok(())
+    }
+
+    /// Add a `gen_predict_{model}_k{k}` artifact spec if missing.
+    pub fn ensure_gen_predict(&mut self, model: &str, k: usize) -> Result<()> {
+        let name = format!("gen_predict_{model}_k{k}");
+        if self.artifacts.contains_key(&name) {
+            return Ok(());
+        }
+        let pg = self.model(model)?.gen_param_count;
+        let latent = self.latent_dim;
+        let spec = ArtifactSpec {
+            name: name.clone(),
+            file: SYNTHETIC_FILE.into(),
+            kind: "gen_predict".into(),
+            model: Some(model.to_string()),
+            batch: Some(k),
+            events: None,
+            inputs: vec![io("gen_params", &[pg]), io("z", &[k, latent])],
+            outputs: vec![io("params", &[k, 6])],
+        };
+        self.artifacts.insert(name, spec);
+        Ok(())
+    }
+
+    /// Add a `pipeline_b{batch}_e{events}` artifact spec if missing.
+    pub fn ensure_pipeline(&mut self, batch: usize, events: usize) {
+        let name = format!("pipeline_b{batch}_e{events}");
+        if self.artifacts.contains_key(&name) {
+            return;
+        }
+        let spec = ArtifactSpec {
+            name: name.clone(),
+            file: SYNTHETIC_FILE.into(),
+            kind: "pipeline".into(),
+            model: None,
+            batch: Some(batch),
+            events: Some(events),
+            inputs: vec![io("params", &[batch, 6]), io("u", &[batch, events, 2])],
+            outputs: vec![io("events", &[batch * events, 2])],
+        };
+        self.artifacts.insert(name, spec);
+    }
+
+    /// Add a `disc_forward_{model}_n{n}` artifact spec if missing.
+    pub fn ensure_disc_forward(&mut self, model: &str, n: usize) -> Result<()> {
+        let name = format!("disc_forward_{model}_n{n}");
+        if self.artifacts.contains_key(&name) {
+            return Ok(());
+        }
+        let pd = self.model(model)?.disc_param_count;
+        let spec = ArtifactSpec {
+            name: name.clone(),
+            file: SYNTHETIC_FILE.into(),
+            kind: "disc_forward".into(),
+            model: Some(model.to_string()),
+            batch: Some(n),
+            events: None,
+            inputs: vec![io("disc_params", &[pd]), io("events", &[n, 2])],
+            outputs: vec![io("logits", &[n])],
+        };
+        self.artifacts.insert(name, spec);
+        Ok(())
+    }
+}
+
+/// Marker used as the `file`/`dir` of in-memory (synthetic) artifacts.
+pub const SYNTHETIC_FILE: &str = "<synthetic>";
+
+fn io(name: &str, shape: &[usize]) -> IoSpec {
+    IoSpec {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+    }
+}
+
+/// The Rust mirror of `python/compile/model.py` `MODEL_SIZES`: hidden
+/// widths per size variant. "paper" matches the paper's parameter counts
+/// within 0.2% (51,288 vs 51,206 generator / 50,241 vs 50,049
+/// discriminator — exact architecture undisclosed).
+fn synthetic_model(size: &str) -> Result<ModelMeta> {
+    let (gen_hidden, disc_hidden): (&[usize], &[usize]) = match size {
+        "small" => (&[32, 32], &[32, 32]),
+        "medium" => (&[80, 80, 80], &[80, 80, 80]),
+        "paper" => (&[154, 154, 154], &[157, 157, 157]),
+        other => {
+            return Err(Error::Manifest(format!(
+                "unknown synthetic model size '{other}'"
+            )))
+        }
+    };
+    let mut gen_sizes = vec![16usize]; // LATENT_DIM
+    gen_sizes.extend_from_slice(gen_hidden);
+    gen_sizes.push(6);
+    let mut disc_sizes = vec![2usize];
+    disc_sizes.extend_from_slice(disc_hidden);
+    disc_sizes.push(1);
+    let (gen_dims, gen_layout, gen_param_count) = layout_from_sizes(&gen_sizes);
+    let (disc_dims, disc_layout, disc_param_count) = layout_from_sizes(&disc_sizes);
+    Ok(ModelMeta {
+        gen_dims,
+        disc_dims,
+        gen_param_count,
+        disc_param_count,
+        gen_layout,
+        disc_layout,
+    })
+}
+
+/// Flat [W0, b0, W1, b1, ...] layout (W row-major (In, Out)) from a layer
+/// size list — identical to `python/compile/nets.py::layer_layout`.
+/// Returns (dims, layout, param_count). Public because it is the single
+/// source of the offset arithmetic every gradient/layout test builds on.
+pub fn layout_from_sizes(sizes: &[usize]) -> (Vec<(usize, usize)>, Vec<LayerLayout>, usize) {
+    let dims: Vec<(usize, usize)> = sizes.windows(2).map(|w| (w[0], w[1])).collect();
+    let mut layout = Vec::with_capacity(dims.len());
+    let mut off = 0usize;
+    for &(d_in, d_out) in &dims {
+        layout.push(LayerLayout {
+            w_offset: off,
+            w_rows: d_in,
+            w_cols: d_out,
+            b_offset: off + d_in * d_out,
+            b_len: d_out,
+        });
+        off += d_in * d_out + d_out;
+    }
+    (dims, layout, off)
 }
 
 fn parse_layout(v: &Value) -> Result<Vec<LayerLayout>> {
@@ -347,6 +550,66 @@ mod tests {
         assert_eq!(segs.len(), 4);
         assert!(!segs[0].is_bias && segs[0].len == 6);
         assert!(segs[1].is_bias && segs[1].len == 3);
+    }
+
+    #[test]
+    fn synthetic_layouts_tile_exactly_and_match_paper_counts() {
+        let m = Manifest::synthetic();
+        assert_eq!(m.latent_dim, 16);
+        assert_eq!(m.true_params, vec![1.0, 0.5, 0.3, -0.5, 1.2, 0.4]);
+        for (name, meta) in &m.models {
+            let gen_end = meta.gen_layout.last().map(|l| l.b_offset + l.b_len).unwrap();
+            assert_eq!(gen_end, meta.gen_param_count, "{name} gen layout");
+            let disc_end = meta.disc_layout.last().map(|l| l.b_offset + l.b_len).unwrap();
+            assert_eq!(disc_end, meta.disc_param_count, "{name} disc layout");
+            // Every weight region is immediately followed by its bias.
+            for l in meta.gen_layout.iter().chain(&meta.disc_layout) {
+                assert_eq!(l.b_offset, l.w_offset + l.w_len());
+            }
+        }
+        // Same counts as python/compile/model.py documents for "paper".
+        let paper = m.model("paper").unwrap();
+        assert_eq!(paper.gen_param_count, 51_288);
+        assert_eq!(paper.disc_param_count, 50_241);
+        // Dims mirror [16, hidden.., 6] / [2, hidden.., 1].
+        assert_eq!(paper.gen_dims.first(), Some(&(16, 154)));
+        assert_eq!(paper.gen_dims.last(), Some(&(154, 6)));
+        assert_eq!(paper.disc_dims.first(), Some(&(2, 157)));
+        assert_eq!(paper.disc_dims.last(), Some(&(157, 1)));
+    }
+
+    #[test]
+    fn synthetic_grid_covers_the_export_grid() {
+        let m = Manifest::synthetic();
+        for b in [1usize, 2, 4, 8, 16, 32, 64] {
+            assert!(m.artifact(&format!("gan_step_paper_b{b}_e25")).is_ok());
+        }
+        for size in ["small", "medium", "paper"] {
+            assert!(m.artifact(&format!("gan_step_{size}_b16_e25")).is_ok());
+            assert!(m.artifact(&format!("gen_predict_{size}_k256")).is_ok());
+        }
+        assert!(m.artifact("pipeline_b256_e25").is_ok());
+        assert!(m.artifact("disc_forward_paper_n1600").is_ok());
+        // gan_step io arity/shapes follow aot.py's export.
+        let a = m.artifact("gan_step_paper_b16_e25").unwrap();
+        assert_eq!(a.inputs.len(), 5);
+        assert_eq!(a.outputs.len(), 4);
+        assert_eq!(a.inputs[2].shape, vec![16, 16]); // z: (B, LATENT)
+        assert_eq!(a.inputs[4].shape, vec![400, 2]); // real: (B*E, 2)
+        assert_eq!(a.outputs[2].elems(), 1); // scalar loss
+    }
+
+    #[test]
+    fn ensure_is_idempotent_and_checks_models() {
+        let mut m = Manifest::synthetic();
+        let before = m.artifacts.len();
+        m.ensure_gan_step("paper", 16, 25).unwrap();
+        m.ensure_pipeline(256, 25);
+        assert_eq!(m.artifacts.len(), before);
+        m.ensure_gan_step("small", 3, 7).unwrap();
+        assert_eq!(m.artifacts.len(), before + 1);
+        assert!(m.ensure_gan_step("huge", 4, 4).is_err());
+        assert!(m.ensure_gen_predict("huge", 256).is_err());
     }
 
     #[test]

@@ -1,24 +1,248 @@
-//! PJRT runtime: load the AOT HLO artifacts and execute them from Rust.
+//! Execution runtime: run the GAN computations from Rust, through one of
+//! two interchangeable backends.
 //!
 //! * [`manifest`] — parses `artifacts/manifest.json` (the contract written
 //!   by `python/compile/aot.py`): artifact files, input/output shapes,
-//!   model layer layouts, parameter counts, true parameters.
-//! * [`pool`] — the execution pool. The `xla` crate's PJRT handles are
-//!   `!Send` (internally `Rc`), so they cannot migrate across the rank
+//!   model layer layouts, parameter counts, true parameters. Also provides
+//!   [`Manifest::synthetic`], an in-memory manifest with the same model
+//!   grid so the native backend needs no `make artifacts` step.
+//! * [`pool`] — the PJRT execution pool. The `xla` crate's PJRT handles
+//!   are `!Send` (internally `Rc`), so they cannot migrate across the rank
 //!   threads; instead a small pool of dedicated worker threads each owns a
-//!   `PjRtClient` plus a lazily-compiled executable cache, and rank threads
-//!   submit execute requests over channels. This is also how a real
-//!   deployment would bind executables to GPUs — ranks share a fixed set
-//!   of devices.
+//!   `PjRtClient` plus a lazily-compiled executable cache, and rank
+//!   threads submit execute requests over channels.
+//! * [`native`] — a pure-Rust CPU backend: fused forward + analytic
+//!   backward for every artifact kind (`model::reference` +
+//!   `model::grad`), executing directly on the calling rank thread with
+//!   thread-local scratch — no channel hop, no per-call allocation.
 //!
-//! HLO **text** is the interchange format (`HloModuleProto::from_text_file`)
-//! — see DESIGN.md and /opt/xla-example/README.md for why serialized protos
-//! from jax >= 0.5 are rejected by xla_extension 0.5.1.
+//! Both backends sit behind the [`Backend`] trait and are reached through
+//! a cheap, clonable [`RuntimeHandle`]. The hot-path entry point is
+//! [`RuntimeHandle::execute_into`]: inputs are *borrowed* slices and
+//! outputs are caller-owned buffers that are reused across calls, so the
+//! native path is zero-copy and allocation-free end to end. The owning
+//! [`Runtime`] enum picks a backend from the run configuration.
+//!
+//! HLO **text** is the PJRT interchange format
+//! (`HloModuleProto::from_text_file`) — see DESIGN.md and
+//! /opt/xla-example/README.md for why serialized protos from jax >= 0.5
+//! are rejected by xla_extension 0.5.1.
 
 pub mod manifest;
+pub mod native;
 pub mod pool;
 #[cfg(not(feature = "pjrt"))]
 pub(crate) mod xla_stub;
 
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::{BackendKind, RunConfig};
+use crate::util::error::{Error, Result};
+
 pub use manifest::{ArtifactSpec, LayerLayout, Manifest, ModelMeta};
-pub use pool::{RuntimeHandle, RuntimePool};
+pub use native::NativeRuntime;
+pub use pool::RuntimePool;
+
+/// An execution backend: something that can run one artifact's
+/// computation over flat f32 buffers.
+///
+/// Implementations must be shareable across rank threads. Inputs arrive
+/// as borrowed slices (already validated against the manifest by
+/// [`RuntimeHandle`]); outputs are caller-owned `Vec`s, one per manifest
+/// output, which the backend fills — resizing only on first use so
+/// steady-state execution reuses the caller's storage.
+pub trait Backend: Send + Sync {
+    /// Short backend label for logs and bench reports.
+    fn name(&self) -> &'static str;
+
+    /// Execute `spec` with borrowed inputs, writing into `outputs`
+    /// (length `spec.outputs.len()`, pre-sized by the handle).
+    fn execute_into(
+        &self,
+        manifest: &Manifest,
+        spec: &ArtifactSpec,
+        inputs: &[&[f32]],
+        outputs: &mut [Vec<f32>],
+    ) -> Result<()>;
+}
+
+/// Cheap, clonable handle used by rank threads. Validates every call
+/// against the manifest before dispatching to the backend, so mistakes
+/// surface with artifact + input names instead of an XLA abort or a
+/// kernel panic.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    manifest: Arc<Manifest>,
+    backend: Arc<dyn Backend>,
+}
+
+impl RuntimeHandle {
+    /// Wrap a backend over a manifest.
+    pub fn new(manifest: Arc<Manifest>, backend: Arc<dyn Backend>) -> RuntimeHandle {
+        RuntimeHandle { manifest, backend }
+    }
+
+    /// Zero-copy execution: borrow `inputs`, fill the caller's reusable
+    /// `outputs` buffers (resized to the manifest's output arity/shapes on
+    /// first use, reused verbatim afterwards). This is the hot path: on
+    /// the native backend it runs on the calling thread and performs no
+    /// allocation once the buffers are warm.
+    pub fn execute_into(
+        &self,
+        artifact: &str,
+        inputs: &[&[f32]],
+        outputs: &mut Vec<Vec<f32>>,
+    ) -> Result<()> {
+        let spec = self.manifest.artifact(artifact)?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "artifact '{artifact}' takes {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (buf, io) in inputs.iter().zip(&spec.inputs) {
+            if buf.len() != io.elems() {
+                return Err(Error::Runtime(format!(
+                    "artifact '{artifact}' input '{}' wants {} elements ({:?}), got {}",
+                    io.name,
+                    io.elems(),
+                    io.shape,
+                    buf.len()
+                )));
+            }
+        }
+        outputs.truncate(spec.outputs.len());
+        outputs.resize_with(spec.outputs.len(), Vec::new);
+        self.backend
+            .execute_into(&self.manifest, spec, inputs, outputs)
+    }
+
+    /// Owned-buffer convenience wrapper around [`Self::execute_into`]:
+    /// returns flat outputs in the manifest's output order. Cold paths and
+    /// compatibility callers only — the hot path borrows.
+    pub fn execute(&self, artifact: &str, inputs: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let mut outputs = Vec::new();
+        self.execute_into(artifact, &refs, &mut outputs)?;
+        Ok(outputs)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Which backend this handle executes on ("native" | "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+}
+
+/// The owning runtime: either a PJRT pool or the in-process native CPU
+/// backend, selected by `RunConfig::backend`.
+pub enum Runtime {
+    Pool(RuntimePool),
+    Native(NativeRuntime),
+}
+
+impl Runtime {
+    /// Build the backend a run configuration asks for.
+    ///
+    /// * `pjrt` — loads `<artifacts_dir>/manifest.json` and spins up the
+    ///   worker pool (requires the exported artifact set and, for real
+    ///   execution, the `pjrt` cargo feature).
+    /// * `native` — uses the on-disk manifest when present (so shapes and
+    ///   layouts match the exported contract exactly), otherwise a
+    ///   synthetic in-memory manifest; either way the artifacts the run
+    ///   needs are guaranteed to exist, so no `make artifacts` is
+    ///   required.
+    pub fn from_config(cfg: &RunConfig, workers: usize) -> Result<Runtime> {
+        let dir = Path::new(&cfg.artifacts_dir);
+        match cfg.backend {
+            BackendKind::Pjrt => Ok(Runtime::Pool(RuntimePool::from_dir(dir, workers)?)),
+            BackendKind::Native => {
+                let mut manifest = if dir.join("manifest.json").exists() {
+                    Manifest::load(dir)?
+                } else {
+                    Manifest::synthetic()
+                };
+                manifest.ensure_gan_step(&cfg.model, cfg.batch, cfg.events)?;
+                manifest.ensure_gen_predict(&cfg.model, 256)?;
+                manifest.ensure_pipeline(256, 25);
+                Ok(Runtime::Native(NativeRuntime::new(manifest)))
+            }
+        }
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        match self {
+            Runtime::Pool(p) => p.handle(),
+            Runtime::Native(n) => n.handle(),
+        }
+    }
+
+    /// Shut the runtime down (joins PJRT workers; the native backend has
+    /// nothing to join).
+    pub fn shutdown(self) {
+        match self {
+            Runtime::Pool(p) => p.shutdown(),
+            Runtime::Native(_) => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn native_runtime_from_config_needs_no_artifacts() {
+        let mut cfg = presets::ci_default();
+        cfg.backend = BackendKind::Native;
+        cfg.artifacts_dir = "/nonexistent/artifacts".into();
+        let rt = Runtime::from_config(&cfg, 1).unwrap();
+        let h = rt.handle();
+        assert_eq!(h.backend_name(), "native");
+        assert!(h.manifest().artifact(&cfg.gan_step_artifact()).is_ok());
+        assert!(h.manifest().artifact(&cfg.gen_predict_artifact()).is_ok());
+        assert!(h.manifest().artifact("pipeline_b256_e25").is_ok());
+        rt.shutdown();
+    }
+
+    #[test]
+    fn handle_validates_before_dispatch() {
+        let rt = NativeRuntime::new(Manifest::synthetic());
+        let h = rt.handle();
+        // unknown artifact
+        assert!(h.execute("nope", vec![]).is_err());
+        // wrong arity
+        assert!(h.execute("pipeline_b256_e25", vec![vec![0.0]]).is_err());
+        // wrong input size
+        assert!(h
+            .execute("pipeline_b256_e25", vec![vec![0.0; 3], vec![0.0; 5]])
+            .is_err());
+    }
+
+    #[test]
+    fn execute_into_reuses_output_buffers() {
+        let rt = NativeRuntime::new(Manifest::synthetic());
+        let h = rt.handle();
+        let spec = h.manifest().artifact("pipeline_b256_e25").unwrap();
+        let n_in: Vec<usize> = spec.inputs.iter().map(|io| io.elems()).collect();
+        let params = vec![0.5f32; n_in[0]];
+        let u = vec![0.25f32; n_in[1]];
+        let mut outputs: Vec<Vec<f32>> = Vec::new();
+        h.execute_into("pipeline_b256_e25", &[&params, &u], &mut outputs)
+            .unwrap();
+        assert_eq!(outputs.len(), 1);
+        let ptr = outputs[0].as_ptr();
+        let cap = outputs[0].capacity();
+        h.execute_into("pipeline_b256_e25", &[&params, &u], &mut outputs)
+            .unwrap();
+        // Same storage, no reallocation on the steady-state path.
+        assert_eq!(outputs[0].as_ptr(), ptr);
+        assert_eq!(outputs[0].capacity(), cap);
+    }
+}

@@ -1,16 +1,19 @@
-//! The PJRT execution pool.
+//! The PJRT execution pool backend.
 //!
 //! PJRT handles from the `xla` crate are `!Send` (they wrap `Rc`s over C
 //! pointers), so executables cannot move between rank threads. Instead the
 //! pool owns a fixed set of worker threads; each worker creates its own
 //! `PjRtClient::cpu()` and compiles artifacts on first use (per-worker
 //! executable cache). Rank threads hold a cheap [`RuntimeHandle`] and
-//! submit [`ExecuteRequest`]s over a shared channel; any idle worker picks
-//! the request up, executes, and replies over a oneshot channel.
+//! submit requests over a shared channel; any idle worker picks the
+//! request up, executes, and replies over a oneshot channel.
 //!
 //! Inputs and outputs cross the channel as flat `Vec<f32>` buffers; shapes
 //! come from the manifest. This mirrors the paper's gradient off-loading
 //! (Sec. IV-B6): tensors live host-side around every device execution.
+//! Because the request must own its buffers to cross threads, the PJRT
+//! path stages one copy of the borrowed inputs per call — the native
+//! backend (`runtime::native`) is the zero-copy path.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -18,6 +21,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use super::manifest::{ArtifactSpec, Manifest};
+use super::{Backend, RuntimeHandle};
 use crate::util::error::{Error, Result};
 
 // Without the `pjrt` feature the `xla` paths below resolve to the
@@ -40,52 +44,40 @@ enum Req {
     Shutdown,
 }
 
-/// Cheap, clonable handle used by rank threads.
-#[derive(Clone)]
-pub struct RuntimeHandle {
-    manifest: Arc<Manifest>,
+/// The channel-dispatch [`Backend`] over the worker pool.
+struct PoolBackend {
     queue: Sender<Req>,
 }
 
-impl RuntimeHandle {
-    /// Execute `artifact` with the given flat inputs; returns flat outputs
-    /// in the manifest's output order. Blocks until complete.
-    pub fn execute(&self, artifact: &str, inputs: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
-        // Validate against the manifest before crossing threads: mistakes
-        // surface with artifact + input names instead of an XLA abort.
-        let spec = self.manifest.artifact(artifact)?;
-        if inputs.len() != spec.inputs.len() {
-            return Err(Error::Runtime(format!(
-                "artifact '{artifact}' takes {} inputs, got {}",
-                spec.inputs.len(),
-                inputs.len()
-            )));
-        }
-        for (buf, io) in inputs.iter().zip(&spec.inputs) {
-            if buf.len() != io.elems() {
-                return Err(Error::Runtime(format!(
-                    "artifact '{artifact}' input '{}' wants {} elements ({:?}), got {}",
-                    io.name,
-                    io.elems(),
-                    io.shape,
-                    buf.len()
-                )));
-            }
-        }
+impl Backend for PoolBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn execute_into(
+        &self,
+        _manifest: &Manifest,
+        spec: &ArtifactSpec,
+        inputs: &[&[f32]],
+        outputs: &mut [Vec<f32>],
+    ) -> Result<()> {
+        // Stage owned copies: buffers must cross the worker channel.
+        let owned: Vec<Vec<f32>> = inputs.iter().map(|s| s.to_vec()).collect();
         let (tx, rx) = channel();
         self.queue
             .send(Req::Exec(ExecuteRequest {
-                artifact: artifact.to_string(),
-                inputs,
+                artifact: spec.name.clone(),
+                inputs: owned,
                 reply: tx,
             }))
             .map_err(|_| Error::Runtime("runtime pool shut down".into()))?;
-        rx.recv()
-            .map_err(|_| Error::Runtime("runtime worker dropped request".into()))?
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+        let results = rx
+            .recv()
+            .map_err(|_| Error::Runtime("runtime worker dropped request".into()))??;
+        for (slot, v) in outputs.iter_mut().zip(results) {
+            *slot = v;
+        }
+        Ok(())
     }
 }
 
@@ -122,10 +114,10 @@ impl RuntimePool {
                 .recv()
                 .map_err(|_| Error::Runtime("worker died during init".into()))??;
         }
-        let handle = RuntimeHandle {
+        let handle = RuntimeHandle::new(
             manifest,
-            queue: tx.clone(),
-        };
+            Arc::new(PoolBackend { queue: tx.clone() }),
+        );
         Ok(RuntimePool {
             handle,
             workers: joins,
@@ -222,7 +214,19 @@ fn execute_one(
         literals.push(lit);
     }
 
-    let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+    // execute() returns per-device rows of result buffers; an empty result
+    // (e.g. a miscompiled artifact) must surface as an error, not a panic.
+    let rows = exe.execute::<xla::Literal>(&literals)?;
+    let buffer = rows
+        .first()
+        .and_then(|row| row.first())
+        .ok_or_else(|| {
+            Error::Runtime(format!(
+                "artifact '{}' returned no result buffers",
+                req.artifact
+            ))
+        })?;
+    let result = buffer.to_literal_sync()?;
     // aot.py lowers with return_tuple=True: always a tuple, even for one
     // output.
     let elements = result.to_tuple()?;

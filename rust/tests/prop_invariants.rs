@@ -1,15 +1,155 @@
 //! Property-based tests over the coordinator substrates (in-repo
 //! harness, `sagips::util::proptest`): collective correctness for random
 //! topologies/values, fusion-plan roundtrips, RMA semantics, topology
-//! invariants, simulator sanity, JSON roundtrips.
+//! invariants, native-backend gradients vs finite differences, simulator
+//! sanity, JSON roundtrips.
 
 use sagips::collective::ring::ring_pass;
 use sagips::comm::{GradMsg, LinkModel, LocalNetwork, RmaRegion, RmaWindow, Topology};
 use sagips::config::Mode;
+use sagips::model::{grad, reference};
+use sagips::runtime::manifest::layout_from_sizes;
+use sagips::runtime::LayerLayout;
 use sagips::sim::{simulate, ComputeModel, SimConfig};
 use sagips::tensor::fusion::{segments_from_layout, FusionPlan};
 use sagips::util::json::Value;
 use sagips::util::proptest::{run, Gen};
+
+/// Random MLP: layer sizes in [1, 6], 1-3 layers, flat layout from the
+/// runtime's single layout builder, params drawn from the generator.
+fn random_mlp(g: &mut Gen) -> (Vec<LayerLayout>, Vec<f32>, Vec<usize>) {
+    let n_layers = g.usize_in(1..=3);
+    let mut sizes = vec![g.usize_in(1..=6)];
+    for _ in 0..n_layers {
+        sizes.push(g.usize_in(1..=6));
+    }
+    let (_, layout, count) = layout_from_sizes(&sizes);
+    let flat: Vec<f32> = (0..count).map(|_| g.f32_in(-1.0..=1.0)).collect();
+    (layout, flat, sizes)
+}
+
+#[test]
+fn prop_native_mlp_backward_matches_central_differences() {
+    run("analytic MLP gradients match central finite differences", 60, |g| {
+        let (layout, flat, sizes) = random_mlp(g);
+        let batch = g.usize_in(1..=4);
+        let slope = 0.2f32;
+        let d_in = sizes[0];
+        let d_out_cols = *sizes.last().unwrap();
+        let x: Vec<f32> = (0..batch * d_in).map(|_| g.f32_in(-1.5..=1.5)).collect();
+        // Scalar loss L = Σ c ⊙ forward(x) with random cotangent c.
+        let c: Vec<f32> = (0..batch * d_out_cols)
+            .map(|_| g.f32_in(-1.0..=1.0))
+            .collect();
+        let loss = |flat: &[f32], x: &[f32]| -> f64 {
+            reference::mlp_forward(flat, &layout, x, batch, slope)
+                .iter()
+                .zip(&c)
+                .map(|(&y, &cv)| (y * cv) as f64)
+                .sum()
+        };
+
+        let mut acts = Vec::new();
+        grad::mlp_forward_cached(&flat, &layout, &x, batch, slope, &mut acts);
+        let mut d_out = c.clone();
+        let mut scratch = Vec::new();
+        let mut d_flat = vec![0.0f32; flat.len()];
+        let mut d_x = vec![0.0f32; x.len()];
+        grad::mlp_backward(
+            &flat,
+            &layout,
+            &x,
+            batch,
+            slope,
+            &acts,
+            &mut d_out,
+            &mut scratch,
+            Some(&mut d_flat),
+            Some(&mut d_x),
+        );
+
+        let h = 1e-2f32;
+        let close = |num: f64, ana: f64| {
+            // Piecewise-linear net: central differences are exact up to
+            // f32 noise unless a LeakyReLU kink sits inside ±h.
+            (num - ana).abs() < 2e-2 + 0.1 * ana.abs().max(num.abs())
+        };
+        for k in 0..flat.len() {
+            let mut fp = flat.clone();
+            fp[k] += h;
+            let mut fm = flat.clone();
+            fm[k] -= h;
+            let num = (loss(&fp, &x) - loss(&fm, &x)) / (2.0 * h as f64);
+            assert!(
+                close(num, d_flat[k] as f64),
+                "param {k}: numeric {num} vs analytic {} (sizes {sizes:?})",
+                d_flat[k]
+            );
+        }
+        for k in 0..x.len() {
+            let mut xp = x.clone();
+            xp[k] += h;
+            let mut xm = x.clone();
+            xm[k] -= h;
+            let num = (loss(&flat, &xp) - loss(&flat, &xm)) / (2.0 * h as f64);
+            assert!(
+                close(num, d_x[k] as f64),
+                "input {k}: numeric {num} vs analytic {} (sizes {sizes:?})",
+                d_x[k]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_cached_forward_matches_reference_forward() {
+    run("cached forward == ping-pong reference forward", 120, |g| {
+        let (layout, flat, sizes) = random_mlp(g);
+        let batch = g.usize_in(1..=4);
+        let x: Vec<f32> = (0..batch * sizes[0]).map(|_| g.f32_in(-2.0..=2.0)).collect();
+        let mut acts = Vec::new();
+        grad::mlp_forward_cached(&flat, &layout, &x, batch, 0.2, &mut acts);
+        let want = reference::mlp_forward(&flat, &layout, &x, batch, 0.2);
+        assert_eq!(acts[layout.len() - 1], want);
+    });
+}
+
+#[test]
+fn prop_pipeline_backward_matches_central_differences() {
+    run("quantile pipeline VJP matches central differences", 80, |g| {
+        let batch = g.usize_in(1..=3);
+        let events = g.usize_in(1..=4);
+        let params: Vec<f32> = (0..batch * 6).map(|_| g.f32_in(-1.0..=1.0)).collect();
+        let u: Vec<f32> = (0..batch * events * 2).map(|_| g.f32_in(0.0..=1.0)).collect();
+        let c: Vec<f32> = (0..batch * events * 2)
+            .map(|_| g.f32_in(-1.0..=1.0))
+            .collect();
+        let loss = |p: &[f32]| -> f64 {
+            reference::pipeline(p, &u, batch, events)
+                .iter()
+                .zip(&c)
+                .map(|(&y, &cv)| (y * cv) as f64)
+                .sum()
+        };
+        let mut dp = Vec::new();
+        grad::pipeline_backward(&c, &u, batch, events, &mut dp);
+        let h = 1e-2f32;
+        for k in 0..params.len() {
+            let mut pp = params.clone();
+            pp[k] += h;
+            let mut pm = params.clone();
+            pm[k] -= h;
+            let num = (loss(&pp) - loss(&pm)) / (2.0 * h as f64);
+            let ana = dp[k] as f64;
+            // The pipeline is quadratic in u but *linear* in params, so
+            // central differences are exact up to f32 rounding.
+            assert!(
+                (num - ana).abs() < 1e-3 + 1e-3 * ana.abs(),
+                "param {k}: numeric {num} vs analytic {ana}"
+            );
+        }
+    });
+}
 
 #[test]
 fn prop_ring_pass_averages_any_ring() {
