@@ -168,6 +168,9 @@ def export_all(out_dir, paper_scale=False, only=None):
     os.makedirs(out_dir, exist_ok=True)
     manifest = {
         "version": 1,
+        # The JAX/Pallas export covers the paper's proxy app only; the
+        # Rust side defaults missing keys to "quantile" for back-compat.
+        "scenario": "quantile",
         "latent_dim": model.LATENT_DIM,
         "leaky_slope": nets.LEAKY_SLOPE,
         "true_params": pipeline.TRUE_PARAMS,

@@ -173,6 +173,9 @@ impl ChunkPolicy {
 /// Full run configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
+    /// Inverse-problem scenario to train (a registered
+    /// [`crate::scenario`] name; paper proxy app: `"quantile"`).
+    pub scenario: String,
     /// Number of simulated ranks (GPUs). Paper: 4..400 on Polaris.
     pub ranks: usize,
     /// Ranks per node — the inner-group size (paper: 4, the A100s/node).
@@ -243,6 +246,7 @@ impl RunConfig {
         let mut cfg = presets::ci_default();
         for (k, val) in obj {
             match k.as_str() {
+                "scenario" => cfg.scenario = req_str(val, k)?,
                 "ranks" => cfg.ranks = as_usize(val, k)?,
                 "gpus_per_node" => cfg.gpus_per_node = as_usize(val, k)?,
                 "mode" => {
@@ -296,6 +300,15 @@ impl RunConfig {
 
     /// Validate cross-field invariants.
     pub fn validate(&self) -> Result<()> {
+        // Unknown scenarios fail here with the registered names listed.
+        let sc = crate::scenario::lookup(&self.scenario)?;
+        if self.backend == BackendKind::Pjrt && sc.name() != "quantile" {
+            return Err(Error::config(format!(
+                "scenario '{}' runs on the native backend only (the HLO \
+                 export covers the quantile proxy app); use backend \"native\"",
+                sc.name()
+            )));
+        }
         if self.ranks == 0 {
             return Err(Error::config("ranks must be >= 1"));
         }
@@ -500,6 +513,23 @@ mod tests {
         let c = RunConfig::from_json(r#"{"chunking": 1024}"#).unwrap();
         assert_eq!(c.chunking, ChunkPolicy::MaxElems(1024));
         assert!(RunConfig::from_json(r#"{"chunking": "huh"}"#).is_err());
+    }
+
+    #[test]
+    fn scenario_parses_validates_and_lists_names_on_error() {
+        let c = RunConfig::from_json(r#"{"scenario": "deconv"}"#).unwrap();
+        assert_eq!(c.scenario, "deconv");
+        let err = RunConfig::from_json(r#"{"scenario": "warp"}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("quantile") && err.contains("deconv"), "{err}");
+        // Non-quantile scenarios are native-backend-only.
+        let err = RunConfig::from_json(r#"{"scenario": "deconv", "backend": "pjrt"}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("native"), "{err}");
+        // The paper scenario runs on either backend.
+        assert!(RunConfig::from_json(r#"{"backend": "pjrt"}"#).is_ok());
     }
 
     #[test]

@@ -15,6 +15,7 @@ use super::{BackendKind, ChunkPolicy, Mode, RunConfig};
 /// `--paper-scale`.
 pub fn paper_table3() -> RunConfig {
     RunConfig {
+        scenario: "quantile".into(),
         ranks: 8,
         gpus_per_node: 4,
         mode: Mode::ArarArar,
@@ -43,6 +44,7 @@ pub fn paper_table3() -> RunConfig {
 /// CI-scale settings: same knobs, laptop-sized workload.
 pub fn ci_default() -> RunConfig {
     RunConfig {
+        scenario: "quantile".into(),
         ranks: 4,
         gpus_per_node: 4,
         mode: Mode::ArarArar,

@@ -74,6 +74,19 @@ pub fn run_training_with_links(
 ) -> Result<RunResult> {
     cfg.validate()?;
     let manifest = handle.manifest();
+    // The runtime's manifest is pinned to one scenario (model shapes,
+    // true params, artifact shapes): a mismatching config would train the
+    // wrong forward operator against the wrong reference data. Compare
+    // canonical names (lookup is case-insensitive, manifests store the
+    // canonical form).
+    if manifest.scenario != crate::scenario::lookup(&cfg.scenario)?.name() {
+        return Err(Error::config(format!(
+            "config selects scenario '{}' but the runtime was built for \
+             '{}' — rebuild the runtime (Runtime::from_config) with the \
+             same scenario",
+            cfg.scenario, manifest.scenario
+        )));
+    }
     // Fail fast if the artifact grid is missing this configuration.
     manifest.artifact(&cfg.gan_step_artifact())?;
     manifest.artifact(&cfg.gen_predict_artifact())?;

@@ -3,8 +3,9 @@
 //! One thread per rank (= one GPU in the paper). Each epoch:
 //!
 //! 1. bootstrap-draw a discriminator batch from the rank's data shard;
-//! 2. execute the `gan_step` artifact (generator forward -> pipeline ->
-//!    discriminator; returns both networks' gradients and losses);
+//! 2. execute the `gan_step` artifact (generator forward -> the
+//!    scenario's forward operator -> discriminator; returns both
+//!    networks' gradients and losses);
 //! 3. update the *local* discriminator immediately (the paper trains one
 //!    discriminator per rank, autonomously);
 //! 4. off-load the generator's weight gradients into the packed transfer
@@ -72,6 +73,9 @@ pub fn run_rank(
     let manifest = handle.manifest();
     let meta = manifest.model(&cfg.model)?.clone();
     let slope = manifest.leaky_slope;
+    // Checkpoints carry the scenario identity so a restore under the
+    // wrong forward operator is refused instead of silently diverging.
+    let scenario = manifest.scenario.clone();
 
     // Model + optimizers (paper: Adam, G lr 1e-5 / D lr 1e-4).
     let mut state = GanState::init(&meta, slope, &mut rng);
@@ -86,7 +90,7 @@ pub fn run_rank(
     let disc_batch = step.disc_batch();
 
     let mut shard = shard;
-    let mut real = Vec::with_capacity(disc_batch * 2);
+    let mut real = Vec::with_capacity(step.real_len());
     let mut recorder = Recorder::new(rank);
     let mut checkpoints = CheckpointSeries::default();
     let mut comm_totals = CommStats::default();
@@ -178,7 +182,7 @@ pub fn run_rank(
             && (epoch == 0
                 || cfg.checkpoint_every > 0 && (epoch + 1) % cfg.checkpoint_every as u64 == 0)
         {
-            checkpoints.record(rank, epoch, timer.elapsed_s(), &state.gen);
+            checkpoints.record(rank, epoch, timer.elapsed_s(), &scenario, &state.gen);
         }
     }
 

@@ -27,16 +27,21 @@ impl Bootstrap {
         self.shard.len()
     }
 
-    /// Draw `k` events with replacement into `out` (flat (k, 2); resized
-    /// as needed, no per-epoch allocation once warm).
+    /// Floats per event in the shard (the scenario's `event_dim`).
+    pub fn dim(&self) -> usize {
+        self.shard.dim()
+    }
+
+    /// Draw `k` events with replacement into `out` (flat (k, dim);
+    /// resized as needed, no per-epoch allocation once warm).
     pub fn draw(&mut self, k: usize, rng: &mut Rng, out: &mut Vec<f32>) {
         rng.bootstrap_indices(self.shard.len(), k, &mut self.indices);
         out.clear();
-        out.reserve(k * 2);
+        let dim = self.shard.dim();
+        out.reserve(k * dim);
         let ev = self.shard.events();
         for &i in &self.indices {
-            out.push(ev[2 * i]);
-            out.push(ev[2 * i + 1]);
+            out.extend_from_slice(&ev[dim * i..dim * (i + 1)]);
         }
     }
 }

@@ -1,7 +1,8 @@
 //! # SAGIPS — Scalable Asynchronous Generative Inverse Problem Solver
 //!
 //! A full reproduction of the SAGIPS system (Lersch et al., CS.DC 2024) as a
-//! three-layer Rust + JAX + Pallas stack:
+//! three-layer Rust + JAX + Pallas stack, grown into a multi-workload
+//! inverse-problem solver:
 //!
 //! * **Layer 3 (this crate)** — the paper's coordination contribution: the
 //!   distributed GAN training runtime. Per-rank training loops, asynchronous
@@ -16,10 +17,42 @@
 //!
 //! Python never runs on the request path: the [`runtime`] module loads the
 //! `artifacts/*.hlo.txt` files through the PJRT C API (`xla` crate) and the
-//! coordinator executes them from Rust.
+//! coordinator executes them from Rust. The pure-Rust native backend
+//! ([`runtime::native`]) needs no artifacts at all.
 //!
-//! See `DESIGN.md` (repo root) for the paper -> module map and the
-//! collective-engine design notes; the per-figure bench binaries under
+//! The *problem being solved* is pluggable: the [`scenario`] module defines
+//! the [`scenario::Scenario`] trait (forward operator, analytic VJP, ground
+//! truth, shapes) plus a registry of built-in inverse problems — the
+//! paper's quantile proxy app, a 1-D linear deconvolution, and a nonlinear
+//! saturation-recovery problem — selected per run via
+//! [`config::RunConfig::scenario`] / `--scenario <name>`.
+//!
+//! # Quickstart: config to training
+//!
+//! A complete run on the native backend — no artifact export, no feature
+//! flags — against a non-default scenario:
+//!
+//! ```
+//! use sagips::config::presets;
+//! use sagips::coordinator::launcher::run_training_from_config;
+//!
+//! let mut cfg = presets::ci_default();
+//! cfg.scenario = "deconv".into();         // see `sagips scenarios`
+//! cfg.model = "small".into();
+//! cfg.ranks = 2;
+//! cfg.epochs = 3;
+//! cfg.batch = 4;
+//! cfg.data_pool = 1600;
+//! cfg.artifacts_dir = "/nonexistent".into(); // force the synthetic manifest
+//!
+//! let run = run_training_from_config(&cfg).unwrap();
+//! assert_eq!(run.metrics.mean_series("gen_loss").len(), 3);
+//! assert!(run.final_residuals.unwrap().iter().all(|r| r.is_finite()));
+//! ```
+//!
+//! See `README.md` for the CLI quickstart and `DESIGN.md` (repo root) for
+//! the paper -> module map, the collective-engine design notes, and the
+//! scenario-subsystem contract; the per-figure bench binaries under
 //! `benches/` regenerate the reproduced tables and figures.
 
 pub mod collective;
@@ -33,6 +66,7 @@ pub mod model;
 pub mod optim;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod tensor;
 pub mod util;

@@ -5,6 +5,7 @@
 //!   ensemble             train an ensemble and report eq (7)/(8) response
 //!   simulate             scaling simulator sweep (Figs 11/12)
 //!   experiment <id>      regenerate a paper figure/table (fig8..fig16, tab4)
+//!   scenarios            list the registered inverse-problem scenarios
 //!   validate-artifacts   load + smoke-run every artifact in the manifest
 //!
 //! Run `sagips help` for options.
@@ -48,9 +49,12 @@ fn print_help() {
          ensemble             ensemble of runs + eq (7)/(8) response\n  \
          simulate             scaling sweep (DES, Figs 11/12)\n  \
          experiment <id>      regenerate fig8..fig16 / tab4\n  \
+         scenarios            list registered inverse-problem scenarios\n  \
          validate-artifacts   smoke-run every artifact\n\n\
-         common options: --backend native|pjrt --artifacts <dir> --workers <n> --seed <n>\n\
-         (the native backend needs no artifacts; pjrt executes the exported HLO)\n\
+         common options: --scenario <name> --backend native|pjrt --artifacts <dir> \
+         --workers <n> --seed <n>\n\
+         (the native backend needs no artifacts and runs every scenario; \
+         pjrt executes the exported HLO)\n\
          env: SAGIPS_LOG=debug, SAGIPS_SCALE=smoke|ci|paper"
     );
 }
@@ -58,6 +62,11 @@ fn print_help() {
 fn common_specs() -> Vec<OptSpec> {
     vec![
         cli::opt("config", "JSON config file (CLI options override it)", None),
+        cli::opt(
+            "scenario",
+            "inverse-problem scenario (see `sagips scenarios`)",
+            Some("quantile"),
+        ),
         cli::opt("backend", "execution backend: native|pjrt", None),
         cli::opt("artifacts", "artifacts directory", Some("artifacts")),
         cli::opt("workers", "runtime pool workers", Some("2")),
@@ -106,6 +115,9 @@ fn build_cfg(a: &Args) -> Result<RunConfig> {
     if let Some(v) = a.get("chunking") {
         cfg.chunking = ChunkPolicy::parse_str(v)?;
     }
+    if let Some(v) = a.get("scenario") {
+        cfg.scenario = v.to_string();
+    }
     if let Some(v) = a.get("backend") {
         cfg.backend = BackendKind::parse(v)?;
     }
@@ -133,6 +145,7 @@ fn run(args: &[String]) -> Result<()> {
         "ensemble" => cmd_ensemble(&a),
         "simulate" => cmd_simulate(&a),
         "experiment" => cmd_experiment(&a),
+        "scenarios" => cmd_scenarios(),
         "validate-artifacts" => cmd_validate(&a),
         "help" | "--help" | "-h" => {
             print_help();
@@ -142,11 +155,21 @@ fn run(args: &[String]) -> Result<()> {
     }
 }
 
+fn cmd_scenarios() -> Result<()> {
+    let rows: Vec<sagips::scenario::ScenarioInfo> = sagips::scenario::registry()
+        .iter()
+        .map(|s| s.info())
+        .collect();
+    print!("{}", sagips::report::format_scenarios(&rows));
+    Ok(())
+}
+
 fn cmd_train(a: &Args) -> Result<()> {
     let cfg = build_cfg(a)?;
     let rt = open_runtime(a, &cfg)?;
     sagips::log_info!(
-        "training: backend={} mode={} ranks={} epochs={} batch={} (disc batch {}) chunking={} overlap={}",
+        "training: scenario={} backend={} mode={} ranks={} epochs={} batch={} (disc batch {}) chunking={} overlap={}",
+        cfg.scenario,
         cfg.backend.name(),
         cfg.mode.name(),
         cfg.ranks,

@@ -20,6 +20,10 @@ pub struct Checkpoint {
     pub epoch: u64,
     /// Seconds of accumulated training time when the checkpoint was taken.
     pub elapsed_s: f64,
+    /// Scenario the generator was trained on. Restoring under a different
+    /// scenario is refused ([`Checkpoint::load_for_scenario`]): the flat
+    /// parameters would silently parameterize the wrong forward operator.
+    pub scenario: String,
     pub gen_params: Vec<f32>,
 }
 
@@ -44,13 +48,17 @@ impl Checkpoint {
             ("rank", json::num(self.rank as f64)),
             ("epoch", json::num(self.epoch as f64)),
             ("elapsed_s", json::num(self.elapsed_s)),
+            ("scenario", json::s(self.scenario.clone())),
             ("params", json::num(self.gen_params.len() as f64)),
         ]);
         std::fs::write(dir.join(format!("{stem}.json")), meta.to_json_pretty())?;
         Ok(bin_path)
     }
 
-    /// Load from a `.bin` path written by [`Checkpoint::save`].
+    /// Load from a `.bin` path written by [`Checkpoint::save`], without
+    /// checking what the generator was trained on — callers restoring
+    /// parameters into a run must use [`Checkpoint::load_for_scenario`]
+    /// so a cross-scenario restore is refused instead of diverging.
     pub fn load(bin_path: &Path) -> Result<Checkpoint> {
         let mut f = std::fs::File::open(bin_path)?;
         let mut magic = [0u8; 8];
@@ -82,8 +90,35 @@ impl Checkpoint {
                 .req("elapsed_s")?
                 .as_f64()
                 .ok_or_else(|| Error::Checkpoint("elapsed_s not a number".into()))?,
+            // Checkpoints from before the scenario subsystem carry no
+            // scenario key; they were all trained on the proxy app.
+            scenario: meta
+                .get("scenario")
+                .and_then(|s| s.as_str())
+                .unwrap_or("quantile")
+                .to_string(),
             gen_params,
         })
+    }
+
+    /// Load a checkpoint *for a specific scenario*: restoring a generator
+    /// under a different scenario than it was trained on is refused with
+    /// a clear error instead of silently diverging on the wrong forward
+    /// operator.
+    pub fn load_for_scenario(bin_path: &Path, scenario: &str) -> Result<Checkpoint> {
+        let ck = Self::load(bin_path)?;
+        // Case-insensitive, like every other scenario entry point
+        // (scenario::lookup canonicalizes user-cased names).
+        if !ck.scenario.eq_ignore_ascii_case(scenario) {
+            return Err(Error::Checkpoint(format!(
+                "{}: trained on scenario '{}' but the run is configured \
+                 for '{scenario}' — refusing to restore (pass the matching \
+                 --scenario to resume this checkpoint)",
+                bin_path.display(),
+                ck.scenario
+            )));
+        }
+        Ok(ck)
     }
 
     /// List all checkpoints in a directory, sorted by (rank, epoch).
@@ -115,11 +150,19 @@ pub struct CheckpointSeries {
 }
 
 impl CheckpointSeries {
-    pub fn record(&mut self, rank: usize, epoch: u64, elapsed_s: f64, gen_params: &[f32]) {
+    pub fn record(
+        &mut self,
+        rank: usize,
+        epoch: u64,
+        elapsed_s: f64,
+        scenario: &str,
+        gen_params: &[f32],
+    ) {
         self.checkpoints.push(Checkpoint {
             rank,
             epoch,
             elapsed_s,
+            scenario: scenario.to_string(),
             gen_params: gen_params.to_vec(),
         });
     }
@@ -144,6 +187,7 @@ mod tests {
             rank: 3,
             epoch: 5000,
             elapsed_s: 12.5,
+            scenario: "deconv".into(),
             gen_params: (0..100).map(|i| i as f32 * 0.25 - 10.0).collect(),
         };
         let path = ck.save(&dir).unwrap();
@@ -151,6 +195,56 @@ mod tests {
         assert_eq!(loaded, ck);
         let listed = Checkpoint::list(&dir).unwrap();
         assert_eq!(listed, vec![path]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restore_under_wrong_scenario_fails_with_clear_error() {
+        let dir =
+            std::env::temp_dir().join(format!("sagips_ckpt_scen_{}", std::process::id()));
+        let ck = Checkpoint {
+            rank: 0,
+            epoch: 10,
+            elapsed_s: 1.0,
+            scenario: "saturation".into(),
+            gen_params: vec![1.0, 2.0, 3.0],
+        };
+        let path = ck.save(&dir).unwrap();
+        // Matching scenario restores fine.
+        let ok = Checkpoint::load_for_scenario(&path, "saturation").unwrap();
+        assert_eq!(ok, ck);
+        // Mismatch is refused, naming both scenarios.
+        let err = Checkpoint::load_for_scenario(&path, "quantile")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("saturation") && err.contains("quantile"), "{err}");
+        assert!(err.contains("refusing"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sidecar_without_scenario_defaults_to_quantile() {
+        // Back-compat: checkpoints written before the scenario subsystem.
+        let dir =
+            std::env::temp_dir().join(format!("sagips_ckpt_old_{}", std::process::id()));
+        let ck = Checkpoint {
+            rank: 1,
+            epoch: 2,
+            elapsed_s: 0.5,
+            scenario: "quantile".into(),
+            gen_params: vec![0.5; 4],
+        };
+        let path = ck.save(&dir).unwrap();
+        // Rewrite the sidecar without the scenario key, as an old writer
+        // would have produced it.
+        let meta_path = path.with_extension("json");
+        std::fs::write(
+            &meta_path,
+            r#"{"rank": 1, "epoch": 2, "elapsed_s": 0.5, "params": 4}"#,
+        )
+        .unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.scenario, "quantile");
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -174,9 +268,10 @@ mod tests {
     fn series_records_in_order() {
         let mut s = CheckpointSeries::default();
         assert!(s.is_empty());
-        s.record(0, 0, 0.0, &[1.0]);
-        s.record(0, 25, 1.0, &[2.0]);
+        s.record(0, 0, 0.0, "quantile", &[1.0]);
+        s.record(0, 25, 1.0, "quantile", &[2.0]);
         assert_eq!(s.len(), 2);
         assert_eq!(s.checkpoints[1].gen_params, vec![2.0]);
+        assert_eq!(s.checkpoints[0].scenario, "quantile");
     }
 }

@@ -160,6 +160,8 @@ fn layer_grads_mut<'a>(df: &'a mut [f32], layer: &LayerLayout) -> (&'a mut [f32]
 /// Backward through the quantile pipeline: given dL/d(events) (B·E, 2)
 /// and the sampler uniforms u (B, E, 2), accumulate dL/d(params) (B, 6)
 /// into `d_params` (overwritten). `∂q(u; a,b,c)/∂(a,b,c) = (1, u, u²)`.
+/// This is the VJP of the `quantile` scenario (`crate::scenario`); other
+/// scenarios supply their own `backward_params`.
 pub fn pipeline_backward(
     d_events: &[f32],
     u: &[f32],

@@ -23,7 +23,19 @@ pub struct Residuals {
 impl Residuals {
     /// `seed` fixes the evaluation noise batch; all ranks of a run share
     /// it.
+    ///
+    /// The residual summary is fixed-width (six parameters, like every
+    /// registered scenario); a future wider scenario needs this analysis
+    /// layer generalized first, so reject it loudly here.
     pub fn new(handle: RuntimeHandle, artifact: &str, seed: u64) -> Result<Residuals> {
+        if handle.manifest().true_params.len() != 6 {
+            return Err(crate::util::error::Error::Runtime(format!(
+                "residual analysis supports 6-parameter scenarios, manifest \
+                 scenario '{}' has {}",
+                handle.manifest().scenario,
+                handle.manifest().true_params.len()
+            )));
+        }
         let spec = handle.manifest().artifact(artifact)?;
         let k = spec.outputs[0].shape[0];
         let latent = handle.manifest().latent_dim;

@@ -31,9 +31,12 @@ pub struct TrainStep {
     pub batch: usize,
     pub events: usize,
     pub latent_dim: usize,
-    // Preallocated input staging buffers.
+    // Preallocated input staging buffers (spec-shaped: `u` holds
+    // `noise_dim` uniforms per event for the manifest's scenario).
     z: Vec<f32>,
     u: Vec<f32>,
+    // Expected length of the caller's `real` batch (disc_batch * event_dim).
+    real_len: usize,
     // Reusable output slots (gen_grads, disc_grads, gen_loss, disc_loss);
     // the gradient slots swap with the caller's StepOutput after every
     // execution, so both sides keep reusing warm storage.
@@ -41,13 +44,21 @@ pub struct TrainStep {
 }
 
 impl TrainStep {
-    /// Build for a specific `gan_step_*` artifact.
+    /// Build for a specific `gan_step_*` artifact. Staging buffers are
+    /// sized from the artifact's input shapes, so scenario-specific noise
+    /// and event dimensions flow through without special cases.
     pub fn new(handle: RuntimeHandle, artifact: &str) -> Result<TrainStep> {
         let spec: &ArtifactSpec = handle.manifest().artifact(artifact)?;
         if spec.kind != "gan_step" {
             return Err(Error::Runtime(format!(
                 "artifact '{artifact}' is a '{}', expected gan_step",
                 spec.kind
+            )));
+        }
+        if spec.inputs.len() != 5 {
+            return Err(Error::Manifest(format!(
+                "gan_step artifact '{artifact}' must declare 5 inputs, has {}",
+                spec.inputs.len()
             )));
         }
         let batch = spec
@@ -57,13 +68,17 @@ impl TrainStep {
             .events
             .ok_or_else(|| Error::Manifest("gan_step artifact missing events".into()))?;
         let latent_dim = handle.manifest().latent_dim;
+        let z_len = spec.inputs[2].elems();
+        let u_len = spec.inputs[3].elems();
+        let real_len = spec.inputs[4].elems();
         Ok(TrainStep {
             artifact: artifact.to_string(),
             batch,
             events,
             latent_dim,
-            z: vec![0.0; batch * latent_dim],
-            u: vec![0.0; batch * events * 2],
+            z: vec![0.0; z_len],
+            u: vec![0.0; u_len],
+            real_len,
             outs: Vec::new(),
             handle,
         })
@@ -74,8 +89,13 @@ impl TrainStep {
         self.batch * self.events
     }
 
+    /// Floats one bootstrap batch must hold (`disc_batch() * event_dim`).
+    pub fn real_len(&self) -> usize {
+        self.real_len
+    }
+
     /// Run one step into a reusable [`StepOutput`]. `real` must hold
-    /// `disc_batch() * 2` floats (the bootstrap sample drawn by the
+    /// [`Self::real_len`] floats (the bootstrap sample drawn by the
     /// caller). All inputs are borrowed — nothing is cloned — and `out`'s
     /// gradient buffers are reused across epochs.
     pub fn run_into(
@@ -86,11 +106,11 @@ impl TrainStep {
         rng: &mut Rng,
         out: &mut StepOutput,
     ) -> Result<()> {
-        if real.len() != self.disc_batch() * 2 {
+        if real.len() != self.real_len {
             return Err(Error::Runtime(format!(
                 "real batch has {} floats, expected {}",
                 real.len(),
-                self.disc_batch() * 2
+                self.real_len
             )));
         }
         rng.fill_normal(&mut self.z);

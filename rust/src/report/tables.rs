@@ -1,5 +1,7 @@
-//! Table formatting — notably Table IV (final residuals per mode).
+//! Table formatting — Table IV (final residuals per mode) and the
+//! scenario-registry listing (`sagips scenarios`).
 
+use crate::scenario::ScenarioInfo;
 use crate::tensor::stats;
 
 /// One method column of Table IV: per-parameter (mean, sigma) residuals,
@@ -68,9 +70,40 @@ pub fn format_table4(rows: &[Table4Row]) -> String {
     s
 }
 
+/// Render the scenario registry as a table: one row per registered
+/// inverse problem, with its operator shape and description.
+pub fn format_scenarios(rows: &[ScenarioInfo]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<12} {:>6} {:>6} {:>6}  {}\n",
+        "scenario", "P", "D", "K", "description"
+    ));
+    s.push_str(&"-".repeat(78));
+    s.push('\n');
+    for r in rows {
+        s.push_str(&format!(
+            "{:<12} {:>6} {:>6} {:>6}  {}\n",
+            r.name, r.param_dim, r.event_dim, r.noise_dim, r.description
+        ));
+    }
+    s.push_str("(P = parameters, D = floats per event, K = uniform draws per event)\n");
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn scenario_table_lists_every_registered_scenario() {
+        let rows: Vec<ScenarioInfo> =
+            crate::scenario::registry().iter().map(|s| s.info()).collect();
+        let t = format_scenarios(&rows);
+        for name in crate::scenario::names() {
+            assert!(t.contains(name), "{t}");
+        }
+        assert!(t.contains("description"));
+    }
 
     #[test]
     fn from_raw_scales_to_milli() {

@@ -89,8 +89,13 @@ fn layout_segments(layout: &[LayerLayout]) -> Vec<Segment> {
 #[derive(Clone, Debug)]
 pub struct Manifest {
     pub dir: PathBuf,
+    /// Registered [`crate::scenario`] name this manifest's models, shapes
+    /// and `true_params` belong to. Exported (Python) manifests omit the
+    /// key and default to the paper's `"quantile"` proxy app.
+    pub scenario: String,
     pub latent_dim: usize,
     pub leaky_slope: f64,
+    /// Ground truth of the scenario (length = the scenario's `param_dim`).
     pub true_params: Vec<f32>,
     pub models: BTreeMap<String, ModelMeta>,
     pub artifacts: BTreeMap<String, ArtifactSpec>,
@@ -117,15 +122,27 @@ impl Manifest {
             .req("leaky_slope")?
             .as_f64()
             .ok_or_else(|| Error::Manifest("leaky_slope must be a number".into()))?;
+        // Exported manifests predate the scenario subsystem: missing key
+        // means the paper's proxy app. Stored canonicalized (lookup is
+        // case-insensitive) so string comparisons downstream are exact.
+        let sc = crate::scenario::lookup(
+            v.get("scenario")
+                .and_then(|s| s.as_str())
+                .unwrap_or("quantile"),
+        )
+        .map_err(|e| Error::Manifest(e.to_string()))?;
+        let scenario = sc.name().to_string();
         let true_params: Vec<f32> = v
             .req("true_params")?
             .f64_array()?
             .into_iter()
             .map(|x| x as f32)
             .collect();
-        if true_params.len() != 6 {
+        if true_params.len() != sc.param_dim() {
             return Err(Error::Manifest(format!(
-                "expected 6 true params, got {}",
+                "scenario '{}' expects {} true params, got {}",
+                sc.name(),
+                sc.param_dim(),
                 true_params.len()
             )));
         }
@@ -150,12 +167,18 @@ impl Manifest {
 
         Ok(Manifest {
             dir: dir.to_path_buf(),
+            scenario,
             latent_dim,
             leaky_slope,
             true_params,
             models,
             artifacts,
         })
+    }
+
+    /// The scenario implementation this manifest belongs to.
+    pub fn scenario_impl(&self) -> Result<&'static dyn crate::scenario::Scenario> {
+        crate::scenario::lookup(&self.scenario)
     }
 
     /// Lookup an artifact spec.
@@ -184,51 +207,70 @@ impl Manifest {
     // Synthetic manifests (native backend, no `make artifacts` needed)
     // ------------------------------------------------------------------
 
-    /// Build an in-memory manifest that mirrors the Python export
-    /// (`python/compile/aot.py`): the same three model size variants with
-    /// identical flat layouts, the same `true_params` / `latent_dim` /
-    /// `leaky_slope` constants, and the default artifact grid. The
+    /// Build an in-memory manifest for the paper's `"quantile"` proxy app
+    /// that mirrors the Python export (`python/compile/aot.py`): the same
+    /// three model size variants with identical flat layouts, the same
+    /// `true_params` / `latent_dim` / `leaky_slope` constants, and the
+    /// default artifact grid. See [`Manifest::synthetic_for`] for other
+    /// scenarios.
+    pub fn synthetic() -> Manifest {
+        Self::synthetic_for("quantile").expect("the quantile scenario is registered")
+    }
+
+    /// Build an in-memory manifest for any registered scenario: model
+    /// layouts sized to the scenario's parameter/event dimensions (the
+    /// generator's output width is `param_dim`, the discriminator's input
+    /// width `event_dim`), the scenario's ground truth as `true_params`,
+    /// and the default artifact grid with scenario-shaped inputs. The
     /// `file` fields point at [`SYNTHETIC_FILE`]; only the native backend
     /// can execute them (PJRT would try to read HLO text from disk).
-    pub fn synthetic() -> Manifest {
+    pub fn synthetic_for(scenario: &str) -> Result<Manifest> {
+        let sc = crate::scenario::lookup(scenario)?;
         let mut models = BTreeMap::new();
         for name in ["small", "medium", "paper"] {
-            models.insert(name.to_string(), synthetic_model(name).unwrap());
+            models.insert(
+                name.to_string(),
+                synthetic_model(name, sc.param_dim(), sc.event_dim())?,
+            );
         }
         let mut m = Manifest {
             dir: PathBuf::from(SYNTHETIC_FILE),
+            scenario: sc.name().to_string(),
             // Constants from python/compile: model.LATENT_DIM,
-            // nets.LEAKY_SLOPE, pipeline.TRUE_PARAMS.
+            // nets.LEAKY_SLOPE.
             latent_dim: 16,
             leaky_slope: 0.2,
-            true_params: vec![1.0, 0.5, 0.3, -0.5, 1.2, 0.4],
+            true_params: sc.true_params().to_vec(),
             models,
             artifacts: BTreeMap::new(),
         };
         // The aot.py grid: weak-scaling gan_steps, the model-size cross,
         // the diagnostics and the pipeline batches.
         for b in [1usize, 2, 4, 8, 16, 32, 64] {
-            m.ensure_gan_step("paper", b, 25).unwrap();
+            m.ensure_gan_step("paper", b, 25)?;
         }
         for size in ["small", "medium", "paper"] {
             for b in [16usize, 64] {
-                m.ensure_gan_step(size, b, 25).unwrap();
+                m.ensure_gan_step(size, b, 25)?;
             }
-            m.ensure_gen_predict(size, 256).unwrap();
+            m.ensure_gen_predict(size, 256)?;
         }
-        m.ensure_pipeline(256, 25);
-        m.ensure_pipeline(64, 25);
-        m.ensure_disc_forward("paper", 1600).unwrap();
-        m
+        m.ensure_pipeline(256, 25)?;
+        m.ensure_pipeline(64, 25)?;
+        m.ensure_disc_forward("paper", 1600)?;
+        Ok(m)
     }
 
     /// Add a `gan_step_{model}_b{batch}_e{events}` artifact spec if it is
-    /// not already present (no-op when the exported set has it).
+    /// not already present (no-op when the exported set has it). Input
+    /// shapes follow this manifest's scenario (`u`: `noise_dim` uniforms
+    /// per event, `real`: `event_dim` floats per event).
     pub fn ensure_gan_step(&mut self, model: &str, batch: usize, events: usize) -> Result<()> {
         let name = format!("gan_step_{model}_b{batch}_e{events}");
         if self.artifacts.contains_key(&name) {
             return Ok(());
         }
+        let sc = self.scenario_impl()?;
         let meta = self.model(model)?;
         let (pg, pd) = (meta.gen_param_count, meta.disc_param_count);
         let latent = self.latent_dim;
@@ -243,8 +285,8 @@ impl Manifest {
                 io("gen_params", &[pg]),
                 io("disc_params", &[pd]),
                 io("z", &[batch, latent]),
-                io("u", &[batch, events, 2]),
-                io("real", &[batch * events, 2]),
+                io("u", &[batch, events, sc.noise_dim()]),
+                io("real", &[batch * events, sc.event_dim()]),
             ],
             outputs: vec![
                 io("gen_grads", &[pg]),
@@ -263,6 +305,7 @@ impl Manifest {
         if self.artifacts.contains_key(&name) {
             return Ok(());
         }
+        let sc = self.scenario_impl()?;
         let pg = self.model(model)?.gen_param_count;
         let latent = self.latent_dim;
         let spec = ArtifactSpec {
@@ -273,18 +316,21 @@ impl Manifest {
             batch: Some(k),
             events: None,
             inputs: vec![io("gen_params", &[pg]), io("z", &[k, latent])],
-            outputs: vec![io("params", &[k, 6])],
+            outputs: vec![io("params", &[k, sc.param_dim()])],
         };
         self.artifacts.insert(name, spec);
         Ok(())
     }
 
-    /// Add a `pipeline_b{batch}_e{events}` artifact spec if missing.
-    pub fn ensure_pipeline(&mut self, batch: usize, events: usize) {
+    /// Add a `pipeline_b{batch}_e{events}` artifact spec if missing (the
+    /// scenario's forward operator alone, used for reference-data
+    /// generation).
+    pub fn ensure_pipeline(&mut self, batch: usize, events: usize) -> Result<()> {
         let name = format!("pipeline_b{batch}_e{events}");
         if self.artifacts.contains_key(&name) {
-            return;
+            return Ok(());
         }
+        let sc = self.scenario_impl()?;
         let spec = ArtifactSpec {
             name: name.clone(),
             file: SYNTHETIC_FILE.into(),
@@ -292,10 +338,14 @@ impl Manifest {
             model: None,
             batch: Some(batch),
             events: Some(events),
-            inputs: vec![io("params", &[batch, 6]), io("u", &[batch, events, 2])],
-            outputs: vec![io("events", &[batch * events, 2])],
+            inputs: vec![
+                io("params", &[batch, sc.param_dim()]),
+                io("u", &[batch, events, sc.noise_dim()]),
+            ],
+            outputs: vec![io("events", &[batch * events, sc.event_dim()])],
         };
         self.artifacts.insert(name, spec);
+        Ok(())
     }
 
     /// Add a `disc_forward_{model}_n{n}` artifact spec if missing.
@@ -304,6 +354,7 @@ impl Manifest {
         if self.artifacts.contains_key(&name) {
             return Ok(());
         }
+        let sc = self.scenario_impl()?;
         let pd = self.model(model)?.disc_param_count;
         let spec = ArtifactSpec {
             name: name.clone(),
@@ -312,7 +363,7 @@ impl Manifest {
             model: Some(model.to_string()),
             batch: Some(n),
             events: None,
-            inputs: vec![io("disc_params", &[pd]), io("events", &[n, 2])],
+            inputs: vec![io("disc_params", &[pd]), io("events", &[n, sc.event_dim()])],
             outputs: vec![io("logits", &[n])],
         };
         self.artifacts.insert(name, spec);
@@ -331,10 +382,12 @@ fn io(name: &str, shape: &[usize]) -> IoSpec {
 }
 
 /// The Rust mirror of `python/compile/model.py` `MODEL_SIZES`: hidden
-/// widths per size variant. "paper" matches the paper's parameter counts
-/// within 0.2% (51,288 vs 51,206 generator / 50,241 vs 50,049
-/// discriminator — exact architecture undisclosed).
-fn synthetic_model(size: &str) -> Result<ModelMeta> {
+/// widths per size variant, with the input/output widths supplied by the
+/// scenario (generator emits `param_dim`, discriminator reads
+/// `event_dim`). For the quantile proxy (6 / 2), "paper" matches the
+/// paper's parameter counts within 0.2% (51,288 vs 51,206 generator /
+/// 50,241 vs 50,049 discriminator — exact architecture undisclosed).
+fn synthetic_model(size: &str, param_dim: usize, event_dim: usize) -> Result<ModelMeta> {
     let (gen_hidden, disc_hidden): (&[usize], &[usize]) = match size {
         "small" => (&[32, 32], &[32, 32]),
         "medium" => (&[80, 80, 80], &[80, 80, 80]),
@@ -347,8 +400,8 @@ fn synthetic_model(size: &str) -> Result<ModelMeta> {
     };
     let mut gen_sizes = vec![16usize]; // LATENT_DIM
     gen_sizes.extend_from_slice(gen_hidden);
-    gen_sizes.push(6);
-    let mut disc_sizes = vec![2usize];
+    gen_sizes.push(param_dim);
+    let mut disc_sizes = vec![event_dim];
     disc_sizes.extend_from_slice(disc_hidden);
     disc_sizes.push(1);
     let (gen_dims, gen_layout, gen_param_count) = layout_from_sizes(&gen_sizes);
@@ -604,12 +657,55 @@ mod tests {
         let mut m = Manifest::synthetic();
         let before = m.artifacts.len();
         m.ensure_gan_step("paper", 16, 25).unwrap();
-        m.ensure_pipeline(256, 25);
+        m.ensure_pipeline(256, 25).unwrap();
         assert_eq!(m.artifacts.len(), before);
         m.ensure_gan_step("small", 3, 7).unwrap();
         assert_eq!(m.artifacts.len(), before + 1);
         assert!(m.ensure_gan_step("huge", 4, 4).is_err());
         assert!(m.ensure_gen_predict("huge", 256).is_err());
+    }
+
+    #[test]
+    fn synthetic_for_sizes_models_and_shapes_to_the_scenario() {
+        for sc in crate::scenario::registry() {
+            let m = Manifest::synthetic_for(sc.name()).unwrap();
+            assert_eq!(m.scenario, sc.name());
+            assert_eq!(m.true_params, sc.true_params());
+            for (size, meta) in &m.models {
+                assert_eq!(
+                    meta.gen_dims.last().unwrap().1,
+                    sc.param_dim(),
+                    "{size} generator output width"
+                );
+                assert_eq!(
+                    meta.disc_dims.first().unwrap().0,
+                    sc.event_dim(),
+                    "{size} discriminator input width"
+                );
+                // Layouts still tile the flat vectors exactly.
+                let gen_end = meta.gen_layout.last().map(|l| l.b_offset + l.b_len).unwrap();
+                assert_eq!(gen_end, meta.gen_param_count);
+            }
+            // Artifact shapes carry the scenario's event/noise dims.
+            let a = m.artifact("gan_step_paper_b16_e25").unwrap();
+            assert_eq!(a.inputs[3].shape, vec![16, 25, sc.noise_dim()]);
+            assert_eq!(a.inputs[4].shape, vec![400, sc.event_dim()]);
+            let p = m.artifact("pipeline_b256_e25").unwrap();
+            assert_eq!(p.inputs[0].shape, vec![256, sc.param_dim()]);
+        }
+        assert!(Manifest::synthetic_for("warp").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_true_params_mismatching_the_scenario() {
+        let bad = SAMPLE.replace(
+            "\"true_params\": [1.0, 0.5, 0.3, -0.5, 1.2, 0.4]",
+            "\"true_params\": [1.0, 0.5]",
+        );
+        let err = Manifest::parse(&bad, Path::new("/tmp")).unwrap_err().to_string();
+        assert!(err.contains("6 true params") || err.contains("expects 6"), "{err}");
+        let bad = SAMPLE.replace("\"version\": 1,", "\"version\": 1, \"scenario\": \"warp\",");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
     }
 
     #[test]

@@ -3,9 +3,12 @@
 //!
 //! * [`manifest`] — parses `artifacts/manifest.json` (the contract written
 //!   by `python/compile/aot.py`): artifact files, input/output shapes,
-//!   model layer layouts, parameter counts, true parameters. Also provides
-//!   [`Manifest::synthetic`], an in-memory manifest with the same model
-//!   grid so the native backend needs no `make artifacts` step.
+//!   model layer layouts, parameter counts, true parameters, and the
+//!   [`crate::scenario`] the artifacts belong to. Also provides
+//!   [`Manifest::synthetic`] / [`Manifest::synthetic_for`], in-memory
+//!   manifests with the same model grid — sized to any registered
+//!   scenario's parameter/event dimensions — so the native backend needs
+//!   no `make artifacts` step for any scenario.
 //! * [`pool`] — the PJRT execution pool. The `xla` crate's PJRT handles
 //!   are `!Send` (internally `Rc`), so they cannot migrate across the rank
 //!   threads; instead a small pool of dedicated worker threads each owns a
@@ -151,25 +154,42 @@ impl Runtime {
     ///
     /// * `pjrt` — loads `<artifacts_dir>/manifest.json` and spins up the
     ///   worker pool (requires the exported artifact set and, for real
-    ///   execution, the `pjrt` cargo feature).
-    /// * `native` — uses the on-disk manifest when present (so shapes and
-    ///   layouts match the exported contract exactly), otherwise a
-    ///   synthetic in-memory manifest; either way the artifacts the run
-    ///   needs are guaranteed to exist, so no `make artifacts` is
-    ///   required.
+    ///   execution, the `pjrt` cargo feature). The export covers the
+    ///   `quantile` scenario only; other scenarios are rejected with a
+    ///   pointer to the native backend.
+    /// * `native` — uses the on-disk manifest when present *and* it
+    ///   belongs to the configured scenario (so shapes and layouts match
+    ///   the exported contract exactly), otherwise a per-scenario
+    ///   synthetic in-memory manifest ([`Manifest::synthetic_for`]);
+    ///   either way the artifacts the run needs are guaranteed to exist,
+    ///   so no `make artifacts` is required.
     pub fn from_config(cfg: &RunConfig, workers: usize) -> Result<Runtime> {
+        // One source of truth for cross-field rules (including "pjrt only
+        // serves the quantile scenario") — don't restate them here.
+        cfg.validate()?;
         let dir = Path::new(&cfg.artifacts_dir);
         match cfg.backend {
             BackendKind::Pjrt => Ok(Runtime::Pool(RuntimePool::from_dir(dir, workers)?)),
             BackendKind::Native => {
+                // Canonical scenario name (lookup is case-insensitive;
+                // manifest scenarios are stored canonicalized).
+                let scenario = crate::scenario::lookup(&cfg.scenario)?.name();
                 let mut manifest = if dir.join("manifest.json").exists() {
-                    Manifest::load(dir)?
+                    let on_disk = Manifest::load(dir)?;
+                    if on_disk.scenario == scenario {
+                        on_disk
+                    } else {
+                        // Exported artifacts belong to another scenario
+                        // (typically quantile): fall back to the synthetic
+                        // manifest so `--scenario` keeps working.
+                        Manifest::synthetic_for(scenario)?
+                    }
                 } else {
-                    Manifest::synthetic()
+                    Manifest::synthetic_for(scenario)?
                 };
                 manifest.ensure_gan_step(&cfg.model, cfg.batch, cfg.events)?;
                 manifest.ensure_gen_predict(&cfg.model, 256)?;
-                manifest.ensure_pipeline(256, 25);
+                manifest.ensure_pipeline(256, 25)?;
                 Ok(Runtime::Native(NativeRuntime::new(manifest)))
             }
         }
@@ -209,6 +229,26 @@ mod tests {
         assert!(h.manifest().artifact(&cfg.gen_predict_artifact()).is_ok());
         assert!(h.manifest().artifact("pipeline_b256_e25").is_ok());
         rt.shutdown();
+    }
+
+    #[test]
+    fn native_runtime_from_config_follows_the_scenario() {
+        let mut cfg = presets::ci_default();
+        cfg.backend = BackendKind::Native;
+        cfg.scenario = "saturation".into();
+        cfg.artifacts_dir = "/nonexistent/artifacts".into();
+        let rt = Runtime::from_config(&cfg, 1).unwrap();
+        assert_eq!(rt.handle().manifest().scenario, "saturation");
+        rt.shutdown();
+        // Lookup is case-insensitive; the built manifest is canonical.
+        cfg.scenario = "Saturation".into();
+        let rt = Runtime::from_config(&cfg, 1).unwrap();
+        assert_eq!(rt.handle().manifest().scenario, "saturation");
+        rt.shutdown();
+        // PJRT has no export for non-quantile scenarios.
+        cfg.backend = BackendKind::Pjrt;
+        let err = Runtime::from_config(&cfg, 1).unwrap_err().to_string();
+        assert!(err.contains("native"), "{err}");
     }
 
     #[test]

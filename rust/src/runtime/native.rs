@@ -17,8 +17,11 @@
 //!
 //! The math mirrors the JAX graph: LeakyReLU MLPs over the manifest's
 //! flat layout (`model::reference` forward, `model::grad` backward), the
-//! quantile pipeline `q(u; a, b, c) = a + bu + cu²`, and the
-//! non-saturating BCE-with-logits losses
+//! manifest's scenario as the forward operator between them (the paper's
+//! quantile pipeline `q(u; a, b, c) = a + bu + cu²` by default — any
+//! registered [`crate::scenario::Scenario`] plugs in its own
+//! `forward_into` / `backward_params` pair here), and the non-saturating
+//! BCE-with-logits losses
 //!
 //! ```text
 //! L_G = mean(softplus(-D(fake)))
@@ -99,7 +102,7 @@ impl Backend for NativeBackend {
             match spec.kind.as_str() {
                 "gan_step" => gan_step(manifest, spec, inputs, outputs, &mut s),
                 "gen_predict" => gen_predict(manifest, spec, inputs, outputs, &mut s),
-                "pipeline" => pipeline(spec, inputs, outputs),
+                "pipeline" => pipeline(manifest, spec, inputs, outputs),
                 "disc_forward" => disc_forward(manifest, spec, inputs, outputs, &mut s),
                 other => Err(Error::Runtime(format!(
                     "native backend cannot execute artifact kind '{other}'"
@@ -118,8 +121,8 @@ fn model_meta<'m>(manifest: &'m Manifest, spec: &ArtifactSpec) -> Result<&'m Mod
 }
 
 /// One fused GAN training step. Inputs: gen_params, disc_params, z (B, L),
-/// u (B, E, 2), real (B·E, 2). Outputs: gen_grads, disc_grads, gen_loss,
-/// disc_loss.
+/// u (B, E, K), real (B·E, D) where K/D are the scenario's noise/event
+/// dims. Outputs: gen_grads, disc_grads, gen_loss, disc_loss.
 fn gan_step(
     manifest: &Manifest,
     spec: &ArtifactSpec,
@@ -128,6 +131,7 @@ fn gan_step(
     s: &mut Scratch,
 ) -> Result<()> {
     let meta = model_meta(manifest, spec)?;
+    let sc = manifest.scenario_impl()?;
     let slope = manifest.leaky_slope as f32;
     let [gen_params, disc_params, z, u, real] = inputs else {
         return Err(Error::Runtime(format!(
@@ -136,23 +140,26 @@ fn gan_step(
             inputs.len()
         )));
     };
-    // z is (B, L); u is (B, E, 2).
-    let batch = z.len() / manifest.latent_dim.max(1);
-    let events = if batch > 0 { u.len() / (batch * 2) } else { 0 };
+    let (batch, events) = (spec.batch.unwrap_or(0), spec.events.unwrap_or(0));
     let n = batch * events;
-    if n == 0 || real.len() != n * 2 {
+    let d = sc.event_dim();
+    if n == 0
+        || z.len() != batch * manifest.latent_dim
+        || u.len() != n * sc.noise_dim()
+        || real.len() != n * d
+    {
         return Err(Error::Runtime(format!(
-            "gan_step '{}': inconsistent batch/event shapes",
-            spec.name
+            "gan_step '{}': inconsistent batch/event shapes for scenario '{}'",
+            spec.name, manifest.scenario
         )));
     }
     let inv_n = 1.0f32 / n as f32;
 
-    // --- shared forward: generator -> pipeline -> discriminator ---
+    // --- shared forward: generator -> forward operator -> discriminator ---
     grad::mlp_forward_cached(gen_params, &meta.gen_layout, z, batch, slope, &mut s.gen_acts);
     {
-        let params = s.gen_acts[meta.gen_layout.len() - 1].as_slice(); // (B, 6)
-        reference::pipeline_into(params, u, batch, events, &mut s.fake);
+        let params = s.gen_acts[meta.gen_layout.len() - 1].as_slice(); // (B, P)
+        sc.forward_into(params, u, batch, events, &mut s.fake);
     }
     grad::mlp_forward_cached(
         disc_params,
@@ -190,7 +197,7 @@ fn gan_step(
     for (dl, &f) in s.d_logits.iter_mut().zip(&s.disc_fake_acts[last]) {
         *dl = (grad::sigmoid(f) - 1.0) * inv_n;
     }
-    fit(&mut s.d_fake, n * 2);
+    fit(&mut s.d_fake, n * d);
     grad::mlp_backward(
         disc_params,
         &meta.disc_layout,
@@ -203,7 +210,12 @@ fn gan_step(
         None,
         Some(&mut s.d_fake),
     );
-    grad::pipeline_backward(&s.d_fake, u, batch, events, &mut s.d_params);
+    {
+        // The scenario's VJP splices the discriminator's input gradients
+        // into the generator's output space.
+        let params = s.gen_acts[meta.gen_layout.len() - 1].as_slice();
+        sc.backward_params(params, &s.d_fake, u, batch, events, &mut s.d_params);
+    }
     {
         let gen_grads = &mut outputs[0];
         fit(gen_grads, meta.gen_param_count);
@@ -266,7 +278,7 @@ fn gan_step(
     Ok(())
 }
 
-/// Generator forward only: gen_params + z (k, L) -> params (k, 6).
+/// Generator forward only: gen_params + z (k, L) -> params (k, P).
 fn gen_predict(
     manifest: &Manifest,
     spec: &ArtifactSpec,
@@ -294,23 +306,32 @@ fn gen_predict(
     Ok(())
 }
 
-/// The environment pipeline alone: params (B, 6) + u (B, E, 2) -> events.
-fn pipeline(spec: &ArtifactSpec, inputs: &[&[f32]], outputs: &mut [Vec<f32>]) -> Result<()> {
+/// The scenario's forward operator alone: params (B, P) + u (B, E, K) ->
+/// events (B·E, D).
+fn pipeline(
+    manifest: &Manifest,
+    spec: &ArtifactSpec,
+    inputs: &[&[f32]],
+    outputs: &mut [Vec<f32>],
+) -> Result<()> {
+    let sc = manifest.scenario_impl()?;
     let [params, u] = inputs else {
         return Err(Error::Runtime(format!(
             "pipeline '{}' wants 2 inputs",
             spec.name
         )));
     };
-    let batch = params.len() / 6;
-    let events = if batch > 0 { u.len() / (batch * 2) } else { 0 };
-    if batch * events * 2 != u.len() {
+    let (batch, events) = (spec.batch.unwrap_or(0), spec.events.unwrap_or(0));
+    if batch * events == 0
+        || params.len() != batch * sc.param_dim()
+        || u.len() != batch * events * sc.noise_dim()
+    {
         return Err(Error::Runtime(format!(
-            "pipeline '{}': inconsistent shapes",
-            spec.name
+            "pipeline '{}': inconsistent shapes for scenario '{}'",
+            spec.name, manifest.scenario
         )));
     }
-    reference::pipeline_into(params, u, batch, events, &mut outputs[0]);
+    sc.forward_into(params, u, batch, events, &mut outputs[0]);
     Ok(())
 }
 
@@ -329,7 +350,9 @@ fn disc_forward(
             spec.name
         )));
     };
-    let n = events.len() / 2;
+    // Discriminator input width = the scenario's event dimension, which
+    // the layout already encodes.
+    let n = events.len() / meta.disc_layout[0].w_rows.max(1);
     // The discriminator's output layer has one column, so the (n, 1)
     // result is already the flat (n,) logit vector.
     reference::mlp_forward_into(
@@ -441,6 +464,69 @@ mod tests {
                 (num - ana).abs() < 2e-3 + 0.1 * ana.abs().max(num.abs()),
                 "disc param {k}: numeric {num} vs analytic {ana}"
             );
+        }
+    }
+
+    #[test]
+    fn gan_step_gradients_match_finite_differences_on_every_scenario() {
+        // The same artifact-level FD contract as above, for each
+        // registered scenario: gen_grads = d(gen_loss)/d(gen_params) and
+        // disc_grads = d(disc_loss)/d(disc_params) through the scenario's
+        // forward operator and VJP.
+        for sc in crate::scenario::registry() {
+            let mut m = Manifest::synthetic_for(sc.name()).unwrap();
+            m.ensure_gan_step("small", 2, 3).unwrap();
+            let h = NativeRuntime::new(m).handle();
+            let spec = h.manifest().artifact("gan_step_small_b2_e3").unwrap().clone();
+            let meta = h.manifest().model("small").unwrap().clone();
+            let mut rng = Rng::new(3);
+            let state = GanState::init(&meta, h.manifest().leaky_slope, &mut rng);
+            let mut z = vec![0.0f32; spec.inputs[2].elems()];
+            let mut u = vec![0.0f32; spec.inputs[3].elems()];
+            let mut real = vec![0.0f32; spec.inputs[4].elems()];
+            rng.fill_normal(&mut z);
+            rng.fill_uniform(&mut u);
+            rng.fill_uniform(&mut real);
+
+            let exec = |gen: &[f32], disc: &[f32]| {
+                h.execute(
+                    "gan_step_small_b2_e3",
+                    vec![gen.to_vec(), disc.to_vec(), z.clone(), u.clone(), real.clone()],
+                )
+                .unwrap()
+            };
+            let base = exec(&state.gen, &state.disc);
+            let hstep = 1e-2f32;
+            for k in (0..state.gen.len()).step_by(state.gen.len() / 6 + 1) {
+                let mut gp = state.gen.clone();
+                gp[k] += hstep;
+                let mut gm = state.gen.clone();
+                gm[k] -= hstep;
+                let num = (exec(&gp, &state.disc)[2][0] as f64
+                    - exec(&gm, &state.disc)[2][0] as f64)
+                    / (2.0 * hstep as f64);
+                let ana = base[0][k] as f64;
+                assert!(
+                    (num - ana).abs() < 2e-3 + 0.1 * ana.abs().max(num.abs()),
+                    "{}: gen param {k}: numeric {num} vs analytic {ana}",
+                    sc.name()
+                );
+            }
+            for k in (0..state.disc.len()).step_by(state.disc.len() / 6 + 1) {
+                let mut dp = state.disc.clone();
+                dp[k] += hstep;
+                let mut dm = state.disc.clone();
+                dm[k] -= hstep;
+                let num = (exec(&state.gen, &dp)[3][0] as f64
+                    - exec(&state.gen, &dm)[3][0] as f64)
+                    / (2.0 * hstep as f64);
+                let ana = base[1][k] as f64;
+                assert!(
+                    (num - ana).abs() < 2e-3 + 0.1 * ana.abs().max(num.abs()),
+                    "{}: disc param {k}: numeric {num} vs analytic {ana}",
+                    sc.name()
+                );
+            }
         }
     }
 

@@ -1,0 +1,87 @@
+//! The paper's scientific proxy application as a [`Scenario`].
+//!
+//! Two independent observable channels, each drawn from the quantile
+//! distribution `q(u; a, b, c) = a + bu + cu²` with `u ~ U(0, 1)` — the
+//! loop-closure construction of Sec. VI. The generator's six outputs are
+//! the two channels' `(a, b, c)` triples; an event is one `(y₀, y₁)`
+//! sample. Forward and VJP delegate to the shared kernels in
+//! [`crate::model::reference`] / [`crate::model::grad`], which are also
+//! what the exported HLO artifacts and the PJRT cross-checks use — the
+//! scenario layer adds no second implementation to drift.
+
+use super::Scenario;
+use crate::model::{grad, reference};
+
+/// The quantile/bootstrap proxy app (paper default).
+pub struct Quantile;
+
+/// `python/compile/pipeline.py::TRUE_PARAMS`.
+const TRUE_PARAMS: [f32; 6] = [1.0, 0.5, 0.3, -0.5, 1.2, 0.4];
+
+impl Scenario for Quantile {
+    fn name(&self) -> &'static str {
+        "quantile"
+    }
+
+    fn description(&self) -> &'static str {
+        "paper proxy app: two-channel quantile sampler q(u; a, b, c) = a + bu + cu^2"
+    }
+
+    fn param_dim(&self) -> usize {
+        6
+    }
+
+    fn event_dim(&self) -> usize {
+        2
+    }
+
+    fn noise_dim(&self) -> usize {
+        2
+    }
+
+    fn true_params(&self) -> &'static [f32] {
+        &TRUE_PARAMS
+    }
+
+    fn forward_into(
+        &self,
+        params: &[f32],
+        u: &[f32],
+        batch: usize,
+        events: usize,
+        out: &mut Vec<f32>,
+    ) {
+        reference::pipeline_into(params, u, batch, events, out);
+    }
+
+    fn backward_params(
+        &self,
+        _params: &[f32],
+        d_events: &[f32],
+        u: &[f32],
+        batch: usize,
+        events: usize,
+        d_params: &mut Vec<f32>,
+    ) {
+        grad::pipeline_backward(d_events, u, batch, events, d_params);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_the_reference_pipeline_exactly() {
+        let params = [1.0f32, 0.5, 0.3, -0.5, 1.2, 0.4, 2.0, 0.0, 0.0, 1.0, 0.0, 0.0];
+        let u = [0.25f32; 2 * 3 * 2];
+        let mut out = Vec::new();
+        Quantile.forward_into(&params, &u, 2, 3, &mut out);
+        assert_eq!(out, reference::pipeline(&params, &u, 2, 3));
+    }
+
+    #[test]
+    fn truth_matches_the_python_constants() {
+        assert_eq!(Quantile.true_params(), &[1.0, 0.5, 0.3, -0.5, 1.2, 0.4]);
+    }
+}
