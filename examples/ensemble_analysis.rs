@@ -1,17 +1,21 @@
-//! Ensemble analysis (Sec. IV-A / VI-A/B): train an ensemble of
-//! independent GANs, compute the ensemble response (eqs 7/8) and run the
-//! Fig 9 / Fig 10 resampling studies.
+//! Ensemble analysis (Sec. IV-A / VI-A/B) on a **non-quantile scenario**:
+//! train an ensemble of independent GANs on the 10-parameter `deconv`
+//! inverse problem, compute the ensemble response (eqs 7/8) and run the
+//! Fig 9 / Fig 10 resampling studies — demonstrating that the analysis
+//! layer sizes itself from the scenario's parameter width (nothing here
+//! assumes the proxy app's six parameters).
+//!
+//! Runs on the native backend: no artifacts, no feature flags.
 //!
 //! ```sh
 //! cargo run --release --example ensemble_analysis
+//! SAGIPS_SCENARIO=saturation cargo run --release --example ensemble_analysis
 //! ```
-
-use std::path::Path;
 
 use sagips::config::presets;
 use sagips::ensemble::analysis::EnsembleResult;
 use sagips::ensemble::sampling;
-use sagips::runtime::RuntimePool;
+use sagips::runtime::Runtime;
 use sagips::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -20,23 +24,30 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(6);
-
-    let pool = RuntimePool::from_dir(Path::new("artifacts"), 3)?;
-    let handle = pool.handle();
+    let scenario = std::env::var("SAGIPS_SCENARIO").unwrap_or_else(|_| "deconv".into());
 
     let mut cfg = presets::ensemble(&presets::ci_default());
+    cfg.scenario = scenario;
     cfg.epochs = 250;
-    println!("training an ensemble of {m} independent GANs ({} epochs each)...", cfg.epochs);
+    let rt = Runtime::from_config(&cfg, 2)?;
+    let handle = rt.handle();
+    let p = handle.manifest().true_params.len();
+    println!(
+        "training an ensemble of {m} independent GANs on '{}' ({p} parameters, {} epochs each)...",
+        cfg.scenario, cfg.epochs
+    );
     let ens = EnsembleResult::train(&cfg, m, &handle)?;
 
-    // eqs (7)/(8)
+    // eqs (7)/(8) — all vectors are the scenario's parameter width.
     let resp = ens.response();
-    println!("\nensemble response:");
-    println!("  p̂ (eq 7) = {:?}", resp.p_hat.map(|x| (x * 100.0).round() / 100.0));
-    println!("  σ (eq 8) = {:?}", resp.sigma.map(|x| (x * 100.0).round() / 100.0));
+    assert_eq!(resp.param_dim(), p);
+    let round = |v: &[f64]| -> Vec<f64> { v.iter().map(|x| (x * 100.0).round() / 100.0).collect() };
+    println!("\nensemble response ({p}-wide):");
+    println!("  p̂ (eq 7) = {:?}", round(&resp.p_hat));
+    println!("  σ (eq 8) = {:?}", round(&resp.sigma));
     println!("  truth    = {:?}", ens.true_params);
     let res = resp.residuals(&ens.true_params);
-    println!("  residuals r̂ = {:?}", res.map(|x| (x * 100.0).round() / 100.0));
+    println!("  residuals r̂ = {:?}", round(&res));
 
     // Fig 9-style resampling study over the trained pool.
     let sizes: Vec<usize> = (2..=m).collect();
@@ -59,6 +70,6 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!("\npaper shape: RMSE/σ decrease and stabilize as M grows");
-    pool.shutdown();
+    rt.shutdown();
     Ok(())
 }

@@ -49,7 +49,10 @@ fn main() -> anyhow::Result<()> {
         );
     }
     if let Some(r) = run.final_residuals {
-        println!("final residuals r̂ = {:?}", r.map(|x| (x * 1e3).round() / 1e3));
+        println!(
+            "final residuals r̂ = {:?}",
+            r.iter().map(|x| (x * 1e3).round() / 1e3).collect::<Vec<f64>>()
+        );
     }
     pool.shutdown();
     println!("quickstart OK");

@@ -209,8 +209,25 @@ pub struct RunConfig {
     /// updates then use one-epoch-stale averaged gradients (paper: false —
     /// the trainer blocks on the exchange every epoch).
     pub overlap_comm: bool,
-    /// Checkpoint cadence in epochs (paper: every 5k, 21 checkpoints).
+    /// Analysis-checkpoint cadence in epochs (paper: every 5k, 21
+    /// checkpoints) — in-memory generator snapshots for the residual
+    /// curves, distinct from the resumable run checkpoints below.
     pub checkpoint_every: usize,
+    /// Resumable run-checkpoint cadence in epochs (0 = disabled). At every
+    /// `ckpt_every`-th completed epoch, all ranks' full training state
+    /// (parameters, Adam moments, RNG streams) is written atomically into
+    /// [`Self::ckpt_dir`].
+    pub ckpt_every: usize,
+    /// Directory run checkpoints are written to.
+    pub ckpt_dir: String,
+    /// Retain-last-N policy for run checkpoints (>= 1).
+    pub ckpt_keep: usize,
+    /// Resume from a run checkpoint: a `run_e*` checkpoint directory or a
+    /// checkpoint root (the newest complete checkpoint is used). The
+    /// restore goes through `Checkpoint::load_for_scenario`, so resuming
+    /// under a different scenario than the checkpoint was trained on is
+    /// refused.
+    pub resume: Option<String>,
     /// Base RNG seed.
     pub seed: u64,
     /// Reference data pool size (events).
@@ -276,6 +293,10 @@ impl RunConfig {
                         .ok_or_else(|| Error::config("overlap_comm must be a bool"))?
                 }
                 "checkpoint_every" => cfg.checkpoint_every = as_usize(val, k)?,
+                "ckpt_every" => cfg.ckpt_every = as_usize(val, k)?,
+                "ckpt_dir" => cfg.ckpt_dir = req_str(val, k)?,
+                "ckpt_keep" => cfg.ckpt_keep = as_usize(val, k)?,
+                "resume" => cfg.resume = Some(req_str(val, k)?),
                 "seed" => {
                     cfg.seed = val
                         .as_f64()
@@ -348,6 +369,27 @@ impl RunConfig {
                 "model must be small|medium|paper, got '{}'",
                 self.model
             )));
+        }
+        if self.ckpt_keep == 0 {
+            return Err(Error::config("ckpt_keep must be >= 1"));
+        }
+        if self.ckpt_every > 0 && self.ckpt_dir.is_empty() {
+            return Err(Error::config("ckpt_every needs a non-empty ckpt_dir"));
+        }
+        if matches!(&self.resume, Some(p) if p.is_empty()) {
+            return Err(Error::config("resume needs a checkpoint path"));
+        }
+        // Run checkpoints capture state at a clean epoch boundary; the
+        // overlap pipeline always has a one-epoch-stale exchange in flight
+        // there, which no boundary snapshot can represent. Refuse the
+        // combination rather than writing checkpoints that silently
+        // diverge on resume.
+        if self.overlap_comm && (self.ckpt_every > 0 || self.resume.is_some()) {
+            return Err(Error::config(
+                "run checkpointing/resume requires blocking gradient \
+                 exchange (disable overlap_comm): the in-flight one-epoch-\
+                 stale exchange cannot be captured at an epoch boundary",
+            ));
         }
         Ok(())
     }
@@ -530,6 +572,52 @@ mod tests {
         assert!(err.contains("native"), "{err}");
         // The paper scenario runs on either backend.
         assert!(RunConfig::from_json(r#"{"backend": "pjrt"}"#).is_ok());
+    }
+
+    #[test]
+    fn resume_and_ckpt_keys_parse_and_validate() {
+        let c = RunConfig::from_json(
+            r#"{"ckpt_every": 25, "ckpt_dir": "ckpts", "ckpt_keep": 5,
+                "resume": "ckpts/run_e0000000024"}"#,
+        )
+        .unwrap();
+        assert_eq!(c.ckpt_every, 25);
+        assert_eq!(c.ckpt_dir, "ckpts");
+        assert_eq!(c.ckpt_keep, 5);
+        assert_eq!(c.resume.as_deref(), Some("ckpts/run_e0000000024"));
+        // Defaults: run checkpointing off, no resume.
+        let d = RunConfig::default();
+        assert_eq!(d.ckpt_every, 0);
+        assert!(d.resume.is_none());
+        assert!(d.ckpt_keep >= 1);
+        // Bad values.
+        let mut c = RunConfig::default();
+        c.ckpt_keep = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.ckpt_every = 10;
+        c.ckpt_dir = String::new();
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.resume = Some(String::new());
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn checkpointing_refuses_the_overlap_pipeline() {
+        let mut c = RunConfig::default();
+        c.overlap_comm = true;
+        c.ckpt_every = 10;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("overlap_comm"), "{err}");
+        let mut c = RunConfig::default();
+        c.overlap_comm = true;
+        c.resume = Some("ckpts".into());
+        assert!(c.validate().is_err());
+        // Blocking runs accept both.
+        let mut c = RunConfig::default();
+        c.ckpt_every = 10;
+        c.validate().unwrap();
     }
 
     #[test]

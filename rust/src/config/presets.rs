@@ -32,6 +32,10 @@ pub fn paper_table3() -> RunConfig {
         chunking: ChunkPolicy::Unchunked,
         overlap_comm: false,
         checkpoint_every: 5000,
+        ckpt_every: 0,
+        ckpt_dir: "checkpoints".into(),
+        ckpt_keep: 3,
+        resume: None,
         seed: 20240,
         data_pool: 204_800,
         runtime_workers: 4,
@@ -65,6 +69,10 @@ pub fn ci_default() -> RunConfig {
         chunking: ChunkPolicy::Unchunked,
         overlap_comm: false,
         checkpoint_every: 25,
+        ckpt_every: 0,
+        ckpt_dir: "checkpoints".into(),
+        ckpt_keep: 3,
+        resume: None,
         seed: 20240,
         data_pool: 6400,
         runtime_workers: 2,

@@ -4,9 +4,12 @@
 //! build the topology, the transport network, the RMA region and the
 //! per-rank collectives; generate the reference data (rank 0 loads and
 //! distributes the data in the paper — here the pool is generated once and
-//! sharded); spawn one thread per rank; join; then run the post-training
-//! analysis: evaluate the normalized residuals over rank 0's timestamped
-//! generator checkpoints (Sec. VI-C2).
+//! sharded); restore and distribute a run checkpoint when resuming; spawn
+//! one thread per rank; join; then run the post-training analysis:
+//! evaluate the normalized residuals over rank 0's timestamped generator
+//! checkpoints (Sec. VI-C2).
+
+use std::sync::Arc;
 
 use crate::collective;
 use crate::comm::{LinkModel, LocalNetwork, RmaRegion, Topology};
@@ -21,13 +24,15 @@ use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 
 use super::rank::{run_rank, RankOutcome};
+use super::resume::{prepare_resume, RankResume, RunCheckpointer};
 
-/// One residual sample of the post-training analysis.
-#[derive(Clone, Copy, Debug)]
+/// One residual sample of the post-training analysis. The residual vector
+/// is the scenario's parameter width (eq 6 per parameter).
+#[derive(Clone, Debug)]
 pub struct ResidualPoint {
     pub epoch: u64,
     pub elapsed_s: f64,
-    pub residuals: [f64; 6],
+    pub residuals: Vec<f64>,
 }
 
 /// Everything a training run produces.
@@ -38,16 +43,19 @@ pub struct RunResult {
     pub states: Vec<GanState>,
     /// Residuals over rank 0's checkpoints (time-resolved convergence).
     pub residual_curve: Vec<ResidualPoint>,
-    /// Final residuals (last checkpoint).
-    pub final_residuals: Option<[f64; 6]>,
+    /// Final residuals (last checkpoint), one entry per scenario
+    /// parameter.
+    pub final_residuals: Option<Vec<f64>>,
     /// Aggregate communication stats per rank.
     pub comm: Vec<collective::CommStats>,
+    /// Epoch the run resumed from (`None` for a fresh run).
+    pub resumed_from: Option<u64>,
 }
 
 impl RunResult {
     /// Mean |r̂| at the end of training (summary scalar).
     pub fn final_mean_abs_residual(&self) -> Option<f64> {
-        self.final_residuals.as_ref().map(residuals::mean_abs)
+        self.final_residuals.as_deref().map(residuals::mean_abs)
     }
 
     /// Total events analyzed across ranks (numerator of eq (9)).
@@ -132,6 +140,43 @@ pub fn run_training_with_links(
     let pipeline_artifact = pick_pipeline_artifact(handle)?;
     let pool = ToyDataset::generate(handle, &pipeline_artifact, cfg.data_pool, cfg.seed)?;
 
+    // Resume: rank 0 loads the run checkpoint once (through the
+    // scenario-identity guard) and the per-rank states are handed to the
+    // rank threads below — the thread-world equivalent of broadcasting
+    // the restored state to all ranks before the first epoch.
+    let restored = match &cfg.resume {
+        Some(_) => Some(prepare_resume(cfg, manifest)?),
+        None => None,
+    };
+    let resumed_from = restored.as_ref().map(|ck| {
+        crate::log_info!(
+            "resuming from epoch {} ({} ranks, scenario {}, {:.2}s \
+             accumulated): epochs {}..{} remain",
+            ck.epoch,
+            ck.ranks.len(),
+            ck.scenario,
+            ck.elapsed_s,
+            ck.epoch + 1,
+            cfg.epochs
+        );
+        ck.epoch
+    });
+
+    // Periodic run checkpointing (rank-0-owned, shared across the rank
+    // threads; disabled unless ckpt_every > 0).
+    let checkpointer = if cfg.ckpt_every > 0 {
+        Some(Arc::new(RunCheckpointer::new(
+            std::path::Path::new(&cfg.ckpt_dir),
+            cfg.ckpt_every,
+            cfg.ckpt_keep,
+            cfg.ranks,
+            cfg.seed,
+            manifest.scenario.clone(),
+        )))
+    } else {
+        None
+    };
+
     // Horovod is exempt from the engine wrap above; make the rank loop
     // blocking too, so its staleness semantics and comm_s/comm_hidden_s
     // accounting match the collective it actually runs on (otherwise the
@@ -161,10 +206,18 @@ pub fn run_training_with_links(
             pool.shard(cfg.subsample_fraction, &mut rng)
         };
         let boot = Bootstrap::new(shard);
+        let ckpt = checkpointer.clone();
+        let resume = restored.as_ref().map(|ck| RankResume {
+            start_epoch: ck.epoch + 1,
+            elapsed_offset: ck.elapsed_s,
+            state: ck.ranks[rank].clone(),
+        });
         handles.push(
             std::thread::Builder::new()
                 .name(format!("rank-{rank}"))
-                .spawn(move || run_rank(rank, &cfg, handle, coll, boot, rng, rank == 0))
+                .spawn(move || {
+                    run_rank(rank, &cfg, handle, coll, boot, rng, rank == 0, ckpt, resume)
+                })
                 .map_err(Error::Io)?,
         );
     }
@@ -189,7 +242,7 @@ pub fn run_training_with_links(
         });
     }
     let final_residuals = match residual_curve.last() {
-        Some(p) => Some(p.residuals),
+        Some(p) => Some(p.residuals.clone()),
         None => Some(evaluator.residuals(&outcomes[0].state.gen)?),
     };
 
@@ -201,6 +254,7 @@ pub fn run_training_with_links(
         states: outcomes.into_iter().map(|o| o.state).collect(),
         residual_curve,
         final_residuals,
+        resumed_from,
     })
 }
 

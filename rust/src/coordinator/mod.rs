@@ -9,11 +9,17 @@
 //!   thread per rank, joins them, and runs the post-training residual
 //!   analysis over the recorded checkpoints (the paper's Sec. VI-C2
 //!   methodology).
+//! * [`resume`] — fault tolerance: the periodic [`resume::RunCheckpointer`]
+//!   that assembles per-rank training state into atomic on-disk run
+//!   checkpoints, and the restore path that validates and redistributes a
+//!   checkpoint so an interrupted run continues bit-identically.
 
 pub mod launcher;
 pub mod offload;
 pub mod rank;
+pub mod resume;
 
 pub use launcher::{run_training, RunResult};
 pub use offload::GradOffloader;
 pub use rank::RankOutcome;
+pub use resume::{RankResume, RunCheckpointer};

@@ -21,12 +21,21 @@
 //! with the next bootstrap draw and gan_step. The generator then updates
 //! with one-epoch-stale averaged gradients (Async-RED-style block
 //! asynchrony); the paper's blocking semantics remain the default.
+//!
+//! Fault tolerance: at the run-checkpoint cadence (`RunConfig::
+//! ckpt_every`) each rank deposits its complete training state —
+//! parameters, Adam moments, RNG stream — into the shared
+//! [`RunCheckpointer`]; a resumed rank receives a [`RankResume`] instead
+//! of initializing fresh and continues its epoch loop (and every RNG
+//! draw) exactly where the checkpoint left off.
+
+use std::sync::Arc;
 
 use crate::collective::{Collective, CommStats};
 use crate::config::RunConfig;
 use crate::data::Bootstrap;
 use crate::metrics::{Recorder, Timer};
-use crate::model::checkpoint::CheckpointSeries;
+use crate::model::checkpoint::{CheckpointSeries, RankTrainState};
 use crate::model::gan::GanState;
 use crate::model::{StepOutput, TrainStep};
 use crate::optim::{Adam, Optimizer};
@@ -37,6 +46,7 @@ use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 
 use super::offload::GradOffloader;
+use super::resume::{RankResume, RunCheckpointer};
 
 /// Everything a rank thread produces.
 pub struct RankOutcome {
@@ -58,7 +68,9 @@ struct InFlight {
 
 /// Run one rank's full training loop. `shard` is this rank's data
 /// sub-sample; `collective` its gradient exchanger; `rng` its private
-/// stream.
+/// stream. `checkpointer` (when run checkpointing is on) receives this
+/// rank's state at the cadence; `resume` (when restoring) replaces the
+/// fresh initialization with a checkpointed state.
 #[allow(clippy::too_many_arguments)]
 pub fn run_rank(
     rank: usize,
@@ -68,6 +80,8 @@ pub fn run_rank(
     shard: Bootstrap,
     mut rng: Rng,
     take_checkpoints: bool,
+    checkpointer: Option<Arc<RunCheckpointer>>,
+    resume: Option<RankResume>,
 ) -> Result<RankOutcome> {
     crate::util::logging::rank_scope(rank);
     let manifest = handle.manifest();
@@ -77,10 +91,39 @@ pub fn run_rank(
     // wrong forward operator is refused instead of silently diverging.
     let scenario = manifest.scenario.clone();
 
-    // Model + optimizers (paper: Adam, G lr 1e-5 / D lr 1e-4).
-    let mut state = GanState::init(&meta, slope, &mut rng);
-    let mut gen_opt = Adam::new(cfg.gen_lr, state.gen.len());
-    let mut disc_opt = Adam::new(cfg.disc_lr, state.disc.len());
+    // Model + optimizers (paper: Adam, G lr 1e-5 / D lr 1e-4) — either
+    // fresh, or restored from a run checkpoint. The restore replaces the
+    // RNG stream too: the launcher re-derives the shard with the original
+    // seed-split stream *before* this point, so every draw after the
+    // checkpoint boundary continues the original run's sequence exactly.
+    let mut state;
+    let start_epoch: u64;
+    let elapsed_offset: f64;
+    let mut gen_opt;
+    let mut disc_opt;
+    match resume {
+        Some(r) => {
+            debug_assert_eq!(r.state.rank, rank);
+            state = GanState {
+                gen: r.state.gen,
+                disc: r.state.disc,
+            };
+            gen_opt = Adam::new(cfg.gen_lr, state.gen.len());
+            gen_opt.restore(&r.state.gen_m, &r.state.gen_v, r.state.gen_t);
+            disc_opt = Adam::new(cfg.disc_lr, state.disc.len());
+            disc_opt.restore(&r.state.disc_m, &r.state.disc_v, r.state.disc_t);
+            rng = Rng::from_snapshot(&r.state.rng);
+            start_epoch = r.start_epoch;
+            elapsed_offset = r.elapsed_offset;
+        }
+        None => {
+            state = GanState::init(&meta, slope, &mut rng);
+            gen_opt = Adam::new(cfg.gen_lr, state.gen.len());
+            disc_opt = Adam::new(cfg.disc_lr, state.disc.len());
+            start_epoch = 0;
+            elapsed_offset = 0.0;
+        }
+    }
 
     // Weight-only fusion plan over the generator layout (Sec. V-C).
     let plan = FusionPlan::build(meta.gen_segments(), cfg.fusion_bucket, cfg.include_bias);
@@ -101,7 +144,7 @@ pub fn run_rank(
     let mut out = StepOutput::default();
     let timer = Timer::start();
 
-    for epoch in 0..cfg.epochs as u64 {
+    for epoch in start_epoch..cfg.epochs as u64 {
         let mut lap = Timer::start();
         // 1. bootstrap draw
         shard.draw(disc_batch, &mut rng, &mut real);
@@ -182,7 +225,39 @@ pub fn run_rank(
             && (epoch == 0
                 || cfg.checkpoint_every > 0 && (epoch + 1) % cfg.checkpoint_every as u64 == 0)
         {
-            checkpoints.record(rank, epoch, timer.elapsed_s(), &scenario, &state.gen);
+            checkpoints.record(
+                rank,
+                epoch,
+                elapsed_offset + timer.elapsed_s(),
+                &scenario,
+                &state.gen,
+            );
+        }
+
+        // Run-checkpoint deposit: the full state *after* this epoch's
+        // updates, with the RNG captured exactly where epoch + 1's first
+        // draw will continue it.
+        if let Some(ck) = &checkpointer {
+            if ck.wants(epoch) {
+                let (gm, gv, gt) = gen_opt.state();
+                let (dm, dv, dt) = disc_opt.state();
+                ck.deposit(
+                    epoch,
+                    elapsed_offset + timer.elapsed_s(),
+                    RankTrainState {
+                        rank,
+                        gen: state.gen.clone(),
+                        disc: state.disc.clone(),
+                        gen_m: gm.to_vec(),
+                        gen_v: gv.to_vec(),
+                        gen_t: gt,
+                        disc_m: dm.to_vec(),
+                        disc_v: dv.to_vec(),
+                        disc_t: dt,
+                        rng: rng.snapshot(),
+                    },
+                )?;
+            }
         }
     }
 

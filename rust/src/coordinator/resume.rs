@@ -1,0 +1,324 @@
+//! Fault-tolerant train-resume: periodic run checkpointing and restore.
+//!
+//! Long asynchronous training runs on HPC systems hit walltime limits and
+//! node failures; SAGIPS-class workflows therefore need to stop at an
+//! arbitrary epoch and continue later as if nothing happened. This module
+//! supplies the two coordinator-side halves:
+//!
+//! * [`RunCheckpointer`] — the write path. Each rank deposits its full
+//!   [`RankTrainState`] at the configured cadence
+//!   (`RunConfig::ckpt_every`); when the last rank's state for an epoch
+//!   arrives, the rank-0-owned checkpointer serializes a
+//!   [`TrainCheckpoint`] atomically (write-then-rename) into
+//!   `RunConfig::ckpt_dir` and prunes to the newest
+//!   `RunConfig::ckpt_keep` checkpoints. Ranks never block on each other:
+//!   a deposit is a mutex-guarded insert, and whichever rank completes an
+//!   epoch's set performs the write — the on-disk result is identical to
+//!   the classic gather-to-rank-0 scheme, without stalling rank 0's epoch
+//!   loop.
+//! * [`prepare_resume`] — the restore path. Resolves `--resume <path>`
+//!   (a specific `run_e*` directory or a checkpoint root, newest wins),
+//!   loads it through [`TrainCheckpoint::load_for_scenario`] — which
+//!   routes the scenario-identity guard through
+//!   [`Checkpoint::load_for_scenario`][crate::model::checkpoint::Checkpoint::load_for_scenario]
+//!   — and validates it against the run configuration (rank count, base
+//!   seed, model parameter counts, remaining epochs, rank-id integrity).
+//!   The launcher then hands each
+//!   rank its own state before the first epoch (the thread-world
+//!   equivalent of rank 0 broadcasting the restored state), so a resumed
+//!   multi-rank run is bit-identical to an uninterrupted one.
+//!
+//! See `docs/checkpointing.md` for the on-disk format and a runnable
+//! save → kill → resume walkthrough.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::config::RunConfig;
+use crate::model::checkpoint::{RankTrainState, TrainCheckpoint};
+use crate::runtime::Manifest;
+use crate::util::error::{Error, Result};
+
+/// Per-rank restore bundle handed to `run_rank` by the launcher.
+#[derive(Clone, Debug)]
+pub struct RankResume {
+    /// First epoch the resumed loop executes (checkpoint epoch + 1).
+    pub start_epoch: u64,
+    /// Training seconds accumulated before the restart; added to the
+    /// resumed run's timer so checkpoint timestamps stay monotone.
+    pub elapsed_offset: f64,
+    /// The rank's complete state at the checkpoint boundary.
+    pub state: RankTrainState,
+}
+
+/// One epoch's partially assembled checkpoint.
+struct PendingEpoch {
+    slots: Vec<Option<RankTrainState>>,
+    filled: usize,
+    elapsed_s: f64,
+}
+
+/// Shared (Arc'd across rank threads) periodic checkpoint writer.
+pub struct RunCheckpointer {
+    dir: PathBuf,
+    every: usize,
+    keep: usize,
+    ranks: usize,
+    seed: u64,
+    scenario: String,
+    pending: Mutex<BTreeMap<u64, PendingEpoch>>,
+}
+
+impl RunCheckpointer {
+    /// `every` is the epoch cadence (must be >= 1 — a zero cadence means
+    /// checkpointing is disabled and no checkpointer should exist).
+    /// `seed` is the run's base RNG seed, recorded so resume can refuse a
+    /// mismatching configuration.
+    pub fn new(
+        dir: &Path,
+        every: usize,
+        keep: usize,
+        ranks: usize,
+        seed: u64,
+        scenario: String,
+    ) -> RunCheckpointer {
+        debug_assert!(every >= 1 && keep >= 1 && ranks >= 1);
+        RunCheckpointer {
+            dir: dir.to_path_buf(),
+            every,
+            keep: keep.max(1),
+            ranks,
+            seed,
+            scenario,
+            pending: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Whether the cadence fires at the end of `epoch` (same convention as
+    /// the analysis checkpoints: every `every`-th *completed* epoch).
+    pub fn wants(&self, epoch: u64) -> bool {
+        (epoch + 1) % self.every as u64 == 0
+    }
+
+    /// Deposit one rank's state for `epoch`. When the last rank's deposit
+    /// arrives, the assembled [`TrainCheckpoint`] is written atomically
+    /// and old checkpoints are pruned; returns the written path in that
+    /// case, `None` while the epoch set is still incomplete.
+    pub fn deposit(
+        &self,
+        epoch: u64,
+        elapsed_s: f64,
+        state: RankTrainState,
+    ) -> Result<Option<PathBuf>> {
+        let rank = state.rank;
+        if rank >= self.ranks {
+            return Err(Error::Checkpoint(format!(
+                "checkpoint deposit from rank {rank}, run has {}",
+                self.ranks
+            )));
+        }
+        // The lock guards only the in-memory assembly: the deposit itself
+        // is a quick insert, and the rank that completes an epoch's set
+        // serializes and writes *after* releasing the lock — so no rank
+        // ever blocks on another checkpoint's disk I/O. Concurrent writes
+        // of different epochs are safe: each uses its own temporary
+        // directory, and pruning tolerates losing a removal race.
+        let entry = {
+            let mut pending = self
+                .pending
+                .lock()
+                .map_err(|_| Error::Checkpoint("checkpointer mutex poisoned".into()))?;
+            let entry = pending.entry(epoch).or_insert_with(|| PendingEpoch {
+                slots: (0..self.ranks).map(|_| None).collect(),
+                filled: 0,
+                elapsed_s: 0.0,
+            });
+            if entry.slots[rank].replace(state).is_none() {
+                entry.filled += 1;
+            }
+            entry.elapsed_s = entry.elapsed_s.max(elapsed_s);
+            if entry.filled < self.ranks {
+                return Ok(None);
+            }
+            pending.remove(&epoch).expect("entry just inserted")
+        };
+        let ck = TrainCheckpoint {
+            epoch,
+            elapsed_s: entry.elapsed_s,
+            seed: self.seed,
+            scenario: self.scenario.clone(),
+            ranks: entry
+                .slots
+                .into_iter()
+                .map(|s| s.expect("all slots filled"))
+                .collect(),
+        };
+        let path = ck.save(&self.dir)?;
+        TrainCheckpoint::prune(&self.dir, self.keep)?;
+        crate::log_info!(
+            "run checkpoint written: {} (epoch {epoch}, {} ranks, keep {})",
+            path.display(),
+            self.ranks,
+            self.keep
+        );
+        Ok(Some(path))
+    }
+}
+
+/// Load and validate the checkpoint `cfg.resume` points at. Returns the
+/// checkpoint ready for per-rank distribution.
+pub fn prepare_resume(cfg: &RunConfig, manifest: &Manifest) -> Result<TrainCheckpoint> {
+    let path = cfg
+        .resume
+        .as_ref()
+        .ok_or_else(|| Error::config("prepare_resume called without cfg.resume"))?;
+    let ck = TrainCheckpoint::load_for_scenario(Path::new(path), &manifest.scenario)?;
+    if ck.ranks.len() != cfg.ranks {
+        return Err(Error::config(format!(
+            "checkpoint holds {} ranks but the run is configured for {} — \
+             resume with the same --ranks the checkpoint was written with",
+            ck.ranks.len(),
+            cfg.ranks
+        )));
+    }
+    // The seed defines the data pool and the per-rank shard derivation;
+    // restoring old parameters/RNG streams onto different data would
+    // silently break the bit-identical contract.
+    if ck.seed != cfg.seed {
+        return Err(Error::config(format!(
+            "checkpoint was written by a run with seed {} but the run is \
+             configured with seed {} — resume with the matching --seed",
+            ck.seed, cfg.seed
+        )));
+    }
+    if ck.epoch + 1 >= cfg.epochs as u64 {
+        return Err(Error::config(format!(
+            "checkpoint is at epoch {} but the run is configured for {} \
+             total epochs — nothing left to train (raise --epochs)",
+            ck.epoch, cfg.epochs
+        )));
+    }
+    let meta = manifest.model(&cfg.model)?;
+    for (i, rs) in ck.ranks.iter().enumerate() {
+        // The loader sorts by rank; anything other than exactly 0..n-1
+        // (duplicates, gaps) means a corrupt file and would silently
+        // mis-assign state to ranks by position.
+        if rs.rank != i {
+            return Err(Error::Checkpoint(format!(
+                "checkpoint rank ids are not exactly 0..{} (found {} at \
+                 position {i}) — checkpoint is corrupt",
+                ck.ranks.len() - 1,
+                rs.rank
+            )));
+        }
+        if rs.gen.len() != meta.gen_param_count || rs.disc.len() != meta.disc_param_count {
+            return Err(Error::config(format!(
+                "checkpoint rank {} holds {}/{} generator/discriminator \
+                 parameters, model '{}' expects {}/{} — resume with the \
+                 matching --model",
+                rs.rank,
+                rs.gen.len(),
+                rs.disc.len(),
+                cfg.model,
+                meta.gen_param_count,
+                meta.disc_param_count
+            )));
+        }
+        if rs.gen_m.len() != rs.gen.len()
+            || rs.gen_v.len() != rs.gen.len()
+            || rs.disc_m.len() != rs.disc.len()
+            || rs.disc_v.len() != rs.disc.len()
+        {
+            return Err(Error::Checkpoint(format!(
+                "checkpoint rank {} optimizer moments do not match its \
+                 parameter vectors — checkpoint is corrupt",
+                rs.rank
+            )));
+        }
+    }
+    Ok(ck)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn state(rank: usize, n: usize) -> RankTrainState {
+        RankTrainState {
+            rank,
+            gen: vec![rank as f32; n],
+            disc: vec![rank as f32 + 0.5; n],
+            gen_m: vec![0.0; n],
+            gen_v: vec![0.0; n],
+            gen_t: 1,
+            disc_m: vec![0.0; n],
+            disc_v: vec![0.0; n],
+            disc_t: 1,
+            rng: Rng::new(rank as u64).snapshot(),
+        }
+    }
+
+    #[test]
+    fn cadence_matches_analysis_checkpoint_convention() {
+        let dir = std::env::temp_dir().join("sagips_ckr_cadence");
+        let c = RunCheckpointer::new(&dir, 10, 2, 1, 20240, "quantile".into());
+        assert!(!c.wants(0));
+        assert!(c.wants(9));
+        assert!(c.wants(19));
+        assert!(!c.wants(10));
+    }
+
+    #[test]
+    fn deposit_writes_when_all_ranks_arrive_and_prunes() {
+        let dir = std::env::temp_dir()
+            .join(format!("sagips_ckr_dep_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let c = RunCheckpointer::new(&dir, 5, 1, 3, 20240, "quantile".into());
+        // Ranks deposit out of order; the write happens on the last one.
+        assert!(c.deposit(4, 1.0, state(2, 4)).unwrap().is_none());
+        assert!(c.deposit(4, 1.5, state(0, 4)).unwrap().is_none());
+        let p = c.deposit(4, 1.2, state(1, 4)).unwrap().expect("complete set");
+        assert!(p.ends_with(TrainCheckpoint::dir_name(4)));
+        // Second cadence epoch: keep=1 prunes the first.
+        for r in 0..3 {
+            c.deposit(9, 2.0, state(r, 4)).unwrap();
+        }
+        let left = TrainCheckpoint::list(&dir).unwrap();
+        assert_eq!(left.len(), 1);
+        assert!(left[0].ends_with(TrainCheckpoint::dir_name(9)));
+        // The written checkpoint carries the max deposited elapsed time
+        // and all ranks sorted.
+        let ck = TrainCheckpoint::load_for_scenario(&left[0], "quantile").unwrap();
+        assert_eq!(ck.epoch, 9);
+        assert_eq!(ck.elapsed_s, 2.0);
+        assert_eq!(
+            ck.ranks.iter().map(|r| r.rank).collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn duplicate_deposit_does_not_double_count() {
+        let dir = std::env::temp_dir()
+            .join(format!("sagips_ckr_dup_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let c = RunCheckpointer::new(&dir, 1, 2, 2, 20240, "quantile".into());
+        assert!(c.deposit(0, 0.1, state(0, 2)).unwrap().is_none());
+        assert!(c.deposit(0, 0.2, state(0, 2)).unwrap().is_none());
+        assert!(c.deposit(0, 0.3, state(1, 2)).unwrap().is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn out_of_range_rank_is_rejected() {
+        let dir = std::env::temp_dir().join("sagips_ckr_oor");
+        let c = RunCheckpointer::new(&dir, 1, 1, 2, 20240, "quantile".into());
+        assert!(c.deposit(0, 0.0, state(5, 2)).is_err());
+    }
+
+    // prepare_resume's validation paths are exercised end to end (against
+    // real manifests and training runs) in rust/tests/resume.rs.
+}

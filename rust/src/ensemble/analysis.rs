@@ -3,7 +3,10 @@
 //! The paper's ensemble analyses train M independent GANs (each run is a
 //! full SAGIPS workflow) and aggregate them through the ensemble response.
 //! Fig 13/14's ensembles of *distributed* runs reuse the same machinery
-//! with a multi-rank config per member.
+//! with a multi-rank config per member. All aggregation is
+//! parameter-width-generic: the member prediction matrices carry the
+//! scenario's `param_dim` and every downstream quantity (response,
+//! residuals, Table IV rows) is sized from them.
 
 use crate::config::RunConfig;
 use crate::coordinator::launcher::{run_training, ResidualPoint, RunResult};
@@ -18,7 +21,7 @@ use super::response::{ensemble_response, EnsembleResponse};
 pub struct EnsembleResult {
     pub members: Vec<RunResult>,
     /// Per-member final generator predictions over the shared noise batch
-    /// (flat (k, 6) each).
+    /// (flat (k, param_dim) each).
     pub member_preds: Vec<Vec<f32>>,
     pub k: usize,
     pub true_params: Vec<f32>,
@@ -26,11 +29,18 @@ pub struct EnsembleResult {
 
 impl EnsembleResult {
     /// Train M members with per-member seeds derived from `cfg.seed`.
+    ///
+    /// Run checkpointing/resume is per *run*, not per ensemble: members
+    /// would overwrite each other's checkpoints and a single resume path
+    /// cannot apply to all of them, so both knobs are disabled for the
+    /// member runs.
     pub fn train(cfg: &RunConfig, m: usize, handle: &RuntimeHandle) -> Result<EnsembleResult> {
         let mut members = Vec::with_capacity(m);
         for i in 0..m {
             let mut c = cfg.clone();
             c.seed = cfg.seed.wrapping_add(1 + i as u64);
+            c.ckpt_every = 0;
+            c.resume = None;
             crate::log_info!(
                 "ensemble member {}/{m} (mode {}, {} ranks)",
                 i + 1,
@@ -92,18 +102,20 @@ impl EnsembleResult {
     }
 
     /// Per-parameter final residual mean ± σ across members — the Table IV
-    /// row format (values in the paper are reported as 10^-3 units).
-    pub fn table4_row(&self) -> [(f64, f64); 6] {
-        let mut out = [(0.0, 0.0); 6];
-        for j in 0..6 {
-            let vals: Vec<f64> = self
-                .members
-                .iter()
-                .filter_map(|r| r.final_residuals.map(|res| res[j]))
-                .collect();
-            out[j] = (stats::mean(&vals), stats::std(&vals));
-        }
-        out
+    /// row format (values in the paper are reported as 10^-3 units), one
+    /// entry per scenario parameter.
+    pub fn table4_row(&self) -> Vec<(f64, f64)> {
+        let p = self.true_params.len();
+        (0..p)
+            .map(|j| {
+                let vals: Vec<f64> = self
+                    .members
+                    .iter()
+                    .filter_map(|r| r.final_residuals.as_ref().map(|res| res[j]))
+                    .collect();
+                (stats::mean(&vals), stats::std(&vals))
+            })
+            .collect()
     }
 
     /// Mean total wall time across members.

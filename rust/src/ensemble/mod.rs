@@ -1,5 +1,41 @@
 //! Ensemble analysis (Sec. IV-A, VI-A/B): ensemble response, uncertainty,
 //! and the resampling studies of Figs 9/10.
+//!
+//! Three layers, all **parameter-width-generic** — the width flows from
+//! the scenario's `param_dim` through the member prediction matrices, so
+//! a 10-parameter deconvolution ensemble is analyzed exactly like the
+//! paper's 6-parameter proxy app:
+//!
+//! * [`response`] — the pure aggregation math: eqs (7)/(8), the ensemble
+//!   mean p̂ and spread σ over M generators evaluated on a shared noise
+//!   batch, plus the eq (6) residuals of the ensemble mean.
+//! * [`sampling`] — the Fig 9/10 resampling methodology: sub-ensemble
+//!   draws, (RMSE, σ) clouds with 95 % confidence contours, and the
+//!   residual-vs-ensemble-size growth study.
+//! * [`analysis`] — the driver that trains M full SAGIPS runs (each
+//!   distributed, any mode) and feeds their final generators into the
+//!   layers above; also produces the Table IV row format.
+//!
+//! # Examples
+//!
+//! Aggregating member predictions of a non-6-wide scenario — the response
+//! and residual summary size themselves from the data:
+//!
+//! ```
+//! use sagips::ensemble::ensemble_response;
+//! use sagips::model::residuals::mean_abs;
+//!
+//! // Three members, k = 2 noise vectors, an 8-parameter scenario.
+//! let members: Vec<Vec<f32>> = (0..3).map(|i| vec![i as f32; 2 * 8]).collect();
+//! let resp = ensemble_response(&members, 2);
+//! assert_eq!(resp.param_dim(), 8);
+//! assert_eq!(resp.p_hat, vec![1.0; 8]);          // mean of {0, 1, 2}
+//!
+//! let truth = vec![2.0f32; 8];
+//! let r = resp.residuals(&truth);                // eq (6), width 8
+//! assert_eq!(r.len(), 8);
+//! assert!((mean_abs(&r) - 0.5).abs() < 1e-9);
+//! ```
 
 pub mod analysis;
 pub mod response;

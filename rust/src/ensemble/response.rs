@@ -1,4 +1,5 @@
-//! The ensemble response — eqs (7) and (8) of the paper.
+//! The ensemble response — eqs (7) and (8) of the paper — at any
+//! parameter width.
 //!
 //! Given M trained generators and a batch of k noise vectors:
 //!
@@ -7,74 +8,115 @@
 //!
 //! and for a batch of k noise vectors "we simply report the average of p̂
 //! and σ across the batch dimension k".
+//!
+//! The parameter width is inferred from the prediction matrices
+//! (`len / k`), so the same aggregation serves the paper's 6-parameter
+//! proxy app and any wider registered scenario.
+//!
+//! # Examples
+//!
+//! A two-member ensemble over a 4-parameter problem (non-6 width — the
+//! analysis layer carries no fixed-width assumption):
+//!
+//! ```
+//! use sagips::ensemble::response::ensemble_response;
+//!
+//! // Flat (k = 1, p = 4) predictions per member.
+//! let a = vec![1.0f32, 2.0, 3.0, 4.0];
+//! let b = vec![3.0f32, 2.0, 3.0, 4.0];
+//! let resp = ensemble_response(&[a, b], 1);
+//! assert_eq!(resp.m, 2);
+//! assert_eq!(resp.param_dim(), 4);
+//! assert_eq!(resp.p_hat, vec![2.0, 2.0, 3.0, 4.0]);
+//! assert_eq!(resp.sigma[0], 1.0); // population std of {1, 3}
+//!
+//! let truth = [2.0f32, 2.0, 3.0, 4.0];
+//! assert!(resp.residuals(&truth).iter().all(|r| r.abs() < 1e-9));
+//! ```
 
 use crate::model::residuals::normalized_residuals;
 
 /// Ensemble mean and spread per parameter, batch-averaged.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct EnsembleResponse {
-    /// Batch-averaged ensemble mean prediction p̂ (6,).
-    pub p_hat: [f64; 6],
-    /// Batch-averaged ensemble spread σ (6,).
-    pub sigma: [f64; 6],
+    /// Batch-averaged ensemble mean prediction p̂ (p,).
+    pub p_hat: Vec<f64>,
+    /// Batch-averaged ensemble spread σ (p,).
+    pub sigma: Vec<f64>,
     /// Ensemble size M.
     pub m: usize,
 }
 
 impl EnsembleResponse {
+    /// Parameter width of the aggregated predictions.
+    pub fn param_dim(&self) -> usize {
+        self.p_hat.len()
+    }
+
     /// Normalized residuals of the ensemble mean, eq (6).
-    pub fn residuals(&self, true_params: &[f32]) -> [f64; 6] {
+    pub fn residuals(&self, true_params: &[f32]) -> Vec<f64> {
         normalized_residuals(true_params, &self.p_hat)
     }
 
     /// Normalized spread per parameter: σ_i / |p_i| (comparable to the
     /// residual scale, which is what Fig 8/10's top panels show).
-    pub fn normalized_sigma(&self, true_params: &[f32]) -> [f64; 6] {
-        let mut s = [0.0f64; 6];
-        for i in 0..6 {
-            s[i] = self.sigma[i] / (true_params[i] as f64).abs();
-        }
-        s
+    pub fn normalized_sigma(&self, true_params: &[f32]) -> Vec<f64> {
+        assert_eq!(true_params.len(), self.sigma.len(), "sigma width mismatch");
+        self.sigma
+            .iter()
+            .zip(true_params)
+            .map(|(&s, &p)| s / (p as f64).abs())
+            .collect()
     }
 }
 
 /// Compute eqs (7)/(8) from per-member prediction matrices.
 ///
-/// `member_preds[i]` is member i's flat (k, 6) prediction matrix over a
+/// `member_preds[i]` is member i's flat (k, p) prediction matrix over a
 /// *shared* noise batch (all members must be evaluated on the same noise,
-/// as in the paper).
+/// as in the paper). The parameter width p is inferred as `len / k` and
+/// must be consistent across members.
 pub fn ensemble_response(member_preds: &[Vec<f32>], k: usize) -> EnsembleResponse {
     let m = member_preds.len();
     assert!(m >= 1, "ensemble needs at least one member");
-    for p in member_preds {
-        assert_eq!(p.len(), k * 6, "member prediction shape mismatch");
+    assert!(k >= 1, "ensemble needs a nonempty noise batch");
+    assert!(
+        member_preds[0].len() % k == 0 && !member_preds[0].is_empty(),
+        "member prediction shape mismatch: {} elements over k = {k}",
+        member_preds[0].len()
+    );
+    let p = member_preds[0].len() / k;
+    for preds in member_preds {
+        assert_eq!(preds.len(), k * p, "member prediction shape mismatch");
     }
-    let mut p_hat = [0.0f64; 6];
-    let mut sigma = [0.0f64; 6];
+    let mut p_hat = vec![0.0f64; p];
+    let mut sigma = vec![0.0f64; p];
+    let mut mean_n = vec![0.0f64; p];
+    let mut var_n = vec![0.0f64; p];
     // Per noise vector: mean and spread over members, then batch-average.
     for kk in 0..k {
-        let mut mean_n = [0.0f64; 6];
-        for p in member_preds {
-            for j in 0..6 {
-                mean_n[j] += p[kk * 6 + j] as f64;
+        mean_n.iter_mut().for_each(|v| *v = 0.0);
+        for preds in member_preds {
+            for j in 0..p {
+                mean_n[j] += preds[kk * p + j] as f64;
             }
         }
-        for j in 0..6 {
-            mean_n[j] /= m as f64;
+        for v in mean_n.iter_mut() {
+            *v /= m as f64;
         }
-        let mut var_n = [0.0f64; 6];
-        for p in member_preds {
-            for j in 0..6 {
-                let d = p[kk * 6 + j] as f64 - mean_n[j];
+        var_n.iter_mut().for_each(|v| *v = 0.0);
+        for preds in member_preds {
+            for j in 0..p {
+                let d = preds[kk * p + j] as f64 - mean_n[j];
                 var_n[j] += d * d;
             }
         }
-        for j in 0..6 {
+        for j in 0..p {
             p_hat[j] += mean_n[j];
             sigma[j] += (var_n[j] / m as f64).sqrt();
         }
     }
-    for j in 0..6 {
+    for j in 0..p {
         p_hat[j] /= k as f64;
         sigma[j] /= k as f64;
     }
@@ -85,24 +127,25 @@ pub fn ensemble_response(member_preds: &[Vec<f32>], k: usize) -> EnsembleRespons
 mod tests {
     use super::*;
 
-    fn member(k: usize, value: f32) -> Vec<f32> {
-        vec![value; k * 6]
+    fn member(k: usize, p: usize, value: f32) -> Vec<f32> {
+        vec![value; k * p]
     }
 
     #[test]
     fn single_member_has_zero_spread() {
-        let r = ensemble_response(&[member(4, 2.0)], 4);
+        let r = ensemble_response(&[member(4, 6, 2.0)], 4);
         assert_eq!(r.m, 1);
-        assert_eq!(r.p_hat, [2.0; 6]);
-        assert_eq!(r.sigma, [0.0; 6]);
+        assert_eq!(r.param_dim(), 6);
+        assert_eq!(r.p_hat, vec![2.0; 6]);
+        assert_eq!(r.sigma, vec![0.0; 6]);
     }
 
     #[test]
     fn two_members_mean_and_sigma() {
-        let r = ensemble_response(&[member(3, 1.0), member(3, 3.0)], 3);
-        assert_eq!(r.p_hat, [2.0; 6]);
+        let r = ensemble_response(&[member(3, 6, 1.0), member(3, 6, 3.0)], 3);
+        assert_eq!(r.p_hat, vec![2.0; 6]);
         // population std of {1, 3} = 1
-        assert_eq!(r.sigma, [1.0; 6]);
+        assert_eq!(r.sigma, vec![1.0; 6]);
     }
 
     #[test]
@@ -113,23 +156,42 @@ mod tests {
         p[0..6].copy_from_slice(&[1.0; 6]);
         p[6..12].copy_from_slice(&[3.0; 6]);
         let r = ensemble_response(&[p], 2);
-        assert_eq!(r.p_hat, [2.0; 6]);
+        assert_eq!(r.p_hat, vec![2.0; 6]);
     }
 
     #[test]
     fn residuals_and_normalized_sigma() {
         let truth = [1.0f32, 0.5, 0.3, -0.5, 1.2, 0.4];
-        let mut preds = member(1, 0.0);
+        let mut preds = member(1, 6, 0.0);
         preds.copy_from_slice(&[1.0, 0.5, 0.3, -0.5, 1.2, 0.4]);
         let r = ensemble_response(&[preds.clone(), preds], 1);
         let res = r.residuals(&truth);
         assert!(res.iter().all(|x| x.abs() < 1e-6));
-        assert_eq!(r.normalized_sigma(&truth), [0.0; 6]);
+        assert_eq!(r.normalized_sigma(&truth), vec![0.0; 6]);
+    }
+
+    #[test]
+    fn width_is_inferred_not_assumed() {
+        // 10-parameter members: the width flows from the data.
+        let r = ensemble_response(&[member(2, 10, 1.0), member(2, 10, 2.0)], 2);
+        assert_eq!(r.param_dim(), 10);
+        assert_eq!(r.p_hat, vec![1.5; 10]);
+        assert_eq!(r.sigma, vec![0.5; 10]);
+        let truth = vec![1.5f32; 10];
+        assert_eq!(r.residuals(&truth).len(), 10);
+        let nsig = r.normalized_sigma(&truth);
+        assert!(nsig.iter().all(|s| (s - 0.5 / 1.5).abs() < 1e-9));
     }
 
     #[test]
     #[should_panic(expected = "shape mismatch")]
     fn shape_mismatch_panics() {
-        ensemble_response(&[vec![0.0; 5]], 1);
+        ensemble_response(&[vec![0.0; 6], vec![0.0; 5]], 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn indivisible_length_panics() {
+        ensemble_response(&[vec![0.0; 5]], 2);
     }
 }

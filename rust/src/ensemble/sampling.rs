@@ -99,7 +99,7 @@ pub fn growth_study(
             let resp = ensemble_response(&member_preds[..m], k);
             let res = resp.residuals(true_params);
             let nsig = resp.normalized_sigma(true_params);
-            (m, stats::mean(&res.map(|x| x.abs())), stats::mean(&nsig))
+            (m, crate::model::residuals::mean_abs(&res), stats::mean(&nsig))
         })
         .collect()
 }

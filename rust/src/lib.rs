@@ -23,9 +23,13 @@
 //! The *problem being solved* is pluggable: the [`scenario`] module defines
 //! the [`scenario::Scenario`] trait (forward operator, analytic VJP, ground
 //! truth, shapes) plus a registry of built-in inverse problems — the
-//! paper's quantile proxy app, a 1-D linear deconvolution, and a nonlinear
-//! saturation-recovery problem — selected per run via
-//! [`config::RunConfig::scenario`] / `--scenario <name>`.
+//! paper's quantile proxy app, a 10-parameter 1-D linear deconvolution,
+//! and a nonlinear saturation-recovery problem — selected per run via
+//! [`config::RunConfig::scenario`] / `--scenario <name>`. The residual and
+//! ensemble analysis layers size themselves from the scenario's parameter
+//! width, and long runs are restartable: periodic run checkpoints
+//! (`ckpt_every` / `ckpt_dir`) restore bit-identically through
+//! `--resume` (see `docs/checkpointing.md` at the repo root).
 //!
 //! # Quickstart: config to training
 //!

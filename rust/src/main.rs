@@ -53,6 +53,8 @@ fn print_help() {
          validate-artifacts   smoke-run every artifact\n\n\
          common options: --scenario <name> --backend native|pjrt --artifacts <dir> \
          --workers <n> --seed <n>\n\
+         fault tolerance: --ckpt-every <n> --ckpt-dir <dir> --ckpt-keep <n> \
+         --resume <path>\n\
          (the native backend needs no artifacts and runs every scenario; \
          pjrt executes the exported HLO)\n\
          env: SAGIPS_LOG=debug, SAGIPS_SCALE=smoke|ci|paper"
@@ -92,6 +94,18 @@ fn common_specs() -> Vec<OptSpec> {
         ),
         cli::flag("overlap", "overlap gradient exchange with next-epoch compute"),
         cli::flag("paper-scale", "use the full Table III configuration"),
+        cli::opt(
+            "ckpt-every",
+            "write a resumable run checkpoint every N epochs (0 = off)",
+            Some("0"),
+        ),
+        cli::opt("ckpt-dir", "run-checkpoint directory", Some("checkpoints")),
+        cli::opt("ckpt-keep", "retain the newest N run checkpoints", Some("3")),
+        cli::opt(
+            "resume",
+            "resume from a run checkpoint (run_e* dir, or a ckpt root: newest wins)",
+            None,
+        ),
     ]
 }
 
@@ -123,6 +137,12 @@ fn build_cfg(a: &Args) -> Result<RunConfig> {
     }
     cfg.overlap_comm = cfg.overlap_comm || a.flag("overlap");
     cfg.artifacts_dir = a.get_or("artifacts", &cfg.artifacts_dir).to_string();
+    cfg.ckpt_every = a.usize("ckpt-every", cfg.ckpt_every)?;
+    cfg.ckpt_dir = a.get_or("ckpt-dir", &cfg.ckpt_dir).to_string();
+    cfg.ckpt_keep = a.usize("ckpt-keep", cfg.ckpt_keep)?;
+    if let Some(p) = a.get("resume") {
+        cfg.resume = Some(p.to_string());
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -180,6 +200,9 @@ fn cmd_train(a: &Args) -> Result<()> {
         cfg.overlap_comm
     );
     let run = run_training(&cfg, &rt.handle())?;
+    if let Some(e) = run.resumed_from {
+        println!("resumed from epoch {e} (ran epochs {}..{})", e + 1, cfg.epochs);
+    }
     println!("wall time: {:.2}s", run.wall_s);
     println!(
         "analysis rate (eq 9): {:.3e} events/s over {:.3e} events",
@@ -194,7 +217,7 @@ fn cmd_train(a: &Args) -> Result<()> {
     if let Some(r) = run.final_residuals {
         println!(
             "final residuals r̂ (eq 6): {:?}",
-            r.map(|x| (x * 1e3).round() / 1e3)
+            r.iter().map(|x| (x * 1e3).round() / 1e3).collect::<Vec<f64>>()
         );
         println!("mean |r̂|: {:.4}", residuals::mean_abs(&r));
     }
@@ -222,8 +245,9 @@ fn cmd_ensemble(a: &Args) -> Result<()> {
         cfg.mode.name(),
         cfg.ranks
     );
-    println!("p̂   (eq 7): {:?}", resp.p_hat.map(|x| (x * 1e3).round() / 1e3));
-    println!("σ    (eq 8): {:?}", resp.sigma.map(|x| (x * 1e3).round() / 1e3));
+    let milli = |v: &[f64]| -> Vec<f64> { v.iter().map(|x| (x * 1e3).round() / 1e3).collect() };
+    println!("p̂   (eq 7): {:?}", milli(&resp.p_hat));
+    println!("σ    (eq 8): {:?}", milli(&resp.sigma));
     println!("truth      : {:?}", ens.true_params);
     let row = Table4Row::from_raw(cfg.mode.name(), &ens.table4_row());
     println!("\n{}", format_table4(&[row]));

@@ -1,17 +1,33 @@
-//! Generator checkpoints with timestamps.
+//! Checkpoints: analysis snapshots and resumable training state.
 //!
-//! The paper's convergence analysis is *post-training*: generator states
-//! are stored "at the first epoch and every other 5 k epochs (resulting in
-//! 21 generator checkpoints)" together with time stamps, and residual
-//! curves are computed afterwards from the checkpoints (Sec. VI-C2). This
-//! module stores exactly that: flat f32 parameters (little-endian binary)
-//! plus a JSON sidecar with epoch and elapsed seconds.
+//! Two kinds of state are stored here, for two different jobs:
+//!
+//! * [`Checkpoint`] — the paper's *analysis* checkpoint. The convergence
+//!   analysis is post-training: generator states are stored "at the first
+//!   epoch and every other 5 k epochs (resulting in 21 generator
+//!   checkpoints)" together with time stamps, and residual curves are
+//!   computed afterwards from the checkpoints (Sec. VI-C2). Flat f32
+//!   parameters (little-endian binary) plus a JSON sidecar with epoch and
+//!   elapsed seconds.
+//! * [`TrainCheckpoint`] — a *resumable* run checkpoint: every rank's
+//!   complete training state (generator + discriminator parameters, Adam
+//!   moments and step counters, RNG stream) at one epoch boundary, written
+//!   atomically (write-then-rename) with a retain-last-N policy. A run
+//!   restored from one continues **bit-identically** to an uninterrupted
+//!   run of the same total epochs. See `docs/checkpointing.md` for the
+//!   on-disk format and the crash-recovery semantics.
+//!
+//! Both carry the scenario identity, and both restore paths route through
+//! [`Checkpoint::load_for_scenario`]: restoring a generator under a
+//! different forward operator than it was trained on is refused instead of
+//! silently diverging.
 
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
 use crate::util::error::{Error, Result};
 use crate::util::json::{self, Value};
+use crate::util::rng::{RngSnapshot, RNG_SNAPSHOT_BYTES};
 
 /// One stored generator state.
 #[derive(Clone, Debug, PartialEq)]
@@ -176,6 +192,330 @@ impl CheckpointSeries {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Resumable run checkpoints
+// ---------------------------------------------------------------------------
+
+/// The complete training state of one rank at an epoch boundary: model
+/// parameters, both optimizers' moments and step counters, and the rank's
+/// RNG stream. Everything the epoch loop reads — so restoring it resumes
+/// the run bit-identically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RankTrainState {
+    pub rank: usize,
+    pub gen: Vec<f32>,
+    pub disc: Vec<f32>,
+    pub gen_m: Vec<f32>,
+    pub gen_v: Vec<f32>,
+    pub gen_t: u64,
+    pub disc_m: Vec<f32>,
+    pub disc_v: Vec<f32>,
+    pub disc_t: u64,
+    pub rng: RngSnapshot,
+}
+
+/// A resumable run checkpoint: every rank's [`RankTrainState`] after
+/// `epoch` completed (resume starts at `epoch + 1`).
+///
+/// On disk, one checkpoint is a directory `run_e<epoch>/` holding
+///
+/// * `ckpt_r0_e<epoch>.bin` + `.json` — rank 0's generator as a standard
+///   [`Checkpoint`]. This is the **scenario-identity sidecar**: resume
+///   loads it through [`Checkpoint::load_for_scenario`], so a checkpoint
+///   trained on one scenario refuses to restore into a run configured for
+///   another. It also doubles as a plain analysis checkpoint.
+/// * `state.bin` — the per-rank training state (binary, little-endian,
+///   magic `SAGIPSR2`).
+///
+/// Writes are atomic: the directory is assembled under a dot-prefixed
+/// temporary name and `rename`d into place, so a crash mid-write never
+/// leaves a checkpoint that [`TrainCheckpoint::list`] would offer for
+/// resume.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainCheckpoint {
+    /// Last completed epoch (0-based).
+    pub epoch: u64,
+    /// Accumulated training seconds when the checkpoint was taken (resume
+    /// continues the clock from here, keeping residual-curve timestamps
+    /// monotone across the restart).
+    pub elapsed_s: f64,
+    /// Base RNG seed of the run that wrote the checkpoint. Resuming under
+    /// a different seed would regenerate a different data pool and
+    /// per-rank shards while restoring the old parameters/RNG streams —
+    /// silently breaking the bit-identical contract — so the restore path
+    /// rejects a mismatch.
+    pub seed: u64,
+    pub scenario: String,
+    /// One entry per rank, sorted by rank.
+    pub ranks: Vec<RankTrainState>,
+}
+
+const STATE_MAGIC: &[u8; 8] = b"SAGIPSR2";
+
+impl TrainCheckpoint {
+    /// Directory name of the checkpoint for `epoch` (zero-padded so
+    /// lexicographic order is epoch order).
+    pub fn dir_name(epoch: u64) -> String {
+        format!("run_e{epoch:010}")
+    }
+
+    /// Write atomically into `<dir>/run_e<epoch>/`. Returns the final
+    /// checkpoint directory path.
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        if self.ranks.is_empty() {
+            return Err(Error::Checkpoint("cannot save an empty run checkpoint".into()));
+        }
+        std::fs::create_dir_all(dir)?;
+        let final_dir = dir.join(Self::dir_name(self.epoch));
+        let tmp = dir.join(format!(
+            ".tmp_{}_{}",
+            Self::dir_name(self.epoch),
+            std::process::id()
+        ));
+        if tmp.exists() {
+            std::fs::remove_dir_all(&tmp)?;
+        }
+        std::fs::create_dir_all(&tmp)?;
+        // Scenario-identity sidecar: rank 0's generator as a standard
+        // analysis checkpoint.
+        Checkpoint {
+            rank: 0,
+            epoch: self.epoch,
+            elapsed_s: self.elapsed_s,
+            scenario: self.scenario.clone(),
+            gen_params: self.ranks[0].gen.clone(),
+        }
+        .save(&tmp)?;
+        // Per-rank training state.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(STATE_MAGIC);
+        buf.extend_from_slice(&self.epoch.to_le_bytes());
+        buf.extend_from_slice(&self.elapsed_s.to_le_bytes());
+        buf.extend_from_slice(&self.seed.to_le_bytes());
+        buf.extend_from_slice(&(self.ranks.len() as u64).to_le_bytes());
+        for rs in &self.ranks {
+            buf.extend_from_slice(&(rs.rank as u64).to_le_bytes());
+            buf.extend_from_slice(&rs.gen_t.to_le_bytes());
+            buf.extend_from_slice(&rs.disc_t.to_le_bytes());
+            buf.extend_from_slice(&rs.rng.to_bytes());
+            for v in [&rs.gen, &rs.disc, &rs.gen_m, &rs.gen_v, &rs.disc_m, &rs.disc_v] {
+                write_f32_section(&mut buf, v);
+            }
+        }
+        std::fs::write(tmp.join("state.bin"), &buf)?;
+        // Atomic publish: a reader either sees the complete directory or
+        // nothing. Re-saving the same epoch replaces the old copy.
+        if final_dir.exists() {
+            std::fs::remove_dir_all(&final_dir)?;
+        }
+        std::fs::rename(&tmp, &final_dir)?;
+        Ok(final_dir)
+    }
+
+    /// Load a run checkpoint *for a specific scenario*. `path` is either a
+    /// `run_e*` checkpoint directory or a checkpoint root, in which case
+    /// the newest complete checkpoint is used. The scenario guard runs
+    /// through [`Checkpoint::load_for_scenario`] on the embedded rank-0
+    /// generator sidecar, so a cross-scenario resume is refused with the
+    /// same clear error as any other cross-scenario restore.
+    pub fn load_for_scenario(path: &Path, scenario: &str) -> Result<TrainCheckpoint> {
+        let dir = Self::resolve(path)?;
+        let sidecars = Checkpoint::list(&dir)?;
+        let sidecar = sidecars.first().ok_or_else(|| {
+            Error::Checkpoint(format!(
+                "{}: no generator sidecar checkpoint in run checkpoint",
+                dir.display()
+            ))
+        })?;
+        let gen_ck = Checkpoint::load_for_scenario(sidecar, scenario)?;
+        let tc = Self::read_state(&dir.join("state.bin"), gen_ck.scenario.clone())?;
+        // Cross-checks: the sidecar and the state file were written
+        // together; disagreement means a corrupt or hand-edited directory.
+        if tc.epoch != gen_ck.epoch || tc.ranks[0].gen != gen_ck.gen_params {
+            return Err(Error::Checkpoint(format!(
+                "{}: state.bin disagrees with the generator sidecar — \
+                 checkpoint is corrupt",
+                dir.display()
+            )));
+        }
+        Ok(tc)
+    }
+
+    /// All complete run checkpoints under `dir`, sorted oldest → newest.
+    pub fn list(dir: &Path) -> Result<Vec<PathBuf>> {
+        let mut out = Vec::new();
+        if !dir.exists() {
+            return Ok(out);
+        }
+        for entry in std::fs::read_dir(dir)? {
+            let p = entry?.path();
+            let is_run = p
+                .file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("run_e"));
+            // Only complete checkpoints count: the atomic rename publishes
+            // state.bin together with the sidecar or not at all.
+            if is_run && p.join("state.bin").exists() {
+                out.push(p);
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// The newest complete run checkpoint under `dir`, if any.
+    pub fn latest(dir: &Path) -> Result<Option<PathBuf>> {
+        Ok(Self::list(dir)?.pop())
+    }
+
+    /// Retain only the newest `keep` checkpoints; returns how many were
+    /// removed. Abandoned temporary directories from a crashed writer
+    /// (`.tmp_run_e*`) are cleaned up too.
+    pub fn prune(dir: &Path, keep: usize) -> Result<usize> {
+        let runs = Self::list(dir)?;
+        let mut removed = 0;
+        if runs.len() > keep {
+            for p in &runs[..runs.len() - keep] {
+                // Tolerate a concurrent pruner having won the race.
+                match std::fs::remove_dir_all(p) {
+                    Ok(()) => removed += 1,
+                    Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                    Err(e) => return Err(e.into()),
+                }
+            }
+        }
+        if dir.exists() {
+            for entry in std::fs::read_dir(dir)? {
+                let p = entry?.path();
+                if p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with(".tmp_run_e"))
+                {
+                    std::fs::remove_dir_all(&p).ok();
+                }
+            }
+        }
+        Ok(removed)
+    }
+
+    fn resolve(path: &Path) -> Result<PathBuf> {
+        if path.join("state.bin").exists() {
+            return Ok(path.to_path_buf());
+        }
+        Self::latest(path)?.ok_or_else(|| {
+            Error::Checkpoint(format!(
+                "{}: no run checkpoints found (expected a run_e* directory \
+                 or a checkpoint root containing one)",
+                path.display()
+            ))
+        })
+    }
+
+    fn read_state(path: &Path, scenario: String) -> Result<TrainCheckpoint> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| Error::Checkpoint(format!("{}: {e}", path.display())))?;
+        let mut r = ByteReader::new(&bytes, path);
+        let magic = r.take(8)?;
+        if magic != STATE_MAGIC {
+            return Err(r.corrupt("bad magic"));
+        }
+        let epoch = r.u64()?;
+        let elapsed_s = f64::from_bits(r.u64()?);
+        let seed = r.u64()?;
+        let n_ranks = r.u64()? as usize;
+        if n_ranks == 0 || n_ranks > 1 << 20 {
+            return Err(r.corrupt("implausible rank count"));
+        }
+        let mut ranks = Vec::with_capacity(n_ranks);
+        for _ in 0..n_ranks {
+            let rank = r.u64()? as usize;
+            let gen_t = r.u64()?;
+            let disc_t = r.u64()?;
+            let rng_bytes: [u8; RNG_SNAPSHOT_BYTES] = r
+                .take(RNG_SNAPSHOT_BYTES)?
+                .try_into()
+                .expect("take returns the requested length");
+            let rng = RngSnapshot::from_bytes(&rng_bytes);
+            let gen = r.f32_section()?;
+            let disc = r.f32_section()?;
+            let gen_m = r.f32_section()?;
+            let gen_v = r.f32_section()?;
+            let disc_m = r.f32_section()?;
+            let disc_v = r.f32_section()?;
+            ranks.push(RankTrainState {
+                rank,
+                gen,
+                disc,
+                gen_m,
+                gen_v,
+                gen_t,
+                disc_m,
+                disc_v,
+                disc_t,
+                rng,
+            });
+        }
+        ranks.sort_by_key(|rs| rs.rank);
+        Ok(TrainCheckpoint {
+            epoch,
+            elapsed_s,
+            seed,
+            scenario,
+            ranks,
+        })
+    }
+}
+
+fn write_f32_section(buf: &mut Vec<u8>, v: &[f32]) {
+    buf.extend_from_slice(&(v.len() as u64).to_le_bytes());
+    for x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian reader with path-qualified errors.
+struct ByteReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    path: &'a Path,
+}
+
+impl<'a> ByteReader<'a> {
+    fn new(bytes: &'a [u8], path: &'a Path) -> Self {
+        ByteReader { bytes, pos: 0, path }
+    }
+
+    fn corrupt(&self, msg: &str) -> Error {
+        Error::Checkpoint(format!("{}: {msg} (at byte {})", self.path.display(), self.pos))
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            return Err(self.corrupt("truncated"));
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn f32_section(&mut self) -> Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        if n > 1 << 31 {
+            return Err(self.corrupt("implausible section length"));
+        }
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -262,6 +602,117 @@ mod tests {
     fn list_empty_or_missing_dir() {
         let dir = std::env::temp_dir().join("sagips_ckpt_definitely_missing");
         assert!(Checkpoint::list(&dir).unwrap().is_empty());
+    }
+
+    fn rank_state(rank: usize, fill: f32) -> RankTrainState {
+        let mut rng = crate::util::rng::Rng::new(rank as u64 + 1);
+        rng.normal(); // cache a Box-Muller spare so it roundtrips too
+        RankTrainState {
+            rank,
+            gen: vec![fill; 8],
+            disc: vec![fill + 1.0; 5],
+            gen_m: vec![0.1 * fill; 8],
+            gen_v: vec![0.2 * fill; 8],
+            gen_t: 17,
+            disc_m: vec![0.3 * fill; 5],
+            disc_v: vec![0.4 * fill; 5],
+            disc_t: 23,
+            rng: rng.snapshot(),
+        }
+    }
+
+    fn train_ck(epoch: u64, scenario: &str, ranks: usize) -> TrainCheckpoint {
+        TrainCheckpoint {
+            epoch,
+            elapsed_s: 3.25,
+            seed: 20240,
+            scenario: scenario.into(),
+            ranks: (0..ranks).map(|r| rank_state(r, r as f32 + 0.5)).collect(),
+        }
+    }
+
+    #[test]
+    fn train_checkpoint_roundtrip_and_latest() {
+        let dir = std::env::temp_dir().join(format!("sagips_runck_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let a = train_ck(9, "deconv", 3);
+        let pa = a.save(&dir).unwrap();
+        let b = train_ck(19, "deconv", 3);
+        let pb = b.save(&dir).unwrap();
+        assert_eq!(TrainCheckpoint::list(&dir).unwrap(), vec![pa.clone(), pb.clone()]);
+        assert_eq!(TrainCheckpoint::latest(&dir).unwrap(), Some(pb.clone()));
+        // Load from the root picks the newest; from an explicit directory
+        // picks that one.
+        let latest = TrainCheckpoint::load_for_scenario(&dir, "deconv").unwrap();
+        assert_eq!(latest, b);
+        let older = TrainCheckpoint::load_for_scenario(&pa, "deconv").unwrap();
+        assert_eq!(older, a);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn train_checkpoint_refuses_wrong_scenario_through_the_guard() {
+        let dir =
+            std::env::temp_dir().join(format!("sagips_runck_sc_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        train_ck(4, "saturation", 2).save(&dir).unwrap();
+        let err = TrainCheckpoint::load_for_scenario(&dir, "quantile")
+            .unwrap_err()
+            .to_string();
+        // The error comes from Checkpoint::load_for_scenario and names
+        // both scenarios.
+        assert!(err.contains("saturation") && err.contains("quantile"), "{err}");
+        assert!(err.contains("refusing"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn train_checkpoint_prune_keeps_newest_and_clears_tmp() {
+        let dir =
+            std::env::temp_dir().join(format!("sagips_runck_pr_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        for e in [5u64, 15, 25, 35] {
+            train_ck(e, "quantile", 1).save(&dir).unwrap();
+        }
+        // A crashed writer's leftover temporary directory.
+        std::fs::create_dir_all(dir.join(".tmp_run_e0000000045_1")).unwrap();
+        let removed = TrainCheckpoint::prune(&dir, 2).unwrap();
+        assert_eq!(removed, 2);
+        let left = TrainCheckpoint::list(&dir).unwrap();
+        assert_eq!(left.len(), 2);
+        assert!(left[0].ends_with(TrainCheckpoint::dir_name(25)));
+        assert!(left[1].ends_with(TrainCheckpoint::dir_name(35)));
+        assert!(!dir.join(".tmp_run_e0000000045_1").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn incomplete_checkpoint_directories_are_invisible() {
+        // A run_e* directory without state.bin (e.g. a partially deleted
+        // checkpoint) must not be offered for resume.
+        let dir =
+            std::env::temp_dir().join(format!("sagips_runck_inc_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(dir.join("run_e0000000007")).unwrap();
+        assert!(TrainCheckpoint::list(&dir).unwrap().is_empty());
+        let err = TrainCheckpoint::load_for_scenario(&dir, "quantile")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no run checkpoints"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_state_file_is_rejected() {
+        let dir =
+            std::env::temp_dir().join(format!("sagips_runck_bad_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let p = train_ck(3, "quantile", 2).save(&dir).unwrap();
+        // Truncate the state file: load must fail cleanly.
+        let state = std::fs::read(p.join("state.bin")).unwrap();
+        std::fs::write(p.join("state.bin"), &state[..state.len() / 2]).unwrap();
+        assert!(TrainCheckpoint::load_for_scenario(&p, "quantile").is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

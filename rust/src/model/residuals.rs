@@ -1,10 +1,37 @@
 //! Normalized parameter residuals — eq (6), the paper's convergence
-//! metric.
+//! metric — for scenarios of **any parameter width**.
 //!
 //! `r̂_i = (p_i − p̂_i) / p_i`, where `p̂` is the generator's mean
 //! prediction over a fixed batch of noise vectors. The paper found this a
 //! far better convergence indicator than the GAN losses (the losses settle
 //! while the parameters are still off — Sec. VI).
+//!
+//! Nothing here assumes the proxy app's six parameters: the evaluator
+//! takes its width from the manifest's `true_params` (which the scenario
+//! registry sizes via `param_dim`), and the free functions operate on
+//! slices. A 10-parameter deconvolution run gets exactly the same analysis
+//! as the paper's 6-parameter quantile run.
+//!
+//! # Examples
+//!
+//! The pure helpers compose into a residual summary at any width — here a
+//! 4-parameter problem, no runtime required:
+//!
+//! ```
+//! use sagips::model::residuals::{mean_per_param, mean_abs, normalized_residuals};
+//!
+//! // Two predictions over a 4-parameter problem (flat (k = 2, p = 4)).
+//! let preds = [1.0f32, 2.0, 4.0, 0.5,
+//!              3.0,     2.0, 4.0, 0.5];
+//! let p_hat = mean_per_param(&preds, 2, 4);
+//! assert_eq!(p_hat, vec![2.0, 2.0, 4.0, 0.5]);
+//!
+//! let truth = [4.0f32, 2.0, 4.0, 0.5];
+//! let r = normalized_residuals(&truth, &p_hat);
+//! assert_eq!(r.len(), 4);
+//! assert_eq!(r[0], 0.5);            // off by 2 on a parameter of 4
+//! assert_eq!(mean_abs(&r), 0.125);  // only r0 is nonzero
+//! ```
 
 use crate::runtime::RuntimeHandle;
 use crate::util::error::Result;
@@ -17,41 +44,35 @@ pub struct Residuals {
     artifact: String,
     z: Vec<f32>,
     k: usize,
+    /// Parameter width of the scenario (`true_params.len()`).
+    p: usize,
     true_params: Vec<f32>,
 }
 
 impl Residuals {
     /// `seed` fixes the evaluation noise batch; all ranks of a run share
-    /// it.
-    ///
-    /// The residual summary is fixed-width (six parameters, like every
-    /// registered scenario); a future wider scenario needs this analysis
-    /// layer generalized first, so reject it loudly here.
+    /// it. The parameter width comes from the manifest's ground truth, so
+    /// any registered scenario — six parameters or sixty — is analyzed
+    /// the same way.
     pub fn new(handle: RuntimeHandle, artifact: &str, seed: u64) -> Result<Residuals> {
-        if handle.manifest().true_params.len() != 6 {
-            return Err(crate::util::error::Error::Runtime(format!(
-                "residual analysis supports 6-parameter scenarios, manifest \
-                 scenario '{}' has {}",
-                handle.manifest().scenario,
-                handle.manifest().true_params.len()
-            )));
-        }
         let spec = handle.manifest().artifact(artifact)?;
         let k = spec.outputs[0].shape[0];
         let latent = handle.manifest().latent_dim;
         let mut rng = Rng::with_stream(seed, 0xEE51D);
         let mut z = vec![0.0f32; k * latent];
         rng.fill_normal(&mut z);
+        let true_params = handle.manifest().true_params.clone();
         Ok(Residuals {
             artifact: artifact.to_string(),
             z,
             k,
-            true_params: handle.manifest().true_params.clone(),
+            p: true_params.len(),
+            true_params,
             handle,
         })
     }
 
-    /// Generator predictions over the fixed noise batch: (k, 6) flat.
+    /// Generator predictions over the fixed noise batch: (k, p) flat.
     /// Inputs are borrowed — no parameter or noise clones per evaluation.
     pub fn predict(&self, gen_params: &[f32]) -> Result<Vec<f32>> {
         let mut out = Vec::new();
@@ -64,14 +85,14 @@ impl Residuals {
             ))
     }
 
-    /// Mean prediction per parameter: p̂ (6,).
-    pub fn mean_prediction(&self, gen_params: &[f32]) -> Result<[f64; 6]> {
+    /// Mean prediction per parameter: p̂ (p,).
+    pub fn mean_prediction(&self, gen_params: &[f32]) -> Result<Vec<f64>> {
         let preds = self.predict(gen_params)?;
-        Ok(mean_per_param(&preds, self.k))
+        Ok(mean_per_param(&preds, self.k, self.p))
     }
 
-    /// Normalized residuals r̂ (6,) per eq (6).
-    pub fn residuals(&self, gen_params: &[f32]) -> Result<[f64; 6]> {
+    /// Normalized residuals r̂ (p,) per eq (6).
+    pub fn residuals(&self, gen_params: &[f32]) -> Result<Vec<f64>> {
         let p_hat = self.mean_prediction(gen_params)?;
         Ok(normalized_residuals(&self.true_params, &p_hat))
     }
@@ -80,13 +101,18 @@ impl Residuals {
     pub fn noise_batch(&self) -> usize {
         self.k
     }
+
+    /// Parameter width of the scenario under analysis.
+    pub fn param_dim(&self) -> usize {
+        self.p
+    }
 }
 
-/// Column means of a flat (k, 6) prediction matrix.
-pub fn mean_per_param(preds: &[f32], k: usize) -> [f64; 6] {
-    debug_assert_eq!(preds.len(), k * 6);
-    let mut m = [0.0f64; 6];
-    for row in preds.chunks(6) {
+/// Column means of a flat (k, p) prediction matrix.
+pub fn mean_per_param(preds: &[f32], k: usize, p: usize) -> Vec<f64> {
+    debug_assert_eq!(preds.len(), k * p);
+    let mut m = vec![0.0f64; p];
+    for row in preds.chunks(p) {
         for (mi, &v) in m.iter_mut().zip(row) {
             *mi += v as f64;
         }
@@ -97,19 +123,31 @@ pub fn mean_per_param(preds: &[f32], k: usize) -> [f64; 6] {
     m
 }
 
-/// eq (6): r̂_i = (p_i − p̂_i) / p_i.
-pub fn normalized_residuals(true_params: &[f32], p_hat: &[f64; 6]) -> [f64; 6] {
-    let mut r = [0.0f64; 6];
-    for i in 0..6 {
-        let p = true_params[i] as f64;
-        r[i] = (p - p_hat[i]) / p;
-    }
-    r
+/// eq (6): r̂_i = (p_i − p̂_i) / p_i, at whatever width the scenario has.
+pub fn normalized_residuals(true_params: &[f32], p_hat: &[f64]) -> Vec<f64> {
+    assert_eq!(
+        true_params.len(),
+        p_hat.len(),
+        "residual width mismatch: {} true params vs {} predictions",
+        true_params.len(),
+        p_hat.len()
+    );
+    true_params
+        .iter()
+        .zip(p_hat)
+        .map(|(&p, &hat)| {
+            let p = p as f64;
+            (p - hat) / p
+        })
+        .collect()
 }
 
-/// Mean |r̂| over the six parameters (the summary curve of Figs 15/16).
-pub fn mean_abs(r: &[f64; 6]) -> f64 {
-    r.iter().map(|x| x.abs()).sum::<f64>() / 6.0
+/// Mean |r̂| over the parameters (the summary curve of Figs 15/16).
+pub fn mean_abs(r: &[f64]) -> f64 {
+    if r.is_empty() {
+        return 0.0;
+    }
+    r.iter().map(|x| x.abs()).sum::<f64>() / r.len() as f64
 }
 
 #[cfg(test)]
@@ -119,7 +157,7 @@ mod tests {
     #[test]
     fn residuals_zero_at_truth() {
         let truth = [1.0f32, 0.5, 0.3, -0.5, 1.2, 0.4];
-        let p_hat = [1.0f64, 0.5, 0.3, -0.5, 1.2, 0.4];
+        let p_hat = vec![1.0f64, 0.5, 0.3, -0.5, 1.2, 0.4];
         // f32 truth vs f64 prediction: agreement to f32 precision.
         let r = normalized_residuals(&truth, &p_hat);
         assert!(r.iter().all(|x| x.abs() < 1e-6));
@@ -129,12 +167,12 @@ mod tests {
     #[test]
     fn residuals_are_normalized() {
         let truth = [2.0f32, 0.5, 0.3, -0.5, 1.2, 0.4];
-        let mut p_hat = [2.0f64, 0.5, 0.3, -0.5, 1.2, 0.4];
+        let mut p_hat = vec![2.0f64, 0.5, 0.3, -0.5, 1.2, 0.4];
         p_hat[0] = 1.0; // off by 1 on a parameter of value 2 -> r = 0.5
         let r = normalized_residuals(&truth, &p_hat);
         assert!((r[0] - 0.5).abs() < 1e-12);
         // negative parameter: sign handled by the division
-        let mut p_hat2 = p_hat;
+        let mut p_hat2 = p_hat.clone();
         p_hat2[0] = 2.0;
         p_hat2[3] = -1.0; // truth -0.5: r = (-0.5 - -1.0)/-0.5 = -1.0
         let r2 = normalized_residuals(&truth, &p_hat2);
@@ -147,7 +185,49 @@ mod tests {
             1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, //
             3.0, 4.0, 5.0, 6.0, 7.0, 8.0,
         ];
-        let m = mean_per_param(&preds, 2);
-        assert_eq!(m, [2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        let m = mean_per_param(&preds, 2, 6);
+        assert_eq!(m, vec![2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn widths_other_than_six_work_end_to_end() {
+        // A 4-parameter and a 10-parameter summary through the same
+        // helpers — no fixed-width assumption anywhere.
+        for p in [4usize, 10] {
+            let k = 3;
+            let preds: Vec<f32> = (0..k * p).map(|i| (i % p) as f32 + 1.0).collect();
+            let m = mean_per_param(&preds, k, p);
+            assert_eq!(m.len(), p);
+            for (j, mj) in m.iter().enumerate() {
+                assert!((mj - (j as f64 + 1.0)).abs() < 1e-9);
+            }
+            let truth: Vec<f32> = (0..p).map(|j| (j as f32 + 1.0) * 2.0).collect();
+            let r = normalized_residuals(&truth, &m);
+            assert_eq!(r.len(), p);
+            // Every prediction is half the truth: r = 0.5 everywhere.
+            assert!(r.iter().all(|x| (x - 0.5).abs() < 1e-9));
+            assert!((mean_abs(&r) - 0.5).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn width_mismatch_panics() {
+        normalized_residuals(&[1.0f32; 6], &[1.0f64; 5]);
+    }
+
+    #[test]
+    fn evaluator_width_follows_the_scenario() {
+        use crate::runtime::{Manifest, NativeRuntime};
+        for sc in crate::scenario::registry() {
+            let rt = NativeRuntime::new(Manifest::synthetic_for(sc.name()).unwrap());
+            let h = rt.handle();
+            let ev = Residuals::new(h.clone(), "gen_predict_small_k256", 7).unwrap();
+            assert_eq!(ev.param_dim(), sc.param_dim(), "{}", sc.name());
+            let n = h.manifest().model("small").unwrap().gen_param_count;
+            let r = ev.residuals(&vec![0.01f32; n]).unwrap();
+            assert_eq!(r.len(), sc.param_dim(), "{}", sc.name());
+            assert!(r.iter().all(|x| x.is_finite()), "{}", sc.name());
+        }
     }
 }

@@ -287,8 +287,9 @@ pub const TAB4_MODES: &[Mode] = &[
 ];
 
 /// Fig 13 + Table IV: per-mode ensembles of distributed runs; returns
-/// (mode, residual curve (t, mean, std), table row).
-pub type ConvergenceRow = (Mode, Vec<(f64, f64, f64)>, [(f64, f64); 6]);
+/// (mode, residual curve (t, mean, std), table row sized to the
+/// scenario's parameter count).
+pub type ConvergenceRow = (Mode, Vec<(f64, f64, f64)>, Vec<(f64, f64)>);
 
 pub fn fig13_tab4(handle: &RuntimeHandle, scale: &Scale) -> Result<Vec<ConvergenceRow>> {
     let mut out = Vec::new();

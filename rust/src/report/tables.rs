@@ -5,24 +5,23 @@ use crate::scenario::ScenarioInfo;
 use crate::tensor::stats;
 
 /// One method column of Table IV: per-parameter (mean, sigma) residuals,
-/// in the paper's 10^-3 units.
+/// in the paper's 10^-3 units. The row width follows the scenario's
+/// parameter count (6 for the paper's proxy app, whatever `param_dim`
+/// says elsewhere).
 #[derive(Clone, Debug)]
 pub struct Table4Row {
     pub method: String,
     /// (mean, sigma) * 10^3 per parameter.
-    pub residuals: [(f64, f64); 6],
+    pub residuals: Vec<(f64, f64)>,
 }
 
 impl Table4Row {
-    /// Build from raw residual (mean, sigma) pairs (natural units).
-    pub fn from_raw(method: &str, raw: &[(f64, f64); 6]) -> Table4Row {
-        let mut residuals = [(0.0, 0.0); 6];
-        for i in 0..6 {
-            residuals[i] = (raw[i].0 * 1e3, raw[i].1 * 1e3);
-        }
+    /// Build from raw residual (mean, sigma) pairs (natural units), at
+    /// whatever width the scenario has.
+    pub fn from_raw(method: &str, raw: &[(f64, f64)]) -> Table4Row {
         Table4Row {
             method: method.to_string(),
-            residuals,
+            residuals: raw.iter().map(|&(m, s)| (m * 1e3, s * 1e3)).collect(),
         }
     }
 
@@ -45,20 +44,24 @@ pub fn table4_paper_reference() -> Vec<Table4Row> {
     rows.iter()
         .map(|(m, r)| Table4Row {
             method: m.to_string(),
-            residuals: *r,
+            residuals: r.to_vec(),
         })
         .collect()
 }
 
-/// Render Table IV rows (measured + reference) in the paper's format.
+/// Render Table IV rows (measured + reference) in the paper's format. The
+/// column count follows the widest row, so mixed-width tables (e.g. a
+/// measured 10-parameter scenario next to the paper's 6-parameter
+/// reference) still line up.
 pub fn format_table4(rows: &[Table4Row]) -> String {
+    let width = rows.iter().map(|r| r.residuals.len()).max().unwrap_or(6);
     let mut s = String::new();
     s.push_str(&format!("{:<22}", "Residual [10^-3]"));
-    for i in 0..6 {
+    for i in 0..width {
         s.push_str(&format!(" {:>14}", format!("r{i}")));
     }
     s.push('\n');
-    s.push_str(&"-".repeat(22 + 6 * 15));
+    s.push_str(&"-".repeat(22 + width * 15));
     s.push('\n');
     for row in rows {
         s.push_str(&format!("{:<22}", row.method));
@@ -129,5 +132,18 @@ mod tests {
         assert!(t.contains("hvd (paper)"));
         assert!(t.contains("r5"));
         assert!(t.contains("±"));
+    }
+
+    #[test]
+    fn rows_follow_the_scenario_width() {
+        // A 10-parameter row renders 10 columns; mixed widths take the max.
+        let wide = Table4Row::from_raw("deconv", &vec![(0.001, 0.002); 10]);
+        assert_eq!(wide.residuals.len(), 10);
+        let t = format_table4(&[wide.clone()]);
+        assert!(t.contains("r9") && !t.contains("r10"), "{t}");
+        let mut mixed = table4_paper_reference();
+        mixed.push(wide);
+        let t = format_table4(&mixed);
+        assert!(t.contains("r9"), "{t}");
     }
 }

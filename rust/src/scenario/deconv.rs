@@ -1,9 +1,13 @@
 //! 1-D linear deconvolution: recover a source signal behind a dense
 //! Gaussian-blur operator from noisy point samples.
 //!
-//! The unknown is a source signal `p ∈ R⁶` (amplitudes on a uniform grid
-//! of kernel centers over `[0, 1]`). One event observes the blurred signal
-//! at a uniformly random position `t` with additive Gaussian noise:
+//! The unknown is a source signal `p ∈ R¹⁰` (amplitudes on a uniform grid
+//! of kernel centers over `[0, 1]`). The width is deliberately *not* the
+//! proxy app's six: this is the registered scenario that exercises the
+//! width-generalized analysis path (residuals, ensemble response, Table IV
+//! rows, model layouts) end to end on a non-6 parameter count. One event
+//! observes the blurred signal at a uniformly random position `t` with
+//! additive Gaussian noise:
 //!
 //! ```text
 //! y(t) = Σ_j  exp(-(t - c_j)² / 2w²) · p_j  +  σ · n,    n ~ N(0, 1)
@@ -32,8 +36,11 @@ use crate::model::reference::fit;
 pub struct Deconvolution;
 
 /// Source amplitudes on the kernel-center grid (all nonzero: eq (6)
-/// normalizes by them).
-const TRUE_PARAMS: [f32; 6] = [0.9, -0.6, 1.4, 0.8, -1.1, 0.5];
+/// normalizes by them). Ten of them — a finer grid than the proxy app's
+/// six parameters, and the registry's living proof that nothing assumes
+/// a fixed width.
+const TRUE_PARAMS: [f32; 10] =
+    [0.9, -0.6, 1.4, 0.8, -1.1, 0.5, 1.2, -0.4, 0.7, -0.9];
 /// Gaussian blur kernel width (in units of the `[0, 1]` position axis).
 const KERNEL_WIDTH: f32 = 0.12;
 /// Observation noise level σ.
@@ -153,16 +160,26 @@ mod tests {
         Deconvolution.forward_into(&params, &u, 1, 1, &mut out);
         assert_eq!(out.len(), 2);
         assert_eq!(out[0], 0.5);
-        let want: f32 = (0..6).map(|j| blur(0.5, j) * params[j]).sum();
+        let want: f32 = (0..TRUE_PARAMS.len())
+            .map(|j| blur(0.5, j) * params[j])
+            .sum();
         assert!((out[1] - want).abs() < 1e-5, "{} vs {want}", out[1]);
     }
 
     #[test]
     fn operator_row_is_dense() {
         // Every parameter moves the observation at a mid-grid position.
-        for j in 0..6 {
+        for j in 0..TRUE_PARAMS.len() {
             assert!(blur(0.5, j) > 0.0);
         }
+    }
+
+    #[test]
+    fn deconv_is_the_non_six_width_scenario() {
+        // The registry must keep at least one non-6-wide scenario so the
+        // width-generalized analysis path stays exercised end to end.
+        assert_eq!(Deconvolution.param_dim(), 10);
+        assert_eq!(Deconvolution.true_params().len(), 10);
     }
 
     #[test]

@@ -29,9 +29,13 @@
 //!
 //! | name         | operator                                   | shape     |
 //! |--------------|--------------------------------------------|-----------|
-//! | `quantile`   | the paper's proxy app: per-channel quantile `q(u; a, b, c) = a + bu + cu²` | pointwise, stochastic |
-//! | `deconv`     | 1-D deconvolution: Gaussian-blur row sampled at a random position, Gaussian noise | dense linear |
-//! | `saturation` | quantile signal observed through soft clipping `y = s·tanh(q/s)` | pointwise, nonlinear |
+//! | `quantile`   | the paper's proxy app: per-channel quantile `q(u; a, b, c) = a + bu + cu²` | P = 6, pointwise, stochastic |
+//! | `deconv`     | 1-D deconvolution: Gaussian-blur row sampled at a random position, Gaussian noise | P = 10, dense linear |
+//! | `saturation` | quantile signal observed through soft clipping `y = s·tanh(q/s)` | P = 6, pointwise, nonlinear |
+//!
+//! Parameter widths are free: the model layouts, the data plumbing and
+//! the residual/ensemble analysis all size themselves from `param_dim`
+//! (the 10-parameter `deconv` grid exercises the non-6 path end to end).
 //!
 //! # Examples
 //!
@@ -42,7 +46,7 @@
 //! use sagips::scenario;
 //!
 //! let sc = scenario::lookup("deconv").unwrap();
-//! assert_eq!(sc.param_dim(), 6);
+//! assert_eq!(sc.param_dim(), 10);
 //! assert_eq!(sc.event_dim(), 2);
 //!
 //! let err = scenario::lookup("warp-drive").unwrap_err().to_string();
@@ -213,12 +217,11 @@ mod tests {
                 "{}: zero true parameter breaks residual normalization",
                 sc.name()
             );
-            // The residual-analysis layer currently reports 6-parameter
-            // problems (see model::residuals); registered scenarios must
-            // fit it until that layer is generalized. Likewise the data
-            // layer's two-component event accessor (ToyDataset::event)
-            // assumes at least two floats per observation.
-            assert_eq!(sc.param_dim(), 6, "{}", sc.name());
+            // Any parameter width is allowed (the analysis layer sizes
+            // itself from param_dim); the data layer's two-component
+            // event accessor (ToyDataset::event) still assumes at least
+            // two floats per observation.
+            assert!(sc.param_dim() >= 1, "{}", sc.name());
             assert!(
                 sc.event_dim() >= 2,
                 "{}: ToyDataset::event reads two components per event",

@@ -289,6 +289,10 @@ fn native_backend_trains_every_registered_scenario_multi_rank() {
             "{} produced non-finite residuals",
             sc.name()
         );
+        // Width generality: the residual vector is the scenario's
+        // parameter count (10 for deconv, 6 for the others) — no fixed-6
+        // assumption anywhere in the analysis path.
+        assert_eq!(r.len(), sc.param_dim(), "{} residual width", sc.name());
         assert_eq!(
             run.total_events(),
             (4 * 8 * 8 * 25) as f64,

@@ -1,0 +1,202 @@
+//! Integration: fault-tolerant train-resume.
+//!
+//! The contract under test: training k epochs, checkpointing, and
+//! resuming for the remaining N − k epochs produces **bit-identical**
+//! final state (per-rank generator and discriminator parameters, final
+//! losses, final residuals) to an uninterrupted N-epoch run — per
+//! registered scenario, multi-rank, on the native backend (no artifacts,
+//! never skips). Plus the failure modes: cross-scenario restores refused
+//! through the scenario-identity guard, rank-count and epoch-budget
+//! mismatches rejected, retention pruning.
+
+use std::path::PathBuf;
+
+use sagips::config::{presets, BackendKind, Mode, RunConfig};
+use sagips::coordinator::launcher::run_training_from_config;
+use sagips::model::checkpoint::TrainCheckpoint;
+
+/// A small, fast native config (model "small", batch 8 x 25 events).
+fn native_cfg(scenario: &str, ranks: usize, epochs: usize) -> RunConfig {
+    let mut cfg = presets::ci_default();
+    cfg.backend = BackendKind::Native;
+    cfg.artifacts_dir = "/nonexistent/so-the-synthetic-manifest-is-used".into();
+    cfg.scenario = scenario.into();
+    cfg.model = "small".into();
+    cfg.mode = Mode::ArarArar;
+    cfg.ranks = ranks;
+    cfg.epochs = epochs;
+    cfg.batch = 8;
+    cfg.events = 25;
+    cfg.data_pool = 1600;
+    cfg.checkpoint_every = 6;
+    cfg.outer_freq = 5;
+    cfg
+}
+
+fn ckpt_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "sagips_resume_{tag}_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+#[test]
+fn resume_matches_uninterrupted_run_for_every_registered_scenario() {
+    const TOTAL: usize = 12;
+    const CUT: usize = 7;
+    for sc in sagips::scenario::registry() {
+        let dir = ckpt_dir(&format!("eq_{}", sc.name()));
+
+        // Uninterrupted reference: N epochs straight.
+        let full = run_training_from_config(&native_cfg(sc.name(), 4, TOTAL))
+            .unwrap_or_else(|e| panic!("{}: full run failed: {e}", sc.name()));
+
+        // Interrupted run: k epochs with a checkpoint at the cut...
+        let mut head = native_cfg(sc.name(), 4, CUT);
+        head.ckpt_every = CUT;
+        head.ckpt_dir = dir.display().to_string();
+        run_training_from_config(&head)
+            .unwrap_or_else(|e| panic!("{}: head run failed: {e}", sc.name()));
+        let written = TrainCheckpoint::latest(&dir).unwrap();
+        assert!(written.is_some(), "{}: no checkpoint written", sc.name());
+
+        // ...then resume for the remaining N − k.
+        let mut tail = native_cfg(sc.name(), 4, TOTAL);
+        tail.resume = Some(dir.display().to_string());
+        let resumed = run_training_from_config(&tail)
+            .unwrap_or_else(|e| panic!("{}: resume failed: {e}", sc.name()));
+        assert_eq!(resumed.resumed_from, Some(CUT as u64 - 1), "{}", sc.name());
+        // The resumed run trained exactly the remaining epochs.
+        assert_eq!(
+            resumed.metrics.mean_series("gen_loss").len(),
+            TOTAL - CUT,
+            "{}",
+            sc.name()
+        );
+
+        // Bit-identical final state on every rank.
+        for (rank, (a, b)) in full.states.iter().zip(&resumed.states).enumerate() {
+            assert_eq!(a.gen, b.gen, "{} rank {rank} generator", sc.name());
+            assert_eq!(a.disc, b.disc, "{} rank {rank} discriminator", sc.name());
+        }
+        // Matching final losses...
+        assert_eq!(
+            full.metrics.mean_of_last("gen_loss"),
+            resumed.metrics.mean_of_last("gen_loss"),
+            "{} final gen loss",
+            sc.name()
+        );
+        assert_eq!(
+            full.metrics.mean_of_last("disc_loss"),
+            resumed.metrics.mean_of_last("disc_loss"),
+            "{} final disc loss",
+            sc.name()
+        );
+        // ...and matching final residuals at the scenario's width.
+        let rf = full.final_residuals.unwrap();
+        let rr = resumed.final_residuals.unwrap();
+        assert_eq!(rf.len(), sc.param_dim(), "{}", sc.name());
+        assert_eq!(rf, rr, "{} final residuals", sc.name());
+        // The resumed residual-curve clock continues past the checkpoint
+        // (elapsed offset), keeping the trajectory monotone.
+        for w in resumed.residual_curve.windows(2) {
+            assert!(w[1].elapsed_s > w[0].elapsed_s, "{}", sc.name());
+        }
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn cross_scenario_resume_is_refused_through_the_identity_guard() {
+    let dir = ckpt_dir("guard");
+    let mut head = native_cfg("saturation", 2, 4);
+    head.ckpt_every = 4;
+    head.ckpt_dir = dir.display().to_string();
+    run_training_from_config(&head).unwrap();
+
+    let mut wrong = native_cfg("quantile", 2, 8);
+    wrong.resume = Some(dir.display().to_string());
+    let err = run_training_from_config(&wrong).unwrap_err().to_string();
+    assert!(
+        err.contains("saturation") && err.contains("quantile"),
+        "{err}"
+    );
+    assert!(err.contains("refusing"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn seed_mismatch_is_rejected() {
+    // A different seed would regenerate a different data pool under the
+    // restored parameters — refuse instead of silently diverging.
+    let dir = ckpt_dir("seed");
+    let mut head = native_cfg("quantile", 2, 4);
+    head.ckpt_every = 4;
+    head.ckpt_dir = dir.display().to_string();
+    run_training_from_config(&head).unwrap();
+
+    let mut wrong = native_cfg("quantile", 2, 8);
+    wrong.seed += 1;
+    wrong.resume = Some(dir.display().to_string());
+    let err = run_training_from_config(&wrong).unwrap_err().to_string();
+    assert!(err.contains("seed"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn rank_count_mismatch_is_rejected() {
+    let dir = ckpt_dir("ranks");
+    let mut head = native_cfg("quantile", 2, 4);
+    head.ckpt_every = 4;
+    head.ckpt_dir = dir.display().to_string();
+    run_training_from_config(&head).unwrap();
+
+    let mut wrong = native_cfg("quantile", 4, 8);
+    wrong.resume = Some(dir.display().to_string());
+    let err = run_training_from_config(&wrong).unwrap_err().to_string();
+    assert!(err.contains("ranks"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn exhausted_epoch_budget_is_rejected() {
+    let dir = ckpt_dir("budget");
+    let mut head = native_cfg("quantile", 1, 4);
+    head.mode = Mode::Ensemble;
+    head.ckpt_every = 4;
+    head.ckpt_dir = dir.display().to_string();
+    run_training_from_config(&head).unwrap();
+
+    // Same total epochs as the checkpoint: nothing left to train.
+    let mut wrong = native_cfg("quantile", 1, 4);
+    wrong.mode = Mode::Ensemble;
+    wrong.resume = Some(dir.display().to_string());
+    let err = run_training_from_config(&wrong).unwrap_err().to_string();
+    assert!(err.contains("epoch"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn retention_keeps_only_the_newest_checkpoints() {
+    let dir = ckpt_dir("keep");
+    let mut cfg = native_cfg("quantile", 2, 20);
+    cfg.ckpt_every = 5;
+    cfg.ckpt_keep = 2;
+    cfg.ckpt_dir = dir.display().to_string();
+    run_training_from_config(&cfg).unwrap();
+    // Cadence fires at epochs 4, 9, 14, 19; keep = 2 leaves the newest
+    // two.
+    let left = TrainCheckpoint::list(&dir).unwrap();
+    assert_eq!(left.len(), 2, "{left:?}");
+    assert!(left[0].ends_with(TrainCheckpoint::dir_name(14)));
+    assert!(left[1].ends_with(TrainCheckpoint::dir_name(19)));
+    // And the newest resumes cleanly.
+    let mut tail = native_cfg("quantile", 2, 24);
+    tail.resume = Some(dir.display().to_string());
+    let run = run_training_from_config(&tail).unwrap();
+    assert_eq!(run.resumed_from, Some(19));
+    std::fs::remove_dir_all(&dir).ok();
+}
