@@ -1,0 +1,137 @@
+//! Micro-bench: the bounded-staleness exchange window.
+//!
+//! Sweeps the window depth k ∈ {0, 1, 2, 4} over ranks × chunk policies
+//! on a real in-process ring (zero-latency links, spin compute standing
+//! in for `gan_step`): k = 0 is the paper's blocking exchange, k = 1 the
+//! classic overlap, deeper windows the Async-RED-style bounded-staleness
+//! pipeline. Reports per-epoch wall time and the hot-path comm the
+//! trainer actually blocked on (the acceptance metric: hot comm must
+//! shrink as k grows), and emits `BENCH_overlap.json` so the perf
+//! trajectory has an overlap row next to BENCH_runtime.json.
+
+use std::time::{Duration, Instant};
+
+use sagips::collective::engine::CollectiveEngine;
+use sagips::collective::ring::ConvArar;
+use sagips::collective::Collective;
+use sagips::comm::{LinkModel, LocalNetwork, Topology};
+use sagips::config::ChunkPolicy;
+use sagips::util::bench::fmt_dur;
+use sagips::util::json::{arr, num, obj, s, Value};
+
+/// Paper-sized gradient payload (~51k weight gradients).
+const GRAD: usize = 51_206;
+/// Spin-compute per epoch standing in for a gan_step execution.
+const COMPUTE_US: u64 = 300;
+
+fn fake_compute(us: u64) {
+    let t0 = Instant::now();
+    while t0.elapsed() < Duration::from_micros(us) {
+        std::hint::black_box((0..64).sum::<u64>());
+    }
+}
+
+/// One sweep point: n ranks, one chunk policy, window depth k. Returns
+/// rank 0's (per-epoch wall, per-epoch hot comm).
+fn bench_window(n: usize, policy: ChunkPolicy, k: usize, iters: usize) -> (Duration, Duration) {
+    let topo = Topology::new(n, 4);
+    let eps = LocalNetwork::build(&topo, LinkModel::zero());
+    let mut handles = Vec::new();
+    for ep in eps {
+        handles.push(std::thread::spawn(move || {
+            let rank = ep.rank;
+            let mut grads = vec![1.0f32; GRAD];
+            let mut hot = Duration::ZERO;
+            let total;
+            if k == 0 {
+                // Blocking: compute then reduce, serially.
+                let mut coll = ConvArar::with_policy(ep, policy);
+                let t0 = Instant::now();
+                for e in 0..iters {
+                    fake_compute(COMPUTE_US);
+                    let tc = Instant::now();
+                    coll.epoch_reduce(e as u64, &mut grads).unwrap();
+                    hot += tc.elapsed();
+                }
+                total = t0.elapsed();
+            } else {
+                // k-deep window: keep up to k reduces in flight, collect
+                // FIFO when full, drain at the end — the rank pipeline's
+                // schedule.
+                let inner = Box::new(ConvArar::with_policy(ep, policy));
+                let mut eng = CollectiveEngine::spawn_windowed(inner, k).unwrap();
+                let t0 = Instant::now();
+                for e in 0..iters {
+                    fake_compute(COMPUTE_US);
+                    let tc = Instant::now();
+                    while eng.in_flight() >= k {
+                        let (buf, _) = eng.wait_reduce().unwrap();
+                        grads.copy_from_slice(&buf);
+                    }
+                    eng.start_reduce(e as u64, grads.clone()).unwrap();
+                    hot += tc.elapsed();
+                }
+                let tc = Instant::now();
+                for (buf, _) in eng.drain().unwrap() {
+                    grads.copy_from_slice(&buf);
+                }
+                hot += tc.elapsed();
+                total = t0.elapsed();
+            }
+            if rank == 0 {
+                Some((total / iters as u32, hot / iters as u32))
+            } else {
+                None
+            }
+        }));
+    }
+    let mut out = None;
+    for h in handles {
+        if let Some(pair) = h.join().unwrap() {
+            out = Some(pair);
+        }
+    }
+    out.expect("rank 0 reports")
+}
+
+fn main() {
+    println!("\n=== overlap micro-bench — staleness sweep (51k f32, {COMPUTE_US}µs compute) ===");
+    println!(
+        "{:<40} {:>12} {:>14}",
+        "configuration", "epoch", "hot comm"
+    );
+    println!("{}", "-".repeat(68));
+
+    let mut rows: Vec<Value> = Vec::new();
+    for n in [4usize, 8] {
+        for policy in [ChunkPolicy::Unchunked, ChunkPolicy::Auto] {
+            for k in [0usize, 1, 2, 4] {
+                let iters = if n >= 8 { 80 } else { 150 };
+                let (epoch_d, hot_d) = bench_window(n, policy, k, iters);
+                println!(
+                    "{:<40} {:>12} {:>14}",
+                    format!("n={n} {} k={k}", policy.label()),
+                    fmt_dur(epoch_d),
+                    fmt_dur(hot_d)
+                );
+                rows.push(obj(vec![
+                    ("ranks", num(n as f64)),
+                    ("chunking", s(policy.label())),
+                    ("staleness", num(k as f64)),
+                    ("epoch_us", num(epoch_d.as_secs_f64() * 1e6)),
+                    ("hot_comm_us", num(hot_d.as_secs_f64() * 1e6)),
+                ]));
+            }
+            println!();
+        }
+    }
+
+    let doc = obj(vec![
+        ("bench", s("micro_overlap")),
+        ("grad_elems", num(GRAD as f64)),
+        ("compute_us", num(COMPUTE_US as f64)),
+        ("rows", arr(rows)),
+    ]);
+    std::fs::write("BENCH_overlap.json", doc.to_json_pretty()).expect("write BENCH_overlap.json");
+    println!("wrote BENCH_overlap.json");
+}

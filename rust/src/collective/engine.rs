@@ -1,15 +1,17 @@
-//! The overlap engine: a dedicated comm thread per rank.
+//! The overlap engine: a dedicated comm thread per rank with a bounded
+//! exchange window.
 //!
 //! [`CollectiveEngine`] wraps any [`Collective`] and moves it onto a
 //! worker thread, turning the trait's non-blocking `start_reduce` /
-//! `poll_reduce` / `wait_reduce` face into a genuinely asynchronous one:
-//! the trainer hands the packed gradient buffer over, runs the next
-//! epoch's bootstrap draw and `gan_step` while the worker drives the ring,
-//! and collects the averaged buffer one epoch later (one-epoch-stale
-//! gradients — the Async-RED-style relaxation the overlap mode of
-//! `coordinator::rank` is built on; see DESIGN.md §Collective engine).
+//! `poll_reduce` / `wait_reduce` / `drain` face into a genuinely
+//! asynchronous one: the trainer hands packed gradient buffers over, runs
+//! the next epochs' bootstrap draws and `gan_step`s while the worker
+//! drives the rings, and collects averaged buffers in FIFO order up to
+//! `window` epochs later (bounded-staleness gradients — the Async-RED
+//! style relaxation the staged pipeline of `coordinator::pipeline` is
+//! built on; see DESIGN.md §Collective engine).
 //!
-//! Timeline versus the paper's blocking loop:
+//! Timeline versus the paper's blocking loop (window 1):
 //!
 //! ```text
 //! blocking:  [draw|step|-- reduce --|opt] [draw|step|-- reduce --|opt]
@@ -17,10 +19,14 @@
 //!              reduce(e) ---^ runs under draw/step of e+1 ^--- reduce(e+1)
 //! ```
 //!
+//! A window of k allows k reduces to ride the worker's FIFO queue at
+//! once; `start_reduce` rejects submissions beyond the window, and
+//! [`Collective::drain`] settles everything outstanding at a barrier
+//! (quiescence — the run-checkpoint cadence relies on it).
+//!
 //! The engine still implements the blocking [`Collective::epoch_reduce`]
-//! (submit + wait), so it is a drop-in replacement anywhere a collective
-//! is expected. Exactly one reduce may be in flight at a time, matching
-//! the fallback [`ParkedReduce`] contract.
+//! (submit + wait, refused while other exchanges are in flight), so it is
+//! a drop-in replacement anywhere a collective is expected.
 
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::thread::JoinHandle;
@@ -43,14 +49,29 @@ pub struct CollectiveEngine {
     job_tx: Option<Sender<Job>>,
     done_rx: Receiver<Result<Done>>,
     worker: Option<JoinHandle<()>>,
-    in_flight: bool,
+    /// Jobs submitted to the worker and not yet received back. Results
+    /// received by `poll_reduce` move into `parked` (still uncollected).
+    submitted: usize,
+    /// Maximum exchanges in flight (submitted + parked) at once.
+    window: usize,
     inner_name: &'static str,
     parked: ParkedReduce,
 }
 
 impl CollectiveEngine {
-    /// Move `inner` onto a dedicated worker thread.
-    pub fn spawn(mut inner: Box<dyn Collective>) -> Result<CollectiveEngine> {
+    /// Move `inner` onto a dedicated worker thread with a single-slot
+    /// window (the classic one-epoch-stale overlap).
+    pub fn spawn(inner: Box<dyn Collective>) -> Result<CollectiveEngine> {
+        Self::spawn_windowed(inner, 1)
+    }
+
+    /// Move `inner` onto a dedicated worker thread accepting up to
+    /// `window` in-flight exchanges (>= 1). The worker processes jobs
+    /// FIFO, so results come back in submission order.
+    pub fn spawn_windowed(
+        mut inner: Box<dyn Collective>,
+        window: usize,
+    ) -> Result<CollectiveEngine> {
         let inner_name = inner.name();
         let (job_tx, job_rx) = channel::<Job>();
         let (done_tx, done_rx) = channel::<Result<Done>>();
@@ -71,14 +92,28 @@ impl CollectiveEngine {
             job_tx: Some(job_tx),
             done_rx,
             worker: Some(worker),
-            in_flight: false,
+            submitted: 0,
+            window: window.max(1),
             inner_name,
             parked: ParkedReduce::default(),
         })
     }
 
-    fn collect(&mut self, done: Result<Done>) -> Result<(Vec<f32>, CommStats)> {
-        self.in_flight = false;
+    /// The engine's window depth.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    fn outstanding(&self) -> usize {
+        self.submitted + self.parked.len()
+    }
+
+    fn recv_one(&mut self) -> Result<(Vec<f32>, CommStats)> {
+        let done = self
+            .done_rx
+            .recv()
+            .map_err(|_| Error::comm("collective engine worker died"))?;
+        self.submitted -= 1;
         let d = done?;
         Ok((d.buf, d.stats))
     }
@@ -86,8 +121,14 @@ impl CollectiveEngine {
 
 impl Collective for CollectiveEngine {
     fn epoch_reduce(&mut self, epoch: u64, grads: &mut [f32]) -> Result<CommStats> {
-        // Blocking facade: submit and wait. Keeps ordering with any prior
-        // overlap-mode traffic because the worker processes jobs FIFO.
+        // Blocking facade: submit and wait. Only valid with an empty
+        // window — with exchanges in flight the FIFO wait would hand back
+        // an *older* epoch's result.
+        if self.outstanding() > 0 {
+            return Err(Error::comm(
+                "epoch_reduce called with exchanges still in flight — drain() first",
+            ));
+        }
         self.start_reduce(epoch, grads.to_vec())?;
         let (buf, stats) = self.wait_reduce()?;
         grads.copy_from_slice(&buf);
@@ -103,9 +144,9 @@ impl Collective for CollectiveEngine {
     }
 
     fn start_reduce(&mut self, epoch: u64, buf: Vec<f32>) -> Result<()> {
-        if self.in_flight || self.parked.ready() {
+        if self.outstanding() >= self.window {
             return Err(Error::comm(
-                "start_reduce called with a reduce still in flight",
+                "start_reduce called with the exchange window full",
             ));
         }
         self.job_tx
@@ -113,7 +154,7 @@ impl Collective for CollectiveEngine {
             .expect("engine job channel present until drop")
             .send(Job { epoch, buf })
             .map_err(|_| Error::comm("collective engine worker died"))?;
-        self.in_flight = true;
+        self.submitted += 1;
         Ok(())
     }
 
@@ -121,13 +162,14 @@ impl Collective for CollectiveEngine {
         if self.parked.ready() {
             return Ok(true);
         }
-        if !self.in_flight {
+        if self.submitted == 0 {
             return Ok(false);
         }
         match self.done_rx.try_recv() {
             Ok(done) => {
-                let (buf, stats) = self.collect(done)?;
-                self.parked.park(buf, stats)?;
+                self.submitted -= 1;
+                let d = done?;
+                self.parked.park(d.buf, d.stats);
                 Ok(true)
             }
             Err(TryRecvError::Empty) => Ok(false),
@@ -138,33 +180,55 @@ impl Collective for CollectiveEngine {
     }
 
     fn wait_reduce(&mut self) -> Result<(Vec<f32>, CommStats)> {
+        // Parked results were received earliest, so they stay FIFO ahead
+        // of anything still on the worker.
         if self.parked.ready() {
             return self.parked.take();
         }
-        if !self.in_flight {
+        if self.submitted == 0 {
             return Err(Error::comm("wait_reduce called with no reduce in flight"));
         }
-        let done = self
-            .done_rx
-            .recv()
-            .map_err(|_| Error::comm("collective engine worker died"))?;
-        self.collect(done)
+        self.recv_one()
+    }
+
+    fn in_flight(&mut self) -> usize {
+        self.outstanding()
+    }
+
+    fn drain(&mut self) -> Result<Vec<(Vec<f32>, CommStats)>> {
+        let mut out = Vec::new();
+        while self.parked.ready() {
+            out.push(self.parked.take()?);
+        }
+        while self.submitted > 0 {
+            out.push(self.recv_one()?);
+        }
+        Ok(out)
     }
 }
 
 impl Drop for CollectiveEngine {
     fn drop(&mut self) {
         // Hang up the job channel so the worker's recv() errors and it
-        // exits. If a reduce is still in flight, give it a bounded grace
+        // exits. If reduces are still in flight, give them a bounded grace
         // period: a worker stuck in a ring whose peers died must not hang
         // process shutdown — leak the thread instead (it is detached and
         // holds no locks the trainer needs).
         drop(self.job_tx.take());
-        let finished = !self.in_flight
-            || !matches!(
-                self.done_rx.recv_timeout(std::time::Duration::from_secs(30)),
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout)
-            );
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        let mut finished = true;
+        while self.submitted > 0 {
+            let left = deadline.saturating_duration_since(std::time::Instant::now());
+            match self.done_rx.recv_timeout(left) {
+                Ok(_) => self.submitted -= 1,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    finished = false;
+                    break;
+                }
+                // Worker already exited; nothing more will arrive.
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
         if finished {
             if let Some(w) = self.worker.take() {
                 let _ = w.join();
@@ -191,8 +255,9 @@ mod tests {
     }
 
     #[test]
-    fn engine_rejects_double_start_and_empty_wait() {
+    fn engine_rejects_window_overflow_and_empty_wait() {
         let mut e = CollectiveEngine::spawn(Box::new(NullCollective::default())).unwrap();
+        assert_eq!(e.window(), 1);
         assert!(e.wait_reduce().is_err());
         e.start_reduce(0, vec![0.0]).unwrap();
         assert!(e.start_reduce(1, vec![0.0]).is_err());
@@ -200,6 +265,62 @@ mod tests {
         // After the wait the slot is free again.
         e.start_reduce(1, vec![0.0]).unwrap();
         e.wait_reduce().unwrap();
+    }
+
+    #[test]
+    fn windowed_engine_keeps_k_in_flight_and_returns_fifo() {
+        let mut e =
+            CollectiveEngine::spawn_windowed(Box::new(NullCollective::default()), 3).unwrap();
+        assert_eq!(e.window(), 3);
+        e.start_reduce(0, vec![0.5]).unwrap();
+        e.start_reduce(1, vec![1.5]).unwrap();
+        e.start_reduce(2, vec![2.5]).unwrap();
+        assert_eq!(e.in_flight(), 3);
+        // Fourth submission exceeds the window.
+        assert!(e.start_reduce(3, vec![3.5]).is_err());
+        // Results come back in submission order.
+        for want in [0.5f32, 1.5, 2.5] {
+            let (buf, _) = e.wait_reduce().unwrap();
+            assert_eq!(buf, vec![want]);
+        }
+        assert_eq!(e.in_flight(), 0);
+    }
+
+    #[test]
+    fn drain_settles_every_in_flight_exchange() {
+        let mut e =
+            CollectiveEngine::spawn_windowed(Box::new(NullCollective::default()), 4).unwrap();
+        for k in 0..4u64 {
+            e.start_reduce(k, vec![k as f32]).unwrap();
+        }
+        // Mix in a poll so part of the window sits parked before the
+        // drain — order must survive.
+        let t0 = std::time::Instant::now();
+        while !e.poll_reduce().unwrap() {
+            assert!(t0.elapsed().as_secs() < 5, "worker never completed");
+            std::thread::yield_now();
+        }
+        let settled = e.drain().unwrap();
+        assert_eq!(settled.len(), 4);
+        for (k, (buf, _)) in settled.iter().enumerate() {
+            assert_eq!(buf.as_slice(), [k as f32]);
+        }
+        assert_eq!(e.in_flight(), 0);
+        assert!(e.drain().unwrap().is_empty());
+        // The window is fully available again.
+        e.start_reduce(9, vec![9.0]).unwrap();
+        e.wait_reduce().unwrap();
+    }
+
+    #[test]
+    fn blocking_facade_refused_while_window_occupied() {
+        let mut e =
+            CollectiveEngine::spawn_windowed(Box::new(NullCollective::default()), 2).unwrap();
+        e.start_reduce(0, vec![1.0]).unwrap();
+        let mut grads = vec![2.0];
+        assert!(e.epoch_reduce(1, &mut grads).is_err());
+        e.drain().unwrap();
+        e.epoch_reduce(1, &mut grads).unwrap();
     }
 
     #[test]
@@ -250,6 +371,47 @@ mod tests {
             assert_eq!(applied.len(), 3);
             for (e, v) in applied.iter().enumerate() {
                 assert!((v - (1.5 + e as f32)).abs() < 1e-5, "epoch {e}: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn windowed_engines_pipeline_a_real_ring_two_deep() {
+        // A 2-deep window over a real ring: every rank keeps two epochs in
+        // flight and collects FIFO; results must equal the blocking ring's
+        // per-epoch averages.
+        let n = 3;
+        let epochs = 6u64;
+        let topo = Topology::new(n, 4);
+        let eps = LocalNetwork::build(&topo, LinkModel::zero());
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                let v = ep.rank as f32;
+                std::thread::spawn(move || {
+                    let mut e =
+                        CollectiveEngine::spawn_windowed(Box::new(ConvArar::new(ep)), 2).unwrap();
+                    let mut applied = Vec::new();
+                    for epoch in 0..epochs {
+                        while e.in_flight() >= 2 {
+                            let (buf, _) = e.wait_reduce().unwrap();
+                            applied.push(buf[0]);
+                        }
+                        e.start_reduce(epoch, vec![v + epoch as f32; 4]).unwrap();
+                    }
+                    for (buf, _) in e.drain().unwrap() {
+                        applied.push(buf[0]);
+                    }
+                    applied
+                })
+            })
+            .collect();
+        for h in handles {
+            let applied = h.join().unwrap();
+            assert_eq!(applied.len(), epochs as usize);
+            // mean of {0, 1, 2} = 1.0, shifted by the epoch index, FIFO.
+            for (e, v) in applied.iter().enumerate() {
+                assert!((v - (1.0 + e as f32)).abs() < 1e-5, "epoch {e}: {v}");
             }
         }
     }

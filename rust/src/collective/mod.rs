@@ -23,11 +23,13 @@
 //! * **Chunking** ([`crate::config::ChunkPolicy`]): the transport rings
 //!   can run a bandwidth-optimal reduce-scatter + all-gather schedule
 //!   ([`ring::chunked_ring_pass`]) instead of forwarding full tensors.
-//! * **Overlap** ([`engine::CollectiveEngine`] + the non-blocking
-//!   [`Collective::start_reduce`] / [`Collective::poll_reduce`] /
-//!   [`Collective::wait_reduce`] API): the trainer can run the exchange
-//!   concurrently with the next epoch's compute, applying one-epoch-stale
-//!   averaged gradients.
+//! * **Bounded-staleness overlap** ([`engine::CollectiveEngine`] + the
+//!   non-blocking [`Collective::start_reduce`] / [`Collective::poll_reduce`]
+//!   / [`Collective::wait_reduce`] / [`Collective::drain`] API): the
+//!   trainer can keep a bounded window of k exchanges in flight under
+//!   compute, applying averaged gradients at most k epochs stale (FIFO)
+//!   and settling the window with `drain()` wherever quiescence is
+//!   needed (run checkpoints, end of training).
 
 pub mod engine;
 pub mod grouped;
@@ -58,6 +60,13 @@ pub struct CommStats {
     pub timeouts: u64,
     /// Gradient contributions averaged into the buffer (incl. own).
     pub contributions: usize,
+    /// Sum over applied averaged gradients of their staleness — the
+    /// epochs between an exchange's start and its application. Filled by
+    /// the rank pipeline (the collectives don't know when their result is
+    /// applied); 0 for the blocking path.
+    pub staleness_sum: u64,
+    /// Averaged-gradient applications accounted in `staleness_sum`.
+    pub applies: u64,
 }
 
 impl CommStats {
@@ -68,40 +77,57 @@ impl CommStats {
         self.stale_reads += other.stale_reads;
         self.timeouts += other.timeouts;
         self.contributions += other.contributions;
+        self.staleness_sum += other.staleness_sum;
+        self.applies += other.applies;
+    }
+
+    /// Mean applied-gradient staleness in epochs (0.0 when nothing was
+    /// applied — or for a purely blocking run).
+    pub fn mean_staleness(&self) -> f64 {
+        if self.applies == 0 {
+            0.0
+        } else {
+            self.staleness_sum as f64 / self.applies as f64
+        }
     }
 }
 
-/// Completed-reduce slot backing the default (synchronous-fallback)
+/// Completed-reduce FIFO backing the default (synchronous-fallback)
 /// non-blocking API: collectives without a comm worker run the blocking
 /// reduce inside [`Collective::start_reduce`] and park the result here
-/// until [`Collective::wait_reduce`] collects it.
+/// until [`Collective::wait_reduce`] collects it. The queue preserves
+/// submission order, so a k-deep exchange window collects its results
+/// FIFO whether or not a comm thread is involved.
 #[derive(Default)]
 pub struct ParkedReduce {
-    done: Option<(Vec<f32>, CommStats)>,
+    done: std::collections::VecDeque<(Vec<f32>, CommStats)>,
 }
 
 impl ParkedReduce {
-    /// Park a finished reduce. Errors if one is already waiting (the
-    /// engine contract allows a single reduce in flight per collective).
-    pub fn park(&mut self, buf: Vec<f32>, stats: CommStats) -> Result<()> {
-        if self.done.is_some() {
-            return Err(Error::comm(
-                "start_reduce called with a reduce still in flight",
-            ));
-        }
-        self.done = Some((buf, stats));
-        Ok(())
+    /// Park a finished reduce behind any already waiting (FIFO).
+    pub fn park(&mut self, buf: Vec<f32>, stats: CommStats) {
+        self.done.push_back((buf, stats));
     }
 
     /// Whether a parked result is waiting.
     pub fn ready(&self) -> bool {
-        self.done.is_some()
+        !self.done.is_empty()
     }
 
-    /// Collect the parked result.
+    /// Number of parked results.
+    pub fn len(&self) -> usize {
+        self.done.len()
+    }
+
+    /// Whether the queue is empty.
+    pub fn is_empty(&self) -> bool {
+        self.done.is_empty()
+    }
+
+    /// Collect the oldest parked result.
     pub fn take(&mut self) -> Result<(Vec<f32>, CommStats)> {
         self.done
-            .take()
+            .pop_front()
             .ok_or_else(|| Error::comm("wait_reduce called with no reduce in flight"))
     }
 }
@@ -110,11 +136,18 @@ impl ParkedReduce {
 ///
 /// The blocking entry point is [`Collective::epoch_reduce`]; the
 /// `start_reduce` / `poll_reduce` / `wait_reduce` triple is the
-/// non-blocking face of the same operation. The default implementations
-/// execute the reduce eagerly (blocking inside `start_reduce`), so every
-/// collective is overlap-API-compatible; [`engine::CollectiveEngine`]
-/// overrides them to run the reduce on a dedicated comm thread, which is
-/// what actually hides the exchange behind compute.
+/// non-blocking face of the same operation, and several exchanges may be
+/// in flight at once — results always come back in submission (FIFO)
+/// order, which is what the bounded-staleness rank pipeline builds on.
+/// The default implementations execute the reduce eagerly (blocking
+/// inside `start_reduce`), so every collective is overlap-API-compatible;
+/// [`engine::CollectiveEngine`] overrides them to run the reduces on a
+/// dedicated comm thread, which is what actually hides the exchange
+/// behind compute.
+///
+/// [`Collective::drain`] is the quiescence operation: it settles every
+/// in-flight exchange at once, so callers (the run-checkpoint cadence,
+/// end of training) can reach a state with nothing outstanding.
 pub trait Collective: Send {
     /// Average `grads` (the packed transfer buffer) with peers in place.
     fn epoch_reduce(&mut self, epoch: u64, grads: &mut [f32]) -> Result<CommStats>;
@@ -122,25 +155,44 @@ pub trait Collective: Send {
     /// Human-readable mode name.
     fn name(&self) -> &'static str;
 
-    /// Storage slot used by the default non-blocking implementation.
+    /// Storage queue used by the default non-blocking implementation.
     fn parked(&mut self) -> &mut ParkedReduce;
 
-    /// Begin reducing `buf` (ownership moves to the collective). At most
-    /// one reduce may be in flight per collective.
+    /// Begin reducing `buf` (ownership moves to the collective). Callers
+    /// bound how many reduces they keep in flight; implementations with a
+    /// fixed window reject submissions beyond it.
     fn start_reduce(&mut self, epoch: u64, mut buf: Vec<f32>) -> Result<()> {
         let stats = self.epoch_reduce(epoch, &mut buf)?;
-        self.parked().park(buf, stats)
+        self.parked().park(buf, stats);
+        Ok(())
     }
 
-    /// Whether the in-flight reduce has completed (never blocks).
+    /// Whether the *oldest* in-flight reduce has completed (never blocks).
     fn poll_reduce(&mut self) -> Result<bool> {
         Ok(self.parked().ready())
     }
 
-    /// Block until the in-flight reduce completes; returns the averaged
-    /// buffer and its stats.
+    /// Block until the oldest in-flight reduce completes; returns the
+    /// averaged buffer and its stats (FIFO order).
     fn wait_reduce(&mut self) -> Result<(Vec<f32>, CommStats)> {
         self.parked().take()
+    }
+
+    /// Exchanges started but not yet collected.
+    fn in_flight(&mut self) -> usize {
+        self.parked().len()
+    }
+
+    /// Quiescence: settle **every** in-flight exchange, returning the
+    /// averaged buffers and stats in submission (FIFO) order. After a
+    /// drain nothing is outstanding — the caller's state can be
+    /// checkpointed as fully settled.
+    fn drain(&mut self) -> Result<Vec<(Vec<f32>, CommStats)>> {
+        let mut out = Vec::new();
+        while self.in_flight() > 0 {
+            out.push(self.wait_reduce()?);
+        }
+        Ok(out)
     }
 }
 
@@ -338,17 +390,42 @@ mod tests {
     }
 
     #[test]
-    fn parked_reduce_fallback_roundtrip() {
+    fn parked_reduce_fallback_fifo_roundtrip() {
         let mut c = NullCollective::default();
         assert!(c.wait_reduce().is_err()); // nothing in flight
         c.start_reduce(0, vec![2.0, 4.0]).unwrap();
         assert!(c.poll_reduce().unwrap());
-        // A second start while one is parked violates the engine contract.
-        assert!(c.start_reduce(1, vec![0.0]).is_err());
+        // The eager fallback queues a second start FIFO behind the first.
+        c.start_reduce(1, vec![8.0]).unwrap();
+        assert_eq!(c.in_flight(), 2);
         let (buf, s) = c.wait_reduce().unwrap();
-        assert_eq!(buf, vec![2.0, 4.0]);
+        assert_eq!(buf, vec![2.0, 4.0]); // oldest first
         assert_eq!(s.contributions, 1);
+        // drain() settles whatever remains, in order.
+        let rest = c.drain().unwrap();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].0, vec![8.0]);
+        assert_eq!(c.in_flight(), 0);
         assert!(!c.poll_reduce().unwrap());
+    }
+
+    #[test]
+    fn comm_stats_staleness_accounting_merges_and_averages() {
+        let mut a = CommStats {
+            staleness_sum: 3,
+            applies: 2,
+            ..Default::default()
+        };
+        let b = CommStats {
+            staleness_sum: 1,
+            applies: 2,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.staleness_sum, 4);
+        assert_eq!(a.applies, 4);
+        assert!((a.mean_staleness() - 1.0).abs() < 1e-12);
+        assert_eq!(CommStats::default().mean_staleness(), 0.0);
     }
 
     #[test]

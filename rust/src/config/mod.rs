@@ -204,11 +204,23 @@ pub struct RunConfig {
     pub fusion_bucket: usize,
     /// Ring chunking policy (paper: unchunked).
     pub chunking: ChunkPolicy,
-    /// Overlap gradient exchange with the next epoch's bootstrap draw and
-    /// `gan_step` via the collective engine's non-blocking API. Generator
-    /// updates then use one-epoch-stale averaged gradients (paper: false —
-    /// the trainer blocks on the exchange every epoch).
-    pub overlap_comm: bool,
+    /// Bounded gradient-exchange staleness — the depth of the in-flight
+    /// exchange window (paper: 0).
+    ///
+    /// * `0` — paper-faithful blocking exchange: the generator updates
+    ///   with fresh averaged gradients every epoch.
+    /// * `1` — classic overlap: epoch e's exchange runs under epoch
+    ///   e+1's bootstrap draw + `gan_step` (one-epoch-stale averaged
+    ///   gradients, Async-RED style).
+    /// * `k > 1` — a bounded window of up to k in-flight exchanges
+    ///   applied in FIFO order; applied gradients are at most k epochs
+    ///   stale.
+    ///
+    /// The rank pipeline drains (settles) the window at the
+    /// run-checkpoint cadence, so checkpointing/resume compose with any
+    /// staleness. The deprecated JSON key `overlap_comm` / CLI flag
+    /// `--overlap` parse as staleness 1.
+    pub staleness: usize,
     /// Analysis-checkpoint cadence in epochs (paper: every 5k, 21
     /// checkpoints) — in-memory generator snapshots for the residual
     /// curves, distinct from the resumable run checkpoints below.
@@ -287,10 +299,22 @@ impl RunConfig {
                 }
                 "fusion_bucket" => cfg.fusion_bucket = as_usize(val, k)?,
                 "chunking" => cfg.chunking = ChunkPolicy::parse_value(val)?,
+                "staleness" => cfg.staleness = as_usize(val, k)?,
+                // Deprecated alias kept so pre-staleness configs load: the
+                // old bool maps onto the window depth it used to select.
+                // (Keys parse in sorted order, so an explicit "staleness"
+                // key always wins over the alias.)
                 "overlap_comm" => {
-                    cfg.overlap_comm = val
+                    let on = val
                         .as_bool()
-                        .ok_or_else(|| Error::config("overlap_comm must be a bool"))?
+                        .ok_or_else(|| Error::config("overlap_comm must be a bool"))?;
+                    crate::log_warn!(
+                        "config key 'overlap_comm' is deprecated — use \
+                         \"staleness\" (0 = blocking, 1 = overlap, k = \
+                         k-deep window); treating as staleness {}",
+                        usize::from(on)
+                    );
+                    cfg.staleness = usize::from(on);
                 }
                 "checkpoint_every" => cfg.checkpoint_every = as_usize(val, k)?,
                 "ckpt_every" => cfg.ckpt_every = as_usize(val, k)?,
@@ -379,18 +403,12 @@ impl RunConfig {
         if matches!(&self.resume, Some(p) if p.is_empty()) {
             return Err(Error::config("resume needs a checkpoint path"));
         }
-        // Run checkpoints capture state at a clean epoch boundary; the
-        // overlap pipeline always has a one-epoch-stale exchange in flight
-        // there, which no boundary snapshot can represent. Refuse the
-        // combination rather than writing checkpoints that silently
-        // diverge on resume.
-        if self.overlap_comm && (self.ckpt_every > 0 || self.resume.is_some()) {
-            return Err(Error::config(
-                "run checkpointing/resume requires blocking gradient \
-                 exchange (disable overlap_comm): the in-flight one-epoch-\
-                 stale exchange cannot be captured at an epoch boundary",
-            ));
-        }
+        // Run checkpointing composes with any staleness: the rank
+        // pipeline drains its exchange window to quiescence at the
+        // checkpoint cadence, so every run checkpoint captures a fully
+        // settled state regardless of how many exchanges overlap
+        // mid-epoch. (The historical overlap_comm × ckpt_every refusal is
+        // gone.)
         Ok(())
     }
 
@@ -522,7 +540,7 @@ mod tests {
     fn defaults_are_paper_faithful_blocking_unchunked() {
         let c = RunConfig::default();
         assert_eq!(c.chunking, ChunkPolicy::Unchunked);
-        assert!(!c.overlap_comm);
+        assert_eq!(c.staleness, 0);
     }
 
     #[test]
@@ -547,14 +565,30 @@ mod tests {
     #[test]
     fn from_json_reads_engine_knobs() {
         let c = RunConfig::from_json(
-            r#"{"chunking": "auto", "overlap_comm": true}"#,
+            r#"{"chunking": "auto", "staleness": 2}"#,
         )
         .unwrap();
         assert_eq!(c.chunking, ChunkPolicy::Auto);
-        assert!(c.overlap_comm);
+        assert_eq!(c.staleness, 2);
         let c = RunConfig::from_json(r#"{"chunking": 1024}"#).unwrap();
         assert_eq!(c.chunking, ChunkPolicy::MaxElems(1024));
         assert!(RunConfig::from_json(r#"{"chunking": "huh"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"staleness": "deep"}"#).is_err());
+    }
+
+    #[test]
+    fn overlap_comm_parses_as_deprecated_staleness_alias() {
+        // Legacy configs keep working: the bool maps onto the window
+        // depth it used to select.
+        let c = RunConfig::from_json(r#"{"overlap_comm": true}"#).unwrap();
+        assert_eq!(c.staleness, 1);
+        let c = RunConfig::from_json(r#"{"overlap_comm": false}"#).unwrap();
+        assert_eq!(c.staleness, 0);
+        // An explicit staleness key wins over the alias (keys parse in
+        // sorted order; "overlap_comm" < "staleness").
+        let c = RunConfig::from_json(r#"{"overlap_comm": true, "staleness": 4}"#).unwrap();
+        assert_eq!(c.staleness, 4);
+        assert!(RunConfig::from_json(r#"{"overlap_comm": 3}"#).is_err());
     }
 
     #[test]
@@ -604,20 +638,19 @@ mod tests {
     }
 
     #[test]
-    fn checkpointing_refuses_the_overlap_pipeline() {
-        let mut c = RunConfig::default();
-        c.overlap_comm = true;
-        c.ckpt_every = 10;
-        let err = c.validate().unwrap_err().to_string();
-        assert!(err.contains("overlap_comm"), "{err}");
-        let mut c = RunConfig::default();
-        c.overlap_comm = true;
-        c.resume = Some("ckpts".into());
-        assert!(c.validate().is_err());
-        // Blocking runs accept both.
-        let mut c = RunConfig::default();
-        c.ckpt_every = 10;
-        c.validate().unwrap();
+    fn checkpointing_composes_with_any_staleness() {
+        // The historical overlap × checkpoint refusal is lifted: the
+        // pipeline drains to quiescence at the cadence instead.
+        for k in [0usize, 1, 2, 4] {
+            let mut c = RunConfig::default();
+            c.staleness = k;
+            c.ckpt_every = 10;
+            c.validate().unwrap();
+            let mut c = RunConfig::default();
+            c.staleness = k;
+            c.resume = Some("ckpts".into());
+            c.validate().unwrap();
+        }
     }
 
     #[test]

@@ -30,7 +30,7 @@ pub fn paper_table3() -> RunConfig {
         include_bias: false,
         fusion_bucket: 0,
         chunking: ChunkPolicy::Unchunked,
-        overlap_comm: false,
+        staleness: 0,
         checkpoint_every: 5000,
         ckpt_every: 0,
         ckpt_dir: "checkpoints".into(),
@@ -67,7 +67,7 @@ pub fn ci_default() -> RunConfig {
         include_bias: false,
         fusion_bucket: 0,
         chunking: ChunkPolicy::Unchunked,
-        overlap_comm: false,
+        staleness: 0,
         checkpoint_every: 25,
         ckpt_every: 0,
         ckpt_dir: "checkpoints".into(),
@@ -94,11 +94,12 @@ pub fn weak_scaling(base: &RunConfig, ranks: usize) -> RunConfig {
 
 /// Throughput preset: the same run with the collective engine's two
 /// beyond-the-paper capabilities enabled — chunked (reduce-scatter +
-/// all-gather) rings and overlapped (one-epoch-stale) gradient exchange.
+/// all-gather) rings and overlapped (one-epoch-stale, `staleness: 1`)
+/// gradient exchange.
 pub fn throughput(base: &RunConfig) -> RunConfig {
     let mut c = base.clone();
     c.chunking = ChunkPolicy::Auto;
-    c.overlap_comm = true;
+    c.staleness = 1;
     c
 }
 
@@ -137,7 +138,7 @@ mod tests {
         let base = ci_default();
         let t = throughput(&base);
         assert_eq!(t.chunking, ChunkPolicy::Auto);
-        assert!(t.overlap_comm);
+        assert_eq!(t.staleness, 1);
         // Everything else untouched — same Table III semantics.
         assert_eq!(t.mode, base.mode);
         assert_eq!(t.epochs, base.epochs);

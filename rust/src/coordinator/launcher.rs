@@ -102,9 +102,12 @@ pub fn run_training_with_links(
     let topo = Topology::new(cfg.ranks, cfg.gpus_per_node);
     // RMA windows sized for one epoch of ring steps per Sec. IV-B3
     // (chunked schedules run 2·(g-1) steps, so they get double depth).
+    // A k-deep staleness window lets the comm worker run up to k epochs
+    // ahead of a slow peer, so the region scales with the window depth to
+    // keep deposits from overwriting undelivered slots.
     let region = RmaRegion::with_capacity(
         cfg.ranks,
-        collective::rma_window_depth(cfg.gpus_per_node, cfg.chunking),
+        collective::rma_window_depth(cfg.gpus_per_node, cfg.chunking) * cfg.staleness.max(1),
     );
     let endpoints = LocalNetwork::build(&topo, link_model);
     let collectives = collective::build_with_policy(
@@ -115,19 +118,20 @@ pub fn run_training_with_links(
         &region,
         cfg.chunking,
     )?;
-    // Overlap mode: move every rank's collective onto a dedicated comm
-    // thread so run_rank's start_reduce/wait_reduce calls genuinely
-    // overlap the exchange with the next epoch's compute. The Horovod
-    // baseline is exempt — its defining property is the globally
-    // synchronous blocking all-reduce, and the simulator models it that
-    // way; hiding it behind a comm thread would silently change the
-    // baseline being compared against.
+    // Staleness >= 1: move every rank's collective onto a dedicated comm
+    // thread with a window sized to the configured staleness, so the rank
+    // pipeline's start_reduce/wait_reduce/drain calls genuinely overlap
+    // up to k exchanges with later epochs' compute. The Horovod baseline
+    // is exempt — its defining property is the globally synchronous
+    // blocking all-reduce, and the simulator models it that way; hiding
+    // it behind a comm thread would silently change the baseline being
+    // compared against.
     let collectives: Vec<Box<dyn collective::Collective>> =
-        if cfg.overlap_comm && cfg.mode != Mode::Horovod {
+        if cfg.staleness >= 1 && cfg.mode != Mode::Horovod {
             collectives
                 .into_iter()
                 .map(|c| {
-                    collective::engine::CollectiveEngine::spawn(c)
+                    collective::engine::CollectiveEngine::spawn_windowed(c, cfg.staleness)
                         .map(|e| Box::new(e) as Box<dyn collective::Collective>)
                 })
                 .collect::<Result<_>>()?
@@ -177,16 +181,16 @@ pub fn run_training_with_links(
         None
     };
 
-    // Horovod is exempt from the engine wrap above; make the rank loop
-    // blocking too, so its staleness semantics and comm_s/comm_hidden_s
-    // accounting match the collective it actually runs on (otherwise the
-    // eager start_reduce fallback would count the full blocking reduce as
-    // hot comm *and* report it again as hidden, with one-epoch staleness
-    // and no real overlap).
+    // Horovod is exempt from the engine wrap above; make the rank
+    // pipeline blocking too, so its staleness semantics and
+    // comm_s/comm_hidden_s accounting match the collective it actually
+    // runs on (otherwise the eager start_reduce fallback would count the
+    // full blocking reduce as hot comm *and* report it again as hidden,
+    // with nonzero staleness and no real overlap).
     let rank_cfg = {
         let mut c = cfg.clone();
         if c.mode == Mode::Horovod {
-            c.overlap_comm = false;
+            c.staleness = 0;
         }
         c
     };

@@ -2,9 +2,10 @@
 //!
 //! * [`offload`] — gradient off-/on-loading around the collective
 //!   (Sec. IV-B6), fused through the weight-only `FusionPlan`.
-//! * [`rank`] — the per-rank training loop: bootstrap draw -> `gan_step`
-//!   artifact -> local discriminator update -> gradient off-load ->
-//!   collective exchange -> on-load -> generator update -> checkpoints.
+//! * [`pipeline`] — the staged per-rank training pipeline
+//!   (bootstrap-draw → gan_step → offload → exchange → apply → update)
+//!   with a bounded-staleness exchange window and drainable quiescence.
+//! * [`rank`] — the per-rank thread entry point driving the pipeline.
 //! * [`launcher`] — builds the topology/transports/windows, spawns one
 //!   thread per rank, joins them, and runs the post-training residual
 //!   analysis over the recorded checkpoints (the paper's Sec. VI-C2
@@ -16,10 +17,12 @@
 
 pub mod launcher;
 pub mod offload;
+pub mod pipeline;
 pub mod rank;
 pub mod resume;
 
 pub use launcher::{run_training, RunResult};
 pub use offload::GradOffloader;
+pub use pipeline::RankPipeline;
 pub use rank::RankOutcome;
 pub use resume::{RankResume, RunCheckpointer};

@@ -20,16 +20,18 @@ use crate::util::error::Result;
 ///   [`GradOffloader::onload`] for the blocking loop, and
 /// * the owned pair [`GradOffloader::pack_owned`] /
 ///   [`GradOffloader::onload_from`] + [`GradOffloader::recycle`] for the
-///   overlap pipeline, which double-buffers: one packed buffer rides the
-///   collective engine's comm thread while the next epoch packs into a
-///   recycled spare, so overlapping epochs never share storage and the
-///   steady-state hot path still performs no allocation.
+///   overlap pipeline, which multi-buffers: up to `spare_cap` packed
+///   buffers ride the collective engine's comm thread (one per in-flight
+///   exchange of a k-deep staleness window) while the next epoch packs
+///   into a recycled spare, so overlapping epochs never share storage and
+///   the steady-state hot path still performs no allocation.
 pub struct GradOffloader {
     plan: FusionPlan,
     staging: Vec<f32>,
-    /// Recycled owned transfer buffers for the overlap pipeline (at most
-    /// two are ever live: in-flight + packing).
+    /// Recycled owned transfer buffers for the overlap pipeline.
     spares: Vec<Vec<f32>>,
+    /// Spare-pool bound: the window depth plus one packing buffer.
+    spare_cap: usize,
     /// Total bytes staged (both directions), for the §Perf accounting.
     pub bytes_staged: u64,
 }
@@ -41,8 +43,17 @@ impl GradOffloader {
             plan,
             staging: Vec::with_capacity(cap),
             spares: Vec::new(),
+            spare_cap: 2,
             bytes_staged: 0,
         }
+    }
+
+    /// Size the recycled-buffer pool for a k-deep exchange window (k
+    /// in-flight buffers + 1 being packed). The default pool of 2 covers
+    /// the classic one-epoch-stale overlap.
+    pub fn with_spare_cap(mut self, cap: usize) -> GradOffloader {
+        self.spare_cap = cap.max(1);
+        self
     }
 
     /// Off-load: pack the transferable slices of `grads` into the staging
@@ -85,7 +96,7 @@ impl GradOffloader {
 
     /// Return a buffer obtained from `wait_reduce` to the spare pool.
     pub fn recycle(&mut self, buf: Vec<f32>) {
-        if self.spares.len() < 2 {
+        if self.spares.len() < self.spare_cap {
             self.spares.push(buf);
         }
     }
@@ -165,6 +176,19 @@ mod tests {
         assert_eq!(c.len(), 10);
         off.recycle(b);
         off.recycle(c);
+    }
+
+    #[test]
+    fn spare_pool_sized_for_window_depth() {
+        let mut off = GradOffloader::new(plan_weights_only()).with_spare_cap(4);
+        let grads = vec![1.0f32; 13];
+        // A 3-deep window keeps 3 buffers in flight + 1 packing; all four
+        // must fit back in the pool (a 5th is dropped).
+        let bufs: Vec<Vec<f32>> = (0..5).map(|_| off.pack_owned(&grads).unwrap()).collect();
+        for b in bufs {
+            off.recycle(b);
+        }
+        assert_eq!(off.spares.len(), 4);
     }
 
     #[test]

@@ -1,0 +1,461 @@
+//! The staged per-rank training pipeline.
+//!
+//! [`RankPipeline`] decomposes one rank's epoch into the six stages of
+//! the SAGIPS hot path —
+//!
+//! ```text
+//! bootstrap-draw → gan_step → offload → exchange → apply → update
+//! ```
+//!
+//! — and composes them under a single knob, the `staleness` field of
+//! [`crate::config::RunConfig`]:
+//!
+//! * `staleness: 0` — paper-faithful blocking: offload, exchange
+//!   (`epoch_reduce`), apply and update all run inside the same epoch,
+//!   so the generator sees fresh averaged gradients.
+//! * `staleness: 1` — classic overlap: epoch e's exchange rides the
+//!   collective engine's comm thread under epoch e+1's draw + `gan_step`
+//!   and is applied there (one-epoch-stale averaged gradients).
+//! * `staleness: k > 1` — a bounded window of up to k in-flight
+//!   exchanges. Each epoch starts its exchange after the `gan_step`; the
+//!   oldest exchange is collected and applied (strict FIFO) only once
+//!   the window is full, so applied gradients are at most k epochs stale
+//!   — Async-RED-style *bounded* block asynchrony, and deterministic
+//!   (the apply schedule depends only on the window depth, never on
+//!   comm-thread timing).
+//!
+//! **Quiescence.** [`RankPipeline::drain`] settles the window: every
+//! in-flight exchange is collected through [`Collective::drain`] and its
+//! averaged gradients applied in FIFO order, leaving nothing
+//! outstanding. The pipeline drains at the run-checkpoint cadence —
+//! immediately before depositing into the [`RunCheckpointer`] — so run
+//! checkpoints always capture a fully settled state and a resumed
+//! overlap run (any staleness) is bit-identical to an uninterrupted run
+//! with the same cadence. It drains again at the end of training.
+//!
+//! **Staleness accounting.** Every apply records `apply_epoch −
+//! start_epoch` as a `staleness` sample in the per-rank [`Recorder`]
+//! (keyed by the gradient's origin epoch, one sample per epoch) and
+//! accumulates it into [`CommStats::staleness_sum`] /
+//! [`CommStats::applies`], so reports can surface the mean applied
+//! staleness next to the hot/hidden comm split.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::collective::{Collective, CommStats};
+use crate::config::RunConfig;
+use crate::data::Bootstrap;
+use crate::metrics::{Recorder, Timer};
+use crate::model::checkpoint::{CheckpointSeries, RankTrainState};
+use crate::model::gan::GanState;
+use crate::model::{StepOutput, TrainStep};
+use crate::optim::{Adam, Optimizer};
+use crate::runtime::RuntimeHandle;
+use crate::tensor::fusion::FusionPlan;
+use crate::tensor::ops;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+use super::offload::GradOffloader;
+use super::rank::RankOutcome;
+use super::resume::{RankResume, RunCheckpointer};
+
+/// An exchange started at `epoch` whose averaged result has not been
+/// applied yet. `grads` holds that epoch's full gradient vector: the
+/// averaged weights are on-loaded into it at apply time, biases keep
+/// their local values from the same epoch.
+struct InFlight {
+    epoch: u64,
+    grads: Vec<f32>,
+}
+
+/// One rank's training loop as a staged, bounded-staleness pipeline.
+pub struct RankPipeline {
+    rank: usize,
+    /// Exchange-window depth k (0 = blocking).
+    staleness: usize,
+    scenario: String,
+    state: GanState,
+    gen_opt: Adam,
+    disc_opt: Adam,
+    rng: Rng,
+    shard: Bootstrap,
+    step: TrainStep,
+    disc_batch: usize,
+    offloader: GradOffloader,
+    collective: Box<dyn Collective>,
+    recorder: Recorder,
+    checkpoints: CheckpointSeries,
+    comm_totals: CommStats,
+    /// In-flight exchanges, oldest first (≤ `staleness` entries).
+    window: VecDeque<InFlight>,
+    /// Reusable step output: its gradient buffers rotate with the step
+    /// executor's and the window slots, so the epoch loop performs no
+    /// gradient allocation after warm-up.
+    out: StepOutput,
+    /// Full-gradient buffers freed by a drain, rotated back into `out`
+    /// (at most `staleness` accumulate — one per settled exchange).
+    grad_spares: Vec<Vec<f32>>,
+    real: Vec<f32>,
+    timer: Timer,
+    elapsed_offset: f64,
+    start_epoch: u64,
+}
+
+impl RankPipeline {
+    /// Build the pipeline for one rank: model + optimizers (paper: Adam,
+    /// G lr 1e-5 / D lr 1e-4) either fresh or restored from a run
+    /// checkpoint, the weight-only fusion plan, the step executor, and a
+    /// window sized from `cfg.staleness`. A restore replaces the RNG
+    /// stream too, so every draw after the checkpoint boundary continues
+    /// the original run's sequence exactly.
+    pub fn new(
+        rank: usize,
+        cfg: &RunConfig,
+        handle: RuntimeHandle,
+        collective: Box<dyn Collective>,
+        shard: Bootstrap,
+        mut rng: Rng,
+        resume: Option<RankResume>,
+    ) -> Result<RankPipeline> {
+        let manifest = handle.manifest();
+        let meta = manifest.model(&cfg.model)?.clone();
+        let slope = manifest.leaky_slope;
+        // Checkpoints carry the scenario identity so a restore under the
+        // wrong forward operator is refused instead of silently diverging.
+        let scenario = manifest.scenario.clone();
+
+        let state;
+        let start_epoch: u64;
+        let elapsed_offset: f64;
+        let mut gen_opt;
+        let mut disc_opt;
+        match resume {
+            Some(r) => {
+                debug_assert_eq!(r.state.rank, rank);
+                state = GanState {
+                    gen: r.state.gen,
+                    disc: r.state.disc,
+                };
+                gen_opt = Adam::new(cfg.gen_lr, state.gen.len());
+                gen_opt.restore(&r.state.gen_m, &r.state.gen_v, r.state.gen_t);
+                disc_opt = Adam::new(cfg.disc_lr, state.disc.len());
+                disc_opt.restore(&r.state.disc_m, &r.state.disc_v, r.state.disc_t);
+                rng = Rng::from_snapshot(&r.state.rng);
+                start_epoch = r.start_epoch;
+                elapsed_offset = r.elapsed_offset;
+            }
+            None => {
+                state = GanState::init(&meta, slope, &mut rng);
+                gen_opt = Adam::new(cfg.gen_lr, state.gen.len());
+                disc_opt = Adam::new(cfg.disc_lr, state.disc.len());
+                start_epoch = 0;
+                elapsed_offset = 0.0;
+            }
+        }
+
+        // Weight-only fusion plan over the generator layout (Sec. V-C);
+        // the spare pool covers the full exchange window.
+        let plan = FusionPlan::build(meta.gen_segments(), cfg.fusion_bucket, cfg.include_bias);
+        let offloader = GradOffloader::new(plan).with_spare_cap(cfg.staleness + 1);
+
+        let step = TrainStep::new(handle, &cfg.gan_step_artifact())?;
+        let disc_batch = step.disc_batch();
+        let real = Vec::with_capacity(step.real_len());
+
+        Ok(RankPipeline {
+            rank,
+            staleness: cfg.staleness,
+            scenario,
+            state,
+            gen_opt,
+            disc_opt,
+            rng,
+            shard,
+            step,
+            disc_batch,
+            offloader,
+            collective,
+            recorder: Recorder::new(rank),
+            checkpoints: CheckpointSeries::default(),
+            comm_totals: CommStats::default(),
+            window: VecDeque::new(),
+            out: StepOutput::default(),
+            grad_spares: Vec::new(),
+            real,
+            timer: Timer::start(),
+            elapsed_offset,
+            start_epoch,
+        })
+    }
+
+    /// Run the full epoch loop: stages per epoch, analysis checkpoints at
+    /// `cfg.checkpoint_every`, quiescent run-checkpoint deposits at the
+    /// checkpointer's cadence, and a final drain.
+    pub fn run(
+        &mut self,
+        cfg: &RunConfig,
+        take_checkpoints: bool,
+        checkpointer: Option<&Arc<RunCheckpointer>>,
+    ) -> Result<()> {
+        for epoch in self.start_epoch..cfg.epochs as u64 {
+            self.run_epoch(epoch)?;
+
+            // Analysis checkpoints: timestamped generator snapshots for
+            // the post-training residual curves (Sec. VI-C2).
+            if take_checkpoints
+                && (epoch == 0
+                    || cfg.checkpoint_every > 0
+                        && (epoch + 1) % cfg.checkpoint_every as u64 == 0)
+            {
+                self.checkpoints.record(
+                    self.rank,
+                    epoch,
+                    self.elapsed_offset + self.timer.elapsed_s(),
+                    &self.scenario,
+                    &self.state.gen,
+                );
+            }
+
+            // Run-checkpoint deposit: drain to quiescence first, so the
+            // checkpoint captures a fully settled state — no exchange in
+            // flight, every started epoch's gradients applied. This is
+            // what makes resumed overlap runs bit-identical.
+            if let Some(ck) = checkpointer {
+                if ck.wants(epoch) {
+                    self.drain(epoch)?;
+                    self.deposit(epoch, ck)?;
+                }
+            }
+        }
+        // Settle whatever the last epochs left in flight.
+        self.drain(cfg.epochs as u64 - 1)?;
+        Ok(())
+    }
+
+    /// One epoch through the stages. With `staleness: 0` the exchange
+    /// blocks in place; otherwise the oldest in-flight exchange is
+    /// applied once the window is full and this epoch's exchange is
+    /// started behind it.
+    pub fn run_epoch(&mut self, epoch: u64) -> Result<()> {
+        let mut lap = Timer::start();
+        // Stage 1: bootstrap-draw a discriminator batch from the shard.
+        self.shard.draw(self.disc_batch, &mut self.rng, &mut self.real);
+        let t_draw = lap.lap_s();
+
+        // Stage 2: gan_step (borrowed inputs, reused output buffers).
+        self.step.run_into(
+            &self.state.gen,
+            &self.state.disc,
+            &self.real,
+            &mut self.rng,
+            &mut self.out,
+        )?;
+        let t_step = lap.lap_s();
+        if !ops::all_finite(&self.out.gen_grads) || !ops::all_finite(&self.out.disc_grads) {
+            return Err(Error::Runtime(format!(
+                "rank {}: non-finite gradients at epoch {epoch}",
+                self.rank
+            )));
+        }
+
+        // Local discriminator update (the paper trains one discriminator
+        // per rank, autonomously — never exchanged, never stale).
+        self.disc_opt.step(&mut self.state.disc, &self.out.disc_grads);
+
+        let (t_comm, t_opt, stats) = if self.staleness == 0 {
+            // Stages 3–6, blocking: off-load -> collective -> on-load ->
+            // generator update, all within the epoch (paper semantics).
+            let buf = self.offloader.offload(&self.out.gen_grads)?;
+            let mut stats = self.collective.epoch_reduce(epoch, buf)?;
+            self.offloader.onload(&mut self.out.gen_grads)?;
+            let t_comm = lap.lap_s();
+            self.gen_opt.step(&mut self.state.gen, &self.out.gen_grads);
+            account_apply(&mut self.recorder, &mut stats, epoch, epoch);
+            (t_comm, lap.lap_s(), stats)
+        } else {
+            // Stage 5 (apply): collect the oldest exchange(s) once the
+            // window is full — FIFO, so the apply order is deterministic.
+            // Only the time blocked here counts as hot-path comm.
+            let mut stats = CommStats::default();
+            let mut t_comm = 0.0;
+            let mut t_opt = 0.0;
+            // The gradient buffer freed by a collected exchange (or by an
+            // earlier drain); rotated back into `out` when this epoch's
+            // grads move in flight.
+            let mut recycled = self.grad_spares.pop().unwrap_or_default();
+            while self.window.len() >= self.staleness {
+                recycled =
+                    self.apply_oldest(epoch, &mut lap, &mut t_comm, &mut t_opt, &mut stats)?;
+            }
+            // Stages 3–4 (offload + exchange): pack into an owned buffer
+            // and start this epoch's reduce on the engine.
+            let buf = self.offloader.pack_owned(&self.out.gen_grads)?;
+            self.collective.start_reduce(epoch, buf)?;
+            self.window.push_back(InFlight {
+                epoch,
+                grads: std::mem::replace(&mut self.out.gen_grads, recycled),
+            });
+            t_comm += lap.lap_s();
+            (t_comm, t_opt, stats)
+        };
+        self.comm_totals.merge(&stats);
+
+        // Per-epoch metrics.
+        self.recorder.push("gen_loss", epoch, self.out.gen_loss);
+        self.recorder.push("disc_loss", epoch, self.out.disc_loss);
+        self.recorder.push("draw_s", epoch, t_draw);
+        self.recorder.push("step_s", epoch, t_step);
+        self.recorder.push("comm_s", epoch, t_comm);
+        self.recorder.push("comm_wait_s", epoch, stats.wait_s);
+        self.recorder.push("optim_s", epoch, t_opt);
+        self.recorder.push("events", epoch, self.disc_batch as f64);
+        Ok(())
+    }
+
+    /// Stage 5 + 6 for the oldest in-flight exchange: wait (FIFO),
+    /// on-load, update the generator. Returns the freed full-gradient
+    /// buffer for rotation back into the step output.
+    fn apply_oldest(
+        &mut self,
+        at_epoch: u64,
+        lap: &mut Timer,
+        t_comm: &mut f64,
+        t_opt: &mut f64,
+        stats: &mut CommStats,
+    ) -> Result<Vec<f32>> {
+        let InFlight {
+            epoch: pe,
+            grads: mut pgrads,
+        } = self
+            .window
+            .pop_front()
+            .expect("apply_oldest called with an empty window");
+        let (reduced, mut s) = self.collective.wait_reduce()?;
+        self.offloader.onload_from(&reduced, &mut pgrads)?;
+        self.offloader.recycle(reduced);
+        // Only the time blocked here is hot-path comm; the worker's own
+        // blocked time ran concurrently with later epochs' compute and is
+        // accounted as hidden.
+        *t_comm += lap.lap_s();
+        self.gen_opt.step(&mut self.state.gen, &pgrads);
+        *t_opt += lap.lap_s();
+        self.recorder.push("comm_hidden_s", pe, s.wait_s);
+        account_apply(&mut self.recorder, &mut s, pe, at_epoch);
+        stats.merge(&s);
+        Ok(pgrads)
+    }
+
+    /// Quiescence: settle every in-flight exchange through
+    /// [`Collective::drain`] and apply the averaged gradients in FIFO
+    /// order. After this the window is empty and the training state is
+    /// fully settled — safe to checkpoint. `at_epoch` is the epoch the
+    /// drain runs at (staleness accounting).
+    pub fn drain(&mut self, at_epoch: u64) -> Result<()> {
+        if self.window.is_empty() {
+            return Ok(());
+        }
+        let mut lap = Timer::start();
+        let results = self.collective.drain()?;
+        // The settle blocked on every outstanding exchange at once;
+        // attribute an even share to each settled epoch's comm_s rather
+        // than spiking the oldest one.
+        let settle_share = lap.lap_s() / results.len().max(1) as f64;
+        if results.len() != self.window.len() {
+            return Err(Error::comm(format!(
+                "drain settled {} exchanges but {} are windowed — \
+                 collective and pipeline disagree on the in-flight set",
+                results.len(),
+                self.window.len()
+            )));
+        }
+        for (reduced, mut s) in results {
+            let InFlight {
+                epoch: pe,
+                grads: mut pgrads,
+            } = self.window.pop_front().expect("window length checked");
+            self.offloader.onload_from(&reduced, &mut pgrads)?;
+            self.offloader.recycle(reduced);
+            let t_comm = settle_share + lap.lap_s();
+            self.gen_opt.step(&mut self.state.gen, &pgrads);
+            self.recorder.push("comm_s", pe, t_comm);
+            self.recorder.push("optim_s", pe, lap.lap_s());
+            self.recorder.push("comm_hidden_s", pe, s.wait_s);
+            account_apply(&mut self.recorder, &mut s, pe, at_epoch);
+            self.comm_totals.merge(&s);
+            self.grad_spares.push(pgrads);
+        }
+        Ok(())
+    }
+
+    /// Deposit this rank's complete post-epoch state into the shared run
+    /// checkpointer (the window must be drained first; `run` guarantees
+    /// it). The RNG is captured exactly where epoch + 1's first draw will
+    /// continue it.
+    fn deposit(&mut self, epoch: u64, ck: &Arc<RunCheckpointer>) -> Result<()> {
+        debug_assert!(
+            self.window.is_empty(),
+            "deposit requires a drained pipeline"
+        );
+        let (gm, gv, gt) = self.gen_opt.state();
+        let (dm, dv, dt) = self.disc_opt.state();
+        ck.deposit(
+            epoch,
+            self.elapsed_offset + self.timer.elapsed_s(),
+            RankTrainState {
+                rank: self.rank,
+                gen: self.state.gen.clone(),
+                disc: self.state.disc.clone(),
+                gen_m: gm.to_vec(),
+                gen_v: gv.to_vec(),
+                gen_t: gt,
+                disc_m: dm.to_vec(),
+                disc_v: dv.to_vec(),
+                disc_t: dt,
+                rng: self.rng.snapshot(),
+            },
+        )?;
+        Ok(())
+    }
+
+    /// Exchanges currently in flight (≤ the configured staleness).
+    pub fn in_flight(&self) -> usize {
+        self.window.len()
+    }
+
+    /// Tear down into the rank's outcome.
+    pub fn into_outcome(self) -> RankOutcome {
+        RankOutcome {
+            rank: self.rank,
+            recorder: self.recorder,
+            checkpoints: self.checkpoints,
+            state: self.state,
+            comm_totals: self.comm_totals,
+        }
+    }
+}
+
+/// Record one averaged-gradient application: a `staleness` sample keyed
+/// by the gradient's origin epoch, mirrored into the epoch's comm stats.
+fn account_apply(
+    recorder: &mut Recorder,
+    stats: &mut CommStats,
+    start_epoch: u64,
+    apply_epoch: u64,
+) {
+    let lag = apply_epoch.saturating_sub(start_epoch);
+    recorder.push("staleness", start_epoch, lag as f64);
+    stats.staleness_sum += lag;
+    stats.applies += 1;
+}
+
+#[cfg(test)]
+mod tests {
+    // The pipeline needs a runtime + collectives + data to run; its
+    // contracts — staleness-0 equivalence with the reference blocking
+    // loop, drained-checkpoint resume bit-identity per scenario, bounded
+    // mean staleness for k-deep windows — are enforced end to end by
+    // rust/tests/pipeline.rs. The collective-facing half (windowed FIFO,
+    // drain) is covered by collective::engine::tests.
+}

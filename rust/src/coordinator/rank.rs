@@ -1,51 +1,50 @@
-//! The per-rank training loop.
+//! The per-rank training loop: a thin driver over the staged
+//! [`RankPipeline`].
 //!
-//! One thread per rank (= one GPU in the paper). Each epoch:
+//! One thread per rank (= one GPU in the paper). Each epoch runs the
+//! pipeline stages
+//!
+//! ```text
+//! bootstrap-draw → gan_step → offload → exchange → apply → update
+//! ```
 //!
 //! 1. bootstrap-draw a discriminator batch from the rank's data shard;
 //! 2. execute the `gan_step` artifact (generator forward -> the
 //!    scenario's forward operator -> discriminator; returns both
-//!    networks' gradients and losses);
-//! 3. update the *local* discriminator immediately (the paper trains one
-//!    discriminator per rank, autonomously);
-//! 4. off-load the generator's weight gradients into the packed transfer
+//!    networks' gradients and losses) and update the *local*
+//!    discriminator immediately (the paper trains one discriminator per
+//!    rank, autonomously);
+//! 3. off-load the generator's weight gradients into the packed transfer
 //!    buffer, exchange them through the rank's collective (ARAR / grouped
-//!    / RMA / horovod / none), on-load the averaged result;
-//! 5. update the generator;
-//! 6. at the checkpoint cadence, snapshot the generator with a timestamp
-//!    (the paper's post-training convergence methodology).
-//!
-//! With `RunConfig::overlap_comm` the loop pipelines step 4 through the
-//! collective engine's non-blocking API: epoch e's exchange is *started*
-//! after its gan_step and *collected* at epoch e+1, overlapping the ring
-//! with the next bootstrap draw and gan_step. The generator then updates
-//! with one-epoch-stale averaged gradients (Async-RED-style block
-//! asynchrony); the paper's blocking semantics remain the default.
+//!    / RMA / horovod / none), on-load the averaged result and update the
+//!    generator — blocking within the epoch (`staleness: 0`, the paper's
+//!    semantics) or through a bounded window of up to `staleness` k
+//!    in-flight exchanges applied in FIFO order (Async-RED-style bounded
+//!    block asynchrony);
+//! 4. at the analysis-checkpoint cadence, snapshot the generator with a
+//!    timestamp (the paper's post-training convergence methodology).
 //!
 //! Fault tolerance: at the run-checkpoint cadence (`RunConfig::
-//! ckpt_every`) each rank deposits its complete training state —
+//! ckpt_every`) the pipeline first **drains** its exchange window to
+//! quiescence, then each rank deposits its complete training state —
 //! parameters, Adam moments, RNG stream — into the shared
 //! [`RunCheckpointer`]; a resumed rank receives a [`RankResume`] instead
 //! of initializing fresh and continues its epoch loop (and every RNG
-//! draw) exactly where the checkpoint left off.
+//! draw) exactly where the checkpoint left off, for *any* staleness.
 
 use std::sync::Arc;
 
 use crate::collective::{Collective, CommStats};
 use crate::config::RunConfig;
 use crate::data::Bootstrap;
-use crate::metrics::{Recorder, Timer};
-use crate::model::checkpoint::{CheckpointSeries, RankTrainState};
+use crate::metrics::Recorder;
+use crate::model::checkpoint::CheckpointSeries;
 use crate::model::gan::GanState;
-use crate::model::{StepOutput, TrainStep};
-use crate::optim::{Adam, Optimizer};
 use crate::runtime::RuntimeHandle;
-use crate::tensor::fusion::FusionPlan;
-use crate::tensor::ops;
-use crate::util::error::{Error, Result};
+use crate::util::error::Result;
 use crate::util::rng::Rng;
 
-use super::offload::GradOffloader;
+use super::pipeline::RankPipeline;
 use super::resume::{RankResume, RunCheckpointer};
 
 /// Everything a rank thread produces.
@@ -55,15 +54,6 @@ pub struct RankOutcome {
     pub checkpoints: CheckpointSeries,
     pub state: GanState,
     pub comm_totals: CommStats,
-}
-
-/// An exchange started at `epoch` whose averaged result has not been
-/// applied yet (overlap mode). `grads` holds that epoch's full gradient
-/// vector: the averaged weights are on-loaded into it, biases keep their
-/// local values from the same epoch.
-struct InFlight {
-    epoch: u64,
-    grads: Vec<f32>,
 }
 
 /// Run one rank's full training loop. `shard` is this rank's data
@@ -76,221 +66,23 @@ pub fn run_rank(
     rank: usize,
     cfg: &RunConfig,
     handle: RuntimeHandle,
-    mut collective: Box<dyn Collective>,
+    collective: Box<dyn Collective>,
     shard: Bootstrap,
-    mut rng: Rng,
+    rng: Rng,
     take_checkpoints: bool,
     checkpointer: Option<Arc<RunCheckpointer>>,
     resume: Option<RankResume>,
 ) -> Result<RankOutcome> {
     crate::util::logging::rank_scope(rank);
-    let manifest = handle.manifest();
-    let meta = manifest.model(&cfg.model)?.clone();
-    let slope = manifest.leaky_slope;
-    // Checkpoints carry the scenario identity so a restore under the
-    // wrong forward operator is refused instead of silently diverging.
-    let scenario = manifest.scenario.clone();
-
-    // Model + optimizers (paper: Adam, G lr 1e-5 / D lr 1e-4) — either
-    // fresh, or restored from a run checkpoint. The restore replaces the
-    // RNG stream too: the launcher re-derives the shard with the original
-    // seed-split stream *before* this point, so every draw after the
-    // checkpoint boundary continues the original run's sequence exactly.
-    let mut state;
-    let start_epoch: u64;
-    let elapsed_offset: f64;
-    let mut gen_opt;
-    let mut disc_opt;
-    match resume {
-        Some(r) => {
-            debug_assert_eq!(r.state.rank, rank);
-            state = GanState {
-                gen: r.state.gen,
-                disc: r.state.disc,
-            };
-            gen_opt = Adam::new(cfg.gen_lr, state.gen.len());
-            gen_opt.restore(&r.state.gen_m, &r.state.gen_v, r.state.gen_t);
-            disc_opt = Adam::new(cfg.disc_lr, state.disc.len());
-            disc_opt.restore(&r.state.disc_m, &r.state.disc_v, r.state.disc_t);
-            rng = Rng::from_snapshot(&r.state.rng);
-            start_epoch = r.start_epoch;
-            elapsed_offset = r.elapsed_offset;
-        }
-        None => {
-            state = GanState::init(&meta, slope, &mut rng);
-            gen_opt = Adam::new(cfg.gen_lr, state.gen.len());
-            disc_opt = Adam::new(cfg.disc_lr, state.disc.len());
-            start_epoch = 0;
-            elapsed_offset = 0.0;
-        }
-    }
-
-    // Weight-only fusion plan over the generator layout (Sec. V-C).
-    let plan = FusionPlan::build(meta.gen_segments(), cfg.fusion_bucket, cfg.include_bias);
-    let mut offloader = GradOffloader::new(plan);
-
-    let mut step = TrainStep::new(handle, &cfg.gan_step_artifact())?;
-    let disc_batch = step.disc_batch();
-
-    let mut shard = shard;
-    let mut real = Vec::with_capacity(step.real_len());
-    let mut recorder = Recorder::new(rank);
-    let mut checkpoints = CheckpointSeries::default();
-    let mut comm_totals = CommStats::default();
-    let mut in_flight: Option<InFlight> = None;
-    // One reusable step output: its gradient buffers rotate with the step
-    // executor's (and, in overlap mode, with the in-flight slot), so the
-    // epoch loop performs no gradient allocation after warm-up.
-    let mut out = StepOutput::default();
-    let timer = Timer::start();
-
-    for epoch in start_epoch..cfg.epochs as u64 {
-        let mut lap = Timer::start();
-        // 1. bootstrap draw
-        shard.draw(disc_batch, &mut rng, &mut real);
-        let t_draw = lap.lap_s();
-
-        // 2. gan_step (borrowed inputs, reused output buffers)
-        step.run_into(&state.gen, &state.disc, &real, &mut rng, &mut out)?;
-        let t_step = lap.lap_s();
-        if !ops::all_finite(&out.gen_grads) || !ops::all_finite(&out.disc_grads) {
-            return Err(Error::Runtime(format!(
-                "rank {rank}: non-finite gradients at epoch {epoch}"
-            )));
-        }
-
-        // 3. local discriminator update (per-rank discriminator).
-        disc_opt.step(&mut state.disc, &out.disc_grads);
-
-        let (t_comm, t_opt, stats) = if cfg.overlap_comm {
-            // 4/5 (overlap). Collect the *previous* epoch's exchange —
-            // which ran under this epoch's draw + gan_step — apply it,
-            // then launch this epoch's exchange and move on. Only the
-            // time blocked here counts as hot-path comm.
-            let mut stats = CommStats::default();
-            let mut t_opt = 0.0;
-            let mut t_comm = 0.0;
-            // The gradient buffer freed by the collected exchange; rotated
-            // back into `out` when this epoch's grads move in flight.
-            let mut recycled = Vec::new();
-            if let Some(InFlight {
-                epoch: pe,
-                grads: mut pgrads,
-            }) = in_flight.take()
-            {
-                let (reduced, s) = collective.wait_reduce()?;
-                offloader.onload_from(&reduced, &mut pgrads)?;
-                offloader.recycle(reduced);
-                // Only the time blocked here is hot-path comm; the
-                // worker's own blocked time ran concurrently with this
-                // epoch's compute and is accounted as hidden.
-                t_comm += lap.lap_s();
-                gen_opt.step(&mut state.gen, &pgrads);
-                t_opt = lap.lap_s();
-                recorder.push("comm_hidden_s", pe, s.wait_s);
-                stats.merge(&s);
-                recycled = pgrads;
-            }
-            let buf = offloader.pack_owned(&out.gen_grads)?;
-            collective.start_reduce(epoch, buf)?;
-            in_flight = Some(InFlight {
-                epoch,
-                grads: std::mem::replace(&mut out.gen_grads, recycled),
-            });
-            t_comm += lap.lap_s();
-            (t_comm, t_opt, stats)
-        } else {
-            // 4. off-load -> collective -> on-load (paper: blocking).
-            let buf = offloader.offload(&out.gen_grads)?;
-            let stats = collective.epoch_reduce(epoch, buf)?;
-            offloader.onload(&mut out.gen_grads)?;
-            let t_comm = lap.lap_s();
-
-            // 5. generator update with the exchanged gradients.
-            gen_opt.step(&mut state.gen, &out.gen_grads);
-            (t_comm, lap.lap_s(), stats)
-        };
-        comm_totals.merge(&stats);
-
-        // 6. metrics + checkpoints.
-        recorder.push("gen_loss", epoch, out.gen_loss);
-        recorder.push("disc_loss", epoch, out.disc_loss);
-        recorder.push("draw_s", epoch, t_draw);
-        recorder.push("step_s", epoch, t_step);
-        recorder.push("comm_s", epoch, t_comm);
-        recorder.push("comm_wait_s", epoch, stats.wait_s);
-        recorder.push("optim_s", epoch, t_opt);
-        recorder.push("events", epoch, disc_batch as f64);
-        if take_checkpoints
-            && (epoch == 0
-                || cfg.checkpoint_every > 0 && (epoch + 1) % cfg.checkpoint_every as u64 == 0)
-        {
-            checkpoints.record(
-                rank,
-                epoch,
-                elapsed_offset + timer.elapsed_s(),
-                &scenario,
-                &state.gen,
-            );
-        }
-
-        // Run-checkpoint deposit: the full state *after* this epoch's
-        // updates, with the RNG captured exactly where epoch + 1's first
-        // draw will continue it.
-        if let Some(ck) = &checkpointer {
-            if ck.wants(epoch) {
-                let (gm, gv, gt) = gen_opt.state();
-                let (dm, dv, dt) = disc_opt.state();
-                ck.deposit(
-                    epoch,
-                    elapsed_offset + timer.elapsed_s(),
-                    RankTrainState {
-                        rank,
-                        gen: state.gen.clone(),
-                        disc: state.disc.clone(),
-                        gen_m: gm.to_vec(),
-                        gen_v: gv.to_vec(),
-                        gen_t: gt,
-                        disc_m: dm.to_vec(),
-                        disc_v: dv.to_vec(),
-                        disc_t: dt,
-                        rng: rng.snapshot(),
-                    },
-                )?;
-            }
-        }
-    }
-
-    // Drain the pipeline: the last epoch's exchange still needs applying.
-    if let Some(InFlight {
-        epoch: pe,
-        grads: mut pgrads,
-    }) = in_flight.take()
-    {
-        let mut lap = Timer::start();
-        let (reduced, s) = collective.wait_reduce()?;
-        offloader.onload_from(&reduced, &mut pgrads)?;
-        let t_comm = lap.lap_s();
-        gen_opt.step(&mut state.gen, &pgrads);
-        recorder.push("comm_s", pe, t_comm);
-        recorder.push("optim_s", pe, lap.lap_s());
-        recorder.push("comm_hidden_s", pe, s.wait_s);
-        comm_totals.merge(&s);
-    }
-
-    Ok(RankOutcome {
-        rank,
-        recorder,
-        checkpoints,
-        state,
-        comm_totals,
-    })
+    let mut pipeline = RankPipeline::new(rank, cfg, handle, collective, shard, rng, resume)?;
+    pipeline.run(cfg, take_checkpoints, checkpointer.as_ref())?;
+    Ok(pipeline.into_outcome())
 }
 
 #[cfg(test)]
 mod tests {
     // run_rank requires artifacts + a full network; exercised by the
-    // launcher tests and the integration suite (rust/tests/). The overlap
-    // pipeline's collective-facing half is covered by
-    // collective::engine::tests.
+    // launcher tests and the integration suites (rust/tests/end2end.rs,
+    // rust/tests/pipeline.rs, rust/tests/resume.rs). The stage machine
+    // itself lives in coordinator::pipeline.
 }

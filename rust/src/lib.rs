@@ -5,11 +5,12 @@
 //! inverse-problem solver:
 //!
 //! * **Layer 3 (this crate)** — the paper's coordination contribution: the
-//!   distributed GAN training runtime. Per-rank training loops, asynchronous
-//!   ring-all-reduce gradient exchange (conventional, grouped, and
-//!   RMA-based), gradient off-loading, bootstrap data sharding, ensemble
-//!   analysis, and a calibrated discrete-event simulator for the scaling
-//!   studies.
+//!   distributed GAN training runtime. Staged per-rank training pipelines
+//!   with a bounded-staleness exchange window ([`coordinator::pipeline`],
+//!   `staleness: 0 | 1 | k`), asynchronous ring-all-reduce gradient
+//!   exchange (conventional, grouped, and RMA-based), gradient
+//!   off-loading, bootstrap data sharding, ensemble analysis, and a
+//!   calibrated discrete-event simulator for the scaling studies.
 //! * **Layer 2** — the GAN + environment pipeline authored in JAX
 //!   (`python/compile/`), AOT-lowered to HLO text at build time.
 //! * **Layer 1** — Pallas kernels for the dense GAN layers and the

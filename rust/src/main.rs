@@ -53,6 +53,8 @@ fn print_help() {
          validate-artifacts   smoke-run every artifact\n\n\
          common options: --scenario <name> --backend native|pjrt --artifacts <dir> \
          --workers <n> --seed <n>\n\
+         engine: --chunking unchunked|auto|<elems> --staleness <k> \
+         (0 = blocking, 1 = overlap, k = bounded window)\n\
          fault tolerance: --ckpt-every <n> --ckpt-dir <dir> --ckpt-keep <n> \
          --resume <path>\n\
          (the native backend needs no artifacts and runs every scenario; \
@@ -92,7 +94,12 @@ fn common_specs() -> Vec<OptSpec> {
             "ring chunking: unchunked|auto|<max elems per message>",
             Some("unchunked"),
         ),
-        cli::flag("overlap", "overlap gradient exchange with next-epoch compute"),
+        cli::opt(
+            "staleness",
+            "exchange-window depth k: 0 = blocking, 1 = overlap, k = k-deep window",
+            Some("0"),
+        ),
+        cli::flag("overlap", "deprecated alias for --staleness 1"),
         cli::flag("paper-scale", "use the full Table III configuration"),
         cli::opt(
             "ckpt-every",
@@ -135,7 +142,15 @@ fn build_cfg(a: &Args) -> Result<RunConfig> {
     if let Some(v) = a.get("backend") {
         cfg.backend = BackendKind::parse(v)?;
     }
-    cfg.overlap_comm = cfg.overlap_comm || a.flag("overlap");
+    cfg.staleness = a.usize("staleness", cfg.staleness)?;
+    if a.flag("overlap") {
+        sagips::log_warn!("--overlap is deprecated — use --staleness 1");
+        // An explicit --staleness always wins over the alias (mirrors the
+        // JSON precedence, where the "staleness" key beats "overlap_comm").
+        if a.get("staleness").is_none() {
+            cfg.staleness = cfg.staleness.max(1);
+        }
+    }
     cfg.artifacts_dir = a.get_or("artifacts", &cfg.artifacts_dir).to_string();
     cfg.ckpt_every = a.usize("ckpt-every", cfg.ckpt_every)?;
     cfg.ckpt_dir = a.get_or("ckpt-dir", &cfg.ckpt_dir).to_string();
@@ -188,7 +203,7 @@ fn cmd_train(a: &Args) -> Result<()> {
     let cfg = build_cfg(a)?;
     let rt = open_runtime(a, &cfg)?;
     sagips::log_info!(
-        "training: scenario={} backend={} mode={} ranks={} epochs={} batch={} (disc batch {}) chunking={} overlap={}",
+        "training: scenario={} backend={} mode={} ranks={} epochs={} batch={} (disc batch {}) chunking={} staleness={}",
         cfg.scenario,
         cfg.backend.name(),
         cfg.mode.name(),
@@ -197,7 +212,7 @@ fn cmd_train(a: &Args) -> Result<()> {
         cfg.batch,
         cfg.disc_batch(),
         cfg.chunking.label(),
-        cfg.overlap_comm
+        cfg.staleness
     );
     let run = run_training(&cfg, &rt.handle())?;
     if let Some(e) = run.resumed_from {
@@ -214,12 +229,12 @@ fn cmd_train(a: &Args) -> Result<()> {
         run.metrics.mean_of_last("gen_loss").unwrap_or(f64::NAN),
         run.metrics.mean_of_last("disc_loss").unwrap_or(f64::NAN)
     );
-    if let Some(r) = run.final_residuals {
+    if let Some(r) = &run.final_residuals {
         println!(
             "final residuals r̂ (eq 6): {:?}",
             r.iter().map(|x| (x * 1e3).round() / 1e3).collect::<Vec<f64>>()
         );
-        println!("mean |r̂|: {:.4}", residuals::mean_abs(&r));
+        println!("mean |r̂|: {:.4}", residuals::mean_abs(r));
     }
     println!("\nresidual curve (rank 0 checkpoints):");
     for p in &run.residual_curve {
@@ -230,6 +245,7 @@ fn cmd_train(a: &Args) -> Result<()> {
             residuals::mean_abs(&p.residuals)
         );
     }
+    experiments::run_summary(&cfg, &run);
     rt.shutdown();
     Ok(())
 }

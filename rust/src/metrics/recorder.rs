@@ -123,6 +123,26 @@ impl MergedMetrics {
         }
     }
 
+    /// Mean applied-gradient staleness across ranks, from the
+    /// `staleness` series the rank pipeline records once per applied
+    /// averaged gradient (0 for every apply of a blocking run; bounded
+    /// by k under a k-deep exchange window). `None` when no staleness
+    /// samples were recorded at all.
+    pub fn mean_staleness(&self) -> Option<f64> {
+        let (mut sum, mut n) = (0.0f64, 0usize);
+        for r in &self.per_rank {
+            if let Some(s) = r.get("staleness") {
+                sum += s.sum();
+                n += s.len();
+            }
+        }
+        if n == 0 {
+            None
+        } else {
+            Some(sum / n as f64)
+        }
+    }
+
     /// Epoch-aligned cross-rank mean series: for each recorded index i,
     /// average value over ranks that have an i-th sample.
     pub fn mean_series(&self, name: &str) -> Series {
@@ -208,6 +228,22 @@ mod tests {
         r.push("comm_hidden_s", 0, 0.3);
         let m = MergedMetrics::new(vec![r]);
         assert!((m.comm_overlap_ratio().unwrap() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_staleness_averages_across_ranks() {
+        // No staleness samples at all -> None.
+        let m = MergedMetrics::new(vec![Recorder::new(0)]);
+        assert!(m.mean_staleness().is_none());
+        // Blocking rank (all zeros) + a 2-deep windowed rank.
+        let mut r0 = Recorder::new(0);
+        r0.push("staleness", 0, 0.0);
+        r0.push("staleness", 1, 0.0);
+        let mut r1 = Recorder::new(1);
+        r1.push("staleness", 0, 2.0);
+        r1.push("staleness", 1, 2.0);
+        let m = MergedMetrics::new(vec![r0, r1]);
+        assert!((m.mean_staleness().unwrap() - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! and hours of compute).
 
 use crate::config::{presets, Mode, RunConfig};
-use crate::coordinator::launcher::run_training;
+use crate::coordinator::launcher::{run_training, RunResult};
 use crate::ensemble::analysis::EnsembleResult;
 use crate::ensemble::sampling;
 use crate::model::residuals;
@@ -364,6 +364,54 @@ pub fn weak_scaling_curves(
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// Run summaries
+// ---------------------------------------------------------------------------
+
+/// The run-summary columns: wall time, eq (9) analysis rate, the
+/// hot/hidden comm split, and the mean applied-gradient staleness.
+pub const RUN_SUMMARY_COLS: &[&str] = &[
+    "wall_s",
+    "events_per_s",
+    "comm_hot_s",
+    "comm_hidden_s",
+    "mean_staleness",
+];
+
+/// One run-summary row (the x column is the configured staleness k, so
+/// staleness sweeps stack into one readable table). `mean_staleness` is
+/// the *applied* staleness the run actually observed — 0 for a blocking
+/// run, ≤ k under a k-deep exchange window (drains at the checkpoint
+/// cadence pull it below k).
+pub fn run_summary_row(cfg: &RunConfig, run: &RunResult) -> (f64, Vec<f64>) {
+    (
+        cfg.staleness as f64,
+        vec![
+            run.wall_s,
+            run.analysis_rate(),
+            run.metrics.total("comm_s"),
+            run.metrics.total("comm_hidden_s"),
+            run.metrics.mean_staleness().unwrap_or(0.0),
+        ],
+    )
+}
+
+/// Print the standard run summary for one training run (`sagips train`
+/// ends with this; staleness-sweep harnesses print one row per k).
+pub fn run_summary(cfg: &RunConfig, run: &RunResult) {
+    data_table(
+        &format!(
+            "run summary — {} ranks, {} mode, chunking {}",
+            cfg.ranks,
+            cfg.mode.name(),
+            cfg.chunking.label()
+        ),
+        "staleness_k",
+        RUN_SUMMARY_COLS,
+        &[run_summary_row(cfg, run)],
+    );
+}
+
 /// Summary helper: time to reach a residual threshold on a curve.
 pub fn time_to_threshold(curve: &[(f64, f64, f64)], threshold: f64) -> Option<f64> {
     curve
@@ -409,6 +457,34 @@ mod tests {
         let curve = vec![(0.0, 1.0, 0.0), (1.0, 3.0, 0.0)];
         assert_eq!(tail_mean(&curve, 10), 2.0);
         assert!(tail_mean(&[], 3).is_nan());
+    }
+
+    #[test]
+    fn run_summary_row_surfaces_mean_staleness() {
+        use crate::metrics::{MergedMetrics, Recorder};
+        let mut r = Recorder::new(0);
+        r.push("staleness", 0, 2.0);
+        r.push("staleness", 1, 2.0);
+        r.push("comm_s", 0, 0.5);
+        r.push("comm_hidden_s", 0, 1.5);
+        let run = RunResult {
+            wall_s: 2.0,
+            metrics: MergedMetrics::new(vec![r]),
+            checkpoints: Vec::new(),
+            states: Vec::new(),
+            residual_curve: Vec::new(),
+            final_residuals: None,
+            comm: Vec::new(),
+            resumed_from: None,
+        };
+        let mut cfg = presets::ci_default();
+        cfg.staleness = 2;
+        let (k, cols) = run_summary_row(&cfg, &run);
+        assert_eq!(k, 2.0);
+        assert_eq!(cols.len(), RUN_SUMMARY_COLS.len());
+        assert_eq!(cols[2], 0.5); // comm_hot_s
+        assert_eq!(cols[3], 1.5); // comm_hidden_s
+        assert_eq!(cols[4], 2.0); // mean applied staleness
     }
 
     #[test]
