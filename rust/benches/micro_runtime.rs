@@ -5,10 +5,16 @@
 //! baseline in EXPERIMENTS.md.
 //!
 //! Emits `BENCH_runtime.json` next to the working directory: one row per
-//! (backend, artifact) with p50/p90/mean micros and, for the native
-//! backend, the measured steady-state allocations per call — the
-//! zero-copy claim (`inputs borrowed, outputs reused`) as a number. The
-//! file starts the native-vs-PJRT perf trajectory across PRs.
+//! (backend, artifact) with p50/p90/mean micros, GEMM GFLOP/s (counted by
+//! [`sagips::runtime::kernels::gan_step_flops`]), generated events/sec,
+//! and, for the native backend, the measured steady-state allocations per
+//! call — the zero-copy claim (`inputs borrowed, outputs reused`) as a
+//! number. The headline rows are the kernel/parallelism trajectory:
+//! serial scalar kernels vs blocked kernels vs blocked + 4 intra-rank
+//! worker threads, on the quantile and deconv scenarios.
+//!
+//! `SAGIPS_BENCH_BUDGET_MS` shrinks the per-bench time budget so CI smoke
+//! runs finish in milliseconds while still exercising every row.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::BTreeMap;
@@ -17,8 +23,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use sagips::model::gan::GanState;
-use sagips::runtime::{Manifest, NativeRuntime, RuntimeHandle, RuntimePool};
-use sagips::util::bench::{bench_for, header, BenchResult};
+use sagips::runtime::kernels::gan_step_flops;
+use sagips::runtime::{Kernels, Manifest, NativeOptions, NativeRuntime, RuntimeHandle, RuntimePool};
+use sagips::util::bench::{bench_for, fmt_dur, header, BenchResult};
 use sagips::util::json::Value;
 use sagips::util::rng::Rng;
 
@@ -49,13 +56,49 @@ fn allocs() -> u64 {
     ALLOCS.load(Ordering::Relaxed)
 }
 
-fn row_json(
+/// Per-bench time budget: `SAGIPS_BENCH_BUDGET_MS` overrides the 2 s
+/// default so CI smoke runs finish in milliseconds.
+fn budget_from_env() -> Duration {
+    let ms = std::env::var("SAGIPS_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(2000);
+    Duration::from_millis(ms.max(1))
+}
+
+/// The three execution modes the perf trajectory compares.
+fn modes() -> [(&'static str, NativeOptions); 3] {
+    let scalar = NativeOptions { kernels: Kernels::Scalar, ..NativeOptions::default() };
+    let intra4 = NativeOptions { intra_threads: 4, ..NativeOptions::default() };
+    [("serial-scalar", scalar), ("serial-blocked", NativeOptions::default()), ("intra4", intra4)]
+}
+
+/// Seeded `gan_step` inputs shaped by the manifest's scenario.
+fn gan_inputs(
+    m: &Manifest,
+    batch: usize,
+    events: usize,
+) -> (GanState, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let sc = m.scenario_impl().expect("registered scenario");
+    let meta = m.model("paper").unwrap();
+    let mut rng = Rng::new(7);
+    let state = GanState::init(meta, m.leaky_slope, &mut rng);
+    let mut z = vec![0.0f32; batch * m.latent_dim];
+    let mut u = vec![0.0f32; batch * events * sc.noise_dim()];
+    let real = vec![0.3f32; batch * events * sc.event_dim()];
+    rng.fill_normal(&mut z);
+    rng.fill_uniform(&mut u);
+    (state, z, u, real)
+}
+
+/// The shared timing columns of one JSON row; callers append throughput
+/// or allocation columns before wrapping in `Value::Object`.
+fn base_row(
     backend: &str,
     artifact: &str,
     batch: usize,
     r: &BenchResult,
-    allocs_per_call: Option<u64>,
-) -> Value {
+) -> BTreeMap<String, Value> {
     let mut m = BTreeMap::new();
     m.insert("backend".into(), Value::String(backend.into()));
     m.insert("artifact".into(), Value::String(artifact.into()));
@@ -64,10 +107,7 @@ fn row_json(
     m.insert("p90_us".into(), Value::Number(r.p90.as_secs_f64() * 1e6));
     m.insert("mean_us".into(), Value::Number(r.mean.as_secs_f64() * 1e6));
     m.insert("iters".into(), Value::Number(r.iters as f64));
-    if let Some(a) = allocs_per_call {
-        m.insert("allocs_per_call".into(), Value::Number(a as f64));
-    }
-    Value::Object(m)
+    m
 }
 
 /// Bench the zero-copy gan_step path on one handle; appends a JSON row.
@@ -83,14 +123,8 @@ fn bench_gan_step(
         return;
     }
     let m = h.manifest();
-    let meta = m.model("paper").unwrap().clone();
-    let mut rng = Rng::new(7);
-    let state = GanState::init(&meta, m.leaky_slope, &mut rng);
-    let mut z = vec![0.0f32; batch * m.latent_dim];
-    let mut u = vec![0.0f32; batch * 25 * 2];
-    let real = vec![0.3f32; batch * 25 * 2];
-    rng.fill_normal(&mut z);
-    rng.fill_uniform(&mut u);
+    let flops = gan_step_flops(m.model("paper").unwrap(), batch, 25);
+    let (state, z, u, real) = gan_inputs(m, batch, 25);
     let inputs: [&[f32]; 5] = [&state.gen, &state.disc, &z, &u, &real];
     let mut outputs: Vec<Vec<f32>> = Vec::new();
     // Warm: first call compiles (PJRT) / sizes the scratch (native).
@@ -118,16 +152,68 @@ fn bench_gan_step(
     if backend == "native" {
         println!("    steady-state allocations/call: {per_call}");
     }
-    rows.push(row_json(
-        backend,
-        &name,
-        batch,
-        &r,
-        (backend == "native").then_some(per_call),
-    ));
+    let secs = r.p50.as_secs_f64();
+    let mut row = base_row(backend, &name, batch, &r);
+    row.insert("gflops".into(), Value::Number(flops / secs / 1e9));
+    row.insert("events_per_s".into(), Value::Number((batch * 25) as f64 / secs));
+    if backend == "native" {
+        row.insert("allocs_per_call".into(), Value::Number(per_call as f64));
+    }
+    rows.push(Value::Object(row));
 }
 
-fn bench_forward_paths(h: &RuntimeHandle, backend: &str, rows: &mut Vec<Value>) {
+/// The headline perf trajectory: scalar vs blocked kernels vs blocked
+/// with 4 intra-rank worker threads, on the paper-sized `gan_step`.
+/// GFLOP/s counts GEMM work only; events/s is generated events per
+/// second of wall time (the paper's throughput unit).
+fn bench_kernel_trajectory(scenario: &str, budget: Duration, rows: &mut Vec<Value>) {
+    let m = Manifest::synthetic_for(scenario).expect("registered scenario");
+    let (batch, events) = (64usize, 25usize);
+    let name = format!("gan_step_paper_b{batch}_e{events}");
+    let flops = gan_step_flops(m.model("paper").unwrap(), batch, events);
+    let (state, z, u, real) = gan_inputs(&m, batch, events);
+    let inputs: [&[f32]; 5] = [&state.gen, &state.disc, &z, &u, &real];
+
+    header(&format!("gan_step kernel/parallelism trajectory — {scenario}"));
+    let mut summary: Vec<(&'static str, Duration, f64, f64)> = Vec::new();
+    for (mode, opts) in modes() {
+        let rt = NativeRuntime::with_options(m.clone(), opts);
+        let h = rt.handle();
+        let mut outputs: Vec<Vec<f32>> = Vec::new();
+        h.execute_into(&name, &inputs, &mut outputs).unwrap();
+        let before = allocs();
+        for _ in 0..10 {
+            h.execute_into(&name, &inputs, &mut outputs).unwrap();
+        }
+        let per_call = (allocs() - before) / 10;
+        let r = bench_for(&format!("[{scenario}] {mode} b={batch}"), 2, budget, || {
+            h.execute_into(&name, &inputs, &mut outputs).unwrap();
+            std::hint::black_box(&outputs);
+        });
+        println!("{}", r.row());
+        let secs = r.p50.as_secs_f64();
+        let gflops = flops / secs / 1e9;
+        let eps = (batch * events) as f64 / secs;
+        summary.push((mode, r.p50, gflops, eps));
+        let mut row = base_row("native", &name, batch, &r);
+        row.insert("scenario".into(), Value::String(scenario.into()));
+        row.insert("mode".into(), Value::String(mode.into()));
+        row.insert("gflops".into(), Value::Number(gflops));
+        row.insert("events_per_s".into(), Value::Number(eps));
+        row.insert("allocs_per_call".into(), Value::Number(per_call as f64));
+        rows.push(Value::Object(row));
+    }
+
+    let base = summary[0].1.as_secs_f64();
+    println!("\n--- {scenario}: gan_step paper b={batch} e={events} — mode comparison ---");
+    println!("{:<16} {:>10} {:>12} {:>14} {:>9}", "mode", "p50", "GFLOP/s", "events/s", "speedup");
+    for (mode, p50, gflops, eps) in &summary {
+        let speedup = base / p50.as_secs_f64();
+        println!("{mode:<16} {:>10} {gflops:>12.2} {eps:>14.0} {speedup:>8.2}x", fmt_dur(*p50));
+    }
+}
+
+fn bench_forward_paths(h: &RuntimeHandle, backend: &str, budget: Duration, rows: &mut Vec<Value>) {
     let m = h.manifest();
     // gen_predict (the residual evaluator's cost).
     if m.artifact("gen_predict_paper_k256").is_ok() {
@@ -140,18 +226,13 @@ fn bench_forward_paths(h: &RuntimeHandle, backend: &str, rows: &mut Vec<Value>) 
         let mut outputs: Vec<Vec<f32>> = Vec::new();
         h.execute_into("gen_predict_paper_k256", &inputs, &mut outputs)
             .unwrap();
-        let r = bench_for(
-            &format!("[{backend}] gen_predict k=256"),
-            2,
-            Duration::from_secs(1),
-            || {
-                h.execute_into("gen_predict_paper_k256", &inputs, &mut outputs)
-                    .unwrap();
-                std::hint::black_box(&outputs);
-            },
-        );
+        let r = bench_for(&format!("[{backend}] gen_predict k=256"), 2, budget, || {
+            h.execute_into("gen_predict_paper_k256", &inputs, &mut outputs)
+                .unwrap();
+            std::hint::black_box(&outputs);
+        });
         println!("{}", r.row());
-        rows.push(row_json(backend, "gen_predict_paper_k256", 256, &r, None));
+        rows.push(Value::Object(base_row(backend, "gen_predict_paper_k256", 256, &r)));
     }
 
     // pipeline alone (the sampler's cost).
@@ -166,7 +247,7 @@ fn bench_forward_paths(h: &RuntimeHandle, backend: &str, rows: &mut Vec<Value>) 
         let r = bench_for(
             &format!("[{backend}] pipeline b=256 e=25 (6400 events)"),
             2,
-            Duration::from_secs(1),
+            budget,
             || {
                 h.execute_into("pipeline_b256_e25", &inputs, &mut outputs)
                     .unwrap();
@@ -174,12 +255,13 @@ fn bench_forward_paths(h: &RuntimeHandle, backend: &str, rows: &mut Vec<Value>) 
             },
         );
         println!("{}", r.row());
-        rows.push(row_json(backend, "pipeline_b256_e25", 256, &r, None));
+        rows.push(Value::Object(base_row(backend, "pipeline_b256_e25", 256, &r)));
     }
 }
 
 fn main() {
     sagips::util::logging::init_from_env();
+    let budget = budget_from_env();
     let mut rows: Vec<Value> = Vec::new();
 
     // --- native backend: always available, no artifacts needed ---
@@ -187,9 +269,15 @@ fn main() {
     let native = NativeRuntime::new(Manifest::synthetic());
     let nh = native.handle();
     for b in [4usize, 16, 64] {
-        bench_gan_step(&nh, "native", b, Duration::from_secs(2), &mut rows);
+        bench_gan_step(&nh, "native", b, budget, &mut rows);
     }
-    bench_forward_paths(&nh, "native", &mut rows);
+    bench_forward_paths(&nh, "native", budget / 2, &mut rows);
+
+    // --- kernel/parallelism trajectory: the serial-scalar vs
+    // serial-blocked vs intra4 comparison on two scenarios ---
+    for scenario in ["quantile", "deconv"] {
+        bench_kernel_trajectory(scenario, budget, &mut rows);
+    }
 
     // --- PJRT pool: only when the artifact set has been exported ---
     let pjrt_available = Path::new("artifacts").join("manifest.json").exists();
@@ -198,9 +286,9 @@ fn main() {
         let pool = RuntimePool::from_dir(Path::new("artifacts"), 2).expect("pool start");
         let h = pool.handle();
         for b in [4usize, 16, 64] {
-            bench_gan_step(&h, "pjrt", b, Duration::from_secs(2), &mut rows);
+            bench_gan_step(&h, "pjrt", b, budget, &mut rows);
         }
-        bench_forward_paths(&h, "pjrt", &mut rows);
+        bench_forward_paths(&h, "pjrt", budget / 2, &mut rows);
         pool.shutdown();
     } else {
         println!("\n(PJRT rows skipped: artifacts/manifest.json not present)");

@@ -251,6 +251,12 @@ pub struct RunConfig {
     /// Execution backend ("native" | "pjrt"). The native backend runs
     /// everywhere with no artifacts; pjrt executes the exported HLO.
     pub backend: BackendKind,
+    /// Intra-rank worker threads for the native backend's `gan_step`
+    /// (0 = serial, the default). The batch is split into fixed chunks
+    /// fanned over this many scoped threads per step; any value is
+    /// bit-identical to serial, so seeds stay reproducible
+    /// (`runtime::native::NativeOptions`). Ignored by the pjrt backend.
+    pub intra_threads: usize,
 }
 
 impl Default for RunConfig {
@@ -329,6 +335,7 @@ impl RunConfig {
                 }
                 "data_pool" => cfg.data_pool = as_usize(val, k)?,
                 "runtime_workers" => cfg.runtime_workers = as_usize(val, k)?,
+                "intra_threads" => cfg.intra_threads = as_usize(val, k)?,
                 "artifacts_dir" => cfg.artifacts_dir = req_str(val, k)?,
                 "backend" => {
                     cfg.backend = BackendKind::parse(
@@ -384,6 +391,11 @@ impl RunConfig {
         }
         if self.runtime_workers == 0 {
             return Err(Error::config("runtime_workers must be >= 1"));
+        }
+        // The native backend caps useful intra-step parallelism at its
+        // chunk count; far larger values are almost certainly typos.
+        if self.intra_threads > 64 {
+            return Err(Error::config("intra_threads must be <= 64 (0 = serial)"));
         }
         if self.chunking == ChunkPolicy::MaxElems(0) {
             return Err(Error::config("chunking max elems must be >= 1"));
@@ -651,6 +663,20 @@ mod tests {
             c.resume = Some("ckpts".into());
             c.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn intra_threads_parses_defaults_serial_and_validates() {
+        // Default: the paper-faithful serial step.
+        assert_eq!(RunConfig::default().intra_threads, 0);
+        let c = RunConfig::from_json(r#"{"intra_threads": 4}"#).unwrap();
+        assert_eq!(c.intra_threads, 4);
+        assert!(RunConfig::from_json(r#"{"intra_threads": "many"}"#).is_err());
+        let mut c = RunConfig::default();
+        c.intra_threads = 65;
+        assert!(c.validate().is_err());
+        c.intra_threads = 64;
+        c.validate().unwrap();
     }
 
     #[test]

@@ -42,6 +42,7 @@ pub fn paper_table3() -> RunConfig {
         artifacts_dir: "artifacts".into(),
         // Paper-faithful: execute the AOT-exported HLO on device.
         backend: BackendKind::Pjrt,
+        intra_threads: 0,
     }
 }
 
@@ -79,6 +80,7 @@ pub fn ci_default() -> RunConfig {
         artifacts_dir: "artifacts".into(),
         // Runs everywhere: the native backend needs no artifact export.
         backend: BackendKind::Native,
+        intra_threads: 0,
     }
 }
 

@@ -54,7 +54,8 @@ fn print_help() {
          common options: --scenario <name> --backend native|pjrt --artifacts <dir> \
          --workers <n> --seed <n>\n\
          engine: --chunking unchunked|auto|<elems> --staleness <k> \
-         (0 = blocking, 1 = overlap, k = bounded window)\n\
+         (0 = blocking, 1 = overlap, k = bounded window) \
+         --intra-threads <n> (native gan_step workers, 0 = serial)\n\
          fault tolerance: --ckpt-every <n> --ckpt-dir <dir> --ckpt-keep <n> \
          --resume <path>\n\
          (the native backend needs no artifacts and runs every scenario; \
@@ -97,6 +98,11 @@ fn common_specs() -> Vec<OptSpec> {
         cli::opt(
             "staleness",
             "exchange-window depth k: 0 = blocking, 1 = overlap, k = k-deep window",
+            Some("0"),
+        ),
+        cli::opt(
+            "intra-threads",
+            "native backend: worker threads per gan_step (0 = serial; bit-identical)",
             Some("0"),
         ),
         cli::flag("overlap", "deprecated alias for --staleness 1"),
@@ -143,6 +149,7 @@ fn build_cfg(a: &Args) -> Result<RunConfig> {
         cfg.backend = BackendKind::parse(v)?;
     }
     cfg.staleness = a.usize("staleness", cfg.staleness)?;
+    cfg.intra_threads = a.usize("intra-threads", cfg.intra_threads)?;
     if a.flag("overlap") {
         sagips::log_warn!("--overlap is deprecated — use --staleness 1");
         // An explicit --staleness always wins over the alias (mirrors the

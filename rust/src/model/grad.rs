@@ -5,9 +5,11 @@
 //! MLPs over the flat parameter layout, the quantile event pipeline, and
 //! the non-saturating BCE-with-logits losses. Everything operates on
 //! caller-provided buffers (parameter gradients *accumulate*, so the
-//! discriminator's real + fake branches sum naturally), and the inner
-//! loops run branch-free over contiguous rows so they auto-vectorize.
+//! discriminator's real + fake branches sum naturally), and every dense
+//! mat-op dispatches through [`crate::runtime::kernels`] — callers pick
+//! the scalar oracle or the blocked SIMD-friendly path per call.
 
+use crate::runtime::kernels::Kernels;
 use crate::runtime::manifest::LayerLayout;
 
 use super::reference::{self, fit};
@@ -36,6 +38,7 @@ pub fn mlp_forward_cached(
     x: &[f32],
     batch: usize,
     slope: f32,
+    kernels: Kernels,
     acts: &mut Vec<Vec<f32>>,
 ) {
     let nl = layout.len();
@@ -51,7 +54,7 @@ pub fn mlp_forward_cached(
         let layer = &layout[li];
         let out = &mut rest[0];
         fit(out, batch * layer.w_cols);
-        reference::layer_forward(flat, layer, input, batch, slope, li + 1 < nl, out);
+        reference::layer_forward(flat, layer, input, batch, slope, li + 1 < nl, kernels, out);
     }
 }
 
@@ -71,6 +74,7 @@ pub fn mlp_backward(
     x: &[f32],
     batch: usize,
     slope: f32,
+    kernels: Kernels,
     acts: &[Vec<f32>],
     d_out: &mut Vec<f32>,
     scratch: &mut Vec<f32>,
@@ -97,22 +101,13 @@ pub fn mlp_backward(
         debug_assert_eq!(xin.len(), batch * rows);
 
         // Parameter gradients: dW += xᵀ dPre (row i of dW is contiguous),
-        // db += column sums of dPre.
+        // db += column sums of dPre. Both kernel variants accumulate in
+        // ascending batch order, so the kernel choice is bit-invisible
+        // here too.
         if let Some(df) = d_flat.as_deref_mut() {
             let (dw, db) = layer_grads_mut(df, layer);
-            for r in 0..batch {
-                let drow = &cur[r * cols..(r + 1) * cols];
-                let xrow = &xin[r * rows..(r + 1) * rows];
-                for (i, &xi) in xrow.iter().enumerate() {
-                    let dwrow = &mut dw[i * cols..(i + 1) * cols];
-                    for (dwv, &dv) in dwrow.iter_mut().zip(drow) {
-                        *dwv += xi * dv;
-                    }
-                }
-                for (dbv, &dv) in db.iter_mut().zip(drow) {
-                    *dbv += dv;
-                }
-            }
+            kernels.matmul_at_b_acc(xin, cur, batch, rows, cols, dw);
+            kernels.col_sums_acc(cur, batch, cols, db);
         }
 
         // Input gradients: dX = dPre Wᵀ (dot over the contiguous weight
@@ -121,27 +116,11 @@ pub fn mlp_backward(
         let w = &flat[layer.w_offset..layer.w_offset + rows * cols];
         if li > 0 {
             fit(next, batch * rows);
-            input_grads(w, cur, next, batch, rows, cols);
+            kernels.matmul_abt(cur, w, batch, cols, rows, next);
             std::mem::swap(&mut cur, &mut next);
         } else if let Some(dx) = d_x.take() {
             debug_assert_eq!(dx.len(), batch * rows);
-            input_grads(w, cur, dx, batch, rows, cols);
-        }
-    }
-}
-
-/// dX = dPre Wᵀ into `dx` (overwritten).
-fn input_grads(w: &[f32], d_pre: &[f32], dx: &mut [f32], batch: usize, rows: usize, cols: usize) {
-    for r in 0..batch {
-        let drow = &d_pre[r * cols..(r + 1) * cols];
-        let dxrow = &mut dx[r * rows..(r + 1) * rows];
-        for (i, dxv) in dxrow.iter_mut().enumerate() {
-            let wrow = &w[i * cols..(i + 1) * cols];
-            let mut acc = 0.0f32;
-            for (&dv, &wv) in drow.iter().zip(wrow) {
-                acc += dv * wv;
-            }
-            *dxv = acc;
+            kernels.matmul_abt(cur, w, batch, cols, rows, dx);
         }
     }
 }
@@ -207,8 +186,10 @@ mod tests {
         y.iter().zip(c).map(|(&yv, &cv)| (yv * cv) as f64).sum()
     }
 
-    #[test]
-    fn backward_matches_finite_differences() {
+    /// FD check of the analytic gradients for one kernel variant — the
+    /// blocked path must satisfy the same finite-difference contract as
+    /// the scalar oracle, at sizes that don't divide the tile widths.
+    fn check_backward_against_finite_differences(kernels: Kernels) {
         let mut rng = Rng::new(42);
         for &sizes in &[&[3usize, 4, 2][..], &[2, 5, 3, 1][..], &[4, 4][..]] {
             let (layout, flat) = random_net(sizes, &mut rng);
@@ -221,7 +202,7 @@ mod tests {
 
             // Analytic gradient.
             let mut acts = Vec::new();
-            mlp_forward_cached(&flat, &layout, &x, batch, 0.2, &mut acts);
+            mlp_forward_cached(&flat, &layout, &x, batch, 0.2, kernels, &mut acts);
             let mut d_out = c.clone();
             let mut scratch = Vec::new();
             let mut d_flat = vec![0.0f32; flat.len()];
@@ -232,6 +213,7 @@ mod tests {
                 &x,
                 batch,
                 0.2,
+                kernels,
                 &acts,
                 &mut d_out,
                 &mut scratch,
@@ -277,12 +259,58 @@ mod tests {
     }
 
     #[test]
+    fn backward_matches_finite_differences() {
+        check_backward_against_finite_differences(Kernels::Scalar);
+        check_backward_against_finite_differences(Kernels::Blocked);
+    }
+
+    #[test]
+    fn scalar_and_blocked_param_grads_are_bit_identical() {
+        // dW and db accumulate in ascending batch order under both kernel
+        // variants — the determinism contract the chunked reduction in
+        // `runtime::native` builds on. Odd sizes exercise the tile tails.
+        let mut rng = Rng::new(23);
+        let (layout, flat) = random_net(&[5, 7, 3], &mut rng);
+        let batch = 5;
+        let x: Vec<f32> = (0..batch * 5).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let c: Vec<f32> = (0..batch * 3).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let grads = |kernels: Kernels| {
+            let mut acts = Vec::new();
+            mlp_forward_cached(&flat, &layout, &x, batch, 0.2, kernels, &mut acts);
+            let mut d_out = c.clone();
+            let mut scratch = Vec::new();
+            let mut d_flat = vec![0.0f32; flat.len()];
+            mlp_backward(
+                &flat,
+                &layout,
+                &x,
+                batch,
+                0.2,
+                kernels,
+                &acts,
+                &mut d_out,
+                &mut scratch,
+                Some(&mut d_flat),
+                None,
+            );
+            d_flat
+        };
+        // The last-layer dW/db see the unmodified cotangent, and the
+        // forward is bit-identical, so those regions must match exactly.
+        let a = grads(Kernels::Scalar);
+        let b = grads(Kernels::Blocked);
+        let last = &layout[layout.len() - 1];
+        let lo = last.w_offset;
+        assert_eq!(a[lo..], b[lo..], "last-layer dW/db diverged across kernels");
+    }
+
+    #[test]
     fn param_grads_accumulate_across_calls() {
         let mut rng = Rng::new(7);
         let (layout, flat) = random_net(&[2, 3, 1], &mut rng);
         let x: Vec<f32> = (0..4).map(|_| rng.normal_f32(0.0, 1.0)).collect();
         let mut acts = Vec::new();
-        mlp_forward_cached(&flat, &layout, &x, 2, 0.2, &mut acts);
+        mlp_forward_cached(&flat, &layout, &x, 2, 0.2, Kernels::default(), &mut acts);
         let run = |d_flat: &mut [f32]| {
             let mut d_out = vec![1.0f32; 2];
             let mut scratch = Vec::new();
@@ -292,6 +320,7 @@ mod tests {
                 &x,
                 2,
                 0.2,
+                Kernels::default(),
                 &acts,
                 &mut d_out,
                 &mut scratch,
@@ -338,7 +367,7 @@ mod tests {
         let (layout, flat) = random_net(&[3, 5, 4, 2], &mut rng);
         let x: Vec<f32> = (0..9).map(|_| rng.normal_f32(0.0, 1.0)).collect();
         let mut acts = Vec::new();
-        mlp_forward_cached(&flat, &layout, &x, 3, 0.2, &mut acts);
+        mlp_forward_cached(&flat, &layout, &x, 3, 0.2, Kernels::default(), &mut acts);
         let want = reference::mlp_forward(&flat, &layout, &x, 3, 0.2);
         assert_eq!(acts.last().unwrap(), &want);
     }

@@ -12,6 +12,7 @@
 //! caller-provided ping-pong scratch buffers instead of per-layer
 //! allocation.
 
+use crate::runtime::kernels::Kernels;
 use crate::runtime::manifest::LayerLayout;
 
 /// LeakyReLU. Written as a select (not `max`/`min` arithmetic, which
@@ -28,8 +29,11 @@ pub fn leaky_relu(x: f32, slope: f32) -> f32 {
 
 /// One dense layer over the flat parameter vector: `out = x W + b`, with
 /// optional LeakyReLU. `x` is (batch, rows) row-major, `out` (batch, cols);
-/// both contiguous. The inner accumulation runs over the contiguous weight
-/// row with no data-dependent branches.
+/// both contiguous. The matmul dispatches through
+/// [`crate::runtime::kernels`]; both kernel variants accumulate each
+/// output element in the same ascending-k order, so the result is
+/// bit-identical across [`Kernels::Scalar`] and [`Kernels::Blocked`].
+#[allow(clippy::too_many_arguments)]
 pub fn layer_forward(
     flat: &[f32],
     layer: &LayerLayout,
@@ -37,6 +41,7 @@ pub fn layer_forward(
     batch: usize,
     slope: f32,
     activate: bool,
+    kernels: Kernels,
     out: &mut [f32],
 ) {
     let (rows, cols) = (layer.w_rows, layer.w_cols);
@@ -44,30 +49,48 @@ pub fn layer_forward(
     debug_assert_eq!(out.len(), batch * cols);
     let w = &flat[layer.w_offset..layer.w_offset + rows * cols];
     let b = &flat[layer.b_offset..layer.b_offset + layer.b_len];
-    for r in 0..batch {
-        let xin = &x[r * rows..(r + 1) * rows];
-        let orow = &mut out[r * cols..(r + 1) * cols];
-        orow.copy_from_slice(b);
-        for (i, &xi) in xin.iter().enumerate() {
-            let wrow = &w[i * cols..(i + 1) * cols];
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += xi * wv;
-            }
-        }
-        if activate {
-            for o in orow.iter_mut() {
-                *o = leaky_relu(*o, slope);
-            }
+    kernels.matmul_bias(x, w, Some(b), batch, rows, cols, out);
+    if activate {
+        for o in out.iter_mut() {
+            *o = leaky_relu(*o, slope);
         }
     }
 }
 
-/// Reusable ping-pong scratch for [`mlp_forward_into`]. Buffers only ever
-/// grow, so steady-state forwards are allocation-free.
+/// Reusable ping-pong scratch for [`mlp_forward_into`]. Buffers grow on
+/// demand and stay warm across calls, so steady-state forwards are
+/// allocation-free; [`MlpScratch::trim`] caps the high-water mark.
 #[derive(Clone, Debug, Default)]
 pub struct MlpScratch {
     a: Vec<f32>,
     b: Vec<f32>,
+}
+
+impl MlpScratch {
+    /// Release excess capacity (see [`trim_vec`]): buffers far above their
+    /// last-used size shrink back, everything else keeps its storage.
+    pub fn trim(&mut self, floor: usize) {
+        trim_vec(&mut self.a, floor);
+        trim_vec(&mut self.b, floor);
+    }
+
+    /// Total f32 capacity currently held (memory diagnostics).
+    pub fn capacity(&self) -> usize {
+        self.a.capacity() + self.b.capacity()
+    }
+}
+
+/// High-water-mark cap for reusable buffers: shrink `v` back to
+/// `max(v.len(), floor)` when its capacity exceeds 4x that bound. The 4x
+/// hysteresis keeps steady-state workloads (sizes oscillating within a
+/// small band) allocation-free, while a one-off large run — e.g. one big
+/// scenario in a long multi-scenario process — no longer pins its peak
+/// footprint forever.
+pub(crate) fn trim_vec(v: &mut Vec<f32>, floor: usize) {
+    let want = v.len().max(floor);
+    if v.capacity() > 4 * want {
+        v.shrink_to(want);
+    }
 }
 
 /// Forward an MLP over flat params into a caller-provided output buffer:
@@ -75,12 +98,14 @@ pub struct MlpScratch {
 /// Hidden layers use LeakyReLU, the last layer is linear — matching
 /// `python/compile/nets.py`. Intermediate activations ping-pong through
 /// `scratch` — no per-layer allocation.
+#[allow(clippy::too_many_arguments)]
 pub fn mlp_forward_into(
     flat: &[f32],
     layout: &[LayerLayout],
     x: &[f32],
     batch: usize,
     slope: f32,
+    kernels: Kernels,
     scratch: &mut MlpScratch,
     out: &mut Vec<f32>,
 ) {
@@ -90,7 +115,7 @@ pub fn mlp_forward_into(
     // Single layer: straight into `out`.
     if nl == 1 {
         fit(out, batch * layout[0].w_cols);
-        layer_forward(flat, &layout[0], x, batch, slope, false, out);
+        layer_forward(flat, &layout[0], x, batch, slope, false, kernels, out);
         return;
     }
     // Hidden layers ping-pong between the two scratch buffers; the last
@@ -101,14 +126,15 @@ pub fn mlp_forward_into(
         let dst: &mut Vec<f32> = if last { &mut *out } else { &mut *next };
         fit(dst, batch * layer.w_cols);
         let input: &[f32] = if li == 0 { x } else { cur.as_slice() };
-        layer_forward(flat, layer, input, batch, slope, !last, dst);
+        layer_forward(flat, layer, input, batch, slope, !last, kernels, dst);
         if !last {
             std::mem::swap(&mut cur, &mut next);
         }
     }
 }
 
-/// Owned-result convenience wrapper around [`mlp_forward_into`].
+/// Owned-result convenience wrapper around [`mlp_forward_into`] (blocked
+/// kernels — the default execution path).
 pub fn mlp_forward(
     flat: &[f32],
     layout: &[LayerLayout],
@@ -118,7 +144,16 @@ pub fn mlp_forward(
 ) -> Vec<f32> {
     let mut scratch = MlpScratch::default();
     let mut out = Vec::new();
-    mlp_forward_into(flat, layout, x, batch, slope, &mut scratch, &mut out);
+    mlp_forward_into(
+        flat,
+        layout,
+        x,
+        batch,
+        slope,
+        Kernels::default(),
+        &mut scratch,
+        &mut out,
+    );
     out
 }
 
@@ -246,10 +281,11 @@ mod tests {
         let x = vec![0.3f32, -0.7, 1.2, 0.4];
         let mut scratch = MlpScratch::default();
         let mut out = Vec::new();
-        mlp_forward_into(&flat, &layout, &x, 2, 0.2, &mut scratch, &mut out);
+        let kn = Kernels::default();
+        mlp_forward_into(&flat, &layout, &x, 2, 0.2, kn, &mut scratch, &mut out);
         let first = out.clone();
         let ptr = out.as_ptr();
-        mlp_forward_into(&flat, &layout, &x, 2, 0.2, &mut scratch, &mut out);
+        mlp_forward_into(&flat, &layout, &x, 2, 0.2, kn, &mut scratch, &mut out);
         assert_eq!(out, first);
         assert_eq!(out.as_ptr(), ptr, "output buffer must be reused");
         // And the zero-branch removal did not change semantics: explicit
@@ -258,6 +294,52 @@ mod tests {
         let yz = mlp_forward(&flat, &layout, &xz, 2, 0.2);
         assert_eq!(yz.len(), 4);
         assert!(yz.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn trim_vec_caps_high_water_mark_with_hysteresis() {
+        // A buffer sized for a big run then reused small shrinks back...
+        let mut v = vec![0.0f32; 100_000];
+        v.truncate(64);
+        trim_vec(&mut v, 256);
+        assert!(v.capacity() <= 100_000 / 4, "capacity {}", v.capacity());
+        assert_eq!(v.len(), 64);
+        // ...but a warm buffer within the 4x band keeps its storage
+        // (steady state stays allocation-free).
+        let mut w = vec![0.0f32; 1000];
+        w.truncate(300);
+        let cap = w.capacity();
+        trim_vec(&mut w, 0);
+        assert_eq!(w.capacity(), cap);
+        // The floor protects small-but-hot buffers from churn.
+        let mut s = vec![0.0f32; 1024];
+        s.truncate(1);
+        let cap = s.capacity();
+        trim_vec(&mut s, 4096);
+        assert_eq!(s.capacity(), cap);
+    }
+
+    #[test]
+    fn scalar_and_blocked_layer_forward_are_bit_identical() {
+        // The forward numerics contract: kernel choice must not change a
+        // single bit (ascending-k accumulation in both variants).
+        let layout = LayerLayout {
+            w_offset: 0,
+            w_rows: 7,
+            w_cols: 5,
+            b_offset: 35,
+            b_len: 5,
+        };
+        let mut rng = crate::util::rng::Rng::new(17);
+        let mut flat = vec![0.0f32; 40];
+        rng.fill_normal(&mut flat);
+        let mut x = vec![0.0f32; 6 * 7];
+        rng.fill_normal(&mut x);
+        let mut a = vec![0.0f32; 6 * 5];
+        let mut b = vec![0.0f32; 6 * 5];
+        layer_forward(&flat, &layout, &x, 6, 0.2, true, Kernels::Scalar, &mut a);
+        layer_forward(&flat, &layout, &x, 6, 0.2, true, Kernels::Blocked, &mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

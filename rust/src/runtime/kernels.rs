@@ -1,0 +1,577 @@
+//! Cache-blocked, autovectorizer-friendly matrix kernels for the native
+//! backend's hot path.
+//!
+//! Every dense mat-op the native backend performs — the layer forward
+//! `out = xW + b`, the weight gradient `dW += XᵀdPre`, the input gradient
+//! `dX = dPre·Wᵀ`, and the bias column sums — routes through this module
+//! (`model::reference` forward, `model::grad` backward, and therefore the
+//! fused `gan_step`). Two implementations sit behind the [`Kernels`]
+//! selector:
+//!
+//! * [`Kernels::Scalar`] — the frozen naive triple loops the backend
+//!   shipped with. Kept verbatim as the parity oracle for tests and the
+//!   bench's baseline column; never tuned further.
+//! * [`Kernels::Blocked`] — register-tiled ([`MR`] rows share one weight
+//!   row load) and cache-blocked ([`KC`] k-panel, [`IC`] output-row panel)
+//!   loops whose inner statements are unit-stride slice zips with no
+//!   data-dependent branches, so the autovectorizer lowers them to SIMD.
+//!
+//! Numerics contract (load-bearing for seed reproducibility and for the
+//! `intra_threads` determinism guarantee in `runtime::native`):
+//!
+//! * [`matmul_bias`] and [`matmul_at_b_acc`] accumulate each output
+//!   element in **ascending k / ascending r order** — exactly the order
+//!   the scalar loops use — so the blocked forward and weight-gradient
+//!   paths are *bit-identical* to the scalar ones. Tiling only reorders
+//!   *across* independent output elements, never within one.
+//! * [`matmul_abt`] replaces the scalar single-accumulator dot with a
+//!   fixed 8-lane accumulation ([`dot8`]); its results differ from the
+//!   scalar path by f32 rounding only, but the lane split and the final
+//!   reduction order are fixed, so the blocked path is deterministic and
+//!   independent of batch chunking or thread count.
+//! * f32 accumulate throughout; the loss reductions stay f64 in
+//!   `runtime::native` (unchanged by this module).
+//!
+//! The module also owns the FLOP accounting ([`gan_step_flops`] et al.)
+//! used by `benches/micro_runtime.rs` to turn step latencies into GFLOP/s.
+
+use super::manifest::{LayerLayout, ModelMeta};
+
+/// Register tile height: output rows computed together in the blocked
+/// kernels, sharing each loaded weight/cotangent row.
+pub const MR: usize = 4;
+
+/// k-dimension panel for [`matmul_bias`]: the `x` columns consumed per
+/// sweep stay resident while [`MR`] output rows accumulate.
+pub const KC: usize = 256;
+
+/// Output-row panel for [`matmul_at_b_acc`]: at most this many rows of
+/// `dW` (each `n` wide) are kept hot while sweeping the batch, so the
+/// accumulator panel fits L1 for the model widths this repo uses.
+pub const IC: usize = 32;
+
+/// Which kernel implementation the native backend executes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Kernels {
+    /// Frozen naive loops: parity oracle and bench baseline.
+    Scalar,
+    /// Register-tiled + cache-blocked loops (the default).
+    #[default]
+    Blocked,
+}
+
+impl Kernels {
+    /// Label for bench rows and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernels::Scalar => "scalar",
+            Kernels::Blocked => "blocked",
+        }
+    }
+
+    /// `out = x·W (+ bias)`: `x` (m, k), `w` (k, n), `out` (m, n)
+    /// overwritten. Row-major, contiguous.
+    pub fn matmul_bias(
+        self,
+        x: &[f32],
+        w: &[f32],
+        bias: Option<&[f32]>,
+        m: usize,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        match self {
+            Kernels::Scalar => scalar::matmul_bias(x, w, bias, m, k, n, out),
+            Kernels::Blocked => matmul_bias(x, w, bias, m, k, n, out),
+        }
+    }
+
+    /// `c += aᵀ·b`: `a` (m, k), `b` (m, n), `c` (k, n) accumulated —
+    /// the weight gradient `dW += XᵀdPre`.
+    pub fn matmul_at_b_acc(
+        self,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        c: &mut [f32],
+    ) {
+        match self {
+            Kernels::Scalar => scalar::matmul_at_b_acc(a, b, m, k, n, c),
+            Kernels::Blocked => matmul_at_b_acc(a, b, m, k, n, c),
+        }
+    }
+
+    /// `c = a·bᵀ`: `a` (m, k), `b` (n, k), `c` (m, n) overwritten —
+    /// the input gradient `dX = dPre·Wᵀ` (each `c` element is a dot of
+    /// two contiguous rows).
+    pub fn matmul_abt(self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+        match self {
+            Kernels::Scalar => scalar::matmul_abt(a, b, m, k, n, c),
+            Kernels::Blocked => matmul_abt(a, b, m, k, n, c),
+        }
+    }
+
+    /// `db[j] += Σ_r b[r, j]` — the bias gradient column sums.
+    pub fn col_sums_acc(self, b: &[f32], m: usize, n: usize, db: &mut [f32]) {
+        // One unit-stride accumulation loop serves both variants; there
+        // is nothing to block.
+        scalar::col_sums_acc(b, m, n, db);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Blocked implementations
+// ---------------------------------------------------------------------
+
+/// Blocked `out = x·W (+ bias)`. Per output element the k accumulation
+/// order is ascending — bit-identical to [`scalar::matmul_bias`].
+pub fn matmul_bias(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    match bias {
+        Some(b) => {
+            debug_assert_eq!(b.len(), n);
+            for orow in out.chunks_exact_mut(n) {
+                orow.copy_from_slice(b);
+            }
+        }
+        None => out.fill(0.0),
+    }
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let mut k0 = 0;
+    while k0 < k {
+        let kb = KC.min(k - k0);
+        let mut r = 0;
+        // MR-row register tile: four output rows accumulate against one
+        // streamed weight row, so each `w` row is loaded once per tile
+        // instead of once per output row.
+        while r + MR <= m {
+            let tile = &mut out[r * n..(r + MR) * n];
+            let (o0, rest) = tile.split_at_mut(n);
+            let (o1, rest) = rest.split_at_mut(n);
+            let (o2, o3) = rest.split_at_mut(n);
+            for kk in k0..k0 + kb {
+                let wrow = &w[kk * n..kk * n + n];
+                let x0 = x[r * k + kk];
+                let x1 = x[(r + 1) * k + kk];
+                let x2 = x[(r + 2) * k + kk];
+                let x3 = x[(r + 3) * k + kk];
+                for ((((o0v, o1v), o2v), o3v), &wv) in o0
+                    .iter_mut()
+                    .zip(o1.iter_mut())
+                    .zip(o2.iter_mut())
+                    .zip(o3.iter_mut())
+                    .zip(wrow)
+                {
+                    *o0v += x0 * wv;
+                    *o1v += x1 * wv;
+                    *o2v += x2 * wv;
+                    *o3v += x3 * wv;
+                }
+            }
+            r += MR;
+        }
+        // Tail rows (m % MR).
+        while r < m {
+            let orow = &mut out[r * n..(r + 1) * n];
+            for kk in k0..k0 + kb {
+                let wrow = &w[kk * n..kk * n + n];
+                let xv = x[r * k + kk];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+            r += 1;
+        }
+        k0 += kb;
+    }
+}
+
+/// Blocked `c += aᵀ·b`. Per `c` element the batch (r) accumulation order
+/// is ascending — bit-identical to [`scalar::matmul_at_b_acc`]. The `c`
+/// rows are processed in [`IC`]-row panels so the accumulator working set
+/// stays cache-resident while the batch streams past.
+pub fn matmul_at_b_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c.len(), k * n);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let mut i0 = 0;
+    while i0 < k {
+        let ib = IC.min(k - i0);
+        let cpanel = &mut c[i0 * n..(i0 + ib) * n];
+        for r in 0..m {
+            let brow = &b[r * n..r * n + n];
+            let arow = &a[r * k + i0..r * k + i0 + ib];
+            let mut i = 0;
+            while i + MR <= ib {
+                let tile = &mut cpanel[i * n..(i + MR) * n];
+                let (c0, rest) = tile.split_at_mut(n);
+                let (c1, rest) = rest.split_at_mut(n);
+                let (c2, c3) = rest.split_at_mut(n);
+                let a0 = arow[i];
+                let a1 = arow[i + 1];
+                let a2 = arow[i + 2];
+                let a3 = arow[i + 3];
+                for ((((c0v, c1v), c2v), c3v), &bv) in c0
+                    .iter_mut()
+                    .zip(c1.iter_mut())
+                    .zip(c2.iter_mut())
+                    .zip(c3.iter_mut())
+                    .zip(brow)
+                {
+                    *c0v += a0 * bv;
+                    *c1v += a1 * bv;
+                    *c2v += a2 * bv;
+                    *c3v += a3 * bv;
+                }
+                i += MR;
+            }
+            while i < ib {
+                let crow = &mut cpanel[i * n..(i + 1) * n];
+                let ai = arow[i];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += ai * bv;
+                }
+                i += 1;
+            }
+        }
+        i0 += ib;
+    }
+}
+
+/// Blocked `c = a·bᵀ` via the fixed-order 8-lane dot ([`dot8`]). Results
+/// differ from [`scalar::matmul_abt`] by f32 rounding (the lane split
+/// reassociates the sum) but are deterministic: the decomposition depends
+/// only on `k`.
+pub fn matmul_abt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    for (crow, arow) in c.chunks_exact_mut(n).zip(a.chunks_exact(k)) {
+        for (cv, brow) in crow.iter_mut().zip(b.chunks_exact(k)) {
+            *cv = dot8(arow, brow);
+        }
+    }
+}
+
+/// Dot product with eight independent accumulator lanes so the compiler
+/// can keep the loop in SIMD registers (a single-accumulator dot is a
+/// serial dependency chain the autovectorizer must not reassociate). The
+/// lane split and the final pairwise reduction order are fixed, so the
+/// result is a deterministic function of the inputs.
+#[inline]
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for (l, accv) in acc.iter_mut().enumerate() {
+            *accv += xa[l] * xb[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&xa, &xb) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += xa * xb;
+    }
+    let head = ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    head + tail
+}
+
+// ---------------------------------------------------------------------
+// Scalar (frozen baseline) implementations
+// ---------------------------------------------------------------------
+
+/// The naive loops the native backend originally shipped with, kept
+/// bit-for-bit as the parity oracle and the bench's `serial-scalar`
+/// baseline. Do not tune these.
+pub mod scalar {
+    /// Naive `out = x·W (+ bias)`: per output row, copy the bias then
+    /// accumulate weight rows in ascending k order.
+    pub fn matmul_bias(
+        x: &[f32],
+        w: &[f32],
+        bias: Option<&[f32]>,
+        m: usize,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(x.len(), m * k);
+        debug_assert_eq!(w.len(), k * n);
+        debug_assert_eq!(out.len(), m * n);
+        for r in 0..m {
+            let xrow = &x[r * k..(r + 1) * k];
+            let orow = &mut out[r * n..(r + 1) * n];
+            match bias {
+                Some(b) => orow.copy_from_slice(b),
+                None => orow.fill(0.0),
+            }
+            for (i, &xi) in xrow.iter().enumerate() {
+                let wrow = &w[i * n..(i + 1) * n];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xi * wv;
+                }
+            }
+        }
+    }
+
+    /// Naive `c += aᵀ·b`: batch-major sweep, ascending r per element.
+    pub fn matmul_at_b_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), m * n);
+        debug_assert_eq!(c.len(), k * n);
+        for r in 0..m {
+            let brow = &b[r * n..(r + 1) * n];
+            let arow = &a[r * k..(r + 1) * k];
+            for (i, &ai) in arow.iter().enumerate() {
+                let crow = &mut c[i * n..(i + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += ai * bv;
+                }
+            }
+        }
+    }
+
+    /// Naive `c = a·bᵀ`: single-accumulator dot per element.
+    pub fn matmul_abt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        debug_assert_eq!(c.len(), m * n);
+        for (crow, arow) in c.chunks_exact_mut(n).zip(a.chunks_exact(k)) {
+            for (cv, brow) in crow.iter_mut().zip(b.chunks_exact(k)) {
+                let mut acc = 0.0f32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                *cv = acc;
+            }
+        }
+    }
+
+    /// `db[j] += Σ_r b[r, j]`.
+    pub fn col_sums_acc(b: &[f32], m: usize, n: usize, db: &mut [f32]) {
+        debug_assert_eq!(b.len(), m * n);
+        debug_assert_eq!(db.len(), n);
+        for brow in b.chunks_exact(n) {
+            for (d, &v) in db.iter_mut().zip(brow) {
+                *d += v;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// FLOP accounting (bench: GFLOP/s)
+// ---------------------------------------------------------------------
+
+/// Mat-op FLOPs of one MLP forward over `batch` rows: `2·m·r·c` per
+/// layer. Bias adds and activations are excluded (O(m·c) noise next to
+/// the GEMM terms) — this is the standard "model FLOPs" lower bound.
+pub fn mlp_forward_flops(layout: &[LayerLayout], batch: usize) -> f64 {
+    layout
+        .iter()
+        .map(|l| 2.0 * batch as f64 * l.w_rows as f64 * l.w_cols as f64)
+        .sum()
+}
+
+/// Mat-op FLOPs of one MLP backward over `batch` rows, matching what
+/// `model::grad::mlp_backward` actually computes: `dW` (`2·m·r·c` per
+/// layer) only when parameter gradients are requested, `dX` (`2·m·r·c`)
+/// for every layer past the first and for the first only when the caller
+/// asks for input gradients. Bias column sums and activation-derivative
+/// scaling are excluded as above.
+pub fn mlp_backward_flops(
+    layout: &[LayerLayout],
+    batch: usize,
+    param_grads: bool,
+    input_grads: bool,
+) -> f64 {
+    let mut flops = 0.0;
+    for (li, l) in layout.iter().enumerate() {
+        let gemm = 2.0 * batch as f64 * l.w_rows as f64 * l.w_cols as f64;
+        if param_grads {
+            flops += gemm;
+        }
+        if li > 0 || input_grads {
+            flops += gemm;
+        }
+    }
+    flops
+}
+
+/// Mat-op FLOPs of one fused `gan_step` (see `runtime::native`): the
+/// generator forward over `batch` rows, two discriminator forwards over
+/// `batch·events` rows (fake + real), the discriminator input-gradient
+/// backward for the generator loss, the generator parameter backward, and
+/// the two discriminator parameter backwards. The scenario's forward
+/// operator and VJP are excluded — they are O(batch·events·P) element
+/// ops, not GEMMs — so reported GFLOP/s is a lower bound on sustained
+/// arithmetic throughput.
+pub fn gan_step_flops(meta: &ModelMeta, batch: usize, events: usize) -> f64 {
+    let n = batch * events;
+    mlp_forward_flops(&meta.gen_layout, batch)
+        + 2.0 * mlp_forward_flops(&meta.disc_layout, n)
+        + mlp_backward_flops(&meta.disc_layout, n, false, true)
+        + mlp_backward_flops(&meta.gen_layout, batch, true, false)
+        + 2.0 * mlp_backward_flops(&meta.disc_layout, n, true, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn filled(len: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    /// Shapes chosen to exercise every tile-tail combination: m not a
+    /// multiple of MR, k crossing KC, n odd, plus degenerate edges.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (2, 3, 5),
+        (4, 8, 8),
+        (5, 7, 9),
+        (7, 13, 11),
+        (33, 300, 17),
+        (16, 6, 157),
+    ];
+
+    #[test]
+    fn blocked_matmul_bias_is_bit_identical_to_scalar() {
+        let mut rng = Rng::new(101);
+        for &(m, k, n) in SHAPES {
+            let x = filled(m * k, &mut rng);
+            let w = filled(k * n, &mut rng);
+            let b = filled(n, &mut rng);
+            for bias in [Some(b.as_slice()), None] {
+                let mut got = vec![f32::NAN; m * n];
+                let mut want = vec![f32::NAN; m * n];
+                matmul_bias(&x, &w, bias, m, k, n, &mut got);
+                scalar::matmul_bias(&x, &w, bias, m, k, n, &mut want);
+                assert_eq!(got, want, "matmul_bias ({m},{k},{n}) bias={}", bias.is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_at_b_acc_is_bit_identical_to_scalar() {
+        let mut rng = Rng::new(102);
+        for &(m, k, n) in SHAPES {
+            let a = filled(m * k, &mut rng);
+            let b = filled(m * n, &mut rng);
+            // Nonzero start: += semantics must match too.
+            let init = filled(k * n, &mut rng);
+            let mut got = init.clone();
+            let mut want = init;
+            matmul_at_b_acc(&a, &b, m, k, n, &mut got);
+            scalar::matmul_at_b_acc(&a, &b, m, k, n, &mut want);
+            assert_eq!(got, want, "matmul_at_b_acc ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_abt_matches_scalar_within_rounding() {
+        let mut rng = Rng::new(103);
+        for &(m, k, n) in SHAPES {
+            let a = filled(m * k, &mut rng);
+            let b = filled(n * k, &mut rng);
+            let mut got = vec![f32::NAN; m * n];
+            let mut want = vec![f32::NAN; m * n];
+            matmul_abt(&a, &b, m, k, n, &mut got);
+            scalar::matmul_abt(&a, &b, m, k, n, &mut want);
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    (g - w).abs() <= 1e-4 + 1e-4 * w.abs().max(g.abs()),
+                    "matmul_abt ({m},{k},{n}): {g} vs {w}"
+                );
+            }
+            // And the blocked path is itself deterministic.
+            let mut again = vec![f32::NAN; m * n];
+            matmul_abt(&a, &b, m, k, n, &mut again);
+            assert_eq!(got, again);
+        }
+    }
+
+    #[test]
+    fn dot8_matches_f64_reference() {
+        let mut rng = Rng::new(104);
+        for len in [0usize, 1, 7, 8, 9, 16, 31, 64, 157] {
+            let a = filled(len, &mut rng);
+            let b = filled(len, &mut rng);
+            let want: f64 = a.iter().zip(&b).map(|(&x, &y)| (x as f64) * (y as f64)).sum();
+            let got = dot8(&a, &b) as f64;
+            assert!(
+                (got - want).abs() <= 1e-4 + 1e-5 * want.abs(),
+                "len {len}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn col_sums_accumulate() {
+        let b = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut db = vec![10.0f32, 20.0];
+        Kernels::Blocked.col_sums_acc(&b, 3, 2, &mut db);
+        assert_eq!(db, vec![10.0 + 1.0 + 3.0 + 5.0, 20.0 + 2.0 + 4.0 + 6.0]);
+    }
+
+    #[test]
+    fn kernels_selector_dispatches_both_paths() {
+        let mut rng = Rng::new(105);
+        let (m, k, n) = (5, 6, 7);
+        let x = filled(m * k, &mut rng);
+        let w = filled(k * n, &mut rng);
+        for kind in [Kernels::Scalar, Kernels::Blocked] {
+            let mut out = vec![0.0f32; m * n];
+            kind.matmul_bias(&x, &w, None, m, k, n, &mut out);
+            assert!(out.iter().all(|v| v.is_finite()), "{}", kind.name());
+        }
+        assert_eq!(Kernels::default(), Kernels::Blocked);
+        assert_eq!(Kernels::Scalar.name(), "scalar");
+    }
+
+    #[test]
+    fn flop_counts_match_hand_computation() {
+        // One 3 -> 4 -> 2 net, batch 5.
+        let (_, layout, _) = crate::runtime::manifest::layout_from_sizes(&[3, 4, 2]);
+        let fwd = mlp_forward_flops(&layout, 5);
+        assert_eq!(fwd, 2.0 * 5.0 * (3.0 * 4.0 + 4.0 * 2.0));
+        // Full backward: dW everywhere + dX everywhere.
+        let bwd = mlp_backward_flops(&layout, 5, true, true);
+        assert_eq!(bwd, 2.0 * fwd);
+        // Input-only backward skips dW; first-layer dX still counted.
+        assert_eq!(mlp_backward_flops(&layout, 5, false, true), fwd);
+        // Param-only backward: dW everywhere, dX for hidden layers only.
+        let param_only = mlp_backward_flops(&layout, 5, true, false);
+        assert_eq!(param_only, fwd + 2.0 * 5.0 * (4.0 * 2.0));
+    }
+
+    #[test]
+    fn gan_step_flops_are_positive_and_scale_with_batch() {
+        let m = crate::runtime::manifest::Manifest::synthetic();
+        let meta = m.model("paper").unwrap();
+        let f1 = gan_step_flops(meta, 16, 25);
+        let f2 = gan_step_flops(meta, 32, 25);
+        assert!(f1 > 0.0);
+        assert!((f2 / f1 - 2.0).abs() < 1e-9, "{f2} vs {f1}");
+    }
+}

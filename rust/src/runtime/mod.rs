@@ -31,6 +31,7 @@
 //! /opt/xla-example/README.md for why serialized protos from jax >= 0.5
 //! are rejected by xla_extension 0.5.1.
 
+pub mod kernels;
 pub mod manifest;
 pub mod native;
 pub mod pool;
@@ -43,8 +44,9 @@ use std::sync::Arc;
 use crate::config::{BackendKind, RunConfig};
 use crate::util::error::{Error, Result};
 
+pub use kernels::Kernels;
 pub use manifest::{ArtifactSpec, LayerLayout, Manifest, ModelMeta};
-pub use native::NativeRuntime;
+pub use native::{NativeOptions, NativeRuntime};
 pub use pool::RuntimePool;
 
 /// An execution backend: something that can run one artifact's
@@ -190,7 +192,11 @@ impl Runtime {
                 manifest.ensure_gan_step(&cfg.model, cfg.batch, cfg.events)?;
                 manifest.ensure_gen_predict(&cfg.model, 256)?;
                 manifest.ensure_pipeline(256, 25)?;
-                Ok(Runtime::Native(NativeRuntime::new(manifest)))
+                let opts = NativeOptions {
+                    intra_threads: cfg.intra_threads,
+                    ..NativeOptions::default()
+                };
+                Ok(Runtime::Native(NativeRuntime::with_options(manifest, opts)))
             }
         }
     }

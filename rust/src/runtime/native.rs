@@ -7,13 +7,32 @@
 //! * **zero-copy** — inputs are borrowed slices, outputs are the caller's
 //!   reused buffers ([`RuntimeHandle::execute_into`]);
 //! * **allocation-free** — all intermediates live in thread-local scratch
-//!   that only ever grows, so steady-state `gan_step` execution performs
-//!   no heap allocation (verified by `benches/micro_runtime.rs`);
+//!   that stays warm across calls, so steady-state serial `gan_step`
+//!   execution performs no heap allocation (verified by
+//!   `benches/micro_runtime.rs`); a high-water-mark cap ([`Scratch::trim`])
+//!   releases the excess after one-off oversized runs;
+//! * **blocked** — every dense mat-op dispatches through the cache-blocked
+//!   kernels in [`crate::runtime::kernels`] ([`NativeOptions::kernels`]
+//!   keeps the scalar oracle selectable for tests and benchmarks);
 //! * **fused** — the generator forward, the pipeline, and the
 //!   discriminator's fake-batch forward each run exactly once per step
 //!   and are shared between the generator and discriminator losses, the
 //!   same sharing `python/compile/model.py::gan_step` encodes with
 //!   explicit `jax.vjp` plumbing.
+//!
+//! # Intra-rank batch parallelism
+//!
+//! `gan_step` is decomposed into batch **chunks** — a fixed, even split
+//! whose count depends only on the batch size ([`chunk_count`]). Every
+//! row of the batch is independent through the whole step (forwards,
+//! scenario operator, backwards), so each chunk produces exact partial
+//! gradients and raw f64 loss sums, reduced afterwards in ascending chunk
+//! order. [`NativeOptions::intra_threads`] picks who runs the chunks:
+//! `0`/`1` loop over them serially on the calling rank thread; `n > 1`
+//! fans them out over `n` scoped worker threads. Because the chunk
+//! decomposition and the reduction order never depend on the thread
+//! count, **every setting is bit-identical to serial** — seeds stay
+//! reproducible while ranks with spare cores scale within a step.
 //!
 //! The math mirrors the JAX graph: LeakyReLU MLPs over the manifest's
 //! flat layout (`model::reference` forward, `model::grad` backward), the
@@ -36,11 +55,38 @@
 use std::cell::RefCell;
 use std::sync::Arc;
 
+use super::kernels::Kernels;
 use super::manifest::{ArtifactSpec, Manifest, ModelMeta};
 use super::{Backend, RuntimeHandle};
 use crate::model::grad;
-use crate::model::reference::{self, fit, MlpScratch};
+use crate::model::reference::{self, fit, trim_vec, MlpScratch};
+use crate::scenario::Scenario;
 use crate::util::error::{Error, Result};
+
+/// Upper bound on batch chunks per step — also the useful upper bound on
+/// [`NativeOptions::intra_threads`].
+const MAX_CHUNKS: usize = 16;
+
+/// Don't split the batch below this many rows per chunk.
+const MIN_CHUNK_ROWS: usize = 2;
+
+/// Buffers at or below this many f32s are never shrunk — churning small
+/// steady-state allocations isn't worth it.
+const TRIM_FLOOR: usize = 4096;
+
+/// Execution options for the native backend.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NativeOptions {
+    /// Worker threads for intra-rank batch parallelism inside `gan_step`:
+    /// `0` (the default) and `1` both run the chunk loop serially on the
+    /// calling rank thread; `n > 1` fans the chunks out over `n` scoped
+    /// worker threads per step. Every setting produces bit-identical
+    /// results — the chunk decomposition and reduction order are fixed by
+    /// the batch size alone (see the module docs).
+    pub intra_threads: usize,
+    /// Which matmul kernels execute the dense layers (default: blocked).
+    pub kernels: Kernels,
+}
 
 /// The owning native runtime (API twin of `RuntimePool`, minus threads).
 pub struct NativeRuntime {
@@ -48,10 +94,16 @@ pub struct NativeRuntime {
 }
 
 impl NativeRuntime {
-    /// Wrap a manifest — loaded from disk or [`Manifest::synthetic`].
+    /// Wrap a manifest — loaded from disk or [`Manifest::synthetic`] —
+    /// with default options (serial, blocked kernels).
     pub fn new(manifest: Manifest) -> NativeRuntime {
+        NativeRuntime::with_options(manifest, NativeOptions::default())
+    }
+
+    /// Wrap a manifest with explicit execution options.
+    pub fn with_options(manifest: Manifest, opts: NativeOptions) -> NativeRuntime {
         NativeRuntime {
-            handle: RuntimeHandle::new(Arc::new(manifest), Arc::new(NativeBackend)),
+            handle: RuntimeHandle::new(Arc::new(manifest), Arc::new(NativeBackend { opts })),
         }
     }
 
@@ -63,17 +115,48 @@ impl NativeRuntime {
     pub fn shutdown(self) {}
 }
 
-/// The [`Backend`] implementation. Stateless: per-thread scratch lives in
-/// a thread-local, so concurrent rank threads never contend.
-pub struct NativeBackend;
+/// The [`Backend`] implementation. Stateless apart from the execution
+/// options: per-thread scratch lives in a thread-local, so concurrent
+/// rank threads never contend.
+pub struct NativeBackend {
+    opts: NativeOptions,
+}
 
 thread_local! {
     static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
 }
 
-/// Grow-only per-thread work buffers.
+/// Per-thread work state: one [`ChunkState`] per live batch chunk plus
+/// the forward-only ping-pong scratch. Buffers grow on demand and stay
+/// warm across calls; [`Scratch::trim`] runs after every call to cap the
+/// high-water mark, so one oversized run in a long multi-scenario process
+/// no longer pins its peak footprint forever.
 #[derive(Default)]
 struct Scratch {
+    chunks: Vec<ChunkState>,
+    fwd: MlpScratch,
+}
+
+impl Scratch {
+    fn trim(&mut self) {
+        for c in &mut self.chunks {
+            c.trim(TRIM_FLOOR);
+        }
+        self.fwd.trim(TRIM_FLOOR);
+    }
+
+    fn capacity(&self) -> usize {
+        let chunks: usize = self.chunks.iter().map(ChunkState::capacity).sum();
+        chunks + self.fwd.capacity()
+    }
+}
+
+/// Work buffers plus partial results for one batch chunk. Parallel
+/// workers own disjoint `ChunkState`s borrowed from the calling thread's
+/// scratch, so they share no mutable state and allocate nothing (beyond
+/// first-use growth).
+#[derive(Default)]
+struct ChunkState {
     gen_acts: Vec<Vec<f32>>,
     disc_fake_acts: Vec<Vec<f32>>,
     disc_real_acts: Vec<Vec<f32>>,
@@ -82,7 +165,74 @@ struct Scratch {
     d_params: Vec<f32>,
     d_logits: Vec<f32>,
     backprop: Vec<f32>,
-    fwd: MlpScratch,
+    gen_grads: Vec<f32>,
+    disc_grads: Vec<f32>,
+    gen_loss: f64,
+    disc_loss: f64,
+}
+
+impl ChunkState {
+    fn trim(&mut self, floor: usize) {
+        let acts = [
+            &mut self.gen_acts,
+            &mut self.disc_fake_acts,
+            &mut self.disc_real_acts,
+        ];
+        for a in acts {
+            for v in a.iter_mut() {
+                trim_vec(v, floor);
+            }
+        }
+        let flats = [
+            &mut self.fake,
+            &mut self.d_fake,
+            &mut self.d_params,
+            &mut self.d_logits,
+            &mut self.backprop,
+            &mut self.gen_grads,
+            &mut self.disc_grads,
+        ];
+        for v in flats {
+            trim_vec(v, floor);
+        }
+    }
+
+    fn capacity(&self) -> usize {
+        let acts = [&self.gen_acts, &self.disc_fake_acts, &self.disc_real_acts];
+        let nested: usize = acts
+            .iter()
+            .flat_map(|a| a.iter())
+            .map(|v| v.capacity())
+            .sum();
+        nested
+            + self.fake.capacity()
+            + self.d_fake.capacity()
+            + self.d_params.capacity()
+            + self.d_logits.capacity()
+            + self.backprop.capacity()
+            + self.gen_grads.capacity()
+            + self.disc_grads.capacity()
+    }
+}
+
+/// Total f32 capacity currently held by this thread's native scratch
+/// (memory diagnostics; exercised by the high-water-mark tests).
+pub fn thread_scratch_capacity() -> usize {
+    SCRATCH.with(|s| s.borrow().capacity())
+}
+
+/// Fixed, batch-only chunk decomposition: `ceil(batch / MIN_CHUNK_ROWS)`
+/// chunks, capped at [`MAX_CHUNKS`]. The count depends on nothing but the
+/// batch size — not on `intra_threads` — so the serial path and every
+/// worker-pool width run the exact same per-chunk computations and the
+/// ascending-order reduction is bit-identical across thread counts.
+fn chunk_count(batch: usize) -> usize {
+    batch.div_ceil(MIN_CHUNK_ROWS).min(MAX_CHUNKS)
+}
+
+/// Rows `[b0, b1)` of chunk `i` — the standard even split.
+fn chunk_bounds(batch: usize, chunks: usize, i: usize) -> (usize, usize) {
+    (i * batch / chunks, (i + 1) * batch / chunks)
 }
 
 impl Backend for NativeBackend {
@@ -99,15 +249,20 @@ impl Backend for NativeBackend {
     ) -> Result<()> {
         SCRATCH.with(|s| {
             let mut s = s.borrow_mut();
-            match spec.kind.as_str() {
-                "gan_step" => gan_step(manifest, spec, inputs, outputs, &mut s),
-                "gen_predict" => gen_predict(manifest, spec, inputs, outputs, &mut s),
+            let result = match spec.kind.as_str() {
+                "gan_step" => gan_step(manifest, spec, inputs, outputs, &mut s, self.opts),
+                "gen_predict" => gen_predict(manifest, spec, inputs, outputs, &mut s, self.opts),
                 "pipeline" => pipeline(manifest, spec, inputs, outputs),
-                "disc_forward" => disc_forward(manifest, spec, inputs, outputs, &mut s),
+                "disc_forward" => disc_forward(manifest, spec, inputs, outputs, &mut s, self.opts),
                 other => Err(Error::Runtime(format!(
                     "native backend cannot execute artifact kind '{other}'"
                 ))),
-            }
+            };
+            // High-water-mark cap: a no-op in steady state (capacities sit
+            // at their last-used sizes), a real release after one-off
+            // oversized runs.
+            s.trim();
+            result
         })
     }
 }
@@ -120,6 +275,25 @@ fn model_meta<'m>(manifest: &'m Manifest, spec: &ArtifactSpec) -> Result<&'m Mod
     manifest.model(name)
 }
 
+/// Everything a batch chunk needs, shared read-only across the chunk
+/// executions (serial loop or worker pool).
+struct StepCtx<'a> {
+    meta: &'a ModelMeta,
+    sc: &'a dyn Scenario,
+    slope: f32,
+    inv_n: f32,
+    kernels: Kernels,
+    latent_dim: usize,
+    events: usize,
+    noise_dim: usize,
+    event_dim: usize,
+    gen_params: &'a [f32],
+    disc_params: &'a [f32],
+    z: &'a [f32],
+    u: &'a [f32],
+    real: &'a [f32],
+}
+
 /// One fused GAN training step. Inputs: gen_params, disc_params, z (B, L),
 /// u (B, E, K), real (B·E, D) where K/D are the scenario's noise/event
 /// dims. Outputs: gen_grads, disc_grads, gen_loss, disc_loss.
@@ -129,11 +303,12 @@ fn gan_step(
     inputs: &[&[f32]],
     outputs: &mut [Vec<f32>],
     s: &mut Scratch,
+    opts: NativeOptions,
 ) -> Result<()> {
     let meta = model_meta(manifest, spec)?;
     let sc = manifest.scenario_impl()?;
     let slope = manifest.leaky_slope as f32;
-    let [gen_params, disc_params, z, u, real] = inputs else {
+    let &[gen_params, disc_params, z, u, real] = inputs else {
         return Err(Error::Runtime(format!(
             "gan_step '{}' wants 5 inputs, got {}",
             spec.name,
@@ -155,127 +330,227 @@ fn gan_step(
     }
     let inv_n = 1.0f32 / n as f32;
 
-    // --- shared forward: generator -> forward operator -> discriminator ---
-    grad::mlp_forward_cached(gen_params, &meta.gen_layout, z, batch, slope, &mut s.gen_acts);
+    let ctx = StepCtx {
+        meta,
+        sc,
+        slope,
+        inv_n,
+        kernels: opts.kernels,
+        latent_dim: manifest.latent_dim,
+        events,
+        noise_dim: sc.noise_dim(),
+        event_dim: d,
+        gen_params,
+        disc_params,
+        z,
+        u,
+        real,
+    };
+
+    let chunks = chunk_count(batch);
+    s.chunks.resize_with(chunks, ChunkState::default);
+
+    let threads = opts.intra_threads.min(chunks);
+    if threads <= 1 {
+        for (i, cs) in s.chunks.iter_mut().enumerate() {
+            let (b0, b1) = chunk_bounds(batch, chunks, i);
+            gan_step_chunk(&ctx, b0, b1, cs);
+        }
+    } else {
+        // Round-robin the chunks over a short-lived scoped pool. Workers
+        // mutate disjoint `ChunkState`s borrowed from this thread's
+        // scratch — no locking, no allocation inside the workers; the
+        // spawns themselves cost O(threads) allocations per step, the
+        // documented price of `intra_threads > 1`.
+        let mut lanes: Vec<Vec<(usize, &mut ChunkState)>> =
+            (0..threads).map(|_| Vec::new()).collect();
+        for (i, cs) in s.chunks.iter_mut().enumerate() {
+            lanes[i % threads].push((i, cs));
+        }
+        let ctx = &ctx;
+        std::thread::scope(|scope| {
+            for lane in lanes {
+                scope.spawn(move || {
+                    for (i, cs) in lane {
+                        let (b0, b1) = chunk_bounds(batch, chunks, i);
+                        gan_step_chunk(ctx, b0, b1, cs);
+                    }
+                });
+            }
+        });
+    }
+
+    // Deterministic reduction: ascending chunk order, independent of the
+    // thread count — this is what makes `intra_threads = n` bit-identical
+    // to the serial path.
     {
-        let params = s.gen_acts[meta.gen_layout.len() - 1].as_slice(); // (B, P)
-        sc.forward_into(params, u, batch, events, &mut s.fake);
+        let gen_grads = &mut outputs[0];
+        fit(gen_grads, meta.gen_param_count);
+        for cs in &s.chunks {
+            for (o, &g) in gen_grads.iter_mut().zip(&cs.gen_grads) {
+                *o += g;
+            }
+        }
+    }
+    {
+        let disc_grads = &mut outputs[1];
+        fit(disc_grads, meta.disc_param_count);
+        for cs in &s.chunks {
+            for (o, &g) in disc_grads.iter_mut().zip(&cs.disc_grads) {
+                *o += g;
+            }
+        }
+    }
+    let gen_loss: f64 = s.chunks.iter().map(|c| c.gen_loss).sum();
+    let disc_loss: f64 = s.chunks.iter().map(|c| c.disc_loss).sum();
+    fit(&mut outputs[2], 1);
+    outputs[2][0] = (gen_loss * inv_n as f64) as f32;
+    fit(&mut outputs[3], 1);
+    outputs[3][0] = (disc_loss * inv_n as f64) as f32;
+    Ok(())
+}
+
+/// One chunk of the fused GAN step: batch rows `[b0, b1)`, writing partial
+/// gradients and raw (unscaled) f64 loss sums into `cs`. Every row is
+/// independent through the whole step, so the chunk split is exact — each
+/// partial is computed identically whether the chunks run on the serial
+/// loop or on a worker pool.
+fn gan_step_chunk(ctx: &StepCtx<'_>, b0: usize, b1: usize, cs: &mut ChunkState) {
+    let meta = ctx.meta;
+    let sc = ctx.sc;
+    let (slope, kernels, inv_n) = (ctx.slope, ctx.kernels, ctx.inv_n);
+    let batch = b1 - b0;
+    let events = ctx.events;
+    let n = batch * events;
+    let d = ctx.event_dim;
+    let z = &ctx.z[b0 * ctx.latent_dim..b1 * ctx.latent_dim];
+    let u = &ctx.u[b0 * events * ctx.noise_dim..b1 * events * ctx.noise_dim];
+    let real = &ctx.real[b0 * events * d..b1 * events * d];
+
+    // --- shared forward: generator -> forward operator -> discriminator ---
+    grad::mlp_forward_cached(
+        ctx.gen_params,
+        &meta.gen_layout,
+        z,
+        batch,
+        slope,
+        kernels,
+        &mut cs.gen_acts,
+    );
+    {
+        let params = cs.gen_acts[meta.gen_layout.len() - 1].as_slice(); // (chunk, P)
+        sc.forward_into(params, u, batch, events, &mut cs.fake);
     }
     grad::mlp_forward_cached(
-        disc_params,
+        ctx.disc_params,
         &meta.disc_layout,
-        &s.fake,
+        &cs.fake,
         n,
         slope,
-        &mut s.disc_fake_acts,
+        kernels,
+        &mut cs.disc_fake_acts,
     );
     grad::mlp_forward_cached(
-        disc_params,
+        ctx.disc_params,
         &meta.disc_layout,
         real,
         n,
         slope,
-        &mut s.disc_real_acts,
+        kernels,
+        &mut cs.disc_real_acts,
     );
     let last = meta.disc_layout.len() - 1;
 
-    // --- losses (f64 accumulation for the reductions) ---
+    // --- losses: raw f64 sums; the caller applies the global 1/N after
+    // the cross-chunk reduction ---
     let mut gen_loss = 0.0f64;
     let mut disc_loss = 0.0f64;
-    for &f in &s.disc_fake_acts[last] {
+    for &f in &cs.disc_fake_acts[last] {
         gen_loss += grad::softplus(-f) as f64;
         disc_loss += grad::softplus(f) as f64;
     }
-    for &r in &s.disc_real_acts[last] {
+    for &r in &cs.disc_real_acts[last] {
         disc_loss += grad::softplus(-r) as f64;
     }
-    gen_loss *= inv_n as f64;
-    disc_loss *= inv_n as f64;
+    cs.gen_loss = gen_loss;
+    cs.disc_loss = disc_loss;
 
     // --- generator backward: dL_G/dlogits -> dfake -> dparams -> dgen ---
-    fit(&mut s.d_logits, n);
-    for (dl, &f) in s.d_logits.iter_mut().zip(&s.disc_fake_acts[last]) {
+    fit(&mut cs.d_logits, n);
+    for (dl, &f) in cs.d_logits.iter_mut().zip(&cs.disc_fake_acts[last]) {
         *dl = (grad::sigmoid(f) - 1.0) * inv_n;
     }
-    fit(&mut s.d_fake, n * d);
+    fit(&mut cs.d_fake, n * d);
     grad::mlp_backward(
-        disc_params,
+        ctx.disc_params,
         &meta.disc_layout,
-        &s.fake,
+        &cs.fake,
         n,
         slope,
-        &s.disc_fake_acts,
-        &mut s.d_logits,
-        &mut s.backprop,
+        kernels,
+        &cs.disc_fake_acts,
+        &mut cs.d_logits,
+        &mut cs.backprop,
         None,
-        Some(&mut s.d_fake),
+        Some(&mut cs.d_fake),
     );
     {
         // The scenario's VJP splices the discriminator's input gradients
         // into the generator's output space.
-        let params = s.gen_acts[meta.gen_layout.len() - 1].as_slice();
-        sc.backward_params(params, &s.d_fake, u, batch, events, &mut s.d_params);
+        let params = cs.gen_acts[meta.gen_layout.len() - 1].as_slice();
+        sc.backward_params(params, &cs.d_fake, u, batch, events, &mut cs.d_params);
     }
-    {
-        let gen_grads = &mut outputs[0];
-        fit(gen_grads, meta.gen_param_count);
-        grad::mlp_backward(
-            gen_params,
-            &meta.gen_layout,
-            z,
-            batch,
-            slope,
-            &s.gen_acts,
-            &mut s.d_params,
-            &mut s.backprop,
-            Some(gen_grads),
-            None,
-        );
-    }
+    fit(&mut cs.gen_grads, meta.gen_param_count);
+    grad::mlp_backward(
+        ctx.gen_params,
+        &meta.gen_layout,
+        z,
+        batch,
+        slope,
+        kernels,
+        &cs.gen_acts,
+        &mut cs.d_params,
+        &mut cs.backprop,
+        Some(&mut cs.gen_grads),
+        None,
+    );
 
     // --- discriminator backward: real + fake logit branches accumulate ---
-    {
-        let disc_grads = &mut outputs[1];
-        fit(disc_grads, meta.disc_param_count);
-        fit(&mut s.d_logits, n);
-        for (dl, &r) in s.d_logits.iter_mut().zip(&s.disc_real_acts[last]) {
-            *dl = (grad::sigmoid(r) - 1.0) * inv_n;
-        }
-        grad::mlp_backward(
-            disc_params,
-            &meta.disc_layout,
-            real,
-            n,
-            slope,
-            &s.disc_real_acts,
-            &mut s.d_logits,
-            &mut s.backprop,
-            Some(disc_grads),
-            None,
-        );
-        fit(&mut s.d_logits, n);
-        for (dl, &f) in s.d_logits.iter_mut().zip(&s.disc_fake_acts[last]) {
-            *dl = grad::sigmoid(f) * inv_n;
-        }
-        grad::mlp_backward(
-            disc_params,
-            &meta.disc_layout,
-            &s.fake,
-            n,
-            slope,
-            &s.disc_fake_acts,
-            &mut s.d_logits,
-            &mut s.backprop,
-            Some(disc_grads),
-            None,
-        );
+    fit(&mut cs.disc_grads, meta.disc_param_count);
+    fit(&mut cs.d_logits, n);
+    for (dl, &r) in cs.d_logits.iter_mut().zip(&cs.disc_real_acts[last]) {
+        *dl = (grad::sigmoid(r) - 1.0) * inv_n;
     }
-
-    fit(&mut outputs[2], 1);
-    outputs[2][0] = gen_loss as f32;
-    fit(&mut outputs[3], 1);
-    outputs[3][0] = disc_loss as f32;
-    Ok(())
+    grad::mlp_backward(
+        ctx.disc_params,
+        &meta.disc_layout,
+        real,
+        n,
+        slope,
+        kernels,
+        &cs.disc_real_acts,
+        &mut cs.d_logits,
+        &mut cs.backprop,
+        Some(&mut cs.disc_grads),
+        None,
+    );
+    fit(&mut cs.d_logits, n);
+    for (dl, &f) in cs.d_logits.iter_mut().zip(&cs.disc_fake_acts[last]) {
+        *dl = grad::sigmoid(f) * inv_n;
+    }
+    grad::mlp_backward(
+        ctx.disc_params,
+        &meta.disc_layout,
+        &cs.fake,
+        n,
+        slope,
+        kernels,
+        &cs.disc_fake_acts,
+        &mut cs.d_logits,
+        &mut cs.backprop,
+        Some(&mut cs.disc_grads),
+        None,
+    );
 }
 
 /// Generator forward only: gen_params + z (k, L) -> params (k, P).
@@ -285,6 +560,7 @@ fn gen_predict(
     inputs: &[&[f32]],
     outputs: &mut [Vec<f32>],
     s: &mut Scratch,
+    opts: NativeOptions,
 ) -> Result<()> {
     let meta = model_meta(manifest, spec)?;
     let [gen_params, z] = inputs else {
@@ -300,6 +576,7 @@ fn gen_predict(
         z,
         k,
         manifest.leaky_slope as f32,
+        opts.kernels,
         &mut s.fwd,
         &mut outputs[0],
     );
@@ -342,6 +619,7 @@ fn disc_forward(
     inputs: &[&[f32]],
     outputs: &mut [Vec<f32>],
     s: &mut Scratch,
+    opts: NativeOptions,
 ) -> Result<()> {
     let meta = model_meta(manifest, spec)?;
     let [disc_params, events] = inputs else {
@@ -361,6 +639,7 @@ fn disc_forward(
         events,
         n,
         manifest.leaky_slope as f32,
+        opts.kernels,
         &mut s.fwd,
         &mut outputs[0],
     );
@@ -376,6 +655,21 @@ mod tests {
 
     fn handle() -> RuntimeHandle {
         NativeRuntime::new(Manifest::synthetic()).handle()
+    }
+
+    /// Seeded inputs for a gan_step artifact, sized from its spec.
+    fn gan_inputs(h: &RuntimeHandle, artifact: &str, seed: u64) -> Vec<Vec<f32>> {
+        let spec = h.manifest().artifact(artifact).unwrap().clone();
+        let meta = h.manifest().model(spec.model.as_deref().unwrap()).unwrap().clone();
+        let mut rng = Rng::new(seed);
+        let state = GanState::init(&meta, h.manifest().leaky_slope, &mut rng);
+        let mut z = vec![0.0f32; spec.inputs[2].elems()];
+        let mut u = vec![0.0f32; spec.inputs[3].elems()];
+        let mut real = vec![0.0f32; spec.inputs[4].elems()];
+        rng.fill_normal(&mut z);
+        rng.fill_uniform(&mut u);
+        rng.fill_uniform(&mut real);
+        vec![state.gen, state.disc, z, u, real]
     }
 
     #[test]
@@ -643,5 +937,76 @@ mod tests {
         assert_eq!(a[0], b[0]);
         assert_eq!(a[1], b[1]);
         assert_eq!(a[2], b[2]);
+    }
+
+    #[test]
+    fn intra_threads_reproduce_serial_bit_identically() {
+        // Odd batch (5) and events (3): the chunk boundaries don't divide
+        // evenly and the worker counts don't divide the chunk count — the
+        // outputs must still match the serial path bit for bit, on every
+        // registered scenario.
+        for sc in crate::scenario::registry() {
+            let mut m = Manifest::synthetic_for(sc.name()).unwrap();
+            m.ensure_gan_step("small", 5, 3).unwrap();
+            let serial = NativeRuntime::new(m.clone()).handle();
+            let ins = gan_inputs(&serial, "gan_step_small_b5_e3", 17);
+            let want = serial.execute("gan_step_small_b5_e3", ins.clone()).unwrap();
+            for threads in [2, 3, 8] {
+                let opts = NativeOptions { intra_threads: threads, ..NativeOptions::default() };
+                let h = NativeRuntime::with_options(m.clone(), opts).handle();
+                let got = h.execute("gan_step_small_b5_e3", ins.clone()).unwrap();
+                assert_eq!(want, got, "{} intra_threads={threads}", sc.name());
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_kernels_agree_with_the_scalar_oracle() {
+        // Full gan_step parity between the blocked kernels and the frozen
+        // scalar path, at sizes that don't divide the tile widths, on
+        // every registered scenario.
+        for sc in crate::scenario::registry() {
+            let mut m = Manifest::synthetic_for(sc.name()).unwrap();
+            m.ensure_gan_step("small", 5, 3).unwrap();
+            let opts = NativeOptions { kernels: Kernels::Scalar, ..NativeOptions::default() };
+            let scalar = NativeRuntime::with_options(m.clone(), opts).handle();
+            let blocked = NativeRuntime::new(m).handle();
+            let ins = gan_inputs(&scalar, "gan_step_small_b5_e3", 23);
+            let a = scalar.execute("gan_step_small_b5_e3", ins.clone()).unwrap();
+            let b = blocked.execute("gan_step_small_b5_e3", ins).unwrap();
+            // Forwards and losses only touch `matmul_bias`, which
+            // accumulates in the same order under both variants — exact.
+            assert_eq!(a[2], b[2], "{} gen_loss", sc.name());
+            assert_eq!(a[3], b[3], "{} disc_loss", sc.name());
+            // Gradients route inter-layer backprop through `matmul_abt`
+            // (deterministic 8-lane split) — equal up to f32 rounding.
+            for (oi, (avs, bvs)) in a.iter().zip(&b).take(2).enumerate() {
+                for (k, (&av, &bv)) in avs.iter().zip(bvs).enumerate() {
+                    let tol = 1e-4 + 1e-3 * av.abs().max(bv.abs());
+                    assert!(
+                        (av - bv).abs() <= tol,
+                        "{} out {oi} [{k}]: scalar {av} vs blocked {bv}",
+                        sc.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_high_water_mark_is_capped() {
+        // One oversized step must not pin peak scratch memory: after a
+        // small step, the trim pass drops the dead chunk states and
+        // shrinks oversized buffers.
+        let mut m = Manifest::synthetic();
+        m.ensure_gan_step("small", 2, 3).unwrap();
+        let h = NativeRuntime::new(m).handle();
+        let big = gan_inputs(&h, "gan_step_paper_b64_e25", 9);
+        h.execute("gan_step_paper_b64_e25", big).unwrap();
+        let peak = thread_scratch_capacity();
+        let small = gan_inputs(&h, "gan_step_small_b2_e3", 9);
+        h.execute("gan_step_small_b2_e3", small).unwrap();
+        let after = thread_scratch_capacity();
+        assert!(after < peak / 2, "scratch did not shrink: {peak} -> {after}");
     }
 }

@@ -332,6 +332,23 @@ fn native_backend_is_seed_reproducible_and_seed_sensitive() {
 }
 
 #[test]
+fn native_backend_intra_threads_training_matches_serial_bit_for_bit() {
+    // The intra-rank parallelism determinism contract at training level:
+    // the same seed with a worker pool inside gan_step reproduces the
+    // serial run exactly — every rank's parameters and the residuals.
+    let mut cfg = native_cfg(Mode::ArarArar, 4, 8);
+    let serial = run_training_from_config(&cfg).unwrap();
+    cfg.intra_threads = 3;
+    cfg.validate().unwrap();
+    let threaded = run_training_from_config(&cfg).unwrap();
+    for (sa, sb) in serial.states.iter().zip(&threaded.states) {
+        assert_eq!(sa.gen, sb.gen);
+        assert_eq!(sa.disc, sb.disc);
+    }
+    assert_eq!(serial.final_residuals.unwrap(), threaded.final_residuals.unwrap());
+}
+
+#[test]
 fn native_backend_overlap_and_chunked_engine_run() {
     // The PR-1 overlap/chunking machinery over real native numerics.
     let mut cfg = presets::throughput(&native_cfg(Mode::ConvArar, 4, 10));

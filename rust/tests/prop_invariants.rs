@@ -9,7 +9,7 @@ use sagips::comm::{GradMsg, LinkModel, LocalNetwork, RmaRegion, RmaWindow, Topol
 use sagips::config::Mode;
 use sagips::model::{grad, reference};
 use sagips::runtime::manifest::layout_from_sizes;
-use sagips::runtime::LayerLayout;
+use sagips::runtime::{Kernels, LayerLayout};
 use sagips::sim::{simulate, ComputeModel, SimConfig};
 use sagips::tensor::fusion::{segments_from_layout, FusionPlan};
 use sagips::util::json::Value;
@@ -49,8 +49,11 @@ fn prop_native_mlp_backward_matches_central_differences() {
                 .sum()
         };
 
+        // Random kernel variant: the scalar oracle and the blocked path
+        // must both satisfy the FD contract at arbitrary (non-tile) sizes.
+        let kernels = if g.bool() { Kernels::Blocked } else { Kernels::Scalar };
         let mut acts = Vec::new();
-        grad::mlp_forward_cached(&flat, &layout, &x, batch, slope, &mut acts);
+        grad::mlp_forward_cached(&flat, &layout, &x, batch, slope, kernels, &mut acts);
         let mut d_out = c.clone();
         let mut scratch = Vec::new();
         let mut d_flat = vec![0.0f32; flat.len()];
@@ -61,6 +64,7 @@ fn prop_native_mlp_backward_matches_central_differences() {
             &x,
             batch,
             slope,
+            kernels,
             &acts,
             &mut d_out,
             &mut scratch,
@@ -108,7 +112,7 @@ fn prop_cached_forward_matches_reference_forward() {
         let batch = g.usize_in(1..=4);
         let x: Vec<f32> = (0..batch * sizes[0]).map(|_| g.f32_in(-2.0..=2.0)).collect();
         let mut acts = Vec::new();
-        grad::mlp_forward_cached(&flat, &layout, &x, batch, 0.2, &mut acts);
+        grad::mlp_forward_cached(&flat, &layout, &x, batch, 0.2, Kernels::default(), &mut acts);
         let want = reference::mlp_forward(&flat, &layout, &x, batch, 0.2);
         assert_eq!(acts[layout.len() - 1], want);
     });
