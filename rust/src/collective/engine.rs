@@ -145,9 +145,11 @@ impl Collective for CollectiveEngine {
 
     fn start_reduce(&mut self, epoch: u64, buf: Vec<f32>) -> Result<()> {
         if self.outstanding() >= self.window {
-            return Err(Error::comm(
-                "start_reduce called with the exchange window full",
-            ));
+            return Err(Error::window_full(format!(
+                "start_reduce at depth {} (window {})",
+                self.outstanding(),
+                self.window
+            )));
         }
         self.job_tx
             .as_ref()
@@ -240,9 +242,12 @@ impl Drop for CollectiveEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collective::grouped::GroupedArar;
     use crate::collective::ring::ConvArar;
     use crate::collective::NullCollective;
     use crate::comm::{LinkModel, LocalNetwork, Topology};
+    use crate::fault::FaultPlan;
+    use std::sync::Arc;
 
     #[test]
     fn engine_runs_null_collective_asynchronously() {
@@ -260,7 +265,9 @@ mod tests {
         assert_eq!(e.window(), 1);
         assert!(e.wait_reduce().is_err());
         e.start_reduce(0, vec![0.0]).unwrap();
-        assert!(e.start_reduce(1, vec![0.0]).is_err());
+        // Overflow is typed backpressure, not a generic comm fault.
+        let err = e.start_reduce(1, vec![0.0]).unwrap_err();
+        assert!(err.is_window_full(), "got {err}");
         e.wait_reduce().unwrap();
         // After the wait the slot is free again.
         e.start_reduce(1, vec![0.0]).unwrap();
@@ -277,7 +284,7 @@ mod tests {
         e.start_reduce(2, vec![2.5]).unwrap();
         assert_eq!(e.in_flight(), 3);
         // Fourth submission exceeds the window.
-        assert!(e.start_reduce(3, vec![3.5]).is_err());
+        assert!(e.start_reduce(3, vec![3.5]).unwrap_err().is_window_full());
         // Results come back in submission order.
         for want in [0.5f32, 1.5, 2.5] {
             let (buf, _) = e.wait_reduce().unwrap();
@@ -438,6 +445,60 @@ mod tests {
             for v in g {
                 assert!((v - 2.0).abs() < 1e-5); // mean of 0, 2, 4
             }
+        }
+    }
+
+    // Fill a k-deep window over a fault-delayed network, then drain:
+    // results must settle in FIFO submission order and leave nothing in
+    // flight. Exercises drain() while exchanges are genuinely mid-ring
+    // (rank 0's sends carry injected per-epoch jitter).
+    fn drain_under_injected_delays(grouped: bool, k: usize) {
+        let n = 3;
+        let topo = Topology::new(n, 4);
+        let plan = Arc::new(FaultPlan::new(17).with_delay(0, 3.0, 0.5));
+        let eps = LocalNetwork::build_with_faults(&topo, LinkModel::zero(), Some(plan));
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                let v = ep.rank as f32;
+                std::thread::spawn(move || {
+                    let inner: Box<dyn Collective> = if grouped {
+                        Box::new(GroupedArar::new(ep, 1))
+                    } else {
+                        Box::new(ConvArar::new(ep))
+                    };
+                    let mut e = CollectiveEngine::spawn_windowed(inner, k).unwrap();
+                    for epoch in 0..k as u64 {
+                        e.start_reduce(epoch, vec![v + epoch as f32; 4]).unwrap();
+                    }
+                    assert_eq!(e.in_flight(), k);
+                    let settled = e.drain().unwrap();
+                    assert_eq!(e.in_flight(), 0);
+                    settled.into_iter().map(|(buf, _)| buf[0]).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            let applied = h.join().unwrap();
+            assert_eq!(applied.len(), k);
+            // mean of {0, 1, 2} = 1.0, shifted by the epoch index, FIFO.
+            for (e, v) in applied.iter().enumerate() {
+                assert!((v - (1.0 + e as f32)).abs() < 1e-5, "epoch {e}: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_drain_settles_fifo_under_injected_delays() {
+        for k in [1, 2, 4] {
+            drain_under_injected_delays(false, k);
+        }
+    }
+
+    #[test]
+    fn grouped_drain_settles_fifo_under_injected_delays() {
+        for k in [1, 2, 4] {
+            drain_under_injected_delays(true, k);
         }
     }
 

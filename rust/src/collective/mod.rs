@@ -67,6 +67,14 @@ pub struct CommStats {
     pub staleness_sum: u64,
     /// Averaged-gradient applications accounted in `staleness_sum`.
     pub applies: u64,
+    /// Exchanges abandoned past the deadline under `on_straggler: skip` —
+    /// the rank kept training on stale params and discarded the result on
+    /// eventual arrival. Filled by the rank pipeline.
+    pub skips: u64,
+    /// Exchanges that missed the deadline but were applied on eventual
+    /// arrival under `on_straggler: late_apply`. Filled by the rank
+    /// pipeline; their (larger) lag is included in `staleness_sum`.
+    pub late_applies: u64,
 }
 
 impl CommStats {
@@ -79,6 +87,8 @@ impl CommStats {
         self.contributions += other.contributions;
         self.staleness_sum += other.staleness_sum;
         self.applies += other.applies;
+        self.skips += other.skips;
+        self.late_applies += other.late_applies;
     }
 
     /// Mean applied-gradient staleness in epochs (0.0 when nothing was
@@ -414,16 +424,20 @@ mod tests {
         let mut a = CommStats {
             staleness_sum: 3,
             applies: 2,
+            skips: 1,
             ..Default::default()
         };
         let b = CommStats {
             staleness_sum: 1,
             applies: 2,
+            late_applies: 2,
             ..Default::default()
         };
         a.merge(&b);
         assert_eq!(a.staleness_sum, 4);
         assert_eq!(a.applies, 4);
+        assert_eq!(a.skips, 1);
+        assert_eq!(a.late_applies, 2);
         assert!((a.mean_staleness() - 1.0).abs() < 1e-12);
         assert_eq!(CommStats::default().mean_staleness(), 0.0);
     }

@@ -9,10 +9,12 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 
 use super::link_model::LinkModel;
 use super::message::GradMsg;
 use super::topology::Topology;
+use crate::fault::FaultPlan;
 use crate::util::error::{Error, Result};
 
 /// One rank's view of the network.
@@ -20,6 +22,8 @@ pub struct Endpoint {
     pub rank: usize,
     topo: Topology,
     link_model: LinkModel,
+    /// Deterministic fault injection, keyed by (sender rank, msg epoch).
+    faults: Option<Arc<FaultPlan>>,
     /// Senders to every peer: `tx[to]` is the link (self -> to).
     tx: HashMap<usize, Sender<GradMsg>>,
     /// Receivers from every peer: `rx[from]` is the link (from -> self).
@@ -28,11 +32,23 @@ pub struct Endpoint {
 
 impl Endpoint {
     /// Non-blocking send (MPI isend). Applies the link model's injected
-    /// delay as a delivery timestamp realized on the receiver side.
+    /// delay — plus any fault-plan delay for (sender, epoch) — as a
+    /// delivery timestamp realized on the receiver side, so a stalled or
+    /// jittery sender never blocks its own compute, only its peers' view
+    /// of it.
     pub fn isend(&self, to: usize, mut msg: GradMsg) -> Result<()> {
         msg.from = self.rank;
         let same_node = self.topo.node_of(self.rank) == self.topo.node_of(to);
-        if let Some(delay) = self.link_model.delay_for(same_node, msg.bytes()) {
+        let mut delay = self
+            .link_model
+            .delay_for(same_node, msg.bytes())
+            .unwrap_or_default();
+        if let Some(plan) = &self.faults {
+            if let Some(d) = plan.send_delay(self.rank, msg.epoch) {
+                delay += d;
+            }
+        }
+        if !delay.is_zero() {
             msg.deliver_at = Some(std::time::Instant::now() + delay);
         }
         self.tx
@@ -97,6 +113,16 @@ pub struct LocalNetwork;
 impl LocalNetwork {
     /// Create endpoints for `topo.ranks` ranks.
     pub fn build(topo: &Topology, link_model: LinkModel) -> Vec<Endpoint> {
+        Self::build_with_faults(topo, link_model, None)
+    }
+
+    /// Create endpoints with a shared deterministic [`FaultPlan`] injected
+    /// beneath every rank's sends.
+    pub fn build_with_faults(
+        topo: &Topology,
+        link_model: LinkModel,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> Vec<Endpoint> {
         let n = topo.ranks;
         // channels[from][to]
         let mut senders: Vec<HashMap<usize, Sender<GradMsg>>> =
@@ -121,6 +147,7 @@ impl LocalNetwork {
                 rank,
                 topo: topo.clone(),
                 link_model,
+                faults: faults.clone(),
                 tx,
                 rx,
             })
@@ -230,6 +257,28 @@ mod tests {
             .collect();
         let sum: f32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
         assert_eq!(sum, 0.0 + 1.0 + 2.0 + 3.0);
+    }
+
+    #[test]
+    fn fault_plan_stall_delays_only_the_stalled_sender() {
+        let topo = Topology::new(2, 4);
+        let plan = Arc::new(FaultPlan::new(5).with_stall(0, 3, 1, 40));
+        let eps = LocalNetwork::build_with_faults(&topo, LinkModel::zero(), Some(plan));
+        // Epoch outside the stall window: immediate.
+        eps[0].isend(1, GradMsg::new(0, 0, 0, vec![])).unwrap();
+        let t0 = std::time::Instant::now();
+        eps[1].recv(0).unwrap();
+        assert!(t0.elapsed() < std::time::Duration::from_millis(20));
+        // Stalled epoch: held for the stall duration.
+        eps[0].isend(1, GradMsg::new(0, 3, 0, vec![])).unwrap();
+        let t0 = std::time::Instant::now();
+        assert_eq!(eps[1].recv(0).unwrap().epoch, 3);
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(30));
+        // The healthy rank is untouched at the same epoch.
+        eps[1].isend(0, GradMsg::new(1, 3, 0, vec![])).unwrap();
+        let t0 = std::time::Instant::now();
+        eps[0].recv(1).unwrap();
+        assert!(t0.elapsed() < std::time::Duration::from_millis(20));
     }
 
     #[test]

@@ -170,6 +170,45 @@ impl ChunkPolicy {
     }
 }
 
+/// What a windowed rank does when the oldest in-flight exchange misses
+/// the `exchange_timeout_ms` deadline (straggler tolerance; see
+/// `docs/fault-tolerance.md`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StragglerPolicy {
+    /// Paper-faithful: wait for the exchange however long it takes. One
+    /// stalled rank stalls every ring it participates in (default).
+    Block,
+    /// Abandon the timed-out exchange: keep training on stale params and
+    /// discard the averaged result when it eventually lands. Bounded by
+    /// `skip_budget`; skips are counted in `CommStats::skips`.
+    Skip,
+    /// Stop waiting at the deadline but apply the averaged result whenever
+    /// it does arrive (at a larger staleness, counted in
+    /// `CommStats::late_applies`).
+    LateApply,
+}
+
+impl StragglerPolicy {
+    pub fn parse(s: &str) -> Result<StragglerPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "block" => Ok(StragglerPolicy::Block),
+            "skip" => Ok(StragglerPolicy::Skip),
+            "late_apply" | "late-apply" | "lateapply" => Ok(StragglerPolicy::LateApply),
+            other => Err(Error::config(format!(
+                "on_straggler must be block|skip|late_apply, got '{other}'"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StragglerPolicy::Block => "block",
+            StragglerPolicy::Skip => "skip",
+            StragglerPolicy::LateApply => "late_apply",
+        }
+    }
+}
+
 /// Full run configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -221,6 +260,22 @@ pub struct RunConfig {
     /// staleness. The deprecated JSON key `overlap_comm` / CLI flag
     /// `--overlap` parse as staleness 1.
     pub staleness: usize,
+    /// Straggler policy for windowed exchanges that miss the deadline
+    /// (default: block, the paper's behavior).
+    pub on_straggler: StragglerPolicy,
+    /// Deadline for waiting on the oldest in-flight exchange, in
+    /// milliseconds (0 = no deadline). Required (> 0) for the skip and
+    /// late-apply policies; also drives the per-rank health tracker's
+    /// timeout accounting.
+    pub exchange_timeout_ms: u64,
+    /// Deterministic fault injection: inline JSON (starts with `{`) or a
+    /// path to a JSON fault-plan file (see [`crate::fault::FaultPlan`]).
+    /// `None` = no injected faults.
+    pub fault_plan: Option<String>,
+    /// Maximum exchanges a rank may skip under `on_straggler: skip`
+    /// (0 = unlimited). Once exhausted, timed-out waits fall back to
+    /// blocking.
+    pub skip_budget: usize,
     /// Analysis-checkpoint cadence in epochs (paper: every 5k, 21
     /// checkpoints) — in-memory generator snapshots for the residual
     /// curves, distinct from the resumable run checkpoints below.
@@ -322,6 +377,15 @@ impl RunConfig {
                     );
                     cfg.staleness = usize::from(on);
                 }
+                "on_straggler" => {
+                    cfg.on_straggler = StragglerPolicy::parse(
+                        val.as_str()
+                            .ok_or_else(|| Error::config("on_straggler must be a string"))?,
+                    )?
+                }
+                "exchange_timeout_ms" => cfg.exchange_timeout_ms = as_usize(val, k)? as u64,
+                "fault_plan" => cfg.fault_plan = Some(req_str(val, k)?),
+                "skip_budget" => cfg.skip_budget = as_usize(val, k)?,
                 "checkpoint_every" => cfg.checkpoint_every = as_usize(val, k)?,
                 "ckpt_every" => cfg.ckpt_every = as_usize(val, k)?,
                 "ckpt_dir" => cfg.ckpt_dir = req_str(val, k)?,
@@ -414,6 +478,24 @@ impl RunConfig {
         }
         if matches!(&self.resume, Some(p) if p.is_empty()) {
             return Err(Error::config("resume needs a checkpoint path"));
+        }
+        if self.on_straggler != StragglerPolicy::Block {
+            if self.exchange_timeout_ms == 0 {
+                return Err(Error::config(format!(
+                    "on_straggler '{}' needs exchange_timeout_ms > 0",
+                    self.on_straggler.name()
+                )));
+            }
+            if self.staleness == 0 {
+                return Err(Error::config(format!(
+                    "on_straggler '{}' needs a windowed exchange (staleness >= 1): \
+                     the blocking path has no in-flight exchange to time out",
+                    self.on_straggler.name()
+                )));
+            }
+        }
+        if matches!(&self.fault_plan, Some(p) if p.is_empty()) {
+            return Err(Error::config("fault_plan needs a path or inline JSON"));
         }
         // Run checkpointing composes with any staleness: the rank
         // pipeline drains its exchange window to quiescence at the
@@ -647,6 +729,48 @@ mod tests {
         let mut c = RunConfig::default();
         c.resume = Some(String::new());
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn straggler_policy_parses_and_validates() {
+        assert_eq!(StragglerPolicy::parse("block").unwrap(), StragglerPolicy::Block);
+        assert_eq!(StragglerPolicy::parse("skip").unwrap(), StragglerPolicy::Skip);
+        assert_eq!(
+            StragglerPolicy::parse("late-apply").unwrap(),
+            StragglerPolicy::LateApply
+        );
+        assert_eq!(StragglerPolicy::LateApply.name(), "late_apply");
+        assert!(StragglerPolicy::parse("shrug").is_err());
+        // Defaults: paper-faithful blocking, no deadline, no faults.
+        let d = RunConfig::default();
+        assert_eq!(d.on_straggler, StragglerPolicy::Block);
+        assert_eq!(d.exchange_timeout_ms, 0);
+        assert!(d.fault_plan.is_none());
+        assert_eq!(d.skip_budget, 0);
+        // JSON knobs round-trip.
+        let c = RunConfig::from_json(
+            r#"{"on_straggler": "skip", "exchange_timeout_ms": 250,
+                "staleness": 2, "skip_budget": 8,
+                "fault_plan": "{\"seed\": 7}"}"#,
+        )
+        .unwrap();
+        assert_eq!(c.on_straggler, StragglerPolicy::Skip);
+        assert_eq!(c.exchange_timeout_ms, 250);
+        assert_eq!(c.skip_budget, 8);
+        assert_eq!(c.fault_plan.as_deref(), Some("{\"seed\": 7}"));
+        // Non-blocking policies need a deadline and a window.
+        let mut c = RunConfig::default();
+        c.on_straggler = StragglerPolicy::Skip;
+        c.staleness = 1;
+        assert!(c.validate().is_err()); // no deadline
+        c.exchange_timeout_ms = 100;
+        c.validate().unwrap();
+        c.staleness = 0;
+        assert!(c.validate().is_err()); // no window
+        let mut c = RunConfig::default();
+        c.fault_plan = Some(String::new());
+        assert!(c.validate().is_err());
+        assert!(RunConfig::from_json(r#"{"on_straggler": "panic"}"#).is_err());
     }
 
     #[test]

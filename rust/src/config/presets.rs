@@ -9,7 +9,7 @@
 //!   seconds.
 //! * [`weak_scaling`] — eq (10): batch = base/N with everything else fixed.
 
-use super::{BackendKind, ChunkPolicy, Mode, RunConfig};
+use super::{BackendKind, ChunkPolicy, Mode, RunConfig, StragglerPolicy};
 
 /// Paper-scale settings (Table III). Requires artifacts exported with
 /// `--paper-scale`.
@@ -31,6 +31,10 @@ pub fn paper_table3() -> RunConfig {
         fusion_bucket: 0,
         chunking: ChunkPolicy::Unchunked,
         staleness: 0,
+        on_straggler: StragglerPolicy::Block,
+        exchange_timeout_ms: 0,
+        fault_plan: None,
+        skip_budget: 0,
         checkpoint_every: 5000,
         ckpt_every: 0,
         ckpt_dir: "checkpoints".into(),
@@ -69,6 +73,10 @@ pub fn ci_default() -> RunConfig {
         fusion_bucket: 0,
         chunking: ChunkPolicy::Unchunked,
         staleness: 0,
+        on_straggler: StragglerPolicy::Block,
+        exchange_timeout_ms: 0,
+        fault_plan: None,
+        skip_budget: 0,
         checkpoint_every: 25,
         ckpt_every: 0,
         ckpt_dir: "checkpoints".into(),

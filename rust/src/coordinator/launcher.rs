@@ -13,8 +13,9 @@ use std::sync::Arc;
 
 use crate::collective;
 use crate::comm::{LinkModel, LocalNetwork, RmaRegion, Topology};
-use crate::config::{Mode, RunConfig};
+use crate::config::{Mode, RunConfig, StragglerPolicy};
 use crate::data::{Bootstrap, ToyDataset};
+use crate::fault::FaultPlan;
 use crate::metrics::MergedMetrics;
 use crate::model::checkpoint::CheckpointSeries;
 use crate::model::gan::GanState;
@@ -23,6 +24,7 @@ use crate::runtime::{Runtime, RuntimeHandle};
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 
+use super::pipeline::RankHealth;
 use super::rank::{run_rank, RankOutcome};
 use super::resume::{prepare_resume, RankResume, RunCheckpointer};
 
@@ -48,6 +50,8 @@ pub struct RunResult {
     pub final_residuals: Option<Vec<f64>>,
     /// Aggregate communication stats per rank.
     pub comm: Vec<collective::CommStats>,
+    /// Per-rank exchange health (deadline misses, settle latency).
+    pub health: Vec<RankHealth>,
     /// Epoch the run resumed from (`None` for a fresh run).
     pub resumed_from: Option<u64>,
 }
@@ -109,7 +113,25 @@ pub fn run_training_with_links(
         cfg.ranks,
         collective::rma_window_depth(cfg.gpus_per_node, cfg.chunking) * cfg.staleness.max(1),
     );
-    let endpoints = LocalNetwork::build(&topo, link_model);
+    // Deterministic fault injection: parse the plan once and share it
+    // with every endpoint — senders realize the plan's delays/stalls at
+    // isend time, keyed purely by (rank, epoch, plan seed).
+    let fault_plan = match &cfg.fault_plan {
+        Some(spec) => {
+            let plan = FaultPlan::from_spec(spec)?;
+            crate::log_info!(
+                "fault injection armed: seed {}, {} delayed / {} transient ranks, \
+                 {} stall windows",
+                plan.seed,
+                plan.n_delayed(),
+                plan.n_transient(),
+                plan.n_stalls()
+            );
+            Some(Arc::new(plan))
+        }
+        None => None,
+    };
+    let endpoints = LocalNetwork::build_with_faults(&topo, link_model, fault_plan);
     let collectives = collective::build_with_policy(
         cfg.mode,
         &topo,
@@ -126,12 +148,23 @@ pub fn run_training_with_links(
     // blocking all-reduce, and the simulator models it that way; hiding
     // it behind a comm thread would silently change the baseline being
     // compared against.
+    //
+    // Skip / late-apply need engine-window headroom beyond the staleness:
+    // an abandoned (or overdue) exchange keeps its engine slot until the
+    // straggler's ring finally settles, and without spare slots the very
+    // next submission would block on WindowFull — re-introducing the
+    // stall the policy exists to avoid. The headroom is the skip budget
+    // when bounded, else a fixed allowance.
+    let engine_window = match cfg.on_straggler {
+        StragglerPolicy::Block => cfg.staleness,
+        _ => cfg.staleness + if cfg.skip_budget > 0 { cfg.skip_budget } else { 16 },
+    };
     let collectives: Vec<Box<dyn collective::Collective>> =
         if cfg.staleness >= 1 && cfg.mode != Mode::Horovod {
             collectives
                 .into_iter()
                 .map(|c| {
-                    collective::engine::CollectiveEngine::spawn_windowed(c, cfg.staleness)
+                    collective::engine::CollectiveEngine::spawn_windowed(c, engine_window)
                         .map(|e| Box::new(e) as Box<dyn collective::Collective>)
                 })
                 .collect::<Result<_>>()?
@@ -255,6 +288,7 @@ pub fn run_training_with_links(
         metrics: MergedMetrics::new(outcomes.iter().map(|o| o.recorder.clone()).collect()),
         checkpoints: outcomes.iter().map(|o| o.checkpoints.clone()).collect(),
         comm: outcomes.iter().map(|o| o.comm_totals).collect(),
+        health: outcomes.iter().map(|o| o.health).collect(),
         states: outcomes.into_iter().map(|o| o.state).collect(),
         residual_curve,
         final_residuals,

@@ -39,12 +39,29 @@
 //! accumulates it into [`CommStats::staleness_sum`] /
 //! [`CommStats::applies`], so reports can surface the mean applied
 //! staleness next to the hot/hidden comm split.
+//!
+//! **Straggler tolerance.** With `exchange_timeout_ms > 0` the wait on
+//! the oldest in-flight exchange carries a deadline, and
+//! `on_straggler` decides what a miss means (see
+//! `docs/fault-tolerance.md`): `block` just accounts the timeout (health
+//! tracking) and keeps waiting; `skip` abandons the exchange — the rank
+//! trains on without that average, the result is discarded on eventual
+//! arrival (FIFO, tracked by an abandoned counter), and
+//! [`CommStats::skips`] counts it against the `skip_budget`;
+//! `late_apply` stops blocking but applies the result whenever it lands
+//! ([`CommStats::late_applies`]). A [`RankHealth`] tracker accumulates
+//! deadline misses and exchange latency per rank and is surfaced in the
+//! run summary plus a per-epoch `health` Recorder series. `drain()`
+//! still settles *everything* — including abandoned results, which it
+//! discards — so checkpoint quiescence and bit-identical resume hold
+//! under every policy.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::collective::{Collective, CommStats};
-use crate::config::RunConfig;
+use crate::config::{RunConfig, StragglerPolicy};
 use crate::data::Bootstrap;
 use crate::metrics::{Recorder, Timer};
 use crate::model::checkpoint::{CheckpointSeries, RankTrainState};
@@ -68,6 +85,116 @@ use super::resume::{RankResume, RunCheckpointer};
 struct InFlight {
     epoch: u64,
     grads: Vec<f32>,
+    /// When the exchange was submitted (health latency accounting).
+    started: Instant,
+    /// A wait on this exchange already missed the deadline (late-apply
+    /// policy: apply on arrival and count it in `CommStats::late_applies`).
+    timed_out: bool,
+}
+
+/// Coarse per-rank health classification from consecutive deadline
+/// misses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// No outstanding run of deadline misses.
+    Healthy,
+    /// 1..SUSPECT_AFTER consecutive deadline misses.
+    Degraded,
+    /// At least [`SUSPECT_AFTER`] consecutive deadline misses — the rank's
+    /// ring neighborhood looks stalled.
+    Suspect,
+}
+
+/// Consecutive deadline misses after which a rank is reported suspect.
+pub const SUSPECT_AFTER: u32 = 3;
+
+/// Sleep between polls while waiting under an exchange deadline.
+const POLL_INTERVAL: Duration = Duration::from_micros(200);
+
+impl HealthState {
+    /// Numeric encoding for the per-epoch `health` Recorder series.
+    pub fn as_f64(&self) -> f64 {
+        match self {
+            HealthState::Healthy => 0.0,
+            HealthState::Degraded => 1.0,
+            HealthState::Suspect => 2.0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Degraded => "degraded",
+            HealthState::Suspect => "suspect",
+        }
+    }
+}
+
+/// Per-rank exchange health accounting: deadline misses (consecutive and
+/// total) and settled-exchange latency. Kept by the pipeline, reported
+/// through [`super::rank::RankOutcome`] into the coordinator's run
+/// summary.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RankHealth {
+    /// Exchanges settled (applied; skipped exchanges are not latency-
+    /// accounted — their results arrive whenever the straggler recovers).
+    pub settled: u64,
+    /// Total deadline misses.
+    pub timeouts: u64,
+    /// Current run of consecutive deadline misses.
+    pub consecutive_timeouts: u32,
+    /// Worst run of consecutive deadline misses over the whole run.
+    pub max_consecutive_timeouts: u32,
+    /// Sum over settled exchanges of submit-to-apply latency (seconds).
+    pub latency_sum_s: f64,
+}
+
+impl RankHealth {
+    fn record_settled(&mut self, latency_s: f64) {
+        self.settled += 1;
+        self.latency_sum_s += latency_s;
+        self.consecutive_timeouts = 0;
+    }
+
+    fn record_timeout(&mut self) {
+        self.timeouts += 1;
+        self.consecutive_timeouts += 1;
+        self.max_consecutive_timeouts = self
+            .max_consecutive_timeouts
+            .max(self.consecutive_timeouts);
+    }
+
+    /// Mean submit-to-apply exchange latency in seconds (0.0 when nothing
+    /// settled).
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.settled == 0 {
+            0.0
+        } else {
+            self.latency_sum_s / self.settled as f64
+        }
+    }
+
+    /// Current health classification.
+    pub fn state(&self) -> HealthState {
+        if self.consecutive_timeouts >= SUSPECT_AFTER {
+            HealthState::Suspect
+        } else if self.consecutive_timeouts > 0 {
+            HealthState::Degraded
+        } else {
+            HealthState::Healthy
+        }
+    }
+
+    /// Worst classification reached over the run (for the summary table).
+    pub fn worst_state(&self) -> HealthState {
+        if self.max_consecutive_timeouts >= SUSPECT_AFTER {
+            HealthState::Suspect
+        } else if self.max_consecutive_timeouts > 0 {
+            HealthState::Degraded
+        } else {
+            HealthState::Healthy
+        }
+    }
 }
 
 /// One rank's training loop as a staged, bounded-staleness pipeline.
@@ -88,7 +215,23 @@ pub struct RankPipeline {
     recorder: Recorder,
     checkpoints: CheckpointSeries,
     comm_totals: CommStats,
-    /// In-flight exchanges, oldest first (≤ `staleness` entries).
+    /// Straggler policy for deadline misses (block = paper behavior).
+    policy: StragglerPolicy,
+    /// Deadline for waiting on the oldest in-flight exchange.
+    deadline: Option<Duration>,
+    /// Skip budget (0 = unlimited) and skips consumed so far.
+    skip_budget: usize,
+    skips_used: u64,
+    /// Exchanges abandoned under the skip policy whose results are still
+    /// travelling through the collective. FIFO guarantees they surface
+    /// *before* any live window entry's result, so the next `abandoned`
+    /// results received are discarded.
+    abandoned: usize,
+    /// Exchange health accounting (deadline misses, settle latency).
+    health: RankHealth,
+    /// In-flight exchanges, oldest first (≤ `staleness` entries; the
+    /// late-apply policy lets overdue entries ride beyond that, bounded
+    /// by the engine window).
     window: VecDeque<InFlight>,
     /// Reusable step output: its gradient buffers rotate with the step
     /// executor's and the window slots, so the epoch loop performs no
@@ -180,6 +323,13 @@ impl RankPipeline {
             recorder: Recorder::new(rank),
             checkpoints: CheckpointSeries::default(),
             comm_totals: CommStats::default(),
+            policy: cfg.on_straggler,
+            deadline: (cfg.exchange_timeout_ms > 0)
+                .then(|| Duration::from_millis(cfg.exchange_timeout_ms)),
+            skip_budget: cfg.skip_budget,
+            skips_used: 0,
+            abandoned: 0,
+            health: RankHealth::default(),
             window: VecDeque::new(),
             out: StepOutput::default(),
             grad_spares: Vec::new(),
@@ -275,9 +425,6 @@ impl RankPipeline {
             account_apply(&mut self.recorder, &mut stats, epoch, epoch);
             (t_comm, lap.lap_s(), stats)
         } else {
-            // Stage 5 (apply): collect the oldest exchange(s) once the
-            // window is full — FIFO, so the apply order is deterministic.
-            // Only the time blocked here counts as hot-path comm.
             let mut stats = CommStats::default();
             let mut t_comm = 0.0;
             let mut t_opt = 0.0;
@@ -285,17 +432,55 @@ impl RankPipeline {
             // earlier drain); rotated back into `out` when this epoch's
             // grads move in flight.
             let mut recycled = self.grad_spares.pop().unwrap_or_default();
+            // Overdue late-apply entries settle the moment their result
+            // lands — never blocking here, strictly FIFO from the front.
+            while self.window.front().is_some_and(|f| f.timed_out) {
+                match self.try_recv_live()? {
+                    Some(r) => {
+                        let freed =
+                            self.apply_result(r, epoch, &mut lap, &mut t_comm, &mut t_opt, &mut stats)?;
+                        self.grad_spares.push(std::mem::replace(&mut recycled, freed));
+                    }
+                    None => break,
+                }
+            }
+            // Stage 5 (apply): collect the oldest exchange(s) once the
+            // window is full — FIFO, so the apply order is deterministic.
+            // Only the time blocked here counts as hot-path comm. A
+            // deadline miss hands the decision to the straggler policy;
+            // `None` means the overdue entry stays windowed (late-apply).
             while self.window.len() >= self.staleness {
-                recycled =
-                    self.apply_oldest(epoch, &mut lap, &mut t_comm, &mut t_opt, &mut stats)?;
+                match self.settle_oldest(epoch, &mut lap, &mut t_comm, &mut t_opt, &mut stats)? {
+                    Some(freed) => {
+                        self.grad_spares.push(std::mem::replace(&mut recycled, freed))
+                    }
+                    None => break,
+                }
             }
             // Stages 3–4 (offload + exchange): pack into an owned buffer
-            // and start this epoch's reduce on the engine.
-            let buf = self.offloader.pack_owned(&self.out.gen_grads)?;
-            self.collective.start_reduce(epoch, buf)?;
+            // and start this epoch's reduce on the engine. WindowFull is
+            // retryable backpressure, not a fault — abandoned or overdue
+            // exchanges still hold engine slots — so settle one
+            // outstanding result and resubmit.
+            loop {
+                let buf = self.offloader.pack_owned(&self.out.gen_grads)?;
+                match self.collective.start_reduce(epoch, buf) {
+                    Ok(()) => break,
+                    Err(e) if e.is_window_full() => {
+                        if let Some(freed) = self
+                            .free_one_slot(epoch, &mut lap, &mut t_comm, &mut t_opt, &mut stats)?
+                        {
+                            self.grad_spares.push(std::mem::replace(&mut recycled, freed));
+                        }
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
             self.window.push_back(InFlight {
                 epoch,
                 grads: std::mem::replace(&mut self.out.gen_grads, recycled),
+                started: Instant::now(),
+                timed_out: false,
             });
             t_comm += lap.lap_s();
             (t_comm, t_opt, stats)
@@ -311,28 +496,97 @@ impl RankPipeline {
         self.recorder.push("comm_wait_s", epoch, stats.wait_s);
         self.recorder.push("optim_s", epoch, t_opt);
         self.recorder.push("events", epoch, self.disc_batch as f64);
+        // Health series only when a deadline is armed — default runs keep
+        // their metric set unchanged.
+        if self.deadline.is_some() {
+            self.recorder
+                .push("health", epoch, self.health.state().as_f64());
+        }
         Ok(())
     }
 
-    /// Stage 5 + 6 for the oldest in-flight exchange: wait (FIFO),
-    /// on-load, update the generator. Returns the freed full-gradient
-    /// buffer for rotation back into the step output.
-    fn apply_oldest(
+    /// Account and recycle one abandoned (skipped) exchange result: its
+    /// transport stats still count toward the totals, but the average is
+    /// never applied.
+    fn discard_abandoned(&mut self, buf: Vec<f32>, s: &CommStats) {
+        debug_assert!(self.abandoned > 0);
+        self.abandoned -= 1;
+        self.offloader.recycle(buf);
+        self.comm_totals.merge(s);
+    }
+
+    /// Receive the next *live* collective result without blocking,
+    /// discarding any abandoned results that surface first (FIFO: they
+    /// always precede live ones). `Ok(None)` when nothing live is ready.
+    fn try_recv_live(&mut self) -> Result<Option<(Vec<f32>, CommStats)>> {
+        loop {
+            if !self.collective.poll_reduce()? {
+                return Ok(None);
+            }
+            let (buf, s) = self.collective.wait_reduce()?; // ready: no block
+            if self.abandoned > 0 {
+                self.discard_abandoned(buf, &s);
+                continue;
+            }
+            return Ok(Some((buf, s)));
+        }
+    }
+
+    /// Blocking receive of the next live result. Callers must hold at
+    /// least one live window entry, or this waits on nothing.
+    fn recv_live(&mut self) -> Result<(Vec<f32>, CommStats)> {
+        loop {
+            let (buf, s) = self.collective.wait_reduce()?;
+            if self.abandoned > 0 {
+                self.discard_abandoned(buf, &s);
+                continue;
+            }
+            return Ok((buf, s));
+        }
+    }
+
+    /// Deadline-bounded receive of the next live result: `Ok(None)` on
+    /// expiry. Abandoned results discarded along the way do not extend
+    /// the deadline.
+    fn recv_live_deadline(
         &mut self,
+        deadline: Duration,
+    ) -> Result<Option<(Vec<f32>, CommStats)>> {
+        let expires = Instant::now() + deadline;
+        loop {
+            if let Some(r) = self.try_recv_live()? {
+                return Ok(Some(r));
+            }
+            if Instant::now() >= expires {
+                return Ok(None);
+            }
+            std::thread::sleep(POLL_INTERVAL);
+        }
+    }
+
+    /// Stage 5 + 6 for the oldest live window entry, given its averaged
+    /// result: on-load, update the generator, account staleness + health.
+    /// Returns the freed full-gradient buffer for rotation back into the
+    /// step output.
+    fn apply_result(
+        &mut self,
+        result: (Vec<f32>, CommStats),
         at_epoch: u64,
         lap: &mut Timer,
         t_comm: &mut f64,
         t_opt: &mut f64,
         stats: &mut CommStats,
     ) -> Result<Vec<f32>> {
+        let (reduced, mut s) = result;
         let InFlight {
             epoch: pe,
             grads: mut pgrads,
+            started,
+            timed_out,
         } = self
             .window
             .pop_front()
-            .expect("apply_oldest called with an empty window");
-        let (reduced, mut s) = self.collective.wait_reduce()?;
+            .expect("apply_result called with an empty window");
         self.offloader.onload_from(&reduced, &mut pgrads)?;
         self.offloader.recycle(reduced);
         // Only the time blocked here is hot-path comm; the worker's own
@@ -342,38 +596,141 @@ impl RankPipeline {
         self.gen_opt.step(&mut self.state.gen, &pgrads);
         *t_opt += lap.lap_s();
         self.recorder.push("comm_hidden_s", pe, s.wait_s);
+        if timed_out {
+            s.late_applies += 1;
+        }
+        self.health.record_settled(started.elapsed().as_secs_f64());
         account_apply(&mut self.recorder, &mut s, pe, at_epoch);
         stats.merge(&s);
         Ok(pgrads)
     }
 
+    /// Collect the oldest window entry — or let the straggler policy
+    /// decide on a deadline miss. `Some(buffer)` when a window slot was
+    /// released (applied or skipped); `None` when the overdue entry stays
+    /// windowed (late-apply).
+    fn settle_oldest(
+        &mut self,
+        at_epoch: u64,
+        lap: &mut Timer,
+        t_comm: &mut f64,
+        t_opt: &mut f64,
+        stats: &mut CommStats,
+    ) -> Result<Option<Vec<f32>>> {
+        let Some(deadline) = self.deadline else {
+            let r = self.recv_live()?;
+            return self
+                .apply_result(r, at_epoch, lap, t_comm, t_opt, stats)
+                .map(Some);
+        };
+        if let Some(r) = self.recv_live_deadline(deadline)? {
+            return self
+                .apply_result(r, at_epoch, lap, t_comm, t_opt, stats)
+                .map(Some);
+        }
+        self.health.record_timeout();
+        match self.policy {
+            // Paper semantics: the miss is accounting-only, keep waiting.
+            StragglerPolicy::Block => {
+                let r = self.recv_live()?;
+                self.apply_result(r, at_epoch, lap, t_comm, t_opt, stats)
+                    .map(Some)
+            }
+            StragglerPolicy::Skip => {
+                if self.skip_budget > 0 && self.skips_used >= self.skip_budget as u64 {
+                    // Budget exhausted: degrade to blocking.
+                    let r = self.recv_live()?;
+                    return self
+                        .apply_result(r, at_epoch, lap, t_comm, t_opt, stats)
+                        .map(Some);
+                }
+                let InFlight {
+                    epoch: pe, grads, ..
+                } = self
+                    .window
+                    .pop_front()
+                    .expect("settle_oldest called with an empty window");
+                self.abandoned += 1;
+                self.skips_used += 1;
+                stats.skips += 1;
+                *t_comm += lap.lap_s();
+                crate::log_info!(
+                    "rank {}: skipped exchange from epoch {pe} at epoch {at_epoch} \
+                     ({} skips used)",
+                    self.rank,
+                    self.skips_used
+                );
+                Ok(Some(grads))
+            }
+            StragglerPolicy::LateApply => {
+                if let Some(front) = self.window.front_mut() {
+                    front.timed_out = true;
+                }
+                *t_comm += lap.lap_s();
+                Ok(None)
+            }
+        }
+    }
+
+    /// Backpressure relief when a submission hits the engine's window
+    /// cap: block for the oldest outstanding result and consume it —
+    /// discarded if abandoned, applied to the window front otherwise.
+    fn free_one_slot(
+        &mut self,
+        at_epoch: u64,
+        lap: &mut Timer,
+        t_comm: &mut f64,
+        t_opt: &mut f64,
+        stats: &mut CommStats,
+    ) -> Result<Option<Vec<f32>>> {
+        let (buf, s) = self.collective.wait_reduce()?;
+        if self.abandoned > 0 {
+            self.discard_abandoned(buf, &s);
+            *t_comm += lap.lap_s();
+            return Ok(None);
+        }
+        self.apply_result((buf, s), at_epoch, lap, t_comm, t_opt, stats)
+            .map(Some)
+    }
+
     /// Quiescence: settle every in-flight exchange through
     /// [`Collective::drain`] and apply the averaged gradients in FIFO
-    /// order. After this the window is empty and the training state is
-    /// fully settled — safe to checkpoint. `at_epoch` is the epoch the
-    /// drain runs at (staleness accounting).
+    /// order. Results of exchanges abandoned under the skip policy are
+    /// settled too — and discarded — so nothing stays outstanding. After
+    /// this the window is empty and the training state is fully settled —
+    /// safe to checkpoint. `at_epoch` is the epoch the drain runs at
+    /// (staleness accounting).
     pub fn drain(&mut self, at_epoch: u64) -> Result<()> {
-        if self.window.is_empty() {
+        if self.window.is_empty() && self.abandoned == 0 {
             return Ok(());
         }
         let mut lap = Timer::start();
         let results = self.collective.drain()?;
-        // The settle blocked on every outstanding exchange at once;
-        // attribute an even share to each settled epoch's comm_s rather
-        // than spiking the oldest one.
-        let settle_share = lap.lap_s() / results.len().max(1) as f64;
-        if results.len() != self.window.len() {
+        if results.len() != self.window.len() + self.abandoned {
             return Err(Error::comm(format!(
-                "drain settled {} exchanges but {} are windowed — \
+                "drain settled {} exchanges but {} are windowed (+{} abandoned) — \
                  collective and pipeline disagree on the in-flight set",
                 results.len(),
-                self.window.len()
+                self.window.len(),
+                self.abandoned
             )));
         }
+        // The settle blocked on every outstanding exchange at once;
+        // attribute an even share to each settled *live* epoch's comm_s
+        // rather than spiking the oldest one.
+        let settle_share = lap.lap_s() / self.window.len().max(1) as f64;
         for (reduced, mut s) in results {
+            // FIFO: abandoned exchanges were started (and popped) before
+            // every live window entry, so their results surface first.
+            if self.abandoned > 0 {
+                self.discard_abandoned(reduced, &s);
+                continue;
+            }
             let InFlight {
                 epoch: pe,
                 grads: mut pgrads,
+                started,
+                timed_out,
             } = self.window.pop_front().expect("window length checked");
             self.offloader.onload_from(&reduced, &mut pgrads)?;
             self.offloader.recycle(reduced);
@@ -382,6 +739,10 @@ impl RankPipeline {
             self.recorder.push("comm_s", pe, t_comm);
             self.recorder.push("optim_s", pe, lap.lap_s());
             self.recorder.push("comm_hidden_s", pe, s.wait_s);
+            if timed_out {
+                s.late_applies += 1;
+            }
+            self.health.record_settled(started.elapsed().as_secs_f64());
             account_apply(&mut self.recorder, &mut s, pe, at_epoch);
             self.comm_totals.merge(&s);
             self.grad_spares.push(pgrads);
@@ -395,7 +756,7 @@ impl RankPipeline {
     /// continue it.
     fn deposit(&mut self, epoch: u64, ck: &Arc<RunCheckpointer>) -> Result<()> {
         debug_assert!(
-            self.window.is_empty(),
+            self.window.is_empty() && self.abandoned == 0,
             "deposit requires a drained pipeline"
         );
         let (gm, gv, gt) = self.gen_opt.state();
@@ -432,6 +793,7 @@ impl RankPipeline {
             checkpoints: self.checkpoints,
             state: self.state,
             comm_totals: self.comm_totals,
+            health: self.health,
         }
     }
 }

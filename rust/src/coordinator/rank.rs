@@ -44,7 +44,7 @@ use crate::runtime::RuntimeHandle;
 use crate::util::error::Result;
 use crate::util::rng::Rng;
 
-use super::pipeline::RankPipeline;
+use super::pipeline::{RankHealth, RankPipeline};
 use super::resume::{RankResume, RunCheckpointer};
 
 /// Everything a rank thread produces.
@@ -54,6 +54,8 @@ pub struct RankOutcome {
     pub checkpoints: CheckpointSeries,
     pub state: GanState,
     pub comm_totals: CommStats,
+    /// Exchange health accounting (deadline misses, settle latency).
+    pub health: RankHealth,
 }
 
 /// Run one rank's full training loop. `shard` is this rank's data

@@ -74,7 +74,10 @@ impl RunCheckpointer {
     /// `every` is the epoch cadence (must be >= 1 — a zero cadence means
     /// checkpointing is disabled and no checkpointer should exist).
     /// `seed` is the run's base RNG seed, recorded so resume can refuse a
-    /// mismatching configuration.
+    /// mismatching configuration. Temporary directories orphaned by a
+    /// crashed writer (`.tmp_run_e*` — a kill between the staging write
+    /// and the atomic rename) are swept on construction, so a restarted
+    /// run never accumulates stale staging state.
     pub fn new(
         dir: &Path,
         every: usize,
@@ -84,6 +87,15 @@ impl RunCheckpointer {
         scenario: String,
     ) -> RunCheckpointer {
         debug_assert!(every >= 1 && keep >= 1 && ranks >= 1);
+        let swept = Self::sweep_orphaned_tmp(dir);
+        if swept > 0 {
+            crate::log_info!(
+                "swept {swept} orphaned .tmp checkpoint director{} from {} \
+                 (crashed writer leftovers)",
+                if swept == 1 { "y" } else { "ies" },
+                dir.display()
+            );
+        }
         RunCheckpointer {
             dir: dir.to_path_buf(),
             every,
@@ -93,6 +105,28 @@ impl RunCheckpointer {
             scenario,
             pending: Mutex::new(BTreeMap::new()),
         }
+    }
+
+    /// Remove `.tmp_run_e*` staging directories left behind by a writer
+    /// that died mid-save. Returns how many were removed. Best-effort:
+    /// an unreadable directory is skipped, never fatal — the writer
+    /// re-stages over any survivor by name.
+    fn sweep_orphaned_tmp(dir: &Path) -> usize {
+        let Ok(entries) = std::fs::read_dir(dir) else {
+            return 0;
+        };
+        let mut swept = 0;
+        for entry in entries.flatten() {
+            let p = entry.path();
+            if p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with(".tmp_run_e"))
+                && std::fs::remove_dir_all(&p).is_ok()
+            {
+                swept += 1;
+            }
+        }
+        swept
     }
 
     /// Whether the cadence fires at the end of `epoch` (same convention as
@@ -309,6 +343,27 @@ mod tests {
         assert!(c.deposit(0, 0.1, state(0, 2)).unwrap().is_none());
         assert!(c.deposit(0, 0.2, state(0, 2)).unwrap().is_none());
         assert!(c.deposit(0, 0.3, state(1, 2)).unwrap().is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn init_sweeps_orphaned_tmp_checkpoint_dirs() {
+        let dir = std::env::temp_dir()
+            .join(format!("sagips_ckr_sweep_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        // A complete checkpoint and a crashed writer's staging leftovers.
+        let c = RunCheckpointer::new(&dir, 1, 2, 2, 20240, "quantile".into());
+        c.deposit(0, 0.1, state(0, 2)).unwrap();
+        c.deposit(0, 0.2, state(1, 2)).unwrap();
+        let stale = dir.join(".tmp_run_e0000000005_99999");
+        std::fs::create_dir_all(stale.join("nested")).unwrap();
+        std::fs::write(stale.join("state.bin"), b"partial").unwrap();
+        drop(c);
+        // A fresh checkpointer (the restarted run) sweeps the orphan and
+        // leaves the complete checkpoint alone.
+        let _c2 = RunCheckpointer::new(&dir, 1, 2, 2, 20240, "quantile".into());
+        assert!(!stale.exists(), "stale .tmp dir survived init");
+        assert_eq!(TrainCheckpoint::list(&dir).unwrap().len(), 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 

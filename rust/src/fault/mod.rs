@@ -1,0 +1,423 @@
+//! Deterministic, seed-driven fault injection for the in-process network.
+//!
+//! A [`FaultPlan`] describes per-rank misbehavior as a pure function of
+//! `(rank, epoch)` and a plan seed: stochastic per-send delay jitter
+//! (lognormal, like the `LinkModel` alpha term but rank-targeted),
+//! transient send failures (modeled as fail + retry, each retry costing a
+//! fixed backoff), and hard stalls over an epoch window (a stalled rank's
+//! sends are held for the stall duration). Every query re-derives its
+//! randomness from `(seed, rank, epoch)`, so two runs with the same plan
+//! see bit-identical fault schedules — the property the acceptance tests
+//! and the `fault-smoke` CI job rely on.
+//!
+//! The plan is injected *beneath* the `Transport`/`Collective` boundary:
+//! [`crate::comm::LocalNetwork::build_with_faults`] attaches it to every
+//! [`crate::comm::Endpoint`], whose `isend` realizes the delay through the
+//! same `deliver_at` timestamp the link model uses. The real ring, grouped,
+//! and rma_ring collectives therefore run under faults unmodified, in plain
+//! `cargo test`. The discrete-event simulator consults the same plan in
+//! seconds ([`FaultPlan::delay_s`]) so straggler policies can be validated
+//! at thousands of simulated ranks first.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+
+/// Per-rank stochastic send-delay distribution (lognormal).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DelaySpec {
+    /// Mean injected delay per send, in milliseconds.
+    pub mean_ms: f64,
+    /// Lognormal shape parameter (0 = deterministic `mean_ms`).
+    pub sigma: f64,
+}
+
+/// Per-rank transient send-failure model: each send at an afflicted rank
+/// independently fails with probability `prob`; every failure is retried
+/// after `extra_ms`, so a send that fails `k` times in a row is delivered
+/// `k * extra_ms` late.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TransientSpec {
+    /// Per-attempt failure probability in `[0, 1)`.
+    pub prob: f64,
+    /// Retry backoff per failed attempt, in milliseconds.
+    pub extra_ms: f64,
+}
+
+/// A hard stall: every send `rank` issues for epochs in
+/// `[from_epoch, from_epoch + epochs)` is held for `stall_ms`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StallSpec {
+    pub rank: usize,
+    pub from_epoch: u64,
+    pub epochs: u64,
+    pub stall_ms: u64,
+}
+
+impl StallSpec {
+    fn covers(&self, rank: usize, epoch: u64) -> bool {
+        rank == self.rank
+            && epoch >= self.from_epoch
+            && epoch < self.from_epoch.saturating_add(self.epochs)
+    }
+}
+
+/// A deterministic fault schedule over `(rank, epoch)`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the per-(rank, epoch) random draws.
+    pub seed: u64,
+    delays: BTreeMap<usize, DelaySpec>,
+    transients: BTreeMap<usize, TransientSpec>,
+    stalls: Vec<StallSpec>,
+}
+
+/// Cap on consecutive simulated transient failures per send, so a
+/// pathological `prob` close to 1 cannot produce unbounded delays.
+const MAX_TRANSIENT_RETRIES: u32 = 8;
+
+impl FaultPlan {
+    /// An empty plan (injects nothing) with the given seed.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Add a lognormal send-delay distribution for `rank`.
+    pub fn with_delay(mut self, rank: usize, mean_ms: f64, sigma: f64) -> FaultPlan {
+        self.delays.insert(rank, DelaySpec { mean_ms, sigma });
+        self
+    }
+
+    /// Add a transient send-failure model for `rank`.
+    pub fn with_transient(mut self, rank: usize, prob: f64, extra_ms: f64) -> FaultPlan {
+        self.transients.insert(rank, TransientSpec { prob, extra_ms });
+        self
+    }
+
+    /// Add a hard stall for `rank` over `[from_epoch, from_epoch + epochs)`.
+    pub fn with_stall(mut self, rank: usize, from_epoch: u64, epochs: u64, stall_ms: u64) -> Self {
+        self.stalls.push(StallSpec {
+            rank,
+            from_epoch,
+            epochs,
+            stall_ms,
+        });
+        self
+    }
+
+    /// Whether the plan injects anything at all.
+    pub fn is_empty(&self) -> bool {
+        self.delays.is_empty() && self.transients.is_empty() && self.stalls.is_empty()
+    }
+
+    /// Number of ranks with a per-exchange delay distribution.
+    pub fn n_delayed(&self) -> usize {
+        self.delays.len()
+    }
+
+    /// Number of ranks with transient send-failure injection.
+    pub fn n_transient(&self) -> usize {
+        self.transients.len()
+    }
+
+    /// Number of configured hard-stall windows.
+    pub fn n_stalls(&self) -> usize {
+        self.stalls.len()
+    }
+
+    /// Whether `(rank, epoch)` falls inside a hard-stall window.
+    pub fn is_stalled(&self, rank: usize, epoch: u64) -> bool {
+        self.stalls.iter().any(|s| s.covers(rank, epoch))
+    }
+
+    /// A fresh RNG derived purely from `(seed, rank, epoch)` — the source
+    /// of every stochastic draw, so queries are order-independent.
+    fn draw_rng(&self, rank: usize, epoch: u64) -> Rng {
+        let mix = (rank as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(epoch.wrapping_mul(0xBF58476D1CE4E5B9));
+        Rng::with_stream(self.seed ^ mix, mix.rotate_left(31) | 1)
+    }
+
+    /// Total injected send delay for a message `rank` sends at `epoch`, in
+    /// seconds: delay jitter + transient fail/retry cost + hard stall.
+    /// `0.0` when the plan has nothing for this `(rank, epoch)`.
+    pub fn delay_s(&self, rank: usize, epoch: u64) -> f64 {
+        let mut ms = 0.0f64;
+        let mut rng = self.draw_rng(rank, epoch);
+        if let Some(d) = self.delays.get(&rank) {
+            if d.mean_ms > 0.0 {
+                ms += if d.sigma > 0.0 {
+                    // mu chosen so the distribution's mean is mean_ms.
+                    let mu = d.mean_ms.ln() - 0.5 * d.sigma * d.sigma;
+                    rng.lognormal(mu, d.sigma)
+                } else {
+                    d.mean_ms
+                };
+            }
+        }
+        if let Some(t) = self.transients.get(&rank) {
+            if t.prob > 0.0 {
+                let mut failures = 0u32;
+                while failures < MAX_TRANSIENT_RETRIES && rng.uniform() < t.prob {
+                    failures += 1;
+                }
+                ms += failures as f64 * t.extra_ms;
+            }
+        }
+        for s in &self.stalls {
+            if s.covers(rank, epoch) {
+                ms += s.stall_ms as f64;
+            }
+        }
+        ms / 1e3
+    }
+
+    /// [`Self::delay_s`] as a `Duration`, `None` when zero — the form the
+    /// transport consumes.
+    pub fn send_delay(&self, rank: usize, epoch: u64) -> Option<Duration> {
+        let s = self.delay_s(rank, epoch);
+        if s > 0.0 {
+            Some(Duration::from_secs_f64(s))
+        } else {
+            None
+        }
+    }
+
+    /// Parse a plan from a spec string: inline JSON (starts with `{`) or a
+    /// path to a JSON file. Format:
+    ///
+    /// ```json
+    /// {
+    ///   "seed": 7,
+    ///   "delays": [{"rank": 1, "mean_ms": 5.0, "sigma": 0.5}],
+    ///   "transients": [{"rank": 2, "prob": 0.05, "extra_ms": 20.0}],
+    ///   "stalls": [{"rank": 1, "from_epoch": 10, "epochs": 5, "stall_ms": 60000}]
+    /// }
+    /// ```
+    ///
+    /// Every section is optional; unknown keys are rejected.
+    pub fn from_spec(spec: &str) -> Result<FaultPlan> {
+        let trimmed = spec.trim();
+        if trimmed.starts_with('{') {
+            Self::from_json_str(trimmed)
+        } else {
+            let text = std::fs::read_to_string(trimmed)?;
+            Self::from_json_str(&text)
+        }
+    }
+
+    /// Parse a plan from JSON text.
+    pub fn from_json_str(text: &str) -> Result<FaultPlan> {
+        let v = Value::parse(text)?;
+        let obj = v
+            .as_object()
+            .ok_or_else(|| Error::config("fault plan must be a JSON object"))?;
+        let mut plan = FaultPlan::default();
+        for (key, val) in obj {
+            match key.as_str() {
+                "seed" => {
+                    plan.seed = val
+                        .as_f64()
+                        .ok_or_else(|| Error::config("fault plan 'seed' must be a number"))?
+                        as u64;
+                }
+                "delays" => {
+                    for e in req_array(val, "delays")? {
+                        plan.delays.insert(
+                            e.req_usize("rank")?,
+                            DelaySpec {
+                                mean_ms: req_f64(e, "mean_ms")?,
+                                sigma: e.get("sigma").and_then(Value::as_f64).unwrap_or(0.0),
+                            },
+                        );
+                    }
+                }
+                "transients" => {
+                    for e in req_array(val, "transients")? {
+                        let prob = req_f64(e, "prob")?;
+                        if !(0.0..1.0).contains(&prob) {
+                            return Err(Error::config(format!(
+                                "fault plan transient prob {prob} outside [0, 1)"
+                            )));
+                        }
+                        plan.transients.insert(
+                            e.req_usize("rank")?,
+                            TransientSpec {
+                                prob,
+                                extra_ms: req_f64(e, "extra_ms")?,
+                            },
+                        );
+                    }
+                }
+                "stalls" => {
+                    for e in req_array(val, "stalls")? {
+                        plan.stalls.push(StallSpec {
+                            rank: e.req_usize("rank")?,
+                            from_epoch: e.req_usize("from_epoch")? as u64,
+                            epochs: e.req_usize("epochs")? as u64,
+                            stall_ms: e.req_usize("stall_ms")? as u64,
+                        });
+                    }
+                }
+                other => {
+                    return Err(Error::config(format!("unknown fault plan key '{other}'")));
+                }
+            }
+        }
+        Ok(plan)
+    }
+}
+
+fn req_array<'a>(v: &'a Value, key: &str) -> Result<&'a [Value]> {
+    v.as_array()
+        .ok_or_else(|| Error::config(format!("fault plan '{key}' must be an array")))
+}
+
+fn req_f64(v: &Value, key: &str) -> Result<f64> {
+    v.req(key)?
+        .as_f64()
+        .ok_or_else(|| Error::config(format!("fault plan field '{key}' must be a number")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_injects_nothing() {
+        let p = FaultPlan::new(1);
+        assert!(p.is_empty());
+        for rank in 0..4 {
+            for epoch in 0..16 {
+                assert_eq!(p.delay_s(rank, epoch), 0.0);
+                assert!(p.send_delay(rank, epoch).is_none());
+                assert!(!p.is_stalled(rank, epoch));
+            }
+        }
+    }
+
+    #[test]
+    fn queries_are_deterministic_and_order_independent() {
+        let mk = || {
+            FaultPlan::new(42)
+                .with_delay(1, 5.0, 0.7)
+                .with_transient(2, 0.3, 10.0)
+                .with_stall(3, 8, 4, 500)
+        };
+        let a = mk();
+        let b = mk();
+        // Query b in reverse order: pure functions of (rank, epoch).
+        let mut fwd = Vec::new();
+        let mut rev = Vec::new();
+        for rank in 0..4 {
+            for epoch in 0..32 {
+                fwd.push(a.delay_s(rank, epoch));
+            }
+        }
+        for rank in (0..4).rev() {
+            for epoch in (0..32).rev() {
+                rev.push(b.delay_s(rank, epoch));
+            }
+        }
+        rev.reverse();
+        assert_eq!(fwd, rev);
+        // And a different seed gives a different jitter schedule.
+        let c = FaultPlan::new(43).with_delay(1, 5.0, 0.7);
+        assert_ne!(a.delay_s(1, 0), c.delay_s(1, 0));
+    }
+
+    #[test]
+    fn stall_windows_are_half_open() {
+        let p = FaultPlan::new(0).with_stall(2, 10, 3, 1000);
+        assert!(!p.is_stalled(2, 9));
+        assert!(p.is_stalled(2, 10));
+        assert!(p.is_stalled(2, 12));
+        assert!(!p.is_stalled(2, 13));
+        assert!(!p.is_stalled(1, 10));
+        // The stall contributes its full duration to the delay.
+        assert!(p.delay_s(2, 11) >= 1.0);
+        assert_eq!(p.delay_s(2, 13), 0.0);
+        assert_eq!(
+            p.send_delay(2, 10),
+            Some(Duration::from_secs_f64(p.delay_s(2, 10)))
+        );
+    }
+
+    #[test]
+    fn delay_jitter_targets_only_the_afflicted_rank() {
+        let p = FaultPlan::new(7).with_delay(1, 5.0, 0.5);
+        assert_eq!(p.delay_s(0, 3), 0.0);
+        assert!(p.delay_s(1, 3) > 0.0);
+        // sigma = 0 degenerates to the mean exactly.
+        let d = FaultPlan::new(7).with_delay(0, 2.0, 0.0);
+        assert!((d.delay_s(0, 5) - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transient_failures_are_bounded_and_probabilistic() {
+        let p = FaultPlan::new(11).with_transient(0, 0.5, 10.0);
+        let mut hit = 0usize;
+        for epoch in 0..256 {
+            let d = p.delay_s(0, epoch);
+            assert!(d <= MAX_TRANSIENT_RETRIES as f64 * 10.0 / 1e3);
+            if d > 0.0 {
+                hit += 1;
+            }
+        }
+        // ~half the epochs should see at least one failure.
+        assert!(hit > 64 && hit < 224, "hit = {hit}");
+    }
+
+    #[test]
+    fn json_roundtrip_inline_spec() {
+        let p = FaultPlan::from_spec(
+            r#"{
+                "seed": 9,
+                "delays": [{"rank": 1, "mean_ms": 5.0, "sigma": 0.5}],
+                "transients": [{"rank": 2, "prob": 0.05, "extra_ms": 20.0}],
+                "stalls": [{"rank": 0, "from_epoch": 4, "epochs": 2, "stall_ms": 250}]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(p.seed, 9);
+        assert!(p.is_stalled(0, 5));
+        assert!(!p.is_stalled(0, 6));
+        assert!(p.delay_s(1, 0) > 0.0);
+        assert_eq!(
+            p,
+            FaultPlan::new(9)
+                .with_delay(1, 5.0, 0.5)
+                .with_transient(2, 0.05, 20.0)
+                .with_stall(0, 4, 2, 250)
+        );
+    }
+
+    #[test]
+    fn spec_rejects_unknown_keys_and_bad_prob() {
+        assert!(FaultPlan::from_spec(r#"{"bogus": 1}"#).is_err());
+        assert!(
+            FaultPlan::from_spec(r#"{"transients": [{"rank": 0, "prob": 1.5, "extra_ms": 1}]}"#)
+                .is_err()
+        );
+        assert!(FaultPlan::from_spec("[]").is_err());
+    }
+
+    #[test]
+    fn spec_reads_from_file() {
+        let dir = std::env::temp_dir().join(format!("sagips_fault_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        std::fs::write(&path, r#"{"seed": 3, "stalls": []}"#).unwrap();
+        let p = FaultPlan::from_spec(path.to_str().unwrap()).unwrap();
+        assert_eq!(p.seed, 3);
+        assert!(p.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

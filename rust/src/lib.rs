@@ -30,7 +30,11 @@
 //! ensemble analysis layers size themselves from the scenario's parameter
 //! width, and long runs are restartable: periodic run checkpoints
 //! (`ckpt_every` / `ckpt_dir`) restore bit-identically through
-//! `--resume` (see `docs/checkpointing.md` at the repo root).
+//! `--resume` (see `docs/checkpointing.md` at the repo root). The [`fault`]
+//! module injects deterministic, seed-driven stragglers beneath the
+//! transport, and the pipeline's `on_straggler` policies (skip /
+//! late-apply with exchange deadlines) keep training live through them
+//! (see `docs/fault-tolerance.md`).
 //!
 //! # Quickstart: config to training
 //!
@@ -66,6 +70,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod ensemble;
+pub mod fault;
 pub mod metrics;
 pub mod model;
 pub mod optim;

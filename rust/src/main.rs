@@ -57,7 +57,8 @@ fn print_help() {
          (0 = blocking, 1 = overlap, k = bounded window) \
          --intra-threads <n> (native gan_step workers, 0 = serial)\n\
          fault tolerance: --ckpt-every <n> --ckpt-dir <dir> --ckpt-keep <n> \
-         --resume <path>\n\
+         --resume <path> --fault-plan <json|file> --exchange-timeout-ms <n> \
+         --on-straggler block|skip|late_apply --skip-budget <n>\n\
          (the native backend needs no artifacts and runs every scenario; \
          pjrt executes the exported HLO)\n\
          env: SAGIPS_LOG=debug, SAGIPS_SCALE=smoke|ci|paper"
@@ -119,6 +120,26 @@ fn common_specs() -> Vec<OptSpec> {
             "resume from a run checkpoint (run_e* dir, or a ckpt root: newest wins)",
             None,
         ),
+        cli::opt(
+            "fault-plan",
+            "deterministic fault injection: inline JSON ('{...}') or a plan file",
+            None,
+        ),
+        cli::opt(
+            "exchange-timeout-ms",
+            "deadline on the oldest in-flight exchange (0 = none)",
+            Some("0"),
+        ),
+        cli::opt(
+            "on-straggler",
+            "deadline-miss policy: block|skip|late_apply",
+            Some("block"),
+        ),
+        cli::opt(
+            "skip-budget",
+            "max exchanges the skip policy may abandon (0 = unlimited)",
+            Some("0"),
+        ),
     ]
 }
 
@@ -165,6 +186,14 @@ fn build_cfg(a: &Args) -> Result<RunConfig> {
     if let Some(p) = a.get("resume") {
         cfg.resume = Some(p.to_string());
     }
+    if let Some(p) = a.get("fault-plan") {
+        cfg.fault_plan = Some(p.to_string());
+    }
+    cfg.exchange_timeout_ms = a.u64("exchange-timeout-ms", cfg.exchange_timeout_ms)?;
+    if let Some(p) = a.get("on-straggler") {
+        cfg.on_straggler = sagips::config::StragglerPolicy::parse(p)?;
+    }
+    cfg.skip_budget = a.usize("skip-budget", cfg.skip_budget)?;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -253,6 +282,9 @@ fn cmd_train(a: &Args) -> Result<()> {
         );
     }
     experiments::run_summary(&cfg, &run);
+    if cfg.exchange_timeout_ms > 0 {
+        experiments::health_summary(&run);
+    }
     rt.shutdown();
     Ok(())
 }

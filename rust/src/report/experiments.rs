@@ -369,21 +369,27 @@ pub fn weak_scaling_curves(
 // ---------------------------------------------------------------------------
 
 /// The run-summary columns: wall time, eq (9) analysis rate, the
-/// hot/hidden comm split, and the mean applied-gradient staleness.
+/// hot/hidden comm split, the mean applied-gradient staleness, and the
+/// straggler-policy outcomes (exchanges skipped / applied past deadline).
 pub const RUN_SUMMARY_COLS: &[&str] = &[
     "wall_s",
     "events_per_s",
     "comm_hot_s",
     "comm_hidden_s",
     "mean_staleness",
+    "skips",
+    "late_applies",
 ];
 
 /// One run-summary row (the x column is the configured staleness k, so
 /// staleness sweeps stack into one readable table). `mean_staleness` is
 /// the *applied* staleness the run actually observed — 0 for a blocking
 /// run, ≤ k under a k-deep exchange window (drains at the checkpoint
-/// cadence pull it below k).
+/// cadence pull it below k). `skips`/`late_applies` sum the straggler-
+/// policy outcomes across ranks (always 0 under `on_straggler: block`).
 pub fn run_summary_row(cfg: &RunConfig, run: &RunResult) -> (f64, Vec<f64>) {
+    let skips: u64 = run.comm.iter().map(|c| c.skips).sum();
+    let late: u64 = run.comm.iter().map(|c| c.late_applies).sum();
     (
         cfg.staleness as f64,
         vec![
@@ -392,6 +398,8 @@ pub fn run_summary_row(cfg: &RunConfig, run: &RunResult) -> (f64, Vec<f64>) {
             run.metrics.total("comm_s"),
             run.metrics.total("comm_hidden_s"),
             run.metrics.mean_staleness().unwrap_or(0.0),
+            skips as f64,
+            late as f64,
         ],
     )
 }
@@ -409,6 +417,47 @@ pub fn run_summary(cfg: &RunConfig, run: &RunResult) {
         "staleness_k",
         RUN_SUMMARY_COLS,
         &[run_summary_row(cfg, run)],
+    );
+}
+
+/// The per-rank health-summary columns (printed when an exchange
+/// deadline was armed): settled exchanges, deadline misses (total and
+/// worst consecutive run), mean submit-to-apply latency, and the worst
+/// [`HealthState`](crate::coordinator::pipeline::HealthState) reached
+/// (0 = healthy, 1 = degraded, 2 = suspect).
+pub const HEALTH_SUMMARY_COLS: &[&str] = &[
+    "settled",
+    "timeouts",
+    "max_consec",
+    "mean_latency_s",
+    "worst_state",
+];
+
+/// Print the per-rank exchange-health table for a run with straggler
+/// tolerance armed.
+pub fn health_summary(run: &RunResult) {
+    let rows: Vec<(f64, Vec<f64>)> = run
+        .health
+        .iter()
+        .enumerate()
+        .map(|(rank, h)| {
+            (
+                rank as f64,
+                vec![
+                    h.settled as f64,
+                    h.timeouts as f64,
+                    h.max_consecutive_timeouts as f64,
+                    h.mean_latency_s(),
+                    h.worst_state().as_f64(),
+                ],
+            )
+        })
+        .collect();
+    data_table(
+        "rank health — deadline misses and exchange latency per rank",
+        "rank",
+        HEALTH_SUMMARY_COLS,
+        &rows,
     );
 }
 
@@ -467,6 +516,11 @@ mod tests {
         r.push("staleness", 1, 2.0);
         r.push("comm_s", 0, 0.5);
         r.push("comm_hidden_s", 0, 1.5);
+        let mut comm_a = crate::collective::CommStats::default();
+        comm_a.skips = 2;
+        let mut comm_b = crate::collective::CommStats::default();
+        comm_b.skips = 1;
+        comm_b.late_applies = 3;
         let run = RunResult {
             wall_s: 2.0,
             metrics: MergedMetrics::new(vec![r]),
@@ -474,7 +528,8 @@ mod tests {
             states: Vec::new(),
             residual_curve: Vec::new(),
             final_residuals: None,
-            comm: Vec::new(),
+            comm: vec![comm_a, comm_b],
+            health: Vec::new(),
             resumed_from: None,
         };
         let mut cfg = presets::ci_default();
@@ -485,6 +540,8 @@ mod tests {
         assert_eq!(cols[2], 0.5); // comm_hot_s
         assert_eq!(cols[3], 1.5); // comm_hidden_s
         assert_eq!(cols[4], 2.0); // mean applied staleness
+        assert_eq!(cols[5], 3.0); // skips summed across ranks
+        assert_eq!(cols[6], 3.0); // late applies summed across ranks
     }
 
     #[test]

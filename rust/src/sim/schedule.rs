@@ -11,7 +11,8 @@
 
 use crate::collective::grouped::is_outer_epoch;
 use crate::comm::Topology;
-use crate::config::{ChunkPolicy, Mode};
+use crate::config::{ChunkPolicy, Mode, StragglerPolicy};
+use crate::fault::FaultPlan;
 use crate::util::rng::Rng;
 
 use super::network::NetModel;
@@ -43,6 +44,18 @@ pub struct SimConfig {
     /// the critical path only where it exceeds the compute windows it can
     /// hide behind before the k-deep window forces a collect.
     pub staleness: usize,
+    /// Deterministic fault injection (mirrors `RunConfig::fault_plan`):
+    /// a faulted rank's *sends* arrive late, so its lateness enters the
+    /// schedule through arrival dependencies — exactly like the native
+    /// transport's `deliver_at`. RMA schedules are unaffected by design:
+    /// a late one-sided deposit is staleness, never wait.
+    pub fault: Option<FaultPlan>,
+    /// Deadline-miss policy (mirrors `RunConfig::on_straggler`): `skip`
+    /// caps every rank's blocking comm wait at `deadline_s` per epoch and
+    /// counts a skip each time the cap engages.
+    pub on_straggler: StragglerPolicy,
+    /// Exchange deadline in simulated seconds (0 = none).
+    pub deadline_s: f64,
     pub compute: ComputeModel,
     pub net: NetModel,
     pub seed: u64,
@@ -62,6 +75,9 @@ impl SimConfig {
             disc_batch: 102_400,
             chunking: ChunkPolicy::Unchunked,
             staleness: 0,
+            fault: None,
+            on_straggler: StragglerPolicy::Block,
+            deadline_s: 0.0,
             compute: ComputeModel::with_jitter(0.035, 0.15),
             net: NetModel::paper_like(),
             seed: 2024,
@@ -81,6 +97,9 @@ pub struct SimResult {
     pub analysis_rate: f64,
     /// Fraction of rank-time spent in communication waits + transfers.
     pub comm_fraction: f64,
+    /// Exchanges abandoned under the skip policy, summed over ranks in
+    /// the simulated window (not extrapolated).
+    pub skips: u64,
 }
 
 /// Evaluate the schedule.
@@ -106,6 +125,7 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
         .collect();
     let outer = topo.outer_group();
 
+    let mut skips: u64 = 0;
     for epoch in 0..sim_epochs {
         // Compute + staging phase. Remember each rank's compute draw: in
         // overlap mode later epochs' draws are what hide the in-flight
@@ -116,12 +136,19 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
             compute_s[r] = cfg.compute.sample(&mut rngs[r]);
             t[r] += compute_s[r] + staging;
         }
+        // Per-rank send delays from the fault plan: the faulted rank's
+        // messages arrive late, so the delay rides every arrival
+        // dependency *from* that rank rather than its own clock.
+        let delays: Vec<f64> = match &cfg.fault {
+            Some(plan) => (0..n).map(|r| plan.delay_s(r, epoch)).collect(),
+            None => vec![0.0f64; n],
+        };
         let t_pre_comm = t.clone();
         let before: f64 = t.iter().sum();
         match cfg.mode {
             Mode::Ensemble => {}
             Mode::ConvArar => {
-                ring_schedule(&mut t, &topo, &(0..n).collect::<Vec<_>>(), cfg);
+                ring_schedule(&mut t, &topo, &(0..n).collect::<Vec<_>>(), cfg, &delays);
             }
             Mode::ArarArar | Mode::RmaArarArar => {
                 let rma = cfg.mode == Mode::RmaArarArar;
@@ -129,16 +156,22 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
                     if rma {
                         rma_ring_schedule(&mut t, &topo, g, cfg);
                     } else {
-                        ring_schedule(&mut t, &topo, g, cfg);
+                        ring_schedule(&mut t, &topo, g, cfg, &delays);
                     }
                 }
                 if is_outer_epoch(epoch, cfg.outer_freq) {
-                    ring_schedule(&mut t, &topo, &outer, cfg);
+                    ring_schedule(&mut t, &topo, &outer, cfg, &delays);
                 }
             }
             Mode::Horovod => {
-                // Barrier then bandwidth-optimal chunked ring.
-                let tmax = t.iter().cloned().fold(0.0, f64::max);
+                // Barrier then bandwidth-optimal chunked ring. The
+                // barrier waits on the latest *arrival*, so a faulted
+                // rank's send delay pushes the whole step.
+                let tmax = t
+                    .iter()
+                    .zip(&delays)
+                    .map(|(&v, &d)| v + d)
+                    .fold(0.0, f64::max);
                 let ring = cfg
                     .net
                     .chunked_ring_s(n, cfg.grad_bytes, topo.nodes() > 1);
@@ -155,12 +188,14 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
                         let m = g[0];
                         let mut tm = t[m];
                         for &r in &g[1..] {
-                            tm = tm.max(t[r] + cfg.net.p2p_s(&topo, r, m, cfg.grad_bytes));
+                            tm = tm.max(
+                                t[r] + delays[r] + cfg.net.p2p_s(&topo, r, m, cfg.grad_bytes),
+                            );
                         }
                         tm
                     })
                     .collect();
-                schedule_ring_over(&mut master_t, &outer, &topo, cfg);
+                schedule_ring_over(&mut master_t, &outer, &topo, cfg, &delays);
                 for (gi, g) in inner_groups.iter().enumerate() {
                     for &r in g {
                         t[r] = master_t[gi]
@@ -175,12 +210,30 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
             Mode::DoubleBinaryTree => {
                 // Tree depth * up+down point-to-point hops (inter-node
                 // dominated); all ranks complete together at the root's
-                // broadcast completion.
+                // broadcast completion — which waits on the latest
+                // arrival, faults included.
                 let depth = (n as f64).log2().ceil().max(1.0);
                 let hop = cfg.net.p2p_s(&topo, 0, cfg.gpus_per_node.min(n - 1), cfg.grad_bytes);
-                let tmax = t.iter().cloned().fold(0.0, f64::max);
+                let tmax = t
+                    .iter()
+                    .zip(&delays)
+                    .map(|(&v, &d)| v + d)
+                    .fold(0.0, f64::max);
                 for v in t.iter_mut() {
                     *v = tmax + 2.0 * depth * hop;
+                }
+            }
+        }
+        // Straggler policy: `skip` caps every rank's blocking comm wait
+        // at the deadline — past it the trainer abandons the exchange
+        // rather than inheriting the straggler's lateness (the result is
+        // discarded on eventual arrival, so no further dependency).
+        if matches!(cfg.on_straggler, StragglerPolicy::Skip) && cfg.deadline_s > 0.0 {
+            for r in 0..n {
+                let cap = t_pre_comm[r] + cfg.deadline_s;
+                if t[r] > cap {
+                    t[r] = cap;
+                    skips += 1;
                 }
             }
         }
@@ -243,6 +296,7 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
         sim_epochs,
         analysis_rate: events / total_s,
         comm_fraction: (comm_time / (n as f64)) / simulated_s,
+        skips,
     }
 }
 
@@ -266,10 +320,16 @@ fn ring_step_shape(cfg: &SimConfig, g: usize) -> (usize, usize, usize) {
 
 /// Blocking ring over `members`: the dataflow recurrence of Algorithm 1 —
 /// at each step a rank proceeds once its predecessor's message (sent at
-/// the predecessor's step time) has arrived. Chunked policies run the
-/// reduce-scatter + all-gather shape: 2·(g-1) steps of |g|/g-byte
-/// messages instead of g-1 full-tensor steps.
-fn ring_schedule(t: &mut [f64], topo: &Topology, members: &[usize], cfg: &SimConfig) {
+/// the predecessor's step time, plus the sender's fault delay) has
+/// arrived. Chunked policies run the reduce-scatter + all-gather shape:
+/// 2·(g-1) steps of |g|/g-byte messages instead of g-1 full-tensor steps.
+fn ring_schedule(
+    t: &mut [f64],
+    topo: &Topology,
+    members: &[usize],
+    cfg: &SimConfig,
+    delays: &[f64],
+) {
     let g = members.len();
     if g <= 1 {
         return;
@@ -281,7 +341,9 @@ fn ring_schedule(t: &mut [f64], topo: &Topology, members: &[usize], cfg: &SimCon
         for (i, &r) in members.iter().enumerate() {
             let ip = (i + g - 1) % g;
             let prev_rank = members[ip];
-            let arrival = s[ip] + cfg.net.p2p_chunked_s(topo, prev_rank, r, bytes, msgs);
+            let arrival = s[ip]
+                + delays[prev_rank]
+                + cfg.net.p2p_chunked_s(topo, prev_rank, r, bytes, msgs);
             next[i] = s[i].max(arrival);
         }
         s.copy_from_slice(&next);
@@ -295,7 +357,13 @@ fn ring_schedule(t: &mut [f64], topo: &Topology, members: &[usize], cfg: &SimCon
 /// Used only by the Hierarchical baseline's master ring, which — like the
 /// real `collective::hierarchical` — ignores the chunk policy, so the
 /// shape is always the unchunked g-1 full-tensor steps.
-fn schedule_ring_over(clocks: &mut [f64], members: &[usize], topo: &Topology, cfg: &SimConfig) {
+fn schedule_ring_over(
+    clocks: &mut [f64],
+    members: &[usize],
+    topo: &Topology,
+    cfg: &SimConfig,
+    delays: &[f64],
+) {
     let g = clocks.len();
     if g <= 1 {
         return;
@@ -304,8 +372,9 @@ fn schedule_ring_over(clocks: &mut [f64], members: &[usize], topo: &Topology, cf
     for _step in 0..g - 1 {
         for i in 0..g {
             let ip = (i + g - 1) % g;
-            let arrival =
-                clocks[ip] + cfg.net.p2p_s(topo, members[ip], members[i], cfg.grad_bytes);
+            let arrival = clocks[ip]
+                + delays[members[ip]]
+                + cfg.net.p2p_s(topo, members[ip], members[i], cfg.grad_bytes);
             next[i] = clocks[i].max(arrival);
         }
         clocks.copy_from_slice(&next);
@@ -496,6 +565,62 @@ mod tests {
         cfg.outer_freq = 64; // exactly one outer pass, at epoch 63
         let with_outer = simulate(&cfg).total_s;
         assert!(with_outer > with_freq, "{with_outer} !> {with_freq}");
+    }
+
+    #[test]
+    fn fault_plan_stall_drags_a_blocking_ring() {
+        let healthy = simulate(&base(Mode::ConvArar, 8)).total_s;
+        let mut cfg = base(Mode::ConvArar, 8);
+        // Rank 0 stalled for the whole 64-epoch window, 200 ms per send:
+        // every epoch's ring inherits the stall serially under block.
+        cfg.fault = Some(FaultPlan::new(9).with_stall(0, 0, 64, 200));
+        let stalled = simulate(&cfg).total_s;
+        assert!(
+            stalled > healthy + 0.2 * 32.0,
+            "stalled={stalled} healthy={healthy}"
+        );
+    }
+
+    #[test]
+    fn fault_delays_are_deterministic_across_runs() {
+        let mk = || SimConfig {
+            fault: Some(FaultPlan::new(33).with_delay(2, 15.0, 0.8)),
+            ..base(Mode::ArarArar, 16)
+        };
+        let a = simulate(&mk());
+        let b = simulate(&mk());
+        assert_eq!(a.total_s, b.total_s);
+        assert_eq!(a.comm_fraction, b.comm_fraction);
+    }
+
+    #[test]
+    fn skip_bounds_stall_impact_at_1024_simulated_ranks() {
+        // Grouped ARAR at 1024 simulated ranks with one rank hard-stalled
+        // for the whole window: under `block` the stall lands on its inner
+        // ring's critical path every epoch; under `skip` each rank pays at
+        // most the deadline per epoch. This is the CI fault-smoke sim leg.
+        let mk = |policy| SimConfig {
+            sim_epochs: 16,
+            epochs: 16,
+            compute: ComputeModel::fixed(0.01),
+            fault: Some(FaultPlan::new(11).with_stall(0, 0, 16, 500)),
+            on_straggler: policy,
+            deadline_s: 0.05,
+            ..SimConfig::paper(Mode::ArarArar, 1024)
+        };
+        let block = simulate(&mk(StragglerPolicy::Block));
+        let skip = simulate(&mk(StragglerPolicy::Skip));
+        assert_eq!(block.skips, 0);
+        assert!(skip.skips > 0, "skip policy never engaged");
+        // Block inherits ~0.5 s per epoch; skip caps each wait at 50 ms.
+        assert!(
+            skip.total_s < block.total_s * 0.5,
+            "skip={} block={}",
+            skip.total_s,
+            block.total_s
+        );
+        // Healthy ranks elsewhere in the machine are untouched either way.
+        assert!(skip.total_s > 16.0 * 0.01);
     }
 
     #[test]

@@ -30,6 +30,13 @@ pub enum Error {
     #[error("comm error: {0}")]
     Comm(String),
 
+    /// The collective engine's exchange window is full: `start_reduce`
+    /// would exceed the configured in-flight depth. Retryable backpressure
+    /// — settle an outstanding exchange and resubmit — unlike the fatal
+    /// [`Error::Comm`] faults.
+    #[error("collective window full: {0}")]
+    WindowFull(String),
+
     /// Shape mismatches in tensor operations.
     #[error("shape error: {0}")]
     Shape(String),
@@ -69,6 +76,14 @@ impl Error {
     pub fn config(msg: impl Into<String>) -> Self {
         Error::Config(msg.into())
     }
+    /// Shorthand constructor for window-full backpressure.
+    pub fn window_full(msg: impl Into<String>) -> Self {
+        Error::WindowFull(msg.into())
+    }
+    /// Whether this error is retryable collective backpressure.
+    pub fn is_window_full(&self) -> bool {
+        matches!(self, Error::WindowFull(_))
+    }
 }
 
 #[cfg(test)]
@@ -84,6 +99,14 @@ mod tests {
             message: "unexpected token".into(),
         };
         assert!(e.to_string().contains("byte 12"));
+    }
+
+    #[test]
+    fn window_full_is_distinguishable() {
+        let e = Error::window_full("depth 2 reached");
+        assert!(e.is_window_full());
+        assert_eq!(e.to_string(), "collective window full: depth 2 reached");
+        assert!(!Error::comm("ring broke").is_window_full());
     }
 
     #[test]

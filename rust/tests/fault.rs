@@ -1,0 +1,247 @@
+//! Integration: straggler-tolerant collectives under deterministic fault
+//! injection.
+//!
+//! A seeded [`FaultPlan`] hard-stalls one of four ranks for a window of
+//! epochs; the real ring collectives run under the injected delays on the
+//! native backend (no artifacts, never skips). Contracts under test:
+//!
+//! * `on_straggler: block` keeps the paper's semantics — it *waits
+//!   through* every stall (wall time bounded below by the serial stall
+//!   chain, deadline misses recorded in rank health), with zero skips
+//!   and zero late applies.
+//! * `skip` and `late_apply` complete with the straggler outcome counted
+//!   in the per-rank comm totals (`skips` / `late_applies`) and surfaced
+//!   by the run summary.
+//! * The skip policy is deterministic under decisive margins (stall ≫
+//!   deadline ≫ healthy exchange latency): identical plan + seed give
+//!   bit-identical final parameters.
+//! * A drained skip-policy run checkpoint resumes bit-identically —
+//!   quiescence settles abandoned exchanges too.
+
+use std::path::PathBuf;
+
+use sagips::config::{presets, BackendKind, Mode, RunConfig, StragglerPolicy};
+use sagips::coordinator::launcher::run_training_from_config;
+
+/// Stall window: rank 0's sends are held for `STALL_MS` during epochs
+/// [2, 4). With a 50 ms deadline the margins are decisive in both
+/// directions: a stalled exchange can never beat the deadline, a healthy
+/// in-process exchange (microseconds) can never miss it.
+const STALL_MS: u64 = 1000;
+const DEADLINE_MS: u64 = 50;
+const STALL_FROM: u64 = 2;
+const STALL_EPOCHS: u64 = 2;
+const EPOCHS: usize = 12;
+const RANKS: usize = 4;
+
+fn plan_json() -> String {
+    format!(
+        r#"{{"seed": 7, "stalls": [{{"rank": 0, "from_epoch": {STALL_FROM}, "epochs": {STALL_EPOCHS}, "stall_ms": {STALL_MS}}}]}}"#
+    )
+}
+
+/// A small, fast native config with the stall plan armed (model "small",
+/// batch 8 x 25 events, one 4-rank ring).
+fn faulted_cfg(policy: StragglerPolicy) -> RunConfig {
+    let mut cfg = presets::ci_default();
+    cfg.backend = BackendKind::Native;
+    cfg.artifacts_dir = "/nonexistent/so-the-synthetic-manifest-is-used".into();
+    cfg.scenario = "quantile".into();
+    cfg.model = "small".into();
+    cfg.mode = Mode::ArarArar;
+    cfg.ranks = RANKS;
+    cfg.epochs = EPOCHS;
+    cfg.batch = 8;
+    cfg.events = 25;
+    cfg.data_pool = 1600;
+    cfg.checkpoint_every = 6;
+    cfg.outer_freq = 5;
+    cfg.staleness = 1;
+    cfg.fault_plan = Some(plan_json());
+    cfg.on_straggler = policy;
+    cfg.exchange_timeout_ms = DEADLINE_MS;
+    cfg
+}
+
+fn ckpt_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sagips_fault_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+#[test]
+fn block_policy_waits_through_the_stall_and_records_timeouts() {
+    let run = run_training_from_config(&faulted_cfg(StragglerPolicy::Block)).unwrap();
+    // Blocking semantics: every exchange applied, nothing abandoned.
+    for (rank, c) in run.comm.iter().enumerate() {
+        assert_eq!(c.applies, EPOCHS as u64, "rank {rank} applies");
+        assert_eq!(c.skips, 0, "rank {rank} skips under block");
+        assert_eq!(c.late_applies, 0, "rank {rank} late applies under block");
+    }
+    // The stall propagates around the ring, so the trainer waited the
+    // serial stall chain out — past the deadline budget, which the
+    // health tracker recorded.
+    let timeouts: u64 = run.health.iter().map(|h| h.timeouts).sum();
+    assert!(timeouts > 0, "block run never missed the armed deadline");
+    let stall_chain_s = (STALL_EPOCHS * STALL_MS) as f64 / 1e3;
+    assert!(
+        run.wall_s >= 0.8 * stall_chain_s,
+        "block run finished in {:.2}s — did not wait the ~{:.1}s stall chain",
+        run.wall_s,
+        stall_chain_s
+    );
+}
+
+#[test]
+fn skip_policy_completes_and_counts_every_abandoned_exchange() {
+    let run = run_training_from_config(&faulted_cfg(StragglerPolicy::Skip)).unwrap();
+    // The stall wraps the whole 4-rank ring, so every rank abandons at
+    // least the stalled epochs' exchanges. The engine's serial worker
+    // chains the stalled rings, so later epochs queued behind the
+    // backlog may (deterministically — the backlog is seconds, the
+    // trainer's deadline waits tens of milliseconds) miss the deadline
+    // too; the invariant is exact either way: every started exchange is
+    // applied or skipped, never both, never lost.
+    for (rank, c) in run.comm.iter().enumerate() {
+        assert!(
+            c.skips >= STALL_EPOCHS,
+            "rank {rank}: {} skips for {STALL_EPOCHS} stalled epochs",
+            c.skips
+        );
+        assert_eq!(
+            c.applies + c.skips,
+            EPOCHS as u64,
+            "rank {rank}: applies + skips must cover every epoch"
+        );
+        assert_eq!(c.late_applies, 0, "rank {rank} late applies under skip");
+    }
+    let timeouts: u64 = run.health.iter().map(|h| h.timeouts).sum();
+    let skips: u64 = run.comm.iter().map(|c| c.skips).sum();
+    assert!(timeouts >= skips, "every skip is preceded by a deadline miss");
+    assert!(timeouts >= STALL_EPOCHS * RANKS as u64);
+    // Health settles back once the stall window passes.
+    for h in &run.health {
+        assert!(h.settled > 0);
+        assert_eq!(h.consecutive_timeouts, 0, "health did not recover");
+        assert!(h.max_consecutive_timeouts >= 1);
+    }
+    // Finite, complete training outcome.
+    assert_eq!(run.metrics.mean_series("gen_loss").len(), EPOCHS);
+    let r = run.final_residuals.unwrap();
+    assert!(r.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn late_apply_policy_completes_and_applies_every_exchange_eventually() {
+    let run = run_training_from_config(&faulted_cfg(StragglerPolicy::LateApply)).unwrap();
+    for (rank, c) in run.comm.iter().enumerate() {
+        // Nothing is ever abandoned: every exchange is applied, the
+        // stalled ones counted as late.
+        assert_eq!(c.applies, EPOCHS as u64, "rank {rank} applies");
+        assert_eq!(c.skips, 0, "rank {rank} skips under late_apply");
+        assert!(
+            c.late_applies >= 1 && c.late_applies <= STALL_EPOCHS,
+            "rank {rank}: {} late applies for {STALL_EPOCHS} stalled epochs",
+            c.late_applies
+        );
+    }
+    let timeouts: u64 = run.health.iter().map(|h| h.timeouts).sum();
+    assert!(timeouts > 0);
+    let r = run.final_residuals.unwrap();
+    assert!(r.iter().all(|x| x.is_finite()));
+}
+
+/// Skip config with a skip budget of exactly the stalled epochs: the
+/// two stalled exchanges can never make the deadline (1000 ms stall vs
+/// 50 ms deadline), so the budget is always consumed by them — and once
+/// it is exhausted the policy degrades to blocking, which is
+/// timing-independent. The skip *set* is therefore exactly the stalled
+/// epochs on every run, making these runs fully deterministic.
+fn budgeted_skip_cfg() -> RunConfig {
+    let mut cfg = faulted_cfg(StragglerPolicy::Skip);
+    cfg.skip_budget = STALL_EPOCHS as usize;
+    cfg
+}
+
+#[test]
+fn identical_plan_and_seed_give_identical_final_params_under_skip() {
+    // The straggler-tolerance analogue of the windowed determinism
+    // contract: identical plan + seed give bit-identical parameters.
+    let a = run_training_from_config(&budgeted_skip_cfg()).unwrap();
+    let b = run_training_from_config(&budgeted_skip_cfg()).unwrap();
+    for (rank, (sa, sb)) in a.states.iter().zip(&b.states).enumerate() {
+        assert_eq!(sa.gen, sb.gen, "rank {rank} generator");
+        assert_eq!(sa.disc, sb.disc, "rank {rank} discriminator");
+    }
+    assert_eq!(a.final_residuals.unwrap(), b.final_residuals.unwrap());
+    for (ca, cb) in a.comm.iter().zip(&b.comm) {
+        // The budget pins the skip set to exactly the stalled epochs.
+        assert_eq!(ca.skips, STALL_EPOCHS);
+        assert_eq!(ca.applies, EPOCHS as u64 - STALL_EPOCHS);
+        assert_eq!(cb.skips, STALL_EPOCHS);
+        assert_eq!(cb.applies, EPOCHS as u64 - STALL_EPOCHS);
+    }
+}
+
+#[test]
+fn drained_skip_policy_checkpoint_resumes_bit_identically() {
+    // Train 12 epochs straight vs train 7 (through the stall window),
+    // stop, resume for the rest. The checkpoint drain settles abandoned
+    // exchanges too, so the deposited state is fully quiescent and the
+    // resumed run must agree bit for bit.
+    const CUT: usize = 7;
+    let full_dir = ckpt_dir("full");
+    let head_dir = ckpt_dir("head");
+
+    let mut full = budgeted_skip_cfg();
+    full.ckpt_every = CUT;
+    full.ckpt_dir = full_dir.display().to_string();
+    let full_run = run_training_from_config(&full).unwrap();
+
+    let mut head = budgeted_skip_cfg();
+    head.epochs = CUT;
+    head.ckpt_every = CUT;
+    head.ckpt_dir = head_dir.display().to_string();
+    run_training_from_config(&head).unwrap();
+
+    let mut tail = budgeted_skip_cfg();
+    tail.ckpt_every = CUT;
+    tail.ckpt_dir = head_dir.display().to_string();
+    tail.resume = Some(head_dir.display().to_string());
+    let resumed = run_training_from_config(&tail).unwrap();
+    assert_eq!(resumed.resumed_from, Some(CUT as u64 - 1));
+
+    for (rank, (a, b)) in full_run.states.iter().zip(&resumed.states).enumerate() {
+        assert_eq!(a.gen, b.gen, "rank {rank} generator");
+        assert_eq!(a.disc, b.disc, "rank {rank} discriminator");
+    }
+    assert_eq!(
+        full_run.final_residuals.unwrap(),
+        resumed.final_residuals.unwrap()
+    );
+
+    std::fs::remove_dir_all(&full_dir).ok();
+    std::fs::remove_dir_all(&head_dir).ok();
+}
+
+#[test]
+fn fault_free_runs_are_untouched_by_an_armed_deadline() {
+    // A deadline with no faults must not change training at all: same
+    // params as the plain windowed run, zero timeouts, healthy ranks.
+    let mut plain = faulted_cfg(StragglerPolicy::Block);
+    plain.fault_plan = None;
+    plain.exchange_timeout_ms = 0;
+    let mut armed = faulted_cfg(StragglerPolicy::Skip);
+    armed.fault_plan = None;
+    let a = run_training_from_config(&plain).unwrap();
+    let b = run_training_from_config(&armed).unwrap();
+    for (sa, sb) in a.states.iter().zip(&b.states) {
+        assert_eq!(sa.gen, sb.gen);
+        assert_eq!(sa.disc, sb.disc);
+    }
+    for (c, h) in b.comm.iter().zip(&b.health) {
+        assert_eq!(c.skips, 0);
+        assert_eq!(h.timeouts, 0);
+        assert_eq!(h.settled, EPOCHS as u64);
+    }
+}
