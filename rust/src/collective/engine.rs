@@ -32,11 +32,15 @@ use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::thread::JoinHandle;
 
 use super::{Collective, CommStats, ParkedReduce};
+use crate::comm::MembershipView;
 use crate::util::error::{Error, Result};
 
-struct Job {
-    epoch: u64,
-    buf: Vec<f32>,
+enum Job {
+    Reduce { epoch: u64, buf: Vec<f32> },
+    /// Elastic re-ring: rebuild the inner collective's neighbour schedule
+    /// on the worker thread (the collective lives there). Acked through
+    /// the same FIFO done channel; only valid with nothing outstanding.
+    Reconfigure(MembershipView),
 }
 
 struct Done {
@@ -78,10 +82,18 @@ impl CollectiveEngine {
         let worker = std::thread::Builder::new()
             .name(format!("comm-{inner_name}"))
             .spawn(move || {
-                while let Ok(Job { epoch, mut buf }) = job_rx.recv() {
-                    let result = inner
-                        .epoch_reduce(epoch, &mut buf)
-                        .map(|stats| Done { buf, stats });
+                while let Ok(job) = job_rx.recv() {
+                    let result = match job {
+                        Job::Reduce { epoch, mut buf } => inner
+                            .epoch_reduce(epoch, &mut buf)
+                            .map(|stats| Done { buf, stats }),
+                        Job::Reconfigure(view) => {
+                            inner.set_membership(&view).map(|()| Done {
+                                buf: Vec::new(),
+                                stats: CommStats::default(),
+                            })
+                        }
+                    };
                     if done_tx.send(result).is_err() {
                         return; // engine dropped
                     }
@@ -154,7 +166,7 @@ impl Collective for CollectiveEngine {
         self.job_tx
             .as_ref()
             .expect("engine job channel present until drop")
-            .send(Job { epoch, buf })
+            .send(Job::Reduce { epoch, buf })
             .map_err(|_| Error::comm("collective engine worker died"))?;
         self.submitted += 1;
         Ok(())
@@ -206,6 +218,30 @@ impl Collective for CollectiveEngine {
             out.push(self.recv_one()?);
         }
         Ok(out)
+    }
+
+    fn set_membership(&mut self, view: &MembershipView) -> Result<()> {
+        // The inner collective lives on the worker, so the re-ring runs
+        // there, acked synchronously through the done channel. Quiescence
+        // is a precondition (the transition barrier drains first), which
+        // also guarantees the ack is the next message on the channel.
+        if self.outstanding() > 0 {
+            return Err(Error::comm(
+                "set_membership with exchanges still in flight — drain() first",
+            ));
+        }
+        self.job_tx
+            .as_ref()
+            .expect("engine job channel present until drop")
+            .send(Job::Reconfigure(view.clone()))
+            .map_err(|_| Error::comm("collective engine worker died"))?;
+        // Deliberately not counted in `submitted`: the ack is consumed
+        // right here, so reduce accounting never sees it.
+        let ack = self
+            .done_rx
+            .recv()
+            .map_err(|_| Error::comm("collective engine worker died"))?;
+        ack.map(|_| ())
     }
 }
 
@@ -499,6 +535,68 @@ mod tests {
     fn grouped_drain_settles_fifo_under_injected_delays() {
         for k in [1, 2, 4] {
             drain_under_injected_delays(true, k);
+        }
+    }
+
+    #[test]
+    fn set_membership_requires_quiescence_and_acks() {
+        let mut e =
+            CollectiveEngine::spawn_windowed(Box::new(NullCollective::default()), 2).unwrap();
+        e.start_reduce(0, vec![1.0]).unwrap();
+        // Mid-flight re-ring must be refused (drain() is the barrier).
+        let view = MembershipView::full(4);
+        assert!(e.set_membership(&view).is_err());
+        e.drain().unwrap();
+        e.set_membership(&view).unwrap();
+        // The ack must not disturb reduce accounting: the window is still
+        // fully usable and FIFO afterwards.
+        e.start_reduce(1, vec![2.0]).unwrap();
+        e.start_reduce(2, vec![3.0]).unwrap();
+        let (buf, _) = e.wait_reduce().unwrap();
+        assert_eq!(buf, vec![2.0]);
+        let (buf, _) = e.wait_reduce().unwrap();
+        assert_eq!(buf, vec![3.0]);
+        assert_eq!(e.in_flight(), 0);
+    }
+
+    #[test]
+    fn engines_re_ring_a_real_ring_between_epochs() {
+        // 4 engine-wrapped ConvArars: epoch 0 over the full ring, then a
+        // drain-gated re-ring to {0,1,3}, then epoch 1 over the survivors.
+        let n = 4;
+        let topo = Topology::new(n, 4);
+        let eps = LocalNetwork::build(&topo, LinkModel::zero());
+        let view = MembershipView::new(1, vec![0, 1, 3], n);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                let view = view.clone();
+                let rank = ep.rank;
+                let v = rank as f32;
+                std::thread::spawn(move || {
+                    let mut e = CollectiveEngine::spawn(Box::new(ConvArar::new(ep))).unwrap();
+                    e.start_reduce(0, vec![v; 4]).unwrap();
+                    let (full, _) = e.wait_reduce().unwrap();
+                    e.drain().unwrap();
+                    e.set_membership(&view).unwrap();
+                    if !view.is_live(rank) {
+                        return (rank, full[0], None);
+                    }
+                    e.start_reduce(1, vec![v; 4]).unwrap();
+                    let (live, _) = e.wait_reduce().unwrap();
+                    (rank, full[0], Some(live[0]))
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rank, full, live) = h.join().unwrap();
+            assert!((full - 1.5).abs() < 1e-5, "rank {rank} epoch0: {full}");
+            if let Some(live) = live {
+                let want = (0.0 + 1.0 + 3.0) / 3.0;
+                assert!((live - want).abs() < 1e-5, "rank {rank} epoch1: {live}");
+            } else {
+                assert_eq!(rank, 2);
+            }
         }
     }
 

@@ -20,9 +20,9 @@
 use super::ring::{chunked_ring_pass, ring_pass};
 use super::rma_ring::RmaRing;
 use super::{Collective, CommStats, ParkedReduce};
-use crate::comm::{Endpoint, RmaRegion, Topology};
+use crate::comm::{Endpoint, MembershipView, RmaRegion, Topology};
 use crate::config::ChunkPolicy;
-use crate::util::error::Result;
+use crate::util::error::{Error, Result};
 
 /// Whether epoch `e` is an outer-group exchange epoch.
 ///
@@ -123,12 +123,35 @@ impl Collective for GroupedArar {
     fn parked(&mut self) -> &mut ParkedReduce {
         &mut self.parked
     }
+
+    fn set_membership(&mut self, view: &MembershipView) -> Result<()> {
+        if !self.parked.is_empty() {
+            return Err(Error::comm(
+                "set_membership with parked results in flight: drain() first",
+            ));
+        }
+        let topo = self.ep.topology().clone();
+        let rank = self.ep.rank;
+        if !view.is_live(rank) {
+            // Dormant: keep the stale schedule; the rank must not reduce
+            // until a later view re-admits it (and re-rings it then).
+            return Ok(());
+        }
+        self.inner_members = topo.inner_group_live(rank, view);
+        self.outer_members = topo.outer_group_live(view);
+        self.is_outer = topo.is_outer_member_live(rank, view);
+        Ok(())
+    }
 }
 
 /// RMA-ARAR-ARAR: RMA windows for the inner ring, transport for the outer.
 pub struct RmaGroupedArar {
     ep: Endpoint,
     inner: RmaRing,
+    /// Region handle kept for elastic re-rings: windows are shared `Arc`
+    /// state, so rebuilding an [`RmaRing`] over a new live subset reuses
+    /// the same windows.
+    region: RmaRegion,
     outer_members: Vec<usize>,
     is_outer: bool,
     outer_freq: usize,
@@ -160,6 +183,7 @@ impl RmaGroupedArar {
         let inner = RmaRing::new(region, topo.inner_group(rank), rank)?;
         Ok(RmaGroupedArar {
             inner,
+            region: region.clone(),
             outer_members: topo.outer_group(),
             is_outer: topo.is_outer_member(rank),
             outer_freq,
@@ -201,6 +225,28 @@ impl Collective for RmaGroupedArar {
 
     fn parked(&mut self) -> &mut ParkedReduce {
         &mut self.parked
+    }
+
+    fn set_membership(&mut self, view: &MembershipView) -> Result<()> {
+        if !self.parked.is_empty() {
+            return Err(Error::comm(
+                "set_membership with parked results in flight: drain() first",
+            ));
+        }
+        let topo = self.ep.topology().clone();
+        let rank = self.ep.rank;
+        if !view.is_live(rank) {
+            return Ok(());
+        }
+        // Rebuild the inner RMA ring over the node's live subset from the
+        // shared region handle; the outer ring stays transport-based.
+        let timeout = self.inner.get_timeout;
+        let mut inner = RmaRing::new(&self.region, topo.inner_group_live(rank, view), rank)?;
+        inner.get_timeout = timeout;
+        self.inner = inner;
+        self.outer_members = topo.outer_group_live(view);
+        self.is_outer = topo.is_outer_member_live(rank, view);
+        Ok(())
     }
 }
 

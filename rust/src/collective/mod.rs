@@ -41,7 +41,7 @@ pub mod tree;
 
 use std::sync::{Arc, Barrier};
 
-use crate::comm::{Endpoint, RmaRegion, Topology};
+use crate::comm::{Endpoint, MembershipView, RmaRegion, Topology};
 use crate::config::{ChunkPolicy, Mode};
 use crate::util::error::{Error, Result};
 
@@ -75,6 +75,11 @@ pub struct CommStats {
     /// arrival under `on_straggler: late_apply`. Filled by the rank
     /// pipeline; their (larger) lag is included in `staleness_sum`.
     pub late_applies: u64,
+    /// Epochs this rank actually participated in (was live, ran the epoch
+    /// body). Equal to the run's epoch count for a fixed membership; less
+    /// for a rank that left or joined mid-run. Filled by the rank
+    /// pipeline — the Async-RED per-block participation bookkeeping.
+    pub participation_epochs: u64,
 }
 
 impl CommStats {
@@ -89,6 +94,7 @@ impl CommStats {
         self.applies += other.applies;
         self.skips += other.skips;
         self.late_applies += other.late_applies;
+        self.participation_epochs += other.participation_epochs;
     }
 
     /// Mean applied-gradient staleness in epochs (0.0 when nothing was
@@ -203,6 +209,17 @@ pub trait Collective: Send {
             out.push(self.wait_reduce()?);
         }
         Ok(out)
+    }
+
+    /// Elastic re-ring: rebuild the neighbour schedule for a new
+    /// membership view. Callers must quiesce first (`drain()`), so no
+    /// in-flight exchange ever straddles two rings; implementations may
+    /// reject the call otherwise. The default is a no-op for collectives
+    /// whose schedule does not depend on membership (ensemble/null);
+    /// modes that cannot re-ring (the synchronous Horovod baseline, whose
+    /// barrier is sized at build time) return an error instead.
+    fn set_membership(&mut self, _view: &MembershipView) -> Result<()> {
+        Ok(())
     }
 }
 

@@ -23,7 +23,7 @@
 use std::time::Instant;
 
 use super::{Collective, CommStats, ParkedReduce};
-use crate::comm::{Endpoint, GradMsg, Topology};
+use crate::comm::{Endpoint, GradMsg, MembershipView, Topology};
 use crate::config::ChunkPolicy;
 use crate::tensor::ops;
 use crate::util::error::{Error, Result};
@@ -323,6 +323,19 @@ impl Collective for ConvArar {
     fn parked(&mut self) -> &mut ParkedReduce {
         &mut self.parked
     }
+
+    fn set_membership(&mut self, view: &MembershipView) -> Result<()> {
+        if !self.parked.is_empty() {
+            return Err(Error::comm(
+                "set_membership with parked results in flight: drain() first",
+            ));
+        }
+        // A dormant rank keeps no ring; the live members form the global
+        // ring (ring_in panics on non-members, and a dormant rank never
+        // reduces until a later view re-admits it).
+        self.members = view.live().to_vec();
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -546,6 +559,40 @@ mod tests {
             // 2 partition transfers of 5 elements, 3 sub-messages each.
             assert_eq!(s.messages, 6);
             assert_eq!(s.bytes_sent, 2 * 5 * 4);
+        }
+    }
+
+    #[test]
+    fn conv_arar_re_rings_to_the_live_subset() {
+        // 4 ranks; after rank 2 leaves, the surviving ring {0,1,3} must
+        // average exactly its members — the elastic re-ring contract.
+        let topo = Topology::new(4, 4);
+        let eps = LocalNetwork::build(&topo, LinkModel::zero());
+        let view = MembershipView::new(1, vec![0, 1, 3], 4);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                let view = view.clone();
+                let rank = ep.rank;
+                let v = rank as f32;
+                std::thread::spawn(move || {
+                    let mut c = ConvArar::new(ep);
+                    c.set_membership(&view).unwrap();
+                    if !view.is_live(rank) {
+                        return (rank, vec![v; 5]);
+                    }
+                    let mut grads = vec![v; 5];
+                    c.epoch_reduce(0, &mut grads).unwrap();
+                    (rank, grads)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rank, g) = h.join().unwrap();
+            let expect = if rank == 2 { 2.0 } else { (0.0 + 1.0 + 3.0) / 3.0 };
+            for v in g {
+                assert!((v - expect).abs() < 1e-5, "rank {rank} got {v}");
+            }
         }
     }
 

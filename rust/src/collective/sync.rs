@@ -13,8 +13,8 @@ use std::time::Instant;
 
 use super::ring::ring_pass;
 use super::{Collective, CommStats, ParkedReduce};
-use crate::comm::Endpoint;
-use crate::util::error::Result;
+use crate::comm::{Endpoint, MembershipView};
+use crate::util::error::{Error, Result};
 
 /// Barrier + global ring, every epoch.
 pub struct SyncAllReduce {
@@ -58,6 +58,19 @@ impl Collective for SyncAllReduce {
 
     fn parked(&mut self) -> &mut ParkedReduce {
         &mut self.parked
+    }
+
+    fn set_membership(&mut self, view: &MembershipView) -> Result<()> {
+        // The shared barrier is sized for all ranks at build time; a
+        // membership change would deadlock the survivors. Config
+        // validation refuses elastic knobs under Horovod — this backstops
+        // it for direct API users.
+        if view.len() == view.total() {
+            return Ok(());
+        }
+        Err(Error::comm(
+            "horovod baseline cannot re-ring: its barrier is fixed at build time",
+        ))
     }
 }
 

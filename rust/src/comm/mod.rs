@@ -24,5 +24,5 @@ pub mod transport;
 pub use link_model::LinkModel;
 pub use message::GradMsg;
 pub use rma::{RmaRegion, RmaWindow};
-pub use topology::Topology;
+pub use topology::{MembershipView, Topology};
 pub use transport::{Endpoint, LocalNetwork};

@@ -127,7 +127,11 @@ impl RmaWindow {
 }
 
 /// The region: one window per directed (writer -> reader) neighbour pair.
-/// Built once by the launcher; ranks clone their handles.
+/// Built once by the launcher; ranks clone their handles. Cloning the
+/// region clones window *handles* (shared `Arc` state), so a collective can
+/// keep a region handle and re-derive rings from it after a membership
+/// change without re-allocating any windows.
+#[derive(Clone)]
 pub struct RmaRegion {
     ranks: usize,
     capacity: usize,

@@ -6,6 +6,75 @@
 //! every inner group, which runs a ring-all-reduce every `h` epochs so
 //! gradients also flow across nodes (Fig 6, Table I).
 
+/// A versioned snapshot of which ranks are live.
+///
+/// Elastic membership (ranks joining or leaving mid-run) is expressed as a
+/// sequence of `MembershipView`s: every view carries a monotonically
+/// increasing `version` plus the sorted set of live ranks out of `total`
+/// launched slots. Collectives rebuild their neighbour schedule from a view
+/// (see `Collective::set_membership`), and the pipeline uses the version to
+/// detect when a quiesce-and-re-ring transition is due. Version 0 is always
+/// the full membership the run started with.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MembershipView {
+    version: u64,
+    live: Vec<usize>,
+    total: usize,
+}
+
+impl MembershipView {
+    /// The full membership: every launched rank live, version 0.
+    pub fn full(total: usize) -> MembershipView {
+        assert!(total > 0);
+        MembershipView {
+            version: 0,
+            live: (0..total).collect(),
+            total,
+        }
+    }
+
+    /// A view over an explicit live set. The set is sorted and deduplicated;
+    /// it must be non-empty and every rank must be `< total`.
+    pub fn new(version: u64, mut live: Vec<usize>, total: usize) -> MembershipView {
+        live.sort_unstable();
+        live.dedup();
+        assert!(!live.is_empty(), "membership view must keep >= 1 rank");
+        assert!(live.iter().all(|&r| r < total), "live rank out of range");
+        MembershipView {
+            version,
+            live,
+            total,
+        }
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Live ranks in ascending order.
+    pub fn live(&self) -> &[usize] {
+        &self.live
+    }
+
+    /// Number of live ranks.
+    pub fn len(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live.is_empty()
+    }
+
+    /// Total launched rank slots (live or not).
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_live(&self, rank: usize) -> bool {
+        self.live.binary_search(&rank).is_ok()
+    }
+}
+
 /// Immutable description of the rank layout.
 #[derive(Clone, Debug)]
 pub struct Topology {
@@ -68,6 +137,39 @@ impl Topology {
         (0..self.ranks).collect()
     }
 
+    /// Members of the inner group containing `rank`, restricted to the
+    /// ranks live in `view`, in ring order. May be empty if the whole node
+    /// has left.
+    pub fn inner_group_live(&self, rank: usize, view: &MembershipView) -> Vec<usize> {
+        self.inner_group(rank)
+            .into_iter()
+            .filter(|&r| view.is_live(r))
+            .collect()
+    }
+
+    /// The outer group under `view`: the *lowest live* rank of each inner
+    /// group (the paper fixes the representative to local rank 0; when that
+    /// rank has left, its successor on the node inherits the seat).
+    pub fn outer_group_live(&self, view: &MembershipView) -> Vec<usize> {
+        (0..self.nodes())
+            .filter_map(|n| {
+                self.inner_group(n * self.gpus_per_node)
+                    .into_iter()
+                    .find(|&r| view.is_live(r))
+            })
+            .collect()
+    }
+
+    /// Whether `rank` holds its node's outer-ring seat under `view`.
+    pub fn is_outer_member_live(&self, rank: usize, view: &MembershipView) -> bool {
+        view.is_live(rank)
+            && self
+                .inner_group(rank)
+                .into_iter()
+                .find(|&r| view.is_live(r))
+                == Some(rank)
+    }
+
     /// Ring successor/predecessor *within* an ordered member list.
     /// Panics if `rank` is not a member.
     pub fn ring_in(members: &[usize], rank: usize) -> (usize, usize) {
@@ -125,6 +227,47 @@ mod tests {
         let t = Topology::new(1, 4);
         assert_eq!(t.ring_next(0), 0);
         assert_eq!(t.inner_group(0), vec![0]);
+    }
+
+    #[test]
+    fn full_view_matches_static_topology() {
+        let t = Topology::new(12, 4);
+        let v = MembershipView::full(12);
+        assert_eq!(v.version(), 0);
+        assert_eq!(v.len(), 12);
+        assert_eq!(t.inner_group_live(6, &v), t.inner_group(6));
+        assert_eq!(t.outer_group_live(&v), t.outer_group());
+        for r in 0..12 {
+            assert_eq!(t.is_outer_member_live(r, &v), t.is_outer_member(r));
+        }
+    }
+
+    #[test]
+    fn leaving_the_node_representative_promotes_the_next_live_rank() {
+        // Rank 4 (node 1's seat) leaves: rank 5 inherits the outer seat.
+        let t = Topology::new(12, 4);
+        let v = MembershipView::new(1, (0..12).filter(|&r| r != 4).collect(), 12);
+        assert_eq!(t.inner_group_live(5, &v), vec![5, 6, 7]);
+        assert_eq!(t.outer_group_live(&v), vec![0, 5, 8]);
+        assert!(t.is_outer_member_live(5, &v));
+        assert!(!t.is_outer_member_live(4, &v));
+        assert!(!t.is_outer_member_live(6, &v));
+    }
+
+    #[test]
+    fn whole_node_gone_drops_its_outer_seat() {
+        let t = Topology::new(12, 4);
+        let v = MembershipView::new(4, (0..12).filter(|&r| r / 4 != 1).collect(), 12);
+        assert_eq!(t.inner_group_live(6, &v), Vec::<usize>::new());
+        assert_eq!(t.outer_group_live(&v), vec![0, 8]);
+    }
+
+    #[test]
+    fn view_sorts_and_dedups() {
+        let v = MembershipView::new(3, vec![2, 0, 2, 1], 4);
+        assert_eq!(v.live(), &[0, 1, 2]);
+        assert!(v.is_live(1));
+        assert!(!v.is_live(3));
     }
 
     #[test]

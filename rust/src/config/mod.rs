@@ -312,6 +312,23 @@ pub struct RunConfig {
     /// bit-identical to serial, so seeds stay reproducible
     /// (`runtime::native::NativeOptions`). Ignored by the pjrt backend.
     pub intra_threads: usize,
+    /// Elastic-membership floor: the run refuses to shrink below this many
+    /// live ranks, whether by scripted leaves or health evictions
+    /// (default 1).
+    pub min_ranks: usize,
+    /// Health-driven eviction threshold: a rank that misses this many
+    /// *consecutive* exchange deadlines requests its own eviction at the
+    /// next membership boundary (0 = never evict, the default). Requires
+    /// an armed `exchange_timeout_ms`.
+    pub evict_after: usize,
+    /// Allow ranks to join mid-run (scripted `join` events, and resumes
+    /// whose rank count differs from the checkpoint's). Joins restore
+    /// state by checkpoint hand-off, so they need `ckpt_every > 0`.
+    pub allow_join: bool,
+    /// Scripted membership schedule: comma-separated `leave:R@E` /
+    /// `join:R@E` events (see `coordinator::membership`). A scripted run
+    /// replayed with the same schedule and seeds is bit-identical.
+    pub membership: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -400,6 +417,14 @@ impl RunConfig {
                 "data_pool" => cfg.data_pool = as_usize(val, k)?,
                 "runtime_workers" => cfg.runtime_workers = as_usize(val, k)?,
                 "intra_threads" => cfg.intra_threads = as_usize(val, k)?,
+                "min_ranks" => cfg.min_ranks = as_usize(val, k)?,
+                "evict_after" => cfg.evict_after = as_usize(val, k)?,
+                "allow_join" => {
+                    cfg.allow_join = val
+                        .as_bool()
+                        .ok_or_else(|| Error::config("allow_join must be a bool"))?
+                }
+                "membership" => cfg.membership = Some(req_str(val, k)?),
                 "artifacts_dir" => cfg.artifacts_dir = req_str(val, k)?,
                 "backend" => {
                     cfg.backend = BackendKind::parse(
@@ -496,6 +521,29 @@ impl RunConfig {
         }
         if matches!(&self.fault_plan, Some(p) if p.is_empty()) {
             return Err(Error::config("fault_plan needs a path or inline JSON"));
+        }
+        if self.min_ranks == 0 || self.min_ranks > self.ranks {
+            return Err(Error::config(format!(
+                "min_ranks must be in 1..={}, got {}",
+                self.ranks, self.min_ranks
+            )));
+        }
+        let elastic = self.evict_after > 0 || self.membership.is_some();
+        if elastic && self.mode == Mode::Horovod {
+            return Err(Error::config(
+                "elastic membership (evict_after / membership) is incompatible \
+                 with the synchronous horovod baseline: its barrier cannot re-ring",
+            ));
+        }
+        if self.evict_after > 0 && self.exchange_timeout_ms == 0 {
+            return Err(Error::config(
+                "evict_after needs exchange_timeout_ms > 0: evictions are \
+                 driven by deadline misses",
+            ));
+        }
+        if let Some(spec) = &self.membership {
+            let sched = crate::coordinator::membership::MembershipSchedule::parse(spec)?;
+            sched.validate_for(self.ranks, self.min_ranks, self.ckpt_every, self.allow_join)?;
         }
         // Run checkpointing composes with any staleness: the rank
         // pipeline drains its exchange window to quiescence at the
@@ -801,6 +849,49 @@ mod tests {
         assert!(c.validate().is_err());
         c.intra_threads = 64;
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn membership_knobs_parse_and_validate() {
+        // Defaults: fixed membership, floor 1, no joins.
+        let d = RunConfig::default();
+        assert_eq!(d.min_ranks, 1);
+        assert_eq!(d.evict_after, 0);
+        assert!(!d.allow_join);
+        assert!(d.membership.is_none());
+        // JSON round-trip.
+        let c = RunConfig::from_json(
+            r#"{"membership": "leave:2@8,join:2@16", "allow_join": true,
+                "min_ranks": 2, "ckpt_every": 8, "ckpt_dir": "ckpts"}"#,
+        )
+        .unwrap();
+        assert_eq!(c.membership.as_deref(), Some("leave:2@8,join:2@16"));
+        assert!(c.allow_join);
+        assert_eq!(c.min_ranks, 2);
+        // min_ranks bounds.
+        let mut c = RunConfig::default();
+        c.min_ranks = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.min_ranks = c.ranks + 1;
+        assert!(c.validate().is_err());
+        // evict_after needs a deadline.
+        let mut c = RunConfig::default();
+        c.evict_after = 3;
+        assert!(c.validate().is_err());
+        c.exchange_timeout_ms = 100;
+        c.validate().unwrap();
+        // Horovod cannot re-ring.
+        c.mode = Mode::Horovod;
+        assert!(c.validate().is_err());
+        // A join event without allow_join / a checkpoint cadence fails.
+        assert!(RunConfig::from_json(r#"{"membership": "join:2@16"}"#).is_err());
+        assert!(RunConfig::from_json(
+            r#"{"membership": "leave:2@8,join:2@16", "allow_join": true}"#
+        )
+        .is_err());
+        // Rank 0 may never leave.
+        assert!(RunConfig::from_json(r#"{"membership": "leave:0@8"}"#).is_err());
     }
 
     #[test]

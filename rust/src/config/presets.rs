@@ -47,6 +47,10 @@ pub fn paper_table3() -> RunConfig {
         // Paper-faithful: execute the AOT-exported HLO on device.
         backend: BackendKind::Pjrt,
         intra_threads: 0,
+        min_ranks: 1,
+        evict_after: 0,
+        allow_join: false,
+        membership: None,
     }
 }
 
@@ -89,6 +93,10 @@ pub fn ci_default() -> RunConfig {
         // Runs everywhere: the native backend needs no artifact export.
         backend: BackendKind::Native,
         intra_threads: 0,
+        min_ranks: 1,
+        evict_after: 0,
+        allow_join: false,
+        membership: None,
     }
 }
 

@@ -24,6 +24,9 @@ use crate::runtime::{Runtime, RuntimeHandle};
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 
+use super::membership::{
+    MembershipChange, MembershipDirector, MembershipRecord, MembershipSchedule,
+};
 use super::pipeline::RankHealth;
 use super::rank::{run_rank, RankOutcome};
 use super::resume::{prepare_resume, RankResume, RunCheckpointer};
@@ -54,6 +57,10 @@ pub struct RunResult {
     pub health: Vec<RankHealth>,
     /// Epoch the run resumed from (`None` for a fresh run).
     pub resumed_from: Option<u64>,
+    /// Membership events the run observed — scripted leaves/joins,
+    /// health-driven evictions, and elastic resume shrink/grow — in
+    /// (epoch, rank) order. Empty for a fixed-cohort run.
+    pub membership: Vec<MembershipRecord>,
 }
 
 impl RunResult {
@@ -74,6 +81,21 @@ impl RunResult {
         } else {
             0.0
         }
+    }
+
+    /// How many membership events of `kind` the run observed.
+    pub fn membership_count(&self, kind: MembershipChange) -> usize {
+        self.membership.iter().filter(|r| r.kind == kind).count()
+    }
+
+    /// Live ranks at the end of the run: the latest-epoch `members`
+    /// sample any rank recorded, falling back to the launched width when
+    /// the series was never recorded (fixed cohort).
+    pub fn final_members(&self) -> usize {
+        self.metrics
+            .latest("members")
+            .map(|v| v as usize)
+            .unwrap_or(self.states.len())
     }
 }
 
@@ -132,7 +154,7 @@ pub fn run_training_with_links(
         None => None,
     };
     let endpoints = LocalNetwork::build_with_faults(&topo, link_model, fault_plan);
-    let collectives = collective::build_with_policy(
+    let mut collectives = collective::build_with_policy(
         cfg.mode,
         &topo,
         cfg.outer_freq,
@@ -140,6 +162,76 @@ pub fn run_training_with_links(
         &region,
         cfg.chunking,
     )?;
+
+    // Resume: rank 0 loads the run checkpoint once (through the
+    // scenario-identity guard) and the per-rank states are handed to the
+    // rank threads below — the thread-world equivalent of broadcasting
+    // the restored state to all ranks before the first epoch. Under
+    // --allow-join the cohort may shrink or grow here; the membership
+    // records say what happened.
+    let (restored, resume_records) = match &cfg.resume {
+        Some(_) => {
+            let (ck, recs) = prepare_resume(cfg, manifest)?;
+            (Some(ck), recs)
+        }
+        None => (None, Vec::new()),
+    };
+    let resumed_from = restored.as_ref().map(|ck| {
+        crate::log_info!(
+            "resuming from epoch {} ({} ranks, scenario {}, {:.2}s \
+             accumulated): epochs {}..{} remain",
+            ck.epoch,
+            ck.ranks.len(),
+            ck.scenario,
+            ck.elapsed_s,
+            ck.epoch + 1,
+            cfg.epochs
+        );
+        ck.epoch
+    });
+    let start_epoch = restored.as_ref().map(|ck| ck.epoch + 1).unwrap_or(0);
+
+    // Elastic membership: arm the shared director when a scripted
+    // schedule or health-driven eviction is configured (validate() has
+    // already vetted the schedule against the run shape). The start-epoch
+    // view is applied to the bare collectives before any engine wrap, so
+    // initially-dormant ranks never enter the first ring.
+    let membership_schedule = match &cfg.membership {
+        Some(spec) => MembershipSchedule::parse(spec)?,
+        None => MembershipSchedule::default(),
+    };
+    let director = if !membership_schedule.is_empty() || cfg.evict_after > 0 {
+        crate::log_info!(
+            "elastic membership armed: {} scripted event(s), evict_after {}, \
+             min_ranks {}",
+            membership_schedule.len(),
+            cfg.evict_after,
+            cfg.min_ranks
+        );
+        Some(Arc::new(MembershipDirector::new(
+            membership_schedule,
+            cfg.ranks,
+            cfg.min_ranks,
+        )))
+    } else {
+        None
+    };
+    if let Some(dir) = &director {
+        let view = dir.view_at(start_epoch);
+        if view.len() < cfg.ranks {
+            crate::log_info!(
+                "membership: starting at epoch {start_epoch} with {}/{} live \
+                 ranks (view v{})",
+                view.len(),
+                cfg.ranks,
+                view.version()
+            );
+            for coll in collectives.iter_mut() {
+                coll.set_membership(&view)?;
+            }
+        }
+    }
+
     // Staleness >= 1: move every rank's collective onto a dedicated comm
     // thread with a window sized to the configured staleness, so the rank
     // pipeline's start_reduce/wait_reduce/drain calls genuinely overlap
@@ -177,28 +269,6 @@ pub fn run_training_with_links(
     let pipeline_artifact = pick_pipeline_artifact(handle)?;
     let pool = ToyDataset::generate(handle, &pipeline_artifact, cfg.data_pool, cfg.seed)?;
 
-    // Resume: rank 0 loads the run checkpoint once (through the
-    // scenario-identity guard) and the per-rank states are handed to the
-    // rank threads below — the thread-world equivalent of broadcasting
-    // the restored state to all ranks before the first epoch.
-    let restored = match &cfg.resume {
-        Some(_) => Some(prepare_resume(cfg, manifest)?),
-        None => None,
-    };
-    let resumed_from = restored.as_ref().map(|ck| {
-        crate::log_info!(
-            "resuming from epoch {} ({} ranks, scenario {}, {:.2}s \
-             accumulated): epochs {}..{} remain",
-            ck.epoch,
-            ck.ranks.len(),
-            ck.scenario,
-            ck.elapsed_s,
-            ck.epoch + 1,
-            cfg.epochs
-        );
-        ck.epoch
-    });
-
     // Periodic run checkpointing (rank-0-owned, shared across the rank
     // threads; disabled unless ckpt_every > 0).
     let checkpointer = if cfg.ckpt_every > 0 {
@@ -228,6 +298,15 @@ pub fn run_training_with_links(
         c
     };
 
+    // Ranks grown at resume (`--allow-join` with a narrower checkpoint):
+    // they train on the donor snapshot but must draw from their own
+    // seed-derived stream, not the donor's.
+    let joined_at_resume: Vec<usize> = resume_records
+        .iter()
+        .filter(|r| r.kind == MembershipChange::Join)
+        .map(|r| r.rank)
+        .collect();
+
     let mut root_rng = Rng::new(cfg.seed);
     let timer = crate::metrics::Timer::start();
     let mut handles = Vec::with_capacity(cfg.ranks);
@@ -244,16 +323,34 @@ pub fn run_training_with_links(
         };
         let boot = Bootstrap::new(shard);
         let ckpt = checkpointer.clone();
-        let resume = restored.as_ref().map(|ck| RankResume {
-            start_epoch: ck.epoch + 1,
-            elapsed_offset: ck.elapsed_s,
-            state: ck.ranks[rank].clone(),
+        let dir = director.clone();
+        let resume = restored.as_ref().map(|ck| {
+            let mut state = ck.ranks[rank].clone();
+            if joined_at_resume.contains(&rank) {
+                state.rng = rng.snapshot();
+            }
+            RankResume {
+                start_epoch: ck.epoch + 1,
+                elapsed_offset: ck.elapsed_s,
+                state,
+            }
         });
         handles.push(
             std::thread::Builder::new()
                 .name(format!("rank-{rank}"))
                 .spawn(move || {
-                    run_rank(rank, &cfg, handle, coll, boot, rng, rank == 0, ckpt, resume)
+                    run_rank(
+                        rank,
+                        &cfg,
+                        handle,
+                        coll,
+                        boot,
+                        rng,
+                        rank == 0,
+                        ckpt,
+                        resume,
+                        dir,
+                    )
                 })
                 .map_err(Error::Io)?,
         );
@@ -283,6 +380,14 @@ pub fn run_training_with_links(
         None => Some(evaluator.residuals(&outcomes[0].state.gen)?),
     };
 
+    // Merge the resume-time shrink/grow records with everything the
+    // director observed during the run (scripted events + evictions).
+    let mut membership = resume_records;
+    if let Some(dir) = &director {
+        membership.extend(dir.records(cfg.epochs as u64 - 1));
+    }
+    membership.sort_by_key(|r| (r.epoch, r.rank));
+
     Ok(RunResult {
         wall_s,
         metrics: MergedMetrics::new(outcomes.iter().map(|o| o.recorder.clone()).collect()),
@@ -293,6 +398,7 @@ pub fn run_training_with_links(
         residual_curve,
         final_residuals,
         resumed_from,
+        membership,
     })
 }
 

@@ -1,0 +1,493 @@
+//! Elastic membership: the epoch-boundary join/leave protocol.
+//!
+//! SAGIPS's rings assume a fixed rank set; this module relaxes that. The
+//! membership of a run is a sequence of versioned
+//! [`MembershipView`](crate::comm::MembershipView)s, advanced only at epoch
+//! boundaries:
+//!
+//! * a **scripted schedule** (`--membership "leave:2@8,join:2@16"`) is a
+//!   pure function of the epoch — replaying a run with the same schedule
+//!   and seeds is bit-identical;
+//! * **dynamic evictions** (`--evict-after n`) fire when a rank's own
+//!   health accounting reaches `n` consecutive deadline misses (the
+//!   `suspect` ladder of PR 7); they commit two epochs ahead of the
+//!   highest epoch any rank has entered, so every rank observes the
+//!   change at the same boundary.
+//!
+//! A leaving rank goes **dormant**: its thread idles through the remaining
+//! epochs (no draws, no steps, no exchanges) so a later scripted `join` can
+//! wake it — the in-process stand-in for a fresh worker process. A joining
+//! rank restores state from the latest run checkpoint (its own slot if it
+//! ever trained, else a donor snapshot from the lowest live rank), which is
+//! the checkpoint hand-off of the elastic-ensembles roadmap item.
+//!
+//! Transitions are quiesced: the pipeline calls `Collective::drain()`
+//! before applying a new view, so no in-flight exchange ever straddles two
+//! rings (Async-RED's requirement that block updates stay well-defined
+//! under asynchronous participation).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::comm::MembershipView;
+use crate::util::error::{Error, Result};
+
+/// What happened to a rank at a membership boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MembershipChange {
+    /// The rank entered (or re-entered) the run via checkpoint hand-off.
+    Join,
+    /// The rank left on schedule (a planned departure).
+    Leave,
+    /// The rank was evicted by health accounting.
+    Evict,
+}
+
+impl MembershipChange {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MembershipChange::Join => "join",
+            MembershipChange::Leave => "leave",
+            MembershipChange::Evict => "evict",
+        }
+    }
+}
+
+/// One membership event, as recorded in the run result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MembershipRecord {
+    /// First epoch at which the new membership is in effect.
+    pub epoch: u64,
+    pub rank: usize,
+    pub kind: MembershipChange,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct ScheduledEvent {
+    epoch: u64,
+    rank: usize,
+    join: bool,
+}
+
+/// A scripted membership schedule: a pure function of the epoch.
+///
+/// Spec format: comma-separated events `leave:R@E` / `join:R@E`, e.g.
+/// `"leave:2@8,join:2@16"` — rank 2 leaves at the start of epoch 8 and
+/// rejoins at the start of epoch 16. A rank whose *first* event is a join
+/// starts the run dormant.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MembershipSchedule {
+    /// Sorted by (epoch, rank); stable under replay.
+    events: Vec<ScheduledEvent>,
+}
+
+impl MembershipSchedule {
+    /// Parse a schedule spec. Empty spec = empty schedule.
+    pub fn parse(spec: &str) -> Result<MembershipSchedule> {
+        let mut events = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind, rest) = part.split_once(':').ok_or_else(|| {
+                Error::config(format!(
+                    "membership event '{part}' is not 'leave:R@E' or 'join:R@E'"
+                ))
+            })?;
+            let join = match kind {
+                "join" => true,
+                "leave" => false,
+                other => {
+                    return Err(Error::config(format!(
+                        "membership event kind '{other}' (want 'leave' or 'join')"
+                    )))
+                }
+            };
+            let (rank, epoch) = rest.split_once('@').ok_or_else(|| {
+                Error::config(format!("membership event '{part}' is missing '@epoch'"))
+            })?;
+            let rank: usize = rank
+                .trim()
+                .parse()
+                .map_err(|_| Error::config(format!("bad rank in membership event '{part}'")))?;
+            let epoch: u64 = epoch
+                .trim()
+                .parse()
+                .map_err(|_| Error::config(format!("bad epoch in membership event '{part}'")))?;
+            events.push(ScheduledEvent { epoch, rank, join });
+        }
+        events.sort_by_key(|e| (e.epoch, e.rank, e.join));
+        Ok(MembershipSchedule { events })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Number of scripted events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Ranks whose first scheduled event is a join: they start dormant.
+    pub fn initially_dormant(&self) -> Vec<usize> {
+        let mut first: BTreeMap<usize, bool> = BTreeMap::new();
+        for e in &self.events {
+            first.entry(e.rank).or_insert(e.join);
+        }
+        first
+            .into_iter()
+            .filter_map(|(rank, join)| join.then_some(rank))
+            .collect()
+    }
+
+    /// Validate the schedule against a run shape. `ranks` is the launched
+    /// slot count; joins need a checkpoint cadence to hand state off from.
+    pub fn validate_for(
+        &self,
+        ranks: usize,
+        min_ranks: usize,
+        ckpt_every: usize,
+        allow_join: bool,
+    ) -> Result<()> {
+        let mut live: Vec<bool> = vec![true; ranks];
+        for r in self.initially_dormant() {
+            if r < ranks {
+                live[r] = false;
+            }
+        }
+        let mut count = live.iter().filter(|&&l| l).count();
+        if count < min_ranks {
+            return Err(Error::config(format!(
+                "membership schedule starts with {count} live ranks < min_ranks {min_ranks}"
+            )));
+        }
+        for e in &self.events {
+            if e.rank >= ranks {
+                return Err(Error::config(format!(
+                    "membership event rank {} out of range for {ranks} ranks",
+                    e.rank
+                )));
+            }
+            if e.rank == 0 && !e.join {
+                return Err(Error::config(
+                    "rank 0 cannot leave: it anchors the run checkpoint sidecar",
+                ));
+            }
+            if e.join {
+                if !allow_join {
+                    return Err(Error::config(format!(
+                        "membership event 'join:{}@{}' needs --allow-join",
+                        e.rank, e.epoch
+                    )));
+                }
+                if ckpt_every == 0 {
+                    return Err(Error::config(
+                        "membership joins need --ckpt-every > 0 (checkpoint hand-off)",
+                    ));
+                }
+                if e.epoch < ckpt_every as u64 {
+                    return Err(Error::config(format!(
+                        "join:{}@{} precedes the first checkpoint boundary (ckpt_every {})",
+                        e.rank, e.epoch, ckpt_every
+                    )));
+                }
+            }
+            if live[e.rank] == e.join {
+                return Err(Error::config(format!(
+                    "membership event '{}:{}@{}' repeats the rank's current state",
+                    if e.join { "join" } else { "leave" },
+                    e.rank,
+                    e.epoch
+                )));
+            }
+            live[e.rank] = e.join;
+            count = if e.join { count + 1 } else { count - 1 };
+            if count < min_ranks.max(1) {
+                return Err(Error::config(format!(
+                    "membership schedule drops to {count} live ranks at epoch {} \
+                     (min_ranks {min_ranks})",
+                    e.epoch
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// The view in effect at the start of `epoch`: version = number of
+    /// scheduled events with effect epoch <= `epoch`.
+    pub fn view_at(&self, epoch: u64, total: usize) -> MembershipView {
+        let mut live: Vec<bool> = vec![true; total];
+        for r in self.initially_dormant() {
+            if r < total {
+                live[r] = false;
+            }
+        }
+        let mut version = 0u64;
+        for e in self.events.iter().filter(|e| e.epoch <= epoch) {
+            live[e.rank] = e.join;
+            version += 1;
+        }
+        let members: Vec<usize> = (0..total).filter(|&r| live[r]).collect();
+        MembershipView::new(version, members, total)
+    }
+
+    /// All scheduled events with effect epoch <= `last_epoch`, as records.
+    fn records_through(&self, last_epoch: u64) -> Vec<MembershipRecord> {
+        self.events
+            .iter()
+            .filter(|e| e.epoch <= last_epoch)
+            .map(|e| MembershipRecord {
+                epoch: e.epoch,
+                rank: e.rank,
+                kind: if e.join {
+                    MembershipChange::Join
+                } else {
+                    MembershipChange::Leave
+                },
+            })
+            .collect()
+    }
+}
+
+#[derive(Debug, Default)]
+struct DirectorState {
+    /// Committed dynamic evictions: (first effective epoch, rank).
+    evicts: Vec<(u64, usize)>,
+    /// Highest epoch any live rank has entered; eviction commit horizon.
+    max_entered: u64,
+    /// Ranks with an eviction already committed (dedup).
+    requested: Vec<usize>,
+}
+
+/// Shared membership authority for one run.
+///
+/// All ranks consult the director at the top of every epoch. The scripted
+/// schedule part of a view is a pure function of the epoch; dynamic
+/// evictions are folded in once committed (always >= 2 epochs ahead of the
+/// furthest rank, so every rank sees the transition at the same boundary).
+pub struct MembershipDirector {
+    schedule: MembershipSchedule,
+    total: usize,
+    min_ranks: usize,
+    state: Mutex<DirectorState>,
+}
+
+impl MembershipDirector {
+    pub fn new(
+        schedule: MembershipSchedule,
+        total: usize,
+        min_ranks: usize,
+    ) -> MembershipDirector {
+        MembershipDirector {
+            schedule,
+            total,
+            min_ranks: min_ranks.max(1),
+            state: Mutex::new(DirectorState::default()),
+        }
+    }
+
+    /// Note that a live rank is entering `epoch` (advances the eviction
+    /// commit horizon).
+    pub fn entering(&self, epoch: u64) {
+        let mut st = self.state.lock().expect("membership director poisoned");
+        st.max_entered = st.max_entered.max(epoch);
+    }
+
+    /// The membership in effect at the start of `epoch`.
+    pub fn view_at(&self, epoch: u64) -> MembershipView {
+        let st = self.state.lock().expect("membership director poisoned");
+        let base = self.schedule.view_at(epoch, self.total);
+        let committed: Vec<usize> = st
+            .evicts
+            .iter()
+            .filter(|&&(at, _)| at <= epoch)
+            .map(|&(_, r)| r)
+            .collect();
+        if committed.is_empty() {
+            return base;
+        }
+        let live: Vec<usize> = base
+            .live()
+            .iter()
+            .copied()
+            .filter(|r| !committed.contains(r))
+            .collect();
+        MembershipView::new(base.version() + committed.len() as u64, live, self.total)
+    }
+
+    /// Request a dynamic eviction of `rank` (health-driven). Returns the
+    /// first effective epoch if committed; `None` if the rank is already
+    /// leaving or the floor (`min_ranks`) would be violated.
+    pub fn request_leave(&self, rank: usize) -> Option<u64> {
+        if rank == 0 {
+            return None; // rank 0 anchors the checkpoint sidecar
+        }
+        let mut st = self.state.lock().expect("membership director poisoned");
+        if st.requested.contains(&rank) {
+            return None;
+        }
+        // Commit beyond every rank's current epoch so the transition lands
+        // at one common boundary.
+        let at = st.max_entered + 2;
+        let base = self.schedule.view_at(at, self.total);
+        let committed: Vec<usize> = st.evicts.iter().map(|&(_, r)| r).collect();
+        let survivors = base
+            .live()
+            .iter()
+            .filter(|&&r| r != rank && !committed.contains(&r))
+            .count();
+        if !base.is_live(rank) || survivors < self.min_ranks {
+            return None;
+        }
+        st.requested.push(rank);
+        st.evicts.push((at, rank));
+        Some(at)
+    }
+
+    /// Every membership event with effect epoch <= `last_epoch`, scheduled
+    /// and dynamic, ordered by epoch then rank.
+    pub fn records(&self, last_epoch: u64) -> Vec<MembershipRecord> {
+        let st = self.state.lock().expect("membership director poisoned");
+        let mut out = self.schedule.records_through(last_epoch);
+        out.extend(
+            st.evicts
+                .iter()
+                .filter(|&&(at, _)| at <= last_epoch)
+                .map(|&(at, rank)| MembershipRecord {
+                    epoch: at,
+                    rank,
+                    kind: MembershipChange::Evict,
+                }),
+        );
+        out.sort_by_key(|r| (r.epoch, r.rank));
+        out
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn min_ranks(&self) -> usize {
+        self.min_ranks
+    }
+
+    /// Whether anything can ever change membership (scripted or dynamic
+    /// evictions armed elsewhere) — the launcher arms the director only
+    /// when so, but tests may query it.
+    pub fn is_scripted(&self) -> bool {
+        !self.schedule.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_and_ordering() {
+        let s = MembershipSchedule::parse("join:2@16, leave:2@8").unwrap();
+        let v0 = s.view_at(0, 4);
+        assert_eq!(v0.live(), &[0, 1, 2, 3]);
+        assert_eq!(v0.version(), 0);
+        let v8 = s.view_at(8, 4);
+        assert_eq!(v8.live(), &[0, 1, 3]);
+        assert_eq!(v8.version(), 1);
+        let v16 = s.view_at(16, 4);
+        assert_eq!(v16.live(), &[0, 1, 2, 3]);
+        assert_eq!(v16.version(), 2);
+    }
+
+    #[test]
+    fn view_is_pure_function_of_epoch() {
+        let s = MembershipSchedule::parse("leave:1@3,join:1@9,leave:3@5").unwrap();
+        for e in 0..12 {
+            assert_eq!(s.view_at(e, 4), s.view_at(e, 4));
+        }
+        // Monotone version.
+        let mut last = 0;
+        for e in 0..12 {
+            let v = s.view_at(e, 4).version();
+            assert!(v >= last);
+            last = v;
+        }
+        assert_eq!(last, 3);
+    }
+
+    #[test]
+    fn first_event_join_starts_dormant() {
+        let s = MembershipSchedule::parse("join:3@10").unwrap();
+        assert_eq!(s.initially_dormant(), vec![3]);
+        assert_eq!(s.view_at(0, 4).live(), &[0, 1, 2]);
+        assert_eq!(s.view_at(10, 4).live(), &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(MembershipSchedule::parse("leave:2").is_err());
+        assert!(MembershipSchedule::parse("evict:2@4").is_err());
+        assert!(MembershipSchedule::parse("leave:x@4").is_err());
+        assert!(MembershipSchedule::parse("leave:2@x").is_err());
+        assert!(MembershipSchedule::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn validate_guards_rank0_floor_and_joins() {
+        let leave0 = MembershipSchedule::parse("leave:0@4").unwrap();
+        assert!(leave0.validate_for(4, 1, 0, false).is_err());
+
+        let floor = MembershipSchedule::parse("leave:1@2,leave:2@3,leave:3@4").unwrap();
+        assert!(floor.validate_for(4, 2, 0, false).is_err());
+        assert!(floor.validate_for(4, 1, 0, false).is_ok());
+
+        let join = MembershipSchedule::parse("leave:1@3,join:1@8").unwrap();
+        assert!(join.validate_for(4, 1, 6, true).is_ok());
+        assert!(join.validate_for(4, 1, 6, false).is_err()); // needs allow_join
+        assert!(join.validate_for(4, 1, 0, true).is_err()); // needs ckpt cadence
+        let early = MembershipSchedule::parse("leave:1@1,join:1@3").unwrap();
+        assert!(early.validate_for(4, 1, 6, true).is_err()); // join before 1st ckpt
+
+        let out_of_range = MembershipSchedule::parse("leave:9@3").unwrap();
+        assert!(out_of_range.validate_for(4, 1, 0, false).is_err());
+
+        let repeat = MembershipSchedule::parse("leave:1@3,leave:1@5").unwrap();
+        assert!(repeat.validate_for(4, 1, 0, false).is_err());
+    }
+
+    #[test]
+    fn director_commits_evictions_at_a_common_future_boundary() {
+        let d = MembershipDirector::new(MembershipSchedule::default(), 4, 2);
+        d.entering(5);
+        let at = d.request_leave(2).expect("eviction should commit");
+        assert_eq!(at, 7);
+        assert!(d.view_at(6).is_live(2));
+        let v7 = d.view_at(7);
+        assert!(!v7.is_live(2));
+        assert_eq!(v7.version(), 1);
+        // Dedup: a second request for the same rank is a no-op.
+        assert_eq!(d.request_leave(2), None);
+        // Floor: evicting one more would leave 2 live, evicting two would
+        // drop below min_ranks=2.
+        assert!(d.request_leave(3).is_some());
+        assert_eq!(d.request_leave(1), None);
+        // Rank 0 can never be evicted.
+        assert_eq!(d.request_leave(0), None);
+        let recs = d.records(20);
+        assert_eq!(recs.len(), 2);
+        assert!(recs
+            .iter()
+            .all(|r| r.kind == MembershipChange::Evict && r.epoch == 7));
+    }
+
+    #[test]
+    fn director_folds_schedule_and_evictions() {
+        let s = MembershipSchedule::parse("leave:1@4").unwrap();
+        let d = MembershipDirector::new(s, 4, 1);
+        d.entering(2);
+        assert_eq!(d.request_leave(3), Some(4));
+        let v = d.view_at(4);
+        assert_eq!(v.live(), &[0, 2]);
+        assert_eq!(v.version(), 2);
+        let recs = d.records(4);
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].kind, MembershipChange::Leave);
+        assert_eq!(recs[1].kind, MembershipChange::Evict);
+    }
+}

@@ -14,14 +14,20 @@
 //!   that assembles per-rank training state into atomic on-disk run
 //!   checkpoints, and the restore path that validates and redistributes a
 //!   checkpoint so an interrupted run continues bit-identically.
+//! * [`membership`] — elastic membership: the epoch-boundary protocol that
+//!   lets ranks leave (on request or eviction) and join (via checkpoint
+//!   hand-off) mid-run, emitting versioned [`crate::comm::MembershipView`]s
+//!   that the collectives re-ring from.
 
 pub mod launcher;
+pub mod membership;
 pub mod offload;
 pub mod pipeline;
 pub mod rank;
 pub mod resume;
 
 pub use launcher::{run_training, RunResult};
+pub use membership::{MembershipChange, MembershipDirector, MembershipRecord, MembershipSchedule};
 pub use offload::GradOffloader;
 pub use pipeline::RankPipeline;
 pub use rank::RankOutcome;

@@ -55,16 +55,31 @@
 //! still settles *everything* — including abandoned results, which it
 //! discards — so checkpoint quiescence and bit-identical resume hold
 //! under every policy.
+//!
+//! **Elastic membership.** When a
+//! [`MembershipDirector`](super::membership::MembershipDirector) is
+//! armed, every epoch starts with a [`RankPipeline::transition`] check:
+//! on a view-version change the rank drains its window (no in-flight
+//! exchange may straddle two rings), re-rings its collective via
+//! [`Collective::set_membership`], and — when (re)joining — restores
+//! state from the newest checkpoint boundary before the join epoch
+//! (`RunCheckpointer::wait_for`). A dormant rank idles through its
+//! epochs (no draws, steps, exchanges or metrics) but keeps depositing
+//! its frozen state at the checkpoint cadence, so every run checkpoint
+//! stays full-width and replays stay bit-identical. Live epochs count
+//! into [`CommStats::participation_epochs`] and record a `members`
+//! series (Async-RED-style participation bookkeeping).
 
 use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::collective::{Collective, CommStats};
+use crate::comm::MembershipView;
 use crate::config::{RunConfig, StragglerPolicy};
 use crate::data::Bootstrap;
 use crate::metrics::{Recorder, Timer};
-use crate::model::checkpoint::{CheckpointSeries, RankTrainState};
+use crate::model::checkpoint::{CheckpointSeries, RankTrainState, TrainCheckpoint};
 use crate::model::gan::GanState;
 use crate::model::{StepOutput, TrainStep};
 use crate::optim::{Adam, Optimizer};
@@ -74,6 +89,7 @@ use crate::tensor::ops;
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 
+use super::membership::MembershipDirector;
 use super::offload::GradOffloader;
 use super::rank::RankOutcome;
 use super::resume::{RankResume, RunCheckpointer};
@@ -110,6 +126,12 @@ pub const SUSPECT_AFTER: u32 = 3;
 
 /// Sleep between polls while waiting under an exchange deadline.
 const POLL_INTERVAL: Duration = Duration::from_micros(200);
+
+/// How long a joining rank waits for its hand-off checkpoint boundary.
+/// Joiners race ahead of the live cohort through their dormant epochs, so
+/// the boundary may be several epochs of real training away — this is a
+/// liveness backstop, not a latency deadline.
+const HANDOFF_TIMEOUT: Duration = Duration::from_secs(300);
 
 impl HealthState {
     /// Numeric encoding for the per-epoch `health` Recorder series.
@@ -244,6 +266,19 @@ pub struct RankPipeline {
     timer: Timer,
     elapsed_offset: f64,
     start_epoch: u64,
+    /// Elastic membership authority (`None` = fixed cohort, zero new
+    /// cost on the hot path).
+    director: Option<Arc<MembershipDirector>>,
+    /// The membership view this rank last re-ringed under.
+    view: MembershipView,
+    /// Whether this rank is currently a ring member. Dormant ranks idle
+    /// through their epochs — no draws, steps, exchanges or metrics —
+    /// but keep depositing their frozen state at the checkpoint cadence
+    /// so run checkpoints stay full-width.
+    live: bool,
+    /// Consecutive deadline misses after which this rank asks the
+    /// director to evict it (0 = never).
+    evict_after: usize,
 }
 
 impl RankPipeline {
@@ -261,6 +296,7 @@ impl RankPipeline {
         shard: Bootstrap,
         mut rng: Rng,
         resume: Option<RankResume>,
+        director: Option<Arc<MembershipDirector>>,
     ) -> Result<RankPipeline> {
         let manifest = handle.manifest();
         let meta = manifest.model(&cfg.model)?.clone();
@@ -307,6 +343,15 @@ impl RankPipeline {
         let disc_batch = step.disc_batch();
         let real = Vec::with_capacity(step.real_len());
 
+        // The launcher has already applied the start-epoch view to the
+        // collectives; record it so transition() only reacts to version
+        // *changes* past this point.
+        let view = match &director {
+            Some(d) => d.view_at(start_epoch),
+            None => MembershipView::full(cfg.ranks),
+        };
+        let live = view.is_live(rank);
+
         Ok(RankPipeline {
             rank,
             staleness: cfg.staleness,
@@ -337,6 +382,10 @@ impl RankPipeline {
             timer: Timer::start(),
             elapsed_offset,
             start_epoch,
+            director,
+            view,
+            live,
+            evict_after: cfg.evict_after,
         })
     }
 
@@ -350,11 +399,17 @@ impl RankPipeline {
         checkpointer: Option<&Arc<RunCheckpointer>>,
     ) -> Result<()> {
         for epoch in self.start_epoch..cfg.epochs as u64 {
-            self.run_epoch(epoch)?;
+            // Membership transition point: drain-quiesced re-ring, leave,
+            // or checkpoint hand-off join. No-op for fixed cohorts.
+            self.transition(epoch, checkpointer)?;
+            if self.live {
+                self.run_epoch(epoch)?;
+            }
 
             // Analysis checkpoints: timestamped generator snapshots for
             // the post-training residual curves (Sec. VI-C2).
-            if take_checkpoints
+            if self.live
+                && take_checkpoints
                 && (epoch == 0
                     || cfg.checkpoint_every > 0
                         && (epoch + 1) % cfg.checkpoint_every as u64 == 0)
@@ -371,7 +426,9 @@ impl RankPipeline {
             // Run-checkpoint deposit: drain to quiescence first, so the
             // checkpoint captures a fully settled state — no exchange in
             // flight, every started epoch's gradients applied. This is
-            // what makes resumed overlap runs bit-identical.
+            // what makes resumed overlap runs bit-identical. Dormant
+            // ranks deposit too (their frozen state; the drain is a
+            // no-op) so checkpoints stay full-width under churn.
             if let Some(ck) = checkpointer {
                 if ck.wants(epoch) {
                     self.drain(epoch)?;
@@ -501,6 +558,35 @@ impl RankPipeline {
         if self.deadline.is_some() {
             self.recorder
                 .push("health", epoch, self.health.state().as_f64());
+        }
+        // Participation bookkeeping (Async-RED-style per-block
+        // accounting): one tick per epoch this rank actually trained.
+        // Dormant epochs never reach here, so under churn each rank's
+        // count is exactly its live-epoch total.
+        self.comm_totals.participation_epochs += 1;
+        // The live-member count this rank trained under — recorded only
+        // for elastic runs so fixed cohorts keep their metric set.
+        if self.director.is_some() {
+            self.recorder
+                .push("members", epoch, self.view.len() as f64);
+        }
+        // Health-driven eviction: past the configured run of consecutive
+        // deadline misses, ask the director to take this rank out of the
+        // ring at a common future boundary. request_leave dedups, so the
+        // repeated asks of a persistent straggler are no-ops.
+        if self.evict_after > 0
+            && self.health.consecutive_timeouts >= self.evict_after as u32
+        {
+            if let Some(dir) = &self.director {
+                if let Some(at) = dir.request_leave(self.rank) {
+                    crate::log_info!(
+                        "rank {}: requesting eviction after {} consecutive \
+                         deadline misses (effective at epoch {at})",
+                        self.rank,
+                        self.health.consecutive_timeouts
+                    );
+                }
+            }
         }
         Ok(())
     }
@@ -691,6 +777,106 @@ impl RankPipeline {
         }
         self.apply_result((buf, s), at_epoch, lap, t_comm, t_opt, stats)
             .map(Some)
+    }
+
+    /// Epoch-boundary membership transition: consult the director and, on
+    /// a view-version change, (1) drain the old ring to quiescence so no
+    /// in-flight exchange straddles two rings, (2) hand off state from
+    /// the boundary checkpoint when this rank is (re)joining, and (3)
+    /// re-ring the collective under the new view. No-op without a
+    /// director or while the version is unchanged.
+    fn transition(&mut self, epoch: u64, ck: Option<&Arc<RunCheckpointer>>) -> Result<()> {
+        let Some(dir) = self.director.clone() else {
+            return Ok(());
+        };
+        if self.live {
+            // Advance the eviction commit horizon: dynamic evictions land
+            // at least two epochs past the furthest live rank.
+            dir.entering(epoch);
+        }
+        let view = dir.view_at(epoch);
+        if view.version() == self.view.version() {
+            return Ok(());
+        }
+        let was_live = self.live;
+        let now_live = view.is_live(self.rank);
+        if was_live {
+            // Quiescence barrier: every old-ring exchange settles (and is
+            // applied or discarded) before the neighbor schedule changes.
+            self.drain(epoch)?;
+        }
+        if now_live && !was_live {
+            self.handoff(epoch, ck)?;
+        }
+        self.collective.set_membership(&view)?;
+        if was_live && !now_live {
+            crate::log_info!(
+                "rank {}: left the ring at epoch {epoch} (view v{}, {} live)",
+                self.rank,
+                view.version(),
+                view.len()
+            );
+        } else if self.rank == 0 {
+            crate::log_info!(
+                "membership: re-ringed at epoch {epoch} (view v{}, {} live)",
+                view.version(),
+                view.len()
+            );
+        }
+        self.view = view;
+        self.live = now_live;
+        Ok(())
+    }
+
+    /// Checkpoint hand-off for a (re)joining rank: restore generator,
+    /// discriminator and optimizer moments from the newest checkpoint
+    /// boundary strictly before `epoch` — a pure function of the join
+    /// epoch and the cadence, so replaying the schedule hands off
+    /// identical state. The rank's own slot is preferred (in-run rejoin:
+    /// its frozen state, RNG included); a true newcomer takes rank 0's
+    /// donor snapshot and keeps its own seed-derived RNG stream.
+    fn handoff(&mut self, epoch: u64, ck: Option<&Arc<RunCheckpointer>>) -> Result<()> {
+        let Some(ck) = ck else {
+            return Err(Error::config(format!(
+                "rank {}: membership join at epoch {epoch} needs run \
+                 checkpointing (--ckpt-every > 0) for the state hand-off",
+                self.rank
+            )));
+        };
+        let every = ck.every() as u64;
+        if epoch < every {
+            return Err(Error::config(format!(
+                "rank {}: join at epoch {epoch} precedes the first \
+                 checkpoint boundary (cadence {every})",
+                self.rank
+            )));
+        }
+        let boundary = (epoch / every) * every - 1;
+        let path = ck.wait_for(boundary, HANDOFF_TIMEOUT)?;
+        let tc = TrainCheckpoint::load_for_scenario(&path, &self.scenario)?;
+        let donor = tc
+            .ranks
+            .iter()
+            .find(|r| r.rank == self.rank)
+            .or_else(|| tc.ranks.first())
+            .ok_or_else(|| {
+                Error::Checkpoint("hand-off checkpoint holds no rank states".into())
+            })?;
+        self.state.gen = donor.gen.clone();
+        self.state.disc = donor.disc.clone();
+        self.gen_opt.restore(&donor.gen_m, &donor.gen_v, donor.gen_t);
+        self.disc_opt.restore(&donor.disc_m, &donor.disc_v, donor.disc_t);
+        let own = donor.rank == self.rank;
+        if own {
+            self.rng = Rng::from_snapshot(&donor.rng);
+        }
+        crate::log_info!(
+            "rank {}: joined at epoch {epoch} via checkpoint hand-off \
+             (boundary epoch {boundary}, {} state)",
+            self.rank,
+            if own { "own" } else { "donor" }
+        );
+        Ok(())
     }
 
     /// Quiescence: settle every in-flight exchange through

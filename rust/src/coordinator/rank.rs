@@ -44,6 +44,7 @@ use crate::runtime::RuntimeHandle;
 use crate::util::error::Result;
 use crate::util::rng::Rng;
 
+use super::membership::MembershipDirector;
 use super::pipeline::{RankHealth, RankPipeline};
 use super::resume::{RankResume, RunCheckpointer};
 
@@ -62,7 +63,9 @@ pub struct RankOutcome {
 /// sub-sample; `collective` its gradient exchanger; `rng` its private
 /// stream. `checkpointer` (when run checkpointing is on) receives this
 /// rank's state at the cadence; `resume` (when restoring) replaces the
-/// fresh initialization with a checkpointed state.
+/// fresh initialization with a checkpointed state; `membership` (when
+/// elastic membership is armed) is the shared director the pipeline
+/// consults at every epoch boundary.
 #[allow(clippy::too_many_arguments)]
 pub fn run_rank(
     rank: usize,
@@ -74,9 +77,11 @@ pub fn run_rank(
     take_checkpoints: bool,
     checkpointer: Option<Arc<RunCheckpointer>>,
     resume: Option<RankResume>,
+    membership: Option<Arc<MembershipDirector>>,
 ) -> Result<RankOutcome> {
     crate::util::logging::rank_scope(rank);
-    let mut pipeline = RankPipeline::new(rank, cfg, handle, collective, shard, rng, resume)?;
+    let mut pipeline =
+        RankPipeline::new(rank, cfg, handle, collective, shard, rng, resume, membership)?;
     pipeline.run(cfg, take_checkpoints, checkpointer.as_ref())?;
     Ok(pipeline.into_outcome())
 }

@@ -26,19 +26,27 @@
 //!   The launcher then hands each
 //!   rank its own state before the first epoch (the thread-world
 //!   equivalent of rank 0 broadcasting the restored state), so a resumed
-//!   multi-rank run is bit-identical to an uninterrupted one.
+//!   multi-rank run is bit-identical to an uninterrupted one. With
+//!   `--allow-join` the rank-count match is relaxed: a checkpoint wider
+//!   than the run is shrunk (extra ranks evicted), a narrower one grown
+//!   (new ranks join on a donor snapshot of rank 0's state) — the
+//!   process-restart half of elastic membership (see
+//!   `docs/fault-tolerance.md`).
 //!
 //! See `docs/checkpointing.md` for the on-disk format and a runnable
 //! save → kill → resume walkthrough.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::config::RunConfig;
 use crate::model::checkpoint::{RankTrainState, TrainCheckpoint};
 use crate::runtime::Manifest;
 use crate::util::error::{Error, Result};
+
+use super::membership::{MembershipChange, MembershipRecord};
 
 /// Per-rank restore bundle handed to `run_rank` by the launcher.
 #[derive(Clone, Debug)]
@@ -68,6 +76,12 @@ pub struct RunCheckpointer {
     seed: u64,
     scenario: String,
     pending: Mutex<BTreeMap<u64, PendingEpoch>>,
+    /// Checkpoints fully written by this process, epoch -> directory.
+    /// Joining ranks block on `written_cv` until their hand-off boundary
+    /// appears here (or on disk, when the boundary was written by a
+    /// previous process of a resumed run).
+    written: Mutex<BTreeMap<u64, PathBuf>>,
+    written_cv: Condvar,
 }
 
 impl RunCheckpointer {
@@ -104,7 +118,14 @@ impl RunCheckpointer {
             seed,
             scenario,
             pending: Mutex::new(BTreeMap::new()),
+            written: Mutex::new(BTreeMap::new()),
+            written_cv: Condvar::new(),
         }
+    }
+
+    /// The checkpoint cadence in epochs.
+    pub fn every(&self) -> usize {
+        self.every
     }
 
     /// Remove `.tmp_run_e*` staging directories left behind by a writer
@@ -196,25 +217,124 @@ impl RunCheckpointer {
             self.ranks,
             self.keep
         );
+        {
+            let mut written = self
+                .written
+                .lock()
+                .map_err(|_| Error::Checkpoint("checkpointer mutex poisoned".into()))?;
+            written.insert(epoch, path.clone());
+        }
+        self.written_cv.notify_all();
         Ok(Some(path))
+    }
+
+    /// Block until the checkpoint for `epoch` exists — written by this
+    /// process (whichever rank completed the epoch's deposit set) or
+    /// already on disk from a previous process (elastic tail resumes) —
+    /// and return its directory. Joining ranks race ahead of the live
+    /// cohort through their dormant epochs, so the hand-off boundary they
+    /// need may be several epochs of real training away; `timeout` bounds
+    /// that wait.
+    pub fn wait_for(&self, epoch: u64, timeout: Duration) -> Result<PathBuf> {
+        let on_disk = self.dir.join(TrainCheckpoint::dir_name(epoch));
+        let deadline = Instant::now() + timeout;
+        let mut written = self
+            .written
+            .lock()
+            .map_err(|_| Error::Checkpoint("checkpointer mutex poisoned".into()))?;
+        loop {
+            if let Some(p) = written.get(&epoch) {
+                return Ok(p.clone());
+            }
+            if on_disk.is_dir() {
+                return Ok(on_disk);
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Err(Error::Checkpoint(format!(
+                    "timed out waiting for the run checkpoint at epoch {epoch} \
+                     (membership hand-off boundary) — is the live cohort making \
+                     progress?"
+                )));
+            }
+            // Short waits so the on-disk probe (prior-process checkpoints
+            // carry no in-process notification) stays responsive.
+            let (guard, _) = self
+                .written_cv
+                .wait_timeout(written, left.min(Duration::from_millis(50)))
+                .map_err(|_| Error::Checkpoint("checkpointer mutex poisoned".into()))?;
+            written = guard;
+        }
     }
 }
 
 /// Load and validate the checkpoint `cfg.resume` points at. Returns the
-/// checkpoint ready for per-rank distribution.
-pub fn prepare_resume(cfg: &RunConfig, manifest: &Manifest) -> Result<TrainCheckpoint> {
+/// checkpoint ready for per-rank distribution, plus the membership
+/// records of any elastic shrink/grow applied under `cfg.allow_join`
+/// (empty when the widths already match).
+pub fn prepare_resume(
+    cfg: &RunConfig,
+    manifest: &Manifest,
+) -> Result<(TrainCheckpoint, Vec<MembershipRecord>)> {
     let path = cfg
         .resume
         .as_ref()
         .ok_or_else(|| Error::config("prepare_resume called without cfg.resume"))?;
-    let ck = TrainCheckpoint::load_for_scenario(Path::new(path), &manifest.scenario)?;
+    let mut ck = TrainCheckpoint::load_for_scenario(Path::new(path), &manifest.scenario)?;
+    let mut records: Vec<MembershipRecord> = Vec::new();
     if ck.ranks.len() != cfg.ranks {
-        return Err(Error::config(format!(
-            "checkpoint holds {} ranks but the run is configured for {} — \
-             resume with the same --ranks the checkpoint was written with",
-            ck.ranks.len(),
-            cfg.ranks
-        )));
+        if !cfg.allow_join {
+            return Err(Error::config(format!(
+                "checkpoint holds {} ranks but the run is configured for {} — \
+                 resume with the same --ranks the checkpoint was written with, \
+                 or pass --allow-join to shrink/grow the cohort elastically",
+                ck.ranks.len(),
+                cfg.ranks
+            )));
+        }
+        // First epoch the re-shaped membership trains at.
+        let effect = ck.epoch + 1;
+        let was = ck.ranks.len();
+        if was > cfg.ranks {
+            // Shrink: the highest ranks are evicted (rank 0 — the
+            // checkpoint sidecar anchor — always survives).
+            for dropped in ck.ranks.drain(cfg.ranks..) {
+                records.push(MembershipRecord {
+                    epoch: effect,
+                    rank: dropped.rank,
+                    kind: MembershipChange::Evict,
+                });
+            }
+            crate::log_info!(
+                "membership: resume shrank {was} -> {} ranks \
+                 (ranks {}..{} evicted at epoch {effect})",
+                cfg.ranks,
+                cfg.ranks,
+                was - 1
+            );
+        } else {
+            // Grow: new ranks join on a donor snapshot of rank 0's state.
+            // The launcher replaces each joiner's RNG with its own
+            // seed-derived stream — the donor's would collide with rank
+            // 0's draws.
+            let donor = ck.ranks[0].clone();
+            for rank in was..cfg.ranks {
+                let mut state = donor.clone();
+                state.rank = rank;
+                ck.ranks.push(state);
+                records.push(MembershipRecord {
+                    epoch: effect,
+                    rank,
+                    kind: MembershipChange::Join,
+                });
+            }
+            crate::log_info!(
+                "membership: resume grew {was} -> {} ranks (ranks {was}..{} \
+                 join via checkpoint hand-off at epoch {effect})",
+                cfg.ranks,
+                cfg.ranks - 1
+            );
+        }
     }
     // The seed defines the data pool and the per-rank shard derivation;
     // restoring old parameters/RNG streams onto different data would
@@ -271,7 +391,7 @@ pub fn prepare_resume(cfg: &RunConfig, manifest: &Manifest) -> Result<TrainCheck
             )));
         }
     }
-    Ok(ck)
+    Ok((ck, records))
 }
 
 #[cfg(test)]
@@ -364,6 +484,26 @@ mod tests {
         let _c2 = RunCheckpointer::new(&dir, 1, 2, 2, 20240, "quantile".into());
         assert!(!stale.exists(), "stale .tmp dir survived init");
         assert_eq!(TrainCheckpoint::list(&dir).unwrap().len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wait_for_returns_written_and_on_disk_checkpoints() {
+        let dir = std::env::temp_dir()
+            .join(format!("sagips_ckr_wait_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let c = RunCheckpointer::new(&dir, 5, 2, 2, 20240, "quantile".into());
+        // Not written yet: a short wait times out.
+        assert!(c.wait_for(4, Duration::from_millis(60)).is_err());
+        c.deposit(4, 0.1, state(0, 2)).unwrap();
+        c.deposit(4, 0.2, state(1, 2)).unwrap();
+        let p = c.wait_for(4, Duration::from_millis(60)).unwrap();
+        assert!(p.ends_with(TrainCheckpoint::dir_name(4)));
+        // A fresh checkpointer (a resumed process) finds it on disk
+        // without any in-process notification.
+        let c2 = RunCheckpointer::new(&dir, 5, 2, 2, 20240, "quantile".into());
+        let p2 = c2.wait_for(4, Duration::from_millis(200)).unwrap();
+        assert!(p2.ends_with(TrainCheckpoint::dir_name(4)));
         std::fs::remove_dir_all(&dir).ok();
     }
 

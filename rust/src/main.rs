@@ -59,6 +59,8 @@ fn print_help() {
          fault tolerance: --ckpt-every <n> --ckpt-dir <dir> --ckpt-keep <n> \
          --resume <path> --fault-plan <json|file> --exchange-timeout-ms <n> \
          --on-straggler block|skip|late_apply --skip-budget <n>\n\
+         elastic membership: --membership \"leave:R@E,join:R@E\" --min-ranks <n> \
+         --evict-after <n> --allow-join\n\
          (the native backend needs no artifacts and runs every scenario; \
          pjrt executes the exported HLO)\n\
          env: SAGIPS_LOG=debug, SAGIPS_SCALE=smoke|ci|paper"
@@ -140,6 +142,26 @@ fn common_specs() -> Vec<OptSpec> {
             "max exchanges the skip policy may abandon (0 = unlimited)",
             Some("0"),
         ),
+        cli::opt(
+            "membership",
+            "scripted membership schedule: comma-separated leave:R@E / join:R@E",
+            None,
+        ),
+        cli::opt(
+            "min-ranks",
+            "never let live membership drop below N ranks",
+            Some("1"),
+        ),
+        cli::opt(
+            "evict-after",
+            "evict a rank after N consecutive deadline misses (0 = never; \
+             needs --exchange-timeout-ms)",
+            Some("0"),
+        ),
+        cli::flag(
+            "allow-join",
+            "allow ranks to join mid-run (scripted joins, elastic resume)",
+        ),
     ]
 }
 
@@ -194,6 +216,14 @@ fn build_cfg(a: &Args) -> Result<RunConfig> {
         cfg.on_straggler = sagips::config::StragglerPolicy::parse(p)?;
     }
     cfg.skip_budget = a.usize("skip-budget", cfg.skip_budget)?;
+    if let Some(s) = a.get("membership") {
+        cfg.membership = Some(s.to_string());
+    }
+    cfg.min_ranks = a.usize("min-ranks", cfg.min_ranks)?;
+    cfg.evict_after = a.usize("evict-after", cfg.evict_after)?;
+    if a.flag("allow-join") {
+        cfg.allow_join = true;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -280,6 +310,16 @@ fn cmd_train(a: &Args) -> Result<()> {
             p.elapsed_s,
             residuals::mean_abs(&p.residuals)
         );
+    }
+    if !run.membership.is_empty() {
+        println!(
+            "\nmembership: {} event(s), {} rank(s) live at the end",
+            run.membership.len(),
+            run.final_members()
+        );
+        for r in &run.membership {
+            println!("  epoch {:>6}  {:<5} rank {}", r.epoch, r.kind.as_str(), r.rank);
+        }
     }
     experiments::run_summary(&cfg, &run);
     if cfg.exchange_timeout_ms > 0 {

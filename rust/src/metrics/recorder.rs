@@ -97,6 +97,24 @@ impl MergedMetrics {
         }
     }
 
+    /// The value of the latest-epoch sample of `name` across all ranks.
+    /// Used for cohort-level state series like `members`: ranks that go
+    /// dormant stop recording, so the sample with the greatest epoch —
+    /// not any one rank's last — is the authoritative final value.
+    pub fn latest(&self, name: &str) -> Option<f64> {
+        let mut best: Option<(u64, f64)> = None;
+        for r in &self.per_rank {
+            if let Some(s) = r.get(name) {
+                if let (Some(&e), Some(&v)) = (s.epochs.last(), s.values.last()) {
+                    if best.map_or(true, |(be, _)| e >= be) {
+                        best = Some((e, v));
+                    }
+                }
+            }
+        }
+        best.map(|(_, v)| v)
+    }
+
     /// Sum across ranks of the per-rank series sums (e.g. total events).
     pub fn total(&self, name: &str) -> f64 {
         self.per_rank
@@ -210,6 +228,20 @@ mod tests {
         let m = MergedMetrics::new(vec![r0, r1]);
         assert!((m.mean_of_last("loss").unwrap() - 0.3).abs() < 1e-12);
         assert_eq!(m.total("events"), 200.0);
+    }
+
+    #[test]
+    fn latest_picks_the_greatest_epoch_sample() {
+        // Rank 1 left the run at epoch 7 (its last `members` sample still
+        // says 4); rank 0 trained on and recorded the post-leave count.
+        let mut r0 = Recorder::new(0);
+        r0.push("members", 7, 4.0);
+        r0.push("members", 8, 3.0);
+        let mut r1 = Recorder::new(1);
+        r1.push("members", 7, 4.0);
+        let m = MergedMetrics::new(vec![r0, r1]);
+        assert_eq!(m.latest("members"), Some(3.0));
+        assert_eq!(m.latest("missing"), None);
     }
 
     #[test]

@@ -369,8 +369,11 @@ pub fn weak_scaling_curves(
 // ---------------------------------------------------------------------------
 
 /// The run-summary columns: wall time, eq (9) analysis rate, the
-/// hot/hidden comm split, the mean applied-gradient staleness, and the
-/// straggler-policy outcomes (exchanges skipped / applied past deadline).
+/// hot/hidden comm split, the mean applied-gradient staleness, the
+/// straggler-policy outcomes (exchanges skipped / applied past deadline),
+/// and the membership bookkeeping (live ranks at the end of the run plus
+/// join/leave/evict event counts — `members` equals the launched width
+/// and the counts are 0 for a fixed cohort).
 pub const RUN_SUMMARY_COLS: &[&str] = &[
     "wall_s",
     "events_per_s",
@@ -379,6 +382,10 @@ pub const RUN_SUMMARY_COLS: &[&str] = &[
     "mean_staleness",
     "skips",
     "late_applies",
+    "members",
+    "joins",
+    "leaves",
+    "evicts",
 ];
 
 /// One run-summary row (the x column is the configured staleness k, so
@@ -388,6 +395,7 @@ pub const RUN_SUMMARY_COLS: &[&str] = &[
 /// cadence pull it below k). `skips`/`late_applies` sum the straggler-
 /// policy outcomes across ranks (always 0 under `on_straggler: block`).
 pub fn run_summary_row(cfg: &RunConfig, run: &RunResult) -> (f64, Vec<f64>) {
+    use crate::coordinator::MembershipChange;
     let skips: u64 = run.comm.iter().map(|c| c.skips).sum();
     let late: u64 = run.comm.iter().map(|c| c.late_applies).sum();
     (
@@ -400,6 +408,10 @@ pub fn run_summary_row(cfg: &RunConfig, run: &RunResult) -> (f64, Vec<f64>) {
             run.metrics.mean_staleness().unwrap_or(0.0),
             skips as f64,
             late as f64,
+            run.final_members() as f64,
+            run.membership_count(MembershipChange::Join) as f64,
+            run.membership_count(MembershipChange::Leave) as f64,
+            run.membership_count(MembershipChange::Evict) as f64,
         ],
     )
 }
@@ -422,15 +434,19 @@ pub fn run_summary(cfg: &RunConfig, run: &RunResult) {
 
 /// The per-rank health-summary columns (printed when an exchange
 /// deadline was armed): settled exchanges, deadline misses (total and
-/// worst consecutive run), mean submit-to-apply latency, and the worst
+/// worst consecutive run), mean submit-to-apply latency, the worst
 /// [`HealthState`](crate::coordinator::pipeline::HealthState) reached
-/// (0 = healthy, 1 = degraded, 2 = suspect).
+/// (0 = healthy, 1 = degraded, 2 = suspect), and the rank's
+/// participation epochs — the epochs it actually trained, which under
+/// elastic membership is less than the run length for ranks that left,
+/// were evicted, or joined late.
 pub const HEALTH_SUMMARY_COLS: &[&str] = &[
     "settled",
     "timeouts",
     "max_consec",
     "mean_latency_s",
     "worst_state",
+    "participation",
 ];
 
 /// Print the per-rank exchange-health table for a run with straggler
@@ -441,6 +457,10 @@ pub fn health_summary(run: &RunResult) {
         .iter()
         .enumerate()
         .map(|(rank, h)| {
+            let participation = run
+                .comm
+                .get(rank)
+                .map_or(0, |c| c.participation_epochs);
             (
                 rank as f64,
                 vec![
@@ -449,6 +469,7 @@ pub fn health_summary(run: &RunResult) {
                     h.max_consecutive_timeouts as f64,
                     h.mean_latency_s(),
                     h.worst_state().as_f64(),
+                    participation as f64,
                 ],
             )
         })
@@ -510,12 +531,14 @@ mod tests {
 
     #[test]
     fn run_summary_row_surfaces_mean_staleness() {
+        use crate::coordinator::{MembershipChange, MembershipRecord};
         use crate::metrics::{MergedMetrics, Recorder};
         let mut r = Recorder::new(0);
         r.push("staleness", 0, 2.0);
         r.push("staleness", 1, 2.0);
         r.push("comm_s", 0, 0.5);
         r.push("comm_hidden_s", 0, 1.5);
+        r.push("members", 1, 3.0);
         let mut comm_a = crate::collective::CommStats::default();
         comm_a.skips = 2;
         let mut comm_b = crate::collective::CommStats::default();
@@ -531,6 +554,23 @@ mod tests {
             comm: vec![comm_a, comm_b],
             health: Vec::new(),
             resumed_from: None,
+            membership: vec![
+                MembershipRecord {
+                    epoch: 1,
+                    rank: 3,
+                    kind: MembershipChange::Leave,
+                },
+                MembershipRecord {
+                    epoch: 4,
+                    rank: 2,
+                    kind: MembershipChange::Evict,
+                },
+                MembershipRecord {
+                    epoch: 8,
+                    rank: 3,
+                    kind: MembershipChange::Join,
+                },
+            ],
         };
         let mut cfg = presets::ci_default();
         cfg.staleness = 2;
@@ -542,6 +582,10 @@ mod tests {
         assert_eq!(cols[4], 2.0); // mean applied staleness
         assert_eq!(cols[5], 3.0); // skips summed across ranks
         assert_eq!(cols[6], 3.0); // late applies summed across ranks
+        assert_eq!(cols[7], 3.0); // members: latest-epoch sample
+        assert_eq!(cols[8], 1.0); // joins
+        assert_eq!(cols[9], 1.0); // leaves
+        assert_eq!(cols[10], 1.0); // evicts
     }
 
     #[test]

@@ -10,8 +10,9 @@
 //! (steady-state throughput converges long before the window ends).
 
 use crate::collective::grouped::is_outer_epoch;
-use crate::comm::Topology;
+use crate::comm::{MembershipView, Topology};
 use crate::config::{ChunkPolicy, Mode, StragglerPolicy};
+use crate::coordinator::MembershipSchedule;
 use crate::fault::FaultPlan;
 use crate::util::rng::Rng;
 
@@ -56,6 +57,14 @@ pub struct SimConfig {
     pub on_straggler: StragglerPolicy,
     /// Exchange deadline in simulated seconds (0 = none).
     pub deadline_s: f64,
+    /// Scripted membership churn (mirrors `RunConfig::membership`): a
+    /// pure function of the epoch. Dormant ranks' clocks freeze; at every
+    /// view transition the live cohort drains its in-flight window
+    /// (mirroring `Collective::drain()`) and a joiner re-enters at the
+    /// drained frontier (the checkpoint hand-off wait). Honored by the
+    /// ring/grouped schedules; the barrier baselines ignore it, matching
+    /// `RunConfig::validate` refusing elastic Horovod.
+    pub churn: Option<MembershipSchedule>,
     pub compute: ComputeModel,
     pub net: NetModel,
     pub seed: u64,
@@ -78,6 +87,7 @@ impl SimConfig {
             fault: None,
             on_straggler: StragglerPolicy::Block,
             deadline_s: 0.0,
+            churn: None,
             compute: ComputeModel::with_jitter(0.035, 0.15),
             net: NetModel::paper_like(),
             seed: 2024,
@@ -100,6 +110,8 @@ pub struct SimResult {
     /// Exchanges abandoned under the skip policy, summed over ranks in
     /// the simulated window (not extrapolated).
     pub skips: u64,
+    /// Membership view transitions (re-rings) in the simulated window.
+    pub transitions: u64,
 }
 
 /// Evaluate the schedule.
@@ -126,13 +138,46 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
     let outer = topo.outer_group();
 
     let mut skips: u64 = 0;
+    let mut transitions: u64 = 0;
+    let mut view = match &cfg.churn {
+        Some(s) => s.view_at(0, n),
+        None => MembershipView::full(n),
+    };
     for epoch in 0..sim_epochs {
+        // Membership transition: the live cohort drains its in-flight
+        // window (the real pipeline's `drain()` quiescence barrier), the
+        // ring is rebuilt over the new view, and a joiner re-enters at
+        // the drained frontier — its hand-off checkpoint wait.
+        if let Some(churn) = &cfg.churn {
+            let next = churn.view_at(epoch, n);
+            if next.version() != view.version() {
+                transitions += 1;
+                let mut settled = 0.0f64;
+                for &r in view.live() {
+                    let rest: f64 = pending[r].iter().sum();
+                    t[r] += rest;
+                    comm_time += rest;
+                    pending[r].clear();
+                    settled = settled.max(t[r]);
+                }
+                for &r in next.live() {
+                    if !view.is_live(r) {
+                        t[r] = settled.max(t[r]);
+                    }
+                }
+                view = next;
+            }
+        }
         // Compute + staging phase. Remember each rank's compute draw: in
         // overlap mode later epochs' draws are what hide the in-flight
         // exchanges, and in steady state the draws are iid, so charging
-        // the hiding against this epoch's draw is unbiased.
+        // the hiding against this epoch's draw is unbiased. Dormant
+        // ranks' clocks freeze: they draw no compute and join no ring.
         let mut compute_s = vec![0.0f64; n];
         for r in 0..n {
+            if !view.is_live(r) {
+                continue;
+            }
             compute_s[r] = cfg.compute.sample(&mut rngs[r]);
             t[r] += compute_s[r] + staging;
         }
@@ -148,19 +193,26 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
         match cfg.mode {
             Mode::Ensemble => {}
             Mode::ConvArar => {
-                ring_schedule(&mut t, &topo, &(0..n).collect::<Vec<_>>(), cfg, &delays);
+                ring_schedule(&mut t, &topo, view.live(), cfg, &delays);
             }
             Mode::ArarArar | Mode::RmaArarArar => {
                 let rma = cfg.mode == Mode::RmaArarArar;
                 for g in &inner_groups {
+                    let members: Vec<usize> =
+                        g.iter().copied().filter(|&r| view.is_live(r)).collect();
                     if rma {
-                        rma_ring_schedule(&mut t, &topo, g, cfg);
+                        rma_ring_schedule(&mut t, &topo, &members, cfg);
                     } else {
-                        ring_schedule(&mut t, &topo, g, cfg, &delays);
+                        ring_schedule(&mut t, &topo, &members, cfg, &delays);
                     }
                 }
                 if is_outer_epoch(epoch, cfg.outer_freq) {
-                    ring_schedule(&mut t, &topo, &outer, cfg, &delays);
+                    let og = if view.len() < n {
+                        topo.outer_group_live(&view)
+                    } else {
+                        outer.clone()
+                    };
+                    ring_schedule(&mut t, &topo, &og, cfg, &delays);
                 }
             }
             Mode::Horovod => {
@@ -230,6 +282,9 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
         // discarded on eventual arrival, so no further dependency).
         if matches!(cfg.on_straggler, StragglerPolicy::Skip) && cfg.deadline_s > 0.0 {
             for r in 0..n {
+                if !view.is_live(r) {
+                    continue;
+                }
                 let cap = t_pre_comm[r] + cfg.deadline_s;
                 if t[r] > cap {
                     t[r] = cap;
@@ -246,6 +301,9 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
         // charges only the rank's own put/get time.
         if cfg.staleness > 0 && cfg.mode != Mode::Horovod {
             for r in 0..n {
+                if !view.is_live(r) {
+                    continue;
+                }
                 let delta = t[r] - t_pre_comm[r];
                 t[r] = t_pre_comm[r];
                 let q = &mut pending[r];
@@ -297,6 +355,7 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
         analysis_rate: events / total_s,
         comm_fraction: (comm_time / (n as f64)) / simulated_s,
         skips,
+        transitions,
     }
 }
 
@@ -621,6 +680,45 @@ mod tests {
         );
         // Healthy ranks elsewhere in the machine are untouched either way.
         assert!(skip.total_s > 16.0 * 0.01);
+    }
+
+    #[test]
+    fn churn_recovers_throughput_at_1024_simulated_ranks() {
+        // Grouped ARAR at 1024 simulated ranks, rank 5 hard-stalled for
+        // the whole window under the blocking policy: its inner ring
+        // inherits ~0.5 s per epoch. Scripted churn evicts the straggler
+        // at epoch 4 — the cohort re-rings once and runs healthy from
+        // there. This is the CI membership-smoke sim leg.
+        let mk = |spec: Option<&str>| SimConfig {
+            sim_epochs: 16,
+            epochs: 16,
+            compute: ComputeModel::fixed(0.01),
+            fault: Some(FaultPlan::new(11).with_stall(5, 0, 16, 500)),
+            churn: spec.map(|s| MembershipSchedule::parse(s).expect("churn spec")),
+            ..SimConfig::paper(Mode::ArarArar, 1024)
+        };
+        let stalled = simulate(&mk(None));
+        let evicted = simulate(&mk(Some("leave:5@4")));
+        assert_eq!(stalled.transitions, 0);
+        assert_eq!(evicted.transitions, 1);
+        // 4 stalled epochs instead of 16: well under half the time.
+        assert!(
+            evicted.total_s < stalled.total_s * 0.5,
+            "evicted={} stalled={}",
+            evicted.total_s,
+            stalled.total_s
+        );
+        // A scripted rejoin re-rings a second time; the rank stalls again
+        // for epochs 12..16, landing between the evicted and stalled runs.
+        let rejoined = simulate(&mk(Some("leave:5@4,join:5@12")));
+        assert_eq!(rejoined.transitions, 2);
+        assert!(
+            rejoined.total_s < stalled.total_s && rejoined.total_s > evicted.total_s,
+            "rejoined={} evicted={} stalled={}",
+            rejoined.total_s,
+            evicted.total_s,
+            stalled.total_s
+        );
     }
 
     #[test]

@@ -1,0 +1,267 @@
+//! Integration: elastic membership under the straggler-policy × staleness
+//! test matrix.
+//!
+//! Every cell runs the same scripted churn — rank 1 leaves at epoch 3 and
+//! rejoins at epoch 8 via checkpoint hand-off — on the native backend
+//! (no artifacts, never skips), and checks the two core contracts:
+//!
+//! * **Replay determinism.** The scripted schedule is a pure function of
+//!   the epoch and the hand-off donor is the fixed checkpoint boundary
+//!   below the join epoch, so a full 12-epoch run and a 6-epoch head +
+//!   resumed tail must agree bit for bit on every rank's parameters and
+//!   on the final residuals — across a leave, a dormant stretch *and* a
+//!   rejoin.
+//! * **No lost or doubled exchanges.** `drain()` quiesces the window
+//!   before every transition, so per rank `applies + skips` covers each
+//!   participation epoch exactly once (dormant epochs never exchange).
+//!
+//! The matrix spans `on_straggler` × `staleness`. The straggler-policy
+//! validation rule — non-block policies need `exchange_timeout_ms > 0`
+//! **and** `staleness >= 1`, because "the blocking path has no in-flight
+//! exchange to time out" — makes `skip × 0` and `late_apply × 0`
+//! unconfigurable, leaving exactly seven legal cells:
+//! block × {0, 1, 2}, skip × {1, 2}, late_apply × {1, 2}.
+//!
+//! Fault injection per policy keeps every cell deterministic: block cells
+//! stall rank 0 (waited through, timing-independent), skip cells pin the
+//! skip set with a budget of exactly the stalled epochs (the fault-smoke
+//! determinism argument), late-apply cells run fault-free (a late apply's
+//! landing epoch is timing-dependent, so a faulted late-apply run is
+//! documented as best-effort, not bit-replayable).
+
+use std::path::PathBuf;
+
+use sagips::config::{presets, BackendKind, Mode, RunConfig, StragglerPolicy};
+use sagips::coordinator::launcher::{run_training_from_config, RunResult};
+use sagips::coordinator::MembershipChange;
+use sagips::fault::FaultPlan;
+
+const EPOCHS: usize = 12;
+const RANKS: usize = 4;
+const CUT: usize = 6; // head length == run-checkpoint cadence
+const STALL_FROM: u64 = 2;
+const STALL_EPOCHS: u64 = 2;
+const STALL_MS: u64 = 1000;
+const DEADLINE_MS: u64 = 50;
+
+/// Rank 1 leaves at epoch 3 and rejoins at epoch 8. With `ckpt_every: 6`
+/// the hand-off boundary for the join is epoch 5 — present both in a
+/// full run (written at the cadence) and in a resumed tail (on disk from
+/// the head run).
+const SCHEDULE: &str = "leave:1@3,join:1@8";
+
+fn stall_plan() -> String {
+    format!(
+        r#"{{"seed": 7, "stalls": [{{"rank": 0, "from_epoch": {STALL_FROM}, "epochs": {STALL_EPOCHS}, "stall_ms": {STALL_MS}}}]}}"#
+    )
+}
+
+/// One matrix cell's config: the churn schedule armed on a small, fast
+/// native run (model "small", batch 8 x 25 events, one 4-rank ring).
+fn churn_cfg(policy: StragglerPolicy, staleness: usize) -> RunConfig {
+    let mut cfg = presets::ci_default();
+    cfg.backend = BackendKind::Native;
+    cfg.artifacts_dir = "/nonexistent/so-the-synthetic-manifest-is-used".into();
+    cfg.scenario = "quantile".into();
+    cfg.model = "small".into();
+    cfg.mode = Mode::ArarArar;
+    cfg.ranks = RANKS;
+    cfg.epochs = EPOCHS;
+    cfg.batch = 8;
+    cfg.events = 25;
+    cfg.data_pool = 1600;
+    cfg.checkpoint_every = 6;
+    cfg.outer_freq = 5;
+    cfg.staleness = staleness;
+    cfg.membership = Some(SCHEDULE.into());
+    cfg.allow_join = true;
+    cfg.ckpt_every = CUT;
+    match policy {
+        StragglerPolicy::Block => {
+            cfg.fault_plan = Some(stall_plan());
+            // The deadline is optional under block; arm it only where a
+            // windowed exchange exists for it to time out.
+            if staleness >= 1 {
+                cfg.exchange_timeout_ms = DEADLINE_MS;
+            }
+        }
+        StragglerPolicy::Skip => {
+            // Budget = stalled epochs pins the skip set exactly (the
+            // stalled exchanges can never beat the deadline, and once
+            // the budget is spent the policy degrades to blocking).
+            cfg.fault_plan = Some(stall_plan());
+            cfg.exchange_timeout_ms = DEADLINE_MS;
+            cfg.skip_budget = STALL_EPOCHS as usize;
+        }
+        StragglerPolicy::LateApply => {
+            cfg.exchange_timeout_ms = DEADLINE_MS;
+        }
+    }
+    cfg.on_straggler = policy;
+    cfg
+}
+
+fn ckpt_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "sagips_membership_{tag}_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Per-rank epochs actually trained under [`SCHEDULE`]: rank 1 sits out
+/// epochs 3..8 (5 dormant epochs), everyone else trains all 12.
+fn expected_participation(rank: usize) -> u64 {
+    if rank == 1 {
+        EPOCHS as u64 - 5
+    } else {
+        EPOCHS as u64
+    }
+}
+
+fn assert_membership_accounting(run: &RunResult) {
+    // One leave, one join, no health evictions.
+    assert_eq!(run.membership_count(MembershipChange::Leave), 1);
+    assert_eq!(run.membership_count(MembershipChange::Join), 1);
+    assert_eq!(run.membership_count(MembershipChange::Evict), 0);
+    // The rejoin restores the cohort: the latest `members` sample is 4.
+    assert_eq!(run.final_members(), RANKS);
+    // Drained transitions never lose or double-apply an exchange: every
+    // participation epoch is exactly one apply or one (counted) skip.
+    for (rank, c) in run.comm.iter().enumerate() {
+        assert_eq!(
+            c.participation_epochs,
+            expected_participation(rank),
+            "rank {rank} participation epochs"
+        );
+        assert_eq!(
+            c.applies + c.skips,
+            c.participation_epochs,
+            "rank {rank}: applies ({}) + skips ({}) must cover every \
+             participation epoch exactly once",
+            c.applies,
+            c.skips
+        );
+    }
+}
+
+/// The cell body: run the full 12 epochs, then a 6-epoch head and a
+/// resumed tail, and demand bit-identical outcomes plus exact exchange
+/// accounting on both paths.
+fn run_cell(policy: StragglerPolicy, staleness: usize, tag: &str) {
+    let full_dir = ckpt_dir(&format!("{tag}_full"));
+    let head_dir = ckpt_dir(&format!("{tag}_head"));
+
+    let mut full = churn_cfg(policy, staleness);
+    full.ckpt_dir = full_dir.display().to_string();
+    let full_run = run_training_from_config(&full).unwrap();
+    assert_membership_accounting(&full_run);
+
+    let mut head = churn_cfg(policy, staleness);
+    head.epochs = CUT;
+    head.ckpt_dir = head_dir.display().to_string();
+    run_training_from_config(&head).unwrap();
+
+    let mut tail = churn_cfg(policy, staleness);
+    tail.ckpt_dir = head_dir.display().to_string();
+    tail.resume = Some(head_dir.display().to_string());
+    let resumed = run_training_from_config(&tail).unwrap();
+    assert_eq!(resumed.resumed_from, Some(CUT as u64 - 1));
+    // The tail crosses the dormant stretch and the epoch-8 rejoin; its
+    // hand-off reads the epoch-5 boundary checkpoint the head wrote.
+    assert_eq!(resumed.final_members(), RANKS);
+    assert_eq!(resumed.membership_count(MembershipChange::Join), 1);
+
+    for (rank, (a, b)) in full_run.states.iter().zip(&resumed.states).enumerate() {
+        assert_eq!(a.gen, b.gen, "rank {rank} generator (policy {policy:?}, k={staleness})");
+        assert_eq!(a.disc, b.disc, "rank {rank} discriminator (policy {policy:?}, k={staleness})");
+    }
+    assert_eq!(
+        full_run.final_residuals.unwrap(),
+        resumed.final_residuals.unwrap(),
+        "final residuals (policy {policy:?}, k={staleness})"
+    );
+
+    std::fs::remove_dir_all(&full_dir).ok();
+    std::fs::remove_dir_all(&head_dir).ok();
+}
+
+macro_rules! churn_cells {
+    ($($name:ident: $policy:expr, $staleness:expr;)+) => {
+        $(
+            #[test]
+            fn $name() {
+                run_cell($policy, $staleness, stringify!($name));
+            }
+        )+
+    };
+}
+
+churn_cells! {
+    churn_block_blocking: StragglerPolicy::Block, 0;
+    churn_block_overlap: StragglerPolicy::Block, 1;
+    churn_block_window2: StragglerPolicy::Block, 2;
+    churn_skip_overlap: StragglerPolicy::Skip, 1;
+    churn_skip_window2: StragglerPolicy::Skip, 2;
+    churn_late_apply_overlap: StragglerPolicy::LateApply, 1;
+    churn_late_apply_window2: StragglerPolicy::LateApply, 2;
+}
+
+#[test]
+fn illegal_cells_are_refused_by_validation() {
+    // The two matrix holes: a straggler policy with nothing in flight.
+    for policy in [StragglerPolicy::Skip, StragglerPolicy::LateApply] {
+        let cfg = churn_cfg(policy, 0);
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(
+            err.contains("staleness"),
+            "policy {policy:?} x staleness 0 must be refused, got: {err}"
+        );
+    }
+}
+
+#[test]
+fn fault_plan_is_a_pure_function_of_rank_and_epoch() {
+    // The elastic protocol leans on replayable fault injection: the same
+    // seeded plan must give byte-identical delays for every (rank, epoch)
+    // on repeated queries — the plan carries no hidden mutable state.
+    let mk = || {
+        FaultPlan::new(41)
+            .with_delay(1, 12.0, 0.6)
+            .with_transient(2, 0.25, 40.0)
+            .with_stall(0, 3, 4, 250)
+    };
+    let a = mk();
+    let b = mk();
+    for rank in 0..RANKS {
+        for epoch in 0..64u64 {
+            let d = a.delay_s(rank, epoch);
+            // Identical across plan instances...
+            assert_eq!(d.to_bits(), b.delay_s(rank, epoch).to_bits());
+            // ...and across repeated queries of the same instance.
+            assert_eq!(d.to_bits(), a.delay_s(rank, epoch).to_bits());
+        }
+    }
+    // And across threads: concurrent queries of one shared plan agree
+    // with the serial reference bit for bit.
+    let plan = std::sync::Arc::new(mk());
+    let reference: Vec<u64> = (0..RANKS)
+        .flat_map(|r| (0..64u64).map(move |e| (r, e)))
+        .map(|(r, e)| plan.delay_s(r, e).to_bits())
+        .collect();
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let plan = plan.clone();
+            std::thread::spawn(move || {
+                (0..RANKS)
+                    .flat_map(|r| (0..64u64).map(move |e| (r, e)))
+                    .map(|(r, e)| plan.delay_s(r, e).to_bits())
+                    .collect::<Vec<u64>>()
+            })
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), reference);
+    }
+}

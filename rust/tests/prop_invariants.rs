@@ -4,8 +4,10 @@
 //! invariants, native-backend gradients vs finite differences, simulator
 //! sanity, JSON roundtrips.
 
-use sagips::collective::ring::ring_pass;
-use sagips::comm::{GradMsg, LinkModel, LocalNetwork, RmaRegion, RmaWindow, Topology};
+use sagips::collective::ring::{chunked_ring_pass, partition_bounds, ring_pass};
+use sagips::comm::{
+    GradMsg, LinkModel, LocalNetwork, MembershipView, RmaRegion, RmaWindow, Topology,
+};
 use sagips::config::Mode;
 use sagips::model::{grad, reference};
 use sagips::runtime::manifest::layout_from_sizes;
@@ -253,6 +255,154 @@ fn prop_topology_groups_partition_ranks() {
         // ring_next/prev are inverse bijections
         for r in 0..ranks {
             assert_eq!(topo.ring_prev(topo.ring_next(r)), r);
+        }
+    });
+}
+
+/// A random live subset of `0..total` with at least `min` members,
+/// sorted ascending (the order `MembershipView` hands to collectives).
+fn random_live_subset(g: &mut Gen, total: usize, min: usize) -> Vec<usize> {
+    let mut live: Vec<usize> = (0..total).filter(|_| g.bool()).collect();
+    while live.len() < min {
+        let r = g.usize_in(0..=total - 1);
+        if !live.contains(&r) {
+            live.push(r);
+        }
+    }
+    live.sort_unstable();
+    live
+}
+
+/// Walk the successor relation [`Topology::ring_in`] builds for the
+/// rebuilt neighbour schedule and demand one cycle covering exactly
+/// `members`: every member visited once, back at the start after
+/// `members.len()` hops, and prev/next mutually inverse.
+fn assert_single_cycle(members: &[usize]) {
+    let n = members.len();
+    assert!(n >= 1);
+    if n == 1 {
+        return;
+    }
+    let mut visited = Vec::with_capacity(n);
+    let mut at = members[0];
+    for _ in 0..n {
+        visited.push(at);
+        let (next, prev) = Topology::ring_in(members, at);
+        let (_, back) = Topology::ring_in(members, next);
+        assert_eq!(back, at, "prev(next({at})) != {at} in {members:?}");
+        let (fwd, _) = Topology::ring_in(members, prev);
+        assert_eq!(fwd, at, "next(prev({at})) != {at} in {members:?}");
+        at = next;
+    }
+    assert_eq!(at, members[0], "walk did not close after {n} hops");
+    visited.sort_unstable();
+    assert_eq!(visited, members, "cycle must cover exactly the live set");
+}
+
+#[test]
+fn prop_reringed_topologies_form_one_live_cycle() {
+    run("re-ringed ring/grouped/rma schedules are single live cycles", 200, |g| {
+        let total = g.usize_in(2..=48);
+        let gpn = g.usize_in(1..=8);
+        let topo = Topology::new(total, gpn);
+        let live = random_live_subset(g, total, 2);
+        let view = MembershipView::new(g.u64() % 1000 + 1, live.clone(), total);
+        assert_eq!(view.live(), &live[..]);
+
+        // Conventional ring: one cycle over every live rank.
+        assert_single_cycle(view.live());
+
+        // Grouped (blocking and RMA share the member lists): the live
+        // inner groups partition the live set, each forming its own
+        // cycle; the live outer group seats exactly one live rank per
+        // node that still has one, each holding its seat per
+        // `is_outer_member_live`.
+        let mut covered = Vec::new();
+        for node in 0..topo.nodes() {
+            let inner = topo.inner_group_live(node * gpn, &view);
+            for &r in &inner {
+                assert!(view.is_live(r));
+                covered.push(r);
+            }
+            if !inner.is_empty() {
+                assert_single_cycle(&inner);
+            }
+        }
+        covered.sort_unstable();
+        assert_eq!(covered, live, "live inner groups must partition the live set");
+
+        let outer = topo.outer_group_live(&view);
+        let nodes_alive = (0..topo.nodes())
+            .filter(|&n| !topo.inner_group_live(n * gpn, &view).is_empty())
+            .count();
+        assert_eq!(outer.len(), nodes_alive);
+        for &o in &outer {
+            assert!(topo.is_outer_member_live(o, &view));
+        }
+        if !outer.is_empty() {
+            assert_single_cycle(&outer);
+        }
+    });
+}
+
+#[test]
+fn prop_chunked_pass_over_rering_matches_serial_reference_bitwise() {
+    run("chunked reduce-scatter/all-gather over a re-ring == serial sum", 25, |g| {
+        // A re-ringed subset of the launched ranks runs the chunked
+        // reduce-scatter + all-gather. Each partition's sum accumulates
+        // serially along the ring from a fixed start, every rank then
+        // copies the single averaged partition — so all live ranks must
+        // agree with the serial reference *bit for bit* (and with each
+        // other), dormant ranks contributing nothing.
+        let total = g.usize_in(2..=10);
+        let live = random_live_subset(g, total, 2);
+        let n = live.len();
+        let len = g.usize_in(1..=97);
+        let max_elems = *g.choose(&[0usize, 7, 32]);
+        let values: Vec<Vec<f32>> = (0..total)
+            .map(|_| (0..len).map(|_| g.f32_in(-50.0..=50.0)).collect())
+            .collect();
+
+        let topo = Topology::new(total, 4);
+        let eps = LocalNetwork::build(&topo, LinkModel::zero());
+        let handles: Vec<_> = eps
+            .into_iter()
+            .filter(|ep| live.binary_search(&ep.rank).is_ok())
+            .map(|ep| {
+                let members = live.clone();
+                let mut grads = values[ep.rank].clone();
+                std::thread::spawn(move || {
+                    let mut pool = Vec::new();
+                    chunked_ring_pass(&ep, &members, 0, &mut grads, &mut pool, max_elems)
+                        .unwrap();
+                    grads
+                })
+            })
+            .collect();
+
+        // Serial reference. Partition j's reduction starts at ring
+        // index j and accumulates member by member in ring order (the
+        // receiver-adds-arrival recurrence); the average is one f32
+        // multiply by 1/n, exactly as `ops::scale` applies it.
+        let parts = partition_bounds(len, n);
+        let inv = 1.0 / n as f32;
+        let mut want = vec![0.0f32; len];
+        for (j, &(lo, hi)) in parts.iter().enumerate() {
+            for e in lo..hi {
+                let mut acc = values[live[j]][e];
+                for k in 1..n {
+                    acc += values[live[(j + k) % n]][e];
+                }
+                want[e] = acc * inv;
+            }
+        }
+        for h in handles {
+            let got = h.join().unwrap();
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<u32>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<u32>>(),
+                "live members {live:?}, len {len}, max_elems {max_elems}"
+            );
         }
     });
 }
