@@ -210,7 +210,7 @@ impl StragglerPolicy {
 }
 
 /// Full run configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
     /// Inverse-problem scenario to train (a registered
     /// [`crate::scenario`] name; paper proxy app: `"quantile"`).
@@ -439,6 +439,68 @@ impl RunConfig {
         Ok(cfg)
     }
 
+    /// Serialize to a JSON value that [`RunConfig::from_json`] parses
+    /// back into an equal config. This is the wire format of the service
+    /// layer: a submitted job carries its full `RunConfig` through the
+    /// control channel and the on-disk job journal, so the roundtrip
+    /// must be lossless (`ChunkPolicy::MaxElems` is emitted as the
+    /// number `from_json` accepts, not its display label; f32 rates
+    /// survive because Rust formats floats shortest-roundtrip).
+    pub fn to_json_value(&self) -> Value {
+        use crate::util::json::{num, obj, s};
+        let mut fields = vec![
+            ("scenario", s(&self.scenario)),
+            ("ranks", num(self.ranks as f64)),
+            ("gpus_per_node", num(self.gpus_per_node as f64)),
+            ("mode", s(self.mode.name())),
+            ("outer_freq", num(self.outer_freq as f64)),
+            ("epochs", num(self.epochs as f64)),
+            ("model", s(&self.model)),
+            ("batch", num(self.batch as f64)),
+            ("events", num(self.events as f64)),
+            ("gen_lr", num(self.gen_lr as f64)),
+            ("disc_lr", num(self.disc_lr as f64)),
+            ("subsample_fraction", num(self.subsample_fraction)),
+            ("include_bias", Value::Bool(self.include_bias)),
+            ("fusion_bucket", num(self.fusion_bucket as f64)),
+            (
+                "chunking",
+                match self.chunking {
+                    ChunkPolicy::Unchunked => s("unchunked"),
+                    ChunkPolicy::Auto => s("auto"),
+                    ChunkPolicy::MaxElems(m) => num(m as f64),
+                },
+            ),
+            ("staleness", num(self.staleness as f64)),
+            ("on_straggler", s(self.on_straggler.name())),
+            ("exchange_timeout_ms", num(self.exchange_timeout_ms as f64)),
+            ("skip_budget", num(self.skip_budget as f64)),
+            ("checkpoint_every", num(self.checkpoint_every as f64)),
+            ("ckpt_every", num(self.ckpt_every as f64)),
+            ("ckpt_dir", s(&self.ckpt_dir)),
+            ("ckpt_keep", num(self.ckpt_keep as f64)),
+            ("seed", num(self.seed as f64)),
+            ("data_pool", num(self.data_pool as f64)),
+            ("runtime_workers", num(self.runtime_workers as f64)),
+            ("artifacts_dir", s(&self.artifacts_dir)),
+            ("backend", s(self.backend.name())),
+            ("intra_threads", num(self.intra_threads as f64)),
+            ("min_ranks", num(self.min_ranks as f64)),
+            ("evict_after", num(self.evict_after as f64)),
+            ("allow_join", Value::Bool(self.allow_join)),
+        ];
+        if let Some(p) = &self.resume {
+            fields.push(("resume", s(p)));
+        }
+        if let Some(p) = &self.fault_plan {
+            fields.push(("fault_plan", s(p)));
+        }
+        if let Some(p) = &self.membership {
+            fields.push(("membership", s(p)));
+        }
+        obj(fields)
+    }
+
     /// Validate cross-field invariants.
     pub fn validate(&self) -> Result<()> {
         // Unknown scenarios fail here with the registered names listed.
@@ -641,6 +703,45 @@ mod tests {
         assert_eq!(c.ranks, 12);
         assert_eq!(c.mode, Mode::RmaArarArar);
         assert!(RunConfig::from_json(r#"{"rankz": 12}"#).is_err());
+    }
+
+    #[test]
+    fn to_json_roundtrips_losslessly() {
+        // Exercise every non-default shape the wire format must carry:
+        // enum names, the numeric ChunkPolicy form, f32 rates, options.
+        let mut c = presets::ci_default();
+        c.scenario = "deconv".into();
+        c.mode = Mode::RmaArarArar;
+        c.gen_lr = 3e-5;
+        c.disc_lr = 7e-4;
+        c.include_bias = true;
+        c.chunking = ChunkPolicy::MaxElems(4096);
+        c.staleness = 3;
+        c.on_straggler = StragglerPolicy::LateApply;
+        c.exchange_timeout_ms = 250;
+        c.skip_budget = 4;
+        c.ckpt_every = 6;
+        c.ckpt_dir = "/tmp/ck".into();
+        c.resume = Some("/tmp/ck".into());
+        c.fault_plan = Some(r#"{"seed": 7}"#.into());
+        c.seed = 987654;
+        let back = RunConfig::from_json(&c.to_json_value().to_json()).unwrap();
+        assert_eq!(back, c);
+
+        // The other enum arms roundtrip too. (Skip needs a timeout and
+        // a window to pass validate, same as on the command line.)
+        let mut c = presets::ci_default();
+        c.chunking = ChunkPolicy::Auto;
+        c.mode = Mode::Horovod;
+        c.on_straggler = StragglerPolicy::Skip;
+        c.exchange_timeout_ms = 100;
+        c.staleness = 1;
+        let back = RunConfig::from_json(&c.to_json_value().to_json()).unwrap();
+        assert_eq!(back, c);
+
+        let c = presets::ci_default();
+        let back = RunConfig::from_json(&c.to_json_value().to_json()).unwrap();
+        assert_eq!(back, c);
     }
 
     #[test]

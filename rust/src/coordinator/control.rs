@@ -1,0 +1,274 @@
+//! Cooperative run control: cancellation and live progress for a
+//! training run driven from outside the rank threads (the service
+//! layer's job scheduler, or any embedder of the launcher).
+//!
+//! # Why cancellation is a consensus problem
+//!
+//! A naive "stop when you see the flag" protocol deadlocks a multi-rank
+//! run: under a k-deep staleness window ranks drift up to k epochs
+//! apart, so different ranks would observe the flag at different epochs
+//! — and a rank that stops early starves every ring its peers still
+//! expect it in. Worse, a checkpoint assembled from ranks stopped at
+//! different epochs would be torn and unusable for `--resume`.
+//!
+//! [`RunControl`] therefore makes cancellation take effect only at
+//! **run-checkpoint cadence boundaries** — exactly the epochs where the
+//! pipeline already drains its exchange window to quiescence and
+//! deposits a full [`RankTrainState`](crate::model::checkpoint::RankTrainState)
+//! into the shared [`RunCheckpointer`](super::resume::RunCheckpointer):
+//!
+//! 1. An external thread calls [`RunControl::request_cancel`] at any
+//!    time. Nothing happens immediately.
+//! 2. Each rank consults [`RunControl::should_stop_at`] right after its
+//!    deposit at a boundary epoch `e`. The first rank to do so with the
+//!    request visible CAS-decides the **stop boundary**: the smallest
+//!    cadence boundary `>= e + window + 2`. The margin covers the
+//!    maximum inter-rank drift (a rank can run at most `window + 1`
+//!    epochs ahead of a ring peer; +1 slack), so no rank can already be
+//!    past the decided boundary — every rank still has it ahead.
+//! 3. Every rank stops after depositing at the decided boundary. All
+//!    ranks therefore stop at the *same* epoch, the boundary's deposit
+//!    set completes, and the final on-disk checkpoint is full-width and
+//!    `--resume`-able — resuming the cancelled config is bit-identical
+//!    to an uninterrupted run at the same cadence.
+//!
+//! If the decided boundary lands at or past the configured epoch count
+//! the run simply completes; the job ends `done`, not `cancelled`. A
+//! run without a checkpoint cadence (`ckpt_every == 0`) has no
+//! boundaries and ignores cancellation — the service layer guarantees a
+//! cadence for every job it admits.
+//!
+//! The control also carries a cheap progress view (epochs completed,
+//! rank 0's latest losses) published by the pipeline every epoch and
+//! read by the daemon's `status` verb. Publishing is pure observation:
+//! a controlled run is bit-identical to an uncontrolled one until the
+//! moment it stops.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// `cancel_at` value meaning "no stop boundary decided yet".
+const UNDECIDED: u64 = u64::MAX;
+
+/// Latest per-epoch progress sample published by rank 0.
+#[derive(Clone, Copy, Debug)]
+pub struct ProgressSnapshot {
+    /// Epochs completed by the furthest rank (0 before the first epoch).
+    pub epochs_done: u64,
+    /// Rank 0's latest generator loss (`NaN` until the first epoch).
+    pub gen_loss: f64,
+    /// Rank 0's latest discriminator loss (`NaN` until the first epoch).
+    pub disc_loss: f64,
+}
+
+impl Default for ProgressSnapshot {
+    /// The pre-first-epoch view: nothing done, losses not yet observed.
+    fn default() -> Self {
+        ProgressSnapshot {
+            epochs_done: 0,
+            gen_loss: f64::NAN,
+            disc_loss: f64::NAN,
+        }
+    }
+}
+
+/// Shared (Arc'd) control block linking a running training to the
+/// outside world: cooperative cancellation plus a live progress view.
+pub struct RunControl {
+    cancel_requested: AtomicBool,
+    /// The consensus stop boundary ([`UNDECIDED`] until a rank decides).
+    cancel_at: AtomicU64,
+    /// Exchange-window depth the run actually uses (armed by the
+    /// launcher; part of the drift margin in the stop-boundary rule).
+    window: AtomicU64,
+    /// Max epoch any rank has entered + 1 (epochs completed, roughly).
+    frontier: AtomicU64,
+    /// The boundary the run actually stopped at (UNDECIDED = ran to
+    /// completion or still running).
+    stopped_at: AtomicU64,
+    latest: Mutex<(f64, f64)>,
+}
+
+impl Default for RunControl {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RunControl {
+    pub fn new() -> RunControl {
+        RunControl {
+            cancel_requested: AtomicBool::new(false),
+            cancel_at: AtomicU64::new(UNDECIDED),
+            window: AtomicU64::new(0),
+            frontier: AtomicU64::new(0),
+            stopped_at: AtomicU64::new(UNDECIDED),
+            latest: Mutex::new((f64::NAN, f64::NAN)),
+        }
+    }
+
+    /// Arm the control with the run's exchange-window depth (the
+    /// launcher calls this with the effective per-rank staleness before
+    /// spawning rank threads).
+    pub fn arm(&self, window: usize) {
+        self.window.store(window as u64, Ordering::Release);
+    }
+
+    /// Ask the run to stop at the next safe boundary. Idempotent;
+    /// callable from any thread at any time.
+    pub fn request_cancel(&self) {
+        self.cancel_requested.store(true, Ordering::Release);
+    }
+
+    /// Whether a cancellation has been requested (it may still be
+    /// undecided, or may never take effect if the run finishes first).
+    pub fn cancel_requested(&self) -> bool {
+        self.cancel_requested.load(Ordering::Acquire)
+    }
+
+    /// Consulted by each rank immediately after its checkpoint deposit
+    /// at cadence boundary `epoch` (an epoch where `(epoch + 1) %
+    /// cadence == 0`). Returns `true` when this boundary is the decided
+    /// stop boundary — the rank must stop its epoch loop *after* the
+    /// deposit it just made.
+    ///
+    /// The first caller that observes the request proposes the stop
+    /// boundary via CAS; every caller then reads the winning value, so
+    /// all ranks agree on one boundary. See the module docs for why the
+    /// `window + 2` drift margin makes the decided boundary reachable by
+    /// every rank.
+    pub fn should_stop_at(&self, epoch: u64, cadence: u64) -> bool {
+        debug_assert!(cadence >= 1);
+        if !self.cancel_requested() {
+            return false;
+        }
+        let margin = self.window.load(Ordering::Acquire) + 2;
+        // Smallest b with (b + 1) % cadence == 0 and b >= epoch + margin.
+        let target = (epoch + margin + 1).div_ceil(cadence) * cadence - 1;
+        let _ = self.cancel_at.compare_exchange(
+            UNDECIDED,
+            target,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        );
+        epoch >= self.cancel_at.load(Ordering::Acquire)
+    }
+
+    /// Record that the caller's rank stopped at `epoch` (the decided
+    /// boundary). All ranks store the same value by construction.
+    pub fn mark_stopped(&self, epoch: u64) {
+        self.stopped_at.store(epoch, Ordering::Release);
+    }
+
+    /// The boundary the run stopped at, if it was cancelled.
+    pub fn stopped_at(&self) -> Option<u64> {
+        match self.stopped_at.load(Ordering::Acquire) {
+            UNDECIDED => None,
+            e => Some(e),
+        }
+    }
+
+    /// Per-epoch progress tick from any rank entering `epoch`.
+    pub fn note_epoch(&self, epoch: u64) {
+        self.frontier.fetch_max(epoch + 1, Ordering::AcqRel);
+    }
+
+    /// Rank 0 publishes its latest losses (pure observation — never
+    /// feeds back into training).
+    pub fn publish_losses(&self, gen_loss: f64, disc_loss: f64) {
+        if let Ok(mut l) = self.latest.lock() {
+            *l = (gen_loss, disc_loss);
+        }
+    }
+
+    /// Latest progress view for status reporting.
+    pub fn progress(&self) -> ProgressSnapshot {
+        let (gen_loss, disc_loss) = self
+            .latest
+            .lock()
+            .map(|l| *l)
+            .unwrap_or((f64::NAN, f64::NAN));
+        ProgressSnapshot {
+            epochs_done: self.frontier.load(Ordering::Acquire),
+            gen_loss,
+            disc_loss,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_request_means_no_stop() {
+        let c = RunControl::new();
+        for b in [4u64, 9, 14] {
+            assert!(!c.should_stop_at(b, 5));
+        }
+        assert!(c.stopped_at().is_none());
+        assert!(!c.cancel_requested());
+    }
+
+    #[test]
+    fn stop_boundary_is_decided_once_with_drift_margin() {
+        // Blocking run (window 0), cadence 5: a rank at boundary 4
+        // proposes the smallest boundary >= 4 + 2 = 6, i.e. epoch 9.
+        let c = RunControl::new();
+        c.arm(0);
+        c.request_cancel();
+        assert!(!c.should_stop_at(4, 5), "margin must defer the stop");
+        assert!(c.should_stop_at(9, 5));
+        // The decision is sticky: later, larger boundaries still stop.
+        assert!(c.should_stop_at(14, 5));
+    }
+
+    #[test]
+    fn window_widens_the_margin() {
+        // window 4, cadence 5: proposer at boundary 4 needs a boundary
+        // >= 4 + 4 + 2 = 10 — epoch 14, not 9.
+        let c = RunControl::new();
+        c.arm(4);
+        c.request_cancel();
+        assert!(!c.should_stop_at(4, 5));
+        assert!(!c.should_stop_at(9, 5));
+        assert!(c.should_stop_at(14, 5));
+    }
+
+    #[test]
+    fn all_ranks_agree_on_the_first_proposal() {
+        // A laggard at boundary 9 and a leader at boundary 19 (cadence
+        // 10, window 2): whoever proposes first fixes the boundary and
+        // the other reads it. Proposal from 9 -> smallest boundary
+        // >= 13 is 19; the leader's check at 19 stops there too.
+        let c = RunControl::new();
+        c.arm(2);
+        c.request_cancel();
+        assert!(!c.should_stop_at(9, 10)); // laggard proposes 19
+        assert!(c.should_stop_at(19, 10)); // leader agrees
+        assert!(c.should_stop_at(19, 10)); // laggard reaches 19 too
+    }
+
+    #[test]
+    fn progress_publishes_and_reads_back() {
+        let c = RunControl::new();
+        assert_eq!(c.progress().epochs_done, 0);
+        assert!(c.progress().gen_loss.is_nan());
+        c.note_epoch(0);
+        c.note_epoch(3);
+        c.note_epoch(1); // out-of-order ticks never move it backwards
+        c.publish_losses(0.5, 0.25);
+        let p = c.progress();
+        assert_eq!(p.epochs_done, 4);
+        assert_eq!(p.gen_loss, 0.5);
+        assert_eq!(p.disc_loss, 0.25);
+    }
+
+    #[test]
+    fn stopped_at_roundtrips() {
+        let c = RunControl::new();
+        assert!(c.stopped_at().is_none());
+        c.mark_stopped(19);
+        assert_eq!(c.stopped_at(), Some(19));
+    }
+}

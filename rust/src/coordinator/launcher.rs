@@ -24,6 +24,7 @@ use crate::runtime::{Runtime, RuntimeHandle};
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 
+use super::control::RunControl;
 use super::membership::{
     MembershipChange, MembershipDirector, MembershipRecord, MembershipSchedule,
 };
@@ -61,6 +62,11 @@ pub struct RunResult {
     /// health-driven evictions, and elastic resume shrink/grow — in
     /// (epoch, rank) order. Empty for a fixed-cohort run.
     pub membership: Vec<MembershipRecord>,
+    /// The checkpoint boundary the run was cancelled at via
+    /// [`RunControl`], `None` when it ran to completion. When set, the
+    /// run's final checkpoint on disk is at exactly this epoch and is
+    /// `--resume`-able.
+    pub stopped_at: Option<u64>,
 }
 
 impl RunResult {
@@ -105,6 +111,20 @@ pub fn run_training_with_links(
     cfg: &RunConfig,
     handle: &RuntimeHandle,
     link_model: LinkModel,
+) -> Result<RunResult> {
+    run_training_controlled(cfg, handle, link_model, None)
+}
+
+/// Like [`run_training_with_links`], with an optional [`RunControl`]
+/// attached: the caller can request cooperative cancellation (the run
+/// stops at a checkpoint-cadence boundary with a resumable deposit on
+/// disk) and observe live progress. This is the service layer's entry
+/// point; a `None` control makes it exactly the one-shot path.
+pub fn run_training_controlled(
+    cfg: &RunConfig,
+    handle: &RuntimeHandle,
+    link_model: LinkModel,
+    control: Option<Arc<RunControl>>,
 ) -> Result<RunResult> {
     cfg.validate()?;
     let manifest = handle.manifest();
@@ -298,6 +318,13 @@ pub fn run_training_with_links(
         c
     };
 
+    // Arm the cancellation control with the *effective* window depth the
+    // ranks run under — the stop-boundary consensus sizes its drift
+    // margin from it (see coordinator::control).
+    if let Some(ctl) = &control {
+        ctl.arm(rank_cfg.staleness);
+    }
+
     // Ranks grown at resume (`--allow-join` with a narrower checkpoint):
     // they train on the donor snapshot but must draw from their own
     // seed-derived stream, not the donor's.
@@ -324,6 +351,7 @@ pub fn run_training_with_links(
         let boot = Bootstrap::new(shard);
         let ckpt = checkpointer.clone();
         let dir = director.clone();
+        let ctl = control.clone();
         let resume = restored.as_ref().map(|ck| {
             let mut state = ck.ranks[rank].clone();
             if joined_at_resume.contains(&rank) {
@@ -350,6 +378,7 @@ pub fn run_training_with_links(
                         ckpt,
                         resume,
                         dir,
+                        ctl,
                     )
                 })
                 .map_err(Error::Io)?,
@@ -364,6 +393,18 @@ pub fn run_training_with_links(
     }
     let wall_s = timer.elapsed_s();
     outcomes.sort_by_key(|o| o.rank);
+
+    // Cancellation stop-boundary agreement: the control's consensus rule
+    // guarantees every rank stops at the same checkpoint boundary. Check
+    // it anyway — a disagreement would mean a torn final checkpoint, and
+    // silently returning one rank's answer would hide the bug.
+    let stopped_at = outcomes[0].stopped_at;
+    if outcomes.iter().any(|o| o.stopped_at != stopped_at) {
+        return Err(Error::Runtime(format!(
+            "cancellation stop boundaries disagree across ranks: {:?}",
+            outcomes.iter().map(|o| o.stopped_at).collect::<Vec<_>>()
+        )));
+    }
 
     // Post-training residual analysis over rank 0's checkpoints.
     let evaluator = Residuals::new(handle.clone(), &cfg.gen_predict_artifact(), cfg.seed)?;
@@ -399,6 +440,7 @@ pub fn run_training_with_links(
         final_residuals,
         resumed_from,
         membership,
+        stopped_at,
     })
 }
 
@@ -411,8 +453,17 @@ pub fn run_training(cfg: &RunConfig, handle: &RuntimeHandle) -> Result<RunResult
 /// (`backend: "native" | "pjrt"`), run the training, shut the runtime
 /// down. On the native backend this needs no exported artifacts at all.
 pub fn run_training_from_config(cfg: &RunConfig) -> Result<RunResult> {
+    run_training_from_config_controlled(cfg, None)
+}
+
+/// [`run_training_from_config`] with an optional [`RunControl`] attached
+/// (the service layer's self-contained runner: one runtime per job).
+pub fn run_training_from_config_controlled(
+    cfg: &RunConfig,
+    control: Option<Arc<RunControl>>,
+) -> Result<RunResult> {
     let rt = Runtime::from_config(cfg, cfg.runtime_workers)?;
-    let result = run_training(cfg, &rt.handle());
+    let result = run_training_controlled(cfg, &rt.handle(), LinkModel::zero(), control);
     rt.shutdown();
     result
 }

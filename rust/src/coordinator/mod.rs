@@ -18,7 +18,12 @@
 //!   lets ranks leave (on request or eviction) and join (via checkpoint
 //!   hand-off) mid-run, emitting versioned [`crate::comm::MembershipView`]s
 //!   that the collectives re-ring from.
+//! * [`control`] — cooperative run control: cancel a live run at a safe
+//!   checkpoint-cadence boundary (all ranks stop at the same epoch, the
+//!   final deposit is `--resume`-able) and observe per-epoch progress;
+//!   the service layer's handle into a training run.
 
+pub mod control;
 pub mod launcher;
 pub mod membership;
 pub mod offload;
@@ -26,6 +31,7 @@ pub mod pipeline;
 pub mod rank;
 pub mod resume;
 
+pub use control::{ProgressSnapshot, RunControl};
 pub use launcher::{run_training, RunResult};
 pub use membership::{MembershipChange, MembershipDirector, MembershipRecord, MembershipSchedule};
 pub use offload::GradOffloader;

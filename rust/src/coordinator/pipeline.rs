@@ -69,6 +69,18 @@
 //! stays full-width and replays stay bit-identical. Live epochs count
 //! into [`CommStats::participation_epochs`] and record a `members`
 //! series (Async-RED-style participation bookkeeping).
+//!
+//! **Cooperative cancellation.** When a
+//! [`RunControl`](super::control::RunControl) is armed, the pipeline
+//! consults it at every run-checkpoint boundary *after* draining and
+//! depositing: the control decides one stop boundary for the whole
+//! cohort (see `coordinator::control` for the consensus rule), and a
+//! rank whose boundary matches simply returns from its epoch loop — the
+//! window is already quiescent, the final state already on disk, so the
+//! deposited checkpoint is a valid `--resume` point and every rank stops
+//! at the same epoch. The control also receives per-epoch progress ticks
+//! (and rank 0's losses), which is pure observation: a controlled run is
+//! bit-identical to an uncontrolled one up to the stop.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -89,6 +101,7 @@ use crate::tensor::ops;
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 
+use super::control::RunControl;
 use super::membership::MembershipDirector;
 use super::offload::GradOffloader;
 use super::rank::RankOutcome;
@@ -279,6 +292,12 @@ pub struct RankPipeline {
     /// Consecutive deadline misses after which this rank asks the
     /// director to evict it (0 = never).
     evict_after: usize,
+    /// Cooperative cancellation + progress handle (`None` = one-shot
+    /// run, zero new cost on the hot path).
+    control: Option<Arc<RunControl>>,
+    /// The checkpoint boundary this rank stopped at, if the run was
+    /// cancelled (all ranks stop at the same one).
+    stopped_at: Option<u64>,
 }
 
 impl RankPipeline {
@@ -297,6 +316,7 @@ impl RankPipeline {
         mut rng: Rng,
         resume: Option<RankResume>,
         director: Option<Arc<MembershipDirector>>,
+        control: Option<Arc<RunControl>>,
     ) -> Result<RankPipeline> {
         let manifest = handle.manifest();
         let meta = manifest.model(&cfg.model)?.clone();
@@ -386,6 +406,8 @@ impl RankPipeline {
             view,
             live,
             evict_after: cfg.evict_after,
+            control,
+            stopped_at: None,
         })
     }
 
@@ -404,6 +426,15 @@ impl RankPipeline {
             self.transition(epoch, checkpointer)?;
             if self.live {
                 self.run_epoch(epoch)?;
+            }
+
+            // Progress ticks for the service layer's status view. Pure
+            // observation — never feeds back into training.
+            if let Some(ctl) = &self.control {
+                ctl.note_epoch(epoch);
+                if self.rank == 0 && self.live {
+                    ctl.publish_losses(self.out.gen_loss, self.out.disc_loss);
+                }
             }
 
             // Analysis checkpoints: timestamped generator snapshots for
@@ -433,6 +464,18 @@ impl RankPipeline {
                 if ck.wants(epoch) {
                     self.drain(epoch)?;
                     self.deposit(epoch, ck)?;
+                    // Cooperative cancellation, only here: the window is
+                    // quiescent and this boundary's deposit is already
+                    // made, so stopping leaves a full-width, resumable
+                    // checkpoint. The control guarantees every rank sees
+                    // the same stop boundary.
+                    if let Some(ctl) = &self.control {
+                        if ctl.should_stop_at(epoch, ck.every() as u64) {
+                            self.stopped_at = Some(epoch);
+                            ctl.mark_stopped(epoch);
+                            return Ok(());
+                        }
+                    }
                 }
             }
         }
@@ -980,6 +1023,7 @@ impl RankPipeline {
             state: self.state,
             comm_totals: self.comm_totals,
             health: self.health,
+            stopped_at: self.stopped_at,
         }
     }
 }

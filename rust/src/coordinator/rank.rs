@@ -44,6 +44,7 @@ use crate::runtime::RuntimeHandle;
 use crate::util::error::Result;
 use crate::util::rng::Rng;
 
+use super::control::RunControl;
 use super::membership::MembershipDirector;
 use super::pipeline::{RankHealth, RankPipeline};
 use super::resume::{RankResume, RunCheckpointer};
@@ -57,6 +58,9 @@ pub struct RankOutcome {
     pub comm_totals: CommStats,
     /// Exchange health accounting (deadline misses, settle latency).
     pub health: RankHealth,
+    /// The checkpoint boundary this rank stopped at, if the run was
+    /// cancelled via [`RunControl`] (same boundary on every rank).
+    pub stopped_at: Option<u64>,
 }
 
 /// Run one rank's full training loop. `shard` is this rank's data
@@ -65,7 +69,9 @@ pub struct RankOutcome {
 /// rank's state at the cadence; `resume` (when restoring) replaces the
 /// fresh initialization with a checkpointed state; `membership` (when
 /// elastic membership is armed) is the shared director the pipeline
-/// consults at every epoch boundary.
+/// consults at every epoch boundary; `control` (when the run is driven
+/// by the service layer) carries cooperative cancellation and the live
+/// progress view.
 #[allow(clippy::too_many_arguments)]
 pub fn run_rank(
     rank: usize,
@@ -78,10 +84,12 @@ pub fn run_rank(
     checkpointer: Option<Arc<RunCheckpointer>>,
     resume: Option<RankResume>,
     membership: Option<Arc<MembershipDirector>>,
+    control: Option<Arc<RunControl>>,
 ) -> Result<RankOutcome> {
     crate::util::logging::rank_scope(rank);
-    let mut pipeline =
-        RankPipeline::new(rank, cfg, handle, collective, shard, rng, resume, membership)?;
+    let mut pipeline = RankPipeline::new(
+        rank, cfg, handle, collective, shard, rng, resume, membership, control,
+    )?;
     pipeline.run(cfg, take_checkpoints, checkpointer.as_ref())?;
     Ok(pipeline.into_outcome())
 }

@@ -34,7 +34,11 @@
 //! module injects deterministic, seed-driven stragglers beneath the
 //! transport, and the pipeline's `on_straggler` policies (skip /
 //! late-apply with exchange deadlines) keep training live through them
-//! (see `docs/fault-tolerance.md`).
+//! (see `docs/fault-tolerance.md`). Beyond one-shot runs, the [`service`]
+//! module turns the trainer into a long-running job daemon (`sagips
+//! serve`): a journaled priority queue, a multiplexing scheduler with
+//! admission control, and cooperative cancellation that always leaves a
+//! resumable checkpoint (see `docs/serve.md`).
 //!
 //! # Quickstart: config to training
 //!
@@ -77,6 +81,7 @@ pub mod optim;
 pub mod report;
 pub mod runtime;
 pub mod scenario;
+pub mod service;
 pub mod sim;
 pub mod tensor;
 pub mod util;

@@ -7,10 +7,13 @@
 //!   experiment <id>      regenerate a paper figure/table (fig8..fig16, tab4)
 //!   scenarios            list the registered inverse-problem scenarios
 //!   validate-artifacts   load + smoke-run every artifact in the manifest
+//!   serve                run the job daemon (journaled queue + scheduler)
+//!   job <verb>           client verbs against a running daemon
+//!                        (submit|status|cancel|list|reload|ping|shutdown)
 //!
 //! Run `sagips help` for options.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use sagips::config::{presets, BackendKind, ChunkPolicy, Mode, RunConfig};
 use sagips::coordinator::launcher::run_training;
@@ -19,7 +22,9 @@ use sagips::model::residuals;
 use sagips::report::experiments::{self, Scale};
 use sagips::report::{format_table4, table4_paper_reference, Table4Row};
 use sagips::runtime::Runtime;
+use sagips::service::{client_roundtrip, protocol, Daemon, ServeLimits, TrainingRunner};
 use sagips::sim::ComputeModel;
+use sagips::util::json::Value;
 use sagips::util::cli::{self, Args, OptSpec};
 use sagips::util::error::{Error, Result};
 use sagips::util::logging;
@@ -50,7 +55,9 @@ fn print_help() {
          simulate             scaling sweep (DES, Figs 11/12)\n  \
          experiment <id>      regenerate fig8..fig16 / tab4\n  \
          scenarios            list registered inverse-problem scenarios\n  \
-         validate-artifacts   smoke-run every artifact\n\n\
+         validate-artifacts   smoke-run every artifact\n  \
+         serve                job daemon: journaled queue, scheduler, cancellation\n  \
+         job <verb>           submit|status|cancel|list|reload|ping|shutdown\n\n\
          common options: --scenario <name> --backend native|pjrt --artifacts <dir> \
          --workers <n> --seed <n>\n\
          engine: --chunking unchunked|auto|<elems> --staleness <k> \
@@ -61,6 +68,10 @@ fn print_help() {
          --on-straggler block|skip|late_apply --skip-budget <n>\n\
          elastic membership: --membership \"leave:R@E,join:R@E\" --min-ranks <n> \
          --evict-after <n> --allow-join\n\
+         serving: sagips serve --state-dir <dir> [--stdio] \
+         --max-concurrent-jobs <n> --max-queued <n>; \
+         sagips job submit --scenario <name> [--priority <p>] [--name <s>] \
+         (see docs/serve.md)\n\
          (the native backend needs no artifacts and runs every scenario; \
          pjrt executes the exported HLO)\n\
          env: SAGIPS_LOG=debug, SAGIPS_SCALE=smoke|ci|paper"
@@ -238,8 +249,15 @@ fn run(args: &[String]) -> Result<()> {
         print_help();
         return Ok(());
     };
-    let specs = common_specs();
     let rest: Vec<String> = args[1..].to_vec();
+    // serve/job have their own option sets — dispatch before the common
+    // parse so their flags aren't rejected as unknown.
+    match cmd.as_str() {
+        "serve" => return cmd_serve(&rest),
+        "job" => return cmd_job(&rest),
+        _ => {}
+    }
+    let specs = common_specs();
     let a = Args::parse(&rest, &specs)?;
     match cmd.as_str() {
         "train" => cmd_train(&a),
@@ -252,7 +270,10 @@ fn run(args: &[String]) -> Result<()> {
             print_help();
             Ok(())
         }
-        other => Err(Error::Usage(format!("unknown subcommand '{other}'"))),
+        other => Err(Error::Usage(format!(
+            "unknown subcommand '{other}' — valid subcommands: train, ensemble, \
+             simulate, experiment, scenarios, validate-artifacts, serve, job, help"
+        ))),
     }
 }
 
@@ -443,5 +464,186 @@ fn cmd_validate(a: &Args) -> Result<()> {
     }
     rt.shutdown();
     println!("all artifacts load, compile and execute");
+    Ok(())
+}
+
+const DEFAULT_SOCKET: &str = "serve-state/sagips.sock";
+
+fn serve_specs() -> Vec<OptSpec> {
+    vec![
+        cli::opt(
+            "state-dir",
+            "daemon state dir (queue journal + per-job checkpoints)",
+            Some("serve-state"),
+        ),
+        cli::opt(
+            "socket",
+            "unix socket path (default: <state-dir>/sagips.sock)",
+            None,
+        ),
+        cli::flag("stdio", "serve line-JSON on stdin/stdout instead of a socket"),
+        cli::opt("max-concurrent-jobs", "jobs training at once", None),
+        cli::opt(
+            "max-queued",
+            "refuse submits beyond N queued jobs (0 = unlimited)",
+            None,
+        ),
+        cli::opt(
+            "default-ckpt-every",
+            "checkpoint cadence applied to jobs submitted with ckpt_every 0",
+            None,
+        ),
+        cli::opt(
+            "serve-config",
+            "limits JSON file; the reload verb re-reads it without a restart",
+            None,
+        ),
+    ]
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let a = Args::parse(args, &serve_specs())?;
+    // Flags override the serve-config file, which overrides defaults.
+    let mut limits = match a.get("serve-config") {
+        Some(p) => ServeLimits::from_json(&std::fs::read_to_string(p)?)?,
+        None => ServeLimits::default(),
+    };
+    limits.max_concurrent_jobs = a.usize("max-concurrent-jobs", limits.max_concurrent_jobs)?;
+    limits.max_queued = a.usize("max-queued", limits.max_queued)?;
+    limits.default_ckpt_every = a.usize("default-ckpt-every", limits.default_ckpt_every)?;
+    limits.validate()?;
+    let state_dir = PathBuf::from(a.get_or("state-dir", "serve-state"));
+    let serve_config = a.get("serve-config").map(PathBuf::from);
+    let daemon = Daemon::open(&state_dir, limits, serve_config, Box::new(TrainingRunner))?;
+    if a.flag("stdio") {
+        sagips::log_info!(
+            "serving line-JSON on stdin/stdout (state dir {})",
+            state_dir.display()
+        );
+        daemon.serve_stdio()
+    } else {
+        let socket = a
+            .get("socket")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| state_dir.join("sagips.sock"));
+        daemon.serve_unix(&socket)
+    }
+}
+
+fn cmd_job(args: &[String]) -> Result<()> {
+    let Some(verb) = args.first().cloned() else {
+        return Err(Error::Usage(format!(
+            "sagips job needs a verb — valid verbs: {}",
+            protocol::VERBS.join(", ")
+        )));
+    };
+    let rest: Vec<String> = args[1..].to_vec();
+    match verb.as_str() {
+        "submit" => job_submit(&rest),
+        "status" | "cancel" | "list" | "reload" | "ping" | "shutdown" => job_simple(&verb, &rest),
+        other => Err(Error::Usage(format!(
+            "unknown job verb '{other}' — valid verbs: {}",
+            protocol::VERBS.join(", ")
+        ))),
+    }
+}
+
+/// Checks a daemon response line for `"ok":true`; surfaces the error
+/// (keeping admission refusals retryable/distinguishable) otherwise.
+fn expect_ok(v: &Value) -> Result<()> {
+    if v.get("ok") == Some(&Value::Bool(true)) {
+        return Ok(());
+    }
+    let msg = v
+        .get("error")
+        .and_then(|e| e.as_str())
+        .unwrap_or("malformed daemon response")
+        .to_string();
+    if v.get("overloaded") == Some(&Value::Bool(true)) {
+        Err(Error::overloaded(msg))
+    } else {
+        Err(Error::Runtime(msg))
+    }
+}
+
+fn job_submit(args: &[String]) -> Result<()> {
+    // A submit is a full run config — same options as `sagips train`,
+    // plus the queueing knobs.
+    let mut specs = common_specs();
+    specs.push(cli::opt("socket", "daemon unix socket", Some(DEFAULT_SOCKET)));
+    specs.push(cli::opt(
+        "priority",
+        "scheduling priority (higher runs first; FIFO within a priority)",
+        Some("0"),
+    ));
+    specs.push(cli::opt("name", "job display name (default: the scenario)", None));
+    let a = Args::parse(args, &specs)?;
+    let config = build_cfg(&a)?;
+    let name = match a.get("name") {
+        Some(n) => n.to_string(),
+        None => config.scenario.clone(),
+    };
+    let priority = a.f64("priority", 0.0)? as i64;
+    let socket = a.get_or("socket", DEFAULT_SOCKET).to_string();
+    let resp = client_roundtrip(
+        Path::new(&socket),
+        &protocol::Request::Submit {
+            name,
+            priority,
+            config,
+        },
+    )?;
+    expect_ok(&resp)?;
+    println!("submitted job {}", resp.req_usize("id")?);
+    Ok(())
+}
+
+fn job_simple(verb: &str, args: &[String]) -> Result<()> {
+    let specs = vec![cli::opt("socket", "daemon unix socket", Some(DEFAULT_SOCKET))];
+    let a = Args::parse(args, &specs)?;
+    let socket = a.get_or("socket", DEFAULT_SOCKET).to_string();
+    let id = || -> Result<u64> {
+        a.positional()
+            .first()
+            .ok_or_else(|| Error::Usage(format!("sagips job {verb} needs a job id")))?
+            .parse()
+            .map_err(|_| Error::Usage(format!("sagips job {verb}: bad job id")))
+    };
+    let req = match verb {
+        "status" => protocol::Request::Status { id: id()? },
+        "cancel" => protocol::Request::Cancel { id: id()? },
+        "list" => protocol::Request::List,
+        "reload" => protocol::Request::Reload,
+        "ping" => protocol::Request::Ping,
+        "shutdown" => protocol::Request::Shutdown,
+        _ => unreachable!("cmd_job routed an unknown verb"),
+    };
+    let resp = client_roundtrip(Path::new(&socket), &req)?;
+    expect_ok(&resp)?;
+    match verb {
+        "status" => {
+            let st = protocol::parse_status(resp.req("job")?)?;
+            print!("{}", sagips::report::format_jobs(&[st]));
+        }
+        "list" => {
+            let rows = resp
+                .req("jobs")?
+                .as_array()
+                .ok_or_else(|| Error::Runtime("daemon 'jobs' is not an array".into()))?
+                .iter()
+                .map(protocol::parse_status)
+                .collect::<Result<Vec<_>>>()?;
+            print!("{}", sagips::report::format_jobs(&rows));
+        }
+        "cancel" => println!("cancel: {}", resp.req_str("result")?),
+        "reload" => println!("reloaded: {}", resp.req_str("reloaded")?),
+        "ping" => println!(
+            "daemon up: {} running, {} queued",
+            resp.req_usize("running")?,
+            resp.req_usize("queued")?
+        ),
+        "shutdown" => println!("daemon shutting down"),
+        _ => unreachable!(),
+    }
     Ok(())
 }

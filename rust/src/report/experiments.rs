@@ -571,6 +571,7 @@ mod tests {
                     kind: MembershipChange::Join,
                 },
             ],
+            stopped_at: None,
         };
         let mut cfg = presets::ci_default();
         cfg.staleness = 2;

@@ -4,4 +4,4 @@
 pub mod experiments;
 pub mod tables;
 
-pub use tables::{format_scenarios, format_table4, table4_paper_reference, Table4Row};
+pub use tables::{format_jobs, format_scenarios, format_table4, table4_paper_reference, Table4Row};

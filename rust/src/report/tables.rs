@@ -1,7 +1,9 @@
-//! Table formatting — Table IV (final residuals per mode) and the
-//! scenario-registry listing (`sagips scenarios`).
+//! Table formatting — Table IV (final residuals per mode), the
+//! scenario-registry listing (`sagips scenarios`), and the job table
+//! (`sagips job list`).
 
 use crate::scenario::ScenarioInfo;
+use crate::service::JobStatus;
 use crate::tensor::stats;
 
 /// One method column of Table IV: per-parameter (mean, sigma) residuals,
@@ -93,6 +95,37 @@ pub fn format_scenarios(rows: &[ScenarioInfo]) -> String {
     s
 }
 
+/// Render daemon job rows (`sagips job list` / `status`) as a table, in
+/// the registry-listing style: one row per job, id order.
+pub fn format_jobs(rows: &[JobStatus]) -> String {
+    let loss = |v: Option<f64>| match v {
+        Some(x) => format!("{x:.4}"),
+        None => "-".to_string(),
+    };
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:>4} {:<10} {:>5} {:<16} {:<10} {:>11} {:>9} {:>9}  {}\n",
+        "id", "state", "prio", "name", "scenario", "epochs", "G loss", "D loss", "detail"
+    ));
+    s.push_str(&"-".repeat(96));
+    s.push('\n');
+    for r in rows {
+        s.push_str(&format!(
+            "{:>4} {:<10} {:>5} {:<16} {:<10} {:>11} {:>9} {:>9}  {}\n",
+            r.id,
+            r.state.name(),
+            r.priority,
+            r.name,
+            r.scenario,
+            format!("{}/{}", r.epochs_done, r.epochs),
+            loss(r.gen_loss),
+            loss(r.disc_loss),
+            r.detail
+        ));
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,6 +165,42 @@ mod tests {
         assert!(t.contains("hvd (paper)"));
         assert!(t.contains("r5"));
         assert!(t.contains("±"));
+    }
+
+    #[test]
+    fn job_table_lists_every_row() {
+        use crate::service::JobState;
+        let rows = vec![
+            JobStatus {
+                id: 1,
+                name: "sweep-a".into(),
+                state: JobState::Running,
+                priority: 5,
+                scenario: "quantile".into(),
+                epochs: 40,
+                epochs_done: 12,
+                gen_loss: Some(0.6931),
+                disc_loss: None,
+                detail: "".into(),
+            },
+            JobStatus {
+                id: 2,
+                name: "sweep-b".into(),
+                state: JobState::Queued,
+                priority: -1,
+                scenario: "deconv".into(),
+                epochs: 40,
+                epochs_done: 0,
+                gen_loss: None,
+                disc_loss: None,
+                detail: "".into(),
+            },
+        ];
+        let t = format_jobs(&rows);
+        assert!(t.contains("sweep-a") && t.contains("sweep-b"), "{t}");
+        assert!(t.contains("running") && t.contains("queued"), "{t}");
+        assert!(t.contains("12/40") && t.contains("0/40"), "{t}");
+        assert!(t.contains("0.6931"), "{t}");
     }
 
     #[test]

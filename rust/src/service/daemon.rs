@@ -1,0 +1,281 @@
+//! The `sagips serve` daemon: a line-JSON control loop in front of the
+//! [`Scheduler`].
+//!
+//! Two transports, same protocol:
+//!
+//! * **unix socket** (default) — `sagips job …` client verbs connect,
+//!   write one request line, read one response line;
+//! * **stdio** (`--stdio`) — requests on stdin, responses on stdout,
+//!   one per line; handy for tests, supervisors, and piping. (All
+//!   logging goes to stderr, so stdout carries protocol lines only.)
+//!
+//! Durability does not depend on a clean shutdown: the queue journal
+//! and the atomic run checkpoints are written as the daemon goes, so
+//! `kill -TERM`/`-KILL` mid-job loses at most the epochs since the last
+//! checkpoint boundary — on restart the journal re-queues the
+//! interrupted job and the scheduler resumes it from its own newest
+//! checkpoint (exercised by the `serve-smoke` CI job). The `shutdown`
+//! verb is the graceful variant: it cancels running jobs so each
+//! deposits a final resumable checkpoint, then joins the workers.
+//!
+//! Config reload without restart: the `reload` verb re-reads the
+//! `--serve-config` JSON (see [`ServeLimits::from_json`]) and applies
+//! the new limits to admission and concurrency immediately.
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::util::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+use super::job::JobSpec;
+use super::protocol::{self, Request};
+use super::runner::JobRunner;
+use super::scheduler::{CancelOutcome, Scheduler, ServeLimits};
+
+/// The daemon: scheduler + control-channel front end.
+pub struct Daemon {
+    scheduler: Scheduler,
+    /// Re-read on the `reload` verb; `None` = reload keeps current
+    /// limits (still re-spawns workers up to the concurrency limit).
+    serve_config: Option<PathBuf>,
+}
+
+impl Daemon {
+    /// Open the journaled state under `state_dir` and start the worker
+    /// pool. `serve_config` is the limits file the `reload` verb
+    /// re-reads.
+    pub fn open(
+        state_dir: &Path,
+        limits: ServeLimits,
+        serve_config: Option<PathBuf>,
+        runner: Box<dyn JobRunner>,
+    ) -> Result<Daemon> {
+        Ok(Daemon {
+            scheduler: Scheduler::open(state_dir, limits, runner)?,
+            serve_config,
+        })
+    }
+
+    /// The scheduler behind the control channel (in-process embedding,
+    /// tests).
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.scheduler
+    }
+
+    /// Handle one request line; returns the response line and whether
+    /// the daemon should shut down after sending it.
+    pub fn handle_line(&self, line: &str) -> (String, bool) {
+        let req = match Request::parse(line) {
+            Ok(r) => r,
+            Err(e) => return (protocol::err_response(&e), false),
+        };
+        match req {
+            Request::Ping => (
+                protocol::ok_response(vec![
+                    ("running", json::num(self.scheduler.running_count() as f64)),
+                    ("queued", json::num(self.scheduler.queued_count() as f64)),
+                ]),
+                false,
+            ),
+            Request::Submit {
+                name,
+                priority,
+                config,
+            } => {
+                let spec = JobSpec {
+                    name,
+                    priority,
+                    config,
+                };
+                match self.scheduler.submit(spec) {
+                    Ok(id) => (
+                        protocol::ok_response(vec![("id", json::num(id as f64))]),
+                        false,
+                    ),
+                    Err(e) => (protocol::err_response(&e), false),
+                }
+            }
+            Request::Status { id } => match self.scheduler.status(id) {
+                Some(st) => (
+                    protocol::ok_response(vec![("job", protocol::status_value(&st))]),
+                    false,
+                ),
+                None => (
+                    protocol::err_response(&Error::config(format!("no such job: {id}"))),
+                    false,
+                ),
+            },
+            Request::Cancel { id } => match self.scheduler.cancel(id) {
+                Ok(outcome) => {
+                    let result = match outcome {
+                        CancelOutcome::Dequeued => "dequeued",
+                        CancelOutcome::Stopping => "stopping",
+                        CancelOutcome::AlreadyTerminal(st) => st.name(),
+                    };
+                    (
+                        protocol::ok_response(vec![("result", json::s(result))]),
+                        false,
+                    )
+                }
+                Err(e) => (protocol::err_response(&e), false),
+            },
+            Request::List => {
+                let jobs: Vec<Value> = self
+                    .scheduler
+                    .list()
+                    .iter()
+                    .map(protocol::status_value)
+                    .collect();
+                (
+                    protocol::ok_response(vec![("jobs", json::arr(jobs))]),
+                    false,
+                )
+            }
+            Request::Reload => match self.reload() {
+                Ok(note) => (
+                    protocol::ok_response(vec![("reloaded", json::s(note))]),
+                    false,
+                ),
+                Err(e) => (protocol::err_response(&e), false),
+            },
+            Request::Shutdown => (
+                protocol::ok_response(vec![("shutdown", Value::Bool(true))]),
+                true,
+            ),
+        }
+    }
+
+    /// Re-read the serve-config file (if any) and apply its limits.
+    fn reload(&self) -> Result<String> {
+        match &self.serve_config {
+            Some(path) => {
+                let text = std::fs::read_to_string(path)?;
+                let limits = ServeLimits::from_json(&text)?;
+                self.scheduler.reload(limits)?;
+                crate::log_info!(
+                    "reloaded limits from {}: {limits:?}",
+                    path.display()
+                );
+                Ok(path.display().to_string())
+            }
+            None => Ok("no --serve-config given; limits unchanged".into()),
+        }
+    }
+
+    /// Serve the stdin/stdout loop until EOF or a `shutdown` verb, then
+    /// shut the scheduler down gracefully.
+    pub fn serve_stdio(self) -> Result<()> {
+        let stdin = std::io::stdin();
+        let mut stdout = std::io::stdout();
+        for line in stdin.lock().lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let (resp, quit) = self.handle_line(&line);
+            stdout.write_all(resp.as_bytes())?;
+            stdout.write_all(b"\n")?;
+            stdout.flush()?;
+            if quit {
+                break;
+            }
+        }
+        self.close();
+        Ok(())
+    }
+
+    /// Serve a unix socket until a `shutdown` verb, then shut the
+    /// scheduler down gracefully and remove the socket.
+    ///
+    /// Connections are handled serially: every client verb is one
+    /// request/response exchange, so a connection is held only for the
+    /// time it takes to answer one line.
+    pub fn serve_unix(self, socket: &Path) -> Result<()> {
+        // A stale socket file from a killed daemon would make bind fail.
+        if socket.exists() {
+            std::fs::remove_file(socket)?;
+        }
+        if let Some(parent) = socket.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let listener = UnixListener::bind(socket)?;
+        // Nonblocking accept + sleep so the loop can wind down promptly
+        // after a shutdown verb instead of blocking forever in accept.
+        listener.set_nonblocking(true)?;
+        crate::log_info!("serving on {}", socket.display());
+        let mut quit = false;
+        while !quit {
+            match listener.accept() {
+                Ok((stream, _addr)) => {
+                    quit = self.serve_connection(stream)?;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                Err(e) => return Err(Error::Io(e)),
+            }
+        }
+        let _ = std::fs::remove_file(socket);
+        self.close();
+        Ok(())
+    }
+
+    /// Answer every line of one connection; returns true on `shutdown`.
+    fn serve_connection(&self, stream: UnixStream) -> Result<bool> {
+        // The accept loop is nonblocking; per-connection reads block.
+        stream.set_nonblocking(false)?;
+        let mut writer = stream.try_clone()?;
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let line = match line {
+                Ok(l) => l,
+                // A client that hung up mid-line is its problem, not ours.
+                Err(_) => break,
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            let (resp, quit) = self.handle_line(&line);
+            writer.write_all(resp.as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+            if quit {
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    /// Graceful shutdown: cancel running jobs (each deposits a final
+    /// resumable checkpoint at its next boundary) and join the workers.
+    pub fn close(self) {
+        self.scheduler.shutdown(true);
+    }
+}
+
+/// One-shot client side of the unix-socket transport: send one request
+/// line, read one response line.
+pub fn client_roundtrip(socket: &Path, req: &Request) -> Result<Value> {
+    let stream = UnixStream::connect(socket).map_err(|e| {
+        Error::Runtime(format!(
+            "cannot reach daemon at {} ({e}) — is `sagips serve` running?",
+            socket.display()
+        ))
+    })?;
+    let mut writer = stream.try_clone()?;
+    writer.write_all(req.to_line().as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    if line.trim().is_empty() {
+        return Err(Error::Runtime(
+            "daemon closed the connection without responding".into(),
+        ));
+    }
+    Value::parse(line.trim())
+}

@@ -1,0 +1,238 @@
+//! Job model: what the daemon queues, runs, and reports.
+//!
+//! A *job* is a full [`RunConfig`] plus bookkeeping: a monotonically
+//! increasing id, a priority, a human-readable name, and a state
+//! machine
+//!
+//! ```text
+//! queued → running → { done, cancelled, failed }
+//!        ↘ cancelled                (cancel-while-queued never starts)
+//! ```
+//!
+//! with one extra transition the state names don't show: a daemon
+//! restart that finds a job `running` in the journal re-queues it
+//! (`interrupted: true`), and the scheduler resumes it from the job's
+//! own newest run checkpoint when one exists — so a SIGTERM'd daemon
+//! loses at most the epochs since the last checkpoint boundary.
+
+use crate::config::RunConfig;
+use crate::util::error::{Error, Result};
+
+/// Monotonically increasing job identifier, assigned at submit.
+pub type JobId = u64;
+
+/// The job state machine. `Done`, `Cancelled` and `Failed` are
+/// terminal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Waiting in the queue (or re-queued after a daemon restart).
+    Queued,
+    /// Claimed by a scheduler worker; a training run is in progress.
+    Running,
+    /// Ran to completion.
+    Done,
+    /// Stopped at a checkpoint boundary by a cancel request (while
+    /// running) or removed from the queue before starting (while
+    /// queued).
+    Cancelled,
+    /// The run returned an error; `detail` carries the message.
+    Failed,
+}
+
+impl JobState {
+    /// Canonical wire/journal name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Cancelled => "cancelled",
+            JobState::Failed => "failed",
+        }
+    }
+
+    /// Parse a wire/journal name back.
+    pub fn parse(s: &str) -> Result<JobState> {
+        match s {
+            "queued" => Ok(JobState::Queued),
+            "running" => Ok(JobState::Running),
+            "done" => Ok(JobState::Done),
+            "cancelled" => Ok(JobState::Cancelled),
+            "failed" => Ok(JobState::Failed),
+            other => Err(Error::config(format!(
+                "unknown job state '{other}' (queued|running|done|cancelled|failed)"
+            ))),
+        }
+    }
+
+    /// Whether the job can never change state again.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Cancelled | JobState::Failed)
+    }
+}
+
+/// What a client submits: a named, prioritized run configuration.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Free-form label for humans (`list` output); not unique.
+    pub name: String,
+    /// Higher runs first; FIFO within a priority level.
+    pub priority: i64,
+    /// The full run configuration, normalized by the scheduler at
+    /// admission (per-job checkpoint dir, guaranteed cadence).
+    pub config: RunConfig,
+}
+
+/// Terminal summary of a finished (done or cancelled) run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct JobOutcome {
+    /// Epochs actually trained (cancelled runs: stop boundary + 1).
+    pub epochs_done: u64,
+    /// Final mean-of-last generator loss across ranks.
+    pub gen_loss: Option<f64>,
+    /// Final mean-of-last discriminator loss across ranks.
+    pub disc_loss: Option<f64>,
+}
+
+/// A job as the queue tracks it.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: JobId,
+    pub spec: JobSpec,
+    pub state: JobState,
+    /// Human-readable detail for the current state (failure message,
+    /// cancel boundary, resume note); empty when there is nothing to
+    /// say.
+    pub detail: String,
+    /// A daemon restart found this job mid-run and re-queued it; the
+    /// scheduler will resume it from its own newest checkpoint.
+    pub interrupted: bool,
+    /// Terminal metrics (done/cancelled runs only).
+    pub outcome: Option<JobOutcome>,
+}
+
+impl Job {
+    /// The status row reported over the control channel. `progress` is
+    /// the live view for running jobs (epochs done so far, rank 0's
+    /// latest losses); terminal jobs report their outcome instead.
+    pub fn status(&self, progress: Option<crate::coordinator::ProgressSnapshot>) -> JobStatus {
+        let (epochs_done, gen_loss, disc_loss) = match (&self.outcome, progress) {
+            (Some(out), _) => (out.epochs_done, out.gen_loss, out.disc_loss),
+            (None, Some(p)) => (
+                p.epochs_done,
+                p.gen_loss.is_finite().then_some(p.gen_loss),
+                p.disc_loss.is_finite().then_some(p.disc_loss),
+            ),
+            (None, None) => (0, None, None),
+        };
+        JobStatus {
+            id: self.id,
+            name: self.spec.name.clone(),
+            state: self.state,
+            priority: self.spec.priority,
+            scenario: self.spec.config.scenario.clone(),
+            epochs: self.spec.config.epochs as u64,
+            epochs_done,
+            gen_loss,
+            disc_loss,
+            detail: self.detail.clone(),
+        }
+    }
+}
+
+/// One row of `sagips job status|list` output: the wire form of a job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobStatus {
+    pub id: JobId,
+    pub name: String,
+    pub state: JobState,
+    pub priority: i64,
+    pub scenario: String,
+    /// Configured epoch count.
+    pub epochs: u64,
+    /// Epochs completed: live progress while running, the terminal
+    /// count afterwards.
+    pub epochs_done: u64,
+    /// Latest (running) or final (terminal) generator loss.
+    pub gen_loss: Option<f64>,
+    /// Latest (running) or final (terminal) discriminator loss.
+    pub disc_loss: Option<f64>,
+    pub detail: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_names_roundtrip() {
+        for st in [
+            JobState::Queued,
+            JobState::Running,
+            JobState::Done,
+            JobState::Cancelled,
+            JobState::Failed,
+        ] {
+            assert_eq!(JobState::parse(st.name()).unwrap(), st);
+        }
+        assert!(JobState::parse("paused").is_err());
+    }
+
+    #[test]
+    fn terminality() {
+        assert!(!JobState::Queued.is_terminal());
+        assert!(!JobState::Running.is_terminal());
+        assert!(JobState::Done.is_terminal());
+        assert!(JobState::Cancelled.is_terminal());
+        assert!(JobState::Failed.is_terminal());
+    }
+
+    #[test]
+    fn status_prefers_outcome_over_progress() {
+        let job = Job {
+            id: 3,
+            spec: JobSpec {
+                name: "t".into(),
+                priority: 0,
+                config: crate::config::presets::ci_default(),
+            },
+            state: JobState::Done,
+            detail: String::new(),
+            interrupted: false,
+            outcome: Some(JobOutcome {
+                epochs_done: 40,
+                gen_loss: Some(0.7),
+                disc_loss: Some(0.6),
+            }),
+        };
+        let live = crate::coordinator::ProgressSnapshot {
+            epochs_done: 39,
+            gen_loss: 0.9,
+            disc_loss: 0.8,
+        };
+        let st = job.status(Some(live));
+        assert_eq!(st.epochs_done, 40);
+        assert_eq!(st.gen_loss, Some(0.7));
+    }
+
+    #[test]
+    fn status_drops_nan_losses() {
+        let job = Job {
+            id: 1,
+            spec: JobSpec {
+                name: "t".into(),
+                priority: 0,
+                config: crate::config::presets::ci_default(),
+            },
+            state: JobState::Running,
+            detail: String::new(),
+            interrupted: false,
+            outcome: None,
+        };
+        // Before the first epoch the live losses are NaN placeholders;
+        // the wire form must omit them (JSON has no NaN).
+        let st = job.status(Some(crate::coordinator::ProgressSnapshot::default()));
+        assert_eq!(st.gen_loss, None);
+        assert_eq!(st.disc_loss, None);
+    }
+}

@@ -1,0 +1,41 @@
+//! The service layer: `sagips serve` turns the one-shot trainer into a
+//! long-running job daemon.
+//!
+//! Layering, bottom-up:
+//!
+//! * [`job`] — job identity and lifecycle: the state machine
+//!   `queued → running → {done, cancelled, failed}` plus the status row
+//!   surfaced to clients.
+//! * [`queue`] — the persistent FIFO-with-priorities [`JobQueue`]. Every
+//!   mutation is appended to `journal.jsonl` under the state dir, so a
+//!   daemon killed mid-run replays its queue on restart; jobs that were
+//!   `running` at the kill re-queue as *interrupted* and resume from
+//!   their newest run checkpoint.
+//! * [`runner`] — the [`JobRunner`] trait ([`TrainingRunner`] = the real
+//!   `sagips train` path with a [`RunControl`] attached; tests plug in
+//!   mocks).
+//! * [`scheduler`] — the worker pool: claims jobs in priority-then-FIFO
+//!   order, enforces admission control ([`ServeLimits`]), and owns
+//!   cooperative cancellation (queued jobs cancel instantly; running
+//!   jobs drain to the next checkpoint boundary and deposit a final
+//!   resumable checkpoint — see `coordinator::control` for the
+//!   stop-boundary consensus).
+//! * [`protocol`] — the line-JSON request/response wire format shared by
+//!   the daemon and the `sagips job …` client verbs.
+//! * [`daemon`] — the control loop itself, over a unix socket or
+//!   stdin/stdout, plus config reload without restart.
+//!
+//! [`RunControl`]: crate::coordinator::RunControl
+
+pub mod daemon;
+pub mod job;
+pub mod protocol;
+pub mod queue;
+pub mod runner;
+pub mod scheduler;
+
+pub use daemon::{client_roundtrip, Daemon};
+pub use job::{Job, JobId, JobOutcome, JobSpec, JobState, JobStatus};
+pub use queue::JobQueue;
+pub use runner::{JobRunner, RunOutcome, TrainingRunner};
+pub use scheduler::{CancelOutcome, Scheduler, ServeLimits};

@@ -1,0 +1,267 @@
+//! The line-JSON control protocol between `sagips job …` clients and
+//! the `sagips serve` daemon.
+//!
+//! One request per line, one response per line (no framing beyond
+//! `\n`; both sides are the crate's own deterministic JSON emitter, so
+//! responses are stable byte-for-byte for a given payload):
+//!
+//! ```text
+//! → {"verb":"submit","name":"sweep-a","priority":0,"config":{...}}
+//! ← {"id":3,"ok":true}
+//! → {"verb":"status","id":3}
+//! ← {"job":{"id":3,"state":"running","epochs_done":120,...},"ok":true}
+//! → {"verb":"cancel","id":3}
+//! ← {"ok":true,"result":"stopping"}
+//! ```
+//!
+//! Errors come back as `{"ok":false,"error":"..."}`; admission
+//! refusals additionally carry `"overloaded":true` so clients can
+//! distinguish retryable backpressure from fatal rejections. An
+//! unknown verb lists every valid one (the same courtesy the scenario
+//! registry extends to unknown scenario names).
+
+use crate::config::RunConfig;
+use crate::util::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+use super::job::{JobId, JobState, JobStatus};
+
+/// Every verb the daemon understands, in help order.
+pub const VERBS: [&str; 7] = [
+    "submit", "status", "cancel", "list", "reload", "ping", "shutdown",
+];
+
+/// A parsed client request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Submit {
+        name: String,
+        priority: i64,
+        config: RunConfig,
+    },
+    Status {
+        id: JobId,
+    },
+    Cancel {
+        id: JobId,
+    },
+    List,
+    Reload,
+    Ping,
+    Shutdown,
+}
+
+impl Request {
+    /// Parse one request line.
+    pub fn parse(line: &str) -> Result<Request> {
+        let v = Value::parse(line.trim())?;
+        if v.as_object().is_none() {
+            return Err(Error::config("request must be a JSON object"));
+        }
+        match v.req_str("verb")? {
+            "submit" => {
+                let config = RunConfig::from_json(&v.req("config")?.to_json())?;
+                let name = v
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .unwrap_or(&config.scenario)
+                    .to_string();
+                let priority = match v.get("priority") {
+                    Some(p) => p.as_f64().ok_or_else(|| {
+                        Error::config("submit 'priority' must be a number")
+                    })? as i64,
+                    None => 0,
+                };
+                Ok(Request::Submit {
+                    name,
+                    priority,
+                    config,
+                })
+            }
+            "status" => Ok(Request::Status { id: req_id(&v)? }),
+            "cancel" => Ok(Request::Cancel { id: req_id(&v)? }),
+            "list" => Ok(Request::List),
+            "reload" => Ok(Request::Reload),
+            "ping" => Ok(Request::Ping),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(Error::config(format!(
+                "unknown verb '{other}' — valid verbs: {}",
+                VERBS.join(", ")
+            ))),
+        }
+    }
+
+    /// Emit the request line a client sends (inverse of `parse`).
+    pub fn to_line(&self) -> String {
+        let v = match self {
+            Request::Submit {
+                name,
+                priority,
+                config,
+            } => json::obj(vec![
+                ("verb", json::s("submit")),
+                ("name", json::s(name)),
+                ("priority", json::num(*priority as f64)),
+                ("config", config.to_json_value()),
+            ]),
+            Request::Status { id } => json::obj(vec![
+                ("verb", json::s("status")),
+                ("id", json::num(*id as f64)),
+            ]),
+            Request::Cancel { id } => json::obj(vec![
+                ("verb", json::s("cancel")),
+                ("id", json::num(*id as f64)),
+            ]),
+            Request::List => json::obj(vec![("verb", json::s("list"))]),
+            Request::Reload => json::obj(vec![("verb", json::s("reload"))]),
+            Request::Ping => json::obj(vec![("verb", json::s("ping"))]),
+            Request::Shutdown => json::obj(vec![("verb", json::s("shutdown"))]),
+        };
+        v.to_json()
+    }
+}
+
+fn req_id(v: &Value) -> Result<JobId> {
+    Ok(v.req_usize("id")? as JobId)
+}
+
+/// A successful response line with extra payload fields.
+pub fn ok_response(fields: Vec<(&str, Value)>) -> String {
+    let mut all = vec![("ok", Value::Bool(true))];
+    all.extend(fields);
+    json::obj(all).to_json()
+}
+
+/// An error response line; admission refusals are marked retryable.
+pub fn err_response(e: &Error) -> String {
+    let mut fields = vec![
+        ("ok", Value::Bool(false)),
+        ("error", json::s(e.to_string())),
+    ];
+    if e.is_overloaded() {
+        fields.push(("overloaded", Value::Bool(true)));
+    }
+    json::obj(fields).to_json()
+}
+
+/// The wire form of a status row.
+pub fn status_value(st: &JobStatus) -> Value {
+    let mut fields = vec![
+        ("id", json::num(st.id as f64)),
+        ("name", json::s(&st.name)),
+        ("state", json::s(st.state.name())),
+        ("priority", json::num(st.priority as f64)),
+        ("scenario", json::s(&st.scenario)),
+        ("epochs", json::num(st.epochs as f64)),
+        ("epochs_done", json::num(st.epochs_done as f64)),
+        ("detail", json::s(&st.detail)),
+    ];
+    if let Some(g) = st.gen_loss {
+        fields.push(("gen_loss", json::num(g)));
+    }
+    if let Some(d) = st.disc_loss {
+        fields.push(("disc_loss", json::num(d)));
+    }
+    json::obj(fields)
+}
+
+/// Parse a status row back (client side, for rendering `list` output).
+pub fn parse_status(v: &Value) -> Result<JobStatus> {
+    let priority = v
+        .req("priority")?
+        .as_f64()
+        .ok_or_else(|| Error::config("status 'priority' must be a number"))? as i64;
+    Ok(JobStatus {
+        id: v.req_usize("id")? as JobId,
+        name: v.req_str("name")?.to_string(),
+        state: JobState::parse(v.req_str("state")?)?,
+        priority,
+        scenario: v.req_str("scenario")?.to_string(),
+        epochs: v.req_usize("epochs")? as u64,
+        epochs_done: v.req_usize("epochs_done")? as u64,
+        gen_loss: v.get("gen_loss").and_then(|x| x.as_f64()),
+        disc_loss: v.get("disc_loss").and_then(|x| x.as_f64()),
+        detail: v.req_str("detail")?.to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn request_lines_roundtrip() {
+        let reqs = vec![
+            Request::Submit {
+                name: "sweep-a".into(),
+                priority: -2,
+                config: presets::ci_default(),
+            },
+            Request::Status { id: 7 },
+            Request::Cancel { id: 7 },
+            Request::List,
+            Request::Reload,
+            Request::Ping,
+            Request::Shutdown,
+        ];
+        for req in reqs {
+            let line = req.to_line();
+            let back = Request::parse(&line).unwrap();
+            // Compare through re-emission (RunConfig: PartialEq, but
+            // Request intentionally stays un-derived).
+            assert_eq!(back.to_line(), line);
+        }
+    }
+
+    #[test]
+    fn submit_defaults_name_and_priority() {
+        let cfg = presets::ci_default().to_json_value().to_json();
+        let req =
+            Request::parse(&format!(r#"{{"verb":"submit","config":{cfg}}}"#)).unwrap();
+        match req {
+            Request::Submit { name, priority, config } => {
+                assert_eq!(name, config.scenario);
+                assert_eq!(priority, 0);
+            }
+            other => panic!("wrong parse: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_verb_lists_all_verbs() {
+        let err = Request::parse(r#"{"verb":"pause"}"#).unwrap_err().to_string();
+        for verb in VERBS {
+            assert!(err.contains(verb), "error should list '{verb}': {err}");
+        }
+    }
+
+    #[test]
+    fn error_responses_flag_overload() {
+        let line = err_response(&Error::overloaded("queue full"));
+        let v = Value::parse(&line).unwrap();
+        assert_eq!(v.get("ok"), Some(&Value::Bool(false)));
+        assert_eq!(v.get("overloaded"), Some(&Value::Bool(true)));
+        let line = err_response(&Error::config("bad"));
+        let v = Value::parse(&line).unwrap();
+        assert!(v.get("overloaded").is_none());
+    }
+
+    #[test]
+    fn status_roundtrips_with_and_without_losses() {
+        let st = JobStatus {
+            id: 3,
+            name: "a".into(),
+            state: JobState::Running,
+            priority: 1,
+            scenario: "quantile".into(),
+            epochs: 40,
+            epochs_done: 12,
+            gen_loss: Some(0.69),
+            disc_loss: None,
+            detail: "".into(),
+        };
+        let back = parse_status(&status_value(&st)).unwrap();
+        assert_eq!(back, st);
+    }
+}

@@ -1,0 +1,54 @@
+//! The job runner: how the scheduler turns a claimed job into a
+//! training run.
+//!
+//! A trait so the scheduler's concurrency/ordering logic is testable
+//! without spinning up real training — `rust/tests/service.rs` plugs in
+//! mock runners (instant, gated, failing) while the daemon uses
+//! [`TrainingRunner`], which is exactly the one-shot `sagips train`
+//! path ([`run_training_from_config_controlled`]) with the job's
+//! [`RunControl`] attached. One runtime per job: jobs are isolated, and
+//! a job's manifest/backend choice never leaks into the next.
+
+use std::sync::Arc;
+
+use crate::config::RunConfig;
+use crate::coordinator::launcher::run_training_from_config_controlled;
+use crate::coordinator::RunControl;
+use crate::util::error::Result;
+
+/// What a finished (or cancelled) run reports back to the scheduler.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunOutcome {
+    /// Epochs trained in total (a cancelled run: stop boundary + 1).
+    pub epochs_done: u64,
+    /// Final mean-of-last generator loss across ranks.
+    pub gen_loss: Option<f64>,
+    /// Final mean-of-last discriminator loss across ranks.
+    pub disc_loss: Option<f64>,
+    /// The checkpoint boundary the run was cancelled at (`None`: ran to
+    /// completion).
+    pub stopped_at: Option<u64>,
+}
+
+/// Runs one job's config to termination under a [`RunControl`].
+pub trait JobRunner: Send + Sync {
+    fn run(&self, cfg: &RunConfig, control: Arc<RunControl>) -> Result<RunOutcome>;
+}
+
+/// The real runner: a full training run, self-contained per job.
+pub struct TrainingRunner;
+
+impl JobRunner for TrainingRunner {
+    fn run(&self, cfg: &RunConfig, control: Arc<RunControl>) -> Result<RunOutcome> {
+        let run = run_training_from_config_controlled(cfg, Some(control))?;
+        Ok(RunOutcome {
+            epochs_done: run
+                .stopped_at
+                .map(|e| e + 1)
+                .unwrap_or(cfg.epochs as u64),
+            gen_loss: run.metrics.mean_of_last("gen_loss"),
+            disc_loss: run.metrics.mean_of_last("disc_loss"),
+            stopped_at: run.stopped_at,
+        })
+    }
+}

@@ -1,0 +1,528 @@
+//! The scheduler: multiplexes queued jobs over a shared pool of worker
+//! threads with admission control, cooperative cancellation, and
+//! reload-without-restart.
+//!
+//! # Concurrency model
+//!
+//! One OS thread per concurrency slot (`max_concurrent_jobs`). Each
+//! worker claims the next job under the queue lock *only* while the
+//! running-job gauge is below the limit, so lowering the limit on a
+//! [`Scheduler::reload`] immediately stops new claims (surplus workers
+//! idle; running jobs finish). Raising it spawns the missing workers.
+//! Each claimed job runs through the pluggable [`JobRunner`] with a
+//! fresh [`RunControl`] registered in the running map — that is the
+//! handle `cancel` uses to request a stop at the next safe checkpoint
+//! boundary.
+//!
+//! # Cancellation
+//!
+//! * queued → marked `cancelled` instantly, never starts;
+//! * running → [`RunControl::request_cancel`]; the run drains its
+//!   pipeline to quiescence at the consensus stop boundary, deposits a
+//!   final full-width run checkpoint, and the job lands in `cancelled`
+//!   with the boundary in its detail — `--resume` of the job's config
+//!   continues bit-identically (proven by `rust/tests/serve.rs`);
+//! * terminal → no-op, reported as such.
+//!
+//! A cancel that lands near the end of a run may decide a stop boundary
+//! at or past the final epoch: the run then completes normally and the
+//! job ends `done`, not `cancelled`.
+//!
+//! # Restart
+//!
+//! The queue journal re-queues jobs that were mid-run when the daemon
+//! died (`interrupted`). Before re-running one, the worker looks for
+//! the job's own newest run checkpoint and resumes from it; when the
+//! checkpoint already covers the configured epochs, the job is marked
+//! `done` without re-running ("nothing left to train").
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::config::RunConfig;
+use crate::coordinator::RunControl;
+use crate::model::checkpoint::TrainCheckpoint;
+use crate::util::error::{Error, Result};
+use crate::util::json::Value;
+
+use super::job::{Job, JobId, JobOutcome, JobSpec, JobState, JobStatus};
+use super::queue::JobQueue;
+use super::runner::{JobRunner, RunOutcome};
+
+/// Serving limits, reloadable without restart (`reload` verb).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeLimits {
+    /// Concurrency slots: jobs running at once (>= 1).
+    pub max_concurrent_jobs: usize,
+    /// Admission control: waiting jobs beyond this are refused with the
+    /// retryable `Overloaded` error (0 = unlimited).
+    pub max_queued: usize,
+    /// Checkpoint cadence assigned to jobs that submit `ckpt_every: 0`
+    /// — every admitted job needs a cadence, both for cancellation
+    /// (stops happen only at boundaries) and restart resume.
+    pub default_ckpt_every: usize,
+}
+
+impl Default for ServeLimits {
+    fn default() -> Self {
+        ServeLimits {
+            max_concurrent_jobs: 2,
+            max_queued: 64,
+            default_ckpt_every: 25,
+        }
+    }
+}
+
+impl ServeLimits {
+    /// Parse a serve-config JSON object; absent keys keep their
+    /// defaults, unknown keys are rejected to catch typos.
+    pub fn from_json(text: &str) -> Result<ServeLimits> {
+        let v = Value::parse(text)?;
+        let obj = v
+            .as_object()
+            .ok_or_else(|| Error::config("serve config root must be an object"))?;
+        let mut lim = ServeLimits::default();
+        for (k, val) in obj {
+            let n = val
+                .as_usize()
+                .ok_or_else(|| Error::config(format!("serve config '{k}' must be a number")))?;
+            match k.as_str() {
+                "max_concurrent_jobs" => lim.max_concurrent_jobs = n,
+                "max_queued" => lim.max_queued = n,
+                "default_ckpt_every" => lim.default_ckpt_every = n,
+                other => {
+                    return Err(Error::config(format!(
+                        "unknown serve config key '{other}' (max_concurrent_jobs, \
+                         max_queued, default_ckpt_every)"
+                    )))
+                }
+            }
+        }
+        lim.validate()?;
+        Ok(lim)
+    }
+
+    /// Reject shapes that would wedge the daemon.
+    pub fn validate(&self) -> Result<()> {
+        if self.max_concurrent_jobs == 0 {
+            return Err(Error::config("max_concurrent_jobs must be >= 1"));
+        }
+        if self.default_ckpt_every == 0 {
+            return Err(Error::config(
+                "default_ckpt_every must be >= 1: serve jobs need a checkpoint \
+                 cadence for cancellation and restart resume",
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// What a cancel request achieved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelOutcome {
+    /// The job was still queued: removed instantly, it never starts.
+    Dequeued,
+    /// The job is running: stop requested; it will drain and deposit a
+    /// final checkpoint at the next safe boundary (or complete normally
+    /// if none remains).
+    Stopping,
+    /// The job was already terminal; nothing to do.
+    AlreadyTerminal(JobState),
+}
+
+struct Inner {
+    queue: Mutex<JobQueue>,
+    /// Signals work availability / limit or shutdown changes; paired
+    /// with the `queue` mutex.
+    work: Condvar,
+    /// Controls of currently running jobs (cancel + live progress).
+    /// Lock order: `queue` may be held when taking `running`, never the
+    /// reverse.
+    running: Mutex<BTreeMap<JobId, Arc<RunControl>>>,
+    /// Jobs currently executing; mutated only while holding `queue`.
+    busy: AtomicUsize,
+    max_concurrent: AtomicUsize,
+    default_ckpt_every: AtomicUsize,
+    shutdown: AtomicBool,
+    state_dir: PathBuf,
+    runner: Box<dyn JobRunner>,
+}
+
+/// The job scheduler (see module docs).
+pub struct Scheduler {
+    inner: Arc<Inner>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Scheduler {
+    /// Open the journaled queue under `state_dir` (re-queueing
+    /// interrupted jobs) and start the worker pool.
+    pub fn open(
+        state_dir: &Path,
+        limits: ServeLimits,
+        runner: Box<dyn JobRunner>,
+    ) -> Result<Scheduler> {
+        limits.validate()?;
+        let queue = JobQueue::open(state_dir, limits.max_queued)?;
+        let inner = Arc::new(Inner {
+            queue: Mutex::new(queue),
+            work: Condvar::new(),
+            running: Mutex::new(BTreeMap::new()),
+            busy: AtomicUsize::new(0),
+            max_concurrent: AtomicUsize::new(limits.max_concurrent_jobs),
+            default_ckpt_every: AtomicUsize::new(limits.default_ckpt_every),
+            shutdown: AtomicBool::new(false),
+            state_dir: state_dir.to_path_buf(),
+            runner,
+        });
+        let sched = Scheduler {
+            inner,
+            workers: Mutex::new(Vec::new()),
+        };
+        sched.ensure_workers()?;
+        Ok(sched)
+    }
+
+    /// Spawn workers until one exists per concurrency slot. The pool
+    /// never shrinks — surplus workers idle when the limit drops.
+    fn ensure_workers(&self) -> Result<()> {
+        let mut workers = self.workers.lock().expect("worker list poisoned");
+        let want = self.inner.max_concurrent.load(Ordering::Acquire);
+        while workers.len() < want {
+            let inner = self.inner.clone();
+            let idx = workers.len();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("job-worker-{idx}"))
+                    .spawn(move || worker_loop(inner))
+                    .map_err(Error::Io)?,
+            );
+        }
+        Ok(())
+    }
+
+    /// Admit a job: normalize its config (per-job checkpoint dir under
+    /// the state dir, guaranteed cadence), validate, journal, enqueue.
+    pub fn submit(&self, mut spec: JobSpec) -> Result<JobId> {
+        let mut q = self.inner.queue.lock().expect("queue poisoned");
+        let id = q.next_id();
+        self.normalize(&mut spec.config, id)?;
+        let assigned = q.submit(spec)?;
+        debug_assert_eq!(assigned, id);
+        self.inner.work.notify_all();
+        Ok(assigned)
+    }
+
+    /// Per-job config normalization at admission.
+    fn normalize(&self, cfg: &mut RunConfig, id: JobId) -> Result<()> {
+        if cfg.membership.is_some() || cfg.evict_after > 0 {
+            return Err(Error::config(
+                "serve jobs do not compose with elastic membership \
+                 (membership / evict_after): the cancellation stop-boundary \
+                 consensus assumes a fixed cohort — run those one-shot via \
+                 `sagips train`",
+            ));
+        }
+        // Each job checkpoints into its own directory so cancellation,
+        // restart resume, and pruning never cross jobs.
+        cfg.ckpt_dir = self
+            .inner
+            .state_dir
+            .join(format!("job-{id:06}"))
+            .to_string_lossy()
+            .into_owned();
+        if cfg.ckpt_every == 0 {
+            let dflt = self.inner.default_ckpt_every.load(Ordering::Acquire);
+            cfg.ckpt_every = dflt.min(cfg.epochs).max(1);
+        }
+        cfg.validate()
+    }
+
+    /// Cancel a job (see [`CancelOutcome`] for the three cases).
+    pub fn cancel(&self, id: JobId) -> Result<CancelOutcome> {
+        let mut q = self.inner.queue.lock().expect("queue poisoned");
+        let state = q
+            .get(id)
+            .map(|j| j.state)
+            .ok_or_else(|| Error::config(format!("no such job: {id}")))?;
+        match state {
+            JobState::Queued => {
+                q.set_state(id, JobState::Cancelled, "cancelled while queued")?;
+                Ok(CancelOutcome::Dequeued)
+            }
+            JobState::Running => {
+                if let Some(ctl) = self
+                    .inner
+                    .running
+                    .lock()
+                    .expect("running map poisoned")
+                    .get(&id)
+                {
+                    ctl.request_cancel();
+                }
+                Ok(CancelOutcome::Stopping)
+            }
+            st => Ok(CancelOutcome::AlreadyTerminal(st)),
+        }
+    }
+
+    /// One job's status row; running jobs carry their live progress.
+    pub fn status(&self, id: JobId) -> Option<JobStatus> {
+        let q = self.inner.queue.lock().expect("queue poisoned");
+        let job = q.get(id)?;
+        Some(job.status(self.progress_of(job)))
+    }
+
+    /// Every job's status row, id order.
+    pub fn list(&self) -> Vec<JobStatus> {
+        let q = self.inner.queue.lock().expect("queue poisoned");
+        q.jobs().map(|j| j.status(self.progress_of(j))).collect()
+    }
+
+    fn progress_of(&self, job: &Job) -> Option<crate::coordinator::ProgressSnapshot> {
+        if job.state != JobState::Running {
+            return None;
+        }
+        self.inner
+            .running
+            .lock()
+            .expect("running map poisoned")
+            .get(&job.id)
+            .map(|c| c.progress())
+    }
+
+    /// The normalized config a job actually runs with.
+    pub fn job_config(&self, id: JobId) -> Option<RunConfig> {
+        self.inner
+            .queue
+            .lock()
+            .expect("queue poisoned")
+            .get(id)
+            .map(|j| j.spec.config.clone())
+    }
+
+    /// Jobs currently executing.
+    pub fn running_count(&self) -> usize {
+        self.inner.busy.load(Ordering::Acquire)
+    }
+
+    /// Jobs waiting in the queue.
+    pub fn queued_count(&self) -> usize {
+        self.inner.queue.lock().expect("queue poisoned").queued_len()
+    }
+
+    /// Apply new limits without restart: admission and concurrency take
+    /// effect immediately (the pool grows on demand; it never shrinks —
+    /// surplus workers idle).
+    pub fn reload(&self, limits: ServeLimits) -> Result<()> {
+        limits.validate()?;
+        self.inner
+            .max_concurrent
+            .store(limits.max_concurrent_jobs, Ordering::Release);
+        self.inner
+            .default_ckpt_every
+            .store(limits.default_ckpt_every, Ordering::Release);
+        self.inner
+            .queue
+            .lock()
+            .expect("queue poisoned")
+            .set_max_queued(limits.max_queued);
+        self.ensure_workers()?;
+        self.inner.work.notify_all();
+        Ok(())
+    }
+
+    /// Stop the scheduler: optionally request cancellation of every
+    /// running job (each drains and deposits a resumable checkpoint),
+    /// then join the workers. Queued jobs stay journaled for the next
+    /// daemon start.
+    pub fn shutdown(&self, cancel_running: bool) {
+        if cancel_running {
+            for ctl in self
+                .inner
+                .running
+                .lock()
+                .expect("running map poisoned")
+                .values()
+            {
+                ctl.request_cancel();
+            }
+        }
+        self.inner.shutdown.store(true, Ordering::Release);
+        self.inner.work.notify_all();
+        let mut workers = self.workers.lock().expect("worker list poisoned");
+        for h in workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Worker thread: claim → run → record, until shutdown.
+fn worker_loop(inner: Arc<Inner>) {
+    loop {
+        let job = {
+            let mut q = inner.queue.lock().expect("queue poisoned");
+            loop {
+                if inner.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                if inner.busy.load(Ordering::Acquire)
+                    < inner.max_concurrent.load(Ordering::Acquire)
+                {
+                    match q.claim_next() {
+                        Ok(Some(job)) => {
+                            inner.busy.fetch_add(1, Ordering::AcqRel);
+                            break job;
+                        }
+                        Ok(None) => {}
+                        Err(e) => {
+                            crate::log_warn!("job claim failed: {e}");
+                        }
+                    }
+                }
+                // Timed wait so shutdown and limit changes are observed
+                // even if a notify raced past us.
+                let (guard, _) = inner
+                    .work
+                    .wait_timeout(q, Duration::from_millis(100))
+                    .expect("queue poisoned");
+                q = guard;
+            }
+        };
+        run_one(&inner, job);
+    }
+}
+
+/// How a claimed job is to be executed.
+enum Prepared {
+    Run(RunConfig),
+    /// An interrupted job whose checkpoint already covers every
+    /// configured epoch: nothing left to train.
+    AlreadyComplete(u64),
+}
+
+/// Decide the config a claimed job actually runs: interrupted jobs
+/// resume from their own newest checkpoint.
+fn prepare(job: &Job) -> Result<Prepared> {
+    let mut cfg = job.spec.config.clone();
+    if job.interrupted {
+        if let Some(latest) = TrainCheckpoint::latest(Path::new(&cfg.ckpt_dir))? {
+            let epoch = checkpoint_epoch(&latest)?;
+            if epoch + 1 >= cfg.epochs as u64 {
+                return Ok(Prepared::AlreadyComplete(epoch));
+            }
+            crate::log_info!(
+                "job {}: interrupted mid-run, resuming from epoch {epoch}",
+                job.id
+            );
+            cfg.resume = Some(cfg.ckpt_dir.clone());
+        }
+    }
+    Ok(Prepared::Run(cfg))
+}
+
+/// Epoch encoded in a run-checkpoint directory name (`run_e<epoch>`).
+fn checkpoint_epoch(path: &Path) -> Result<u64> {
+    path.file_name()
+        .and_then(|n| n.to_str())
+        .and_then(|n| n.strip_prefix("run_e"))
+        .and_then(|digits| digits.parse::<u64>().ok())
+        .ok_or_else(|| {
+            Error::Checkpoint(format!(
+                "{}: not a run checkpoint directory",
+                path.display()
+            ))
+        })
+}
+
+/// Execute one claimed job and record its terminal state.
+fn run_one(inner: &Arc<Inner>, job: Job) {
+    let id = job.id;
+    let ctl = Arc::new(RunControl::new());
+    inner
+        .running
+        .lock()
+        .expect("running map poisoned")
+        .insert(id, ctl.clone());
+
+    let result: crate::util::error::Result<(RunOutcome, String)> =
+        prepare(&job).and_then(|prep| match prep {
+            Prepared::AlreadyComplete(epoch) => Ok((
+                RunOutcome {
+                    epochs_done: epoch + 1,
+                    ..RunOutcome::default()
+                },
+                format!("already complete at restart (checkpoint at epoch {epoch})"),
+            )),
+            Prepared::Run(cfg) => inner
+                .runner
+                .run(&cfg, ctl.clone())
+                .map(|out| (out, String::new())),
+        });
+
+    inner
+        .running
+        .lock()
+        .expect("running map poisoned")
+        .remove(&id);
+
+    let mut q = inner.queue.lock().expect("queue poisoned");
+    let recorded = match result {
+        Ok((out, note)) => {
+            let outcome = JobOutcome {
+                epochs_done: out.epochs_done,
+                gen_loss: out.gen_loss,
+                disc_loss: out.disc_loss,
+            };
+            match out.stopped_at {
+                Some(b) => q.finish(
+                    id,
+                    JobState::Cancelled,
+                    &format!(
+                        "cancelled at checkpoint boundary {b}; resumable from {}",
+                        job.spec.config.ckpt_dir
+                    ),
+                    outcome,
+                ),
+                None => q.finish(id, JobState::Done, &note, outcome),
+            }
+        }
+        Err(e) => q.finish(id, JobState::Failed, &e.to_string(), JobOutcome::default()),
+    };
+    if let Err(e) = recorded {
+        crate::log_warn!("job {id}: failed to journal terminal state: {e}");
+    }
+    inner.busy.fetch_sub(1, Ordering::AcqRel);
+    inner.work.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn limits_parse_with_defaults_and_reject_unknown() {
+        let lim = ServeLimits::from_json(r#"{"max_concurrent_jobs": 4}"#).unwrap();
+        assert_eq!(lim.max_concurrent_jobs, 4);
+        assert_eq!(lim.max_queued, ServeLimits::default().max_queued);
+        let lim =
+            ServeLimits::from_json(r#"{"max_queued": 0, "default_ckpt_every": 6}"#).unwrap();
+        assert_eq!(lim.max_queued, 0);
+        assert_eq!(lim.default_ckpt_every, 6);
+        assert!(ServeLimits::from_json(r#"{"max_jobs": 4}"#).is_err());
+        assert!(ServeLimits::from_json(r#"{"max_concurrent_jobs": 0}"#).is_err());
+        assert!(ServeLimits::from_json(r#"{"default_ckpt_every": 0}"#).is_err());
+        assert!(ServeLimits::from_json(r#"[]"#).is_err());
+    }
+
+    #[test]
+    fn checkpoint_epoch_parses_dir_names() {
+        use std::path::PathBuf;
+        let p = PathBuf::from("/x/job-000001").join(TrainCheckpoint::dir_name(11));
+        assert_eq!(checkpoint_epoch(&p).unwrap(), 11);
+        assert!(checkpoint_epoch(&PathBuf::from("/x/not-a-ckpt")).is_err());
+    }
+}

@@ -48,6 +48,12 @@ pub enum Error {
     /// CLI usage errors.
     #[error("usage error: {0}")]
     Usage(String),
+
+    /// Service admission control refused the request: the job queue is
+    /// at capacity. Retryable backpressure — resubmit once the daemon
+    /// drains — unlike the fatal [`Error::Config`] rejections.
+    #[error("service overloaded: {0}")]
+    Overloaded(String),
 }
 
 /// Crate-wide result alias.
@@ -84,6 +90,14 @@ impl Error {
     pub fn is_window_full(&self) -> bool {
         matches!(self, Error::WindowFull(_))
     }
+    /// Shorthand constructor for service admission refusals.
+    pub fn overloaded(msg: impl Into<String>) -> Self {
+        Error::Overloaded(msg.into())
+    }
+    /// Whether this error is a retryable service admission refusal.
+    pub fn is_overloaded(&self) -> bool {
+        matches!(self, Error::Overloaded(_))
+    }
 }
 
 #[cfg(test)]
@@ -107,6 +121,14 @@ mod tests {
         assert!(e.is_window_full());
         assert_eq!(e.to_string(), "collective window full: depth 2 reached");
         assert!(!Error::comm("ring broke").is_window_full());
+    }
+
+    #[test]
+    fn overloaded_is_distinguishable() {
+        let e = Error::overloaded("queue full (4 jobs)");
+        assert!(e.is_overloaded());
+        assert_eq!(e.to_string(), "service overloaded: queue full (4 jobs)");
+        assert!(!Error::config("bad ranks").is_overloaded());
     }
 
     #[test]

@@ -1,0 +1,417 @@
+//! Integration: the job scheduler behind `sagips serve`.
+//!
+//! Uses mock [`JobRunner`]s (instant, gated, failing) so the
+//! queue/scheduler contract is tested without real training: claim
+//! order (priority first, FIFO within), admission refusal at capacity,
+//! the cancellation matrix at the scheduler level, concurrency limits
+//! and reload, and a property test that randomized concurrent
+//! submit/cancel interleavings lose no job, duplicate no job, and leave
+//! every job in a terminal state. Real-training behaviour (checkpoint
+//! deposits, bit-identical resume) lives in `tests/serve.rs`.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use sagips::config::{presets, RunConfig};
+use sagips::coordinator::RunControl;
+use sagips::service::{
+    CancelOutcome, JobId, JobQueue, JobRunner, JobSpec, JobState, RunOutcome, Scheduler,
+    ServeLimits,
+};
+use sagips::util::error::{Error, Result};
+
+fn state_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "sagips_service_{tag}_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn spec(priority: i64) -> JobSpec {
+    let mut cfg = presets::ci_default();
+    cfg.epochs = 4;
+    JobSpec {
+        name: format!("p{priority}"),
+        priority,
+        config: cfg,
+    }
+}
+
+fn limits(max_concurrent_jobs: usize, max_queued: usize) -> ServeLimits {
+    ServeLimits {
+        max_concurrent_jobs,
+        max_queued,
+        default_ckpt_every: 2,
+    }
+}
+
+/// The job id the scheduler assigned, recovered from the per-job
+/// checkpoint directory it normalized into the config.
+fn job_id_of(cfg: &RunConfig) -> JobId {
+    let dir = PathBuf::from(&cfg.ckpt_dir);
+    let name = dir.file_name().unwrap().to_str().unwrap();
+    name.strip_prefix("job-").unwrap().parse().unwrap()
+}
+
+fn wait_until(what: &str, deadline: Duration, mut ok: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !ok() {
+        assert!(t0.elapsed() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn wait_all_terminal(sched: &Scheduler, n: usize) {
+    wait_until("all jobs terminal", Duration::from_secs(20), || {
+        let rows = sched.list();
+        rows.len() == n && rows.iter().all(|r| r.state.is_terminal())
+    });
+}
+
+/// Completes immediately (a tiny sleep keeps interleavings interesting).
+struct InstantRunner;
+
+impl JobRunner for InstantRunner {
+    fn run(&self, cfg: &RunConfig, _control: Arc<RunControl>) -> Result<RunOutcome> {
+        std::thread::sleep(Duration::from_millis(1));
+        Ok(RunOutcome {
+            epochs_done: cfg.epochs as u64,
+            ..RunOutcome::default()
+        })
+    }
+}
+
+/// Blocks every job until the shared gate opens; records execution
+/// order and the high-water concurrency mark. A cancel request releases
+/// the job as if it stopped at checkpoint boundary 5.
+struct GatedRunner {
+    open: Arc<AtomicBool>,
+    order: Arc<Mutex<Vec<JobId>>>,
+    running_now: Arc<AtomicUsize>,
+    max_seen: Arc<AtomicUsize>,
+}
+
+impl GatedRunner {
+    fn new() -> GatedRunner {
+        GatedRunner {
+            open: Arc::new(AtomicBool::new(false)),
+            order: Arc::new(Mutex::new(Vec::new())),
+            running_now: Arc::new(AtomicUsize::new(0)),
+            max_seen: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    /// Shares the same gate/recorders as `self` (the scheduler takes
+    /// ownership of its runner; the test keeps this handle).
+    fn handle(&self) -> GatedRunner {
+        GatedRunner {
+            open: self.open.clone(),
+            order: self.order.clone(),
+            running_now: self.running_now.clone(),
+            max_seen: self.max_seen.clone(),
+        }
+    }
+}
+
+impl JobRunner for GatedRunner {
+    fn run(&self, cfg: &RunConfig, control: Arc<RunControl>) -> Result<RunOutcome> {
+        let now = self.running_now.fetch_add(1, Ordering::SeqCst) + 1;
+        self.max_seen.fetch_max(now, Ordering::SeqCst);
+        self.order.lock().unwrap().push(job_id_of(cfg));
+        let cancelled = loop {
+            if control.cancel_requested() {
+                break true;
+            }
+            if self.open.load(Ordering::SeqCst) {
+                break false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        self.running_now.fetch_sub(1, Ordering::SeqCst);
+        if cancelled {
+            Ok(RunOutcome {
+                epochs_done: 6,
+                stopped_at: Some(5),
+                ..RunOutcome::default()
+            })
+        } else {
+            Ok(RunOutcome {
+                epochs_done: cfg.epochs as u64,
+                ..RunOutcome::default()
+            })
+        }
+    }
+}
+
+/// Always errors.
+struct FailingRunner;
+
+impl JobRunner for FailingRunner {
+    fn run(&self, _cfg: &RunConfig, _control: Arc<RunControl>) -> Result<RunOutcome> {
+        Err(Error::Runtime("mock runner exploded".into()))
+    }
+}
+
+#[test]
+fn claims_follow_priority_then_fifo_order() {
+    let dir = state_dir("order");
+    let runner = GatedRunner::new();
+    let handle = runner.handle();
+    let sched = Scheduler::open(&dir, limits(1, 0), Box::new(runner)).unwrap();
+
+    // First submit is claimed immediately and parks on the gate...
+    let first = sched.submit(spec(0)).unwrap();
+    wait_until("first claim", Duration::from_secs(10), || {
+        sched.running_count() == 1
+    });
+    // ...so these four queue up and are claimed strictly by
+    // (priority desc, id asc) once the gate opens.
+    let b = sched.submit(spec(0)).unwrap();
+    let c = sched.submit(spec(5)).unwrap();
+    let d = sched.submit(spec(5)).unwrap();
+    let e = sched.submit(spec(-1)).unwrap();
+    handle.open.store(true, Ordering::SeqCst);
+    wait_all_terminal(&sched, 5);
+
+    assert_eq!(*handle.order.lock().unwrap(), vec![first, c, d, b, e]);
+    assert_eq!(handle.max_seen.load(Ordering::SeqCst), 1);
+    for row in sched.list() {
+        assert_eq!(row.state, JobState::Done);
+    }
+    sched.shutdown(false);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn admission_refuses_past_the_queue_limit_with_a_retryable_error() {
+    let dir = state_dir("admission");
+    let runner = GatedRunner::new();
+    let handle = runner.handle();
+    let sched = Scheduler::open(&dir, limits(1, 2), Box::new(runner)).unwrap();
+
+    let running = sched.submit(spec(0)).unwrap();
+    wait_until("claim", Duration::from_secs(10), || {
+        sched.running_count() == 1
+    });
+    sched.submit(spec(0)).unwrap();
+    sched.submit(spec(0)).unwrap();
+    assert_eq!(sched.queued_count(), 2);
+
+    let err = sched.submit(spec(0)).unwrap_err();
+    assert!(err.is_overloaded(), "not marked retryable: {err}");
+    assert!(err.to_string().contains("overloaded"), "{err}");
+
+    // Draining the queue reopens admission.
+    handle.open.store(true, Ordering::SeqCst);
+    wait_all_terminal(&sched, 3);
+    let again = sched.submit(spec(0)).unwrap();
+    assert!(again > running);
+    wait_all_terminal(&sched, 4);
+    sched.shutdown(false);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cancel_while_queued_never_starts() {
+    let dir = state_dir("cancel_queued");
+    let runner = GatedRunner::new();
+    let handle = runner.handle();
+    let sched = Scheduler::open(&dir, limits(1, 0), Box::new(runner)).unwrap();
+
+    let blocker = sched.submit(spec(0)).unwrap();
+    wait_until("claim", Duration::from_secs(10), || {
+        sched.running_count() == 1
+    });
+    let victim = sched.submit(spec(0)).unwrap();
+    assert_eq!(sched.cancel(victim).unwrap(), CancelOutcome::Dequeued);
+    // Cancelling a terminal job is a reported no-op.
+    assert_eq!(
+        sched.cancel(victim).unwrap(),
+        CancelOutcome::AlreadyTerminal(JobState::Cancelled)
+    );
+
+    handle.open.store(true, Ordering::SeqCst);
+    wait_all_terminal(&sched, 2);
+    assert_eq!(
+        *handle.order.lock().unwrap(),
+        vec![blocker],
+        "the cancelled job must never reach the runner"
+    );
+    let st = sched.status(victim).unwrap();
+    assert_eq!(st.state, JobState::Cancelled);
+    assert_eq!(st.epochs_done, 0);
+    assert!(st.detail.contains("queued"), "{}", st.detail);
+    sched.shutdown(false);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cancel_while_running_lands_cancelled_with_the_stop_boundary() {
+    let dir = state_dir("cancel_running");
+    let runner = GatedRunner::new();
+    let sched = Scheduler::open(&dir, limits(1, 0), Box::new(runner)).unwrap();
+
+    let id = sched.submit(spec(0)).unwrap();
+    wait_until("claim", Duration::from_secs(10), || {
+        sched.running_count() == 1
+    });
+    assert_eq!(sched.cancel(id).unwrap(), CancelOutcome::Stopping);
+    wait_all_terminal(&sched, 1);
+
+    let st = sched.status(id).unwrap();
+    assert_eq!(st.state, JobState::Cancelled);
+    assert_eq!(st.epochs_done, 6);
+    assert!(st.detail.contains("boundary 5"), "{}", st.detail);
+    assert!(st.detail.contains("job-000001"), "{}", st.detail);
+    sched.shutdown(false);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn runner_errors_land_the_job_in_failed_with_the_message() {
+    let dir = state_dir("failed");
+    let sched = Scheduler::open(&dir, limits(1, 0), Box::new(FailingRunner)).unwrap();
+    let id = sched.submit(spec(0)).unwrap();
+    wait_all_terminal(&sched, 1);
+    let st = sched.status(id).unwrap();
+    assert_eq!(st.state, JobState::Failed);
+    assert!(st.detail.contains("mock runner exploded"), "{}", st.detail);
+    sched.shutdown(false);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn reload_raises_concurrency_without_restart() {
+    let dir = state_dir("reload");
+    let runner = GatedRunner::new();
+    let handle = runner.handle();
+    let sched = Scheduler::open(&dir, limits(1, 0), Box::new(runner)).unwrap();
+
+    for _ in 0..3 {
+        sched.submit(spec(0)).unwrap();
+    }
+    wait_until("one claim", Duration::from_secs(10), || {
+        sched.running_count() == 1
+    });
+    // The single slot is saturated; the other two jobs stay queued.
+    std::thread::sleep(Duration::from_millis(50));
+    assert_eq!(sched.running_count(), 1);
+    assert_eq!(sched.queued_count(), 2);
+
+    sched
+        .reload(ServeLimits {
+            max_concurrent_jobs: 3,
+            ..limits(1, 0)
+        })
+        .unwrap();
+    wait_until("three claims", Duration::from_secs(10), || {
+        sched.running_count() == 3
+    });
+    handle.open.store(true, Ordering::SeqCst);
+    wait_all_terminal(&sched, 3);
+    assert_eq!(handle.max_seen.load(Ordering::SeqCst), 3);
+    sched.shutdown(false);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn elastic_membership_configs_are_refused_at_submit() {
+    let dir = state_dir("elastic");
+    let sched = Scheduler::open(&dir, limits(1, 0), Box::new(InstantRunner)).unwrap();
+    let mut s = spec(0);
+    s.config.membership = Some("leave:1@2".into());
+    let err = sched.submit(s).unwrap_err().to_string();
+    assert!(err.contains("elastic membership"), "{err}");
+    let mut s = spec(0);
+    s.config.evict_after = 3;
+    s.config.exchange_timeout_ms = 50;
+    let err = sched.submit(s).unwrap_err().to_string();
+    assert!(err.contains("elastic membership"), "{err}");
+    // Refused submits burn no ids and journal nothing.
+    assert_eq!(sched.list().len(), 0);
+    sched.shutdown(false);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn randomized_concurrent_submit_cancel_interleavings_lose_no_job() {
+    // Property: whatever the interleaving of submits and cancels across
+    // threads, every submitted job keeps exactly one record and ends in
+    // a terminal state — none lost, none duplicated, none stuck — and
+    // the journal replays to the same terminal picture.
+    let counter = AtomicUsize::new(0);
+    sagips::util::proptest::run("submit/cancel interleavings", 10, |g| {
+        let case = counter.fetch_add(1, Ordering::SeqCst);
+        let n_jobs = g.usize_in(3..=8);
+        let max_concurrent = g.usize_in(1..=3);
+        let priorities: Vec<i64> =
+            (0..n_jobs).map(|_| g.usize_in(0..=4) as i64 - 2).collect();
+        let cancels: Vec<JobId> = (1..=n_jobs as JobId)
+            .filter(|_| g.bool())
+            .collect();
+
+        let dir = state_dir(&format!("prop{case}"));
+        let sched = Arc::new(
+            Scheduler::open(&dir, limits(max_concurrent, 0), Box::new(InstantRunner))
+                .unwrap(),
+        );
+
+        let submitter = {
+            let sched = sched.clone();
+            std::thread::spawn(move || {
+                for p in priorities {
+                    let mut s = spec(p);
+                    s.name = format!("prop-{p}");
+                    sched.submit(s).unwrap();
+                }
+            })
+        };
+        let canceller = {
+            let sched = sched.clone();
+            std::thread::spawn(move || {
+                for id in cancels {
+                    // Racing ahead of the submitter ("no such job") or
+                    // behind the runner (already terminal) are both
+                    // legitimate outcomes here.
+                    let _ = sched.cancel(id);
+                }
+            })
+        };
+        submitter.join().unwrap();
+        canceller.join().unwrap();
+        wait_all_terminal(&sched, n_jobs);
+
+        let rows = sched.list();
+        let ids: Vec<JobId> = rows.iter().map(|r| r.id).collect();
+        assert_eq!(
+            ids,
+            (1..=n_jobs as JobId).collect::<Vec<_>>(),
+            "exactly one record per submitted job"
+        );
+        for r in &rows {
+            assert!(
+                matches!(r.state, JobState::Done | JobState::Cancelled),
+                "job {} ended {:?}",
+                r.id,
+                r.state
+            );
+        }
+
+        // The journal replays to the same terminal picture.
+        let before: Vec<(JobId, JobState)> =
+            rows.iter().map(|r| (r.id, r.state)).collect();
+        match Arc::try_unwrap(sched) {
+            Ok(s) => s.shutdown(false),
+            Err(_) => panic!("scheduler still shared after joins"),
+        }
+        let replayed = JobQueue::open(&dir, 0).unwrap();
+        let after: Vec<(JobId, JobState)> =
+            replayed.jobs().map(|j| (j.id, j.state)).collect();
+        assert_eq!(after, before);
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
