@@ -3,107 +3,237 @@
 //! RMA window put/get, fusion pack/unpack. These are the L3 §Perf
 //! numbers (DESIGN.md §Collective engine) tracked by BENCH_*.json
 //! snapshots.
+//!
+//! Runs under a counting `#[global_allocator]` so the pooled exchange
+//! path's memory discipline (DESIGN.md §Memory discipline) is a measured
+//! number, not prose: each pass row reports *allocations per steady-state
+//! epoch across all ranks* — warmup epochs size the shared
+//! [`BufferPool`] and the transport queues, after which the column must
+//! read zero. Emits `BENCH_collective.json` with one row per (mode, n)
+//! including the `allocs_per_epoch` column CI asserts on.
+//!
+//! `SAGIPS_BENCH_BUDGET_MS` scales the iteration counts down so CI smoke
+//! runs finish in milliseconds while still exercising every row.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
 use sagips::collective::engine::CollectiveEngine;
 use sagips::collective::ring::{chunked_pass_bytes, chunked_ring_pass, ring_pass, ConvArar};
 use sagips::collective::rma_ring::RmaRing;
 use sagips::collective::Collective;
-use sagips::comm::{GradMsg, LinkModel, LocalNetwork, RmaRegion, RmaWindow, Topology};
+use sagips::comm::{
+    BufferPool, GradMsg, LinkModel, LocalNetwork, RmaRegion, RmaWindow, Topology,
+};
 use sagips::tensor::fusion::{segments_from_layout, FusionPlan};
-use sagips::util::bench::{bench, bench_for, header};
+use sagips::util::bench::{bench, bench_for, fmt_dur, header};
+use sagips::util::json::Value;
+
+/// Counting allocator: proves the steady-state exchange path is
+/// allocation-free instead of asserting it in prose.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::SeqCst)
+}
 
 /// Paper-sized gradient payload (~51k weight gradients).
 const GRAD: usize = 51_206;
 
-fn bench_ring_pass(n: usize) {
-    // n threads run one collective epoch repeatedly; measure on rank 0.
-    let topo = Topology::new(n, 4);
-    let eps = LocalNetwork::build(&topo, LinkModel::zero());
-    let members: Vec<usize> = (0..n).collect();
-    let iters = 300usize;
-    let mut handles = Vec::new();
-    for ep in eps {
-        let members = members.clone();
-        handles.push(std::thread::spawn(move || {
-            let mut grads = vec![1.0f32; GRAD];
-            let mut scratch = Vec::new();
-            let rank = ep.rank;
-            let t0 = Instant::now();
-            for e in 0..iters {
-                ring_pass(&ep, &members, e as u64, &mut grads, &mut scratch).unwrap();
-            }
-            if rank == 0 {
-                Some(t0.elapsed() / iters as u32)
-            } else {
-                None
-            }
-        }));
-    }
-    for h in handles {
-        if let Some(d) = h.join().unwrap() {
-            println!(
-                "{:<44} {:>10}",
-                format!("ring_pass n={n} ({GRAD} f32, unchunked)"),
-                sagips::util::bench::fmt_dur(d)
-            );
-        }
+/// Warmup epochs before the allocation window opens: enough for the pool
+/// and the transport queues to reach their high-water marks.
+const WARMUP: usize = 8;
+
+/// Scale an iteration count to the `SAGIPS_BENCH_BUDGET_MS` budget
+/// (default 2000 ms keeps the full counts).
+fn scaled(default: usize) -> usize {
+    let ms = std::env::var("SAGIPS_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(2000);
+    if ms >= 2000 {
+        default
+    } else {
+        ((default as u64 * ms.max(1) / 2000).max(8)) as usize
     }
 }
 
-/// Chunked vs unchunked ring pass at a given size: latency on rank 0 plus
-/// the per-rank byte counts (the 2·(N-1)/N vs N-1 law made concrete).
-fn bench_chunked_vs_unchunked(n: usize) {
-    let iters = if n >= 32 { 60usize } else { 150usize };
-    for chunked in [false, true] {
-        let topo = Topology::new(n, 4);
-        let eps = LocalNetwork::build(&topo, LinkModel::zero());
-        let members: Vec<usize> = (0..n).collect();
-        let mut handles = Vec::new();
-        for ep in eps {
-            let members = members.clone();
-            handles.push(std::thread::spawn(move || {
-                let mut grads = vec![1.0f32; GRAD];
-                let mut scratch = Vec::new();
-                let mut pool = Vec::new();
-                let rank = ep.rank;
+/// One measured pass configuration: rank-0 per-epoch latency, the final
+/// epoch's per-rank wire bytes, and process-wide allocations per
+/// steady-state epoch (all ranks, warmup excluded).
+struct PassReport {
+    per_epoch: Duration,
+    bytes_per_rank: usize,
+    allocs_per_epoch: f64,
+    iters: usize,
+}
+
+/// Drive `steppers[rank]` for `WARMUP + iters` epochs each on its own
+/// thread, with barriers fencing an allocation-count window around the
+/// measured epochs. Thread spawn/join and result boxing allocate, so the
+/// window closes strictly before any thread exits.
+fn measure_pass(
+    steppers: Vec<Box<dyn FnMut(u64) -> usize + Send>>,
+    iters: usize,
+) -> PassReport {
+    let n = steppers.len();
+    let barrier = Arc::new(Barrier::new(n));
+    let start = Arc::new(AtomicU64::new(0));
+    let end = Arc::new(AtomicU64::new(0));
+    let handles: Vec<_> = steppers
+        .into_iter()
+        .enumerate()
+        .map(|(rank, mut step)| {
+            let barrier = Arc::clone(&barrier);
+            let start = Arc::clone(&start);
+            let end = Arc::clone(&end);
+            std::thread::spawn(move || {
+                let mut epoch = 0u64;
                 let mut bytes = 0usize;
-                let t0 = Instant::now();
-                for e in 0..iters {
-                    let s = if chunked {
-                        chunked_ring_pass(&ep, &members, e as u64, &mut grads, &mut pool, 0)
-                            .unwrap()
-                    } else {
-                        ring_pass(&ep, &members, e as u64, &mut grads, &mut scratch).unwrap()
-                    };
-                    bytes = s.bytes_sent;
+                for _ in 0..WARMUP {
+                    bytes = step(epoch);
+                    epoch += 1;
                 }
+                barrier.wait();
                 if rank == 0 {
-                    Some((t0.elapsed() / iters as u32, bytes))
-                } else {
-                    None
+                    start.store(allocs(), Ordering::SeqCst);
                 }
-            }));
-        }
-        for h in handles {
-            if let Some((d, bytes)) = h.join().unwrap() {
-                let label = if chunked { "chunked" } else { "unchunked" };
-                println!(
-                    "{:<44} {:>10}   {:>9} B/rank/epoch",
-                    format!("ring n={n} {label}"),
-                    sagips::util::bench::fmt_dur(d),
-                    bytes
-                );
-            }
+                barrier.wait();
+                let t0 = Instant::now();
+                for _ in 0..iters {
+                    bytes = step(epoch);
+                    epoch += 1;
+                }
+                let took = t0.elapsed();
+                barrier.wait();
+                if rank == 0 {
+                    end.store(allocs(), Ordering::SeqCst);
+                }
+                // Hold every thread until the window is closed: exits
+                // allocate (JoinHandle packaging) and must not leak into
+                // the measured count.
+                barrier.wait();
+                (rank, took, bytes)
+            })
+        })
+        .collect();
+    let mut per_epoch = Duration::ZERO;
+    let mut bytes_per_rank = 0usize;
+    for h in handles {
+        let (rank, took, bytes) = h.join().unwrap();
+        if rank == 0 {
+            per_epoch = took / iters as u32;
+            bytes_per_rank = bytes;
         }
     }
+    let delta = end.load(Ordering::SeqCst) - start.load(Ordering::SeqCst);
+    PassReport {
+        per_epoch,
+        bytes_per_rank,
+        allocs_per_epoch: delta as f64 / iters as f64,
+        iters,
+    }
+}
+
+fn report_row(label: &str, r: &PassReport) {
     println!(
-        "{:<44} {:>10}   {:>9} B (2(N-1)/N law)",
-        format!("ring n={n} chunked expected bytes"),
-        "",
-        chunked_pass_bytes(GRAD, n)
+        "{:<44} {:>10}   {:>9} B/rank/epoch   {:>6.1} allocs/epoch",
+        label,
+        fmt_dur(r.per_epoch),
+        r.bytes_per_rank,
+        r.allocs_per_epoch
     );
+}
+
+fn json_row(mode: &str, n: usize, chunked: bool, r: &PassReport) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("mode".into(), Value::String(mode.into()));
+    m.insert("n".into(), Value::Number(n as f64));
+    m.insert("chunked".into(), Value::Bool(chunked));
+    m.insert("grad_elems".into(), Value::Number(GRAD as f64));
+    m.insert(
+        "per_epoch_us".into(),
+        Value::Number(r.per_epoch.as_secs_f64() * 1e6),
+    );
+    m.insert(
+        "bytes_per_rank_epoch".into(),
+        Value::Number(r.bytes_per_rank as f64),
+    );
+    m.insert(
+        "allocs_per_epoch".into(),
+        Value::Number(r.allocs_per_epoch),
+    );
+    m.insert("iters".into(), Value::Number(r.iters as f64));
+    Value::Object(m)
+}
+
+/// Transport ring pass (chunked or not) over one shared pool — the
+/// production wiring (`build_with_policy` shares a pool run-wide).
+fn bench_ring(n: usize, chunked: bool, iters: usize, rows: &mut Vec<Value>) {
+    let topo = Topology::new(n, 4);
+    let eps = LocalNetwork::build(&topo, LinkModel::zero());
+    let members: Vec<usize> = (0..n).collect();
+    let pool = BufferPool::new();
+    let steppers: Vec<Box<dyn FnMut(u64) -> usize + Send>> = eps
+        .into_iter()
+        .map(|ep| {
+            let members = members.clone();
+            let pool = pool.clone();
+            let mut grads = vec![1.0f32; GRAD];
+            Box::new(move |e: u64| {
+                let s = if chunked {
+                    chunked_ring_pass(&ep, &members, e, &mut grads, &pool, 0).unwrap()
+                } else {
+                    ring_pass(&ep, &members, e, &mut grads, &pool).unwrap()
+                };
+                s.bytes_sent
+            }) as Box<dyn FnMut(u64) -> usize + Send>
+        })
+        .collect();
+    let r = measure_pass(steppers, iters);
+    let label = if chunked { "chunked" } else { "unchunked" };
+    report_row(&format!("ring n={n} {label} ({GRAD} f32)"), &r);
+    rows.push(json_row("ring", n, chunked, &r));
+}
+
+/// RMA ring pass: windows + pooled deposits, one shared pool.
+fn bench_rma_ring(n: usize, iters: usize, rows: &mut Vec<Value>) {
+    let region = RmaRegion::with_capacity(n, 4);
+    let pool = BufferPool::new();
+    let steppers: Vec<Box<dyn FnMut(u64) -> usize + Send>> = (0..n)
+        .map(|rank| {
+            let mut ring = RmaRing::new(&region, (0..n).collect(), rank).unwrap();
+            ring.pool = pool.clone();
+            let mut grads = vec![1.0f32; GRAD];
+            Box::new(move |e: u64| ring.pass(e, &mut grads).unwrap().bytes_sent)
+                as Box<dyn FnMut(u64) -> usize + Send>
+        })
+        .collect();
+    let r = measure_pass(steppers, iters);
+    report_row(&format!("rma_ring n={n} ({GRAD} f32)"), &r);
+    rows.push(json_row("rma", n, false, &r));
 }
 
 /// Synthetic compute load standing in for a gan_step execution.
@@ -120,7 +250,7 @@ fn fake_compute(us: u64) {
 /// (the acceptance metric: `comm_s` on the rank hot path must drop).
 fn bench_overlap_vs_blocking(n: usize) {
     const COMPUTE_US: u64 = 400;
-    let iters = 120usize;
+    let iters = scaled(120);
     for overlap in [false, true] {
         let topo = Topology::new(n, 4);
         let eps = LocalNetwork::build(&topo, LinkModel::zero());
@@ -174,8 +304,8 @@ fn bench_overlap_vs_blocking(n: usize) {
                 println!(
                     "{:<44} {:>10}   hot comm_s {:>10}",
                     format!("trainer n={n} {label} (compute {COMPUTE_US}µs)"),
-                    sagips::util::bench::fmt_dur(epoch_d),
-                    sagips::util::bench::fmt_dur(comm_d)
+                    fmt_dur(epoch_d),
+                    fmt_dur(comm_d)
                 );
             }
         }
@@ -184,6 +314,7 @@ fn bench_overlap_vs_blocking(n: usize) {
 
 fn main() {
     header("collective micro-benches (L3 hot path)");
+    let mut rows: Vec<Value> = Vec::new();
 
     // RMA window put/get on paper-sized payloads.
     let w = RmaWindow::new(4);
@@ -194,49 +325,27 @@ fn main() {
     });
     println!("{}", r.row());
 
-    // RMA ring pass, 4 ranks on threads.
-    {
-        let region = RmaRegion::with_capacity(4, 4);
-        let rings: Vec<RmaRing> = (0..4)
-            .map(|r| RmaRing::new(&region, vec![0, 1, 2, 3], r).unwrap())
-            .collect();
-        let iters = 300;
-        let handles: Vec<_> = rings
-            .into_iter()
-            .map(|mut ring| {
-                std::thread::spawn(move || {
-                    let mut grads = vec![1.0f32; GRAD];
-                    let t0 = std::time::Instant::now();
-                    for e in 0..iters {
-                        ring.pass(e, &mut grads).unwrap();
-                    }
-                    (ring.rank, t0.elapsed() / iters as u32)
-                })
-            })
-            .collect();
-        for h in handles {
-            let (rank, d) = h.join().unwrap();
-            if rank == 0 {
-                println!(
-                    "{:<44} {:>10}",
-                    "rma_ring pass n=4 (51k f32)",
-                    sagips::util::bench::fmt_dur(d)
-                );
-            }
-        }
-    }
-
-    // Transport ring passes at paper-relevant ring sizes.
+    // Transport ring passes at paper-relevant ring sizes, unchunked and
+    // chunked, each reporting wire bytes and steady-state allocations.
+    println!();
     for n in [2, 4, 8, 16] {
-        bench_ring_pass(n);
+        bench_ring(n, false, scaled(300), &mut rows);
     }
-
-    // Chunked vs unchunked and overlap vs blocking at 8/16/32 simulated
-    // ranks — the collective-engine comparison rows.
     println!();
     for n in [8, 16, 32] {
-        bench_chunked_vs_unchunked(n);
+        bench_ring(n, true, scaled(100), &mut rows);
+        println!(
+            "{:<44} {:>10}   {:>9} B (2(N-1)/N law)",
+            format!("ring n={n} chunked expected bytes"),
+            "",
+            chunked_pass_bytes(GRAD, n)
+        );
     }
+
+    // RMA ring pass over pooled window deposits.
+    println!();
+    bench_rma_ring(4, scaled(300), &mut rows);
+
     println!();
     for n in [8, 16, 32] {
         bench_overlap_vs_blocking(n);
@@ -261,4 +370,14 @@ fn main() {
         plan.unpack(&packed, &mut out).unwrap();
     });
     println!("{}", r.row());
+
+    // --- BENCH_collective.json: the memory-discipline artifact ---
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Value::String("micro_collective".into()));
+    doc.insert("grad_elems".into(), Value::Number(GRAD as f64));
+    doc.insert("warmup_epochs".into(), Value::Number(WARMUP as f64));
+    doc.insert("rows".into(), Value::Array(rows));
+    let json = Value::Object(doc).to_json_pretty();
+    std::fs::write("BENCH_collective.json", &json).expect("write BENCH_collective.json");
+    println!("\nwrote BENCH_collective.json");
 }

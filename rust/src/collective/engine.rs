@@ -28,11 +28,11 @@
 //! (submit + wait, refused while other exchanges are in flight), so it is
 //! a drop-in replacement anywhere a collective is expected.
 
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::thread::JoinHandle;
 
 use super::{Collective, CommStats, ParkedReduce};
-use crate::comm::MembershipView;
+use crate::comm::channel::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use crate::comm::{BufferPool, MembershipView};
 use crate::util::error::{Error, Result};
 
 enum Job {
@@ -59,6 +59,10 @@ pub struct CollectiveEngine {
     /// Maximum exchanges in flight (submitted + parked) at once.
     window: usize,
     inner_name: &'static str,
+    /// The inner collective's buffer pool, captured before the collective
+    /// moves to the worker. Lets the blocking facade loan pooled buffers
+    /// instead of `to_vec()`, and lets `drain()` trim at quiescence.
+    pool: Option<BufferPool>,
     parked: ParkedReduce,
 }
 
@@ -77,6 +81,7 @@ impl CollectiveEngine {
         window: usize,
     ) -> Result<CollectiveEngine> {
         let inner_name = inner.name();
+        let pool = inner.buffer_pool();
         let (job_tx, job_rx) = channel::<Job>();
         let (done_tx, done_rx) = channel::<Result<Done>>();
         let worker = std::thread::Builder::new()
@@ -107,6 +112,7 @@ impl CollectiveEngine {
             submitted: 0,
             window: window.max(1),
             inner_name,
+            pool,
             parked: ParkedReduce::default(),
         })
     }
@@ -141,9 +147,23 @@ impl Collective for CollectiveEngine {
                 "epoch_reduce called with exchanges still in flight — drain() first",
             ));
         }
-        self.start_reduce(epoch, grads.to_vec())?;
-        let (buf, stats) = self.wait_reduce()?;
+        // Loan a pooled buffer for the round trip instead of `to_vec()`:
+        // checkout here, recycle once the averaged copy is applied, so the
+        // blocking path is as allocation-free as the windowed one.
+        let mut pool_stats = CommStats::default();
+        let buf = match &self.pool {
+            Some(pool) => pool.checkout_filled(grads, &mut pool_stats),
+            None => grads.to_vec(),
+        };
+        self.start_reduce(epoch, buf)?;
+        let (buf, mut stats) = self.wait_reduce()?;
         grads.copy_from_slice(&buf);
+        if let Some(pool) = &self.pool {
+            pool.recycle(buf, &mut pool_stats);
+        }
+        stats.allocs += pool_stats.allocs;
+        stats.pool_hits += pool_stats.pool_hits;
+        stats.bytes_recycled += pool_stats.bytes_recycled;
         Ok(stats)
     }
 
@@ -217,6 +237,11 @@ impl Collective for CollectiveEngine {
         while self.submitted > 0 {
             out.push(self.recv_one()?);
         }
+        // Quiescence is the natural trim point: nothing is in flight, so
+        // the pool's high-water marks reflect a full window's demand.
+        if let Some(pool) = &self.pool {
+            pool.trim();
+        }
         Ok(out)
     }
 
@@ -243,6 +268,10 @@ impl Collective for CollectiveEngine {
             .map_err(|_| Error::comm("collective engine worker died"))?;
         ack.map(|_| ())
     }
+
+    fn buffer_pool(&self) -> Option<BufferPool> {
+        self.pool.clone()
+    }
 }
 
 impl Drop for CollectiveEngine {
@@ -259,12 +288,12 @@ impl Drop for CollectiveEngine {
             let left = deadline.saturating_duration_since(std::time::Instant::now());
             match self.done_rx.recv_timeout(left) {
                 Ok(_) => self.submitted -= 1,
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                Err(RecvTimeoutError::Timeout) => {
                     finished = false;
                     break;
                 }
                 // Worker already exited; nothing more will arrive.
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
             }
         }
         if finished {

@@ -20,7 +20,7 @@
 use super::ring::{chunked_ring_pass, ring_pass};
 use super::rma_ring::RmaRing;
 use super::{Collective, CommStats, ParkedReduce};
-use crate::comm::{Endpoint, MembershipView, RmaRegion, Topology};
+use crate::comm::{BufferPool, Endpoint, MembershipView, RmaRegion, Topology};
 use crate::config::ChunkPolicy;
 use crate::util::error::{Error, Result};
 
@@ -35,21 +35,20 @@ pub fn is_outer_epoch(epoch: u64, outer_freq: usize) -> bool {
     outer_freq > 0 && (epoch + 1) % outer_freq as u64 == 0
 }
 
-/// Run one ring pass over `members` with the given chunk policy.
-#[allow(clippy::too_many_arguments)]
+/// Run one ring pass over `members` with the given chunk policy, drawing
+/// payload buffers from `pool`.
 fn policy_pass(
     ep: &Endpoint,
     members: &[usize],
     epoch: u64,
     grads: &mut [f32],
     policy: ChunkPolicy,
-    scratch: &mut Vec<f32>,
-    pool: &mut Vec<Vec<f32>>,
+    pool: &BufferPool,
 ) -> Result<CommStats> {
     if policy.is_chunked() {
         chunked_ring_pass(ep, members, epoch, grads, pool, policy.max_message_elems())
     } else {
-        ring_pass(ep, members, epoch, grads, scratch)
+        ring_pass(ep, members, epoch, grads, pool)
     }
 }
 
@@ -61,8 +60,7 @@ pub struct GroupedArar {
     is_outer: bool,
     outer_freq: usize,
     policy: ChunkPolicy,
-    scratch: Vec<f32>,
-    pool: Vec<Vec<f32>>,
+    pool: BufferPool,
     parked: ParkedReduce,
 }
 
@@ -80,11 +78,16 @@ impl GroupedArar {
             is_outer: topo.is_outer_member(rank),
             outer_freq,
             policy,
-            scratch: Vec::new(),
-            pool: Vec::new(),
+            pool: BufferPool::new(),
             parked: ParkedReduce::default(),
             ep,
         }
+    }
+
+    /// Share a run-wide buffer pool (see [`super::build_with_policy`]).
+    pub fn with_pool(mut self, pool: BufferPool) -> GroupedArar {
+        self.pool = pool;
+        self
     }
 }
 
@@ -97,8 +100,7 @@ impl Collective for GroupedArar {
             epoch,
             grads,
             self.policy,
-            &mut self.scratch,
-            &mut self.pool,
+            &self.pool,
         )?;
         // Outer-group ring every h epochs, members only.
         if self.is_outer && is_outer_epoch(epoch, self.outer_freq) {
@@ -108,8 +110,7 @@ impl Collective for GroupedArar {
                 epoch,
                 grads,
                 self.policy,
-                &mut self.scratch,
-                &mut self.pool,
+                &self.pool,
             )?;
             stats.merge(&outer);
         }
@@ -142,6 +143,10 @@ impl Collective for GroupedArar {
         self.is_outer = topo.is_outer_member_live(rank, view);
         Ok(())
     }
+
+    fn buffer_pool(&self) -> Option<BufferPool> {
+        Some(self.pool.clone())
+    }
 }
 
 /// RMA-ARAR-ARAR: RMA windows for the inner ring, transport for the outer.
@@ -156,8 +161,7 @@ pub struct RmaGroupedArar {
     is_outer: bool,
     outer_freq: usize,
     policy: ChunkPolicy,
-    scratch: Vec<f32>,
-    pool: Vec<Vec<f32>>,
+    pool: BufferPool,
     parked: ParkedReduce,
 }
 
@@ -181,6 +185,7 @@ impl RmaGroupedArar {
         policy: ChunkPolicy,
     ) -> Result<RmaGroupedArar> {
         let inner = RmaRing::new(region, topo.inner_group(rank), rank)?;
+        let pool = inner.pool.clone();
         Ok(RmaGroupedArar {
             inner,
             region: region.clone(),
@@ -188,11 +193,18 @@ impl RmaGroupedArar {
             is_outer: topo.is_outer_member(rank),
             outer_freq,
             policy,
-            scratch: Vec::new(),
-            pool: Vec::new(),
+            pool,
             parked: ParkedReduce::default(),
             ep,
         })
+    }
+
+    /// Share a run-wide buffer pool across the outer ring *and* the inner
+    /// RMA ring (see [`super::build_with_policy`]).
+    pub fn with_pool(mut self, pool: BufferPool) -> RmaGroupedArar {
+        self.inner.pool = pool.clone();
+        self.pool = pool;
+        self
     }
 }
 
@@ -211,8 +223,7 @@ impl Collective for RmaGroupedArar {
                 epoch,
                 grads,
                 self.policy,
-                &mut self.scratch,
-                &mut self.pool,
+                &self.pool,
             )?;
             stats.merge(&outer);
         }
@@ -239,14 +250,20 @@ impl Collective for RmaGroupedArar {
             return Ok(());
         }
         // Rebuild the inner RMA ring over the node's live subset from the
-        // shared region handle; the outer ring stays transport-based.
+        // shared region handle; the outer ring stays transport-based, and
+        // the rebuilt ring keeps drawing from the shared pool.
         let timeout = self.inner.get_timeout;
         let mut inner = RmaRing::new(&self.region, topo.inner_group_live(rank, view), rank)?;
         inner.get_timeout = timeout;
+        inner.pool = self.pool.clone();
         self.inner = inner;
         self.outer_members = topo.outer_group_live(view);
         self.is_outer = topo.is_outer_member_live(rank, view);
         Ok(())
+    }
+
+    fn buffer_pool(&self) -> Option<BufferPool> {
+        Some(self.pool.clone())
     }
 }
 

@@ -10,12 +10,18 @@
 //!
 //! The paper's grouping differs exactly here: no step 3 (no broadcast, no
 //! master), and step 2 runs only every `h` epochs.
+//!
+//! The broadcast fans one [`Payload::Shared`] slice out to every node
+//! member — a single allocation per epoch instead of one full gradient
+//! clone per receiver; contributions travel as pooled buffers the master
+//! recycles on receipt.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::ring::ring_pass;
 use super::{Collective, CommStats, ParkedReduce};
-use crate::comm::{Endpoint, GradMsg};
+use crate::comm::{BufferPool, Endpoint, GradMsg, Payload};
 use crate::tensor::ops;
 use crate::util::error::Result;
 
@@ -26,7 +32,7 @@ pub struct Hierarchical {
     masters: Vec<usize>,
     my_master: usize,
     is_master: bool,
-    scratch: Vec<f32>,
+    pool: BufferPool,
     parked: ParkedReduce,
 }
 
@@ -41,10 +47,19 @@ impl Hierarchical {
             node_members,
             my_master,
             is_master: topo.is_outer_member(rank),
-            scratch: Vec::new(),
+            pool: BufferPool::new(),
             parked: ParkedReduce::default(),
             ep,
         }
+    }
+
+    /// Share a run-wide buffer pool (see [`super::build_with_policy`]).
+    /// Sharing matters doubly here: the master/member buffer flows are
+    /// asymmetric per rank (members check out contributions the master
+    /// recycles) and only balance across the whole node.
+    pub fn with_pool(mut self, pool: BufferPool) -> Hierarchical {
+        self.pool = pool;
+        self
     }
 }
 
@@ -56,7 +71,8 @@ impl Collective for Hierarchical {
         };
         let n_local = self.node_members.len();
         if self.is_master {
-            // Step 1: accumulate the node's gradients.
+            // Step 1: accumulate the node's gradients, recycling each
+            // contribution buffer after it is applied.
             for &r in &self.node_members {
                 if r == self.ep.rank {
                     continue;
@@ -66,38 +82,48 @@ impl Collective for Hierarchical {
                 stats.wait_s += t0.elapsed().as_secs_f64();
                 ops::add_assign(grads, &msg.data);
                 stats.contributions += 1;
+                self.pool.recycle_payload(msg.data, &mut stats);
             }
             // Average within the node before the inter-node ring so the
             // ring averages node-means (same weighting as the paper's
             // inner/outer scheme).
             ops::scale(grads, 1.0 / n_local as f32);
             // Step 2: ring among masters.
-            let ring_stats = ring_pass(&self.ep, &self.masters, epoch, grads, &mut self.scratch)?;
+            let ring_stats = ring_pass(&self.ep, &self.masters, epoch, grads, &self.pool)?;
             stats.merge(&ring_stats);
-            // Step 3: broadcast back into the node.
-            for &r in &self.node_members {
-                if r == self.ep.rank {
-                    continue;
+            // Step 3: broadcast back into the node — one shared slice
+            // fanned out to every receiver (each isend clones the Arc,
+            // not the gradient). Per-receiver wire accounting stands:
+            // each link still carries the full payload.
+            if n_local > 1 {
+                let shared: Arc<[f32]> = Arc::from(&*grads);
+                for &r in &self.node_members {
+                    if r == self.ep.rank {
+                        continue;
+                    }
+                    self.ep.isend(
+                        r,
+                        GradMsg::new(self.ep.rank, epoch, u32::MAX, Payload::Shared(shared.clone())),
+                    )?;
+                    stats.messages += 1;
+                    stats.bytes_sent += grads.len() * 4;
                 }
-                self.ep
-                    .isend(r, GradMsg::new(self.ep.rank, epoch, u32::MAX, grads.to_vec()))?;
-                stats.messages += 1;
-                stats.bytes_sent += grads.len() * 4;
             }
         } else {
-            // Step 1: contribute to the master.
-            self.ep.isend(
-                self.my_master,
-                GradMsg::new(self.ep.rank, epoch, 0, grads.to_vec()),
-            )?;
+            // Step 1: contribute to the master through a pooled buffer.
+            let buf = self.pool.checkout_filled(grads, &mut stats);
+            self.ep
+                .isend(self.my_master, GradMsg::new(self.ep.rank, epoch, 0, buf))?;
             stats.messages += 1;
             stats.bytes_sent += grads.len() * 4;
-            // Step 3: receive the global average.
+            // Step 3: receive the global average (a shared payload —
+            // recycling is a no-op drop of our Arc clone).
             let t0 = Instant::now();
             let msg = self.ep.recv(self.my_master)?;
             stats.wait_s += t0.elapsed().as_secs_f64();
             grads.copy_from_slice(&msg.data);
             stats.contributions = self.ep.topology().ranks;
+            self.pool.recycle_payload(msg.data, &mut stats);
         }
         Ok(stats)
     }
@@ -109,10 +135,58 @@ impl Collective for Hierarchical {
     fn parked(&mut self) -> &mut ParkedReduce {
         &mut self.parked
     }
+
+    fn buffer_pool(&self) -> Option<BufferPool> {
+        Some(self.pool.clone())
+    }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+    use crate::comm::{LinkModel, LocalNetwork, Topology};
+
     // Cross-thread correctness covered by
     // collective::tests::hierarchical_matches_full_average.
+
+    #[test]
+    fn broadcast_shares_one_payload_across_receivers() {
+        // 1 node of 4 ranks: the master's step-3 broadcast must fan out
+        // Shared payloads (one backing allocation), while per-receiver
+        // byte accounting still counts each link's full transfer.
+        let topo = Topology::new(4, 4);
+        let eps = LocalNetwork::build(&topo, LinkModel::zero());
+        let pool = BufferPool::new();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                let pool = pool.clone();
+                let is_master = ep.rank == 0;
+                let v = ep.rank as f32;
+                std::thread::spawn(move || {
+                    let mut c = Hierarchical::new(ep).with_pool(pool);
+                    let mut grads = vec![v; 8];
+                    let s = c.epoch_reduce(0, &mut grads).unwrap();
+                    (is_master, grads, s)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (is_master, g, s) = h.join().unwrap();
+            assert_eq!(g, vec![1.5; 8]);
+            if is_master {
+                // 3 broadcast sends, full bytes each — but Shared
+                // payloads, so nothing was recycled *from* them and only
+                // the 3 member contributions returned to the pool.
+                assert_eq!(s.messages, 3);
+                assert_eq!(s.bytes_sent, 3 * 8 * 4);
+                assert_eq!(s.bytes_recycled, 3 * 8 * 4);
+            } else {
+                // Members checked out one contribution; the received
+                // broadcast is Shared and recycles as a no-op.
+                assert_eq!(s.messages, 1);
+                assert_eq!(s.allocs + s.pool_hits, 1);
+            }
+        }
+    }
 }

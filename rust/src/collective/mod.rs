@@ -30,6 +30,12 @@
 //!   compute, applying averaged gradients at most k epochs stale (FIFO)
 //!   and settling the window with `drain()` wherever quiescence is
 //!   needed (run checkpoints, end of training).
+//! * **Pooled payloads** ([`crate::comm::BufferPool`]): every transfer
+//!   buffer is checked out of one pool shared by all ranks at send and
+//!   recycled at receive-apply, so steady-state epochs allocate nothing
+//!   on the exchange path (DESIGN.md §Memory discipline). [`CommStats`]
+//!   carries the checkout accounting (`allocs` / `pool_hits` /
+//!   `bytes_recycled`).
 
 pub mod engine;
 pub mod grouped;
@@ -41,7 +47,7 @@ pub mod tree;
 
 use std::sync::{Arc, Barrier};
 
-use crate::comm::{Endpoint, MembershipView, RmaRegion, Topology};
+use crate::comm::{BufferPool, Endpoint, MembershipView, RmaRegion, Topology};
 use crate::config::{ChunkPolicy, Mode};
 use crate::util::error::{Error, Result};
 
@@ -80,6 +86,15 @@ pub struct CommStats {
     /// for a rank that left or joined mid-run. Filled by the rank
     /// pipeline — the Async-RED per-block participation bookkeeping.
     pub participation_epochs: u64,
+    /// Gradient-buffer allocations on the exchange path: pool checkouts
+    /// that found no recycled buffer of the right size class. Zero at
+    /// steady state once the pool has warmed (DESIGN.md §Memory
+    /// discipline).
+    pub allocs: u64,
+    /// Pool checkouts served from a recycled buffer (no allocation).
+    pub pool_hits: u64,
+    /// Payload bytes returned to the pool for reuse instead of freed.
+    pub bytes_recycled: u64,
 }
 
 impl CommStats {
@@ -95,6 +110,20 @@ impl CommStats {
         self.skips += other.skips;
         self.late_applies += other.late_applies;
         self.participation_epochs += other.participation_epochs;
+        self.allocs += other.allocs;
+        self.pool_hits += other.pool_hits;
+        self.bytes_recycled += other.bytes_recycled;
+    }
+
+    /// Fraction of pool checkouts served without allocating (1.0 when no
+    /// checkouts happened — nothing needed, nothing allocated).
+    pub fn pool_hit_rate(&self) -> f64 {
+        let total = self.allocs + self.pool_hits;
+        if total == 0 {
+            1.0
+        } else {
+            self.pool_hits as f64 / total as f64
+        }
     }
 
     /// Mean applied-gradient staleness in epochs (0.0 when nothing was
@@ -221,6 +250,16 @@ pub trait Collective: Send {
     fn set_membership(&mut self, _view: &MembershipView) -> Result<()> {
         Ok(())
     }
+
+    /// The buffer pool this collective checks transfer payloads out of,
+    /// if it uses one. Wrappers ([`engine::CollectiveEngine`]) and the
+    /// rank pipeline recycle applied buffers back into the same pool, so
+    /// a staleness-k window circulates exactly k+1 buffers at steady
+    /// state instead of allocating fresh ones. `None` for collectives
+    /// that move no payloads (ensemble/null).
+    fn buffer_pool(&self) -> Option<BufferPool> {
+        None
+    }
 }
 
 /// No-communication collective (ensemble analysis, single rank).
@@ -279,19 +318,34 @@ pub fn build_with_policy(
 ) -> Result<Vec<Box<dyn Collective>>> {
     let n = topo.ranks;
     let barrier = Arc::new(Barrier::new(n));
+    // One pool shared by every rank: buffers migrate around the ring
+    // (checked out by the sender, recycled by the receiver), so only a
+    // shared free-list keeps the checkout/recycle flow balanced globally.
+    let pool = BufferPool::new();
     let mut out: Vec<Box<dyn Collective>> = Vec::with_capacity(n);
     for ep in endpoints {
         let rank = ep.rank;
         let c: Box<dyn Collective> = match mode {
             Mode::Ensemble => Box::new(NullCollective::default()),
-            Mode::ConvArar => Box::new(ring::ConvArar::with_policy(ep, policy)),
-            Mode::ArarArar => Box::new(grouped::GroupedArar::with_policy(ep, outer_freq, policy)),
-            Mode::RmaArarArar => Box::new(grouped::RmaGroupedArar::with_policy(
-                ep, outer_freq, topo, region, rank, policy,
-            )?),
-            Mode::Horovod => Box::new(sync::SyncAllReduce::new(ep, barrier.clone())),
-            Mode::Hierarchical => Box::new(hierarchical::Hierarchical::new(ep)),
-            Mode::DoubleBinaryTree => Box::new(tree::TreeAllReduce::new(ep)),
+            Mode::ConvArar => {
+                Box::new(ring::ConvArar::with_policy(ep, policy).with_pool(pool.clone()))
+            }
+            Mode::ArarArar => Box::new(
+                grouped::GroupedArar::with_policy(ep, outer_freq, policy).with_pool(pool.clone()),
+            ),
+            Mode::RmaArarArar => Box::new(
+                grouped::RmaGroupedArar::with_policy(ep, outer_freq, topo, region, rank, policy)?
+                    .with_pool(pool.clone()),
+            ),
+            Mode::Horovod => {
+                Box::new(sync::SyncAllReduce::new(ep, barrier.clone()).with_pool(pool.clone()))
+            }
+            Mode::Hierarchical => {
+                Box::new(hierarchical::Hierarchical::new(ep).with_pool(pool.clone()))
+            }
+            Mode::DoubleBinaryTree => {
+                Box::new(tree::TreeAllReduce::new(ep).with_pool(pool.clone()))
+            }
         };
         out.push(c);
     }
@@ -658,5 +712,50 @@ mod tests {
         assert_eq!(rma_window_depth(4, ChunkPolicy::Unchunked), 4);
         assert_eq!(rma_window_depth(4, ChunkPolicy::Auto), 8);
         assert_eq!(rma_window_depth(1, ChunkPolicy::Unchunked), 2);
+    }
+
+    #[test]
+    fn built_collectives_share_one_buffer_pool() {
+        // Buffers checked out by a sender are recycled by the receiver,
+        // so flow balance only holds when every rank draws from the same
+        // free-list.
+        use crate::comm::{LinkModel, LocalNetwork};
+        for mode in [Mode::ConvArar, Mode::ArarArar, Mode::RmaArarArar] {
+            let n = 4;
+            let topo = Topology::new(n, 2);
+            let region = RmaRegion::with_capacity(n, 4);
+            let endpoints = LocalNetwork::build(&topo, LinkModel::zero());
+            let cs = build_with_policy(mode, &topo, 1, endpoints, &region, ChunkPolicy::Unchunked)
+                .unwrap();
+            let first = cs[0].buffer_pool().expect("mode should expose a pool");
+            for c in &cs[1..] {
+                let p = c.buffer_pool().expect("mode should expose a pool");
+                assert!(first.same_pool(&p), "{mode:?} ranks must share one pool");
+            }
+        }
+        // The no-communication mode has no payloads to pool.
+        assert!(NullCollective::default().buffer_pool().is_none());
+    }
+
+    #[test]
+    fn pool_hit_rate_counts_checkouts() {
+        let mut s = CommStats {
+            allocs: 1,
+            pool_hits: 3,
+            bytes_recycled: 64,
+            ..Default::default()
+        };
+        assert!((s.pool_hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(CommStats::default().pool_hit_rate(), 1.0);
+        let other = CommStats {
+            allocs: 1,
+            pool_hits: 1,
+            bytes_recycled: 16,
+            ..Default::default()
+        };
+        s.merge(&other);
+        assert_eq!(s.allocs, 2);
+        assert_eq!(s.pool_hits, 4);
+        assert_eq!(s.bytes_recycled, 80);
     }
 }

@@ -17,54 +17,62 @@
 //!
 //! Sends are non-blocking (`isend`); receives block — but because every
 //! member sends before receiving at each step, the pass cannot deadlock.
-//! Both passes recycle received payload buffers into the caller-owned
-//! scratch storage, so the steady-state hot path performs no allocation.
+//! Payload buffers are checked out of the caller's [`BufferPool`] at send
+//! and recycled back at receive-apply; partition and sub-message bounds
+//! are computed arithmetically ([`partition_at`], [`sub_bounds_iter`])
+//! rather than collected into vectors, so a steady-state pass performs no
+//! allocation at all (DESIGN.md §Memory discipline).
 
 use std::time::Instant;
 
 use super::{Collective, CommStats, ParkedReduce};
-use crate::comm::{Endpoint, GradMsg, MembershipView, Topology};
+use crate::comm::{BufferPool, Endpoint, GradMsg, MembershipView, Payload, Topology};
 use crate::config::ChunkPolicy;
 use crate::tensor::ops;
 use crate::util::error::{Error, Result};
 
-/// Contiguous partition bounds: `n` half-open ranges covering `0..len`
-/// whose sizes differ by at most one (the first `len % n` partitions get
-/// the extra element). Handles `len < n` with empty tail partitions, so
-/// chunked passes work for arbitrary tensor lengths.
-pub fn partition_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
+/// Bounds of partition `i` of `n` contiguous partitions covering
+/// `0..len`, sizes differing by at most one (the first `len % n`
+/// partitions get the extra element). O(1), so the chunked hot loop
+/// needs no bounds vector.
+#[inline]
+pub fn partition_at(len: usize, n: usize, i: usize) -> (usize, usize) {
     let base = len / n;
     let extra = len % n;
-    let mut out = Vec::with_capacity(n);
-    let mut start = 0;
-    for i in 0..n {
-        let size = base + usize::from(i < extra);
-        out.push((start, start + size));
-        start += size;
-    }
-    out
+    let lo = i * base + i.min(extra);
+    (lo, lo + base + usize::from(i < extra))
 }
 
-/// Sub-message bounds within one partition `[lo, hi)`: split into pieces
-/// of at most `max_elems` elements (0 = one piece). An empty partition
-/// yields no messages. Sender and receiver compute identical splits from
-/// the shared partition bounds, so no extra framing is needed.
+/// All `n` contiguous partition bounds covering `0..len` (the collected
+/// form of [`partition_at`], for callers that want the whole schedule —
+/// tests and the simulator; the passes themselves stay allocation-free).
+pub fn partition_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
+    (0..n).map(|i| partition_at(len, n, i)).collect()
+}
+
+/// Sub-message bounds within one partition `[lo, hi)`: pieces of at most
+/// `max_elems` elements (0 = one piece). An empty partition yields no
+/// messages. Sender and receiver compute identical splits from the shared
+/// partition bounds, so no extra framing is needed — and the iterator
+/// allocates nothing.
+pub fn sub_bounds_iter(
+    lo: usize,
+    hi: usize,
+    max_elems: usize,
+) -> impl Iterator<Item = (usize, usize)> {
+    let step = if max_elems == 0 {
+        hi.saturating_sub(lo).max(1)
+    } else {
+        max_elems
+    };
+    (lo..hi)
+        .step_by(step)
+        .map(move |a| (a, (a + step).min(hi)))
+}
+
+/// The collected form of [`sub_bounds_iter`].
 pub fn sub_bounds(lo: usize, hi: usize, max_elems: usize) -> Vec<(usize, usize)> {
-    let len = hi - lo;
-    if len == 0 {
-        return Vec::new();
-    }
-    if max_elems == 0 || max_elems >= len {
-        return vec![(lo, hi)];
-    }
-    let mut out = Vec::with_capacity(len.div_ceil(max_elems));
-    let mut a = lo;
-    while a < hi {
-        let b = (a + max_elems).min(hi);
-        out.push((a, b));
-        a = b;
-    }
-    out
+    sub_bounds_iter(lo, hi, max_elems).collect()
 }
 
 /// Bytes one rank sends through a chunked pass of `n` members over a
@@ -74,9 +82,6 @@ pub fn chunked_pass_bytes(len: usize, n: usize) -> usize {
     if n <= 1 {
         return 0;
     }
-    let parts = partition_bounds(len, n);
-    let total: usize = parts.iter().map(|&(lo, hi)| hi - lo).sum();
-    debug_assert_eq!(total, len);
     // Reduce-scatter: rank i sends partitions i, i-1, ... (all but one);
     // all-gather: partitions i+1, i, ... (all but one). Over both phases
     // every partition is sent exactly twice except the two skipped ones —
@@ -86,9 +91,9 @@ pub fn chunked_pass_bytes(len: usize, n: usize) -> usize {
     let me = 0usize;
     let mut bytes = 0;
     for s in 0..n - 1 {
-        let (lo, hi) = parts[(me + n - s) % n];
+        let (lo, hi) = partition_at(len, n, (me + n - s) % n);
         bytes += (hi - lo) * 4;
-        let (lo, hi) = parts[(me + n + 1 - s) % n];
+        let (lo, hi) = partition_at(len, n, (me + n + 1 - s) % n);
         bytes += (hi - lo) * 4;
     }
     bytes
@@ -96,15 +101,15 @@ pub fn chunked_pass_bytes(len: usize, n: usize) -> usize {
 
 /// One full ring-all-reduce pass over `members` (must contain the
 /// endpoint's rank). Averages in place over all members' contributions.
-/// `scratch` is caller-owned reusable storage for the forwarded payload;
-/// after the pass it holds the last received buffer, so repeated passes
-/// allocate nothing once the capacity is warm.
+/// The forwarded payload is checked out of `pool` and the final received
+/// buffer is recycled back, so each pass is exactly one checkout and one
+/// recycle — allocation-free once the pool is warm.
 pub fn ring_pass(
     ep: &Endpoint,
     members: &[usize],
     epoch: u64,
     grads: &mut [f32],
-    scratch: &mut Vec<f32>,
+    pool: &BufferPool,
 ) -> Result<CommStats> {
     let n = members.len();
     let mut stats = CommStats {
@@ -115,12 +120,10 @@ pub fn ring_pass(
         return Ok(stats);
     }
     let (next, prev) = Topology::ring_in(members, ep.rank);
-    // The payload to forward: starts as our own gradient (staged into the
-    // recycled scratch buffer), then becomes whatever we received (so
-    // every rank's original gradient visits the whole ring exactly once).
-    let mut forward = std::mem::take(scratch);
-    forward.clear();
-    forward.extend_from_slice(grads);
+    // The payload to forward: starts as our own gradient (staged into a
+    // pooled buffer), then becomes whatever we received (so every rank's
+    // original gradient visits the whole ring exactly once).
+    let mut forward = Payload::from(pool.checkout_filled(grads, &mut stats));
     for step in 0..(n - 1) as u32 {
         ep.isend(next, GradMsg::new(ep.rank, epoch, step, forward))?;
         stats.messages += 1;
@@ -134,8 +137,7 @@ pub fn ring_pass(
         forward = msg.data;
     }
     ops::scale(grads, 1.0 / n as f32);
-    // Recycle the final received buffer for the next pass.
-    *scratch = forward;
+    pool.recycle_payload(forward, &mut stats);
     Ok(stats)
 }
 
@@ -143,7 +145,7 @@ pub fn ring_pass(
 /// over `members`, averaging `grads` in place.
 ///
 /// The tensor is split into one contiguous partition per member
-/// ([`partition_bounds`]); `max_msg_elems` optionally splits each
+/// ([`partition_at`]); `max_msg_elems` optionally splits each
 /// partition transfer into smaller chunk-indexed messages (0 = one
 /// message per partition). At reduce-scatter step s, the rank at ring
 /// index i sends partition (i - s) mod n and accumulates partition
@@ -155,7 +157,7 @@ pub fn chunked_ring_pass(
     members: &[usize],
     epoch: u64,
     grads: &mut [f32],
-    pool: &mut Vec<Vec<f32>>,
+    pool: &BufferPool,
     max_msg_elems: usize,
 ) -> Result<CommStats> {
     let n = members.len();
@@ -171,7 +173,7 @@ pub fn chunked_ring_pass(
         .iter()
         .position(|&r| r == ep.rank)
         .expect("rank not in ring");
-    let parts = partition_bounds(grads.len(), n);
+    let len = grads.len();
     let cap = max_msg_elems;
     let mut step: u32 = 0;
 
@@ -179,13 +181,13 @@ pub fn chunked_ring_pass(
     for s in 0..n - 1 {
         let si = (me + n - s) % n;
         let ri = (me + n - s - 1) % n;
-        send_partition(ep, next, epoch, step, si, parts[si], grads, pool, cap, &mut stats)?;
-        recv_partition(ep, prev, ri, parts[ri], grads, pool, cap, &mut stats, true)?;
+        send_partition(ep, next, epoch, step, si, partition_at(len, n, si), grads, pool, cap, &mut stats)?;
+        recv_partition(ep, prev, ri, partition_at(len, n, ri), grads, pool, cap, &mut stats, true)?;
         step += 1;
     }
     // Own fully-reduced partition: average it before circulating.
     let own = (me + 1) % n;
-    let (lo, hi) = parts[own];
+    let (lo, hi) = partition_at(len, n, own);
     ops::scale(&mut grads[lo..hi], 1.0 / n as f32);
     stats.contributions = n;
 
@@ -193,14 +195,15 @@ pub fn chunked_ring_pass(
     for s in 0..n - 1 {
         let si = (me + n + 1 - s) % n;
         let ri = (me + n - s) % n;
-        send_partition(ep, next, epoch, step, si, parts[si], grads, pool, cap, &mut stats)?;
-        recv_partition(ep, prev, ri, parts[ri], grads, pool, cap, &mut stats, false)?;
+        send_partition(ep, next, epoch, step, si, partition_at(len, n, si), grads, pool, cap, &mut stats)?;
+        recv_partition(ep, prev, ri, partition_at(len, n, ri), grads, pool, cap, &mut stats, false)?;
         step += 1;
     }
     Ok(stats)
 }
 
-/// Send one partition of `grads` as one or more chunk-indexed messages.
+/// Send one partition of `grads` as one or more chunk-indexed messages,
+/// each staged into a pooled buffer.
 #[allow(clippy::too_many_arguments)]
 fn send_partition(
     ep: &Endpoint,
@@ -210,14 +213,12 @@ fn send_partition(
     part_idx: usize,
     (lo, hi): (usize, usize),
     grads: &[f32],
-    pool: &mut Vec<Vec<f32>>,
+    pool: &BufferPool,
     max_msg_elems: usize,
     stats: &mut CommStats,
 ) -> Result<()> {
-    for (a, b) in sub_bounds(lo, hi, max_msg_elems) {
-        let mut buf = pool.pop().unwrap_or_default();
-        buf.clear();
-        buf.extend_from_slice(&grads[a..b]);
+    for (a, b) in sub_bounds_iter(lo, hi, max_msg_elems) {
+        let buf = pool.checkout_filled(&grads[a..b], stats);
         ep.isend(
             next,
             GradMsg::chunked(ep.rank, epoch, step, part_idx as u32, buf),
@@ -237,12 +238,12 @@ fn recv_partition(
     part_idx: usize,
     (lo, hi): (usize, usize),
     grads: &mut [f32],
-    pool: &mut Vec<Vec<f32>>,
+    pool: &BufferPool,
     max_msg_elems: usize,
     stats: &mut CommStats,
     accumulate: bool,
 ) -> Result<()> {
-    for (a, b) in sub_bounds(lo, hi, max_msg_elems) {
+    for (a, b) in sub_bounds_iter(lo, hi, max_msg_elems) {
         let t0 = Instant::now();
         let msg = ep.recv(prev)?;
         stats.wait_s += t0.elapsed().as_secs_f64();
@@ -259,9 +260,7 @@ fn recv_partition(
         } else {
             grads[a..b].copy_from_slice(&msg.data);
         }
-        if pool.len() < 4 {
-            pool.push(msg.data);
-        }
+        pool.recycle_payload(msg.data, stats);
     }
     if accumulate {
         stats.contributions += 1;
@@ -277,8 +276,7 @@ pub struct ConvArar {
     ep: Endpoint,
     members: Vec<usize>,
     policy: ChunkPolicy,
-    scratch: Vec<f32>,
-    pool: Vec<Vec<f32>>,
+    pool: BufferPool,
     parked: ParkedReduce,
 }
 
@@ -293,10 +291,17 @@ impl ConvArar {
             ep,
             members,
             policy,
-            scratch: Vec::new(),
-            pool: Vec::new(),
+            pool: BufferPool::new(),
             parked: ParkedReduce::default(),
         }
+    }
+
+    /// Draw payload buffers from a shared pool (a run's ranks share one —
+    /// see [`super::build_with_policy`] — so checkout/recycle flow
+    /// balances globally as buffers migrate around the ring).
+    pub fn with_pool(mut self, pool: BufferPool) -> ConvArar {
+        self.pool = pool;
+        self
     }
 }
 
@@ -308,11 +313,11 @@ impl Collective for ConvArar {
                 &self.members,
                 epoch,
                 grads,
-                &mut self.pool,
+                &self.pool,
                 self.policy.max_message_elems(),
             )
         } else {
-            ring_pass(&self.ep, &self.members, epoch, grads, &mut self.scratch)
+            ring_pass(&self.ep, &self.members, epoch, grads, &self.pool)
         }
     }
 
@@ -336,6 +341,10 @@ impl Collective for ConvArar {
         self.members = view.live().to_vec();
         Ok(())
     }
+
+    fn buffer_pool(&self) -> Option<BufferPool> {
+        Some(self.pool.clone())
+    }
 }
 
 #[cfg(test)]
@@ -353,23 +362,23 @@ mod tests {
     ) -> Vec<Vec<f32>> {
         let topo = Topology::new(n, 4);
         let endpoints = LocalNetwork::build(&topo, LinkModel::zero());
+        let pool = BufferPool::new();
         let handles: Vec<_> = endpoints
             .into_iter()
             .map(|ep| {
                 let members = members.clone();
                 let v = values[ep.rank];
+                let pool = pool.clone();
                 std::thread::spawn(move || {
                     let mut grads = vec![v; len];
                     if members.contains(&ep.rank) {
                         match chunked {
                             Some(max) => {
-                                let mut pool = Vec::new();
-                                chunked_ring_pass(&ep, &members, 0, &mut grads, &mut pool, max)
+                                chunked_ring_pass(&ep, &members, 0, &mut grads, &pool, max)
                                     .unwrap();
                             }
                             None => {
-                                let mut scratch = Vec::new();
-                                ring_pass(&ep, &members, 0, &mut grads, &mut scratch).unwrap();
+                                ring_pass(&ep, &members, 0, &mut grads, &pool).unwrap();
                             }
                         }
                     }
@@ -417,8 +426,8 @@ mod tests {
             .map(|ep| {
                 std::thread::spawn(move || {
                     let mut grads = vec![1.0f32; 100];
-                    let mut scratch = Vec::new();
-                    ring_pass(&ep, &[0, 1, 2], 0, &mut grads, &mut scratch).unwrap()
+                    let pool = BufferPool::new();
+                    ring_pass(&ep, &[0, 1, 2], 0, &mut grads, &pool).unwrap()
                 })
             })
             .collect();
@@ -431,22 +440,29 @@ mod tests {
     }
 
     #[test]
-    fn scratch_buffer_is_reused_across_passes() {
+    fn pooled_buffers_are_reused_across_passes() {
+        // The zero-allocation contract at the pass level: the first pass
+        // allocates the one buffer it stages, every later pass is served
+        // by the buffer recycled from the previous receive.
         let topo = Topology::new(2, 4);
         let eps = LocalNetwork::build(&topo, LinkModel::zero());
         let handles: Vec<_> = eps
             .into_iter()
             .map(|ep| {
                 std::thread::spawn(move || {
-                    let mut scratch = Vec::new();
+                    let pool = BufferPool::new();
                     let mut grads = vec![1.0f32; 64];
-                    ring_pass(&ep, &[0, 1], 0, &mut grads, &mut scratch).unwrap();
-                    // After a pass the scratch holds a recycled buffer of
-                    // the tensor size: the next pass needs no allocation.
-                    assert_eq!(scratch.len(), 64);
-                    let cap = scratch.capacity();
-                    ring_pass(&ep, &[0, 1], 1, &mut grads, &mut scratch).unwrap();
-                    assert_eq!(scratch.capacity(), cap);
+                    ring_pass(&ep, &[0, 1], 0, &mut grads, &pool).unwrap();
+                    assert_eq!(pool.stats().allocs, 1);
+                    for e in 1..10 {
+                        let s = ring_pass(&ep, &[0, 1], e, &mut grads, &pool).unwrap();
+                        assert_eq!(s.allocs, 0, "steady-state pass allocated");
+                        assert_eq!(s.pool_hits, 1);
+                        assert_eq!(s.bytes_recycled, 64 * 4);
+                    }
+                    let st = pool.stats();
+                    assert_eq!(st.allocs, 1);
+                    assert_eq!(st.hits, 9);
                 })
             })
             .collect();
@@ -465,11 +481,13 @@ mod tests {
             let mut prev_end = 0;
             let mut min = usize::MAX;
             let mut max = 0;
-            for &(lo, hi) in &parts {
+            for (i, &(lo, hi)) in parts.iter().enumerate() {
                 assert_eq!(lo, prev_end);
                 prev_end = hi;
                 min = min.min(hi - lo);
                 max = max.max(hi - lo);
+                // The O(1) form agrees with the collected schedule.
+                assert_eq!(partition_at(len, n, i), (lo, hi));
             }
             assert!(max - min <= 1, "unbalanced: len={len} n={n}");
         }
@@ -522,8 +540,8 @@ mod tests {
                 let members = members.clone();
                 std::thread::spawn(move || {
                     let mut grads = vec![1.0f32; len];
-                    let mut pool = Vec::new();
-                    chunked_ring_pass(&ep, &members, 0, &mut grads, &mut pool, 0).unwrap()
+                    let pool = BufferPool::new();
+                    chunked_ring_pass(&ep, &members, 0, &mut grads, &pool, 0).unwrap()
                 })
             })
             .collect();
@@ -549,8 +567,8 @@ mod tests {
             .map(|ep| {
                 std::thread::spawn(move || {
                     let mut grads = vec![1.0f32; len];
-                    let mut pool = Vec::new();
-                    chunked_ring_pass(&ep, &[0, 1], 0, &mut grads, &mut pool, 2).unwrap()
+                    let pool = BufferPool::new();
+                    chunked_ring_pass(&ep, &[0, 1], 0, &mut grads, &pool, 2).unwrap()
                 })
             })
             .collect();

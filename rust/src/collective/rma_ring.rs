@@ -16,12 +16,18 @@
 //! and every partition is normalized by the contributions it actually
 //! accumulated, so the buffer always holds a (possibly partial) average —
 //! never an unscaled sum.
+//!
+//! Deposited payloads are checked out of the ring's [`BufferPool`] and
+//! recycled back when a get consumes them; the per-partition bookkeeping
+//! vectors are reused across passes, so healthy steady-state epochs
+//! allocate nothing (a timeout strands its deposit in the window — the
+//! buffer frees when superseded, outside the pool).
 
 use std::time::{Duration, Instant};
 
-use super::ring::partition_bounds;
+use super::ring::partition_at;
 use super::CommStats;
-use crate::comm::{GradMsg, RmaRegion, RmaWindow, Topology};
+use crate::comm::{BufferPool, GradMsg, Payload, RmaRegion, RmaWindow, Topology};
 use crate::tensor::ops;
 use crate::util::error::Result;
 
@@ -39,8 +45,14 @@ pub struct RmaRing {
     /// Window we read (written by predecessor).
     from_prev: RmaWindow,
     pub get_timeout: Duration,
-    /// Recycled payload buffer (puts move owned Vecs into the window).
-    scratch: Vec<f32>,
+    /// Payload source/sink: puts move owned pooled buffers into the
+    /// window, gets recycle them back. A run shares one pool ring-wide
+    /// (see [`super::build_with_policy`]).
+    pub pool: BufferPool,
+    /// Reusable per-partition contribution counts (chunked pass).
+    contrib: Vec<usize>,
+    /// Reusable per-partition "holds a complete average" flags.
+    averaged: Vec<bool>,
 }
 
 impl RmaRing {
@@ -53,7 +65,9 @@ impl RmaRing {
             from_prev: region.window(prev, rank)?,
             members,
             get_timeout: DEFAULT_GET_TIMEOUT,
-            scratch: Vec::new(),
+            pool: BufferPool::new(),
+            contrib: Vec::new(),
+            averaged: Vec::new(),
         })
     }
 
@@ -68,14 +82,13 @@ impl RmaRing {
         if n <= 1 {
             return Ok(stats);
         }
-        // Stage our own gradient into the recycled scratch buffer — the
-        // steady-state pass performs no allocation.
-        let mut forward = std::mem::take(&mut self.scratch);
-        forward.clear();
-        forward.extend_from_slice(grads);
+        // Stage our own gradient into a pooled buffer — the steady-state
+        // pass performs no allocation.
+        let mut forward = Some(Payload::from(self.pool.checkout_filled(grads, &mut stats)));
         for step in 0..(n - 1) as u32 {
+            let payload = forward.take().expect("forward payload staged");
             self.to_next
-                .put(GradMsg::new(self.rank, epoch, step, forward));
+                .put(GradMsg::new(self.rank, epoch, step, payload));
             stats.messages += 1;
             stats.bytes_sent += grads.len() * 4;
             let t0 = Instant::now();
@@ -86,23 +99,23 @@ impl RmaRing {
                     debug_assert_eq!(msg.data.len(), grads.len());
                     ops::add_assign(grads, &msg.data);
                     stats.contributions += 1;
-                    forward = msg.data;
+                    forward = Some(msg.data);
                 }
                 None => {
                     // Neighbour never deposited within the deadline:
-                    // proceed with what we have (no rendezvous, by design).
-                    // The forwarded buffer is already deposited in the
-                    // window and unrecoverable; pre-size the replacement
-                    // so the next pass stages with a single allocation.
+                    // proceed with what we have (no rendezvous, by
+                    // design). Our own deposit is stranded in the window
+                    // and frees when superseded.
                     stats.wait_s += t0.elapsed().as_secs_f64();
                     stats.timeouts += 1;
-                    forward = Vec::with_capacity(grads.len());
                     break;
                 }
             }
         }
         ops::scale(grads, 1.0 / stats.contributions as f32);
-        self.scratch = forward;
+        if let Some(p) = forward {
+            self.pool.recycle_payload(p, &mut stats);
+        }
         Ok(stats)
     }
 
@@ -132,13 +145,15 @@ impl RmaRing {
             .iter()
             .position(|&r| r == self.rank)
             .expect("rank not in ring");
-        let parts = partition_bounds(grads.len(), n);
+        let len = grads.len();
         // Per-partition contribution counts; a partition not yet averaged
-        // holds the raw sum of `contrib[p]` ranks' gradients.
-        let mut contrib = vec![1usize; n];
-        // Partitions already holding a *complete average* (own after the
-        // scale step, or received during all-gather).
-        let mut averaged = vec![false; n];
+        // holds the raw sum of `contrib[p]` ranks' gradients. Both
+        // vectors are reused fields: after the first pass, resize is a
+        // no-op and the schedule allocates nothing.
+        self.contrib.clear();
+        self.contrib.resize(n, 1);
+        self.averaged.clear();
+        self.averaged.resize(n, false);
         let mut step: u32 = 0;
         let mut aborted = false;
 
@@ -146,14 +161,14 @@ impl RmaRing {
         for s in 0..n - 1 {
             let send_idx = (me + n - s) % n;
             let recv_idx = (me + n - s - 1) % n;
-            self.put_partition(epoch, step, send_idx, parts[send_idx], grads, &mut stats);
-            let (lo, hi) = parts[recv_idx];
+            self.put_partition(epoch, step, send_idx, partition_at(len, n, send_idx), grads, &mut stats);
+            let (lo, hi) = partition_at(len, n, recv_idx);
             match self.get_partition(recv_idx, hi - lo, &mut stats) {
                 Some(msg) => {
                     ops::add_assign(&mut grads[lo..hi], &msg.data);
-                    contrib[recv_idx] = s + 2;
+                    self.contrib[recv_idx] = s + 2;
                     stats.contributions += 1;
-                    self.recycle(msg.data);
+                    self.pool.recycle_payload(msg.data, &mut stats);
                 }
                 None => {
                     aborted = true;
@@ -165,31 +180,32 @@ impl RmaRing {
         // Average every partition by what it actually accumulated. In the
         // healthy case only the own partition (contrib = n) survives into
         // the all-gather sends; the others are overwritten below.
-        for (p, &(lo, hi)) in parts.iter().enumerate() {
-            ops::scale(&mut grads[lo..hi], 1.0 / contrib[p] as f32);
+        for p in 0..n {
+            let (lo, hi) = partition_at(len, n, p);
+            ops::scale(&mut grads[lo..hi], 1.0 / self.contrib[p] as f32);
         }
         let own = (me + 1) % n;
-        averaged[own] = contrib[own] == n;
+        self.averaged[own] = self.contrib[own] == n;
 
         // Phase 2: all-gather the averaged partitions.
         if !aborted {
             for s in 0..n - 1 {
                 let send_idx = (me + n + 1 - s) % n;
                 let recv_idx = (me + n - s) % n;
-                self.put_partition(epoch, step, send_idx, parts[send_idx], grads, &mut stats);
-                let (lo, hi) = parts[recv_idx];
+                self.put_partition(epoch, step, send_idx, partition_at(len, n, send_idx), grads, &mut stats);
+                let (lo, hi) = partition_at(len, n, recv_idx);
                 match self.get_partition(recv_idx, hi - lo, &mut stats) {
                     Some(msg) => {
                         grads[lo..hi].copy_from_slice(&msg.data);
-                        averaged[recv_idx] = true;
-                        self.recycle(msg.data);
+                        self.averaged[recv_idx] = true;
+                        self.pool.recycle_payload(msg.data, &mut stats);
                     }
                     None => break,
                 }
                 step += 1;
             }
         }
-        if averaged.iter().all(|&a| a) {
+        if self.averaged.iter().all(|&a| a) {
             stats.contributions = n;
         }
         Ok(stats)
@@ -204,9 +220,7 @@ impl RmaRing {
         grads: &[f32],
         stats: &mut CommStats,
     ) {
-        let mut buf = std::mem::take(&mut self.scratch);
-        buf.clear();
-        buf.extend_from_slice(&grads[lo..hi]);
+        let buf = self.pool.checkout_filled(&grads[lo..hi], stats);
         self.to_next
             .put(GradMsg::chunked(self.rank, epoch, step, part_idx as u32, buf));
         stats.messages += 1;
@@ -229,6 +243,7 @@ impl RmaRing {
                     // Out-of-order deposit (the neighbour dropped slots):
                     // treat like a timeout — bounded staleness by design.
                     stats.timeouts += 1;
+                    self.pool.recycle_payload(msg.data, stats);
                     return None;
                 }
                 Some(msg)
@@ -238,12 +253,6 @@ impl RmaRing {
                 stats.timeouts += 1;
                 None
             }
-        }
-    }
-
-    fn recycle(&mut self, buf: Vec<f32>) {
-        if buf.capacity() > self.scratch.capacity() {
-            self.scratch = buf;
         }
     }
 }
@@ -317,6 +326,36 @@ mod tests {
             assert_eq!(s.contributions, 4);
             assert_eq!(s.timeouts, 0);
             assert!(s.bytes_sent < unchunked_bytes);
+        }
+    }
+
+    #[test]
+    fn steady_state_passes_recycle_deposits() {
+        // Two healthy ranks in lockstep: after the first epoch warms the
+        // pools, every pass is pool-hit only.
+        let region = RmaRegion::with_capacity(2, 2);
+        let rings: Vec<_> = (0..2)
+            .map(|r| RmaRing::new(&region, vec![0, 1], r).unwrap())
+            .collect();
+        let handles: Vec<_> = rings
+            .into_iter()
+            .map(|mut ring| {
+                std::thread::spawn(move || {
+                    let mut grads = vec![1.0f32; 32];
+                    for e in 0..8 {
+                        let s = ring.pass(e, &mut grads).unwrap();
+                        assert_eq!(s.timeouts, 0);
+                        if e > 0 {
+                            assert_eq!(s.allocs, 0, "epoch {e} allocated");
+                            assert_eq!(s.pool_hits, 1);
+                        }
+                    }
+                    ring.pool.stats().allocs
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 1);
         }
     }
 

@@ -13,7 +13,7 @@ use std::time::Instant;
 
 use super::ring::ring_pass;
 use super::{Collective, CommStats, ParkedReduce};
-use crate::comm::{Endpoint, MembershipView};
+use crate::comm::{BufferPool, Endpoint, MembershipView};
 use crate::util::error::{Error, Result};
 
 /// Barrier + global ring, every epoch.
@@ -21,7 +21,7 @@ pub struct SyncAllReduce {
     ep: Endpoint,
     members: Vec<usize>,
     barrier: Arc<Barrier>,
-    scratch: Vec<f32>,
+    pool: BufferPool,
     parked: ParkedReduce,
 }
 
@@ -32,9 +32,15 @@ impl SyncAllReduce {
             ep,
             members,
             barrier,
-            scratch: Vec::new(),
+            pool: BufferPool::new(),
             parked: ParkedReduce::default(),
         }
+    }
+
+    /// Share a run-wide buffer pool (see [`super::build_with_policy`]).
+    pub fn with_pool(mut self, pool: BufferPool) -> SyncAllReduce {
+        self.pool = pool;
+        self
     }
 }
 
@@ -44,7 +50,7 @@ impl Collective for SyncAllReduce {
         // cost the asynchronous modes avoid).
         let t0 = Instant::now();
         self.barrier.wait();
-        let mut stats = ring_pass(&self.ep, &self.members, epoch, grads, &mut self.scratch)?;
+        let mut stats = ring_pass(&self.ep, &self.members, epoch, grads, &self.pool)?;
         // Exit barrier: no rank starts the next step until the
         // collective is globally complete.
         self.barrier.wait();
@@ -71,6 +77,10 @@ impl Collective for SyncAllReduce {
         Err(Error::comm(
             "horovod baseline cannot re-ring: its barrier is fixed at build time",
         ))
+    }
+
+    fn buffer_pool(&self) -> Option<BufferPool> {
+        Some(self.pool.clone())
     }
 }
 

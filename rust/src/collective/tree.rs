@@ -9,11 +9,16 @@
 //! complementary trees to use both link directions, which for the unchunked
 //! tensors of this paper reduces to the same per-rank traffic, so we
 //! implement the single tree and account it as such in the simulator.
+//!
+//! Payloads ride the shared [`BufferPool`]: each rank checks out what it
+//! sends (one to the parent, one per child) and recycles what it receives
+//! (one per child, one from the parent) — exactly balanced per rank, so
+//! steady-state sweeps allocate nothing.
 
 use std::time::Instant;
 
 use super::{Collective, CommStats, ParkedReduce};
-use crate::comm::{Endpoint, GradMsg};
+use crate::comm::{BufferPool, Endpoint, GradMsg};
 use crate::tensor::ops;
 use crate::util::error::Result;
 
@@ -21,6 +26,7 @@ use crate::util::error::Result;
 pub struct TreeAllReduce {
     ep: Endpoint,
     n: usize,
+    pool: BufferPool,
     parked: ParkedReduce,
 }
 
@@ -30,8 +36,15 @@ impl TreeAllReduce {
         TreeAllReduce {
             ep,
             n,
+            pool: BufferPool::new(),
             parked: ParkedReduce::default(),
         }
+    }
+
+    /// Share a run-wide buffer pool (see [`super::build_with_policy`]).
+    pub fn with_pool(mut self, pool: BufferPool) -> TreeAllReduce {
+        self.pool = pool;
+        self
     }
 
     fn parent(rank: usize) -> Option<usize> {
@@ -42,11 +55,16 @@ impl TreeAllReduce {
         }
     }
 
-    fn children(&self, rank: usize) -> Vec<usize> {
+    /// The (up to two) heap children of `rank` that exist.
+    fn child_iter(n: usize, rank: usize) -> impl Iterator<Item = usize> {
         [2 * rank + 1, 2 * rank + 2]
             .into_iter()
-            .filter(|&c| c < self.n)
-            .collect()
+            .filter(move |&c| c < n)
+    }
+
+    #[cfg(test)]
+    fn children(&self, rank: usize) -> Vec<usize> {
+        Self::child_iter(self.n, rank).collect()
     }
 }
 
@@ -60,17 +78,19 @@ impl Collective for TreeAllReduce {
             return Ok(stats);
         }
         let rank = self.ep.rank;
-        // Up-sweep: accumulate children's subtree sums.
-        for c in self.children(rank) {
+        // Up-sweep: accumulate children's subtree sums, recycling each
+        // payload once applied.
+        for c in Self::child_iter(self.n, rank) {
             let t0 = Instant::now();
             let msg = self.ep.recv(c)?;
             stats.wait_s += t0.elapsed().as_secs_f64();
             ops::add_assign(grads, &msg.data);
             stats.contributions += 1;
+            self.pool.recycle_payload(msg.data, &mut stats);
         }
         if let Some(p) = Self::parent(rank) {
-            self.ep
-                .isend(p, GradMsg::new(rank, epoch, 0, grads.to_vec()))?;
+            let buf = self.pool.checkout_filled(grads, &mut stats);
+            self.ep.isend(p, GradMsg::new(rank, epoch, 0, buf))?;
             stats.messages += 1;
             stats.bytes_sent += grads.len() * 4;
             // Down-sweep: receive the global average from the parent.
@@ -79,14 +99,15 @@ impl Collective for TreeAllReduce {
             stats.wait_s += t0.elapsed().as_secs_f64();
             grads.copy_from_slice(&msg.data);
             stats.contributions = self.n;
+            self.pool.recycle_payload(msg.data, &mut stats);
         } else {
             // Root: average and start the broadcast.
             ops::scale(grads, 1.0 / self.n as f32);
             stats.contributions = self.n;
         }
-        for c in self.children(rank) {
-            self.ep
-                .isend(c, GradMsg::new(rank, epoch, 1, grads.to_vec()))?;
+        for c in Self::child_iter(self.n, rank) {
+            let buf = self.pool.checkout_filled(grads, &mut stats);
+            self.ep.isend(c, GradMsg::new(rank, epoch, 1, buf))?;
             stats.messages += 1;
             stats.bytes_sent += grads.len() * 4;
         }
@@ -99,6 +120,10 @@ impl Collective for TreeAllReduce {
 
     fn parked(&mut self) -> &mut ParkedReduce {
         &mut self.parked
+    }
+
+    fn buffer_pool(&self) -> Option<BufferPool> {
+        Some(self.pool.clone())
     }
 }
 

@@ -1,0 +1,285 @@
+//! A recycling MPSC channel for the exchange hot path.
+//!
+//! `std::sync::mpsc` allocates a linked-list block roughly every 32
+//! messages, which would leave the "steady-state epochs allocate
+//! nothing" contract (DESIGN.md §Memory discipline) unprovable no
+//! matter how disciplined the payload buffers are. This channel backs
+//! the queue with a `VecDeque` that *retains its capacity* across
+//! sends, so after the warmup epochs have sized it, enqueue/dequeue
+//! never touches the allocator. Endpoint queues
+//! ([`transport`](crate::comm::transport)) and the
+//! [`CollectiveEngine`](crate::collective::engine::CollectiveEngine)
+//! job/done channels both ride on it.
+//!
+//! The API mirrors the `std::sync::mpsc` subset the comm layer uses —
+//! `send` / `recv` / `try_recv` / `recv_timeout`, with the same
+//! disconnect semantics (a send to a dropped receiver returns the
+//! message; a receive from dropped senders drains the queue first,
+//! then errors).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Send failed: the receiver is gone. Carries the unsent message back.
+pub struct SendError<T>(pub T);
+
+impl<T> std::fmt::Debug for SendError<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("SendError(..)")
+    }
+}
+
+/// Blocking receive failed: every sender is gone and the queue is empty.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecvError;
+
+/// Non-blocking receive outcome when no message is ready.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TryRecvError {
+    /// No message queued right now; senders still live.
+    Empty,
+    /// Queue empty and every sender is gone.
+    Disconnected,
+}
+
+/// Timed receive outcome when no message arrived.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecvTimeoutError {
+    /// The timeout elapsed; senders still live.
+    Timeout,
+    /// Queue empty and every sender is gone.
+    Disconnected,
+}
+
+struct State<T> {
+    queue: VecDeque<T>,
+    senders: usize,
+    receiver_alive: bool,
+}
+
+struct Shared<T> {
+    state: Mutex<State<T>>,
+    ready: Condvar,
+}
+
+/// The sending half (cloneable).
+pub struct Sender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// The receiving half.
+pub struct Receiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Create a connected channel pair.
+pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+    let shared = Arc::new(Shared {
+        state: Mutex::new(State {
+            queue: VecDeque::new(),
+            senders: 1,
+            receiver_alive: true,
+        }),
+        ready: Condvar::new(),
+    });
+    (
+        Sender {
+            shared: shared.clone(),
+        },
+        Receiver { shared },
+    )
+}
+
+impl<T> Sender<T> {
+    /// Enqueue a message; never blocks. Errors (returning the message)
+    /// once the receiver has been dropped.
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        let mut st = self.shared.state.lock().expect("channel poisoned");
+        if !st.receiver_alive {
+            return Err(SendError(value));
+        }
+        st.queue.push_back(value);
+        drop(st);
+        self.shared.ready.notify_one();
+        Ok(())
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.shared.state.lock().expect("channel poisoned").senders += 1;
+        Sender {
+            shared: self.shared.clone(),
+        }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().expect("channel poisoned");
+        st.senders -= 1;
+        let last = st.senders == 0;
+        drop(st);
+        if last {
+            // Wake a blocked receiver so it observes the hangup.
+            self.shared.ready.notify_all();
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive: waits until a message arrives or every sender
+    /// is dropped (queued messages drain before the hangup surfaces).
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut st = self.shared.state.lock().expect("channel poisoned");
+        loop {
+            if let Some(v) = st.queue.pop_front() {
+                return Ok(v);
+            }
+            if st.senders == 0 {
+                return Err(RecvError);
+            }
+            st = self.shared.ready.wait(st).expect("channel poisoned");
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Result<T, TryRecvError> {
+        let mut st = self.shared.state.lock().expect("channel poisoned");
+        if let Some(v) = st.queue.pop_front() {
+            return Ok(v);
+        }
+        if st.senders == 0 {
+            Err(TryRecvError::Disconnected)
+        } else {
+            Err(TryRecvError::Empty)
+        }
+    }
+
+    /// Receive with a deadline.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvTimeoutError> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.shared.state.lock().expect("channel poisoned");
+        loop {
+            if let Some(v) = st.queue.pop_front() {
+                return Ok(v);
+            }
+            if st.senders == 0 {
+                return Err(RecvTimeoutError::Disconnected);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvTimeoutError::Timeout);
+            }
+            let (guard, _timed_out) = self
+                .shared
+                .ready
+                .wait_timeout(st, deadline - now)
+                .expect("channel poisoned");
+            st = guard;
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().expect("channel poisoned");
+        st.receiver_alive = false;
+        // Undelivered messages drop with the shared state.
+        st.queue.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_recv_fifo() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.try_recv(), Ok(2));
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Empty));
+    }
+
+    #[test]
+    fn hangup_semantics_match_mpsc() {
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        drop(tx);
+        // Queued messages drain before the disconnect surfaces.
+        assert_eq!(rx.recv(), Ok(7));
+        assert_eq!(rx.recv(), Err(RecvError));
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Disconnected));
+
+        let (tx, rx) = channel();
+        drop(rx);
+        let SendError(back) = tx.send(9).unwrap_err();
+        assert_eq!(back, 9);
+    }
+
+    #[test]
+    fn cloned_senders_keep_the_channel_open() {
+        let (tx, rx) = channel();
+        let tx2 = tx.clone();
+        drop(tx);
+        tx2.send(3).unwrap();
+        assert_eq!(rx.recv(), Ok(3));
+        drop(tx2);
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn recv_timeout_times_out_then_delivers() {
+        let (tx, rx) = channel::<u32>();
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(10)),
+            Err(RecvTimeoutError::Timeout)
+        );
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            tx.send(5).unwrap();
+        });
+        assert_eq!(rx.recv_timeout(Duration::from_secs(10)), Ok(5));
+        h.join().unwrap();
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(5)),
+            Err(RecvTimeoutError::Disconnected)
+        );
+    }
+
+    #[test]
+    fn blocking_recv_wakes_on_cross_thread_send() {
+        let (tx, rx) = channel();
+        let h = std::thread::spawn(move || rx.recv());
+        std::thread::sleep(Duration::from_millis(10));
+        tx.send(42).unwrap();
+        assert_eq!(h.join().unwrap(), Ok(42));
+    }
+
+    #[test]
+    fn queue_capacity_is_retained_across_epochs() {
+        // The zero-allocation contract: once warmed, a send/recv cycle
+        // must not grow the backing queue again.
+        let (tx, rx) = channel();
+        for i in 0..64 {
+            tx.send(i).unwrap();
+        }
+        let cap = tx.shared.state.lock().unwrap().queue.capacity();
+        for _ in 0..64 {
+            rx.recv().unwrap();
+        }
+        for _ in 0..10 {
+            for i in 0..64 {
+                tx.send(i).unwrap();
+            }
+            for _ in 0..64 {
+                rx.recv().unwrap();
+            }
+        }
+        assert_eq!(tx.shared.state.lock().unwrap().queue.capacity(), cap);
+    }
+}

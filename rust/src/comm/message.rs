@@ -1,6 +1,79 @@
 //! Gradient messages moved between ranks.
 
+use std::ops::Deref;
+use std::sync::Arc;
 use std::time::Instant;
+
+/// A message payload: either an owned buffer (checked out of the
+/// [`BufferPool`](crate::comm::BufferPool) at send, recycled at
+/// receive-apply) or a shared slice (one allocation fanned out to many
+/// receivers, e.g. the hierarchical master's broadcast). Derefs to
+/// `[f32]`, so receive paths read `&msg.data` exactly as before.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Exclusively owned buffer; recyclable into the pool.
+    Owned(Vec<f32>),
+    /// Reference-counted slice shared across receivers; dropped, not
+    /// recycled (the backing allocation frees with the last clone).
+    Shared(Arc<[f32]>),
+}
+
+impl Payload {
+    /// The owned buffer, if this payload is exclusively owned.
+    /// `Shared` payloads return `None` (they cannot be recycled).
+    pub fn take_owned(self) -> Option<Vec<f32>> {
+        match self {
+            Payload::Owned(v) => Some(v),
+            Payload::Shared(_) => None,
+        }
+    }
+
+    /// The payload as a slice (also available through `Deref`).
+    pub fn as_slice(&self) -> &[f32] {
+        self
+    }
+}
+
+impl Deref for Payload {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        match self {
+            Payload::Owned(v) => v,
+            Payload::Shared(s) => s,
+        }
+    }
+}
+
+impl From<Vec<f32>> for Payload {
+    fn from(v: Vec<f32>) -> Payload {
+        Payload::Owned(v)
+    }
+}
+
+impl From<Arc<[f32]>> for Payload {
+    fn from(s: Arc<[f32]>) -> Payload {
+        Payload::Shared(s)
+    }
+}
+
+impl PartialEq for Payload {
+    fn eq(&self, other: &Payload) -> bool {
+        **self == **other
+    }
+}
+
+impl PartialEq<Vec<f32>> for Payload {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        **self == other[..]
+    }
+}
+
+impl PartialEq<[f32]> for Payload {
+    fn eq(&self, other: &[f32]) -> bool {
+        **self == *other
+    }
+}
 
 /// A gradient transfer: the packed (fusion-planned) gradient buffer plus
 /// the metadata needed for staleness accounting and delivery modelling.
@@ -21,24 +94,30 @@ pub struct GradMsg {
     /// Earliest wall-clock instant the receiver may observe the message
     /// (link-model latency injection; `None` = immediate).
     pub deliver_at: Option<Instant>,
-    /// Packed gradient payload.
-    pub data: Vec<f32>,
+    /// Packed gradient payload (owned/pooled or shared; see [`Payload`]).
+    pub data: Payload,
 }
 
 impl GradMsg {
-    pub fn new(from: usize, epoch: u64, step: u32, data: Vec<f32>) -> GradMsg {
+    pub fn new(from: usize, epoch: u64, step: u32, data: impl Into<Payload>) -> GradMsg {
         GradMsg {
             from,
             epoch,
             step,
             chunk: 0,
             deliver_at: None,
-            data,
+            data: data.into(),
         }
     }
 
     /// A chunk-indexed message (one partition of a chunked ring pass).
-    pub fn chunked(from: usize, epoch: u64, step: u32, chunk: u32, data: Vec<f32>) -> GradMsg {
+    pub fn chunked(
+        from: usize,
+        epoch: u64,
+        step: u32,
+        chunk: u32,
+        data: impl Into<Payload>,
+    ) -> GradMsg {
         GradMsg {
             chunk,
             ..GradMsg::new(from, epoch, step, data)
@@ -89,15 +168,29 @@ mod tests {
 
     #[test]
     fn wait_delivery_blocks_until_instant() {
-        let mut m = GradMsg::new(0, 0, 0, vec![]);
+        let mut m = GradMsg::new(0, 0, 0, Vec::new());
         m.deliver_at = Some(Instant::now() + Duration::from_millis(10));
         let t0 = Instant::now();
         m.wait_delivery();
         assert!(t0.elapsed() >= Duration::from_millis(9));
         // No deliver_at: returns immediately.
-        let m2 = GradMsg::new(0, 0, 0, vec![]);
+        let m2 = GradMsg::new(0, 0, 0, Vec::new());
         let t1 = Instant::now();
         m2.wait_delivery();
         assert!(t1.elapsed() < Duration::from_millis(5));
+    }
+
+    #[test]
+    fn shared_payloads_read_like_owned_ones() {
+        let shared: Arc<[f32]> = Arc::from(vec![1.0f32, 2.0, 3.0]);
+        let m = GradMsg::new(1, 0, 0, shared.clone());
+        assert_eq!(m.bytes(), 12);
+        assert_eq!(m.data[1], 2.0);
+        assert_eq!(m.data, vec![1.0, 2.0, 3.0]);
+        // Shared payloads cannot be reclaimed as owned buffers...
+        assert!(m.data.take_owned().is_none());
+        // ...owned ones can, without copying.
+        let m = GradMsg::new(1, 0, 0, vec![5.0f32; 4]);
+        assert_eq!(m.data.take_owned(), Some(vec![5.0; 4]));
     }
 }

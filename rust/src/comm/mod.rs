@@ -14,15 +14,22 @@
 //!   latency so single-host runs exhibit network-like timing.
 //! * [`topology`] — ring neighbourhoods and the inner/outer grouping of
 //!   Sec. IV-B4.
+//! * [`pool`] — the shared checkout/recycle buffer pool that keeps the
+//!   steady-state exchange path allocation-free, and [`channel`], the
+//!   capacity-retaining queue beneath the transports (DESIGN.md
+//!   §Memory discipline).
 
+pub mod channel;
 pub mod link_model;
 pub mod message;
+pub mod pool;
 pub mod rma;
 pub mod topology;
 pub mod transport;
 
 pub use link_model::LinkModel;
-pub use message::GradMsg;
+pub use message::{GradMsg, Payload};
+pub use pool::{BufferPool, PoolStats};
 pub use rma::{RmaRegion, RmaWindow};
 pub use topology::{MembershipView, Topology};
 pub use transport::{Endpoint, LocalNetwork};

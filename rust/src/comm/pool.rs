@@ -1,0 +1,394 @@
+//! Shared checkout/recycle pool for gradient payload buffers.
+//!
+//! The exchange hot path used to allocate a fresh `Vec<f32>` for every
+//! message it sent: each [`GradMsg`](crate::comm::GradMsg) payload, the
+//! blocking facade's `to_vec()`, the chunked ring's per-call spares.
+//! [`BufferPool`] replaces all of that with one slab shared across a
+//! run's collectives, engine, and pipeline: buffers are *checked out*
+//! at send, travel inside messages, and are *recycled* at
+//! receive-apply, so a steady-state epoch touches the allocator zero
+//! times (proven by `rust/tests/alloc.rs` and the
+//! `benches/micro_collective.rs` counting allocator).
+//!
+//! # Size classes
+//!
+//! Buffers are bucketed by the largest power of two ≤ their capacity,
+//! and a checkout for `len` elements draws from the bucket of
+//! `len.next_power_of_two()` — every buffer in that bucket is
+//! guaranteed to hold `len` without reallocating. A miss allocates a
+//! buffer of exactly `len.next_power_of_two()` capacity, so it lands
+//! back in the same bucket on recycle and the pool converges to one
+//! stable working set per size class (full tensors and ring-chunk
+//! partitions occupy different classes and never fight each other).
+//!
+//! # Flow balance
+//!
+//! In a ring pass every rank sends and receives the same number of
+//! buffers, so checkouts and recycles balance per pool even when each
+//! rank holds its own pool and buffers migrate around the ring inside
+//! messages. [`build_with_policy`](crate::collective::build_with_policy)
+//! shares a single pool across all of a run's ranks, which makes the
+//! balance global and unconditional (the hierarchical mode's
+//! master/member flows are asymmetric per rank but symmetric overall).
+//!
+//! # Trim policy
+//!
+//! Mirroring the runtime scratch discipline (DESIGN.md §Throughput),
+//! the pool tracks the peak number of concurrently checked-out buffers
+//! per bucket and [`trim`](BufferPool::trim) — called at quiescence
+//! points such as [`Collective::drain`](crate::collective::Collective)
+//! — drops free buffers beyond `4 × peak` (hysteresis so a drain never
+//! sheds the working set the next epoch needs). A hard per-bucket cap
+//! bounds retention even if trim is never called.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::collective::CommStats;
+
+use super::message::Payload;
+
+/// Power-of-two size-class buckets: `2^0 ..= 2^32` element capacities
+/// (a 2^32-f32 gradient is 16 GiB; nothing here gets close).
+const BUCKETS: usize = 33;
+
+/// Trim keeps up to `TRIM_HYSTERESIS × peak` free buffers per bucket.
+const TRIM_HYSTERESIS: usize = 4;
+
+/// Hard cap on free buffers retained per bucket, enforced at recycle
+/// (bounds memory even for asymmetric flows that never drain).
+const MAX_FREE_PER_BUCKET: usize = 64;
+
+/// Cumulative pool counters (atomic snapshot; see [`BufferPool::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Checkouts that had to allocate (pool miss).
+    pub allocs: u64,
+    /// Checkouts served from the free list (pool hit).
+    pub hits: u64,
+    /// Bytes of buffers returned to the pool.
+    pub bytes_recycled: u64,
+    /// Free buffers dropped by trim or the per-bucket cap.
+    pub trimmed: u64,
+    /// Free buffers currently retained.
+    pub retained: usize,
+    /// Bytes currently retained on the free lists.
+    pub retained_bytes: usize,
+}
+
+impl PoolStats {
+    /// Fraction of checkouts served without allocating (1.0 when the
+    /// pool has never missed; 0.0 before the first checkout).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.allocs + self.hits;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[derive(Default)]
+struct Bucket {
+    free: Vec<Vec<f32>>,
+    /// Checkouts minus recycles; negative when buffers checked out of a
+    /// *different* pool were recycled here (per-rank pools in a ring).
+    outstanding: i64,
+    /// Peak positive `outstanding` since the last trim.
+    peak: i64,
+}
+
+struct Inner {
+    buckets: Mutex<Vec<Bucket>>,
+    allocs: AtomicU64,
+    hits: AtomicU64,
+    bytes_recycled: AtomicU64,
+    trimmed: AtomicU64,
+}
+
+/// The shared buffer pool (cheaply cloneable handle; clones share one
+/// slab). See the module docs for the size-class, balance, and trim
+/// contracts.
+#[derive(Clone)]
+pub struct BufferPool {
+    inner: Arc<Inner>,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        BufferPool::new()
+    }
+}
+
+impl std::fmt::Debug for BufferPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BufferPool").field("stats", &self.stats()).finish()
+    }
+}
+
+/// Bucket a checkout of `len` elements draws from: the class of
+/// `len.next_power_of_two()`.
+fn checkout_bucket(len: usize) -> usize {
+    len.next_power_of_two().trailing_zeros() as usize
+}
+
+/// Bucket a buffer of `cap` capacity is retained in: the largest power
+/// of two ≤ `cap`, so every retained buffer satisfies its bucket's
+/// checkout size without reallocating.
+fn recycle_bucket(cap: usize) -> Option<usize> {
+    if cap == 0 {
+        return None;
+    }
+    Some((usize::BITS - 1 - cap.leading_zeros()) as usize)
+}
+
+impl BufferPool {
+    /// An empty pool.
+    pub fn new() -> BufferPool {
+        let mut buckets = Vec::with_capacity(BUCKETS);
+        buckets.resize_with(BUCKETS, Bucket::default);
+        BufferPool {
+            inner: Arc::new(Inner {
+                buckets: Mutex::new(buckets),
+                allocs: AtomicU64::new(0),
+                hits: AtomicU64::new(0),
+                bytes_recycled: AtomicU64::new(0),
+                trimmed: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Whether two handles share one slab.
+    pub fn same_pool(&self, other: &BufferPool) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
+    }
+
+    /// Check out a cleared buffer with capacity ≥ `len`. Pool hits and
+    /// misses are counted into `stats` (and the cumulative totals).
+    pub fn checkout(&self, len: usize, stats: &mut CommStats) -> Vec<f32> {
+        if len == 0 {
+            stats.pool_hits += 1;
+            self.inner.hits.fetch_add(1, Ordering::Relaxed);
+            return Vec::new();
+        }
+        let b = checkout_bucket(len);
+        {
+            let mut buckets = self.inner.buckets.lock().expect("buffer pool poisoned");
+            let bucket = &mut buckets[b];
+            bucket.outstanding += 1;
+            bucket.peak = bucket.peak.max(bucket.outstanding);
+            if let Some(mut buf) = bucket.free.pop() {
+                debug_assert!(buf.capacity() >= len);
+                buf.clear();
+                stats.pool_hits += 1;
+                self.inner.hits.fetch_add(1, Ordering::Relaxed);
+                return buf;
+            }
+        }
+        stats.allocs += 1;
+        self.inner.allocs.fetch_add(1, Ordering::Relaxed);
+        Vec::with_capacity(len.next_power_of_two())
+    }
+
+    /// Check out a buffer pre-filled with a copy of `src`.
+    pub fn checkout_filled(&self, src: &[f32], stats: &mut CommStats) -> Vec<f32> {
+        let mut buf = self.checkout(src.len(), stats);
+        buf.extend_from_slice(src);
+        buf
+    }
+
+    /// Return a buffer to the pool. Zero-capacity buffers are dropped;
+    /// buffers beyond the per-bucket hard cap are dropped and counted
+    /// as trimmed.
+    pub fn recycle(&self, buf: Vec<f32>, stats: &mut CommStats) {
+        let cap = buf.capacity();
+        let Some(b) = recycle_bucket(cap) else {
+            return;
+        };
+        stats.bytes_recycled += (buf.len() * 4) as u64;
+        self.inner
+            .bytes_recycled
+            .fetch_add((buf.len() * 4) as u64, Ordering::Relaxed);
+        let mut buckets = self.inner.buckets.lock().expect("buffer pool poisoned");
+        let bucket = &mut buckets[b];
+        bucket.outstanding -= 1;
+        if bucket.free.len() >= MAX_FREE_PER_BUCKET {
+            self.inner.trimmed.fetch_add(1, Ordering::Relaxed);
+            return; // drop `buf`
+        }
+        bucket.free.push(buf);
+    }
+
+    /// Recycle a message payload: owned buffers return to the pool,
+    /// shared ([`Arc`]) payloads are just dropped (the backing slice is
+    /// freed when the last receiver drops its clone).
+    pub fn recycle_payload(&self, payload: Payload, stats: &mut CommStats) {
+        if let Some(buf) = payload.take_owned() {
+            self.recycle(buf, stats);
+        }
+    }
+
+    /// High-water-mark trim (call at quiescence points such as
+    /// `drain()`): per bucket, drop free buffers beyond
+    /// `4 × peak-outstanding-since-last-trim`, then reset the peak.
+    /// The hysteresis keeps the steady-state working set resident so
+    /// the epochs after a drain stay allocation-free.
+    pub fn trim(&self) {
+        let mut buckets = self.inner.buckets.lock().expect("buffer pool poisoned");
+        for bucket in buckets.iter_mut() {
+            let keep = (bucket.peak.max(1) as usize).saturating_mul(TRIM_HYSTERESIS);
+            while bucket.free.len() > keep {
+                bucket.free.pop();
+                self.inner.trimmed.fetch_add(1, Ordering::Relaxed);
+            }
+            bucket.peak = bucket.outstanding.max(0);
+        }
+    }
+
+    /// Snapshot the cumulative counters plus current retention.
+    pub fn stats(&self) -> PoolStats {
+        let (retained, retained_bytes) = {
+            let buckets = self.inner.buckets.lock().expect("buffer pool poisoned");
+            let mut n = 0usize;
+            let mut bytes = 0usize;
+            for b in buckets.iter() {
+                n += b.free.len();
+                for buf in &b.free {
+                    bytes += buf.capacity() * 4;
+                }
+            }
+            (n, bytes)
+        };
+        PoolStats {
+            allocs: self.inner.allocs.load(Ordering::Relaxed),
+            hits: self.inner.hits.load(Ordering::Relaxed),
+            bytes_recycled: self.inner.bytes_recycled.load(Ordering::Relaxed),
+            trimmed: self.inner.trimmed.load(Ordering::Relaxed),
+            retained,
+            retained_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_miss_then_hit_round_trips_one_buffer() {
+        let pool = BufferPool::new();
+        let mut stats = CommStats::default();
+        let buf = pool.checkout_filled(&[1.0, 2.0, 3.0], &mut stats);
+        assert_eq!(buf, vec![1.0, 2.0, 3.0]);
+        assert_eq!(stats.allocs, 1);
+        assert_eq!(stats.pool_hits, 0);
+        let cap = buf.capacity();
+        pool.recycle(buf, &mut stats);
+        assert_eq!(stats.bytes_recycled, 12);
+        // Same size class: served from the free list, same backing
+        // capacity, cleared.
+        let again = pool.checkout(3, &mut stats);
+        assert_eq!(stats.pool_hits, 1);
+        assert_eq!(stats.allocs, 1);
+        assert!(again.is_empty());
+        assert_eq!(again.capacity(), cap);
+    }
+
+    #[test]
+    fn size_classes_never_serve_undersized_buffers() {
+        let pool = BufferPool::new();
+        let mut stats = CommStats::default();
+        // A foreign buffer with an off-class capacity (100) is retained
+        // in the largest class it fully covers (64), so it serves
+        // requests up to 64 elements but never a 65..128 request.
+        pool.recycle(Vec::with_capacity(100), &mut stats);
+        let big = pool.checkout(100, &mut stats);
+        assert!(big.capacity() >= 100);
+        assert_eq!(stats.allocs, 1, "100-elem checkout must not hit the 64 class");
+        let small = pool.checkout(64, &mut stats);
+        assert!(small.capacity() >= 64);
+        assert_eq!(stats.pool_hits, 1);
+        // Pool-allocated buffers are rounded to the class size, so they
+        // round-trip into the class that produced them.
+        pool.recycle(big, &mut stats);
+        let again = pool.checkout(128, &mut stats);
+        assert!(again.capacity() >= 128);
+        assert_eq!(stats.allocs, 1);
+        assert_eq!(stats.pool_hits, 2);
+    }
+
+    #[test]
+    fn trim_keeps_the_working_set_with_hysteresis() {
+        let pool = BufferPool::new();
+        let mut stats = CommStats::default();
+        // Working set of 2 concurrent buffers, plus 10 idle extras.
+        let a = pool.checkout(16, &mut stats);
+        let b = pool.checkout(16, &mut stats);
+        let extras: Vec<_> = (0..10).map(|_| pool.checkout(16, &mut stats)).collect();
+        for e in extras {
+            pool.recycle(e, &mut stats);
+        }
+        pool.recycle(a, &mut stats);
+        pool.recycle(b, &mut stats);
+        assert_eq!(pool.stats().retained, 12);
+        pool.trim(); // peak outstanding was 12 -> nothing to drop
+        assert_eq!(pool.stats().retained, 12);
+        // Second trim interval only sees a 1-deep working set.
+        let c = pool.checkout(16, &mut stats);
+        pool.recycle(c, &mut stats);
+        pool.trim(); // keep 4 x peak(1) = 4
+        let st = pool.stats();
+        assert_eq!(st.retained, 4);
+        assert_eq!(st.trimmed, 8);
+        // The surviving set still serves the next epoch without allocs.
+        let before = pool.stats().allocs;
+        let d = pool.checkout(16, &mut stats);
+        pool.recycle(d, &mut stats);
+        assert_eq!(pool.stats().allocs, before);
+    }
+
+    #[test]
+    fn hard_cap_bounds_retention_without_trim() {
+        let pool = BufferPool::new();
+        let mut stats = CommStats::default();
+        for _ in 0..(MAX_FREE_PER_BUCKET + 10) {
+            let buf = pool.checkout(8, &mut stats);
+            // Recycle a *second* allocation each round so the free list
+            // only ever grows: simulate an asymmetric receiver.
+            pool.recycle(buf, &mut stats);
+            pool.recycle(Vec::with_capacity(8), &mut stats);
+        }
+        let st = pool.stats();
+        assert!(st.retained <= MAX_FREE_PER_BUCKET);
+        assert!(st.trimmed > 0);
+    }
+
+    #[test]
+    fn shared_payloads_recycle_as_noop() {
+        let pool = BufferPool::new();
+        let mut stats = CommStats::default();
+        let shared = Payload::from(std::sync::Arc::<[f32]>::from(vec![1.0f32; 4]));
+        pool.recycle_payload(shared, &mut stats);
+        assert_eq!(stats.bytes_recycled, 0);
+        assert_eq!(pool.stats().retained, 0);
+        let owned = Payload::from(vec![1.0f32; 4]);
+        pool.recycle_payload(owned, &mut stats);
+        assert_eq!(stats.bytes_recycled, 16);
+        assert_eq!(pool.stats().retained, 1);
+    }
+
+    #[test]
+    fn hit_rate_and_clone_share_one_slab() {
+        let pool = BufferPool::new();
+        let handle = pool.clone();
+        assert!(pool.same_pool(&handle));
+        let mut stats = CommStats::default();
+        let buf = handle.checkout(4, &mut stats);
+        pool.recycle(buf, &mut stats);
+        let _ = pool.checkout(4, &mut stats);
+        let st = pool.stats();
+        assert_eq!((st.allocs, st.hits), (1, 1));
+        assert!((st.hit_rate() - 0.5).abs() < 1e-12);
+    }
+}

@@ -5,11 +5,16 @@
 //! messages), `recv(from)` blocks until a message from that specific
 //! sender arrives, `try_recv(from)` polls. Every ordered rank pair gets a
 //! dedicated FIFO link, so per-sender ordering matches MPI's non-overtaking
-//! guarantee.
+//! guarantee. Links ride the capacity-retaining
+//! [`channel`](super::channel) (not `std::sync::mpsc`, which allocates a
+//! block per ~32 messages), so a warmed link enqueues without touching
+//! the allocator — half of the zero-allocation steady-state contract,
+//! the pooled payloads being the other half.
 
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
+
+use super::channel::{channel, Receiver, Sender, TryRecvError};
 
 use super::link_model::LinkModel;
 use super::message::GradMsg;

@@ -10,6 +10,8 @@
 //! The staging buffer is allocated once and reused — the per-epoch hot
 //! path performs no allocation.
 
+use crate::collective::CommStats;
+use crate::comm::BufferPool;
 use crate::tensor::fusion::FusionPlan;
 use crate::util::error::Result;
 
@@ -20,18 +22,23 @@ use crate::util::error::Result;
 ///   [`GradOffloader::onload`] for the blocking loop, and
 /// * the owned pair [`GradOffloader::pack_owned`] /
 ///   [`GradOffloader::onload_from`] + [`GradOffloader::recycle`] for the
-///   overlap pipeline, which multi-buffers: up to `spare_cap` packed
-///   buffers ride the collective engine's comm thread (one per in-flight
-///   exchange of a k-deep staleness window) while the next epoch packs
-///   into a recycled spare, so overlapping epochs never share storage and
-///   the steady-state hot path still performs no allocation.
+///   overlap pipeline, which draws packed transfer buffers from a
+///   [`BufferPool`]: up to k packed buffers ride the collective engine's
+///   comm thread (one per in-flight exchange of a k-deep staleness
+///   window) while the next epoch packs into a recycled buffer, so a
+///   window of depth k holds exactly k+1 buffers at steady state and the
+///   hot path performs no allocation. Handing the offloader the
+///   collective's own pool (see
+///   [`crate::collective::Collective::buffer_pool`]) makes pack-side
+///   checkouts and receive-side recycles flow through one shared slab.
 pub struct GradOffloader {
     plan: FusionPlan,
     staging: Vec<f32>,
-    /// Recycled owned transfer buffers for the overlap pipeline.
-    spares: Vec<Vec<f32>>,
-    /// Spare-pool bound: the window depth plus one packing buffer.
-    spare_cap: usize,
+    /// Pool backing the owned transfer buffers of the overlap pipeline.
+    pool: BufferPool,
+    /// Pool traffic (allocs / hits / recycled bytes) attributable to
+    /// staging; merged into the run's comm totals by the pipeline.
+    stats: CommStats,
     /// Total bytes staged (both directions), for the §Perf accounting.
     pub bytes_staged: u64,
 }
@@ -42,18 +49,23 @@ impl GradOffloader {
         GradOffloader {
             plan,
             staging: Vec::with_capacity(cap),
-            spares: Vec::new(),
-            spare_cap: 2,
+            pool: BufferPool::new(),
+            stats: CommStats::default(),
             bytes_staged: 0,
         }
     }
 
-    /// Size the recycled-buffer pool for a k-deep exchange window (k
-    /// in-flight buffers + 1 being packed). The default pool of 2 covers
-    /// the classic one-epoch-stale overlap.
-    pub fn with_spare_cap(mut self, cap: usize) -> GradOffloader {
-        self.spare_cap = cap.max(1);
+    /// Draw owned transfer buffers from `pool` instead of a private one —
+    /// normally the collective's shared pool, so buffers the collective
+    /// recycled at receive-apply come back as pack-side checkouts.
+    pub fn with_pool(mut self, pool: BufferPool) -> GradOffloader {
+        self.pool = pool;
         self
+    }
+
+    /// Pool traffic attributable to staging, for comm-total accounting.
+    pub fn pool_stats(&self) -> &CommStats {
+        &self.stats
     }
 
     /// Off-load: pack the transferable slices of `grads` into the staging
@@ -77,10 +89,12 @@ impl GradOffloader {
     }
 
     /// Off-load into an *owned* buffer for the non-blocking collective
-    /// API (the buffer's ownership moves into `start_reduce`). Reuses a
-    /// recycled spare when one is available.
+    /// API (the buffer's ownership moves into `start_reduce`). Checked
+    /// out of the pool — a hit after warmup, never an allocation.
     pub fn pack_owned(&mut self, grads: &[f32]) -> Result<Vec<f32>> {
-        let mut buf = self.spares.pop().unwrap_or_default();
+        let mut buf = self
+            .pool
+            .checkout(self.plan.transfer_elems(), &mut self.stats);
         self.plan.pack(grads, &mut buf)?;
         self.bytes_staged += (buf.len() * 4) as u64;
         Ok(buf)
@@ -94,11 +108,9 @@ impl GradOffloader {
         Ok(())
     }
 
-    /// Return a buffer obtained from `wait_reduce` to the spare pool.
+    /// Return a buffer obtained from `wait_reduce` to the pool.
     pub fn recycle(&mut self, buf: Vec<f32>) {
-        if self.spares.len() < self.spare_cap {
-            self.spares.push(buf);
-        }
+        self.pool.recycle(buf, &mut self.stats);
     }
 
     /// Elements that travel per epoch.
@@ -171,24 +183,32 @@ mod tests {
         assert_eq!(back[3], 1.5); // weights halved
         assert_eq!(back[4], 4.0); // biases local
         off.recycle(a);
-        // The next pack reuses the recycled storage: no new allocation.
+        // The next pack reuses the recycled storage: a pool hit, not an
+        // allocation.
+        let allocs_before = off.pool_stats().allocs;
         let c = off.pack_owned(&grads).unwrap();
         assert_eq!(c.len(), 10);
+        assert_eq!(off.pool_stats().allocs, allocs_before);
         off.recycle(b);
         off.recycle(c);
     }
 
     #[test]
-    fn spare_pool_sized_for_window_depth() {
-        let mut off = GradOffloader::new(plan_weights_only()).with_spare_cap(4);
+    fn window_depth_buffers_reach_steady_state() {
+        let mut off = GradOffloader::new(plan_weights_only());
         let grads = vec![1.0f32; 13];
-        // A 3-deep window keeps 3 buffers in flight + 1 packing; all four
-        // must fit back in the pool (a 5th is dropped).
-        let bufs: Vec<Vec<f32>> = (0..5).map(|_| off.pack_owned(&grads).unwrap()).collect();
-        for b in bufs {
-            off.recycle(b);
+        // A 3-deep window keeps 3 buffers in flight + 1 packing; after
+        // those first four allocations, rotation is pure hits.
+        let mut in_flight: Vec<Vec<f32>> =
+            (0..4).map(|_| off.pack_owned(&grads).unwrap()).collect();
+        assert_eq!(off.pool_stats().allocs, 4);
+        for _ in 0..8 {
+            off.recycle(in_flight.remove(0));
+            in_flight.push(off.pack_owned(&grads).unwrap());
         }
-        assert_eq!(off.spares.len(), 4);
+        assert_eq!(off.pool_stats().allocs, 4, "steady state must not allocate");
+        assert_eq!(off.pool_stats().pool_hits, 8);
+        assert_eq!(off.pool_stats().bytes_recycled, 8 * 10 * 4);
     }
 
     #[test]

@@ -354,10 +354,15 @@ impl RankPipeline {
             }
         }
 
-        // Weight-only fusion plan over the generator layout (Sec. V-C);
-        // the spare pool covers the full exchange window.
+        // Weight-only fusion plan over the generator layout (Sec. V-C).
+        // The offloader stages through the collective's own buffer pool,
+        // so a k-deep staleness window holds exactly k+1 transfer buffers
+        // at steady state and packs/applies allocate nothing after warmup.
         let plan = FusionPlan::build(meta.gen_segments(), cfg.fusion_bucket, cfg.include_bias);
-        let offloader = GradOffloader::new(plan).with_spare_cap(cfg.staleness + 1);
+        let offloader = match collective.buffer_pool() {
+            Some(pool) => GradOffloader::new(plan).with_pool(pool),
+            None => GradOffloader::new(plan),
+        };
 
         let step = TrainStep::new(handle, &cfg.gan_step_artifact())?;
         let disc_batch = step.disc_batch();
@@ -1015,7 +1020,11 @@ impl RankPipeline {
     }
 
     /// Tear down into the rank's outcome.
-    pub fn into_outcome(self) -> RankOutcome {
+    pub fn into_outcome(mut self) -> RankOutcome {
+        // Fold staging-side pool traffic into the comm totals so the run
+        // summary's alloc/hit columns cover the whole exchange path.
+        let staging = *self.offloader.pool_stats();
+        self.comm_totals.merge(&staging);
         RankOutcome {
             rank: self.rank,
             recorder: self.recorder,

@@ -9,7 +9,7 @@
 //!   validate-artifacts   load + smoke-run every artifact in the manifest
 //!   serve                run the job daemon (journaled queue + scheduler)
 //!   job <verb>           client verbs against a running daemon
-//!                        (submit|status|cancel|list|reload|ping|shutdown)
+//!                        (submit|status|cancel|list|reload|compact|ping|shutdown)
 //!
 //! Run `sagips help` for options.
 
@@ -57,7 +57,7 @@ fn print_help() {
          scenarios            list registered inverse-problem scenarios\n  \
          validate-artifacts   smoke-run every artifact\n  \
          serve                job daemon: journaled queue, scheduler, cancellation\n  \
-         job <verb>           submit|status|cancel|list|reload|ping|shutdown\n\n\
+         job <verb>           submit|status|cancel|list|reload|compact|ping|shutdown\n\n\
          common options: --scenario <name> --backend native|pjrt --artifacts <dir> \
          --workers <n> --seed <n>\n\
          engine: --chunking unchunked|auto|<elems> --staleness <k> \
@@ -540,7 +540,9 @@ fn cmd_job(args: &[String]) -> Result<()> {
     let rest: Vec<String> = args[1..].to_vec();
     match verb.as_str() {
         "submit" => job_submit(&rest),
-        "status" | "cancel" | "list" | "reload" | "ping" | "shutdown" => job_simple(&verb, &rest),
+        "status" | "cancel" | "list" | "reload" | "compact" | "ping" | "shutdown" => {
+            job_simple(&verb, &rest)
+        }
         other => Err(Error::Usage(format!(
             "unknown job verb '{other}' — valid verbs: {}",
             protocol::VERBS.join(", ")
@@ -614,6 +616,7 @@ fn job_simple(verb: &str, args: &[String]) -> Result<()> {
         "cancel" => protocol::Request::Cancel { id: id()? },
         "list" => protocol::Request::List,
         "reload" => protocol::Request::Reload,
+        "compact" => protocol::Request::Compact,
         "ping" => protocol::Request::Ping,
         "shutdown" => protocol::Request::Shutdown,
         _ => unreachable!("cmd_job routed an unknown verb"),
@@ -637,6 +640,10 @@ fn job_simple(verb: &str, args: &[String]) -> Result<()> {
         }
         "cancel" => println!("cancel: {}", resp.req_str("result")?),
         "reload" => println!("reloaded: {}", resp.req_str("reloaded")?),
+        "compact" => println!(
+            "journal compacted: {} lines",
+            resp.req_usize("journal_lines")?
+        ),
         "ping" => println!(
             "daemon up: {} running, {} queued",
             resp.req_usize("running")?,

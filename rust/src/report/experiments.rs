@@ -373,7 +373,10 @@ pub fn weak_scaling_curves(
 /// straggler-policy outcomes (exchanges skipped / applied past deadline),
 /// and the membership bookkeeping (live ranks at the end of the run plus
 /// join/leave/evict event counts — `members` equals the launched width
-/// and the counts are 0 for a fixed cohort).
+/// and the counts are 0 for a fixed cohort). The trailing pair surfaces
+/// the buffer-pool discipline: `comm_allocs` is total exchange-path
+/// buffer allocations across ranks (warmup only, at steady state) and
+/// `pool_hit_%` the share of checkouts served without allocating.
 pub const RUN_SUMMARY_COLS: &[&str] = &[
     "wall_s",
     "events_per_s",
@@ -386,6 +389,8 @@ pub const RUN_SUMMARY_COLS: &[&str] = &[
     "joins",
     "leaves",
     "evicts",
+    "comm_allocs",
+    "pool_hit_%",
 ];
 
 /// One run-summary row (the x column is the configured staleness k, so
@@ -398,6 +403,13 @@ pub fn run_summary_row(cfg: &RunConfig, run: &RunResult) -> (f64, Vec<f64>) {
     use crate::coordinator::MembershipChange;
     let skips: u64 = run.comm.iter().map(|c| c.skips).sum();
     let late: u64 = run.comm.iter().map(|c| c.late_applies).sum();
+    let allocs: u64 = run.comm.iter().map(|c| c.allocs).sum();
+    let hits: u64 = run.comm.iter().map(|c| c.pool_hits).sum();
+    let hit_pct = if allocs + hits == 0 {
+        100.0
+    } else {
+        100.0 * hits as f64 / (allocs + hits) as f64
+    };
     (
         cfg.staleness as f64,
         vec![
@@ -412,6 +424,8 @@ pub fn run_summary_row(cfg: &RunConfig, run: &RunResult) -> (f64, Vec<f64>) {
             run.membership_count(MembershipChange::Join) as f64,
             run.membership_count(MembershipChange::Leave) as f64,
             run.membership_count(MembershipChange::Evict) as f64,
+            allocs as f64,
+            hit_pct,
         ],
     )
 }
@@ -541,9 +555,13 @@ mod tests {
         r.push("members", 1, 3.0);
         let mut comm_a = crate::collective::CommStats::default();
         comm_a.skips = 2;
+        comm_a.allocs = 3;
+        comm_a.pool_hits = 7;
         let mut comm_b = crate::collective::CommStats::default();
         comm_b.skips = 1;
         comm_b.late_applies = 3;
+        comm_b.allocs = 1;
+        comm_b.pool_hits = 5;
         let run = RunResult {
             wall_s: 2.0,
             metrics: MergedMetrics::new(vec![r]),
@@ -587,6 +605,8 @@ mod tests {
         assert_eq!(cols[8], 1.0); // joins
         assert_eq!(cols[9], 1.0); // leaves
         assert_eq!(cols[10], 1.0); // evicts
+        assert_eq!(cols[11], 4.0); // comm_allocs summed across ranks
+        assert_eq!(cols[12], 75.0); // pool_hit_%: 12 hits of 16 checkouts
     }
 
     #[test]

@@ -141,6 +141,16 @@ impl Daemon {
                 ),
                 Err(e) => (protocol::err_response(&e), false),
             },
+            Request::Compact => match self.scheduler.compact() {
+                Ok(lines) => (
+                    protocol::ok_response(vec![(
+                        "journal_lines",
+                        json::num(lines as f64),
+                    )]),
+                    false,
+                ),
+                Err(e) => (protocol::err_response(&e), false),
+            },
             Request::Shutdown => (
                 protocol::ok_response(vec![("shutdown", Value::Bool(true))]),
                 true,

@@ -27,8 +27,8 @@ use crate::util::json::{self, Value};
 use super::job::{JobId, JobState, JobStatus};
 
 /// Every verb the daemon understands, in help order.
-pub const VERBS: [&str; 7] = [
-    "submit", "status", "cancel", "list", "reload", "ping", "shutdown",
+pub const VERBS: [&str; 8] = [
+    "submit", "status", "cancel", "list", "reload", "compact", "ping", "shutdown",
 ];
 
 /// A parsed client request.
@@ -47,6 +47,9 @@ pub enum Request {
     },
     List,
     Reload,
+    /// Rewrite the queue journal as a snapshot (drops superseded
+    /// state-transition lines for every job).
+    Compact,
     Ping,
     Shutdown,
 }
@@ -82,6 +85,7 @@ impl Request {
             "cancel" => Ok(Request::Cancel { id: req_id(&v)? }),
             "list" => Ok(Request::List),
             "reload" => Ok(Request::Reload),
+            "compact" => Ok(Request::Compact),
             "ping" => Ok(Request::Ping),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(Error::config(format!(
@@ -114,6 +118,7 @@ impl Request {
             ]),
             Request::List => json::obj(vec![("verb", json::s("list"))]),
             Request::Reload => json::obj(vec![("verb", json::s("reload"))]),
+            Request::Compact => json::obj(vec![("verb", json::s("compact"))]),
             Request::Ping => json::obj(vec![("verb", json::s("ping"))]),
             Request::Shutdown => json::obj(vec![("verb", json::s("shutdown"))]),
         };
@@ -202,6 +207,7 @@ mod tests {
             Request::Cancel { id: 7 },
             Request::List,
             Request::Reload,
+            Request::Compact,
             Request::Ping,
             Request::Shutdown,
         ];

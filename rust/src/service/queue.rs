@@ -43,6 +43,11 @@ use super::job::{Job, JobId, JobOutcome, JobSpec, JobState};
 /// Journal file name inside the daemon's state directory.
 pub const JOURNAL_FILE: &str = "journal.jsonl";
 
+/// Auto-compaction threshold [`JobQueue::open`] uses: when replay reads
+/// more than this many journal lines, the journal is rewritten as a
+/// snapshot (≤ 2 lines per job) before the daemon starts appending.
+pub const DEFAULT_JOURNAL_COMPACT_LINES: usize = 4096;
+
 /// The in-memory queue plus its append-only on-disk journal.
 pub struct JobQueue {
     jobs: BTreeMap<JobId, Job>,
@@ -51,6 +56,10 @@ pub struct JobQueue {
     max_queued: usize,
     /// Append handle; `None` for an ephemeral (test) queue.
     journal: Option<File>,
+    /// Journal path; `None` for an ephemeral (test) queue.
+    path: Option<PathBuf>,
+    /// Lines currently in the journal (replayed + appended since open).
+    journal_lines: usize,
 }
 
 impl JobQueue {
@@ -61,13 +70,30 @@ impl JobQueue {
             next_id: 1,
             max_queued,
             journal: None,
+            path: None,
+            journal_lines: 0,
         }
+    }
+
+    /// Open (or create) the journaled queue under `state_dir` with the
+    /// default auto-compaction threshold. See
+    /// [`JobQueue::open_with_compaction`].
+    pub fn open(state_dir: &Path, max_queued: usize) -> Result<JobQueue> {
+        JobQueue::open_with_compaction(state_dir, max_queued, DEFAULT_JOURNAL_COMPACT_LINES)
     }
 
     /// Open (or create) the journaled queue under `state_dir`,
     /// replaying any existing journal. Jobs the journal leaves in
-    /// `running` are re-queued as interrupted.
-    pub fn open(state_dir: &Path, max_queued: usize) -> Result<JobQueue> {
+    /// `running` are re-queued as interrupted. When the replayed
+    /// journal exceeds `compact_lines` lines (0 disables), it is
+    /// rewritten in place as a snapshot — replaying years of state
+    /// transitions on every restart is the one place the append-only
+    /// design would otherwise grow without bound.
+    pub fn open_with_compaction(
+        state_dir: &Path,
+        max_queued: usize,
+        compact_lines: usize,
+    ) -> Result<JobQueue> {
         std::fs::create_dir_all(state_dir)?;
         let path = state_dir.join(JOURNAL_FILE);
         let mut q = JobQueue::ephemeral(max_queued);
@@ -76,6 +102,7 @@ impl JobQueue {
             q.replay(&text)?;
         }
         q.journal = Some(OpenOptions::new().create(true).append(true).open(&path)?);
+        q.path = Some(path);
         // Interrupted jobs: journaled running, but no daemon is running
         // them any more. Re-queue (journaled, so a second restart agrees).
         let interrupted: Vec<JobId> = q
@@ -98,6 +125,9 @@ impl JobQueue {
             ]);
             q.append(&line)?;
         }
+        if compact_lines > 0 && q.journal_lines > compact_lines {
+            q.compact()?;
+        }
         Ok(q)
     }
 
@@ -108,6 +138,7 @@ impl JobQueue {
             if line.is_empty() {
                 continue;
             }
+            self.journal_lines += 1;
             let v = Value::parse(line).map_err(|e| {
                 Error::Checkpoint(format!("journal line {}: {e}", no + 1))
             })?;
@@ -178,8 +209,82 @@ impl JobQueue {
             f.write_all(line.to_json().as_bytes())?;
             f.write_all(b"\n")?;
             f.flush()?;
+            self.journal_lines += 1;
         }
         Ok(())
+    }
+
+    /// Lines currently in the journal (0 for an ephemeral queue).
+    pub fn journal_lines(&self) -> usize {
+        self.journal_lines
+    }
+
+    /// Rewrite the journal as a snapshot of the current queue: one
+    /// canonical submit line per job, plus one state line for any job
+    /// that has moved past a fresh submission. The snapshot replays to
+    /// the exact same queue — it uses the very event schema `replay`
+    /// parses — so compaction is invisible to every consumer except the
+    /// file's line count. Returns the number of lines in the compacted
+    /// journal; no-op (returns 0) for an ephemeral queue.
+    ///
+    /// The rewrite is atomic: the snapshot lands in `journal.jsonl.tmp`
+    /// first and is renamed over the live journal, so a crash mid-compact
+    /// leaves either the old journal or the new one, never a torn file.
+    pub fn compact(&mut self) -> Result<usize> {
+        let path = match &self.path {
+            Some(p) => p.clone(),
+            None => return Ok(0),
+        };
+        let mut text = String::new();
+        let mut lines = 0usize;
+        for job in self.jobs.values() {
+            let submit = json::obj(vec![
+                ("event", json::s("submit")),
+                ("id", json::num(job.id as f64)),
+                ("name", json::s(&job.spec.name)),
+                ("priority", json::num(job.spec.priority as f64)),
+                ("config", job.spec.config.to_json_value()),
+            ]);
+            text.push_str(&submit.to_json());
+            text.push('\n');
+            lines += 1;
+            let fresh = job.state == JobState::Queued
+                && !job.interrupted
+                && job.outcome.is_none()
+                && job.detail.is_empty();
+            if fresh {
+                continue;
+            }
+            let mut fields = vec![
+                ("event", json::s("state")),
+                ("id", json::num(job.id as f64)),
+                ("state", json::s(job.state.name())),
+                ("detail", json::s(&job.detail)),
+            ];
+            if job.interrupted {
+                fields.push(("interrupted", Value::Bool(true)));
+            }
+            if let Some(o) = &job.outcome {
+                fields.push(("epochs_done", json::num(o.epochs_done as f64)));
+                if let Some(g) = o.gen_loss {
+                    fields.push(("gen_loss", json::num(g)));
+                }
+                if let Some(d) = o.disc_loss {
+                    fields.push(("disc_loss", json::num(d)));
+                }
+            }
+            text.push_str(&json::obj(fields).to_json());
+            text.push('\n');
+            lines += 1;
+        }
+        let tmp = path.with_file_name(format!("{JOURNAL_FILE}.tmp"));
+        std::fs::write(&tmp, text.as_bytes())?;
+        // Release the append handle before swapping the file beneath it.
+        self.journal = None;
+        std::fs::rename(&tmp, &path)?;
+        self.journal = Some(OpenOptions::new().create(true).append(true).open(&path)?);
+        self.journal_lines = lines;
+        Ok(lines)
     }
 
     /// The id the next successful [`JobQueue::submit`] will assign.
@@ -480,5 +585,123 @@ mod tests {
     fn set_state_rejects_unknown_job() {
         let mut q = JobQueue::ephemeral(0);
         assert!(q.set_state(42, JobState::Cancelled, "").is_err());
+    }
+
+    fn journal_file_lines(dir: &Path) -> usize {
+        std::fs::read_to_string(dir.join(JOURNAL_FILE))
+            .unwrap()
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .count()
+    }
+
+    #[test]
+    fn compaction_shrinks_journal_and_replays_to_identical_state() {
+        let dir = tmp_state_dir("compact");
+        let (done_id, cancelled_id, queued_id);
+        {
+            let mut q = JobQueue::open(&dir, 0).unwrap();
+            done_id = q.submit(spec("done-job", 1)).unwrap();
+            cancelled_id = q.submit(spec("cancelled-job", 0)).unwrap();
+            queued_id = q.submit(spec("queued-job", -1)).unwrap();
+            let j = q.claim_next().unwrap().unwrap();
+            assert_eq!(j.id, done_id);
+            q.finish(
+                done_id,
+                JobState::Done,
+                "all epochs",
+                JobOutcome {
+                    epochs_done: 40,
+                    gen_loss: Some(0.5),
+                    disc_loss: None,
+                },
+            )
+            .unwrap();
+            q.set_state(cancelled_id, JobState::Cancelled, "operator cancel")
+                .unwrap();
+            // 3 submits + claim + finish + cancel = 6 lines.
+            assert_eq!(q.journal_lines(), 6);
+            assert_eq!(journal_file_lines(&dir), 6);
+            // Snapshot: 3 submits + 2 state lines (queued-job is fresh).
+            let lines = q.compact().unwrap();
+            assert_eq!(lines, 5);
+            assert_eq!(q.journal_lines(), 5);
+            assert_eq!(journal_file_lines(&dir), 5);
+            // The append handle survives the rewrite.
+            q.set_state(queued_id, JobState::Cancelled, "").unwrap();
+            assert_eq!(journal_file_lines(&dir), 6);
+        }
+        let q = JobQueue::open(&dir, 0).unwrap();
+        let done = q.get(done_id).unwrap();
+        assert_eq!(done.state, JobState::Done);
+        assert_eq!(done.detail, "all epochs");
+        assert_eq!(
+            done.outcome,
+            Some(JobOutcome {
+                epochs_done: 40,
+                gen_loss: Some(0.5),
+                disc_loss: None,
+            })
+        );
+        assert_eq!(q.get(cancelled_id).unwrap().state, JobState::Cancelled);
+        assert_eq!(q.get(queued_id).unwrap().state, JobState::Cancelled);
+        assert_eq!(q.next_id(), queued_id + 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_preserves_interrupted_flag() {
+        let dir = tmp_state_dir("compact_intr");
+        let id;
+        {
+            let mut q = JobQueue::open(&dir, 0).unwrap();
+            id = q.submit(spec("j", 0)).unwrap();
+            q.claim_next().unwrap().unwrap();
+        }
+        {
+            // Restart re-queues as interrupted; compact the snapshot.
+            let mut q = JobQueue::open(&dir, 0).unwrap();
+            assert!(q.get(id).unwrap().interrupted);
+            q.compact().unwrap();
+        }
+        let q = JobQueue::open(&dir, 0).unwrap();
+        let j = q.get(id).unwrap();
+        assert_eq!(j.state, JobState::Queued);
+        assert!(j.interrupted, "compaction must carry the interrupted flag");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_auto_compacts_past_threshold() {
+        let dir = tmp_state_dir("compact_auto");
+        let id;
+        {
+            let mut q = JobQueue::open(&dir, 0).unwrap();
+            id = q.submit(spec("churn", 0)).unwrap();
+            // Churn state transitions to bloat the journal.
+            for _ in 0..10 {
+                q.set_state(id, JobState::Running, "").unwrap();
+                q.set_state(id, JobState::Queued, "").unwrap();
+            }
+            assert_eq!(q.journal_lines(), 21);
+        }
+        // Below threshold: untouched (21 ≤ 25).
+        drop(JobQueue::open_with_compaction(&dir, 0, 25).unwrap());
+        assert_eq!(journal_file_lines(&dir), 21);
+        // Above threshold: rewritten to the 1-line snapshot (the job is
+        // back to a fresh queued state, so no state line).
+        let q = JobQueue::open_with_compaction(&dir, 0, 10).unwrap();
+        assert_eq!(q.journal_lines(), 1);
+        assert_eq!(journal_file_lines(&dir), 1);
+        assert_eq!(q.get(id).unwrap().state, JobState::Queued);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ephemeral_compact_is_a_noop() {
+        let mut q = JobQueue::ephemeral(0);
+        q.submit(spec("a", 0)).unwrap();
+        assert_eq!(q.compact().unwrap(), 0);
+        assert_eq!(q.journal_lines(), 0);
     }
 }

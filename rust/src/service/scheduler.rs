@@ -49,7 +49,7 @@ use crate::util::error::{Error, Result};
 use crate::util::json::Value;
 
 use super::job::{Job, JobId, JobOutcome, JobSpec, JobState, JobStatus};
-use super::queue::JobQueue;
+use super::queue::{JobQueue, DEFAULT_JOURNAL_COMPACT_LINES};
 use super::runner::{JobRunner, RunOutcome};
 
 /// Serving limits, reloadable without restart (`reload` verb).
@@ -64,6 +64,14 @@ pub struct ServeLimits {
     /// — every admitted job needs a cadence, both for cancellation
     /// (stops happen only at boundaries) and restart resume.
     pub default_ckpt_every: usize,
+    /// Journal auto-compaction threshold at daemon start: a replay of
+    /// more than this many lines rewrites `journal.jsonl` as a snapshot
+    /// (0 disables; the `compact` verb always works on demand).
+    pub journal_compact_lines: usize,
+    /// Checkpoint retention: keep the run-checkpoint directories of the
+    /// newest N terminal jobs; older terminal jobs' `job-NNNNNN` dirs
+    /// are deleted after each job finishes (0 = keep everything).
+    pub keep_job_checkpoints: usize,
 }
 
 impl Default for ServeLimits {
@@ -72,6 +80,8 @@ impl Default for ServeLimits {
             max_concurrent_jobs: 2,
             max_queued: 64,
             default_ckpt_every: 25,
+            journal_compact_lines: DEFAULT_JOURNAL_COMPACT_LINES,
+            keep_job_checkpoints: 0,
         }
     }
 }
@@ -93,10 +103,13 @@ impl ServeLimits {
                 "max_concurrent_jobs" => lim.max_concurrent_jobs = n,
                 "max_queued" => lim.max_queued = n,
                 "default_ckpt_every" => lim.default_ckpt_every = n,
+                "journal_compact_lines" => lim.journal_compact_lines = n,
+                "keep_job_checkpoints" => lim.keep_job_checkpoints = n,
                 other => {
                     return Err(Error::config(format!(
                         "unknown serve config key '{other}' (max_concurrent_jobs, \
-                         max_queued, default_ckpt_every)"
+                         max_queued, default_ckpt_every, journal_compact_lines, \
+                         keep_job_checkpoints)"
                     )))
                 }
             }
@@ -146,6 +159,8 @@ struct Inner {
     busy: AtomicUsize,
     max_concurrent: AtomicUsize,
     default_ckpt_every: AtomicUsize,
+    /// Checkpoint retention window (0 = keep everything).
+    keep_job_checkpoints: AtomicUsize,
     shutdown: AtomicBool,
     state_dir: PathBuf,
     runner: Box<dyn JobRunner>,
@@ -166,7 +181,11 @@ impl Scheduler {
         runner: Box<dyn JobRunner>,
     ) -> Result<Scheduler> {
         limits.validate()?;
-        let queue = JobQueue::open(state_dir, limits.max_queued)?;
+        let queue = JobQueue::open_with_compaction(
+            state_dir,
+            limits.max_queued,
+            limits.journal_compact_lines,
+        )?;
         let inner = Arc::new(Inner {
             queue: Mutex::new(queue),
             work: Condvar::new(),
@@ -174,6 +193,7 @@ impl Scheduler {
             busy: AtomicUsize::new(0),
             max_concurrent: AtomicUsize::new(limits.max_concurrent_jobs),
             default_ckpt_every: AtomicUsize::new(limits.default_ckpt_every),
+            keep_job_checkpoints: AtomicUsize::new(limits.keep_job_checkpoints),
             shutdown: AtomicBool::new(false),
             state_dir: state_dir.to_path_buf(),
             runner,
@@ -182,6 +202,9 @@ impl Scheduler {
             inner,
             workers: Mutex::new(Vec::new()),
         };
+        // A restarted daemon prunes immediately: jobs that went terminal
+        // in a previous life count against the retention window too.
+        gc_checkpoints(&sched.inner);
         sched.ensure_workers()?;
         Ok(sched)
     }
@@ -326,13 +349,25 @@ impl Scheduler {
             .default_ckpt_every
             .store(limits.default_ckpt_every, Ordering::Release);
         self.inner
+            .keep_job_checkpoints
+            .store(limits.keep_job_checkpoints, Ordering::Release);
+        self.inner
             .queue
             .lock()
             .expect("queue poisoned")
             .set_max_queued(limits.max_queued);
+        // A tightened retention window takes effect now, not at the next
+        // job completion.
+        gc_checkpoints(&self.inner);
         self.ensure_workers()?;
         self.inner.work.notify_all();
         Ok(())
+    }
+
+    /// Rewrite the journal as a snapshot on demand (`compact` verb);
+    /// returns the compacted journal's line count.
+    pub fn compact(&self) -> Result<usize> {
+        self.inner.queue.lock().expect("queue poisoned").compact()
     }
 
     /// Stop the scheduler: optionally request cancellation of every
@@ -495,8 +530,51 @@ fn run_one(inner: &Arc<Inner>, job: Job) {
     if let Err(e) = recorded {
         crate::log_warn!("job {id}: failed to journal terminal state: {e}");
     }
+    drop(q);
+    gc_checkpoints(inner);
     inner.busy.fetch_sub(1, Ordering::AcqRel);
     inner.work.notify_all();
+}
+
+/// Apply the checkpoint retention window: delete the `job-NNNNNN`
+/// checkpoint directories of terminal jobs older than the newest
+/// `keep_job_checkpoints` (by job id). Deletion happens outside the
+/// queue lock — only the doomed-path scan holds it.
+fn gc_checkpoints(inner: &Inner) {
+    let keep = inner.keep_job_checkpoints.load(Ordering::Acquire);
+    let doomed = {
+        let q = inner.queue.lock().expect("queue poisoned");
+        doomed_checkpoint_dirs(&q, &inner.state_dir, keep)
+    };
+    for dir in doomed {
+        match std::fs::remove_dir_all(&dir) {
+            Ok(()) => crate::log_info!("checkpoint gc: removed {}", dir.display()),
+            Err(e) => crate::log_warn!("checkpoint gc: {}: {e}", dir.display()),
+        }
+    }
+}
+
+/// The checkpoint directories the retention window condemns: every
+/// terminal job except the newest `keep` (0 keeps everything), filtered
+/// to dirs that actually exist. Queued and running jobs are never
+/// touched — their checkpoints are what cancellation and restart
+/// resume depend on.
+fn doomed_checkpoint_dirs(q: &JobQueue, state_dir: &Path, keep: usize) -> Vec<PathBuf> {
+    if keep == 0 {
+        return Vec::new();
+    }
+    // `jobs()` iterates in ascending id order; drop the newest `keep`.
+    let mut terminal: Vec<JobId> = q
+        .jobs()
+        .filter(|j| j.state.is_terminal())
+        .map(|j| j.id)
+        .collect();
+    terminal.truncate(terminal.len().saturating_sub(keep));
+    terminal
+        .into_iter()
+        .map(|id| state_dir.join(format!("job-{id:06}")))
+        .filter(|d| d.is_dir())
+        .collect()
 }
 
 #[cfg(test)]
@@ -508,14 +586,67 @@ mod tests {
         let lim = ServeLimits::from_json(r#"{"max_concurrent_jobs": 4}"#).unwrap();
         assert_eq!(lim.max_concurrent_jobs, 4);
         assert_eq!(lim.max_queued, ServeLimits::default().max_queued);
+        assert_eq!(lim.journal_compact_lines, DEFAULT_JOURNAL_COMPACT_LINES);
+        assert_eq!(lim.keep_job_checkpoints, 0);
         let lim =
             ServeLimits::from_json(r#"{"max_queued": 0, "default_ckpt_every": 6}"#).unwrap();
         assert_eq!(lim.max_queued, 0);
         assert_eq!(lim.default_ckpt_every, 6);
+        let lim = ServeLimits::from_json(
+            r#"{"journal_compact_lines": 100, "keep_job_checkpoints": 3}"#,
+        )
+        .unwrap();
+        assert_eq!(lim.journal_compact_lines, 100);
+        assert_eq!(lim.keep_job_checkpoints, 3);
         assert!(ServeLimits::from_json(r#"{"max_jobs": 4}"#).is_err());
         assert!(ServeLimits::from_json(r#"{"max_concurrent_jobs": 0}"#).is_err());
         assert!(ServeLimits::from_json(r#"{"default_ckpt_every": 0}"#).is_err());
         assert!(ServeLimits::from_json(r#"[]"#).is_err());
+    }
+
+    #[test]
+    fn retention_window_condemns_oldest_terminal_dirs_only() {
+        use crate::config::presets;
+        let state_dir = std::env::temp_dir().join(format!(
+            "sagips_sched_gc_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&state_dir);
+        let mut q = JobQueue::ephemeral(0);
+        let spec = |name: &str| JobSpec {
+            name: name.into(),
+            priority: 0,
+            config: presets::ci_default(),
+        };
+        // Jobs 1..=4 terminal, 5 queued, 6 running; every one has a dir.
+        let mut ids = Vec::new();
+        for i in 0..6 {
+            ids.push(q.submit(spec(&format!("j{i}"))).unwrap());
+        }
+        for &id in &ids[..4] {
+            q.set_state(id, JobState::Running, "").unwrap();
+            q.finish(id, JobState::Done, "", JobOutcome::default()).unwrap();
+        }
+        q.set_state(ids[5], JobState::Running, "").unwrap();
+        for &id in &ids {
+            std::fs::create_dir_all(state_dir.join(format!("job-{id:06}"))).unwrap();
+        }
+        // keep=0 disables GC entirely.
+        assert!(doomed_checkpoint_dirs(&q, &state_dir, 0).is_empty());
+        // keep=2: the two oldest terminal jobs are condemned; queued and
+        // running dirs survive regardless of age.
+        let doomed = doomed_checkpoint_dirs(&q, &state_dir, 2);
+        let want: Vec<PathBuf> = ids[..2]
+            .iter()
+            .map(|id| state_dir.join(format!("job-{id:06}")))
+            .collect();
+        assert_eq!(doomed, want);
+        // keep >= terminal count condemns nothing.
+        assert!(doomed_checkpoint_dirs(&q, &state_dir, 4).is_empty());
+        // Already-deleted dirs are skipped, not re-condemned.
+        std::fs::remove_dir_all(&want[0]).unwrap();
+        assert_eq!(doomed_checkpoint_dirs(&q, &state_dir, 2), want[1..].to_vec());
+        let _ = std::fs::remove_dir_all(&state_dir);
     }
 
     #[test]

@@ -1,0 +1,172 @@
+//! Memory-discipline proof: the steady-state exchange path allocates
+//! nothing (DESIGN.md §Memory discipline).
+//!
+//! This binary installs its own counting `#[global_allocator]` and runs
+//! the collective matrix — ring (unchunked and chunked), grouped
+//! chunked, RMA-grouped chunked — at staleness k ∈ {0, 1, 2} over 4
+//! rank threads. Each configuration warms up (sizing the shared
+//! [`BufferPool`], the transport queues, and the engine channels), then
+//! fences an allocation-count window around a block of steady-state
+//! epochs with barriers: the delta across all ranks AND all comm worker
+//! threads must be exactly zero.
+//!
+//! One `#[test]` runs the whole matrix sequentially — the counter is
+//! process-global, so concurrent tests would pollute each other's
+//! windows.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+
+use sagips::collective::engine::CollectiveEngine;
+use sagips::collective::{build_with_policy, rma_window_depth, CommStats};
+use sagips::comm::{LinkModel, LocalNetwork, RmaRegion, Topology};
+use sagips::config::{ChunkPolicy, Mode};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+const N: usize = 4;
+const GPUS_PER_NODE: usize = 2;
+const LEN: usize = 4096;
+/// Warmup epochs: enough for the pool free-lists, the transport queues,
+/// the engine job/done channels, and the chunked per-pass scratch to all
+/// reach their high-water marks.
+const WARMUP: usize = 8;
+const MEASURED: usize = 6;
+
+/// Run one (mode, policy, staleness) configuration and return the
+/// process-wide allocation count across the measured steady-state epochs.
+fn measured_allocs(mode: Mode, policy: ChunkPolicy, k: usize) -> u64 {
+    let topo = Topology::new(N, GPUS_PER_NODE);
+    // Window depth mirrors the launcher: ring steps per epoch times the
+    // staleness window, so deposits never overwrite undelivered slots.
+    let region = RmaRegion::with_capacity(N, rma_window_depth(GPUS_PER_NODE, policy) * k.max(1));
+    let endpoints = LocalNetwork::build(&topo, LinkModel::zero());
+    let collectives = build_with_policy(mode, &topo, 1, endpoints, &region, policy).unwrap();
+    let barrier = Arc::new(Barrier::new(N));
+    let start = Arc::new(AtomicU64::new(0));
+    let end = Arc::new(AtomicU64::new(0));
+    let handles: Vec<_> = collectives
+        .into_iter()
+        .enumerate()
+        .map(|(rank, c)| {
+            let barrier = Arc::clone(&barrier);
+            let start = Arc::clone(&start);
+            let end = Arc::clone(&end);
+            std::thread::spawn(move || {
+                let mut grads = vec![rank as f32 + 1.0; LEN];
+                let mut epoch = 0u64;
+                if k == 0 {
+                    // Blocking loop: the collective reduces in place.
+                    let mut c = c;
+                    for _ in 0..WARMUP {
+                        c.epoch_reduce(epoch, &mut grads).unwrap();
+                        epoch += 1;
+                    }
+                    barrier.wait();
+                    if rank == 0 {
+                        start.store(allocs(), Ordering::SeqCst);
+                    }
+                    barrier.wait();
+                    for _ in 0..MEASURED {
+                        c.epoch_reduce(epoch, &mut grads).unwrap();
+                        epoch += 1;
+                    }
+                    barrier.wait();
+                    if rank == 0 {
+                        end.store(allocs(), Ordering::SeqCst);
+                    }
+                    // Hold until the window closes: thread exits and
+                    // collective drops allocate/deallocate freely.
+                    barrier.wait();
+                } else {
+                    // k-deep window on the engine with caller-side buffer
+                    // rotation: checkout at submit, recycle at apply, so
+                    // steady state holds exactly k+1 loaned buffers.
+                    let pool = c.buffer_pool().expect("matrix modes are pooled");
+                    let mut eng = CollectiveEngine::spawn_windowed(c, k).unwrap();
+                    let mut stats = CommStats::default();
+                    let mut step = |eng: &mut CollectiveEngine,
+                                    grads: &mut Vec<f32>,
+                                    epoch: u64,
+                                    stats: &mut CommStats| {
+                        if eng.in_flight() >= k {
+                            let (buf, _) = eng.wait_reduce().unwrap();
+                            grads.copy_from_slice(&buf);
+                            pool.recycle(buf, stats);
+                        }
+                        let buf = pool.checkout_filled(grads, stats);
+                        eng.start_reduce(epoch, buf).unwrap();
+                    };
+                    for _ in 0..WARMUP {
+                        step(&mut eng, &mut grads, epoch, &mut stats);
+                        epoch += 1;
+                    }
+                    barrier.wait();
+                    if rank == 0 {
+                        start.store(allocs(), Ordering::SeqCst);
+                    }
+                    barrier.wait();
+                    for _ in 0..MEASURED {
+                        step(&mut eng, &mut grads, epoch, &mut stats);
+                        epoch += 1;
+                    }
+                    barrier.wait();
+                    if rank == 0 {
+                        end.store(allocs(), Ordering::SeqCst);
+                    }
+                    barrier.wait();
+                    // Settle the window outside the measured region.
+                    eng.drain().unwrap();
+                    assert_eq!(stats.allocs + stats.pool_hits, (WARMUP + MEASURED) as u64);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    end.load(Ordering::SeqCst) - start.load(Ordering::SeqCst)
+}
+
+#[test]
+fn steady_state_exchange_path_allocates_nothing() {
+    let matrix: [(Mode, ChunkPolicy, &str); 4] = [
+        (Mode::ConvArar, ChunkPolicy::Unchunked, "ring unchunked"),
+        (Mode::ConvArar, ChunkPolicy::Auto, "ring chunked"),
+        (Mode::ArarArar, ChunkPolicy::Auto, "grouped chunked"),
+        (Mode::RmaArarArar, ChunkPolicy::Auto, "rma-grouped chunked"),
+    ];
+    for (mode, policy, label) in matrix {
+        for k in [0usize, 1, 2] {
+            let delta = measured_allocs(mode, policy, k);
+            assert_eq!(
+                delta, 0,
+                "{label} k={k}: {delta} allocations across {MEASURED} steady-state epochs"
+            );
+        }
+    }
+}

@@ -6,7 +6,7 @@
 
 use sagips::collective::ring::{chunked_ring_pass, partition_bounds, ring_pass};
 use sagips::comm::{
-    GradMsg, LinkModel, LocalNetwork, MembershipView, RmaRegion, RmaWindow, Topology,
+    BufferPool, GradMsg, LinkModel, LocalNetwork, MembershipView, RmaRegion, RmaWindow, Topology,
 };
 use sagips::config::Mode;
 use sagips::model::{grad, reference};
@@ -174,8 +174,8 @@ fn prop_ring_pass_averages_any_ring() {
                 let v = values[ep.rank];
                 std::thread::spawn(move || {
                     let mut grads = vec![v; len];
-                    let mut scratch = Vec::new();
-                    ring_pass(&ep, &members, 0, &mut grads, &mut scratch).unwrap();
+                    let pool = BufferPool::new();
+                    ring_pass(&ep, &members, 0, &mut grads, &pool).unwrap();
                     grads
                 })
             })
@@ -372,8 +372,8 @@ fn prop_chunked_pass_over_rering_matches_serial_reference_bitwise() {
                 let members = live.clone();
                 let mut grads = values[ep.rank].clone();
                 std::thread::spawn(move || {
-                    let mut pool = Vec::new();
-                    chunked_ring_pass(&ep, &members, 0, &mut grads, &mut pool, max_elems)
+                    let pool = BufferPool::new();
+                    chunked_ring_pass(&ep, &members, 0, &mut grads, &pool, max_elems)
                         .unwrap();
                     grads
                 })

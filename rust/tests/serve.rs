@@ -183,6 +183,7 @@ fn serve_smoke_jobs_are_bit_identical_to_one_shot_training() {
             max_concurrent_jobs: 2,
             max_queued: 0,
             default_ckpt_every: 6,
+            ..ServeLimits::default()
         },
         None,
         Box::new(TrainingRunner),
@@ -330,6 +331,7 @@ fn scheduler_cancel_of_a_live_training_run_leaves_a_resumable_checkpoint() {
             max_concurrent_jobs: 1,
             max_queued: 0,
             default_ckpt_every: 6,
+            ..ServeLimits::default()
         },
         None,
         Box::new(TrainingRunner),

@@ -46,6 +46,7 @@ fn limits(max_concurrent_jobs: usize, max_queued: usize) -> ServeLimits {
         max_concurrent_jobs,
         max_queued,
         default_ckpt_every: 2,
+        ..ServeLimits::default()
     }
 }
 
@@ -414,4 +415,52 @@ fn randomized_concurrent_submit_cancel_interleavings_lose_no_job() {
         assert_eq!(after, before);
         std::fs::remove_dir_all(&dir).ok();
     });
+}
+
+#[test]
+fn retention_and_compaction_keep_disk_bounded() {
+    let dir = state_dir("gc_compact");
+    let sched = Scheduler::open(
+        &dir,
+        ServeLimits {
+            keep_job_checkpoints: 2,
+            ..limits(1, 0)
+        },
+        Box::new(InstantRunner),
+    )
+    .unwrap();
+    let ids: Vec<JobId> = (0..4).map(|_| sched.submit(spec(0)).unwrap()).collect();
+    wait_all_terminal(&sched, 4);
+    // InstantRunner writes no checkpoints; materialize each job's
+    // normalized checkpoint dir, then let reload's GC sweep apply the
+    // retention window to the now-terminal jobs.
+    let dirs: Vec<PathBuf> = ids
+        .iter()
+        .map(|&id| PathBuf::from(sched.job_config(id).unwrap().ckpt_dir))
+        .collect();
+    for d in &dirs {
+        std::fs::create_dir_all(d).unwrap();
+    }
+    sched
+        .reload(ServeLimits {
+            keep_job_checkpoints: 2,
+            ..limits(1, 0)
+        })
+        .unwrap();
+    assert!(!dirs[0].exists(), "oldest terminal job dir should be pruned");
+    assert!(!dirs[1].exists(), "second-oldest should be pruned");
+    assert!(dirs[2].exists(), "newest 2 terminal jobs keep checkpoints");
+    assert!(dirs[3].exists(), "newest 2 terminal jobs keep checkpoints");
+
+    // Compaction collapses the submit/claim/finish history (12 lines)
+    // to the snapshot: one submit + one state line per job.
+    let lines = sched.compact().unwrap();
+    assert_eq!(lines, 8);
+    sched.shutdown(false);
+    let replayed = JobQueue::open(&dir, 0).unwrap();
+    assert_eq!(replayed.journal_lines(), 8);
+    for &id in &ids {
+        assert_eq!(replayed.get(id).unwrap().state, JobState::Done);
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
